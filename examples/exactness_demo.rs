@@ -1,0 +1,49 @@
+//! Exactness demo: the distributed DRF runtime and the classic
+//! in-memory trainer produce *bit-identical* trees — the paper's core
+//! claim, live.
+
+use drf::baselines::classic::ClassicTrainer;
+use drf::config::{ForestParams, TrainConfig};
+use drf::data::synthetic::LeoLikeSpec;
+use drf::forest::RandomForest;
+use drf::rng::BaggingMode;
+
+fn main() -> anyhow::Result<()> {
+    // Mixed-type data (3 numerical + 69 categorical features, arities
+    // up to 10'000) — the hardest exactness case.
+    let ds = LeoLikeSpec::new(2_000, 7).generate();
+    let params = ForestParams {
+        num_trees: 3,
+        max_depth: 6,
+        min_records: 10,
+        bagging: BaggingMode::Poisson,
+        seed: 1234,
+        ..Default::default()
+    };
+
+    println!("training classic in-memory forest…");
+    let classic = ClassicTrainer::new(&ds, &params).train_forest();
+
+    println!("training distributed DRF (72 splitters, depth-wise)…");
+    let cfg = TrainConfig {
+        forest: params,
+        ..Default::default()
+    };
+    let (distributed, report) = RandomForest::train_with_config(&ds, &cfg)?;
+
+    for (t, (c, d)) in classic.iter().zip(&distributed.trees).enumerate() {
+        assert_eq!(c, d, "tree {t} differs!");
+        println!(
+            "  tree {t}: {} nodes, depth {} — identical across algorithms",
+            c.num_nodes(),
+            c.depth()
+        );
+    }
+    println!(
+        "EXACT: {} trees bit-identical; DRF used {} splitters and {} KB of network traffic",
+        classic.len(),
+        report.num_splitters,
+        report.net.net_bytes / 1000
+    );
+    Ok(())
+}

@@ -1,0 +1,155 @@
+//! End-to-end driver — the paper's §5 experiment on the Leo-like
+//! dataset (3 numerical + 69 categorical features, arities 2..10'000,
+//! ~5% positives), scaled 1:~50'000 to one CPU core.
+//!
+//! Reproduces the *shape* of Table 2 (train time / leaves / node
+//! density / sample density across 1% / 10% / 100% subsets) and of
+//! Figure 3 (per-depth time, open leaves, densities, tree & forest AUC
+//! at every depth 0..max), exactly as DESIGN.md's experiment index
+//! specifies. Datasets stay on disk, as in the paper ("all experiments
+//! have been run with the datasets remaining on drive").
+//!
+//! ```text
+//! cargo run --release --example leo_scale [-- --quick] [--rows N]
+//! ```
+
+use drf::config::{ForestParams, StorageMode, TrainConfig};
+use drf::data::synthetic::LeoLikeSpec;
+use drf::forest::RandomForest;
+use drf::metrics::auc;
+use drf::util::bench::{fmt_bytes, Table};
+use drf::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv, &["!quick", "rows", "trees", "depth"])?;
+    let quick = args.get_bool("quick");
+    let full_n = args.get_usize("rows", if quick { 40_000 } else { 300_000 })?;
+    let trees = args.get_usize("trees", if quick { 2 } else { 3 })?;
+    let max_depth = args.get_u32("depth", if quick { 10 } else { 14 })?;
+
+    println!("generating Leo-like dataset: {full_n} rows, 72 features (3 num + 69 cat)…");
+    let spec = LeoLikeSpec::new(full_n, 20_626);
+    let full = spec.generate();
+    // Held-out rows beyond the training range — same concept, fresh
+    // samples (the Leo-like ground truth is seed-specific).
+    let test = spec.generate_rows(full_n, (full_n / 5).max(5_000));
+    let pos = full.class_counts()[1] as f64 / full.num_rows() as f64;
+    println!("positive rate: {:.3} (unbalanced, like Leo)", pos);
+
+    // Table 2: 1% / 10% / 100% subsets; min_records scales with subset
+    // size, as in the paper ("reduced proportionally").
+    let mut table2 = Table::new(&[
+        "Leo", "Samples", "Train time (s)", "Leaves", "Node density", "Sample density", "RF AUC",
+        "net",
+    ]);
+    let mut fig3_data: Option<(RandomForest, drf::coordinator::TrainReport)> = None;
+
+    for (label, frac, min_records) in
+        [("1%", 0.01, 10u64), ("10%", 0.1, 100), ("100%", 1.0, 1000)]
+    {
+        let n = ((full_n as f64) * frac) as usize;
+        let ds = full.head(n);
+        let min_records = (min_records as f64 * (full_n as f64 / 300_000.0))
+            .round()
+            .max(2.0) as u64;
+        let params = ForestParams {
+            num_trees: trees,
+            max_depth,
+            min_records,
+            seed: 9,
+            ..Default::default()
+        };
+        // The paper runs with data on drive; 82 workers -> one per column
+        // here (72).
+        let cfg = TrainConfig {
+            forest: params,
+            storage: StorageMode::Disk,
+            ..Default::default()
+        };
+        let (forest, report) = RandomForest::train_with_config(&ds, &cfg)?;
+        let a = auc(&forest.predict_scores(&test), test.labels());
+        table2.row(&[
+            label.into(),
+            n.to_string(),
+            format!("{:.2}", report.total_tree_seconds() / trees as f64),
+            format!("{:.0}", forest.mean_leaves()),
+            format!("{:.3}", forest.mean_node_density()),
+            format!("{:.3}", forest.mean_sample_density()),
+            format!("{a:.4}"),
+            fmt_bytes(report.net.net_bytes),
+        ]);
+        if frac == 1.0 {
+            fig3_data = Some((forest, report));
+        }
+    }
+
+    println!("\n=== Table 2 (scaled): per-tree training metrics across subsets ===");
+    table2.print();
+
+    // Figure 3: per-depth metrics of the 100% run.
+    let (forest, report) = fig3_data.unwrap();
+    let mut fig3 = Table::new(&[
+        "depth", "time (s)", "open leaves", "node dens", "sample dens", "tree AUC", "RF AUC",
+    ]);
+    let max_d = forest.trees.iter().map(|t| t.depth()).max().unwrap_or(0);
+    // Per-level cumulative time (averaged over trees).
+    let mut level_secs = vec![0.0f64; max_d as usize + 1];
+    for tr in &report.per_tree {
+        for l in &tr.levels {
+            if (l.depth as usize) < level_secs.len() {
+                level_secs[l.depth as usize] += l.seconds / report.per_tree.len() as f64;
+            }
+        }
+    }
+    for d in 0..=max_d {
+        // Depth-truncated forest metrics (no retraining; traversal stops
+        // at depth d).
+        let rf_scores = forest.predict_scores_at_depth(&test, d);
+        let rf_auc = auc(&rf_scores, test.labels());
+        let tree0 = &forest.trees[0];
+        let t_scores: Vec<f64> = (0..test.num_rows())
+            .map(|i| tree0.score_at_depth(&test.row(i), d))
+            .collect();
+        let t_auc = auc(&t_scores, test.labels());
+        // Structural metrics of the depth-d truncation.
+        let leaves_at = |t: &drf::tree::Tree, d: u32| -> (f64, f64, f64) {
+            let mut open = 0u64;
+            let mut deep_w = 0u64;
+            let mut tot_w = 0u64;
+            for n in &t.nodes {
+                let is_frontier = n.depth == d && (!n.is_leaf() || n.depth == d);
+                if is_frontier {
+                    open += 1;
+                    deep_w += n.total_count();
+                }
+                if n.is_leaf() && n.depth <= d {
+                    tot_w += n.total_count();
+                } else if n.depth == d {
+                    tot_w += n.total_count();
+                }
+            }
+            let dens = open as f64 / 2f64.powi(d as i32);
+            let sdens = if tot_w == 0 { 0.0 } else { deep_w as f64 / tot_w as f64 };
+            (open as f64, dens, sdens)
+        };
+        let (open, dens, sdens) = leaves_at(tree0, d);
+        fig3.row(&[
+            d.to_string(),
+            format!("{:.3}", level_secs.get(d as usize).copied().unwrap_or(0.0)),
+            format!("{open:.0}"),
+            format!("{dens:.3}"),
+            format!("{sdens:.3}"),
+            format!("{t_auc:.4}"),
+            format!("{rf_auc:.4}"),
+        ]);
+    }
+    println!("\n=== Figure 3 (scaled): per-depth metrics of the 100% run ===");
+    fig3.print();
+    println!(
+        "\nExpected shape (paper §5): leaves grow ~exponentially while per-level\n\
+         time stays flat (scan-dominated); RF AUC keeps rising with depth and\n\
+         with more data; individual-tree AUC saturates earlier."
+    );
+    Ok(())
+}

@@ -1,0 +1,52 @@
+//! Quickstart: generate data, train a distributed forest, evaluate.
+//!
+//! ```text
+//! cargo run --release --example quickstart
+//! ```
+
+use drf::config::{ForestParams, TrainConfig};
+use drf::data::synthetic::{Family, SyntheticSpec};
+use drf::forest::RandomForest;
+use drf::metrics::auc;
+
+fn main() -> anyhow::Result<()> {
+    // 1. A synthetic binary-classification dataset: majority vote of 5
+    //    informative binary features + 5 useless variables.
+    let train = SyntheticSpec::new(Family::Majority { informative: 5 }, 20_000, 10, 1).generate();
+    let test = SyntheticSpec::new(Family::Majority { informative: 5 }, 5_000, 10, 2).generate();
+
+    // 2. Train 10 trees with the distributed runtime (one splitter per
+    //    column, depth-wise DRF training, seeded bagging).
+    let params = ForestParams {
+        num_trees: 10,
+        max_depth: 12,
+        seed: 42,
+        ..Default::default()
+    };
+    let cfg = TrainConfig {
+        forest: params,
+        ..Default::default()
+    };
+    let (forest, report) = RandomForest::train_with_config(&train, &cfg)?;
+
+    // 3. Evaluate.
+    let test_auc = auc(&forest.predict_scores(&test), test.labels());
+    println!("trained {} trees in {:.2}s", forest.num_trees(), report.wall_seconds);
+    println!(
+        "  mean leaves/tree: {:.0}, network: {} KB in {} messages",
+        forest.mean_leaves(),
+        report.net.net_bytes / 1000,
+        report.net.net_messages
+    );
+    println!("  test AUC = {test_auc:.4}");
+    assert!(test_auc > 0.95, "quickstart sanity check");
+
+    // 4. Models round-trip as JSON.
+    let dir = drf::util::tempdir()?;
+    let path = dir.path().join("forest.json");
+    forest.save(&path)?;
+    let back = RandomForest::load(&path)?;
+    assert_eq!(forest, back);
+    println!("  model JSON roundtrip OK ({} bytes)", std::fs::metadata(&path)?.len());
+    Ok(())
+}

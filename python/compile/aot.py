@@ -1,0 +1,62 @@
+"""AOT lowering: JAX/Pallas split scorer -> HLO text artifacts.
+
+Run once at build time (``make artifacts``); the Rust runtime loads the
+HLO text via the PJRT C API and Python never appears on the training
+path.
+
+HLO *text* (not ``HloModuleProto.serialize()``) is the interchange
+format: jax >= 0.5 emits protos with 64-bit instruction ids which the
+crate's xla_extension 0.5.1 rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile.model import score_batch
+
+# (batch, thresholds) block shapes to compile. 16x512 is the runtime
+# default (rust/src/coordinator/manager.rs); 4x64 keeps tests fast.
+SHAPES = [(16, 512), (4, 64)]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True so the
+    Rust side unpacks with to_tuple)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_scorer(batch: int, thresholds: int) -> str:
+    mat = jax.ShapeDtypeStruct((batch, thresholds), jnp.float32)
+    vec = jax.ShapeDtypeStruct((batch,), jnp.float32)
+    lowered = jax.jit(score_batch).lower(mat, mat, vec, vec, mat)
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    for batch, thresholds in SHAPES:
+        text = lower_scorer(batch, thresholds)
+        path = os.path.join(
+            args.out_dir, f"split_scorer_{batch}x{thresholds}.hlo.txt"
+        )
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+
+if __name__ == "__main__":
+    main()

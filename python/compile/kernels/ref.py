@@ -1,0 +1,40 @@
+"""Pure-jnp oracle for the split-gain kernel (the CORE correctness
+signal: pytest asserts kernel == ref across shapes and edge cases)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _gini(pos, tot):
+    """Binary Gini impurity 2p(1-p) with 0-total guard."""
+    safe = jnp.maximum(tot, 1.0)
+    p = pos / safe
+    return 2.0 * p * (1.0 - p)
+
+
+def split_gains_ref(pos_prefix, tot_prefix, parent_pos, parent_tot, valid):
+    """Reference masked Gini gains, shape [B, T]."""
+    nl = tot_prefix
+    nr = parent_tot[:, None] - nl
+    posl = pos_prefix
+    posr = parent_pos[:, None] - posl
+    n = jnp.maximum(parent_tot[:, None], 1.0)
+
+    gain = (
+        _gini(parent_pos[:, None], parent_tot[:, None])
+        - (nl / n) * _gini(posl, nl)
+        - (nr / n) * _gini(posr, nr)
+    )
+    ok = (valid > 0.0) & (nl > 0.0) & (nr > 0.0)
+    return jnp.where(ok, gain, NEG_INF)
+
+
+def best_split_ref(pos_prefix, tot_prefix, parent_pos, parent_tot, valid):
+    """Reference (best_gain[B], best_idx[B])."""
+    gains = split_gains_ref(pos_prefix, tot_prefix, parent_pos, parent_tot, valid)
+    idx = jnp.argmax(gains, axis=1).astype(jnp.int32)
+    best = jnp.max(gains, axis=1)
+    return best, idx

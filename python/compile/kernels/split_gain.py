@@ -1,0 +1,86 @@
+"""Layer-1 Pallas kernel: masked binary-Gini split gains.
+
+The compute hot-spot of DRF's Alg. 1 is scoring every candidate
+threshold of a presorted feature against cumulative label histograms.
+For binary classification the inputs per scoring *task* (= one open
+leaf x feature) are the prefix counts at each candidate boundary:
+
+    pos_prefix[b, t]  cumulative class-1 weight left of boundary t
+    tot_prefix[b, t]  cumulative total weight left of boundary t
+    parent_pos[b]     class-1 weight of the whole leaf
+    parent_tot[b]     total weight of the whole leaf
+    valid[b, t]       1.0 for real boundaries, 0.0 for padding
+
+and the output is the Gini gain of every boundary (``-inf`` where
+invalid), from which the caller takes an argmax.
+
+TPU mapping (DESIGN.md "Hardware adaptation"): this is a pure
+elementwise VPU workload. We tile (TASKS_BLK x T) f32 blocks through
+VMEM with a 1-D grid over task blocks; with the default (8, 512) blocks
+the working set is ~115 KiB per grid step, far under VMEM, so no
+double buffering is required. ``interpret=True`` everywhere: the CPU
+PJRT client cannot execute Mosaic custom-calls, and interpret mode
+lowers to plain HLO that the Rust runtime loads directly.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Tasks per VMEM block (the grid runs batch/TASKS_BLK steps).
+TASKS_BLK = 8
+
+NEG_INF = -1e30
+
+
+def _gain_kernel(pos_ref, tot_ref, ppos_ref, ptot_ref, valid_ref, out_ref):
+    """Compute masked binary Gini gains for one (TASKS_BLK, T) tile."""
+    nl = tot_ref[...]              # (blk, T) left totals
+    posl = pos_ref[...]            # (blk, T) left positives
+    n = ptot_ref[...][:, None]     # (blk, 1) parent totals
+    posp = ppos_ref[...][:, None]  # (blk, 1) parent positives
+
+    nr = n - nl
+    posr = posp - posl
+
+    # Binary Gini impurity g(p) = 2 p (1 - p); guard the 0-count sides.
+    safe_nl = jnp.maximum(nl, 1.0)
+    safe_nr = jnp.maximum(nr, 1.0)
+    safe_n = jnp.maximum(n, 1.0)
+    pl_ = posl / safe_nl
+    pr_ = posr / safe_nr
+    pp_ = posp / safe_n
+    g_left = 2.0 * pl_ * (1.0 - pl_)
+    g_right = 2.0 * pr_ * (1.0 - pr_)
+    g_parent = 2.0 * pp_ * (1.0 - pp_)
+
+    gain = g_parent - (nl / safe_n) * g_left - (nr / safe_n) * g_right
+
+    ok = (valid_ref[...] > 0.0) & (nl > 0.0) & (nr > 0.0)
+    out_ref[...] = jnp.where(ok, gain, NEG_INF)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def split_gains(pos_prefix, tot_prefix, parent_pos, parent_tot, valid):
+    """Masked Gini gains, shape [B, T]; invalid entries are -inf.
+
+    B must be a multiple of TASKS_BLK (the AOT wrapper pads).
+    """
+    b, t = pos_prefix.shape
+    blk = min(TASKS_BLK, b)
+    assert b % blk == 0, f"batch {b} not a multiple of block {blk}"
+    grid = (b // blk,)
+    block2 = pl.BlockSpec((blk, t), lambda i: (i, 0))
+    block1 = pl.BlockSpec((blk,), lambda i: (i,))
+    return pl.pallas_call(
+        _gain_kernel,
+        out_shape=jax.ShapeDtypeStruct((b, t), jnp.float32),
+        grid=grid,
+        in_specs=[block2, block2, block1, block1, block2],
+        out_specs=block2,
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(pos_prefix, tot_prefix, parent_pos, parent_tot, valid)

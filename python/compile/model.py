@@ -1,0 +1,34 @@
+"""Layer-2 JAX graph: the full batched split-scoring model.
+
+Composes the Pallas gain kernel (Layer 1) with the argmax reduction and
+returns, per task, the best boundary's gain and index. This module is
+what ``aot.py`` lowers to HLO text for the Rust runtime; it never runs
+at training time.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from compile.kernels.split_gain import split_gains
+
+
+def score_batch(pos_prefix, tot_prefix, parent_pos, parent_tot, valid):
+    """Best (gain, index) per task.
+
+    Args (all f32):
+      pos_prefix:  [B, T] cumulative class-1 weight per boundary.
+      tot_prefix:  [B, T] cumulative total weight per boundary.
+      parent_pos:  [B]    leaf class-1 weight.
+      parent_tot:  [B]    leaf total weight.
+      valid:       [B, T] 1.0 = real boundary, 0.0 = padding.
+
+    Returns:
+      (best_gain f32[B], best_idx i32[B]). Rows with no valid boundary
+      report a large negative best_gain (callers treat gain <= 0 as "no
+      split").
+    """
+    gains = split_gains(pos_prefix, tot_prefix, parent_pos, parent_tot, valid)
+    best_idx = jnp.argmax(gains, axis=1).astype(jnp.int32)
+    best_gain = jnp.max(gains, axis=1)
+    return best_gain, best_idx

@@ -1,0 +1,135 @@
+"""Layer-1 correctness: the Pallas split-gain kernel vs the pure-jnp
+oracle — the CORE correctness signal of the python build stack.
+
+Hypothesis sweeps shapes and histogram contents; hand-built cases pin
+down the edge semantics (empty sides, padding masks, ties)."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ref import NEG_INF, best_split_ref, split_gains_ref
+from compile.kernels.split_gain import split_gains
+from compile.model import score_batch
+
+
+def make_task(rng, t):
+    """Random monotone prefix arrays for one task of T boundaries."""
+    n_boundaries = rng.integers(0, t + 1)
+    # Random per-boundary increments (weights>=1 between boundaries).
+    tot_inc = rng.integers(1, 5, size=t)
+    pos_inc = np.minimum(tot_inc, rng.integers(0, 5, size=t))
+    tot = np.cumsum(tot_inc).astype(np.float32)
+    pos = np.cumsum(pos_inc).astype(np.float32)
+    valid = (np.arange(t) < n_boundaries).astype(np.float32)
+    # Parent = prefix at the end plus a random tail.
+    parent_tot = float(tot[-1]) + float(rng.integers(1, 10))
+    parent_pos = min(float(pos[-1]) + float(rng.integers(0, 10)), parent_tot)
+    return pos, tot, np.float32(parent_pos), np.float32(parent_tot), valid
+
+
+def build_batch(seed, b, t):
+    rng = np.random.default_rng(seed)
+    pos = np.zeros((b, t), np.float32)
+    tot = np.zeros((b, t), np.float32)
+    ppos = np.zeros(b, np.float32)
+    ptot = np.ones(b, np.float32)
+    valid = np.zeros((b, t), np.float32)
+    for i in range(b):
+        pos[i], tot[i], ppos[i], ptot[i], valid[i] = make_task(rng, t)
+    return pos, tot, ppos, ptot, valid
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    b=st.sampled_from([1, 2, 4, 8, 16, 24]),
+    t=st.sampled_from([1, 7, 64, 130]),
+)
+def test_kernel_matches_ref_random(seed, b, t):
+    if b % min(8, b) != 0:
+        b = 8
+    args = build_batch(seed, b, t)
+    got = np.asarray(split_gains(*map(jnp.asarray, args)))
+    want = np.asarray(split_gains_ref(*map(jnp.asarray, args)))
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_model_best_matches_ref(seed):
+    args = build_batch(seed, 16, 64)
+    jargs = list(map(jnp.asarray, args))
+    got_gain, got_idx = score_batch(*jargs)
+    want_gain, want_idx = best_split_ref(*jargs)
+    # Kernel and ref round differently at the ULP level (different op
+    # order); gains agree to ~1e-5 relative and the *chosen* boundary,
+    # re-scored by the reference, must be within that tolerance of the
+    # reference optimum (near-ties may legitimately pick either index).
+    np.testing.assert_allclose(
+        np.asarray(got_gain), np.asarray(want_gain), rtol=1e-4, atol=1e-6
+    )
+    ref_gains = np.asarray(split_gains_ref(*jargs))
+    for i in range(16):
+        if float(want_gain[i]) <= NEG_INF / 2:
+            continue
+        chosen = ref_gains[i, int(got_idx[i])]
+        assert chosen >= float(want_gain[i]) - 1e-6
+
+
+def test_known_perfect_split():
+    # One task: boundaries after each of 6 sorted records, labels
+    # 0,0,0,1,1,1 -> boundary 2 (left = 3 negatives) has gain 0.5.
+    pos = np.array([[0, 0, 0, 1, 2]], np.float32)
+    tot = np.array([[1, 2, 3, 4, 5]], np.float32)
+    ppos = np.array([3], np.float32)
+    ptot = np.array([6], np.float32)
+    valid = np.ones((1, 5), np.float32)
+    gain, idx = score_batch(*map(jnp.asarray, (pos, tot, ppos, ptot, valid)))
+    assert int(idx[0]) == 2
+    np.testing.assert_allclose(float(gain[0]), 0.5, rtol=1e-6)
+
+
+def test_padding_is_ignored():
+    pos = np.array([[0, 1, 1, 9]], np.float32)  # junk in padded tail
+    tot = np.array([[1, 2, 9, 9]], np.float32)
+    ppos = np.array([1], np.float32)
+    ptot = np.array([3], np.float32)
+    valid = np.array([[1, 1, 0, 0]], np.float32)
+    gains = np.asarray(split_gains(*map(jnp.asarray, (pos, tot, ppos, ptot, valid))))
+    assert gains[0, 2] == NEG_INF and gains[0, 3] == NEG_INF
+    assert gains[0, 0] > 0  # boundary 0 separates the negative
+
+
+def test_empty_row_reports_neg_inf():
+    pos = np.zeros((1, 4), np.float32)
+    tot = np.zeros((1, 4), np.float32)
+    valid = np.zeros((1, 4), np.float32)
+    gain, _ = score_batch(
+        *map(jnp.asarray, (pos, tot, np.ones(1, np.float32), np.ones(1, np.float32), valid))
+    )
+    assert float(gain[0]) <= NEG_INF / 2
+
+
+def test_full_side_is_invalid():
+    # Boundary where nl == n (right side empty) must be masked even if
+    # marked valid.
+    pos = np.array([[1, 2]], np.float32)
+    tot = np.array([[2, 4]], np.float32)
+    ppos = np.array([2], np.float32)
+    ptot = np.array([4], np.float32)
+    valid = np.ones((1, 2), np.float32)
+    gains = np.asarray(split_gains(*map(jnp.asarray, (pos, tot, ppos, ptot, valid))))
+    assert gains[0, 1] == NEG_INF, "nl == n boundary must be invalid"
+
+
+def test_argmax_takes_first_of_ties():
+    # Symmetric labels 0,1,1,0: boundaries 0 and 2 tie; argmax -> 0.
+    pos = np.array([[0, 1, 2]], np.float32)
+    tot = np.array([[1, 2, 3]], np.float32)
+    ppos = np.array([2], np.float32)
+    ptot = np.array([4], np.float32)
+    valid = np.ones((1, 3), np.float32)
+    _, idx = score_batch(*map(jnp.asarray, (pos, tot, ppos, ptot, valid)))
+    assert int(idx[0]) == 0

@@ -1,0 +1,182 @@
+//! Ablations of DRF's design choices (DESIGN.md §5):
+//!   1. bit-packed class list vs plain u32 (memory + speed);
+//!   2. SPRINT-style adaptive pruning on a fast-closing workload;
+//!   3. network-latency insensitivity (paper §2);
+//!   4. GBT vs RF on the same substrate (network + quality).
+
+use drf::classlist::ClassList;
+use drf::config::{ForestParams, PruneMode, StorageMode, TrainConfig};
+use drf::data::synthetic::{Family, LeoLikeSpec, SyntheticSpec};
+use drf::forest::gbt::{GbtParams, GbtTrainer};
+use drf::forest::RandomForest;
+use drf::metrics::{auc, Stopwatch};
+use drf::util::bench::{bench, fmt_bytes, Table};
+
+fn classlist_ablation() {
+    println!("=== Ablation 1: bit-packed class list vs u32 ===");
+    let n = 1_000_000usize;
+    let mut t = Table::new(&["layout", "ℓ=63 memory", "get x n", "note"]);
+    let mut packed = ClassList::with_open(n, 63);
+    for i in 0..n {
+        packed.set(i, (i % 64) as u32);
+    }
+    let timing = bench(10, 5.0, || {
+        let mut acc = 0u64;
+        for i in 0..n {
+            acc += packed.get(i) as u64;
+        }
+        std::hint::black_box(acc);
+    });
+    t.row(&[
+        "bit-packed (paper §2.3)".into(),
+        fmt_bytes(packed.memory_bits() / 8),
+        timing.per_iter_label(),
+        format!("{} bits/sample", packed.width()),
+    ]);
+    let plain: Vec<u32> = (0..n).map(|i| (i % 64) as u32).collect();
+    let timing = bench(10, 5.0, || {
+        let mut acc = 0u64;
+        for &v in &plain {
+            acc += v as u64;
+        }
+        std::hint::black_box(acc);
+    });
+    t.row(&[
+        "plain u32".into(),
+        fmt_bytes(n as u64 * 4),
+        timing.per_iter_label(),
+        "32 bits/sample (5.3x memory)".into(),
+    ]);
+    t.print();
+}
+
+fn pruning_ablation() {
+    println!("\n=== Ablation 2: SPRINT-style adaptive pruning (disk mode) ===");
+    // min_records high -> most records land in closed leaves early,
+    // the regime where the paper says pruning *would* help Sprint.
+    let ds = SyntheticSpec::new(Family::LinearCont { informative: 3 }, 100_000, 8, 3).generate();
+    let mut t = Table::new(&["prune", "wall s", "disk read", "identical tree"]);
+    let mut reference = None;
+    for (label, prune) in [
+        ("never (paper's Leo runs)", PruneMode::Never),
+        ("adaptive @ 30% closed", PruneMode::Adaptive { threshold: 0.3 }),
+    ] {
+        let cfg = TrainConfig {
+            forest: ForestParams {
+                num_trees: 1,
+                max_depth: 12,
+                min_records: 2_000,
+                seed: 5,
+                ..Default::default()
+            },
+            prune,
+            storage: StorageMode::Disk,
+            ..Default::default()
+        };
+        let sw = Stopwatch::start();
+        let (forest, report) = RandomForest::train_with_config(&ds, &cfg).unwrap();
+        let read: u64 = report.splitter_io.iter().map(|s| s.disk_read_bytes).sum();
+        let identical = match &reference {
+            None => {
+                reference = Some(forest.trees[0].clone());
+                "reference".to_string()
+            }
+            Some(r) => (r == &forest.trees[0]).to_string(),
+        };
+        t.row(&[
+            label.into(),
+            format!("{:.3}", sw.seconds()),
+            fmt_bytes(read),
+            identical,
+        ]);
+    }
+    t.print();
+}
+
+fn latency_ablation() {
+    println!("\n=== Ablation 3: injected network latency (paper §2: DRF is latency-insensitive) ===");
+    let ds = SyntheticSpec::new(Family::Majority { informative: 3 }, 30_000, 6, 3).generate();
+    let mut t = Table::new(&["latency/msg", "wall s", "messages", "latency share"]);
+    for latency_us in [0u64, 200, 1000] {
+        let mut cfg = TrainConfig::default();
+        cfg.forest = ForestParams {
+            num_trees: 1,
+            max_depth: 8,
+            seed: 5,
+            ..Default::default()
+        };
+        cfg.topology.latency_us = latency_us;
+        let sw = Stopwatch::start();
+        let (_, report) = RandomForest::train_with_config(&ds, &cfg).unwrap();
+        let wall = sw.seconds();
+        // Latency is paid once per RPC round, not per byte: the share
+        // stays modest because message count is O(w x depth).
+        let injected = report.net.net_messages as f64 * latency_us as f64 * 1e-6;
+        t.row(&[
+            format!("{latency_us} µs"),
+            format!("{wall:.3}"),
+            report.net.net_messages.to_string(),
+            format!("{:.0}%", 100.0 * (injected.min(wall)) / wall),
+        ]);
+    }
+    t.print();
+}
+
+fn gbt_vs_rf() {
+    println!("\n=== Ablation 4: GBT vs RF on the Leo-like dataset ===");
+    let spec = LeoLikeSpec::new(40_000, 20_626);
+    let train = spec.generate();
+    let test = spec.generate_rows(40_000, 10_000);
+    let mut t = Table::new(&["model", "train s", "test AUC", "network model"]);
+
+    let sw = Stopwatch::start();
+    let params = ForestParams {
+        num_trees: 30,
+        max_depth: 8,
+        min_records: 50,
+        seed: 9,
+        ..Default::default()
+    };
+    let (rf, report) = RandomForest::train_with_config(&train, &TrainConfig {
+        forest: params,
+        ..Default::default()
+    })
+    .unwrap();
+    t.row(&[
+        "RF (30 trees)".into(),
+        format!("{:.2}", sw.seconds()),
+        format!("{:.4}", auc(&rf.predict_scores(&test), test.labels())),
+        format!("{} measured", fmt_bytes(report.net.net_bytes)),
+    ]);
+
+    let sw = Stopwatch::start();
+    let trainer = GbtTrainer::new(
+        &train,
+        GbtParams {
+            num_rounds: 60,
+            max_depth: 4,
+            learning_rate: 0.3,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let model = trainer.train().unwrap();
+    t.row(&[
+        "GBT (60 rounds)".into(),
+        format!("{:.2}", sw.seconds()),
+        format!("{:.4}", auc(&model.predict_scores(&test), test.labels())),
+        format!(
+            "{} gradient broadcasts",
+            fmt_bytes(trainer.stats().net_bytes())
+        ),
+    ]);
+    t.print();
+    println!("\n(RF ships ~1 bit/sample/level; GBT adds 8 B/sample/round of gradients.)");
+}
+
+fn main() {
+    classlist_ablation();
+    pruning_ablation();
+    latency_ablation();
+    gbt_vs_rf();
+}

@@ -1,0 +1,250 @@
+//! Hot-path micro-benchmarks — the profiling substrate for the perf
+//! pass (EXPERIMENTS.md §Perf). Measures the components that dominate
+//! training time:
+//!   * Alg. 1 numerical scan throughput (rows/s) at several leaf counts;
+//!   * categorical count-table pass;
+//!   * class-list get/set and level-update application;
+//!   * condition-evaluation bitmap production;
+//!   * XLA batched scorer vs native scalar scorer (when artifacts exist).
+
+use drf::classlist::ClassList;
+use drf::coordinator::messages::{Bitmap, LeafOutcome, LevelUpdate};
+use drf::coordinator::splitter::apply_update_to_class_list;
+use drf::data::column::Column;
+use drf::data::synthetic::{Family, SyntheticSpec};
+use drf::rng::{SplitMix64, Xoshiro256pp};
+use drf::splits::histogram::Histogram;
+use drf::splits::numerical::best_numerical_supersplit;
+use drf::splits::scorer::ScoreKind;
+use drf::util::bench::{bench, format_seconds, Table};
+
+fn main() {
+    let n = 1_000_000usize;
+    let mut rng = Xoshiro256pp::new(1);
+    let values: Vec<f32> = (0..n).map(|_| rng.next_f64() as f32).collect();
+    let labels: Vec<u32> = (0..n).map(|_| (rng.next_f64() < 0.3) as u32).collect();
+    let col = Column::Numerical(values);
+    let sorted = col.presort();
+
+    let mut t = Table::new(&["hot path", "input", "time", "throughput"]);
+
+    // Alg. 1 scan at 1 and 64 open leaves.
+    for leaves in [1u32, 64] {
+        let mut totals = vec![Histogram::new(2); leaves as usize];
+        for i in 0..n {
+            totals[(i as u32 % leaves) as usize].add(labels[i], 1);
+        }
+        let timing = bench(5, 10.0, || {
+            let r = best_numerical_supersplit(
+                0,
+                &sorted,
+                &labels,
+                2,
+                &totals,
+                ScoreKind::Gini,
+                |i| (i % leaves) + 1,
+                |_| true,
+                |_| 1,
+            );
+            std::hint::black_box(&r);
+        });
+        t.row(&[
+            format!("alg1 scan ({leaves} leaves)"),
+            format!("{n} rows"),
+            timing.per_iter_label(),
+            format!("{:.1} Mrows/s", n as f64 / timing.mean_s / 1e6),
+        ]);
+    }
+
+    // Alg. 1 with realistic bagging + candidate checks (closure cost).
+    let bagger = drf::rng::Bagger::new(7, drf::rng::BaggingMode::Poisson);
+    let totals = {
+        let mut h = Histogram::new(2);
+        for i in 0..n {
+            let w = bagger.weight(0, i as u64);
+            if w > 0 {
+                h.add(labels[i], w);
+            }
+        }
+        vec![h]
+    };
+    let timing = bench(5, 10.0, || {
+        let r = best_numerical_supersplit(
+            0,
+            &sorted,
+            &labels,
+            2,
+            &totals,
+            ScoreKind::Gini,
+            |_| 1,
+            |_| true,
+            |i| bagger.weight(0, i as u64),
+        );
+        std::hint::black_box(&r);
+    });
+    t.row(&[
+        "alg1 scan + poisson bag".into(),
+        format!("{n} rows"),
+        timing.per_iter_label(),
+        format!("{:.1} Mrows/s", n as f64 / timing.mean_s / 1e6),
+    ]);
+
+    // Categorical count-table pass.
+    let arity = 1000u32;
+    let cat_values: Vec<u32> = (0..n)
+        .map(|i| (SplitMix64::hash_key(&[3, i as u64]) % arity as u64) as u32)
+        .collect();
+    let timing = bench(5, 10.0, || {
+        let r = drf::splits::categorical::best_categorical_supersplit(
+            0,
+            &cat_values,
+            arity,
+            &labels,
+            2,
+            &totals,
+            ScoreKind::Gini,
+            |_| 1,
+            |_| true,
+            |_| 1,
+        );
+        std::hint::black_box(&r);
+    });
+    t.row(&[
+        "categorical pass (arity 1000)".into(),
+        format!("{n} rows"),
+        timing.per_iter_label(),
+        format!("{:.1} Mrows/s", n as f64 / timing.mean_s / 1e6),
+    ]);
+
+    // Class-list reads (the sample2node closure inside every scan).
+    let mut cl = ClassList::with_open(n, 64);
+    for i in 0..n {
+        cl.set(i, (i % 65) as u32);
+    }
+    let timing = bench(10, 10.0, || {
+        let mut acc = 0u64;
+        for i in 0..n {
+            acc += cl.get(i) as u64;
+        }
+        std::hint::black_box(acc);
+    });
+    t.row(&[
+        "classlist get x n".into(),
+        format!("{n} reads (width {})", cl.width()),
+        timing.per_iter_label(),
+        format!("{:.1} Mops/s", n as f64 / timing.mean_s / 1e6),
+    ]);
+
+    // Level-update application (rewrite + repack).
+    let bitmap = {
+        let count = cl.histogram()[1..].iter().sum::<u64>() as usize;
+        let mut per_leaf: Vec<Bitmap> = (1..=64)
+            .map(|r| Bitmap::with_len(cl.histogram()[r] as usize))
+            .collect();
+        let mut pos = vec![0usize; 64];
+        for i in 0..n {
+            let c = cl.get(i);
+            if c > 0 {
+                per_leaf[(c - 1) as usize].set(pos[(c - 1) as usize], i % 2 == 0);
+                pos[(c - 1) as usize] += 1;
+            }
+        }
+        std::hint::black_box(count);
+        per_leaf
+    };
+    let update = LevelUpdate {
+        tree: 0,
+        depth: 6,
+        outcomes: bitmap
+            .into_iter()
+            .map(|bm| LeafOutcome::Split {
+                bitmap: bm,
+                left_open: true,
+                right_open: true,
+            })
+            .collect(),
+    };
+    let timing = bench(5, 10.0, || {
+        let r = apply_update_to_class_list(&cl, &update).unwrap();
+        std::hint::black_box(&r);
+    });
+    t.row(&[
+        "level update (64->128 leaves)".into(),
+        format!("{n} samples"),
+        timing.per_iter_label(),
+        format!("{:.1} Mrows/s", n as f64 / timing.mean_s / 1e6),
+    ]);
+
+    // End-to-end single tree on a mid-size dataset (the composite).
+    let ds = SyntheticSpec::new(Family::LinearCont { informative: 4 }, 100_000, 12, 5).generate();
+    let params = drf::config::ForestParams {
+        num_trees: 1,
+        max_depth: 12,
+        min_records: 10,
+        seed: 7,
+        ..Default::default()
+    };
+    let cfg = drf::config::TrainConfig {
+        forest: params,
+        ..Default::default()
+    };
+    let timing = bench(3, 30.0, || {
+        let r = drf::forest::RandomForest::train_with_config(&ds, &cfg).unwrap();
+        std::hint::black_box(&r);
+    });
+    t.row(&[
+        "end-to-end tree (n=100k, m=12)".into(),
+        "1 tree".into(),
+        timing.per_iter_label(),
+        format!("{:.2} Mrows*levels/s", 100_000.0 * 12.0 / timing.mean_s / 1e6),
+    ]);
+
+    // XLA scorer vs native (artifact-dependent).
+    let art = std::path::Path::new("artifacts");
+    if art
+        .join(drf::splits::xla_scorer::XlaScorer::artifact_name(16, 512))
+        .exists()
+    {
+        use drf::splits::xla_scorer::{ScoreTask, ScoreTasks, XlaScorer};
+        let rt = drf::runtime::XlaRuntime::cpu().unwrap();
+        let scorer = XlaScorer::load(&rt, art, 16, 512).unwrap();
+        let tasks: Vec<ScoreTask> = (0..64)
+            .map(|k| {
+                let len = 512usize;
+                let mut pos = Vec::with_capacity(len);
+                let mut tot = Vec::with_capacity(len);
+                let (mut p, mut q) = (0f32, 0f32);
+                for i in 0..len {
+                    q += 1.0;
+                    if (i + k) % 3 == 0 {
+                        p += 1.0;
+                    }
+                    pos.push(p);
+                    tot.push(q);
+                }
+                ScoreTask {
+                    pos_prefix: pos,
+                    tot_prefix: tot,
+                    parent_pos: p + 1.0,
+                    parent_tot: q + 2.0,
+                }
+            })
+            .collect();
+        let timing = bench(10, 10.0, || {
+            let r = scorer.score_tasks(&tasks).unwrap();
+            std::hint::black_box(&r);
+        });
+        let boundaries = 64.0 * 512.0;
+        t.row(&[
+            "xla scorer (64 tasks x 512)".into(),
+            format!("{boundaries:.0} boundaries"),
+            timing.per_iter_label(),
+            format!("{:.2} Mboundaries/s", boundaries / timing.mean_s / 1e6),
+        ]);
+    } else {
+        println!("(skipping XLA scorer bench: run `make artifacts`)");
+    }
+
+    t.print();
+    println!("\n(hotpath timings feed EXPERIMENTS.md §Perf; times via {})", format_seconds(1.0));
+}

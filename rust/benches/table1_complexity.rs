@@ -1,0 +1,171 @@
+//! Table 1 — complexity comparison of Generic / SLIQ / SPRINT / SLIQ-D
+//! / SLIQ-R / DRF / DRF-USB.
+//!
+//! Two halves:
+//!  1. the closed-form model (complexity::table1) evaluated at the
+//!     paper's Leo scale (n = 17.3e9, m = 72, w = 82, D = 20);
+//!  2. *measured* counters from the real implementations (classic,
+//!     SLIQ, SPRINT, DRF, DRF-USB) on a shared synthetic workload —
+//!     same trees, different data structures, so the cost differences
+//!     are purely algorithmic.
+
+use drf::baselines::sliq::SliqTrainer;
+use drf::baselines::sprint::SprintTrainer;
+use drf::complexity::table1::{all_rows, Workload};
+use drf::config::{ForestParams, StorageMode, TrainConfig};
+use drf::data::io_stats::IoStats;
+use drf::data::synthetic::{Family, SyntheticSpec};
+use drf::forest::RandomForest;
+use drf::metrics::Stopwatch;
+use drf::rng::{BaggingMode, FeatureSampling};
+use drf::util::bench::{fmt_bytes, fmt_count, Table};
+
+fn analytic() {
+    println!("=== Table 1 (analytic), paper scale: n=17.3e9, m=72, m'=9, w=82, D=20 ===");
+    let mut wl = Workload::with_defaults(17_300_000_000, 72, 82, 20);
+    wl.z = 400_000; // ~open leaves at depth 20 (Table 2)
+    wl.depth_bar = 18.0;
+    wl.c_nodes = 870_000;
+    wl.m_nodes = 435_000;
+    let mut t = Table::new(&[
+        "algorithm",
+        "mem/worker",
+        "compute/worker",
+        "disk write",
+        "network",
+        "read/worker",
+        "read passes",
+    ]);
+    for row in all_rows(&wl) {
+        t.row(&[
+            row.algorithm.into(),
+            fmt_bytes((row.memory_bits_per_worker / 8.0) as u64),
+            fmt_count(row.compute_ops_per_worker),
+            fmt_bytes((row.disk_write_bits / 8.0) as u64),
+            fmt_bytes((row.network_bits / 8.0) as u64),
+            fmt_bytes((row.read_bits_per_worker / 8.0) as u64),
+            fmt_count(row.read_passes),
+        ]);
+    }
+    t.print();
+}
+
+fn measured() {
+    println!("\n=== Table 1 (measured) on a shared workload: n=20k, m=12, depth<=8 ===");
+    let ds = SyntheticSpec::new(Family::LinearCont { informative: 4 }, 20_000, 12, 5).generate();
+    let params = ForestParams {
+        num_trees: 1,
+        max_depth: 8,
+        min_records: 20,
+        bagging: BaggingMode::Poisson,
+        seed: 42,
+        ..Default::default()
+    };
+
+    let mut t = Table::new(&[
+        "algorithm",
+        "time (s)",
+        "disk read",
+        "read passes",
+        "disk write",
+        "write passes",
+        "network",
+        "identical tree",
+    ]);
+
+    // Classic in-memory (reference tree).
+    let sw = Stopwatch::start();
+    let classic_tree = drf::baselines::classic::ClassicTrainer::new(&ds, &params).train_tree(0);
+    let classic_secs = sw.seconds();
+    t.row(&[
+        "generic-in-memory".into(),
+        format!("{classic_secs:.3}"),
+        "0 B (in RAM)".into(),
+        "0".into(),
+        "0 B".into(),
+        "0".into(),
+        "0 B".into(),
+        "reference".into(),
+    ]);
+
+    // SLIQ.
+    let stats = IoStats::new();
+    let sw = Stopwatch::start();
+    let sliq_tree = SliqTrainer::new(&ds, &params, stats.clone()).train_tree(0);
+    t.row(&[
+        "sliq".into(),
+        format!("{:.3}", sw.seconds()),
+        fmt_bytes(stats.disk_read_bytes()),
+        stats.disk_read_passes().to_string(),
+        fmt_bytes(stats.disk_write_bytes()),
+        stats.disk_write_passes().to_string(),
+        fmt_bytes(stats.net_bytes()),
+        (sliq_tree == classic_tree).to_string(),
+    ]);
+
+    // SPRINT.
+    let stats = IoStats::new();
+    let sw = Stopwatch::start();
+    let sprint_tree = SprintTrainer::new(&ds, &params, stats.clone()).train_tree(0);
+    t.row(&[
+        "sprint".into(),
+        format!("{:.3}", sw.seconds()),
+        fmt_bytes(stats.disk_read_bytes()),
+        stats.disk_read_passes().to_string(),
+        fmt_bytes(stats.disk_write_bytes()),
+        stats.disk_write_passes().to_string(),
+        fmt_bytes(stats.net_bytes()),
+        (sprint_tree == classic_tree).to_string(),
+    ]);
+
+    // DRF (disk mode so reads are real) and DRF-USB.
+    for (label, sampling) in [
+        ("drf", FeatureSampling::PerNode),
+        ("drf-usb", FeatureSampling::PerDepth),
+    ] {
+        let cfg = TrainConfig {
+            forest: ForestParams {
+                feature_sampling: sampling,
+                ..params
+            },
+            storage: StorageMode::Disk,
+            ..Default::default()
+        };
+        let sw = Stopwatch::start();
+        let (forest, report) = RandomForest::train_with_config(&ds, &cfg).unwrap();
+        let secs = sw.seconds();
+        let read: u64 = report.splitter_io.iter().map(|s| s.disk_read_bytes).sum();
+        let read_passes: u64 = report.splitter_io.iter().map(|s| s.disk_read_passes).sum();
+        let write: u64 = report.splitter_io.iter().map(|s| s.disk_write_bytes).sum();
+        let write_passes: u64 = report.splitter_io.iter().map(|s| s.disk_write_passes).sum();
+        // Dataset prep writes (shard spill) happen once; exclude nothing,
+        // report as-is and annotate.
+        let identical = if sampling == FeatureSampling::PerNode {
+            (forest.trees[0] == classic_tree).to_string()
+        } else {
+            "different sampling".into()
+        };
+        t.row(&[
+            label.into(),
+            format!("{secs:.3}"),
+            fmt_bytes(read),
+            read_passes.to_string(),
+            format!("{} (prep)", fmt_bytes(write)),
+            write_passes.to_string(),
+            fmt_bytes(report.net.net_bytes),
+            identical,
+        ]);
+    }
+    t.print();
+    println!(
+        "\nExpected shape: SLIQ reads every candidate column fully each level;\n\
+         SPRINT pays the per-split rewrite (disk writes) but prunes closed\n\
+         records; DRF never writes after prep and broadcasts ~1 bit/sample/level;\n\
+         USB cuts DRF reads further (z=1)."
+    );
+}
+
+fn main() {
+    analytic();
+    measured();
+}

@@ -1,0 +1,79 @@
+//! Table 2 — Leo 1% / 10% / 100%: per-tree train time, leaves, node
+//! density, sample density (+ AUC, which the paper reports in the
+//! text: 0.823 / 0.837 / 0.847).
+//!
+//! Paper values (17.3e9 rows, 82 workers, depth 20):
+//!   1%   : 0.838 h/tree, 140e3 leaves, density 0.134 / 0.766
+//!   10%  : 3.156 h/tree, 320e3 leaves, density 0.305 / 0.904
+//!   100% : 22.29 h/tree, 435e3 leaves, density 0.415 / 0.969
+//! We reproduce the *shape* at 1:~60'000 scale on one core: time and
+//! leaves grow strongly sub-proportionally to n, densities and AUC rise
+//! with more data.
+
+use drf::config::{ForestParams, StorageMode, TrainConfig};
+use drf::data::synthetic::LeoLikeSpec;
+use drf::forest::RandomForest;
+use drf::metrics::auc;
+use drf::util::bench::{fmt_bytes, Table};
+
+fn main() {
+    let full_n: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(120_000);
+    let spec = LeoLikeSpec::new(full_n, 20_626);
+    println!("generating Leo-like dataset ({full_n} rows)…");
+    let full = spec.generate();
+    let test = spec.generate_rows(full_n, (full_n / 5).max(5_000));
+
+    let mut t = Table::new(&[
+        "Leo",
+        "Samples",
+        "Train time (s/tree)",
+        "Leaves",
+        "Node density",
+        "Sample density",
+        "RF AUC",
+        "net traffic",
+        "paper (h/tree, leaves, nd, sd, AUC)",
+    ]);
+    let paper = [
+        ("1%", "0.838h, 140e3, .134, .766, .823"),
+        ("10%", "3.156h, 320e3, .305, .904, .837"),
+        ("100%", "22.29h, 435e3, .415, .969, .847"),
+    ];
+    for (k, (label, frac, min_records)) in
+        [("1%", 0.01f64, 2u64), ("10%", 0.1, 13), ("100%", 1.0, 133)]
+            .into_iter()
+            .enumerate()
+    {
+        let n = (full_n as f64 * frac) as usize;
+        let ds = full.head(n);
+        let params = ForestParams {
+            num_trees: 3,
+            max_depth: 14,
+            min_records,
+            seed: 9,
+            ..Default::default()
+        };
+        let cfg = TrainConfig {
+            forest: params,
+            storage: StorageMode::Disk,
+            ..Default::default()
+        };
+        let (forest, report) = RandomForest::train_with_config(&ds, &cfg).unwrap();
+        let a = auc(&forest.predict_scores(&test), test.labels());
+        t.row(&[
+            label.into(),
+            n.to_string(),
+            format!("{:.2}", report.total_tree_seconds() / 3.0),
+            format!("{:.0}", forest.mean_leaves()),
+            format!("{:.3}", forest.mean_node_density()),
+            format!("{:.3}", forest.mean_sample_density()),
+            format!("{a:.4}"),
+            fmt_bytes(report.net.net_bytes),
+            paper[k].1.into(),
+        ]);
+    }
+    t.print();
+}

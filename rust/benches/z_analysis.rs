@@ -1,0 +1,119 @@
+//! §3.2 — the Z analysis: per-worker feature load under feature
+//! sampling, worker counts, USB, and redundant storage.
+//!
+//! Three views, cross-validated:
+//!  1. Monte-Carlo simulation (complexity::zmodel);
+//!  2. the closed-form regimes of Table 1 (complexity::table1);
+//!  3. Z actually *measured* by the tree builder's per-level stats on a
+//!     real training run.
+
+use drf::complexity::table1::Workload;
+use drf::complexity::zmodel::{simulate, ZConfig};
+use drf::config::{ForestParams, TopologyParams, TrainConfig};
+use drf::data::synthetic::{Family, SyntheticSpec};
+use drf::forest::RandomForest;
+use drf::rng::FeatureSampling;
+use drf::util::bench::Table;
+
+fn monte_carlo() {
+    println!("=== E[Z]: Monte-Carlo vs closed-form regimes ===");
+    let mut t = Table::new(&["m", "m'", "z", "w", "d", "E[m'']", "E[Z] (MC)", "Z (model)"]);
+    let cases = [
+        // (m, m', z, w, d)
+        (1024usize, 32usize, 1usize, 32usize, 1usize), // balance point, no redundancy
+        (1024, 32, 1, 32, 3),                          // + redundancy
+        (1024, 32, 1, 32, 5),                          // + more redundancy (USB win)
+        (1024, 32, 64, 32, 1),                         // many nodes: m'' >> w
+        (1024, 32, 64, 128, 1),                        // more workers
+        (72, 9, 400, 72, 1),                           // Leo-like: w = m
+    ];
+    for (m, m_prime, z, w, d) in cases {
+        let est = simulate(
+            &ZConfig {
+                m,
+                m_prime,
+                z,
+                w,
+                d,
+            },
+            300,
+            7,
+        );
+        let mut wl = Workload::with_defaults(1_000_000, m as u64, w as u64, 10);
+        wl.m_prime = m_prime as u64;
+        wl.z = z as u64;
+        wl.d = d as u64;
+        t.row(&[
+            m.to_string(),
+            m_prime.to_string(),
+            z.to_string(),
+            w.to_string(),
+            d.to_string(),
+            format!("{:.1}", est.mean_m_double_prime),
+            format!("{:.2}", est.mean_z),
+            format!("{:.2}", wl.z_load()),
+        ]);
+    }
+    t.print();
+}
+
+fn measured() {
+    println!("\n=== Z measured during real training (per-level max load) ===");
+    let ds = SyntheticSpec::new(Family::Majority { informative: 4 }, 20_000, 64, 3).generate();
+    let mut t = Table::new(&["sampling", "w", "d", "mean Z", "max Z", "mean m''"]);
+    for (sampling, w, d) in [
+        (FeatureSampling::PerNode, 8usize, 1usize),
+        (FeatureSampling::PerNode, 8, 2),
+        (FeatureSampling::PerNode, 64, 1),
+        (FeatureSampling::PerDepth, 8, 1),
+        (FeatureSampling::PerDepth, 8, 2),
+        (FeatureSampling::PerDepth, 64, 1),
+    ] {
+        let cfg = TrainConfig {
+            forest: ForestParams {
+                num_trees: 2,
+                max_depth: 10,
+                min_records: 20,
+                feature_sampling: sampling,
+                seed: 11,
+                ..Default::default()
+            },
+            topology: TopologyParams {
+                num_splitters: Some(w),
+                redundancy: d,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let (_, report) = RandomForest::train_with_config(&ds, &cfg).unwrap();
+        let zs: Vec<usize> = report
+            .per_tree
+            .iter()
+            .flat_map(|t| t.levels.iter().map(|l| l.z_max_load))
+            .collect();
+        let ms: Vec<usize> = report
+            .per_tree
+            .iter()
+            .flat_map(|t| t.levels.iter().map(|l| l.m_double_prime))
+            .collect();
+        let mean = |v: &[usize]| v.iter().sum::<usize>() as f64 / v.len().max(1) as f64;
+        t.row(&[
+            format!("{sampling:?}"),
+            w.to_string(),
+            d.to_string(),
+            format!("{:.2}", mean(&zs)),
+            zs.iter().max().copied().unwrap_or(0).to_string(),
+            format!("{:.1}", mean(&ms)),
+        ]);
+    }
+    t.print();
+    println!(
+        "\nShape check (paper §3.2): USB (PerDepth) slashes m'' and Z;\n\
+         redundancy d>1 cuts Z again at the w≈m'' balance point."
+    );
+}
+
+fn main() {
+    monte_carlo();
+    measured();
+}

@@ -1,0 +1,304 @@
+//! The classic in-memory Random Forest trainer — the **exactness
+//! oracle**.
+//!
+//! This is Table 1's "generic sequential tree, all in memory": per node
+//! it gathers the node's rows, sorts each candidate numerical feature,
+//! finds the best split, and physically partitions the row lists —
+//! random access everywhere, nothing distributed. It shares with DRF
+//! only the *decision* primitives (split scoring, tie-breaking, seeded
+//! bagging/feature sampling, leaf-closing rule), so the two radically
+//! different computations must produce **identical trees** — which is
+//! exactly the paper's "exact distributed training" claim, enforced by
+//! `rust/tests/exactness.rs`.
+
+use crate::config::ForestParams;
+use crate::data::column::{Column, SortedEntry};
+use crate::data::Dataset;
+use crate::rng::{Bagger, FeatureSampler};
+use crate::splits::histogram::Histogram;
+use crate::splits::scorer::pick_best;
+use crate::splits::{categorical, numerical, SplitCandidate};
+use crate::tree::{Condition, Tree};
+
+/// Classic (single-process, row-partitioning) trainer.
+pub struct ClassicTrainer<'a> {
+    ds: &'a Dataset,
+    params: &'a ForestParams,
+    bagger: Bagger,
+    sampler: FeatureSampler,
+}
+
+impl<'a> ClassicTrainer<'a> {
+    pub fn new(ds: &'a Dataset, params: &'a ForestParams) -> Self {
+        Self {
+            ds,
+            params,
+            bagger: Bagger::new(params.seed, params.bagging),
+            sampler: FeatureSampler::new(
+                params.seed,
+                ds.num_features(),
+                params.candidates_for(ds.num_features()),
+                params.feature_sampling,
+            ),
+        }
+    }
+
+    /// Train the whole forest sequentially.
+    pub fn train_forest(&self) -> Vec<Tree> {
+        (0..self.params.num_trees as u32)
+            .map(|t| self.train_tree(t))
+            .collect()
+    }
+
+    /// Train one tree breadth-first (nodes numbered identically to the
+    /// distributed builder).
+    pub fn train_tree(&self, tree_idx: u32) -> Tree {
+        let n = self.ds.num_rows();
+        let labels = self.ds.labels();
+        let weights: Vec<u32> = (0..n)
+            .map(|i| self.bagger.weight(tree_idx, i as u64))
+            .collect();
+
+        // Root: in-bag rows in increasing order.
+        let root_rows: Vec<u32> = (0..n as u32).filter(|&i| weights[i as usize] > 0).collect();
+        let mut root_hist = Histogram::new(self.ds.num_classes());
+        for &i in &root_rows {
+            root_hist.add(labels[i as usize], weights[i as usize]);
+        }
+        let root_counts = root_hist.into_counts();
+        let mut tree = Tree::new_root(root_counts.clone());
+
+        // BFS over depth levels, leaves in creation order.
+        let mut open: Vec<(u32, Vec<u32>)> = if self.params.child_open(&root_counts, 0) {
+            vec![(0, root_rows)]
+        } else {
+            vec![]
+        };
+        let mut depth = 0u32;
+        while !open.is_empty() {
+            let mut next_open = Vec::new();
+            for (node_id, rows) in std::mem::take(&mut open) {
+                match self.best_split_for_node(tree_idx, depth, node_id, &rows, &tree, &weights)
+                {
+                    None => {} // leaf closes
+                    Some(best) => {
+                        let (left_rows, right_rows) = self.partition(&rows, &best.condition);
+                        let (l, r) = tree.split_node(
+                            node_id,
+                            best.condition.clone(),
+                            best.gain,
+                            best.left_counts.clone(),
+                            best.right_counts.clone(),
+                        );
+                        if self.params.child_open(&best.left_counts, depth + 1) {
+                            next_open.push((l, left_rows));
+                        }
+                        if self.params.child_open(&best.right_counts, depth + 1) {
+                            next_open.push((r, right_rows));
+                        }
+                    }
+                }
+            }
+            open = next_open;
+            depth += 1;
+        }
+        tree
+    }
+
+    /// Best split of one node over its sampled candidate features.
+    fn best_split_for_node(
+        &self,
+        tree_idx: u32,
+        depth: u32,
+        node_id: u32,
+        rows: &[u32],
+        tree: &Tree,
+        weights: &[u32],
+    ) -> Option<SplitCandidate> {
+        let labels = self.ds.labels();
+        let node_hist =
+            Histogram::from_counts(tree.nodes[node_id as usize].class_counts.clone());
+        let totals = [node_hist];
+        let candidates = self.sampler.candidates(tree_idx, depth, node_id);
+        let mut best: Option<SplitCandidate> = None;
+        for j in candidates {
+            let cand = match self.ds.column(j) {
+                Column::Numerical(vals) => {
+                    // Per-node sort — the classic O(n log n)-per-node
+                    // approach. Tie-break by sample id matches the
+                    // presorted global order restricted to this node.
+                    let mut entries: Vec<SortedEntry> = rows
+                        .iter()
+                        .map(|&i| SortedEntry {
+                            value: vals[i as usize],
+                            sample: i,
+                        })
+                        .collect();
+                    entries.sort_by(|a, b| {
+                        a.value
+                            .partial_cmp(&b.value)
+                            .unwrap_or(std::cmp::Ordering::Equal)
+                            .then(a.sample.cmp(&b.sample))
+                    });
+                    numerical::best_numerical_supersplit(
+                        j,
+                        &entries,
+                        labels,
+                        self.ds.num_classes(),
+                        &totals,
+                        self.params.score_kind,
+                        |_| 1,
+                        |_| true,
+                        |i| weights[i as usize],
+                    )
+                    .pop()
+                    .flatten()
+                }
+                Column::Categorical { values, arity } => {
+                    // Gather the node's slice of the column.
+                    let sub_values: Vec<u32> =
+                        rows.iter().map(|&i| values[i as usize]).collect();
+                    let sub_labels: Vec<u32> =
+                        rows.iter().map(|&i| labels[i as usize]).collect();
+                    let rows_copy = rows.to_vec();
+                    categorical::best_categorical_supersplit(
+                        j,
+                        &sub_values,
+                        *arity,
+                        &sub_labels,
+                        self.ds.num_classes(),
+                        &totals,
+                        self.params.score_kind,
+                        |_| 1,
+                        |_| true,
+                        move |k| weights[rows_copy[k as usize] as usize],
+                    )
+                    .pop()
+                    .flatten()
+                }
+            };
+            if let Some(c) = cand {
+                best = pick_best([best.take(), Some(c)].into_iter().flatten());
+            }
+        }
+        best
+    }
+
+    /// Physically partition a node's rows by a condition (row order
+    /// preserved — matching the bitmap semantics of the distributed
+    /// path).
+    fn partition(&self, rows: &[u32], cond: &Condition) -> (Vec<u32>, Vec<u32>) {
+        let mut left = Vec::new();
+        let mut right = Vec::new();
+        match cond {
+            Condition::NumLe { feature, threshold } => {
+                let vals = self.ds.column(*feature).as_numerical();
+                for &i in rows {
+                    if vals[i as usize] <= *threshold {
+                        left.push(i);
+                    } else {
+                        right.push(i);
+                    }
+                }
+            }
+            Condition::CatIn { feature, set } => {
+                let vals = self.ds.column(*feature).as_categorical();
+                for &i in rows {
+                    if set.contains(vals[i as usize]) {
+                        left.push(i);
+                    } else {
+                        right.push(i);
+                    }
+                }
+            }
+        }
+        (left, right)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{Family, SyntheticSpec};
+    use crate::metrics::{accuracy, auc};
+    use crate::rng::{BaggingMode, FeatureSampling};
+
+    fn params(seed: u64) -> ForestParams {
+        ForestParams {
+            num_trees: 3,
+            max_depth: 8,
+            bagging: BaggingMode::None,
+            feature_sampling: FeatureSampling::All,
+            seed,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn fits_xor_perfectly() {
+        let ds = SyntheticSpec::new(Family::Xor { informative: 2 }, 300, 2, 1).generate();
+        let p = params(1);
+        let tree = ClassicTrainer::new(&ds, &p).train_tree(0);
+        let preds: Vec<u32> = (0..ds.num_rows())
+            .map(|i| tree.predict_class(&ds.row(i)))
+            .collect();
+        assert_eq!(accuracy(&preds, ds.labels()), 1.0);
+        assert!(tree.depth() <= 3);
+    }
+
+    #[test]
+    fn bagged_forest_learns() {
+        let train =
+            SyntheticSpec::new(Family::Majority { informative: 5 }, 1500, 8, 2).generate();
+        let test = SyntheticSpec::new(Family::Majority { informative: 5 }, 800, 8, 3).generate();
+        let p = ForestParams {
+            num_trees: 7,
+            bagging: BaggingMode::Poisson,
+            ..params(5)
+        };
+        let trees = ClassicTrainer::new(&train, &p).train_forest();
+        assert_eq!(trees.len(), 7);
+        let scores: Vec<f64> = (0..test.num_rows())
+            .map(|i| {
+                trees.iter().map(|t| t.score(&test.row(i))).sum::<f64>() / trees.len() as f64
+            })
+            .collect();
+        assert!(auc(&scores, test.labels()) > 0.85);
+    }
+
+    #[test]
+    fn handles_categorical_features() {
+        // Labels depend on a categorical feature.
+        let n = 400;
+        let values: Vec<u32> = (0..n as u32).map(|i| i % 5).collect();
+        let labels: Vec<u32> = values.iter().map(|&v| (v >= 3) as u32).collect();
+        let ds = Dataset::new(
+            crate::data::Schema::new(
+                vec![crate::data::ColumnSpec::categorical("c", 5)],
+                2,
+            ),
+            vec![Column::Categorical { values, arity: 5 }],
+            labels,
+        );
+        let p = params(3);
+        let tree = ClassicTrainer::new(&ds, &p).train_tree(0);
+        let preds: Vec<u32> = (0..n).map(|i| tree.predict_class(&ds.row(i))).collect();
+        assert_eq!(accuracy(&preds, ds.labels()), 1.0);
+        assert_eq!(tree.depth(), 1, "one categorical split suffices");
+    }
+
+    #[test]
+    fn respects_min_records_and_depth() {
+        let ds = SyntheticSpec::new(Family::Xor { informative: 3 }, 500, 6, 1).generate();
+        let p = ForestParams {
+            max_depth: 2,
+            min_records: 50,
+            ..params(1)
+        };
+        let tree = ClassicTrainer::new(&ds, &p).train_tree(0);
+        assert!(tree.depth() <= 2);
+        for node in tree.nodes.iter().filter(|n| !n.is_leaf()) {
+            assert!(node.total_count() >= 50);
+        }
+    }
+}

@@ -1,0 +1,8 @@
+//! Baseline algorithms: the classic in-memory trainer (the exactness
+//! oracle), rote learning, and single-machine SLIQ / SPRINT
+//! re-implementations with full I/O accounting (Table 1's comparators).
+
+pub mod classic;
+pub mod rote;
+pub mod sliq;
+pub mod sprint;

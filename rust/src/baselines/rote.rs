@@ -1,0 +1,113 @@
+//! Rote learning — the paper's §4 baseline.
+//!
+//! "It consists in just labelling a test sample correctly if it was in
+//! the training set, and randomly otherwise." We store, per distinct
+//! feature vector, the training label distribution; unseen vectors score
+//! 0.5 (random). With useless variables the input space explodes and
+//! rote learning collapses to AUC ½ — the behaviour Figure 1 contrasts
+//! against DRF.
+
+use crate::data::dataset::Dataset;
+use crate::data::schema::ColumnType;
+use crate::rng::SplitMix64;
+use std::collections::HashMap;
+
+/// Rote learner: memorize exact feature vectors.
+pub struct RoteLearner {
+    /// feature-vector hash → (positives, total).
+    table: HashMap<u64, (u64, u64)>,
+    num_features: usize,
+}
+
+impl RoteLearner {
+    /// Hash one row's full feature vector.
+    fn row_key(ds: &Dataset, i: usize) -> u64 {
+        let mut parts = Vec::with_capacity(ds.num_features());
+        for (j, spec) in ds.schema().columns.iter().enumerate() {
+            match spec.ctype {
+                ColumnType::Numerical => {
+                    parts.push(ds.row(i).numerical(j).to_bits() as u64);
+                }
+                ColumnType::Categorical { .. } => {
+                    parts.push(ds.row(i).categorical(j) as u64);
+                }
+            }
+        }
+        SplitMix64::hash_key(&parts)
+    }
+
+    /// Memorize the training set.
+    pub fn fit(ds: &Dataset) -> RoteLearner {
+        let mut table: HashMap<u64, (u64, u64)> = HashMap::new();
+        for i in 0..ds.num_rows() {
+            let key = Self::row_key(ds, i);
+            let e = table.entry(key).or_insert((0, 0));
+            if ds.labels()[i] == 1 {
+                e.0 += 1;
+            }
+            e.1 += 1;
+        }
+        RoteLearner {
+            table,
+            num_features: ds.num_features(),
+        }
+    }
+
+    /// Score a test row: P(1) among memorized duplicates, else 0.5.
+    pub fn score(&self, ds: &Dataset, i: usize) -> f64 {
+        assert_eq!(ds.num_features(), self.num_features);
+        match self.table.get(&Self::row_key(ds, i)) {
+            Some(&(pos, total)) if total > 0 => pos as f64 / total as f64,
+            _ => 0.5,
+        }
+    }
+
+    pub fn predict_scores(&self, ds: &Dataset) -> Vec<f64> {
+        (0..ds.num_rows()).map(|i| self.score(ds, i)).collect()
+    }
+
+    /// Number of distinct memorized vectors.
+    pub fn table_size(&self) -> usize {
+        self.table.len()
+    }
+
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{Family, SyntheticSpec};
+    use crate::metrics::auc;
+
+    #[test]
+    fn perfect_on_seen_small_space() {
+        // 4 binary features, 3000 samples: every one of the 16 vectors
+        // seen many times; XOR over all 4 features (no UV) -> rote wins.
+        let spec = SyntheticSpec::new(Family::Xor { informative: 4 }, 3000, 4, 1);
+        let train = spec.generate();
+        let test = SyntheticSpec::new(Family::Xor { informative: 4 }, 500, 4, 2).generate();
+        let rote = RoteLearner::fit(&train);
+        assert!(rote.table_size() <= 16);
+        let a = auc(&rote.predict_scores(&test), test.labels());
+        assert!(a > 0.99, "rote should nail small discrete spaces, AUC {a}");
+    }
+
+    #[test]
+    fn fails_with_many_useless_variables() {
+        // 2 informative + 18 UV: 2^20 vectors, nothing repeats -> AUC ~ 0.5.
+        let train = SyntheticSpec::new(Family::Xor { informative: 2 }, 2000, 20, 1).generate();
+        let test = SyntheticSpec::new(Family::Xor { informative: 2 }, 1000, 20, 2).generate();
+        let rote = RoteLearner::fit(&train);
+        let a = auc(&rote.predict_scores(&test), test.labels());
+        assert!((a - 0.5).abs() < 0.05, "rote must fail with UV, AUC {a}");
+    }
+
+    #[test]
+    fn scores_training_rows_exactly() {
+        let train = SyntheticSpec::new(Family::Majority { informative: 3 }, 200, 3, 1).generate();
+        let rote = RoteLearner::fit(&train);
+        let scores = rote.predict_scores(&train);
+        let a = auc(&scores, train.labels());
+        assert!(a > 0.99, "training AUC should be ~1, got {a}");
+    }
+}

@@ -1,0 +1,271 @@
+//! The bit-packed sample→leaf mapping (paper §2.3, the "class list").
+//!
+//! At any point of depth-wise training, each bagged sample sits in
+//! exactly one leaf. With `ℓ` *open* (splittable) leaves, DRF encodes the
+//! leaf of each sample with `⌈log2(ℓ+1)⌉` bits — the `+1` reserves a code
+//! for "sample is in a closed leaf". For the paper's Leo run this is the
+//! difference between 114 GB (one 64-bit integer per sample) and a few
+//! GB.
+//!
+//! Code semantics:
+//! * `0` — the sample is in a **closed** leaf (or out of the tree);
+//! * `1..=ℓ` — the sample is in the open leaf with that 1-based rank.
+//!
+//! The list re-packs itself whenever the required width changes (both
+//! growing and shrinking as leaves split and close). Unlike SLIQ's class
+//! list, no label values are stored here (paper: "DRF does not store the
+//! label values in memory").
+
+
+/// Bit-packed sample→leaf-code array.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ClassList {
+    n: usize,
+    /// Bits per sample = ⌈log2(num_open + 1)⌉, min 1.
+    width: u32,
+    /// Number of open leaves ℓ. Valid codes are 0..=ℓ.
+    num_open: u32,
+    words: Vec<u64>,
+}
+
+/// Width needed for `num_open` open leaves: ⌈log2(ℓ+1)⌉ bits (paper
+/// §2.3), minimum 1.
+#[inline]
+pub fn width_for(num_open: u32) -> u32 {
+    let codes = num_open as u64 + 1; // codes 0..=ℓ
+    (64 - (codes - 1).leading_zeros()).max(1)
+}
+
+impl ClassList {
+    /// A fresh class list: all `n` samples in the root (code 1, ℓ = 1).
+    pub fn new_all_root(n: usize) -> Self {
+        let mut cl = Self::with_open(n, 1);
+        // width_for(1) = 1, code 1 = all bits set.
+        for w in &mut cl.words {
+            *w = u64::MAX;
+        }
+        cl.mask_tail();
+        cl
+    }
+
+    /// An all-closed list (code 0 everywhere) sized for `num_open` leaves.
+    pub fn with_open(n: usize, num_open: u32) -> Self {
+        let width = width_for(num_open);
+        let bits = n as u64 * width as u64;
+        let words = vec![0u64; bits.div_ceil(64) as usize];
+        Self {
+            n,
+            width,
+            num_open,
+            words,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Current number of open leaves ℓ.
+    pub fn num_open(&self) -> u32 {
+        self.num_open
+    }
+
+    /// Bits per sample.
+    pub fn width(&self) -> u32 {
+        self.width
+    }
+
+    /// Total memory used by the packed words, in bits — the paper's
+    /// `n·⌈log2(ℓ+1)⌉` (rounded up to whole words).
+    pub fn memory_bits(&self) -> u64 {
+        self.words.len() as u64 * 64
+    }
+
+    /// Leaf code of sample `i`.
+    #[inline]
+    pub fn get(&self, i: usize) -> u32 {
+        debug_assert!(i < self.n);
+        let width = self.width as u64;
+        let bit = i as u64 * width;
+        let word = (bit / 64) as usize;
+        let off = bit % 64;
+        let mask = if width == 64 { u64::MAX } else { (1u64 << width) - 1 };
+        let lo = self.words[word] >> off;
+        let val = if off + width <= 64 {
+            lo & mask
+        } else {
+            let hi = self.words[word + 1] << (64 - off);
+            (lo | hi) & mask
+        };
+        val as u32
+    }
+
+    /// Set the leaf code of sample `i`. `code` must be `<= num_open`.
+    #[inline]
+    pub fn set(&mut self, i: usize, code: u32) {
+        debug_assert!(i < self.n);
+        debug_assert!(code <= self.num_open, "code {code} > ℓ {}", self.num_open);
+        let width = self.width as u64;
+        let bit = i as u64 * width;
+        let word = (bit / 64) as usize;
+        let off = bit % 64;
+        let mask = if width == 64 { u64::MAX } else { (1u64 << width) - 1 };
+        let code = code as u64 & mask;
+        self.words[word] = (self.words[word] & !(mask << off)) | (code << off);
+        if off + width > 64 {
+            let spill = 64 - off;
+            let hi_mask = mask >> spill;
+            self.words[word + 1] =
+                (self.words[word + 1] & !hi_mask) | (code >> spill);
+        }
+    }
+
+    /// Zero any bits beyond `n * width` (keeps Eq/serialization clean).
+    fn mask_tail(&mut self) {
+        let bits = self.n as u64 * self.width as u64;
+        if bits % 64 != 0 {
+            if let Some(last) = self.words.last_mut() {
+                *last &= (1u64 << (bits % 64)) - 1;
+            }
+        }
+    }
+
+    /// Rebuild the list with a new number of open leaves, computing each
+    /// sample's new code from its old one. This is the depth-level
+    /// transition of Alg. 2 (steps 6-7): leaves split into children,
+    /// close, or survive, and the packed width adjusts to
+    /// `⌈log2(ℓ'+1)⌉`.
+    pub fn rewrite(&self, new_num_open: u32, mut f: impl FnMut(usize, u32) -> u32) -> ClassList {
+        let mut out = ClassList::with_open(self.n, new_num_open);
+        for i in 0..self.n {
+            let code = f(i, self.get(i));
+            debug_assert!(code <= new_num_open);
+            if code != 0 {
+                out.set(i, code);
+            }
+        }
+        out
+    }
+
+    /// Count samples per code (length `num_open + 1`). Used by tests and
+    /// by leaf-statistics sanity checks.
+    pub fn histogram(&self) -> Vec<u64> {
+        let mut h = vec![0u64; self.num_open as usize + 1];
+        for i in 0..self.n {
+            h[self.get(i) as usize] += 1;
+        }
+        h
+    }
+
+    /// Iterate `(sample, code)` for samples in open leaves (code != 0).
+    pub fn iter_open(&self) -> impl Iterator<Item = (usize, u32)> + '_ {
+        (0..self.n).filter_map(move |i| {
+            let c = self.get(i);
+            (c != 0).then_some((i, c))
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn width_formula_matches_paper() {
+        // ⌈log2(ℓ+1)⌉
+        assert_eq!(width_for(1), 1); // codes {0,1}
+        assert_eq!(width_for(2), 2); // codes {0,1,2}
+        assert_eq!(width_for(3), 2); // codes {0..3}
+        assert_eq!(width_for(4), 3);
+        assert_eq!(width_for(7), 3);
+        assert_eq!(width_for(8), 4);
+        assert_eq!(width_for(1 << 20), 21);
+    }
+
+    #[test]
+    fn new_all_root() {
+        let cl = ClassList::new_all_root(100);
+        assert_eq!(cl.num_open(), 1);
+        assert_eq!(cl.width(), 1);
+        for i in 0..100 {
+            assert_eq!(cl.get(i), 1);
+        }
+        assert_eq!(cl.histogram(), vec![0, 100]);
+    }
+
+    #[test]
+    fn set_get_roundtrip_across_word_boundaries() {
+        // width 3 (ℓ=7): samples straddle u64 boundaries at i=21 etc.
+        let mut cl = ClassList::with_open(1000, 7);
+        for i in 0..1000 {
+            cl.set(i, (i % 8) as u32);
+        }
+        for i in 0..1000 {
+            assert_eq!(cl.get(i), (i % 8) as u32, "sample {i}");
+        }
+    }
+
+    #[test]
+    fn wide_codes() {
+        // ℓ = 70_000 -> width 17; check large codes survive.
+        let mut cl = ClassList::with_open(50, 70_000);
+        assert_eq!(cl.width(), 17);
+        cl.set(0, 70_000);
+        cl.set(49, 65_535);
+        cl.set(25, 1);
+        assert_eq!(cl.get(0), 70_000);
+        assert_eq!(cl.get(49), 65_535);
+        assert_eq!(cl.get(25), 1);
+        assert_eq!(cl.get(24), 0);
+    }
+
+    #[test]
+    fn rewrite_repacks_width() {
+        // Start at root (width 1), split into 2 children (ℓ=2, width 2).
+        let cl = ClassList::new_all_root(10);
+        let cl2 = cl.rewrite(2, |i, old| {
+            assert_eq!(old, 1);
+            if i % 2 == 0 {
+                1
+            } else {
+                2
+            }
+        });
+        assert_eq!(cl2.width(), 2);
+        assert_eq!(cl2.histogram(), vec![0, 5, 5]);
+        // Now close leaf 1 and keep leaf 2 as the only open leaf (ℓ=1).
+        let cl3 = cl2.rewrite(1, |_, old| if old == 2 { 1 } else { 0 });
+        assert_eq!(cl3.width(), 1);
+        assert_eq!(cl3.histogram(), vec![5, 5]);
+    }
+
+    #[test]
+    fn memory_matches_formula() {
+        let n = 1_000_000usize;
+        let cl = ClassList::with_open(n, 1023); // width 10
+        assert_eq!(cl.width(), 10);
+        let expect_bits = (n as u64 * 10).div_ceil(64) * 64;
+        assert_eq!(cl.memory_bits(), expect_bits);
+        // vs. 64 bits/sample: 6.4x smaller.
+        assert!(cl.memory_bits() * 6 < n as u64 * 64);
+    }
+
+    #[test]
+    fn iter_open_skips_closed() {
+        let mut cl = ClassList::with_open(6, 3);
+        cl.set(1, 2);
+        cl.set(4, 3);
+        let open: Vec<(usize, u32)> = cl.iter_open().collect();
+        assert_eq!(open, vec![(1, 2), (4, 3)]);
+    }
+
+    #[test]
+    fn width64_guard() {
+        // Absurd ℓ near 2^32: width still computed sanely (≤ 33 for u32 ℓ).
+        assert!(width_for(u32::MAX) <= 33);
+    }
+}

@@ -1,0 +1,3 @@
+//! Closed-form complexity model (paper Table 1 + §3.2's Z analysis).
+pub mod table1;
+pub mod zmodel;

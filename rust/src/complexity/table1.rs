@@ -1,0 +1,323 @@
+//! Closed-form complexity model — the analytical half of the paper's
+//! Table 1. Each algorithm's memory / parallel-time / disk / network
+//! cost is expressed as a function of the workload parameters; the
+//! `table1_complexity` bench prints these side by side with *measured*
+//! counters from the real implementations.
+
+/// Workload parameters (the symbols of §3.2 / Table 1).
+#[derive(Debug, Clone, Copy)]
+pub struct Workload {
+    /// Number of samples `n`.
+    pub n: u64,
+    /// Number of features `m`.
+    pub m: u64,
+    /// Candidate features per node `m'` (typically ⌈√m⌉).
+    pub m_prime: u64,
+    /// Number of distinct candidate sets per depth `z` (open nodes for
+    /// classic RF; 1 for USB).
+    pub z: u64,
+    /// Number of workers `w`.
+    pub w: u64,
+    /// Feature replication factor `d` (redundant storage).
+    pub d: u64,
+    /// Effective tree depth `D`.
+    pub depth: u64,
+    /// Mean leaf depth `D̄` (≤ D).
+    pub depth_bar: f64,
+    /// Total number of tree nodes `C`.
+    pub c_nodes: u64,
+    /// Maximum number of open nodes at any depth `M`.
+    pub m_nodes: u64,
+    /// Bits to store one feature/label value.
+    pub bits_value: u64,
+    /// Bits to store one record index.
+    pub bits_index: u64,
+}
+
+impl Workload {
+    /// The paper's default storage sizes: f32 values, u32 indices.
+    pub fn with_defaults(n: u64, m: u64, w: u64, depth: u64) -> Workload {
+        let m_prime = (m as f64).sqrt().ceil() as u64;
+        Workload {
+            n,
+            m,
+            m_prime,
+            z: 1 << depth.min(20), // worst case: all nodes distinct sets
+            w,
+            d: 1,
+            depth,
+            depth_bar: depth as f64,
+            c_nodes: (1 << (depth.min(30) + 1)) - 1,
+            m_nodes: 1 << depth.min(30),
+            bits_value: 32,
+            bits_index: 32,
+        }
+    }
+
+    /// Total drawn features per depth: `m'' = min(z·m', m)` (§3.2: no
+    /// hope of doing better — E[m''] = Ω(min(zm', m))).
+    pub fn m_double_prime(&self) -> u64 {
+        (self.z * self.m_prime).min(self.m)
+    }
+
+    /// `K = ⌈m/w⌉`: features per worker with no redundancy.
+    pub fn k(&self) -> u64 {
+        self.m.div_ceil(self.w)
+    }
+
+    /// Expected per-worker feature load `Z` (§3.2): `O(⌈m''/w⌉)` when
+    /// m'' ≫ w; `log m''/log log m''` at the balance point w = m''
+    /// without redundancy; `log log m''/log d` with d-choice
+    /// replication (Azar et al.).
+    pub fn z_load(&self) -> f64 {
+        let mpp = self.m_double_prime() as f64;
+        let w = self.w as f64;
+        if mpp >= 2.0 * w {
+            (mpp / w).ceil()
+        } else if self.d <= 1 {
+            // Balls-into-bins maximum load regime.
+            let l = mpp.max(2.0).ln();
+            let ll = l.max(1.001).ln().max(0.01);
+            (mpp / w).max(1.0) * (l / ll).max(1.0)
+        } else {
+            let ll = mpp.max(2.0).ln().max(1.001).ln().max(0.01);
+            (mpp / w).max(1.0) * (ll / (self.d as f64).ln().max(0.01)).max(1.0)
+        }
+    }
+
+    /// Presort cost per worker (PS): sort K columns of n entries.
+    pub fn presort_ops(&self) -> f64 {
+        self.k() as f64 * self.n as f64 * (self.n as f64).log2().max(1.0)
+    }
+}
+
+/// One algorithm's predicted costs (bits / ops / bytes; `passes` are
+/// sequential passes over data per worker).
+#[derive(Debug, Clone)]
+pub struct CostRow {
+    pub algorithm: &'static str,
+    pub memory_bits_per_worker: f64,
+    pub compute_ops_per_worker: f64,
+    pub disk_write_bits: f64,
+    pub write_passes: f64,
+    pub network_bits: f64,
+    pub read_bits_per_worker: f64,
+    pub read_passes: f64,
+}
+
+/// Table 1, row "Generic sequential recursive tree, all in memory".
+pub fn generic_in_memory(wl: &Workload) -> CostRow {
+    let n = wl.n as f64;
+    CostRow {
+        algorithm: "generic-in-memory",
+        memory_bits_per_worker: (wl.m as f64) * n * wl.bits_value as f64,
+        compute_ops_per_worker: wl.m_prime as f64 * n * n.log2().max(1.0) * wl.depth as f64,
+        disk_write_bits: 0.0,
+        write_passes: 0.0,
+        network_bits: 0.0,
+        read_bits_per_worker: (wl.m as f64 + 1.0) * n * wl.bits_value as f64,
+        read_passes: 1.0,
+    }
+}
+
+/// Table 1, row "Sliq (on one machine)".
+pub fn sliq(wl: &Workload) -> CostRow {
+    let n = wl.n as f64;
+    let mpp = wl.m_double_prime() as f64;
+    CostRow {
+        algorithm: "sliq",
+        memory_bits_per_worker: n * (wl.bits_value + wl.bits_index) as f64,
+        compute_ops_per_worker: mpp * n * wl.depth as f64 + wl.presort_ops(),
+        disk_write_bits: 0.0,
+        write_passes: 0.0,
+        network_bits: 0.0,
+        read_bits_per_worker: (mpp + 1.0)
+            * n
+            * wl.depth as f64
+            * (wl.bits_value + wl.bits_index) as f64,
+        read_passes: (mpp + 1.0) * wl.depth as f64,
+    }
+}
+
+/// Table 1, row "Sprint".
+pub fn sprint(wl: &Workload) -> CostRow {
+    let n = wl.n as f64;
+    let k = wl.k() as f64;
+    CostRow {
+        algorithm: "sprint",
+        memory_bits_per_worker: n * wl.bits_index as f64,
+        compute_ops_per_worker: k * n * wl.depth_bar + wl.presort_ops(),
+        disk_write_bits: k * n * wl.depth_bar * (2 * wl.bits_value + wl.bits_index) as f64,
+        write_passes: wl.c_nodes as f64 * k,
+        network_bits: (n + wl.depth_bar * n) * wl.bits_index as f64,
+        read_bits_per_worker: 2.0
+            * k
+            * n
+            * wl.depth_bar
+            * (2 * wl.bits_value + wl.bits_index) as f64,
+        read_passes: k * wl.c_nodes as f64,
+    }
+}
+
+/// Table 1, row "Sliq/D" (class list distributed over workers).
+pub fn sliq_d(wl: &Workload) -> CostRow {
+    let n = wl.n as f64;
+    let mpp = wl.m_double_prime() as f64;
+    let d_lvl = wl.depth as f64;
+    CostRow {
+        algorithm: "sliq/D",
+        memory_bits_per_worker: (n / wl.w as f64) * (wl.bits_value + wl.bits_index) as f64,
+        compute_ops_per_worker: mpp * (n / wl.w as f64) * d_lvl + wl.presort_ops(),
+        disk_write_bits: 0.0,
+        write_passes: 0.0,
+        // n row indices for bagging + coordination + D broadcasts of Dn bits
+        network_bits: n * wl.bits_index as f64 + d_lvl * d_lvl * n,
+        read_bits_per_worker: mpp
+            * (n / wl.w as f64)
+            * d_lvl
+            * (wl.bits_value + wl.bits_index) as f64,
+        read_passes: mpp * wl.c_nodes as f64,
+    }
+}
+
+/// Table 1, row "Sliq/R" (class list replicated on every worker).
+pub fn sliq_r(wl: &Workload) -> CostRow {
+    let n = wl.n as f64;
+    let z = wl.z_load();
+    let d_lvl = wl.depth as f64;
+    CostRow {
+        algorithm: "sliq/R",
+        memory_bits_per_worker: n * (wl.bits_value + wl.bits_index) as f64,
+        compute_ops_per_worker: z * n * d_lvl + wl.presort_ops(),
+        disk_write_bits: 0.0,
+        write_passes: 0.0,
+        network_bits: n * wl.bits_index as f64 + d_lvl * n,
+        read_bits_per_worker: z * n * d_lvl * (wl.bits_value + wl.bits_index) as f64,
+        read_passes: z * wl.c_nodes as f64,
+    }
+}
+
+/// Table 1, row "DRF" (this paper).
+pub fn drf(wl: &Workload) -> CostRow {
+    let n = wl.n as f64;
+    let z = wl.z_load();
+    let d_lvl = wl.depth as f64;
+    let class_list_bits = n * (1.0 + (wl.m_nodes as f64).log2().max(1.0));
+    CostRow {
+        algorithm: "drf",
+        memory_bits_per_worker: class_list_bits,
+        compute_ops_per_worker: (z + 1.0) * n * d_lvl + wl.presort_ops(),
+        disk_write_bits: 0.0,
+        write_passes: 0.0,
+        // Seeded bagging: zero index shipping. Dn bits in D allreduce.
+        network_bits: d_lvl * n,
+        read_bits_per_worker: z
+            * n
+            * d_lvl
+            * (2 * wl.bits_value + wl.bits_index) as f64,
+        read_passes: z * d_lvl,
+    }
+}
+
+/// Table 1, row "DRF-USB, w = m', d = log(m')".
+pub fn drf_usb(wl: &Workload) -> CostRow {
+    let n = wl.n as f64;
+    let d_lvl = wl.depth as f64;
+    let class_list_bits = n * (1.0 + (wl.m_nodes as f64).log2().max(1.0));
+    CostRow {
+        algorithm: "drf-usb",
+        memory_bits_per_worker: class_list_bits,
+        compute_ops_per_worker: n * d_lvl + wl.presort_ops(),
+        disk_write_bits: 0.0,
+        write_passes: 0.0,
+        network_bits: d_lvl * n,
+        read_bits_per_worker: 2.0 * d_lvl * n * (2 * wl.bits_value + wl.bits_index) as f64,
+        read_passes: 2.0 * d_lvl,
+    }
+}
+
+/// All rows in Table 1 order.
+pub fn all_rows(wl: &Workload) -> Vec<CostRow> {
+    vec![
+        generic_in_memory(wl),
+        sliq(wl),
+        sprint(wl),
+        sliq_d(wl),
+        sliq_r(wl),
+        drf(wl),
+        drf_usb(wl),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn leo_like_workload() -> Workload {
+        // The paper's §5 scale: n = 17.3e9, m = 72, w = 82, depth 20.
+        let mut wl = Workload::with_defaults(17_300_000_000, 72, 82, 20);
+        wl.z = 400_000; // ~ leaves at depth 20 (Table 2: 435k)
+        wl
+    }
+
+    #[test]
+    fn drf_memory_beats_sliq_variants() {
+        let wl = leo_like_workload();
+        let drf_mem = drf(&wl).memory_bits_per_worker;
+        assert!(drf_mem < sliq_r(&wl).memory_bits_per_worker / 2.0);
+        assert!(drf_mem < sliq(&wl).memory_bits_per_worker / 2.0);
+        // DRF class list for Leo: ~ n * (1 + log2 M) bits << 64n.
+        assert!(drf_mem < wl.n as f64 * 64.0);
+    }
+
+    #[test]
+    fn drf_network_beats_sprint_and_sliq_d() {
+        let wl = leo_like_workload();
+        let d = drf(&wl).network_bits;
+        assert!(d < sprint(&wl).network_bits, "no index shipping");
+        assert!(d < sliq_d(&wl).network_bits);
+        // Exactly Dn bits.
+        assert_eq!(d, wl.depth as f64 * wl.n as f64);
+    }
+
+    #[test]
+    fn drf_never_writes_after_presort() {
+        let wl = leo_like_workload();
+        assert_eq!(drf(&wl).disk_write_bits, 0.0);
+        assert!(sprint(&wl).disk_write_bits > 0.0);
+    }
+
+    #[test]
+    fn usb_reduces_reads() {
+        let wl = leo_like_workload();
+        assert!(drf_usb(&wl).read_bits_per_worker < drf(&wl).read_bits_per_worker);
+        assert!(drf_usb(&wl).read_passes < drf(&wl).read_passes);
+    }
+
+    #[test]
+    fn m_double_prime_saturates_at_m() {
+        let mut wl = Workload::with_defaults(1000, 100, 10, 5);
+        wl.z = 1_000_000;
+        assert_eq!(wl.m_double_prime(), 100);
+        wl.z = 2;
+        assert_eq!(wl.m_double_prime(), 20);
+    }
+
+    #[test]
+    fn z_load_regimes() {
+        // Many features per worker: ceil(m''/w).
+        let mut wl = Workload::with_defaults(1000, 1000, 10, 5);
+        wl.z = 1000;
+        assert_eq!(wl.z_load(), 100.0);
+        // Balance point w = m'': superconstant but small.
+        let mut wl2 = Workload::with_defaults(1000, 64, 64, 5);
+        wl2.z = 1; // m'' = 8... make z big enough that m'' = 64
+        wl2.z = 64;
+        wl2.w = 64;
+        let z1 = wl2.z_load();
+        assert!(z1 > 1.0 && z1 < 20.0, "log/loglog regime, got {z1}");
+        // Redundancy shrinks it.
+        wl2.d = 4;
+        assert!(wl2.z_load() < z1);
+    }
+}

@@ -1,0 +1,166 @@
+//! Monte-Carlo model of the per-worker feature load `Z` (§3.2).
+//!
+//! At each depth, `z` independent subsets of `m'` features are drawn out
+//! of `m`; the drawn (distinct) features are assigned to workers — each
+//! feature lives on `d` replicas, and the scheduler routes it to the
+//! least-loaded replica ("power of d choices"). `Z` is the maximum
+//! number of features any single worker must scan. The paper's §3.2
+//! results, which this module lets the `z_analysis` bench verify
+//! empirically:
+//!
+//! * `E[m''] = Θ(min(z·m', m))` — no free lunch from collisions;
+//! * `E[Z] = O(⌈m''/w⌉)` when `m''` grows faster than `w`;
+//! * at `w = m''` without redundancy, `E[Z] = Θ(log m''/log log m'')`;
+//! * with `d`-fold redundancy, `E[Z] = O(log log m''/log d)` (+ mean).
+
+use crate::rng::{SplitMix64, Xoshiro256pp};
+
+/// One Monte-Carlo draw configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct ZConfig {
+    /// Total features `m`.
+    pub m: usize,
+    /// Features drawn per node `m'`.
+    pub m_prime: usize,
+    /// Independent draws per depth `z` (1 = USB).
+    pub z: usize,
+    /// Workers `w`.
+    pub w: usize,
+    /// Replication `d` (1 = none).
+    pub d: usize,
+}
+
+/// Result of a Monte-Carlo estimate.
+#[derive(Debug, Clone, Copy)]
+pub struct ZEstimate {
+    pub mean_m_double_prime: f64,
+    pub mean_z: f64,
+    pub max_z: usize,
+}
+
+/// Simulate `trials` depth levels and return the mean/max observed `Z`
+/// and mean `m''`.
+pub fn simulate(cfg: &ZConfig, trials: usize, seed: u64) -> ZEstimate {
+    assert!(cfg.m_prime <= cfg.m && cfg.w >= 1 && cfg.d >= 1);
+    let mut sum_mpp = 0.0;
+    let mut sum_z = 0.0;
+    let mut max_z = 0usize;
+    for t in 0..trials {
+        let mut rng = Xoshiro256pp::new(SplitMix64::hash_key(&[seed, t as u64]));
+        // Union of z draws of m' features.
+        let mut drawn = vec![false; cfg.m];
+        for _ in 0..cfg.z {
+            // Partial Fisher-Yates draw of m' distinct features.
+            let mut idx: Vec<usize> = (0..cfg.m).collect();
+            for i in 0..cfg.m_prime {
+                let j = i + rng.next_below((cfg.m - i) as u64) as usize;
+                idx.swap(i, j);
+                drawn[idx[i]] = true;
+            }
+        }
+        let features: Vec<usize> =
+            (0..cfg.m).filter(|&f| drawn[f]).collect();
+        sum_mpp += features.len() as f64;
+
+        // Assign each drawn feature to the least-loaded of its d replicas
+        // (replicas = deterministic hash of the feature id).
+        let mut load = vec![0usize; cfg.w];
+        for &f in &features {
+            let mut best_worker = usize::MAX;
+            let mut best_load = usize::MAX;
+            for k in 0..cfg.d.min(cfg.w) {
+                let owner =
+                    (SplitMix64::hash_key(&[0xF0F0, f as u64, k as u64]) % cfg.w as u64) as usize;
+                if load[owner] < best_load {
+                    best_load = load[owner];
+                    best_worker = owner;
+                }
+            }
+            load[best_worker] += 1;
+        }
+        let z_this = load.iter().copied().max().unwrap_or(0);
+        sum_z += z_this as f64;
+        max_z = max_z.max(z_this);
+    }
+    ZEstimate {
+        mean_m_double_prime: sum_mpp / trials as f64,
+        mean_z: sum_z / trials as f64,
+        max_z,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn usb_gives_z_near_one_with_w_equal_m_prime() {
+        // z=1, w=m', d>=log(m'): E[Z] = O(1) — the paper's headline.
+        let cfg = ZConfig {
+            m: 1024,
+            m_prime: 32,
+            z: 1,
+            w: 32,
+            d: 5,
+        };
+        let est = simulate(&cfg, 200, 1);
+        assert!((est.mean_m_double_prime - 32.0).abs() < 1e-9);
+        assert!(est.mean_z <= 3.0, "E[Z] should be ~1-2, got {}", est.mean_z);
+    }
+
+    #[test]
+    fn no_redundancy_is_worse_at_balance_point() {
+        let base = ZConfig {
+            m: 4096,
+            m_prime: 64,
+            z: 1,
+            w: 64,
+            d: 1,
+        };
+        let with_red = ZConfig { d: 4, ..base };
+        let e1 = simulate(&base, 100, 2);
+        let e2 = simulate(&with_red, 100, 2);
+        assert!(
+            e1.mean_z > e2.mean_z,
+            "redundancy must reduce Z: {} vs {}",
+            e1.mean_z,
+            e2.mean_z
+        );
+    }
+
+    #[test]
+    fn m_double_prime_saturates() {
+        // Huge z: every feature drawn.
+        let cfg = ZConfig {
+            m: 64,
+            m_prime: 8,
+            z: 100,
+            w: 8,
+            d: 1,
+        };
+        let est = simulate(&cfg, 20, 3);
+        assert!(est.mean_m_double_prime > 60.0);
+        // And Z ~ m/w.
+        assert!(est.mean_z >= 8.0);
+    }
+
+    #[test]
+    fn z_collisions_match_expectation() {
+        // z=2 draws of m' out of m: E[m''] = m(1 - (1 - m'/m)^z) approx.
+        let cfg = ZConfig {
+            m: 100,
+            m_prime: 10,
+            z: 2,
+            w: 10,
+            d: 1,
+        };
+        let est = simulate(&cfg, 500, 4);
+        let expect = 100.0 * (1.0 - (0.9f64).powi(2));
+        assert!(
+            (est.mean_m_double_prime - expect).abs() < 1.0,
+            "E[m''] {} vs {}",
+            est.mean_m_double_prime,
+            expect
+        );
+    }
+}

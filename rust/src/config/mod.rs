@@ -1,0 +1,452 @@
+//! Configuration system: every training/topology knob in one struct,
+//! loadable from a JSON config file with CLI overrides (see `main.rs`).
+
+use crate::rng::{BaggingMode, FeatureSampling};
+use crate::util::Json;
+use crate::splits::ScoreKind;
+use std::path::Path;
+
+/// Hyperparameters of the forest itself (paper §4/§5 defaults).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ForestParams {
+    /// Number of trees `T`.
+    pub num_trees: usize,
+    /// User-chosen maximum depth `d` (paper §5 uses 20; `u32::MAX` for
+    /// unbounded as in §4).
+    pub max_depth: u32,
+    /// Minimum bagged record weight for a leaf to remain open (paper's
+    /// "minimum number of records in a leaf", ρ).
+    pub min_records: u64,
+    /// Candidate features per node `m'`; `None` = `⌈√m⌉` (the paper's
+    /// default everywhere).
+    pub num_candidate_features: Option<usize>,
+    /// Per-node (classical RF) vs per-depth (USB, §3.2) vs all features.
+    pub feature_sampling: FeatureSampling,
+    /// Record bagging mode (§2.2).
+    pub bagging: BaggingMode,
+    /// Split quality measure.
+    pub score_kind: ScoreKind,
+    /// Forest seed — drives bagging, feature sampling, everything.
+    pub seed: u64,
+}
+
+impl Default for ForestParams {
+    fn default() -> Self {
+        Self {
+            num_trees: 10,
+            max_depth: 20,
+            min_records: 1,
+            num_candidate_features: None,
+            feature_sampling: FeatureSampling::PerNode,
+            bagging: BaggingMode::Poisson,
+            score_kind: ScoreKind::Gini,
+            seed: 0x0DF0_1234,
+        }
+    }
+}
+
+impl ForestParams {
+    /// Resolve `m'` for a dataset with `m` features.
+    pub fn candidates_for(&self, num_features: usize) -> usize {
+        self.num_candidate_features
+            .unwrap_or_else(|| (num_features as f64).sqrt().ceil() as usize)
+            .clamp(1, num_features)
+    }
+
+    /// Should a fresh leaf at `depth` with these bagged class counts
+    /// remain open (splittable)? Shared by the distributed builder and
+    /// every baseline so leaf-closing decisions are identical.
+    pub fn child_open(&self, counts: &[u64], depth: u32) -> bool {
+        let total: u64 = counts.iter().sum();
+        depth < self.max_depth
+            && total >= self.min_records
+            && counts.iter().filter(|&&c| c > 0).count() >= 2
+    }
+
+    pub fn validate(&self) -> crate::Result<()> {
+        anyhow::ensure!(self.num_trees > 0, "num_trees must be positive");
+        anyhow::ensure!(self.min_records >= 1, "min_records must be >= 1");
+        if let Some(mp) = self.num_candidate_features {
+            anyhow::ensure!(mp > 0, "num_candidate_features must be positive");
+        }
+        Ok(())
+    }
+}
+
+/// SPRINT-style pruning of records in closed leaves (paper §3: "we can
+/// implement a rule for switching to Sprint's pruning mode").
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum PruneMode {
+    /// Never prune (the paper's experimental configuration — on Leo the
+    /// trigger never fires anyway since 96.9% of records stay open).
+    Never,
+    /// Prune when the closed-record fraction exceeds `threshold`.
+    Adaptive { threshold: f64 },
+}
+
+impl Default for PruneMode {
+    fn default() -> Self {
+        PruneMode::Never
+    }
+}
+
+/// Worker topology (paper §2: splitters, tree builders, manager).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TopologyParams {
+    /// Number of splitter workers `w`; `None` = one per column (the
+    /// paper's Fig 1/2 setting: "the number of workers is equal to the
+    /// dimension").
+    pub num_splitters: Option<usize>,
+    /// Feature replication factor `d` (§3.2): each column is owned by
+    /// `d` splitters. 1 = no redundancy.
+    pub redundancy: usize,
+    /// Number of tree builders driven concurrently by the manager.
+    pub tree_builders: usize,
+    /// Artificial per-message network latency in microseconds (0 = off);
+    /// DRF is "relatively insensitive to the latency" (§2) — this knob
+    /// lets the benches demonstrate that.
+    pub latency_us: u64,
+}
+
+impl Default for TopologyParams {
+    fn default() -> Self {
+        Self {
+            num_splitters: None,
+            redundancy: 1,
+            tree_builders: 2,
+            latency_us: 0,
+        }
+    }
+}
+
+impl TopologyParams {
+    pub fn splitters_for(&self, num_features: usize) -> usize {
+        self.num_splitters.unwrap_or(num_features).max(1)
+    }
+
+    pub fn validate(&self) -> crate::Result<()> {
+        anyhow::ensure!(self.redundancy >= 1, "redundancy must be >= 1");
+        anyhow::ensure!(self.tree_builders >= 1, "need at least one tree builder");
+        if let Some(w) = self.num_splitters {
+            anyhow::ensure!(w >= 1, "need at least one splitter");
+        }
+        Ok(())
+    }
+}
+
+/// Which split-scoring backend splitters use for numerical columns.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScorerBackend {
+    /// Exact scalar Rust implementation (default; the oracle).
+    Native,
+    /// Batched scoring through the AOT XLA/Pallas artifact.
+    Xla,
+}
+
+impl Default for ScorerBackend {
+    fn default() -> Self {
+        ScorerBackend::Native
+    }
+}
+
+/// Where splitters keep their column shards.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StorageMode {
+    /// Shards in RAM (fast path; the paper's "small and moderate size"
+    /// configuration).
+    Memory,
+    /// Shards on disk, re-read sequentially every pass (the paper's §5
+    /// configuration: "all experiments have been run with the datasets
+    /// remaining on drive").
+    Disk,
+}
+
+impl Default for StorageMode {
+    fn default() -> Self {
+        StorageMode::Memory
+    }
+}
+
+/// Worker execution engine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Engine {
+    /// In-process calls (deterministic, minimal overhead; network bytes
+    /// are fully accounted either way).
+    Direct,
+    /// One OS thread per splitter behind request channels; tree builders
+    /// run concurrently.
+    Threaded,
+    /// Splitters served over localhost TCP sockets with the binary wire
+    /// codec — the fully literal distributed mode.
+    Tcp,
+}
+
+impl Default for Engine {
+    fn default() -> Self {
+        Engine::Direct
+    }
+}
+
+/// Top-level training configuration.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct TrainConfig {
+    pub forest: ForestParams,
+    pub topology: TopologyParams,
+    pub prune: PruneMode,
+    pub scorer: ScorerBackend,
+    pub storage: StorageMode,
+    pub engine: Engine,
+    /// Directory holding AOT artifacts (for `ScorerBackend::Xla`).
+    pub artifacts_dir: Option<std::path::PathBuf>,
+}
+
+impl TrainConfig {
+    pub fn validate(&self) -> crate::Result<()> {
+        self.forest.validate()?;
+        self.topology.validate()?;
+        if let PruneMode::Adaptive { threshold } = self.prune {
+            anyhow::ensure!(
+                (0.0..=1.0).contains(&threshold),
+                "prune threshold must be in [0,1]"
+            );
+        }
+        Ok(())
+    }
+
+    /// Serialize to JSON (the on-disk config format).
+    pub fn to_json(&self) -> Json {
+        let mut f = Json::object();
+        f.set("num_trees", Json::from_usize(self.forest.num_trees))
+            .set("max_depth", Json::from_u64(self.forest.max_depth as u64))
+            .set("min_records", Json::from_u64(self.forest.min_records))
+            .set(
+                "num_candidate_features",
+                match self.forest.num_candidate_features {
+                    Some(v) => Json::from_usize(v),
+                    None => Json::Null,
+                },
+            )
+            .set(
+                "feature_sampling",
+                Json::Str(self.forest.feature_sampling.as_str().into()),
+            )
+            .set("bagging", Json::Str(self.forest.bagging.as_str().into()))
+            .set("score_kind", Json::Str(self.forest.score_kind.as_str().into()))
+            .set("seed", Json::from_u64(self.forest.seed));
+        let mut t = Json::object();
+        t.set(
+            "num_splitters",
+            match self.topology.num_splitters {
+                Some(v) => Json::from_usize(v),
+                None => Json::Null,
+            },
+        )
+        .set("redundancy", Json::from_usize(self.topology.redundancy))
+        .set("tree_builders", Json::from_usize(self.topology.tree_builders))
+        .set("latency_us", Json::from_u64(self.topology.latency_us));
+        let mut o = Json::object();
+        o.set("forest", f)
+            .set("topology", t)
+            .set(
+                "prune_threshold",
+                match self.prune {
+                    PruneMode::Never => Json::Null,
+                    PruneMode::Adaptive { threshold } => Json::Num(threshold),
+                },
+            )
+            .set(
+                "scorer",
+                Json::Str(
+                    match self.scorer {
+                        ScorerBackend::Native => "native",
+                        ScorerBackend::Xla => "xla",
+                    }
+                    .into(),
+                ),
+            )
+            .set(
+                "storage",
+                Json::Str(
+                    match self.storage {
+                        StorageMode::Memory => "memory",
+                        StorageMode::Disk => "disk",
+                    }
+                    .into(),
+                ),
+            )
+            .set(
+                "engine",
+                Json::Str(
+                    match self.engine {
+                        Engine::Direct => "direct",
+                        Engine::Threaded => "threaded",
+                        Engine::Tcp => "tcp",
+                    }
+                    .into(),
+                ),
+            )
+            .set(
+                "artifacts_dir",
+                match &self.artifacts_dir {
+                    Some(p) => Json::Str(p.display().to_string()),
+                    None => Json::Null,
+                },
+            );
+        o
+    }
+
+    /// Parse from JSON text. Missing keys fall back to defaults.
+    pub fn from_json(text: &str) -> crate::Result<Self> {
+        let v = Json::parse(text)?;
+        let mut cfg = TrainConfig::default();
+        if let Some(f) = v.get_opt("forest") {
+            if let Some(x) = f.get_opt("num_trees") {
+                cfg.forest.num_trees = x.as_usize()?;
+            }
+            if let Some(x) = f.get_opt("max_depth") {
+                cfg.forest.max_depth = x.as_u32()?;
+            }
+            if let Some(x) = f.get_opt("min_records") {
+                cfg.forest.min_records = x.as_u64()?;
+            }
+            if let Some(x) = f.get_opt("num_candidate_features") {
+                cfg.forest.num_candidate_features = match x {
+                    Json::Null => None,
+                    other => Some(other.as_usize()?),
+                };
+            }
+            if let Some(x) = f.get_opt("feature_sampling") {
+                cfg.forest.feature_sampling = FeatureSampling::parse(x.as_str()?)?;
+            }
+            if let Some(x) = f.get_opt("bagging") {
+                cfg.forest.bagging = BaggingMode::parse(x.as_str()?)?;
+            }
+            if let Some(x) = f.get_opt("score_kind") {
+                cfg.forest.score_kind = ScoreKind::parse(x.as_str()?)?;
+            }
+            if let Some(x) = f.get_opt("seed") {
+                cfg.forest.seed = x.as_u64()?;
+            }
+        }
+        if let Some(t) = v.get_opt("topology") {
+            if let Some(x) = t.get_opt("num_splitters") {
+                cfg.topology.num_splitters = match x {
+                    Json::Null => None,
+                    other => Some(other.as_usize()?),
+                };
+            }
+            if let Some(x) = t.get_opt("redundancy") {
+                cfg.topology.redundancy = x.as_usize()?;
+            }
+            if let Some(x) = t.get_opt("tree_builders") {
+                cfg.topology.tree_builders = x.as_usize()?;
+            }
+            if let Some(x) = t.get_opt("latency_us") {
+                cfg.topology.latency_us = x.as_u64()?;
+            }
+        }
+        if let Some(x) = v.get_opt("prune_threshold") {
+            cfg.prune = match x {
+                Json::Null => PruneMode::Never,
+                other => PruneMode::Adaptive {
+                    threshold: other.as_f64()?,
+                },
+            };
+        }
+        if let Some(x) = v.get_opt("scorer") {
+            cfg.scorer = match x.as_str()? {
+                "native" => ScorerBackend::Native,
+                "xla" => ScorerBackend::Xla,
+                s => anyhow::bail!("unknown scorer backend '{s}'"),
+            };
+        }
+        if let Some(x) = v.get_opt("storage") {
+            cfg.storage = match x.as_str()? {
+                "memory" => StorageMode::Memory,
+                "disk" => StorageMode::Disk,
+                s => anyhow::bail!("unknown storage mode '{s}'"),
+            };
+        }
+        if let Some(x) = v.get_opt("engine") {
+            cfg.engine = match x.as_str()? {
+                "direct" => Engine::Direct,
+                "threaded" => Engine::Threaded,
+                "tcp" => Engine::Tcp,
+                s => anyhow::bail!("unknown engine '{s}'"),
+            };
+        }
+        if let Some(x) = v.get_opt("artifacts_dir") {
+            cfg.artifacts_dir = match x {
+                Json::Null => None,
+                other => Some(std::path::PathBuf::from(other.as_str()?)),
+            };
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn load(path: &Path) -> crate::Result<Self> {
+        Self::from_json(&std::fs::read_to_string(path)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_valid() {
+        let cfg = TrainConfig::default();
+        cfg.validate().unwrap();
+        assert_eq!(cfg.forest.num_trees, 10);
+        assert_eq!(cfg.scorer, ScorerBackend::Native);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut cfg = TrainConfig::default();
+        cfg.forest.num_trees = 3;
+        cfg.forest.num_candidate_features = Some(4);
+        cfg.topology.redundancy = 2;
+        cfg.prune = PruneMode::Adaptive { threshold: 0.5 };
+        cfg.storage = StorageMode::Disk;
+        cfg.engine = Engine::Threaded;
+        cfg.scorer = ScorerBackend::Xla;
+        cfg.artifacts_dir = Some(std::path::PathBuf::from("artifacts"));
+        let s = cfg.to_json().to_string();
+        let back = TrainConfig::from_json(&s).unwrap();
+        assert_eq!(cfg, back);
+    }
+
+    #[test]
+    fn partial_json_uses_defaults() {
+        let cfg = TrainConfig::from_json("{\"forest\": {\"num_trees\": 7}}").unwrap();
+        assert_eq!(cfg.forest.num_trees, 7);
+        assert_eq!(cfg.forest.max_depth, 20);
+    }
+
+    #[test]
+    fn invalid_configs_rejected() {
+        assert!(TrainConfig::from_json("{\"forest\": {\"num_trees\": 0}}").is_err());
+        assert!(TrainConfig::from_json("{\"scorer\": \"gpu\"}").is_err());
+        let mut cfg = TrainConfig::default();
+        cfg.prune = PruneMode::Adaptive { threshold: 1.5 };
+        assert!(cfg.validate().is_err());
+        cfg.prune = PruneMode::Never;
+        cfg.topology.redundancy = 0;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn sqrt_candidate_default() {
+        let p = ForestParams::default();
+        assert_eq!(p.candidates_for(82), 10);
+        assert_eq!(p.candidates_for(18), 5);
+        assert_eq!(p.candidates_for(1), 1);
+        let p2 = ForestParams {
+            num_candidate_features: Some(50),
+            ..p
+        };
+        assert_eq!(p2.candidates_for(10), 10, "clamped to m");
+    }
+}

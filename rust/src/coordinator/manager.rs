@@ -1,0 +1,307 @@
+//! The manager (paper §2): owns the splitter fleet and the tree
+//! builders, runs the forest-level training loop, and assembles the
+//! finished trees. Also home of the threaded worker engine.
+
+use super::splitter::{disk_storage_for, memory_storage_for, SplitterConfig, SplitterCore};
+use super::topology::Topology;
+use super::transport::{DirectPool, SplitterPool};
+use super::tree_builder::{LevelStats, TreeBuilderCore};
+use crate::config::{Engine, ScorerBackend, StorageMode, TrainConfig};
+use crate::data::io_stats::{IoSnapshot, IoStats};
+use crate::data::Dataset;
+use crate::metrics::Stopwatch;
+use crate::rng::Bagger;
+use crate::splits::xla_scorer::{ScoreTasks, ScorerService};
+use crate::tree::Tree;
+use crate::Result;
+use std::sync::Arc;
+
+/// Default XLA scorer block shape (must match an artifact produced by
+/// `make artifacts`; see python/compile/aot.py).
+pub const XLA_SCORER_BATCH: usize = 16;
+pub const XLA_SCORER_THRESHOLDS: usize = 512;
+
+/// Per-tree training report.
+#[derive(Debug, Clone)]
+pub struct TreeReport {
+    pub tree: u32,
+    pub seconds: f64,
+    pub levels: Vec<LevelStats>,
+}
+
+/// Whole-run training report (feeds Table 2 / Figure 2 / Figure 3).
+#[derive(Debug, Clone)]
+pub struct TrainReport {
+    pub per_tree: Vec<TreeReport>,
+    pub wall_seconds: f64,
+    /// Network traffic over the whole run.
+    pub net: IoSnapshot,
+    /// Per-splitter disk I/O.
+    pub splitter_io: Vec<IoSnapshot>,
+    /// Sum of class-list bits across splitters at peak (sampled after
+    /// tree starts; approximate).
+    pub num_splitters: usize,
+}
+
+impl TrainReport {
+    /// Total training seconds across trees (the paper's "total training
+    /// time of a tree is the sum of the training times of each depth
+    /// level").
+    pub fn total_tree_seconds(&self) -> f64 {
+        self.per_tree.iter().map(|t| t.seconds).sum()
+    }
+}
+
+/// The manager: builds the topology, spawns workers, trains the forest.
+pub struct Manager {
+    cfg: TrainConfig,
+}
+
+impl Manager {
+    pub fn new(cfg: TrainConfig) -> Result<Self> {
+        cfg.validate()?;
+        Ok(Self { cfg })
+    }
+
+    /// Train a forest on `ds`. Returns the trees (index = tree id) and
+    /// the training report.
+    pub fn train(&self, ds: &Dataset) -> Result<(Vec<Tree>, TrainReport)> {
+        let sw = Stopwatch::start();
+        let cfg = &self.cfg;
+        let topology = Topology::new(ds.num_features(), &cfg.topology);
+
+        // Dataset preparation (§2.1): shard columns to splitters,
+        // presort numerical columns. Disk mode spills shards to files.
+        let labels = Arc::new(ds.labels().to_vec());
+        let splitter_cfg = SplitterConfig {
+            seed: cfg.forest.seed,
+            bagger: Bagger::new(cfg.forest.seed, cfg.forest.bagging),
+            feature_sampling: cfg.forest.feature_sampling,
+            num_candidates: cfg.forest.candidates_for(ds.num_features()),
+            score_kind: cfg.forest.score_kind,
+            prune: cfg.prune,
+        };
+        let tmp_dir = match cfg.storage {
+            StorageMode::Disk => Some(crate::util::tempdir()?),
+            StorageMode::Memory => None,
+        };
+
+        // Optional XLA scorer service (one per run; splitters share the
+        // channel client).
+        let scorer_service = match cfg.scorer {
+            ScorerBackend::Native => None,
+            ScorerBackend::Xla => {
+                let dir = cfg
+                    .artifacts_dir
+                    .clone()
+                    .unwrap_or_else(|| std::path::PathBuf::from("artifacts"));
+                Some(ScorerService::spawn(
+                    &dir,
+                    XLA_SCORER_BATCH,
+                    XLA_SCORER_THRESHOLDS,
+                )?)
+            }
+        };
+
+        let mut splitter_stats = Vec::new();
+        let mut splitters = Vec::new();
+        for s in 0..topology.num_splitters() {
+            let cols = topology.columns_of(s);
+            let stats = IoStats::new();
+            splitter_stats.push(stats.clone());
+            let storage = match &tmp_dir {
+                None => memory_storage_for(ds, &cols),
+                Some(dir) => {
+                    let sub = dir.path().join(format!("splitter_{s}"));
+                    std::fs::create_dir_all(&sub)?;
+                    disk_storage_for(ds, &cols, &sub, stats.clone())?
+                }
+            };
+            let mut core = SplitterCore::new(
+                s,
+                ds.schema().clone(),
+                storage,
+                labels.clone(),
+                splitter_cfg,
+                stats,
+            );
+            if let Some(service) = &scorer_service {
+                let client: Arc<dyn ScoreTasks + Send + Sync> = Arc::new(service.client());
+                core = core.with_xla(client);
+            }
+            splitters.push(Arc::new(core));
+        }
+
+        let trees_and_stats;
+        let pool_net;
+        match cfg.engine {
+            Engine::Direct => {
+                let pool = DirectPool::new(splitters, cfg.topology.latency_us);
+                trees_and_stats = self.train_sequential(&pool, &topology, ds)?;
+                pool_net = pool.net_stats();
+            }
+            Engine::Threaded => {
+                let pool = DirectPool::new(splitters, cfg.topology.latency_us);
+                trees_and_stats = self.train_threaded(&pool, &topology, ds)?;
+                pool_net = pool.net_stats();
+            }
+            Engine::Tcp => {
+                // Fully literal distribution: one TCP server per splitter,
+                // binary codec on the wire (coordinator::tcp).
+                let servers: Vec<crate::coordinator::tcp::SplitterServer> = splitters
+                    .into_iter()
+                    .map(crate::coordinator::tcp::SplitterServer::spawn)
+                    .collect::<Result<_>>()?;
+                let addrs: Vec<_> = servers.iter().map(|s| s.addr()).collect();
+                let columns: Vec<_> = (0..topology.num_splitters())
+                    .map(|s| topology.columns_of(s))
+                    .collect();
+                let pool = crate::coordinator::tcp::TcpPool::connect(&addrs, columns)?;
+                trees_and_stats = self.train_sequential(&pool, &topology, ds)?;
+                pool_net = pool.net_stats();
+            }
+        }
+
+        let mut trees = Vec::with_capacity(trees_and_stats.len());
+        let mut per_tree = Vec::with_capacity(trees_and_stats.len());
+        for (t, (tree, levels, secs)) in trees_and_stats.into_iter().enumerate() {
+            per_tree.push(TreeReport {
+                tree: t as u32,
+                seconds: secs,
+                levels,
+            });
+            trees.push(tree);
+        }
+        let report = TrainReport {
+            per_tree,
+            wall_seconds: sw.seconds(),
+            net: pool_net.snapshot(),
+            splitter_io: splitter_stats.iter().map(|s| s.snapshot()).collect(),
+            num_splitters: topology.num_splitters(),
+        };
+        Ok((trees, report))
+    }
+
+    fn train_sequential(
+        &self,
+        pool: &dyn SplitterPool,
+        topology: &Topology,
+        ds: &Dataset,
+    ) -> Result<Vec<(Tree, Vec<LevelStats>, f64)>> {
+        let builder = TreeBuilderCore::new(pool, topology, &self.cfg.forest, ds.num_features());
+        (0..self.cfg.forest.num_trees as u32)
+            .map(|t| {
+                let sw = Stopwatch::start();
+                let (tree, levels) = builder.build_tree(t)?;
+                Ok((tree, levels, sw.seconds()))
+            })
+            .collect()
+    }
+
+    /// Parallel tree building: `tree_builders` worker threads pull tree
+    /// indices from a shared counter ("DRF trains all the trees in
+    /// parallel", §2).
+    fn train_threaded(
+        &self,
+        pool: &DirectPool,
+        topology: &Topology,
+        ds: &Dataset,
+    ) -> Result<Vec<(Tree, Vec<LevelStats>, f64)>> {
+        let num_trees = self.cfg.forest.num_trees;
+        let num_builders = self.cfg.topology.tree_builders.min(num_trees.max(1));
+        let next = std::sync::atomic::AtomicUsize::new(0);
+        let results: Vec<std::sync::Mutex<Option<(Tree, Vec<LevelStats>, f64)>>> =
+            (0..num_trees).map(|_| std::sync::Mutex::new(None)).collect();
+        let params = &self.cfg.forest;
+        let num_features = ds.num_features();
+
+        std::thread::scope(|scope| -> Result<()> {
+            let mut handles = Vec::new();
+            for _ in 0..num_builders {
+                let next = &next;
+                let results = &results;
+                handles.push(scope.spawn(move || -> Result<()> {
+                    let builder = TreeBuilderCore::new(pool, topology, params, num_features);
+                    loop {
+                        let t = next.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+                        if t >= num_trees {
+                            return Ok(());
+                        }
+                        let sw = Stopwatch::start();
+                        let (tree, levels) = builder.build_tree(t as u32)?;
+                        *results[t].lock().unwrap() = Some((tree, levels, sw.seconds()));
+                    }
+                }));
+            }
+            for h in handles {
+                h.join().map_err(|_| anyhow::anyhow!("tree builder panicked"))??;
+            }
+            Ok(())
+        })?;
+
+        results
+            .into_iter()
+            .enumerate()
+            .map(|(t, m)| {
+                m.into_inner()
+                    .unwrap()
+                    .ok_or_else(|| anyhow::anyhow!("tree {t} was not built"))
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{Family, SyntheticSpec};
+    use crate::rng::BaggingMode;
+
+    fn small_cfg(trees: usize) -> TrainConfig {
+        let mut cfg = TrainConfig::default();
+        cfg.forest.num_trees = trees;
+        cfg.forest.max_depth = 4;
+        cfg.forest.seed = 11;
+        cfg
+    }
+
+    #[test]
+    fn trains_a_forest_end_to_end() {
+        let ds = SyntheticSpec::new(Family::Majority { informative: 3 }, 500, 6, 3).generate();
+        let m = Manager::new(small_cfg(3)).unwrap();
+        let (trees, report) = m.train(&ds).unwrap();
+        assert_eq!(trees.len(), 3);
+        assert_eq!(report.per_tree.len(), 3);
+        assert!(report.net.net_bytes > 0);
+        assert!(report.wall_seconds > 0.0);
+        assert_eq!(report.num_splitters, 6);
+        // Bagged trees differ.
+        assert_ne!(trees[0], trees[1]);
+    }
+
+    #[test]
+    fn threaded_engine_matches_direct() {
+        let ds = SyntheticSpec::new(Family::Xor { informative: 2 }, 300, 4, 3).generate();
+        let mut cfg = small_cfg(2);
+        cfg.forest.bagging = BaggingMode::Poisson;
+        let (trees_direct, _) = Manager::new(cfg.clone()).unwrap().train(&ds).unwrap();
+        cfg.engine = Engine::Threaded;
+        cfg.topology.tree_builders = 2;
+        let (trees_threaded, _) = Manager::new(cfg).unwrap().train(&ds).unwrap();
+        assert_eq!(trees_direct, trees_threaded, "engine must not change the model");
+    }
+
+    #[test]
+    fn disk_storage_matches_memory() {
+        let ds = SyntheticSpec::new(Family::Xor { informative: 2 }, 200, 4, 3).generate();
+        let cfg = small_cfg(1);
+        let (mem_trees, _) = Manager::new(cfg.clone()).unwrap().train(&ds).unwrap();
+        let mut cfg2 = cfg;
+        cfg2.storage = StorageMode::Disk;
+        let (disk_trees, report) = Manager::new(cfg2).unwrap().train(&ds).unwrap();
+        assert_eq!(mem_trees, disk_trees, "storage mode must not change the model");
+        // Disk mode must actually have read from disk.
+        let total_read: u64 = report.splitter_io.iter().map(|s| s.disk_read_bytes).sum();
+        assert!(total_read > 0);
+    }
+}

@@ -1,0 +1,270 @@
+//! Protocol messages between tree builders and splitters (paper Alg. 2).
+//!
+//! Every message knows its wire size; the transport charges those bytes
+//! to the network counters, which is how the benches reproduce Table 1's
+//! network column. The sizes model a compact binary encoding (not the
+//! in-memory layout): e.g. a condition-evaluation bitmap costs exactly
+//! one bit per sample in the evaluated leaf — the paper's headline
+//! "`Dn` bits in `D` allreduce".
+
+use crate::splits::SplitCandidate;
+use crate::tree::Condition;
+
+/// A dense bitmap, one bit per sample of a leaf (in increasing sample
+/// order). `true` routes the sample to the left child.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct Bitmap {
+    len: usize,
+    words: Vec<u64>,
+}
+
+impl Bitmap {
+    pub fn with_len(len: usize) -> Self {
+        Self {
+            len,
+            words: vec![0u64; len.div_ceil(64)],
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, v: bool) {
+        debug_assert!(i < self.len);
+        if v {
+            self.words[i / 64] |= 1u64 << (i % 64);
+        } else {
+            self.words[i / 64] &= !(1u64 << (i % 64));
+        }
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize) -> bool {
+        debug_assert!(i < self.len);
+        (self.words[i / 64] >> (i % 64)) & 1 == 1
+    }
+
+    pub fn count_ones(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    /// Wire size: ⌈len/8⌉ bytes — one bit per sample, as the paper counts.
+    pub fn wire_bytes(&self) -> u64 {
+        (self.len as u64).div_ceil(8)
+    }
+}
+
+/// Per-open-leaf info shipped with a supersplit query, in leaf-rank
+/// order (rank 1 = first entry).
+#[derive(Debug, Clone, PartialEq)]
+pub struct LeafInfo {
+    /// Tree-structure node id (keys deterministic feature sampling).
+    pub node_id: u32,
+    /// Bagged label histogram of the leaf (the splitters need parent
+    /// totals to score splits in one pass).
+    pub totals: Vec<u64>,
+}
+
+impl LeafInfo {
+    pub fn wire_bytes(&self) -> u64 {
+        4 + self.totals.len() as u64 * 8
+    }
+}
+
+/// Tree builder → splitter: "find your partial optimal supersplit for
+/// this depth level" (Alg. 2 step 3).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SupersplitQuery {
+    pub tree: u32,
+    pub depth: u32,
+    /// Open leaves, rank order.
+    pub leaves: Vec<LeafInfo>,
+    /// Columns this splitter should scan this level (the level's
+    /// balanced column→replica assignment, see `topology`).
+    pub assigned_columns: Vec<usize>,
+}
+
+impl SupersplitQuery {
+    pub fn wire_bytes(&self) -> u64 {
+        4 + 4
+            + self.leaves.iter().map(|l| l.wire_bytes()).sum::<u64>()
+            + self.assigned_columns.len() as u64 * 4
+    }
+}
+
+/// Splitter → tree builder: best split found per leaf among the
+/// splitter's assigned columns (`None` = no valid split found locally).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PartialSupersplit {
+    /// Indexed by leaf rank − 1.
+    pub splits: Vec<Option<SplitCandidate>>,
+}
+
+impl PartialSupersplit {
+    pub fn wire_bytes(&self) -> u64 {
+        self.splits
+            .iter()
+            .map(|s| match s {
+                None => 1,
+                Some(c) => 1 + 8 + c.condition.wire_bytes() + c.left_counts.len() as u64 * 16,
+            })
+            .sum()
+    }
+}
+
+/// Tree builder → the owning splitter: "evaluate the winning conditions
+/// you own" (Alg. 2 step 5).
+#[derive(Debug, Clone, PartialEq)]
+pub struct EvalQuery {
+    pub tree: u32,
+    pub depth: u32,
+    /// (leaf rank, condition) pairs, only for conditions whose feature
+    /// this splitter owns.
+    pub conditions: Vec<(u32, Condition)>,
+}
+
+impl EvalQuery {
+    pub fn wire_bytes(&self) -> u64 {
+        8 + self
+            .conditions
+            .iter()
+            .map(|(_, c)| 4 + c.wire_bytes())
+            .sum::<u64>()
+    }
+}
+
+/// Splitter → tree builder: one bitmap per evaluated condition — "one
+/// bit of information for each sample selected at least once in the
+/// bagging and still in an open leaf" (Alg. 2 step 5).
+#[derive(Debug, Clone, PartialEq)]
+pub struct EvalResult {
+    /// (leaf rank, bitmap over the leaf's samples in sample order).
+    pub bitmaps: Vec<(u32, Bitmap)>,
+}
+
+impl EvalResult {
+    pub fn wire_bytes(&self) -> u64 {
+        self.bitmaps
+            .iter()
+            .map(|(_, b)| 4 + b.wire_bytes())
+            .sum()
+    }
+}
+
+/// What happened to each open leaf at the end of a depth level.
+#[derive(Debug, Clone, PartialEq)]
+pub enum LeafOutcome {
+    /// The leaf closed (too few records, no positive-gain condition, or
+    /// the depth limit was hit).
+    Closed,
+    /// The leaf split. `left_open` / `right_open` tell every worker
+    /// whether each child remains active (and therefore receives a new
+    /// rank) or is immediately closed (code 0). New ranks are assigned
+    /// to open children in outcome order, left before right.
+    Split {
+        bitmap: Bitmap,
+        left_open: bool,
+        right_open: bool,
+    },
+}
+
+/// Tree builder → all splitters (broadcast): the level's outcomes so
+/// every worker updates its class list identically (Alg. 2 steps 6-7).
+#[derive(Debug, Clone, PartialEq)]
+pub struct LevelUpdate {
+    pub tree: u32,
+    pub depth: u32,
+    /// Indexed by old leaf rank − 1.
+    pub outcomes: Vec<LeafOutcome>,
+}
+
+impl LevelUpdate {
+    pub fn wire_bytes(&self) -> u64 {
+        8 + self
+            .outcomes
+            .iter()
+            .map(|o| match o {
+                LeafOutcome::Closed => 1,
+                LeafOutcome::Split { bitmap, .. } => 1 + bitmap.wire_bytes(),
+            })
+            .sum::<u64>()
+    }
+
+    /// Number of open leaves after applying this update.
+    pub fn new_num_open(&self) -> u32 {
+        self.outcomes
+            .iter()
+            .map(|o| match o {
+                LeafOutcome::Closed => 0,
+                LeafOutcome::Split {
+                    left_open,
+                    right_open,
+                    ..
+                } => *left_open as u32 + *right_open as u32,
+            })
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bitmap_set_get_count() {
+        let mut b = Bitmap::with_len(130);
+        b.set(0, true);
+        b.set(64, true);
+        b.set(129, true);
+        b.set(64, false);
+        assert!(b.get(0) && !b.get(64) && b.get(129));
+        assert_eq!(b.count_ones(), 2);
+        assert_eq!(b.wire_bytes(), 17);
+    }
+
+    #[test]
+    fn level_update_open_count() {
+        let u = LevelUpdate {
+            tree: 0,
+            depth: 1,
+            outcomes: vec![
+                LeafOutcome::Closed,
+                LeafOutcome::Split {
+                    bitmap: Bitmap::with_len(4),
+                    left_open: true,
+                    right_open: false,
+                },
+                LeafOutcome::Split {
+                    bitmap: Bitmap::with_len(4),
+                    left_open: true,
+                    right_open: true,
+                },
+            ],
+        };
+        assert_eq!(u.new_num_open(), 3);
+    }
+
+    #[test]
+    fn wire_sizes_are_sane() {
+        let q = SupersplitQuery {
+            tree: 0,
+            depth: 0,
+            leaves: vec![LeafInfo {
+                node_id: 0,
+                totals: vec![10, 20],
+            }],
+            assigned_columns: vec![0, 3],
+        };
+        assert_eq!(q.wire_bytes(), 4 + 4 + (4 + 16) + 8);
+        let e = EvalResult {
+            bitmaps: vec![(1, Bitmap::with_len(100))],
+        };
+        assert_eq!(e.wire_bytes(), 4 + 13);
+    }
+}

@@ -1,0 +1,31 @@
+//! The DRF coordinator (paper §2) — the system contribution.
+//!
+//! Three worker roles communicate through an accounted transport:
+//!
+//! * **splitters** ([`splitter`]) own column shards and search/evaluate
+//!   splits;
+//! * **tree builders** ([`tree_builder`]) each drive one tree
+//!   depth-level-by-depth-level (Alg. 2);
+//! * the **manager** ([`manager`]) owns the fleet, runs tree builders
+//!   (in parallel for RF), and collects finished trees.
+//!
+//! [`messages`] defines the protocol with exact wire-size accounting,
+//! [`topology`] the column→splitter ownership (with d-redundancy and the
+//! per-level balanced assignment of §3.2), and [`transport`] the
+//! `SplitterPool` RPC surface.
+
+pub mod manager;
+pub mod messages;
+pub mod recovery;
+pub mod splitter;
+pub mod tcp;
+pub mod topology;
+pub mod transport;
+pub mod wire;
+pub mod tree_builder;
+
+pub use manager::{Manager, TrainReport, TreeReport};
+pub use messages::{Bitmap, LeafOutcome, LevelUpdate};
+pub use topology::Topology;
+pub use transport::{DirectPool, SplitterPool};
+pub use tree_builder::{LevelStats, TreeBuilderCore};

@@ -1,0 +1,310 @@
+//! Worker preemption & recovery.
+//!
+//! The paper's runs "are performed with a low priority — this shows
+//! that the approach remains reliable in spite of interruptions
+//! (workers can be killed by tasks with higher priority)" (§4). DRF
+//! makes this cheap: a splitter's only mutable state is the per-tree
+//! class list, which is a pure fold of (seeded bagging) × (the sequence
+//! of LevelUpdates). The tree builder already knows both, so a killed
+//! splitter is rebuilt by replaying the update log — no checkpointing,
+//! no data movement beyond the original column shard.
+//!
+//! [`RecoveringPool`] wraps a pool with exactly that logic, plus a
+//! deterministic failure injector used by the resilience tests: after a
+//! configurable number of RPCs, a target splitter "dies" (its tree
+//! state is wiped) and the next call to it transparently replays.
+
+use super::messages::{EvalQuery, EvalResult, LevelUpdate, PartialSupersplit, SupersplitQuery};
+use super::transport::{DirectPool, SplitterPool};
+use crate::data::io_stats::IoStats;
+use crate::Result;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Deterministic failure plan: kill splitter `s` right before the
+/// `rpc_index`-th RPC of the run (global RPC counter).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct InjectedFailure {
+    pub splitter: usize,
+    pub rpc_index: u64,
+}
+
+/// A pool wrapper that logs level updates and replays them to recover
+/// killed splitters.
+pub struct RecoveringPool {
+    inner: DirectPool,
+    /// Per-tree ordered log of broadcast level updates.
+    log: Mutex<HashMap<u32, Vec<LevelUpdate>>>,
+    /// Global RPC counter for deterministic injection.
+    rpc_counter: AtomicU64,
+    failures: Vec<InjectedFailure>,
+    /// Number of recoveries performed (observable by tests).
+    recoveries: AtomicU64,
+}
+
+impl RecoveringPool {
+    pub fn new(inner: DirectPool, failures: Vec<InjectedFailure>) -> Self {
+        Self {
+            inner,
+            log: Mutex::new(HashMap::new()),
+            rpc_counter: AtomicU64::new(0),
+            failures,
+            recoveries: AtomicU64::new(0),
+        }
+    }
+
+    pub fn recoveries(&self) -> u64 {
+        self.recoveries.load(Ordering::SeqCst)
+    }
+
+    /// Kill the target splitter if an injected failure is due.
+    fn maybe_crash(&self, splitter: usize, tree: u32) {
+        let idx = self.rpc_counter.fetch_add(1, Ordering::SeqCst);
+        for f in &self.failures {
+            if f.splitter == splitter && f.rpc_index == idx {
+                // Simulate preemption: all in-memory per-tree state is
+                // lost (the column shard itself is immutable input).
+                self.inner.splitter(splitter).finish_tree(tree);
+            }
+        }
+    }
+
+    /// Rebuild a splitter's class list for `tree` by replaying the log.
+    fn recover(&self, splitter: usize, tree: u32) -> Result<()> {
+        let log = self.log.lock().unwrap();
+        let updates = log.get(&tree).map(|v| v.as_slice()).unwrap_or(&[]);
+        let s = self.inner.splitter(splitter);
+        s.start_tree(tree);
+        for u in updates {
+            s.apply_level_update(u)?;
+        }
+        self.recoveries.fetch_add(1, Ordering::SeqCst);
+        Ok(())
+    }
+
+    /// Run an RPC, recovering the splitter once if it lost the tree.
+    fn with_recovery<T>(
+        &self,
+        splitter: usize,
+        tree: u32,
+        call: impl Fn() -> Result<T>,
+    ) -> Result<T> {
+        match call() {
+            Ok(v) => Ok(v),
+            Err(e) if format!("{e}").contains("unknown tree") => {
+                self.recover(splitter, tree)?;
+                call()
+            }
+            Err(e) => Err(e),
+        }
+    }
+}
+
+impl SplitterPool for RecoveringPool {
+    fn num_splitters(&self) -> usize {
+        self.inner.num_splitters()
+    }
+
+    fn columns_of(&self, splitter: usize) -> Vec<usize> {
+        self.inner.columns_of(splitter)
+    }
+
+    fn start_tree(&self, tree: u32) -> Result<()> {
+        self.log.lock().unwrap().insert(tree, Vec::new());
+        self.inner.start_tree(tree)
+    }
+
+    fn root_stats(&self, splitter: usize, tree: u32) -> Result<Vec<u64>> {
+        self.maybe_crash(splitter, tree);
+        // root_stats is stateless w.r.t. the class list; still guarded
+        // for uniformity.
+        self.with_recovery(splitter, tree, || self.inner.root_stats(splitter, tree))
+    }
+
+    fn find_splits(&self, splitter: usize, q: &SupersplitQuery) -> Result<PartialSupersplit> {
+        self.maybe_crash(splitter, q.tree);
+        self.with_recovery(splitter, q.tree, || self.inner.find_splits(splitter, q))
+    }
+
+    fn eval_conditions(&self, splitter: usize, q: &EvalQuery) -> Result<EvalResult> {
+        self.maybe_crash(splitter, q.tree);
+        self.with_recovery(splitter, q.tree, || self.inner.eval_conditions(splitter, q))
+    }
+
+    fn broadcast_level_update(&self, u: &LevelUpdate) -> Result<()> {
+        self.log
+            .lock()
+            .unwrap()
+            .entry(u.tree)
+            .or_default()
+            .push(u.clone());
+        // A splitter killed just before the broadcast would error here;
+        // recover each splitter individually.
+        for s in 0..self.inner.num_splitters() {
+            let res = self.inner.splitter(s).apply_level_update(u);
+            if let Err(e) = res {
+                if format!("{e}").contains("unknown tree") {
+                    // Replay everything *before* this update, then apply it.
+                    {
+                        let log = self.log.lock().unwrap();
+                        let updates = log.get(&u.tree).map(|v| v.as_slice()).unwrap_or(&[]);
+                        let sp = self.inner.splitter(s);
+                        sp.start_tree(u.tree);
+                        for prev in &updates[..updates.len() - 1] {
+                            sp.apply_level_update(prev)?;
+                        }
+                        sp.apply_level_update(u)?;
+                    }
+                    self.recoveries.fetch_add(1, Ordering::SeqCst);
+                } else {
+                    return Err(e);
+                }
+            }
+        }
+        // Network accounting mirrors the inner broadcast.
+        self.inner.net_stats().add_broadcast(
+            u.wire_bytes(),
+            self.inner.num_splitters() as u64,
+        );
+        Ok(())
+    }
+
+    fn finish_tree(&self, tree: u32) -> Result<()> {
+        self.log.lock().unwrap().remove(&tree);
+        self.inner.finish_tree(tree)
+    }
+
+    fn net_stats(&self) -> IoStats {
+        self.inner.net_stats()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ForestParams, PruneMode};
+    use crate::coordinator::splitter::{memory_storage_for, SplitterConfig, SplitterCore};
+    use crate::coordinator::topology::Topology;
+    use crate::coordinator::tree_builder::TreeBuilderCore;
+    use crate::data::synthetic::{Family, SyntheticSpec};
+    use crate::rng::{Bagger, BaggingMode};
+    use std::sync::Arc;
+
+    fn build_pool(ds: &crate::data::Dataset, params: &ForestParams, w: usize) -> DirectPool {
+        let topo = Topology::new(
+            ds.num_features(),
+            &crate::config::TopologyParams {
+                num_splitters: Some(w),
+                ..Default::default()
+            },
+        );
+        let labels = Arc::new(ds.labels().to_vec());
+        let cfg = SplitterConfig {
+            seed: params.seed,
+            bagger: Bagger::new(params.seed, params.bagging),
+            feature_sampling: params.feature_sampling,
+            num_candidates: params.candidates_for(ds.num_features()),
+            score_kind: params.score_kind,
+            prune: PruneMode::Never,
+        };
+        let splitters = (0..topo.num_splitters())
+            .map(|s| {
+                Arc::new(SplitterCore::new(
+                    s,
+                    ds.schema().clone(),
+                    memory_storage_for(ds, &topo.columns_of(s)),
+                    labels.clone(),
+                    cfg,
+                    IoStats::new(),
+                ))
+            })
+            .collect();
+        DirectPool::new(splitters, 0)
+    }
+
+    #[test]
+    fn training_survives_injected_preemptions() {
+        let ds = SyntheticSpec::new(Family::Majority { informative: 3 }, 600, 6, 5).generate();
+        let params = ForestParams {
+            num_trees: 1,
+            max_depth: 6,
+            bagging: BaggingMode::Poisson,
+            seed: 31,
+            ..Default::default()
+        };
+        let topo = Topology::new(
+            ds.num_features(),
+            &crate::config::TopologyParams {
+                num_splitters: Some(3),
+                ..Default::default()
+            },
+        );
+
+        // Reference: no failures.
+        let clean_pool = build_pool(&ds, &params, 3);
+        let builder = TreeBuilderCore::new(&clean_pool, &topo, &params, ds.num_features());
+        let (reference, _) = builder.build_tree(0).unwrap();
+
+        // Kill splitter 1 several times through the run.
+        let failing = RecoveringPool::new(
+            build_pool(&ds, &params, 3),
+            vec![
+                InjectedFailure {
+                    splitter: 1,
+                    rpc_index: 3,
+                },
+                InjectedFailure {
+                    splitter: 0,
+                    rpc_index: 9,
+                },
+                InjectedFailure {
+                    splitter: 2,
+                    rpc_index: 15,
+                },
+            ],
+        );
+        let builder = TreeBuilderCore::new(&failing, &topo, &params, ds.num_features());
+        let (recovered, _) = builder.build_tree(0).unwrap();
+        assert!(
+            failing.recoveries() >= 1,
+            "failures must actually have triggered recovery"
+        );
+        assert_eq!(reference, recovered, "recovery must preserve exactness");
+    }
+
+    #[test]
+    fn crash_during_broadcast_recovers() {
+        let ds = SyntheticSpec::new(Family::Xor { informative: 2 }, 300, 4, 5).generate();
+        let params = ForestParams {
+            num_trees: 1,
+            max_depth: 5,
+            bagging: BaggingMode::None,
+            seed: 4,
+            ..Default::default()
+        };
+        let topo = Topology::new(
+            ds.num_features(),
+            &crate::config::TopologyParams {
+                num_splitters: Some(2),
+                ..Default::default()
+            },
+        );
+        let clean_pool = build_pool(&ds, &params, 2);
+        let builder = TreeBuilderCore::new(&clean_pool, &topo, &params, ds.num_features());
+        let (reference, _) = builder.build_tree(0).unwrap();
+
+        // Many injection points: some land right before broadcasts.
+        let failures: Vec<InjectedFailure> = (0..30)
+            .map(|k| InjectedFailure {
+                splitter: (k % 2) as usize,
+                rpc_index: k as u64,
+            })
+            .collect();
+        let failing = RecoveringPool::new(build_pool(&ds, &params, 2), failures);
+        let builder = TreeBuilderCore::new(&failing, &topo, &params, ds.num_features());
+        let (recovered, _) = builder.build_tree(0).unwrap();
+        assert_eq!(reference, recovered);
+        assert!(failing.recoveries() >= 2);
+    }
+}

@@ -1,0 +1,802 @@
+//! The splitter worker (paper §2): owns a subset of columns, finds
+//! partial optimal supersplits, evaluates winning conditions, and keeps
+//! its own copy of every in-training tree's class list.
+//!
+//! A splitter never sees the tree structure and never talks to other
+//! splitters — only to tree builders, via the message types in
+//! [`super::messages`]. All dataset access is sequential; in `Disk`
+//! storage mode every access is a fresh sequential pass charged to the
+//! worker's [`IoStats`] (this is what the Table 1 bench measures).
+
+use super::messages::{
+    Bitmap, EvalQuery, EvalResult, LevelUpdate, PartialSupersplit, SupersplitQuery,
+};
+use crate::classlist::ClassList;
+use crate::config::PruneMode;
+use crate::data::column::{Column, SortedEntry};
+use crate::data::disk::{self, ColumnReader};
+use crate::data::io_stats::IoStats;
+use crate::data::schema::{ColumnType, Schema};
+use crate::rng::{Bagger, FeatureSampler, FeatureSampling};
+use crate::splits::histogram::Histogram;
+use crate::splits::scorer::{pick_best, ScoreKind};
+use crate::splits::xla_scorer::{best_numerical_supersplit_xla, ScoreTasks};
+use crate::splits::{categorical, numerical, SplitCandidate};
+use crate::tree::Condition;
+use crate::Result;
+use std::borrow::Cow;
+use std::collections::{BTreeMap, HashMap};
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+
+/// Where a splitter's columns live.
+pub enum SplitterStorage {
+    /// Columns held in RAM (paper: "workers can be configured to load
+    /// the dataset in memory").
+    Memory {
+        /// column index → raw column (row order).
+        columns: BTreeMap<usize, Column>,
+        /// column index → presorted entries (numerical columns only).
+        sorted: BTreeMap<usize, Vec<SortedEntry>>,
+    },
+    /// Columns on disk; every access is a sequential pass.
+    Disk {
+        /// column index → (raw file, optional presorted file).
+        files: BTreeMap<usize, ColumnFiles>,
+    },
+}
+
+/// Paths of one on-disk column.
+#[derive(Debug, Clone)]
+pub struct ColumnFiles {
+    pub raw: PathBuf,
+    pub sorted: Option<PathBuf>,
+    pub ctype: ColumnType,
+}
+
+/// Static configuration every splitter shares (derived from the forest
+/// params; identical across workers — that is what makes seeded bagging
+/// and feature sampling consistent).
+#[derive(Debug, Clone, Copy)]
+pub struct SplitterConfig {
+    pub seed: u64,
+    pub bagger: Bagger,
+    pub feature_sampling: FeatureSampling,
+    pub num_candidates: usize,
+    pub score_kind: ScoreKind,
+    pub prune: PruneMode,
+}
+
+/// Per-tree state a splitter maintains.
+struct TreeState {
+    class_list: ClassList,
+    /// Cached bag multiplicities (one byte per sample). Recomputable
+    /// from the seed at any time (that is what recovery does); cached
+    /// because the hash would otherwise be re-evaluated once per row
+    /// per scanned column per level (EXPERIMENTS.md §Perf).
+    bag_weights: Vec<u8>,
+    /// SPRINT-style pruned attribute lists (adaptive mode only): sorted
+    /// entries filtered to samples still in open leaves.
+    pruned_sorted: Option<BTreeMap<usize, Vec<SortedEntry>>>,
+}
+
+/// The splitter worker core (synchronous; thread wiring lives in
+/// `manager`).
+pub struct SplitterCore {
+    id: usize,
+    schema: Schema,
+    storage: SplitterStorage,
+    /// Label column — replicated on every splitter at dataset-prep time.
+    labels: Arc<Vec<u32>>,
+    cfg: SplitterConfig,
+    trees: Mutex<HashMap<u32, TreeState>>,
+    stats: IoStats,
+    /// Optional XLA scoring backend (numerical splits, binary labels).
+    xla: Option<Arc<dyn ScoreTasks + Send + Sync>>,
+}
+
+impl SplitterCore {
+    pub fn new(
+        id: usize,
+        schema: Schema,
+        storage: SplitterStorage,
+        labels: Arc<Vec<u32>>,
+        cfg: SplitterConfig,
+        stats: IoStats,
+    ) -> Self {
+        Self {
+            id,
+            schema,
+            storage,
+            labels,
+            cfg,
+            trees: Mutex::new(HashMap::new()),
+            stats,
+            xla: None,
+        }
+    }
+
+    /// Install the XLA scoring backend.
+    pub fn with_xla(mut self, scorer: Arc<dyn ScoreTasks + Send + Sync>) -> Self {
+        self.xla = Some(scorer);
+        self
+    }
+
+    pub fn id(&self) -> usize {
+        self.id
+    }
+
+    pub fn stats(&self) -> &IoStats {
+        &self.stats
+    }
+
+    /// Columns this splitter holds.
+    pub fn columns_owned(&self) -> Vec<usize> {
+        match &self.storage {
+            SplitterStorage::Memory { columns, .. } => columns.keys().copied().collect(),
+            SplitterStorage::Disk { files } => files.keys().copied().collect(),
+        }
+    }
+
+    fn num_rows(&self) -> usize {
+        self.labels.len()
+    }
+
+    fn num_classes(&self) -> u32 {
+        self.schema.num_classes
+    }
+
+    fn sampler(&self) -> FeatureSampler {
+        FeatureSampler::new(
+            self.cfg.seed,
+            self.schema.num_features(),
+            self.cfg.num_candidates,
+            self.cfg.feature_sampling,
+        )
+    }
+
+    /// Raw column values (memory: borrowed; disk: sequential read, one
+    /// pass charged).
+    fn raw_column(&self, j: usize) -> Result<Cow<'_, Column>> {
+        match &self.storage {
+            SplitterStorage::Memory { columns, .. } => Ok(Cow::Borrowed(
+                columns.get(&j).ok_or_else(|| anyhow::anyhow!("splitter {} lacks column {j}", self.id))?,
+            )),
+            SplitterStorage::Disk { files } => {
+                let f = files
+                    .get(&j)
+                    .ok_or_else(|| anyhow::anyhow!("splitter {} lacks column {j}", self.id))?;
+                let r = ColumnReader::open(&f.raw, self.stats.clone())?;
+                let col = match f.ctype {
+                    ColumnType::Numerical => Column::Numerical(r.read_all_f32()?),
+                    ColumnType::Categorical { arity } => Column::Categorical {
+                        values: r.read_all_u32()?,
+                        arity,
+                    },
+                };
+                Ok(Cow::Owned(col))
+            }
+        }
+    }
+
+    /// Presorted entries of a numerical column (one pass in disk mode).
+    fn sorted_entries(&self, j: usize) -> Result<Cow<'_, [SortedEntry]>> {
+        match &self.storage {
+            SplitterStorage::Memory { sorted, .. } => Ok(Cow::Borrowed(
+                sorted
+                    .get(&j)
+                    .ok_or_else(|| anyhow::anyhow!("no presorted data for column {j}"))?,
+            )),
+            SplitterStorage::Disk { files } => {
+                let f = files
+                    .get(&j)
+                    .ok_or_else(|| anyhow::anyhow!("splitter {} lacks column {j}", self.id))?;
+                let path = f
+                    .sorted
+                    .as_ref()
+                    .ok_or_else(|| anyhow::anyhow!("column {j} has no presorted file"))?;
+                let r = ColumnReader::open(path, self.stats.clone())?;
+                Ok(Cow::Owned(r.read_all_sorted()?))
+            }
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // RPC handlers
+    // ------------------------------------------------------------------
+
+    /// Begin training a tree: initialize its class list. In-bag samples
+    /// go to the root (code 1); out-of-bag samples are code 0 (they are
+    /// never counted and never shipped in bitmaps — paper Alg. 2 step 5).
+    pub fn start_tree(&self, tree: u32) {
+        let n = self.num_rows();
+        let mut cl = ClassList::with_open(n, 1);
+        let mut weights = vec![0u8; n];
+        for (i, w) in weights.iter_mut().enumerate() {
+            let b = self.cfg.bagger.weight(tree, i as u64).min(255) as u8;
+            *w = b;
+            if b > 0 {
+                cl.set(i, 1);
+            }
+        }
+        self.trees.lock().unwrap().insert(
+            tree,
+            TreeState {
+                class_list: cl,
+                bag_weights: weights,
+                pruned_sorted: None,
+            },
+        );
+    }
+
+    /// Bagged label histogram of the root (queried once per tree by the
+    /// tree builder, which owns no data).
+    pub fn root_stats(&self, tree: u32) -> Vec<u64> {
+        let mut h = Histogram::new(self.num_classes());
+        for (i, &y) in self.labels.iter().enumerate() {
+            let b = self.cfg.bagger.weight(tree, i as u64);
+            if b > 0 {
+                h.add(y, b);
+            }
+        }
+        h.into_counts()
+    }
+
+    /// Alg. 2 step 3: find this splitter's partial optimal supersplit.
+    pub fn find_splits(&self, q: &SupersplitQuery) -> Result<PartialSupersplit> {
+        let trees = self.trees.lock().unwrap();
+        let state = trees
+            .get(&q.tree)
+            .ok_or_else(|| anyhow::anyhow!("splitter {}: unknown tree {}", self.id, q.tree))?;
+        let cl = &state.class_list;
+        anyhow::ensure!(
+            cl.num_open() as usize == q.leaves.len(),
+            "class list has {} open leaves, query has {}",
+            cl.num_open(),
+            q.leaves.len()
+        );
+
+        let sampler = self.sampler();
+        // Per-leaf candidate feature sets (computed locally from the
+        // seed — zero communication, paper §2.2's trick applied to
+        // features).
+        let leaf_candidates: Vec<Vec<usize>> = q
+            .leaves
+            .iter()
+            .map(|l| sampler.candidates(q.tree, q.depth, l.node_id))
+            .collect();
+        let leaf_totals: Vec<Histogram> = q
+            .leaves
+            .iter()
+            .map(|l| Histogram::from_counts(l.totals.clone()))
+            .collect();
+
+        let mut best: Vec<Option<SplitCandidate>> = vec![None; q.leaves.len()];
+        let bag_weights = &state.bag_weights;
+
+        for &j in &q.assigned_columns {
+            // Mask of leaves for which column j was drawn.
+            let mask: Vec<bool> = leaf_candidates.iter().map(|c| c.contains(&j)).collect();
+            if !mask.iter().any(|&b| b) {
+                continue; // not a candidate anywhere: skip the pass entirely
+            }
+            let is_candidate = |h: u32| mask[(h - 1) as usize];
+            let sample2node = |i: u32| cl.get(i as usize);
+            let bag = |i: u32| bag_weights[i as usize] as u32;
+
+            let candidates: Vec<Option<SplitCandidate>> = match self.schema.columns[j].ctype {
+                ColumnType::Numerical => {
+                    let q_j = self.pruned_or_sorted(state, j)?;
+                    match (&self.xla, self.num_classes()) {
+                        (Some(scorer), 2) => best_numerical_supersplit_xla(
+                            scorer.as_ref(),
+                            j,
+                            &q_j,
+                            &self.labels,
+                            &leaf_totals,
+                            sample2node,
+                            is_candidate,
+                            bag,
+                        )?,
+                        _ => numerical::best_numerical_supersplit(
+                            j,
+                            &q_j,
+                            &self.labels,
+                            self.num_classes(),
+                            &leaf_totals,
+                            self.cfg.score_kind,
+                            sample2node,
+                            is_candidate,
+                            bag,
+                        ),
+                    }
+                }
+                ColumnType::Categorical { arity } => {
+                    let col = self.raw_column(j)?;
+                    categorical::best_categorical_supersplit(
+                        j,
+                        col.as_categorical(),
+                        arity,
+                        &self.labels,
+                        self.num_classes(),
+                        &leaf_totals,
+                        self.cfg.score_kind,
+                        sample2node,
+                        is_candidate,
+                        bag,
+                    )
+                }
+            };
+            for (leaf, cand) in candidates.into_iter().enumerate() {
+                if let Some(c) = cand {
+                    best[leaf] = pick_best([best[leaf].take(), Some(c)].into_iter().flatten());
+                }
+            }
+        }
+        Ok(PartialSupersplit { splits: best })
+    }
+
+    /// Presorted entries, preferring the pruned per-tree copy when
+    /// SPRINT-style pruning is active.
+    fn pruned_or_sorted(&self, state: &TreeState, j: usize) -> Result<Cow<'_, [SortedEntry]>> {
+        if let Some(pruned) = &state.pruned_sorted {
+            if let Some(entries) = pruned.get(&j) {
+                // A pruned scan still reads data: charge it.
+                self.stats.add_disk_read(entries.len() as u64 * 8);
+                self.stats.add_read_pass();
+                return Ok(Cow::Owned(entries.clone()));
+            }
+        }
+        self.sorted_entries(j)
+    }
+
+    /// Alg. 2 step 5: evaluate the winning conditions this splitter owns
+    /// and return one dense bitmap per condition (one bit per in-bag
+    /// sample of the leaf, in increasing sample order).
+    ///
+    /// Conditions are grouped by feature and each feature's column is
+    /// scanned **once per level**, no matter how many leaves chose it —
+    /// the per-level (not per-node) pass structure the paper's
+    /// complexity analysis relies on (see EXPERIMENTS.md §Perf).
+    pub fn eval_conditions(&self, q: &EvalQuery) -> Result<EvalResult> {
+        let trees = self.trees.lock().unwrap();
+        let state = trees
+            .get(&q.tree)
+            .ok_or_else(|| anyhow::anyhow!("splitter {}: unknown tree {}", self.id, q.tree))?;
+        let cl = &state.class_list;
+
+        // rank -> slot in the output (and per-rank write cursor).
+        let max_rank = q.conditions.iter().map(|(r, _)| *r).max().unwrap_or(0) as usize;
+        let mut slot_of_rank = vec![usize::MAX; max_rank + 1];
+        let counts = cl.histogram();
+        let mut out: Vec<(u32, Bitmap)> = Vec::with_capacity(q.conditions.len());
+        for (slot, (rank, _)) in q.conditions.iter().enumerate() {
+            anyhow::ensure!(
+                (*rank as usize) < counts.len(),
+                "rank {rank} out of range"
+            );
+            slot_of_rank[*rank as usize] = slot;
+            out.push((*rank, Bitmap::with_len(counts[*rank as usize] as usize)));
+        }
+        let mut cursor = vec![0usize; q.conditions.len()];
+
+        // Group condition slots by feature; one sequential pass each.
+        let mut by_feature: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
+        for (slot, (_, cond)) in q.conditions.iter().enumerate() {
+            by_feature.entry(cond.feature()).or_default().push(slot);
+        }
+        for (feature, slots) in by_feature {
+            let col = self.raw_column(feature)?;
+            let n = col.len();
+            // Which ranks does this pass serve?
+            let mut rank_wanted = vec![false; max_rank + 1];
+            for &slot in &slots {
+                rank_wanted[q.conditions[slot].0 as usize] = true;
+            }
+            match col.as_ref() {
+                Column::Numerical(vals) => {
+                    for i in 0..n {
+                        let c = cl.get(i) as usize;
+                        if c <= max_rank && rank_wanted[c] {
+                            let slot = slot_of_rank[c];
+                            let Condition::NumLe { threshold, .. } = &q.conditions[slot].1
+                            else {
+                                anyhow::bail!("type mismatch on feature {feature}");
+                            };
+                            let p = cursor[slot];
+                            out[slot].1.set(p, vals[i] <= *threshold);
+                            cursor[slot] = p + 1;
+                        }
+                    }
+                }
+                Column::Categorical { values, .. } => {
+                    for i in 0..n {
+                        let c = cl.get(i) as usize;
+                        if c <= max_rank && rank_wanted[c] {
+                            let slot = slot_of_rank[c];
+                            let Condition::CatIn { set, .. } = &q.conditions[slot].1 else {
+                                anyhow::bail!("type mismatch on feature {feature}");
+                            };
+                            let p = cursor[slot];
+                            out[slot].1.set(p, set.contains(values[i]));
+                            cursor[slot] = p + 1;
+                        }
+                    }
+                }
+            }
+        }
+        Ok(EvalResult { bitmaps: out })
+    }
+
+    /// Alg. 2 step 7: apply the broadcast level update to the local
+    /// class list (identical logic on every worker and the tree builder).
+    pub fn apply_level_update(&self, u: &LevelUpdate) -> Result<()> {
+        let mut trees = self.trees.lock().unwrap();
+        let state = trees
+            .get_mut(&u.tree)
+            .ok_or_else(|| anyhow::anyhow!("splitter {}: unknown tree {}", self.id, u.tree))?;
+        state.class_list = apply_update_to_class_list(&state.class_list, u)?;
+
+        // SPRINT-style adaptive pruning (paper §3): once the closed
+        // fraction crosses the threshold, rebuild per-tree attribute
+        // lists containing only samples still in open leaves.
+        if let PruneMode::Adaptive { threshold } = self.cfg.prune {
+            let open = state.class_list.iter_open().count();
+            let closed_frac = 1.0 - open as f64 / self.num_rows().max(1) as f64;
+            if closed_frac >= threshold {
+                let cl = &state.class_list;
+                let mut pruned = BTreeMap::new();
+                for j in self.columns_owned() {
+                    if self.schema.columns[j].ctype.is_numerical() {
+                        let entries = self.sorted_entries(j)?;
+                        let kept: Vec<SortedEntry> = entries
+                            .iter()
+                            .filter(|e| cl.get(e.sample as usize) != 0)
+                            .copied()
+                            .collect();
+                        // Pruning is a write pass (Sprint's cost).
+                        self.stats.add_disk_write(kept.len() as u64 * 8);
+                        self.stats.add_write_pass();
+                        pruned.insert(j, kept);
+                    }
+                }
+                state.pruned_sorted = Some(pruned);
+            }
+        }
+        Ok(())
+    }
+
+    /// Drop a finished tree's state.
+    pub fn finish_tree(&self, tree: u32) {
+        self.trees.lock().unwrap().remove(&tree);
+    }
+
+    /// Current class-list memory in bits (for the memory benches).
+    pub fn class_list_bits(&self) -> u64 {
+        self.trees
+            .lock()
+            .unwrap()
+            .values()
+            .map(|s| s.class_list.memory_bits())
+            .sum()
+    }
+}
+
+/// Pure function: the class-list transition of one depth level. Used by
+/// splitters *and* the tree builder so the transition is provably
+/// identical (unit-tested against hand-built examples, property-tested
+/// in `tests/`).
+pub fn apply_update_to_class_list(cl: &ClassList, u: &LevelUpdate) -> Result<ClassList> {
+    let old_open = cl.num_open() as usize;
+    anyhow::ensure!(
+        u.outcomes.len() == old_open,
+        "update has {} outcomes for {} open leaves",
+        u.outcomes.len(),
+        old_open
+    );
+    // New rank of each (old leaf, side): ranks assigned to open children
+    // in outcome order, left before right.
+    let mut left_rank = vec![0u32; old_open];
+    let mut right_rank = vec![0u32; old_open];
+    let mut next = 0u32;
+    for (r, outcome) in u.outcomes.iter().enumerate() {
+        if let super::messages::LeafOutcome::Split {
+            left_open,
+            right_open,
+            ..
+        } = outcome
+        {
+            if *left_open {
+                next += 1;
+                left_rank[r] = next;
+            }
+            if *right_open {
+                next += 1;
+                right_rank[r] = next;
+            }
+        }
+    }
+    // Validate bitmap lengths against the actual per-leaf populations
+    // before touching any state (the bitmap is indexed by position among
+    // the leaf's samples).
+    let leaf_counts = cl.histogram();
+    for (r, outcome) in u.outcomes.iter().enumerate() {
+        if let super::messages::LeafOutcome::Split { bitmap, .. } = outcome {
+            anyhow::ensure!(
+                bitmap.len() as u64 == leaf_counts[r + 1],
+                "bitmap length {} != {} samples in leaf rank {}",
+                bitmap.len(),
+                leaf_counts[r + 1],
+                r + 1
+            );
+        }
+    }
+    // Per-leaf position counters into the bitmaps.
+    let mut pos = vec![0usize; old_open];
+    let new_cl = cl.rewrite(next, |_i, old| {
+        if old == 0 {
+            return 0;
+        }
+        let r = (old - 1) as usize;
+        match &u.outcomes[r] {
+            super::messages::LeafOutcome::Closed => 0,
+            super::messages::LeafOutcome::Split { bitmap, .. } => {
+                let p = pos[r];
+                pos[r] += 1;
+                if bitmap.get(p) {
+                    left_rank[r]
+                } else {
+                    right_rank[r]
+                }
+            }
+        }
+    });
+    Ok(new_cl)
+}
+
+/// Build a splitter's in-memory storage from a full dataset and its
+/// column assignment (presorting numerical columns on the way — the
+/// dataset-preparation phase of §2.1).
+pub fn memory_storage_for(ds: &crate::data::Dataset, columns: &[usize]) -> SplitterStorage {
+    let mut cols = BTreeMap::new();
+    let mut sorted = BTreeMap::new();
+    for &j in columns {
+        let col = ds.column(j).clone();
+        if col.is_numerical() {
+            sorted.insert(j, col.presort());
+        }
+        cols.insert(j, col);
+    }
+    SplitterStorage::Memory {
+        columns: cols,
+        sorted,
+    }
+}
+
+/// Write a splitter's columns to disk files under `dir` and return the
+/// Disk storage description (used by the disk-mode benches/tests).
+pub fn disk_storage_for(
+    ds: &crate::data::Dataset,
+    columns: &[usize],
+    dir: &std::path::Path,
+    stats: IoStats,
+) -> Result<SplitterStorage> {
+    let mut files = BTreeMap::new();
+    for &j in columns {
+        let raw = dir.join(format!("col_{j}.drfc"));
+        let ctype = ds.schema().columns[j].ctype;
+        let mut sorted_path = None;
+        match ds.column(j) {
+            Column::Numerical(vals) => {
+                disk::write_numerical(&raw, vals, stats.clone())?;
+                let sp = dir.join(format!("col_{j}.sorted.drfc"));
+                disk::write_sorted(&sp, &ds.column(j).presort(), stats.clone())?;
+                sorted_path = Some(sp);
+            }
+            Column::Categorical { values, .. } => {
+                disk::write_categorical(&raw, values, stats.clone())?;
+            }
+        }
+        files.insert(
+            j,
+            ColumnFiles {
+                raw,
+                sorted: sorted_path,
+                ctype,
+            },
+        );
+    }
+    Ok(SplitterStorage::Disk { files })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::messages::{LeafInfo, LeafOutcome};
+    use crate::data::synthetic::{Family, SyntheticSpec};
+    use crate::rng::BaggingMode;
+
+    fn test_cfg() -> SplitterConfig {
+        SplitterConfig {
+            seed: 7,
+            bagger: Bagger::new(7, BaggingMode::None),
+            feature_sampling: FeatureSampling::All,
+            num_candidates: 8,
+            score_kind: ScoreKind::Gini,
+            prune: PruneMode::Never,
+        }
+    }
+
+    fn make_splitter(n: usize) -> (SplitterCore, crate::data::Dataset) {
+        let ds = SyntheticSpec::new(Family::Xor { informative: 2 }, n, 4, 42).generate();
+        let storage = memory_storage_for(&ds, &[0, 1, 2, 3]);
+        let labels = Arc::new(ds.labels().to_vec());
+        let core = SplitterCore::new(
+            0,
+            ds.schema().clone(),
+            storage,
+            labels,
+            test_cfg(),
+            IoStats::new(),
+        );
+        (core, ds)
+    }
+
+    #[test]
+    fn root_stats_match_dataset() {
+        let (s, ds) = make_splitter(500);
+        s.start_tree(0);
+        assert_eq!(s.root_stats(0), ds.class_counts());
+    }
+
+    #[test]
+    fn find_splits_returns_per_leaf() {
+        let (s, ds) = make_splitter(400);
+        s.start_tree(0);
+        let q = SupersplitQuery {
+            tree: 0,
+            depth: 0,
+            leaves: vec![LeafInfo {
+                node_id: 0,
+                totals: ds.class_counts(),
+            }],
+            assigned_columns: vec![0, 1, 2, 3],
+        };
+        let p = s.find_splits(&q).unwrap();
+        assert_eq!(p.splits.len(), 1);
+        // XOR root: informative features alone give ~0 gain but finite-
+        // sample noise yields *some* candidate; just check shape & no
+        // panic, and that any candidate has positive gain.
+        if let Some(c) = &p.splits[0] {
+            assert!(c.gain > 0.0);
+        }
+    }
+
+    #[test]
+    fn eval_bitmap_counts_in_bag_leaf_samples() {
+        let (s, _ds) = make_splitter(100);
+        s.start_tree(0);
+        let q = EvalQuery {
+            tree: 0,
+            depth: 0,
+            conditions: vec![(
+                1,
+                Condition::NumLe {
+                    feature: 0,
+                    threshold: 0.5,
+                },
+            )],
+        };
+        let r = s.eval_conditions(&q).unwrap();
+        assert_eq!(r.bitmaps.len(), 1);
+        let (rank, bm) = &r.bitmaps[0];
+        assert_eq!(*rank, 1);
+        // BaggingMode::None -> all 100 samples in bag and at root.
+        assert_eq!(bm.len(), 100);
+        // Binary features: bit set iff value == 0.0 (i.e. <= 0.5).
+        assert!(bm.count_ones() > 20 && bm.count_ones() < 80);
+    }
+
+    #[test]
+    fn level_update_transition() {
+        let (s, _ds) = make_splitter(10);
+        s.start_tree(0);
+        // Split root: samples alternate left/right; left child open,
+        // right child closed.
+        let mut bm = Bitmap::with_len(10);
+        for i in 0..10 {
+            bm.set(i, i % 2 == 0);
+        }
+        let u = LevelUpdate {
+            tree: 0,
+            depth: 0,
+            outcomes: vec![LeafOutcome::Split {
+                bitmap: bm,
+                left_open: true,
+                right_open: false,
+            }],
+        };
+        s.apply_level_update(&u).unwrap();
+        let trees = s.trees.lock().unwrap();
+        let cl = &trees.get(&0).unwrap().class_list;
+        assert_eq!(cl.num_open(), 1);
+        for i in 0..10 {
+            assert_eq!(cl.get(i), if i % 2 == 0 { 1 } else { 0 });
+        }
+    }
+
+    #[test]
+    fn apply_update_checks_lengths() {
+        let cl = ClassList::new_all_root(4);
+        let u = LevelUpdate {
+            tree: 0,
+            depth: 0,
+            outcomes: vec![
+                LeafOutcome::Closed,
+                LeafOutcome::Closed, // too many outcomes
+            ],
+        };
+        assert!(apply_update_to_class_list(&cl, &u).is_err());
+        // Bitmap too short.
+        let u2 = LevelUpdate {
+            tree: 0,
+            depth: 0,
+            outcomes: vec![LeafOutcome::Split {
+                bitmap: Bitmap::with_len(2),
+                left_open: true,
+                right_open: true,
+            }],
+        };
+        assert!(apply_update_to_class_list(&cl, &u2).is_err());
+    }
+
+    #[test]
+    fn bagging_excludes_oob_from_class_list() {
+        let ds = SyntheticSpec::new(Family::Xor { informative: 2 }, 1000, 4, 42).generate();
+        let storage = memory_storage_for(&ds, &[0, 1]);
+        let cfg = SplitterConfig {
+            bagger: Bagger::new(7, BaggingMode::Poisson),
+            ..test_cfg()
+        };
+        let s = SplitterCore::new(
+            0,
+            ds.schema().clone(),
+            storage,
+            Arc::new(ds.labels().to_vec()),
+            cfg,
+            IoStats::new(),
+        );
+        s.start_tree(3);
+        let trees = s.trees.lock().unwrap();
+        let cl = &trees.get(&3).unwrap().class_list;
+        let in_bag = cl.iter_open().count();
+        // Poisson(1): ~63.2% in bag.
+        assert!((0.55..0.72).contains(&(in_bag as f64 / 1000.0)));
+        for (i, _) in cl.iter_open() {
+            assert!(cfg.bagger.in_bag(3, i as u64));
+        }
+    }
+
+    #[test]
+    fn disk_storage_roundtrip() {
+        let ds = SyntheticSpec::new(Family::LinearCont { informative: 2 }, 200, 3, 1).generate();
+        let dir = crate::util::tempdir().unwrap();
+        let stats = IoStats::new();
+        let storage = disk_storage_for(&ds, &[0, 2], dir.path(), stats.clone()).unwrap();
+        let s = SplitterCore::new(
+            0,
+            ds.schema().clone(),
+            storage,
+            Arc::new(ds.labels().to_vec()),
+            test_cfg(),
+            stats.clone(),
+        );
+        assert_eq!(s.columns_owned(), vec![0, 2]);
+        let col = s.raw_column(0).unwrap();
+        assert_eq!(col.as_numerical(), ds.column(0).as_numerical());
+        let sorted = s.sorted_entries(2).unwrap();
+        assert_eq!(sorted.as_ref(), ds.column(2).presort().as_slice());
+        assert!(stats.disk_read_bytes() > 0);
+        assert!(s.raw_column(1).is_err(), "column 1 not owned");
+    }
+}

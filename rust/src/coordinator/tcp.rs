@@ -1,0 +1,360 @@
+//! TCP transport: splitters served over real sockets.
+//!
+//! The in-process engines already account every byte; this module makes
+//! the distribution *literal* — each splitter runs a blocking
+//! request/response server on a TCP listener (one thread per
+//! connection), and [`TcpPool`] implements [`SplitterPool`] over
+//! persistent client connections using the binary codec in
+//! [`super::wire`]. Exactness over TCP is asserted in the tests below:
+//! the same trees come out whether workers share an address space or
+//! talk through the loopback stack.
+
+use super::messages::{EvalQuery, EvalResult, LevelUpdate, PartialSupersplit, SupersplitQuery};
+use super::splitter::SplitterCore;
+use super::transport::SplitterPool;
+use super::wire::{
+    decode_request, decode_response, encode_request, encode_response, read_frame, write_frame,
+    Request, Response,
+};
+use crate::data::io_stats::IoStats;
+use crate::Result;
+use anyhow::{bail, Context};
+use std::io::{BufReader, BufWriter};
+use std::net::{TcpListener, TcpStream};
+use std::sync::{Arc, Mutex};
+
+/// A splitter served over TCP. Dropping the server stops accepting new
+/// connections (in-flight connections end when their peer disconnects).
+pub struct SplitterServer {
+    addr: std::net::SocketAddr,
+    accept_handle: Option<std::thread::JoinHandle<()>>,
+    shutdown: Arc<std::sync::atomic::AtomicBool>,
+}
+
+impl SplitterServer {
+    /// Serve `core` on an ephemeral localhost port.
+    pub fn spawn(core: Arc<SplitterCore>) -> Result<SplitterServer> {
+        let listener = TcpListener::bind("127.0.0.1:0")?;
+        let addr = listener.local_addr()?;
+        let shutdown = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let shutdown2 = shutdown.clone();
+        let accept_handle = std::thread::Builder::new()
+            .name(format!("drf-splitter-{}", core.id()))
+            .spawn(move || {
+                for conn in listener.incoming() {
+                    if shutdown2.load(std::sync::atomic::Ordering::SeqCst) {
+                        break;
+                    }
+                    let Ok(stream) = conn else { break };
+                    let core = core.clone();
+                    // One thread per connection (a tree builder keeps one
+                    // persistent connection).
+                    let _ = std::thread::Builder::new()
+                        .name("drf-splitter-conn".into())
+                        .spawn(move || {
+                            let _ = serve_connection(&core, stream);
+                        });
+                }
+            })?;
+        Ok(SplitterServer {
+            addr,
+            accept_handle: Some(accept_handle),
+            shutdown,
+        })
+    }
+
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.addr
+    }
+}
+
+impl Drop for SplitterServer {
+    fn drop(&mut self) {
+        self.shutdown
+            .store(true, std::sync::atomic::Ordering::SeqCst);
+        // Poke the listener so the accept loop wakes and exits.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.accept_handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Handle one connection's request loop.
+fn serve_connection(core: &SplitterCore, stream: TcpStream) -> Result<()> {
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = BufWriter::new(stream);
+    loop {
+        let frame = match read_frame(&mut reader) {
+            Ok(f) => f,
+            Err(_) => return Ok(()), // peer closed
+        };
+        let response = match decode_request(&frame) {
+            Err(e) => Response::Err(format!("bad request: {e}")),
+            Ok(Request::Shutdown) => {
+                write_frame(&mut writer, &encode_response(&Response::Ok))?;
+                return Ok(());
+            }
+            Ok(req) => handle(core, req),
+        };
+        write_frame(&mut writer, &encode_response(&response))?;
+    }
+}
+
+fn handle(core: &SplitterCore, req: Request) -> Response {
+    match req {
+        Request::StartTree(t) => {
+            core.start_tree(t);
+            Response::Ok
+        }
+        Request::RootStats(t) => Response::RootStats(core.root_stats(t)),
+        Request::FindSplits(q) => match core.find_splits(&q) {
+            Ok(p) => Response::Splits(p),
+            Err(e) => Response::Err(format!("{e}")),
+        },
+        Request::EvalConditions(q) => match core.eval_conditions(&q) {
+            Ok(r) => Response::Evals(r),
+            Err(e) => Response::Err(format!("{e}")),
+        },
+        Request::LevelUpdate(u) => match core.apply_level_update(&u) {
+            Ok(()) => Response::Ok,
+            Err(e) => Response::Err(format!("{e}")),
+        },
+        Request::FinishTree(t) => {
+            core.finish_tree(t);
+            Response::Ok
+        }
+        Request::Shutdown => Response::Ok,
+    }
+}
+
+/// One persistent client connection (mutex-guarded: requests on a
+/// connection are serialized, which matches the RPC semantics).
+struct Client {
+    reader: Mutex<(BufReader<TcpStream>, BufWriter<TcpStream>)>,
+    columns: Vec<usize>,
+}
+
+impl Client {
+    fn connect(addr: std::net::SocketAddr, columns: Vec<usize>) -> Result<Client> {
+        let stream = TcpStream::connect(addr)
+            .with_context(|| format!("connecting to splitter at {addr}"))?;
+        stream.set_nodelay(true)?;
+        Ok(Client {
+            reader: Mutex::new((
+                BufReader::new(stream.try_clone()?),
+                BufWriter::new(stream),
+            )),
+            columns,
+        })
+    }
+
+    fn call(&self, req: &Request, net: &IoStats) -> Result<Response> {
+        let body = encode_request(req);
+        let mut guard = self.reader.lock().unwrap();
+        net.add_net(body.len() as u64 + 4);
+        write_frame(&mut guard.1, &body)?;
+        let resp_frame = read_frame(&mut guard.0)?;
+        net.add_net(resp_frame.len() as u64 + 4);
+        let resp = decode_response(&resp_frame)?;
+        if let Response::Err(msg) = &resp {
+            bail!("{msg}");
+        }
+        Ok(resp)
+    }
+}
+
+/// A [`SplitterPool`] backed by TCP connections to splitter servers.
+pub struct TcpPool {
+    clients: Vec<Client>,
+    net: IoStats,
+}
+
+impl TcpPool {
+    /// Connect to the given splitter addresses. `columns[i]` must match
+    /// what splitter `i` actually owns (used for routing only).
+    pub fn connect(addrs: &[std::net::SocketAddr], columns: Vec<Vec<usize>>) -> Result<TcpPool> {
+        anyhow::ensure!(addrs.len() == columns.len());
+        let clients = addrs
+            .iter()
+            .zip(columns)
+            .map(|(&a, cols)| Client::connect(a, cols))
+            .collect::<Result<_>>()?;
+        Ok(TcpPool {
+            clients,
+            net: IoStats::new(),
+        })
+    }
+}
+
+impl SplitterPool for TcpPool {
+    fn num_splitters(&self) -> usize {
+        self.clients.len()
+    }
+
+    fn columns_of(&self, splitter: usize) -> Vec<usize> {
+        self.clients[splitter].columns.clone()
+    }
+
+    fn start_tree(&self, tree: u32) -> Result<()> {
+        for c in &self.clients {
+            match c.call(&Request::StartTree(tree), &self.net)? {
+                Response::Ok => {}
+                r => bail!("unexpected response {r:?}"),
+            }
+        }
+        Ok(())
+    }
+
+    fn root_stats(&self, splitter: usize, tree: u32) -> Result<Vec<u64>> {
+        match self.clients[splitter].call(&Request::RootStats(tree), &self.net)? {
+            Response::RootStats(v) => Ok(v),
+            r => bail!("unexpected response {r:?}"),
+        }
+    }
+
+    fn find_splits(&self, splitter: usize, q: &SupersplitQuery) -> Result<PartialSupersplit> {
+        match self.clients[splitter].call(&Request::FindSplits(q.clone()), &self.net)? {
+            Response::Splits(p) => Ok(p),
+            r => bail!("unexpected response {r:?}"),
+        }
+    }
+
+    fn eval_conditions(&self, splitter: usize, q: &EvalQuery) -> Result<EvalResult> {
+        match self.clients[splitter].call(&Request::EvalConditions(q.clone()), &self.net)? {
+            Response::Evals(e) => Ok(e),
+            r => bail!("unexpected response {r:?}"),
+        }
+    }
+
+    fn broadcast_level_update(&self, u: &LevelUpdate) -> Result<()> {
+        for c in &self.clients {
+            match c.call(&Request::LevelUpdate(u.clone()), &self.net)? {
+                Response::Ok => {}
+                r => bail!("unexpected response {r:?}"),
+            }
+        }
+        Ok(())
+    }
+
+    fn finish_tree(&self, tree: u32) -> Result<()> {
+        for c in &self.clients {
+            match c.call(&Request::FinishTree(tree), &self.net)? {
+                Response::Ok => {}
+                r => bail!("unexpected response {r:?}"),
+            }
+        }
+        Ok(())
+    }
+
+    fn net_stats(&self) -> IoStats {
+        self.net.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ForestParams, PruneMode, TopologyParams};
+    use crate::coordinator::splitter::{memory_storage_for, SplitterConfig};
+    use crate::coordinator::topology::Topology;
+    use crate::coordinator::transport::DirectPool;
+    use crate::coordinator::tree_builder::TreeBuilderCore;
+    use crate::data::synthetic::{Family, SyntheticSpec};
+    use crate::rng::{Bagger, BaggingMode, FeatureSampling};
+    use crate::splits::scorer::ScoreKind;
+
+    #[test]
+    fn tcp_training_matches_in_process() {
+        let ds = SyntheticSpec::new(Family::Xor { informative: 3 }, 400, 6, 5).generate();
+        let params = ForestParams {
+            num_trees: 2,
+            max_depth: 6,
+            bagging: BaggingMode::Poisson,
+            seed: 91,
+            ..Default::default()
+        };
+        let topo_params = TopologyParams {
+            num_splitters: Some(3),
+            ..Default::default()
+        };
+        let topology = Topology::new(ds.num_features(), &topo_params);
+        let labels = std::sync::Arc::new(ds.labels().to_vec());
+        let cfg = SplitterConfig {
+            seed: params.seed,
+            bagger: Bagger::new(params.seed, params.bagging),
+            feature_sampling: FeatureSampling::PerNode,
+            num_candidates: params.candidates_for(ds.num_features()),
+            score_kind: ScoreKind::Gini,
+            prune: PruneMode::Never,
+        };
+        let make_cores = || -> Vec<Arc<SplitterCore>> {
+            (0..topology.num_splitters())
+                .map(|s| {
+                    Arc::new(SplitterCore::new(
+                        s,
+                        ds.schema().clone(),
+                        memory_storage_for(&ds, &topology.columns_of(s)),
+                        labels.clone(),
+                        cfg,
+                        IoStats::new(),
+                    ))
+                })
+                .collect()
+        };
+
+        // Reference: in-process.
+        let direct = DirectPool::new(make_cores(), 0);
+        let builder = TreeBuilderCore::new(&direct, &topology, &params, ds.num_features());
+        let reference: Vec<_> = (0..2).map(|t| builder.build_tree(t).unwrap().0).collect();
+
+        // Same cores behind real sockets.
+        let servers: Vec<SplitterServer> = make_cores()
+            .into_iter()
+            .map(|c| SplitterServer::spawn(c).unwrap())
+            .collect();
+        let addrs: Vec<_> = servers.iter().map(|s| s.addr()).collect();
+        let columns: Vec<_> = (0..topology.num_splitters())
+            .map(|s| topology.columns_of(s))
+            .collect();
+        let pool = TcpPool::connect(&addrs, columns).unwrap();
+        let builder = TreeBuilderCore::new(&pool, &topology, &params, ds.num_features());
+        let over_tcp: Vec<_> = (0..2).map(|t| builder.build_tree(t).unwrap().0).collect();
+
+        assert_eq!(reference, over_tcp, "TCP transport must preserve exactness");
+        assert!(pool.net_stats().net_bytes() > 0, "bytes actually moved");
+    }
+
+    #[test]
+    fn server_reports_errors_as_responses() {
+        let ds = SyntheticSpec::new(Family::Xor { informative: 2 }, 50, 4, 5).generate();
+        let labels = std::sync::Arc::new(ds.labels().to_vec());
+        let cfg = SplitterConfig {
+            seed: 1,
+            bagger: Bagger::new(1, BaggingMode::None),
+            feature_sampling: FeatureSampling::All,
+            num_candidates: 4,
+            score_kind: ScoreKind::Gini,
+            prune: PruneMode::Never,
+        };
+        let core = Arc::new(SplitterCore::new(
+            0,
+            ds.schema().clone(),
+            memory_storage_for(&ds, &[0, 1, 2, 3]),
+            labels,
+            cfg,
+            IoStats::new(),
+        ));
+        let server = SplitterServer::spawn(core).unwrap();
+        let pool = TcpPool::connect(&[server.addr()], vec![vec![0, 1, 2, 3]]).unwrap();
+        // Querying an unknown tree must surface as a clean error.
+        let q = SupersplitQuery {
+            tree: 99,
+            depth: 0,
+            leaves: vec![],
+            assigned_columns: vec![0],
+        };
+        let err = pool.find_splits(0, &q).unwrap_err();
+        assert!(format!("{err}").contains("unknown tree"), "{err}");
+    }
+}

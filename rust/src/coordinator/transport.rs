@@ -1,0 +1,202 @@
+//! Worker wiring: how tree builders reach splitters.
+//!
+//! [`SplitterPool`] is the RPC surface of Alg. 2. Two implementations:
+//!
+//! * [`DirectPool`] — in-process calls with full network *accounting*
+//!   (every request/response is charged its wire size, broadcasts are
+//!   charged fanout × size) and optional injected latency. Deterministic
+//!   and fast; used by exactness tests and most benches.
+//! * `ThreadedPool` (in [`super::manager`]) — each splitter runs on its
+//!   own OS thread behind a request channel; same byte accounting.
+//!
+//! Both charge identical byte counts for identical traffic, so network
+//! metrics are engine-independent.
+
+use super::messages::{
+    EvalQuery, EvalResult, LevelUpdate, PartialSupersplit, SupersplitQuery,
+};
+use super::splitter::SplitterCore;
+use crate::data::io_stats::IoStats;
+use crate::Result;
+use std::sync::Arc;
+
+/// The tree builder's view of the splitter fleet.
+pub trait SplitterPool: Send + Sync {
+    fn num_splitters(&self) -> usize;
+    /// Columns each splitter statically owns (for routing).
+    fn columns_of(&self, splitter: usize) -> Vec<usize>;
+    fn start_tree(&self, tree: u32) -> Result<()>;
+    fn root_stats(&self, splitter: usize, tree: u32) -> Result<Vec<u64>>;
+    fn find_splits(&self, splitter: usize, q: &SupersplitQuery) -> Result<PartialSupersplit>;
+    fn eval_conditions(&self, splitter: usize, q: &EvalQuery) -> Result<EvalResult>;
+    /// Broadcast the level update to every splitter (the `Dn` bits).
+    fn broadcast_level_update(&self, u: &LevelUpdate) -> Result<()>;
+    fn finish_tree(&self, tree: u32) -> Result<()>;
+    /// Shared network counters.
+    fn net_stats(&self) -> IoStats;
+}
+
+/// In-process pool: direct calls + byte accounting + optional latency.
+pub struct DirectPool {
+    splitters: Vec<Arc<SplitterCore>>,
+    net: IoStats,
+    latency: std::time::Duration,
+}
+
+impl DirectPool {
+    pub fn new(splitters: Vec<Arc<SplitterCore>>, latency_us: u64) -> Self {
+        Self {
+            splitters,
+            net: IoStats::new(),
+            latency: std::time::Duration::from_micros(latency_us),
+        }
+    }
+
+    pub fn splitter(&self, s: usize) -> &Arc<SplitterCore> {
+        &self.splitters[s]
+    }
+
+    fn delay(&self) {
+        if !self.latency.is_zero() {
+            std::thread::sleep(self.latency);
+        }
+    }
+}
+
+impl SplitterPool for DirectPool {
+    fn num_splitters(&self) -> usize {
+        self.splitters.len()
+    }
+
+    fn columns_of(&self, splitter: usize) -> Vec<usize> {
+        self.splitters[splitter].columns_owned()
+    }
+
+    fn start_tree(&self, tree: u32) -> Result<()> {
+        // One tiny control message per splitter.
+        self.net.add_broadcast(8, self.splitters.len() as u64);
+        for s in &self.splitters {
+            s.start_tree(tree);
+        }
+        Ok(())
+    }
+
+    fn root_stats(&self, splitter: usize, tree: u32) -> Result<Vec<u64>> {
+        self.delay();
+        self.net.add_net(8); // request
+        let stats = self.splitters[splitter].root_stats(tree);
+        self.net.add_net(stats.len() as u64 * 8); // response
+        Ok(stats)
+    }
+
+    fn find_splits(&self, splitter: usize, q: &SupersplitQuery) -> Result<PartialSupersplit> {
+        self.delay();
+        self.net.add_net(q.wire_bytes());
+        let p = self.splitters[splitter].find_splits(q)?;
+        self.net.add_net(p.wire_bytes());
+        Ok(p)
+    }
+
+    fn eval_conditions(&self, splitter: usize, q: &EvalQuery) -> Result<EvalResult> {
+        self.delay();
+        self.net.add_net(q.wire_bytes());
+        let r = self.splitters[splitter].eval_conditions(q)?;
+        self.net.add_net(r.wire_bytes());
+        Ok(r)
+    }
+
+    fn broadcast_level_update(&self, u: &LevelUpdate) -> Result<()> {
+        self.delay();
+        // The paper's "Dn bits in D allreduce": one bit per live sample,
+        // broadcast to every splitter.
+        self.net
+            .add_broadcast(u.wire_bytes(), self.splitters.len() as u64);
+        for s in &self.splitters {
+            s.apply_level_update(u)?;
+        }
+        Ok(())
+    }
+
+    fn finish_tree(&self, tree: u32) -> Result<()> {
+        self.net.add_broadcast(8, self.splitters.len() as u64);
+        for s in &self.splitters {
+            s.finish_tree(tree);
+        }
+        Ok(())
+    }
+
+    fn net_stats(&self) -> IoStats {
+        self.net.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::PruneMode;
+    use crate::coordinator::splitter::{memory_storage_for, SplitterConfig};
+    use crate::data::synthetic::{Family, SyntheticSpec};
+    use crate::rng::{Bagger, BaggingMode, FeatureSampling};
+    use crate::splits::scorer::ScoreKind;
+
+    fn pool() -> DirectPool {
+        let ds = SyntheticSpec::new(Family::Xor { informative: 2 }, 50, 4, 1).generate();
+        let labels = Arc::new(ds.labels().to_vec());
+        let cfg = SplitterConfig {
+            seed: 1,
+            bagger: Bagger::new(1, BaggingMode::None),
+            feature_sampling: FeatureSampling::All,
+            num_candidates: 4,
+            score_kind: ScoreKind::Gini,
+            prune: PruneMode::Never,
+        };
+        let splitters = (0..2)
+            .map(|s| {
+                let cols: Vec<usize> = (0..4).filter(|j| j % 2 == s).collect();
+                Arc::new(SplitterCore::new(
+                    s,
+                    ds.schema().clone(),
+                    memory_storage_for(&ds, &cols),
+                    labels.clone(),
+                    cfg,
+                    IoStats::new(),
+                ))
+            })
+            .collect();
+        DirectPool::new(splitters, 0)
+    }
+
+    #[test]
+    fn accounting_charges_both_directions() {
+        let p = pool();
+        p.start_tree(0).unwrap();
+        let before = p.net_stats().net_bytes();
+        let stats = p.root_stats(0, 0).unwrap();
+        assert_eq!(stats.iter().sum::<u64>(), 50);
+        let after = p.net_stats().net_bytes();
+        assert_eq!(after - before, 8 + 16, "8B request + 2x8B histogram");
+    }
+
+    #[test]
+    fn broadcast_fanout_charged() {
+        let p = pool();
+        p.start_tree(0).unwrap();
+        let u = LevelUpdate {
+            tree: 0,
+            depth: 0,
+            outcomes: vec![super::super::messages::LeafOutcome::Closed],
+        };
+        let before = p.net_stats().snapshot();
+        p.broadcast_level_update(&u).unwrap();
+        let d = p.net_stats().snapshot().delta_since(&before);
+        assert_eq!(d.net_bytes, u.wire_bytes() * 2, "2 splitters");
+        assert_eq!(d.net_broadcasts, 1);
+    }
+
+    #[test]
+    fn columns_routing() {
+        let p = pool();
+        assert_eq!(p.columns_of(0), vec![0, 2]);
+        assert_eq!(p.columns_of(1), vec![1, 3]);
+    }
+}

@@ -1,0 +1,409 @@
+//! The tree builder worker — Alg. 2 of the paper.
+//!
+//! A tree builder holds the structure of one decision tree in training
+//! and coordinates the splitters; it has **no access to the dataset**.
+//! Trees grow depth-level by depth-level: one supersplit query round,
+//! one condition-evaluation round, and one class-list broadcast per
+//! level — never per node.
+
+use super::messages::{EvalQuery, LeafInfo, LeafOutcome, LevelUpdate, SupersplitQuery};
+use super::topology::Topology;
+use super::transport::SplitterPool;
+use crate::config::ForestParams;
+use crate::metrics::Stopwatch;
+use crate::rng::FeatureSampler;
+use crate::splits::scorer::pick_best;
+use crate::splits::SplitCandidate;
+use crate::tree::Tree;
+use crate::Result;
+
+/// Per-depth-level statistics (feeds the paper's Figure 3 and the
+/// complexity benches).
+#[derive(Debug, Clone)]
+pub struct LevelStats {
+    pub depth: u32,
+    /// Wall-clock seconds spent on this level.
+    pub seconds: f64,
+    /// Open leaves entering the level.
+    pub open_before: u32,
+    /// Open leaves after the level's splits/closes.
+    pub open_after: u32,
+    /// Leaves that split this level.
+    pub num_splits: u32,
+    /// Leaves that closed this level.
+    pub num_closed: u32,
+    /// Distinct candidate columns across all leaves (paper's `m''`).
+    pub m_double_prime: usize,
+    /// Max columns assigned to one splitter this level (paper's `Z`).
+    pub z_max_load: usize,
+    /// Network bytes moved during this level.
+    pub net_bytes: u64,
+    /// Bagged sample weight still in open leaves entering this level.
+    pub open_weight: u64,
+}
+
+/// One open leaf during construction.
+#[derive(Debug, Clone)]
+struct OpenLeaf {
+    node_id: u32,
+}
+
+/// The tree builder core.
+pub struct TreeBuilderCore<'a> {
+    pool: &'a dyn SplitterPool,
+    topology: &'a Topology,
+    params: &'a ForestParams,
+    num_features: usize,
+}
+
+impl<'a> TreeBuilderCore<'a> {
+    pub fn new(
+        pool: &'a dyn SplitterPool,
+        topology: &'a Topology,
+        params: &'a ForestParams,
+        num_features: usize,
+    ) -> Self {
+        Self {
+            pool,
+            topology,
+            params,
+            num_features,
+        }
+    }
+
+    fn sampler(&self) -> FeatureSampler {
+        FeatureSampler::new(
+            self.params.seed,
+            self.num_features,
+            self.params.candidates_for(self.num_features),
+            self.params.feature_sampling,
+        )
+    }
+
+    /// Train one tree (Alg. 2). Returns the tree and per-level stats.
+    pub fn build_tree(&self, tree_idx: u32) -> Result<(Tree, Vec<LevelStats>)> {
+        let pool = self.pool;
+        let sampler = self.sampler();
+        pool.start_tree(tree_idx)?;
+
+        // Step 1-2: root + initial mapping. The builder owns no data, so
+        // the root histogram comes from a splitter (labels are
+        // replicated; ask splitter 0).
+        let root_counts = pool.root_stats(0, tree_idx)?;
+        let mut tree = Tree::new_root(root_counts.clone());
+        let mut open: Vec<OpenLeaf> = if self.params.child_open(&root_counts, 0) {
+            vec![OpenLeaf { node_id: 0 }]
+        } else {
+            vec![]
+        };
+        let mut stats = Vec::new();
+        let mut depth = 0u32;
+
+        // Step 3-9: loop over depth levels.
+        while !open.is_empty() {
+            let sw = Stopwatch::start();
+            let net_before = pool.net_stats().snapshot();
+            let open_before = open.len() as u32;
+            let open_weight: u64 = open
+                .iter()
+                .map(|l| tree.nodes[l.node_id as usize].total_count())
+                .sum();
+
+            // Candidate columns per leaf (deterministic from the seed) +
+            // the level union m''.
+            let leaf_infos: Vec<LeafInfo> = open
+                .iter()
+                .map(|l| LeafInfo {
+                    node_id: l.node_id,
+                    totals: tree.nodes[l.node_id as usize].class_counts.clone(),
+                })
+                .collect();
+            let mut union_cols: Vec<usize> = open
+                .iter()
+                .flat_map(|l| sampler.candidates(tree_idx, depth, l.node_id))
+                .collect();
+            union_cols.sort_unstable();
+            union_cols.dedup();
+            let m_double_prime = union_cols.len();
+
+            // Balanced column -> replica assignment for this level.
+            let assignment = self.topology.assign_level(&union_cols);
+
+            // Step 3: query the splitters for partial supersplits and
+            // merge into the global optimal supersplit.
+            let mut best: Vec<Option<SplitCandidate>> = vec![None; open.len()];
+            for (&s, cols) in &assignment.per_splitter {
+                let q = SupersplitQuery {
+                    tree: tree_idx,
+                    depth,
+                    leaves: leaf_infos.clone(),
+                    assigned_columns: cols.clone(),
+                };
+                let partial = pool.find_splits(s, &q)?;
+                anyhow::ensure!(
+                    partial.splits.len() == open.len(),
+                    "splitter {s} answered {} leaves, expected {}",
+                    partial.splits.len(),
+                    open.len()
+                );
+                for (leaf, cand) in partial.splits.into_iter().enumerate() {
+                    if let Some(c) = cand {
+                        best[leaf] =
+                            pick_best([best[leaf].take(), Some(c)].into_iter().flatten());
+                    }
+                }
+            }
+
+            // Step 5: ask the owning splitters to evaluate the winning
+            // conditions. Group by this level's column owner.
+            let mut eval_requests: std::collections::BTreeMap<usize, EvalQuery> =
+                std::collections::BTreeMap::new();
+            for (leaf, cand) in best.iter().enumerate() {
+                if let Some(c) = cand {
+                    let owner = assignment
+                        .owner_of(c.condition.feature())
+                        .expect("winning feature was assigned this level");
+                    eval_requests
+                        .entry(owner)
+                        .or_insert_with(|| EvalQuery {
+                            tree: tree_idx,
+                            depth,
+                            conditions: Vec::new(),
+                        })
+                        .conditions
+                        .push((leaf as u32 + 1, c.condition.clone()));
+                }
+            }
+            let mut bitmaps: std::collections::BTreeMap<u32, super::messages::Bitmap> =
+                std::collections::BTreeMap::new();
+            for (&s, q) in &eval_requests {
+                let r = pool.eval_conditions(s, q)?;
+                for (rank, bm) in r.bitmaps {
+                    bitmaps.insert(rank, bm);
+                }
+            }
+
+            // Steps 4, 6, 8: update the tree structure, decide which
+            // children stay open, close split-less leaves.
+            let mut outcomes = Vec::with_capacity(open.len());
+            let mut next_open = Vec::new();
+            let mut num_splits = 0u32;
+            for (leaf, cand) in best.iter().enumerate() {
+                let rank = leaf as u32 + 1;
+                match cand {
+                    None => outcomes.push(LeafOutcome::Closed),
+                    Some(c) => {
+                        let bm = bitmaps
+                            .remove(&rank)
+                            .ok_or_else(|| anyhow::anyhow!("missing bitmap for leaf rank {rank}"))?;
+                        let node_id = open[leaf].node_id;
+                        let (left_id, right_id) = tree.split_node(
+                            node_id,
+                            c.condition.clone(),
+                            c.gain,
+                            c.left_counts.clone(),
+                            c.right_counts.clone(),
+                        );
+                        let left_open = self.params.child_open(&c.left_counts, depth + 1);
+                        let right_open = self.params.child_open(&c.right_counts, depth + 1);
+                        if left_open {
+                            next_open.push(OpenLeaf { node_id: left_id });
+                        }
+                        if right_open {
+                            next_open.push(OpenLeaf { node_id: right_id });
+                        }
+                        num_splits += 1;
+                        outcomes.push(LeafOutcome::Split {
+                            bitmap: bm,
+                            left_open,
+                            right_open,
+                        });
+                    }
+                }
+            }
+
+            // Step 7: broadcast so every splitter updates its mapping.
+            let update = LevelUpdate {
+                tree: tree_idx,
+                depth,
+                outcomes,
+            };
+            pool.broadcast_level_update(&update)?;
+
+            let net_after = pool.net_stats().snapshot();
+            stats.push(LevelStats {
+                depth,
+                seconds: sw.seconds(),
+                open_before,
+                open_after: next_open.len() as u32,
+                num_splits,
+                num_closed: open_before - num_splits,
+                m_double_prime,
+                z_max_load: assignment.max_load,
+                net_bytes: net_after.delta_since(&net_before).net_bytes,
+                open_weight,
+            });
+            open = next_open;
+            depth += 1;
+        }
+
+        // Step 10: hand the finished tree to the manager (our caller).
+        pool.finish_tree(tree_idx)?;
+        Ok((tree, stats))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{PruneMode, TopologyParams};
+    use crate::coordinator::splitter::{memory_storage_for, SplitterConfig, SplitterCore};
+    use crate::coordinator::transport::DirectPool;
+    use crate::data::io_stats::IoStats;
+    use crate::data::synthetic::{Family, SyntheticSpec};
+    use crate::data::Dataset;
+    use crate::rng::{Bagger, BaggingMode, FeatureSampling};
+    use std::sync::Arc;
+
+    fn setup(
+        ds: &Dataset,
+        params: &ForestParams,
+        num_splitters: usize,
+    ) -> (DirectPool, Topology) {
+        let topo_params = TopologyParams {
+            num_splitters: Some(num_splitters),
+            ..Default::default()
+        };
+        let topology = Topology::new(ds.num_features(), &topo_params);
+        let labels = Arc::new(ds.labels().to_vec());
+        let cfg = SplitterConfig {
+            seed: params.seed,
+            bagger: Bagger::new(params.seed, params.bagging),
+            feature_sampling: params.feature_sampling,
+            num_candidates: params.candidates_for(ds.num_features()),
+            score_kind: params.score_kind,
+            prune: PruneMode::Never,
+        };
+        let splitters = (0..topology.num_splitters())
+            .map(|s| {
+                Arc::new(SplitterCore::new(
+                    s,
+                    ds.schema().clone(),
+                    memory_storage_for(ds, &topology.columns_of(s)),
+                    labels.clone(),
+                    cfg,
+                    IoStats::new(),
+                ))
+            })
+            .collect();
+        (DirectPool::new(splitters, 0), topology)
+    }
+
+    #[test]
+    fn builds_a_tree_that_fits_xor() {
+        // XOR with 2 informative features, no bagging, all features
+        // considered: a depth-2 tree must fit perfectly.
+        let ds = SyntheticSpec::new(Family::Xor { informative: 2 }, 400, 2, 5).generate();
+        let params = ForestParams {
+            num_trees: 1,
+            max_depth: 4,
+            min_records: 1,
+            bagging: BaggingMode::None,
+            feature_sampling: FeatureSampling::All,
+            seed: 5,
+            ..Default::default()
+        };
+        let (pool, topo) = setup(&ds, &params, 2);
+        let builder = TreeBuilderCore::new(&pool, &topo, &params, ds.num_features());
+        let (tree, stats) = builder.build_tree(0).unwrap();
+        // Training accuracy must be perfect.
+        let preds: Vec<u32> = (0..ds.num_rows())
+            .map(|i| tree.predict_class(&ds.row(i)))
+            .collect();
+        assert_eq!(crate::metrics::accuracy(&preds, ds.labels()), 1.0);
+        assert!(tree.depth() <= 3);
+        assert!(!stats.is_empty());
+        assert_eq!(stats[0].open_before, 1);
+        assert!(stats.iter().all(|s| s.net_bytes > 0));
+    }
+
+    #[test]
+    fn respects_max_depth() {
+        let ds = SyntheticSpec::new(Family::Majority { informative: 5 }, 500, 5, 9).generate();
+        let params = ForestParams {
+            max_depth: 2,
+            bagging: BaggingMode::None,
+            feature_sampling: FeatureSampling::All,
+            seed: 9,
+            ..Default::default()
+        };
+        let (pool, topo) = setup(&ds, &params, 3);
+        let builder = TreeBuilderCore::new(&pool, &topo, &params, ds.num_features());
+        let (tree, stats) = builder.build_tree(0).unwrap();
+        assert!(tree.depth() <= 2);
+        assert!(stats.len() <= 2);
+    }
+
+    #[test]
+    fn respects_min_records() {
+        let ds = SyntheticSpec::new(Family::Xor { informative: 2 }, 100, 3, 5).generate();
+        let params = ForestParams {
+            min_records: 60, // root=100 splits once at most, children < 60 close
+            max_depth: 10,
+            bagging: BaggingMode::None,
+            feature_sampling: FeatureSampling::All,
+            seed: 5,
+            ..Default::default()
+        };
+        let (pool, topo) = setup(&ds, &params, 3);
+        let builder = TreeBuilderCore::new(&pool, &topo, &params, ds.num_features());
+        let (tree, _) = builder.build_tree(0).unwrap();
+        for node in tree.nodes.iter().filter(|n| !n.is_leaf()) {
+            assert!(node.total_count() >= 60, "split a node below min_records");
+        }
+    }
+
+    #[test]
+    fn empty_and_pure_roots_close_immediately() {
+        // All labels equal -> pure root -> single-node tree, no queries.
+        let mut ds = SyntheticSpec::new(Family::Xor { informative: 2 }, 50, 3, 5).generate();
+        ds = Dataset::new(
+            ds.schema().clone(),
+            ds.columns().to_vec(),
+            vec![1u32; 50],
+        );
+        let params = ForestParams {
+            bagging: BaggingMode::None,
+            feature_sampling: FeatureSampling::All,
+            seed: 5,
+            ..Default::default()
+        };
+        let (pool, topo) = setup(&ds, &params, 2);
+        let builder = TreeBuilderCore::new(&pool, &topo, &params, ds.num_features());
+        let (tree, stats) = builder.build_tree(0).unwrap();
+        assert_eq!(tree.num_nodes(), 1);
+        assert!(stats.is_empty());
+    }
+
+    #[test]
+    fn stats_track_open_weight_and_z() {
+        let ds = SyntheticSpec::new(Family::Majority { informative: 3 }, 300, 9, 2).generate();
+        let params = ForestParams {
+            max_depth: 5,
+            bagging: BaggingMode::None,
+            feature_sampling: FeatureSampling::PerNode,
+            seed: 2,
+            ..Default::default()
+        };
+        let (pool, topo) = setup(&ds, &params, 3);
+        let builder = TreeBuilderCore::new(&pool, &topo, &params, ds.num_features());
+        let (_, stats) = builder.build_tree(0).unwrap();
+        assert_eq!(stats[0].open_weight, 300);
+        // m' = ceil(sqrt(9)) = 3 and one leaf at depth 0.
+        assert_eq!(stats[0].m_double_prime, 3);
+        assert!(stats[0].z_max_load >= 1);
+        for w in stats.windows(2) {
+            assert!(w[1].open_weight <= w[0].open_weight);
+        }
+    }
+}

@@ -1,0 +1,619 @@
+//! Binary wire codec for the coordinator protocol.
+//!
+//! Length-prefixed frames with a compact little-endian encoding; this
+//! is what actually crosses sockets in the TCP engine
+//! ([`super::tcp`]), and its sizes are what the `wire_bytes()`
+//! estimates in [`super::messages`] model. Round-trip fidelity is
+//! property-tested in `rust/tests/property.rs`-style unit tests below.
+
+use super::messages::{
+    Bitmap, EvalQuery, EvalResult, LeafInfo, LeafOutcome, LevelUpdate, PartialSupersplit,
+    SupersplitQuery,
+};
+use crate::splits::SplitCandidate;
+use crate::tree::{CategorySet, Condition};
+use crate::Result;
+use anyhow::{bail, ensure, Context};
+
+/// Growable little-endian writer.
+#[derive(Debug, Default)]
+pub struct Writer {
+    buf: Vec<u8>,
+}
+
+impl Writer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+
+    pub fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn f32(&mut self, v: f32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn usize_u32(&mut self, v: usize) {
+        self.u32(v as u32);
+    }
+
+    pub fn u64_slice(&mut self, v: &[u64]) {
+        self.usize_u32(v.len());
+        for &x in v {
+            self.u64(x);
+        }
+    }
+
+    pub fn bool(&mut self, v: bool) {
+        self.u8(v as u8);
+    }
+}
+
+/// Cursor-based reader with explicit errors.
+pub struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    pub fn done(&self) -> Result<()> {
+        ensure!(
+            self.pos == self.buf.len(),
+            "trailing {} bytes in frame",
+            self.buf.len() - self.pos
+        );
+        Ok(())
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        ensure!(self.pos + n <= self.buf.len(), "frame truncated");
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn len_u32(&mut self) -> Result<usize> {
+        let n = self.u32()? as usize;
+        // Cheap sanity bound: even 1-byte elements cannot outnumber the
+        // remaining frame bytes.
+        ensure!(
+            n <= self.buf.len().saturating_sub(self.pos) * 8 + 8,
+            "length prefix {n} exceeds frame"
+        );
+        Ok(n)
+    }
+
+    pub fn u64_vec(&mut self) -> Result<Vec<u64>> {
+        let n = self.len_u32()?;
+        (0..n).map(|_| self.u64()).collect()
+    }
+
+    pub fn bool(&mut self) -> Result<bool> {
+        Ok(self.u8()? != 0)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Message encodings
+// ---------------------------------------------------------------------
+
+fn put_condition(w: &mut Writer, c: &Condition) {
+    match c {
+        Condition::NumLe { feature, threshold } => {
+            w.u8(0);
+            w.usize_u32(*feature);
+            w.f32(*threshold);
+        }
+        Condition::CatIn { feature, set } => {
+            w.u8(1);
+            w.usize_u32(*feature);
+            w.u32(set.arity());
+            let values: Vec<u32> = set.iter().collect();
+            w.usize_u32(values.len());
+            for v in values {
+                w.u32(v);
+            }
+        }
+    }
+}
+
+fn get_condition(r: &mut Reader<'_>) -> Result<Condition> {
+    Ok(match r.u8()? {
+        0 => Condition::NumLe {
+            feature: r.u32()? as usize,
+            threshold: r.f32()?,
+        },
+        1 => {
+            let feature = r.u32()? as usize;
+            let arity = r.u32()?;
+            let n = r.len_u32()?;
+            let values: Vec<u32> = (0..n).map(|_| r.u32()).collect::<Result<_>>()?;
+            Condition::CatIn {
+                feature,
+                set: CategorySet::from_values(arity, values),
+            }
+        }
+        t => bail!("bad condition tag {t}"),
+    })
+}
+
+fn put_bitmap(w: &mut Writer, b: &Bitmap) {
+    w.usize_u32(b.len());
+    // Pack 8 bits per byte.
+    let mut byte = 0u8;
+    for i in 0..b.len() {
+        if b.get(i) {
+            byte |= 1 << (i % 8);
+        }
+        if i % 8 == 7 {
+            w.u8(byte);
+            byte = 0;
+        }
+    }
+    if b.len() % 8 != 0 {
+        w.u8(byte);
+    }
+}
+
+fn get_bitmap(r: &mut Reader<'_>) -> Result<Bitmap> {
+    let len = r.len_u32()?;
+    let mut b = Bitmap::with_len(len);
+    let bytes = r.take(len.div_ceil(8))?;
+    for i in 0..len {
+        if (bytes[i / 8] >> (i % 8)) & 1 == 1 {
+            b.set(i, true);
+        }
+    }
+    Ok(b)
+}
+
+fn put_candidate(w: &mut Writer, c: &SplitCandidate) {
+    put_condition(w, &c.condition);
+    w.f64(c.gain);
+    w.u64_slice(&c.left_counts);
+    w.u64_slice(&c.right_counts);
+}
+
+fn get_candidate(r: &mut Reader<'_>) -> Result<SplitCandidate> {
+    Ok(SplitCandidate {
+        condition: get_condition(r)?,
+        gain: r.f64()?,
+        left_counts: r.u64_vec()?,
+        right_counts: r.u64_vec()?,
+    })
+}
+
+/// The RPC request frame body.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    StartTree(u32),
+    RootStats(u32),
+    FindSplits(SupersplitQuery),
+    EvalConditions(EvalQuery),
+    LevelUpdate(LevelUpdate),
+    FinishTree(u32),
+    Shutdown,
+}
+
+/// The RPC response frame body.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Response {
+    Ok,
+    RootStats(Vec<u64>),
+    Splits(PartialSupersplit),
+    Evals(EvalResult),
+    Err(String),
+}
+
+pub fn encode_request(req: &Request) -> Vec<u8> {
+    let mut w = Writer::new();
+    match req {
+        Request::StartTree(t) => {
+            w.u8(0);
+            w.u32(*t);
+        }
+        Request::RootStats(t) => {
+            w.u8(1);
+            w.u32(*t);
+        }
+        Request::FindSplits(q) => {
+            w.u8(2);
+            w.u32(q.tree);
+            w.u32(q.depth);
+            w.usize_u32(q.leaves.len());
+            for l in &q.leaves {
+                w.u32(l.node_id);
+                w.u64_slice(&l.totals);
+            }
+            w.usize_u32(q.assigned_columns.len());
+            for &c in &q.assigned_columns {
+                w.usize_u32(c);
+            }
+        }
+        Request::EvalConditions(q) => {
+            w.u8(3);
+            w.u32(q.tree);
+            w.u32(q.depth);
+            w.usize_u32(q.conditions.len());
+            for (rank, cond) in &q.conditions {
+                w.u32(*rank);
+                put_condition(&mut w, cond);
+            }
+        }
+        Request::LevelUpdate(u) => {
+            w.u8(4);
+            w.u32(u.tree);
+            w.u32(u.depth);
+            w.usize_u32(u.outcomes.len());
+            for o in &u.outcomes {
+                match o {
+                    LeafOutcome::Closed => w.u8(0),
+                    LeafOutcome::Split {
+                        bitmap,
+                        left_open,
+                        right_open,
+                    } => {
+                        w.u8(1);
+                        put_bitmap(&mut w, bitmap);
+                        w.bool(*left_open);
+                        w.bool(*right_open);
+                    }
+                }
+            }
+        }
+        Request::FinishTree(t) => {
+            w.u8(5);
+            w.u32(*t);
+        }
+        Request::Shutdown => w.u8(6),
+    }
+    w.into_bytes()
+}
+
+pub fn decode_request(buf: &[u8]) -> Result<Request> {
+    let mut r = Reader::new(buf);
+    let req = match r.u8().context("empty request frame")? {
+        0 => Request::StartTree(r.u32()?),
+        1 => Request::RootStats(r.u32()?),
+        2 => {
+            let tree = r.u32()?;
+            let depth = r.u32()?;
+            let nl = r.len_u32()?;
+            let leaves = (0..nl)
+                .map(|_| {
+                    Ok(LeafInfo {
+                        node_id: r.u32()?,
+                        totals: r.u64_vec()?,
+                    })
+                })
+                .collect::<Result<_>>()?;
+            let nc = r.len_u32()?;
+            let assigned_columns = (0..nc)
+                .map(|_| Ok(r.u32()? as usize))
+                .collect::<Result<_>>()?;
+            Request::FindSplits(SupersplitQuery {
+                tree,
+                depth,
+                leaves,
+                assigned_columns,
+            })
+        }
+        3 => {
+            let tree = r.u32()?;
+            let depth = r.u32()?;
+            let n = r.len_u32()?;
+            let conditions = (0..n)
+                .map(|_| Ok((r.u32()?, get_condition(&mut r)?)))
+                .collect::<Result<_>>()?;
+            Request::EvalConditions(EvalQuery {
+                tree,
+                depth,
+                conditions,
+            })
+        }
+        4 => {
+            let tree = r.u32()?;
+            let depth = r.u32()?;
+            let n = r.len_u32()?;
+            let outcomes = (0..n)
+                .map(|_| {
+                    Ok(match r.u8()? {
+                        0 => LeafOutcome::Closed,
+                        1 => LeafOutcome::Split {
+                            bitmap: get_bitmap(&mut r)?,
+                            left_open: r.bool()?,
+                            right_open: r.bool()?,
+                        },
+                        t => bail!("bad outcome tag {t}"),
+                    })
+                })
+                .collect::<Result<_>>()?;
+            Request::LevelUpdate(LevelUpdate {
+                tree,
+                depth,
+                outcomes,
+            })
+        }
+        5 => Request::FinishTree(r.u32()?),
+        6 => Request::Shutdown,
+        t => bail!("bad request tag {t}"),
+    };
+    r.done()?;
+    Ok(req)
+}
+
+pub fn encode_response(resp: &Response) -> Vec<u8> {
+    let mut w = Writer::new();
+    match resp {
+        Response::Ok => w.u8(0),
+        Response::RootStats(v) => {
+            w.u8(1);
+            w.u64_slice(v);
+        }
+        Response::Splits(p) => {
+            w.u8(2);
+            w.usize_u32(p.splits.len());
+            for s in &p.splits {
+                match s {
+                    None => w.u8(0),
+                    Some(c) => {
+                        w.u8(1);
+                        put_candidate(&mut w, c);
+                    }
+                }
+            }
+        }
+        Response::Evals(e) => {
+            w.u8(3);
+            w.usize_u32(e.bitmaps.len());
+            for (rank, b) in &e.bitmaps {
+                w.u32(*rank);
+                put_bitmap(&mut w, b);
+            }
+        }
+        Response::Err(msg) => {
+            w.u8(4);
+            let bytes = msg.as_bytes();
+            w.usize_u32(bytes.len());
+            for &b in bytes {
+                w.u8(b);
+            }
+        }
+    }
+    w.into_bytes()
+}
+
+pub fn decode_response(buf: &[u8]) -> Result<Response> {
+    let mut r = Reader::new(buf);
+    let resp = match r.u8().context("empty response frame")? {
+        0 => Response::Ok,
+        1 => Response::RootStats(r.u64_vec()?),
+        2 => {
+            let n = r.len_u32()?;
+            let splits = (0..n)
+                .map(|_| {
+                    Ok(match r.u8()? {
+                        0 => None,
+                        1 => Some(get_candidate(&mut r)?),
+                        t => bail!("bad option tag {t}"),
+                    })
+                })
+                .collect::<Result<_>>()?;
+            Response::Splits(PartialSupersplit { splits })
+        }
+        3 => {
+            let n = r.len_u32()?;
+            let bitmaps = (0..n)
+                .map(|_| Ok((r.u32()?, get_bitmap(&mut r)?)))
+                .collect::<Result<_>>()?;
+            Response::Evals(EvalResult { bitmaps })
+        }
+        4 => {
+            let n = r.len_u32()?;
+            let bytes: Vec<u8> = (0..n).map(|_| r.u8()).collect::<Result<_>>()?;
+            Response::Err(String::from_utf8(bytes)?)
+        }
+        t => bail!("bad response tag {t}"),
+    };
+    r.done()?;
+    Ok(resp)
+}
+
+/// Write one length-prefixed frame.
+pub fn write_frame(stream: &mut impl std::io::Write, body: &[u8]) -> Result<()> {
+    stream.write_all(&(body.len() as u32).to_le_bytes())?;
+    stream.write_all(body)?;
+    stream.flush()?;
+    Ok(())
+}
+
+/// Read one length-prefixed frame (cap: 256 MiB).
+pub fn read_frame(stream: &mut impl std::io::Read) -> Result<Vec<u8>> {
+    let mut len_bytes = [0u8; 4];
+    stream.read_exact(&mut len_bytes)?;
+    let len = u32::from_le_bytes(len_bytes) as usize;
+    ensure!(len <= (1 << 28), "frame too large: {len}");
+    let mut body = vec![0u8; len];
+    stream.read_exact(&mut body)?;
+    Ok(body)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{run_cases, CaseRng};
+
+    fn random_condition(rng: &mut CaseRng) -> Condition {
+        if rng.bool(0.5) {
+            Condition::NumLe {
+                feature: rng.usize(0, 100),
+                threshold: rng.f32() * 10.0 - 5.0,
+            }
+        } else {
+            let arity = rng.usize(1, 200) as u32;
+            let vals: Vec<u32> = (0..rng.usize(0, 10))
+                .map(|_| rng.u64(arity as u64) as u32)
+                .collect();
+            Condition::CatIn {
+                feature: rng.usize(0, 100),
+                set: CategorySet::from_values(arity, vals),
+            }
+        }
+    }
+
+    fn random_bitmap(rng: &mut CaseRng) -> Bitmap {
+        let n = rng.usize(0, 200);
+        let mut b = Bitmap::with_len(n);
+        for i in 0..n {
+            if rng.bool(0.5) {
+                b.set(i, true);
+            }
+        }
+        b
+    }
+
+    #[test]
+    fn request_roundtrip_random() {
+        run_cases(0x31E, 40, |rng| {
+            let req = match rng.usize(0, 5) {
+                0 => Request::StartTree(rng.u64(1000) as u32),
+                1 => Request::RootStats(rng.u64(1000) as u32),
+                2 => Request::FindSplits(SupersplitQuery {
+                    tree: rng.u64(100) as u32,
+                    depth: rng.u64(30) as u32,
+                    leaves: (0..rng.usize(0, 6))
+                        .map(|_| LeafInfo {
+                            node_id: rng.u64(1000) as u32,
+                            totals: (0..rng.usize(1, 4)).map(|_| rng.u64(1 << 40)).collect(),
+                        })
+                        .collect(),
+                    assigned_columns: (0..rng.usize(0, 8)).map(|_| rng.usize(0, 99)).collect(),
+                }),
+                3 => Request::EvalConditions(EvalQuery {
+                    tree: rng.u64(100) as u32,
+                    depth: rng.u64(30) as u32,
+                    conditions: (0..rng.usize(0, 5))
+                        .map(|_| (rng.u64(64) as u32 + 1, random_condition(rng)))
+                        .collect(),
+                }),
+                4 => Request::LevelUpdate(LevelUpdate {
+                    tree: rng.u64(100) as u32,
+                    depth: rng.u64(30) as u32,
+                    outcomes: (0..rng.usize(0, 5))
+                        .map(|_| {
+                            if rng.bool(0.3) {
+                                LeafOutcome::Closed
+                            } else {
+                                LeafOutcome::Split {
+                                    bitmap: random_bitmap(rng),
+                                    left_open: rng.bool(0.8),
+                                    right_open: rng.bool(0.8),
+                                }
+                            }
+                        })
+                        .collect(),
+                }),
+                _ => Request::FinishTree(rng.u64(1000) as u32),
+            };
+            let bytes = encode_request(&req);
+            let back = decode_request(&bytes).unwrap();
+            assert_eq!(req, back);
+        });
+    }
+
+    #[test]
+    fn response_roundtrip_random() {
+        run_cases(0x52E, 40, |rng| {
+            let resp = match rng.usize(0, 4) {
+                0 => Response::Ok,
+                1 => Response::RootStats(
+                    (0..rng.usize(0, 5)).map(|_| rng.u64(1 << 50)).collect(),
+                ),
+                2 => Response::Splits(PartialSupersplit {
+                    splits: (0..rng.usize(0, 5))
+                        .map(|_| {
+                            rng.bool(0.5).then(|| SplitCandidate {
+                                condition: random_condition(rng),
+                                gain: rng.f64(),
+                                left_counts: vec![rng.u64(100), rng.u64(100)],
+                                right_counts: vec![rng.u64(100), rng.u64(100)],
+                            })
+                        })
+                        .collect(),
+                }),
+                3 => Response::Evals(EvalResult {
+                    bitmaps: (0..rng.usize(0, 4))
+                        .map(|_| (rng.u64(64) as u32 + 1, random_bitmap(rng)))
+                        .collect(),
+                }),
+                _ => Response::Err("splitter 3: unknown tree 7".into()),
+            };
+            let bytes = encode_response(&resp);
+            let back = decode_response(&bytes).unwrap();
+            assert_eq!(resp, back);
+        });
+    }
+
+    #[test]
+    fn corrupt_frames_rejected() {
+        assert!(decode_request(&[]).is_err());
+        assert!(decode_request(&[99]).is_err());
+        assert!(decode_response(&[2, 1, 0, 0, 0]).is_err(), "truncated");
+        // Trailing garbage.
+        let mut bytes = encode_request(&Request::StartTree(1));
+        bytes.push(0);
+        assert!(decode_request(&bytes).is_err());
+    }
+
+    #[test]
+    fn frame_io_roundtrip() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, b"hello").unwrap();
+        write_frame(&mut buf, b"").unwrap();
+        let mut cursor = std::io::Cursor::new(buf);
+        assert_eq!(read_frame(&mut cursor).unwrap(), b"hello");
+        assert_eq!(read_frame(&mut cursor).unwrap(), b"");
+        assert!(read_frame(&mut cursor).is_err(), "EOF");
+    }
+}

@@ -1,0 +1,170 @@
+//! Typed columnar arrays and presorted views.
+//!
+//! Numerical columns are `f32` (the paper's datasets are dense floats),
+//! categorical columns are `u32` value ids in `0..arity`. Presorting
+//! (paper §2.1) turns a numerical column into the list `q(j)` of Alg. 1:
+//! `(value, sample_index)` tuples sorted by value. Labels are *not*
+//! duplicated into the sorted list — unlike SLIQ, DRF keeps labels in a
+//! single shared label column (paper §2.3 "DRF does not store the label
+//! values in memory" — in our implementation labels live once per
+//! splitter process, not once per attribute list).
+
+
+/// One entry of a presorted numerical column: Alg. 1's `(a, i)` (the
+/// label `y` is looked up from the label column at scan time).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SortedEntry {
+    /// Attribute value.
+    pub value: f32,
+    /// Sample (row) index.
+    pub sample: u32,
+}
+
+/// A typed feature column.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Column {
+    /// Dense numerical values, one per row.
+    Numerical(Vec<f32>),
+    /// Dense categorical value ids, one per row, each `< arity`.
+    Categorical {
+        values: Vec<u32>,
+        arity: u32,
+    },
+}
+
+impl Column {
+    /// Number of rows.
+    pub fn len(&self) -> usize {
+        match self {
+            Column::Numerical(v) => v.len(),
+            Column::Categorical { values, .. } => values.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn is_numerical(&self) -> bool {
+        matches!(self, Column::Numerical(_))
+    }
+
+    /// Numerical values, or panic.
+    pub fn as_numerical(&self) -> &[f32] {
+        match self {
+            Column::Numerical(v) => v,
+            _ => panic!("column is not numerical"),
+        }
+    }
+
+    /// Categorical values, or panic.
+    pub fn as_categorical(&self) -> &[u32] {
+        match self {
+            Column::Categorical { values, .. } => values,
+            _ => panic!("column is not categorical"),
+        }
+    }
+
+    pub fn arity(&self) -> Option<u32> {
+        match self {
+            Column::Categorical { arity, .. } => Some(*arity),
+            Column::Numerical(_) => None,
+        }
+    }
+
+    /// Presort a numerical column into Alg. 1's `q(j)`. Ties are broken
+    /// by sample index, making the order — and therefore every
+    /// downstream split decision — fully deterministic.
+    pub fn presort(&self) -> Vec<SortedEntry> {
+        let vals = self.as_numerical();
+        let mut entries: Vec<SortedEntry> = vals
+            .iter()
+            .enumerate()
+            .map(|(i, &v)| SortedEntry {
+                value: v,
+                sample: i as u32,
+            })
+            .collect();
+        entries.sort_by(|a, b| {
+            a.value
+                .partial_cmp(&b.value)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.sample.cmp(&b.sample))
+        });
+        entries
+    }
+
+    /// Gather a row subset (used by the classic in-memory baseline and by
+    /// dataset subsetting; DRF itself never does random access).
+    pub fn gather(&self, rows: &[u32]) -> Column {
+        match self {
+            Column::Numerical(v) => {
+                Column::Numerical(rows.iter().map(|&r| v[r as usize]).collect())
+            }
+            Column::Categorical { values, arity } => Column::Categorical {
+                values: rows.iter().map(|&r| values[r as usize]).collect(),
+                arity: *arity,
+            },
+        }
+    }
+
+    /// In-memory footprint in bytes (for the memory-complexity benches).
+    pub fn nbytes(&self) -> usize {
+        match self {
+            Column::Numerical(v) => v.len() * 4,
+            Column::Categorical { values, .. } => values.len() * 4,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presort_orders_values_with_stable_ties() {
+        let c = Column::Numerical(vec![3.0, 1.0, 2.0, 1.0]);
+        let q = c.presort();
+        let vals: Vec<f32> = q.iter().map(|e| e.value).collect();
+        assert_eq!(vals, vec![1.0, 1.0, 2.0, 3.0]);
+        // Tie between rows 1 and 3 broken by sample index.
+        assert_eq!(q[0].sample, 1);
+        assert_eq!(q[1].sample, 3);
+    }
+
+    #[test]
+    fn presort_handles_nan_without_panicking() {
+        let c = Column::Numerical(vec![1.0, f32::NAN, 0.5]);
+        let q = c.presort();
+        assert_eq!(q.len(), 3);
+    }
+
+    #[test]
+    fn gather_subsets() {
+        let c = Column::Categorical {
+            values: vec![5, 6, 7, 8],
+            arity: 10,
+        };
+        let g = c.gather(&[3, 0]);
+        assert_eq!(g.as_categorical(), &[8, 5]);
+        assert_eq!(g.arity(), Some(10));
+    }
+
+    #[test]
+    fn nbytes() {
+        let c = Column::Numerical(vec![0.0; 100]);
+        assert_eq!(c.nbytes(), 400);
+        assert_eq!(c.len(), 100);
+        assert!(!c.is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "not numerical")]
+    fn wrong_accessor_panics() {
+        Column::Categorical {
+            values: vec![],
+            arity: 2,
+        }
+        .as_numerical();
+    }
+}

@@ -1,0 +1,232 @@
+//! An owned columnar dataset.
+//!
+//! This is the unit the synthetic generators produce, the topology shards
+//! across splitters, and the baselines consume. Rows are samples; the
+//! label column is separate from the features.
+
+use super::column::Column;
+use super::schema::{ColumnType, Schema};
+
+/// A fully materialized columnar dataset.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    schema: Schema,
+    columns: Vec<Column>,
+    labels: Vec<u32>,
+}
+
+impl Dataset {
+    /// Build a dataset, validating column/schema agreement.
+    pub fn new(schema: Schema, columns: Vec<Column>, labels: Vec<u32>) -> Self {
+        assert_eq!(
+            schema.num_features(),
+            columns.len(),
+            "schema/column count mismatch"
+        );
+        let n = labels.len();
+        for (i, (spec, col)) in schema.columns.iter().zip(&columns).enumerate() {
+            assert_eq!(col.len(), n, "column {i} has wrong row count");
+            match (&spec.ctype, col) {
+                (ColumnType::Numerical, Column::Numerical(_)) => {}
+                (ColumnType::Categorical { arity }, Column::Categorical { values, arity: a }) => {
+                    assert_eq!(arity, a, "column {i} arity mismatch");
+                    debug_assert!(
+                        values.iter().all(|&v| v < *arity),
+                        "column {i} has out-of-arity value"
+                    );
+                }
+                _ => panic!("column {i} type does not match schema"),
+            }
+        }
+        debug_assert!(
+            labels.iter().all(|&y| y < schema.num_classes),
+            "label out of range"
+        );
+        Self {
+            schema,
+            columns,
+            labels,
+        }
+    }
+
+    pub fn schema(&self) -> &Schema {
+        &self.schema
+    }
+
+    /// Number of rows (paper's `n`).
+    pub fn num_rows(&self) -> usize {
+        self.labels.len()
+    }
+
+    /// Number of feature columns (paper's `m`).
+    pub fn num_features(&self) -> usize {
+        self.columns.len()
+    }
+
+    pub fn num_classes(&self) -> u32 {
+        self.schema.num_classes
+    }
+
+    pub fn column(&self, j: usize) -> &Column {
+        &self.columns[j]
+    }
+
+    pub fn columns(&self) -> &[Column] {
+        &self.columns
+    }
+
+    pub fn labels(&self) -> &[u32] {
+        &self.labels
+    }
+
+    /// One row's feature values, materialized (for inference/baselines).
+    pub fn row(&self, i: usize) -> RowView<'_> {
+        RowView { ds: self, row: i }
+    }
+
+    /// A new dataset restricted to the given rows (order preserved).
+    /// Used to build train/test splits and the Leo 1% / 10% subsets.
+    pub fn subset(&self, rows: &[u32]) -> Dataset {
+        let columns = self.columns.iter().map(|c| c.gather(rows)).collect();
+        let labels = rows.iter().map(|&r| self.labels[r as usize]).collect();
+        Dataset {
+            schema: self.schema.clone(),
+            columns,
+            labels,
+        }
+    }
+
+    /// The first `k` rows (deterministic subset, used for x% scaling runs).
+    pub fn head(&self, k: usize) -> Dataset {
+        let rows: Vec<u32> = (0..k.min(self.num_rows()) as u32).collect();
+        self.subset(&rows)
+    }
+
+    /// Deterministic train/test split: every `holdout`-th row goes to
+    /// test. Returns (train, test).
+    pub fn split_holdout(&self, holdout: usize) -> (Dataset, Dataset) {
+        assert!(holdout >= 2);
+        let mut train = Vec::new();
+        let mut test = Vec::new();
+        for i in 0..self.num_rows() as u32 {
+            if (i as usize) % holdout == 0 {
+                test.push(i);
+            } else {
+                train.push(i);
+            }
+        }
+        (self.subset(&train), self.subset(&test))
+    }
+
+    /// Total in-memory footprint in bytes (features + labels).
+    pub fn nbytes(&self) -> usize {
+        self.columns.iter().map(|c| c.nbytes()).sum::<usize>() + self.labels.len() * 4
+    }
+
+    /// Per-class label counts.
+    pub fn class_counts(&self) -> Vec<u64> {
+        let mut counts = vec![0u64; self.num_classes() as usize];
+        for &y in &self.labels {
+            counts[y as usize] += 1;
+        }
+        counts
+    }
+}
+
+/// A borrowed view of one dataset row.
+#[derive(Debug, Clone, Copy)]
+pub struct RowView<'a> {
+    ds: &'a Dataset,
+    row: usize,
+}
+
+impl<'a> RowView<'a> {
+    /// Numerical value of feature `j` (panics if not numerical).
+    pub fn numerical(&self, j: usize) -> f32 {
+        self.ds.columns[j].as_numerical()[self.row]
+    }
+
+    /// Categorical value of feature `j` (panics if not categorical).
+    pub fn categorical(&self, j: usize) -> u32 {
+        self.ds.columns[j].as_categorical()[self.row]
+    }
+
+    pub fn label(&self) -> u32 {
+        self.ds.labels[self.row]
+    }
+
+    pub fn index(&self) -> usize {
+        self.row
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::schema::ColumnSpec;
+
+    fn toy() -> Dataset {
+        let schema = Schema::new(
+            vec![
+                ColumnSpec::numerical("x"),
+                ColumnSpec::categorical("c", 3),
+            ],
+            2,
+        );
+        Dataset::new(
+            schema,
+            vec![
+                Column::Numerical(vec![1.0, 2.0, 3.0, 4.0]),
+                Column::Categorical {
+                    values: vec![0, 1, 2, 1],
+                    arity: 3,
+                },
+            ],
+            vec![0, 1, 0, 1],
+        )
+    }
+
+    #[test]
+    fn basic_accessors() {
+        let ds = toy();
+        assert_eq!(ds.num_rows(), 4);
+        assert_eq!(ds.num_features(), 2);
+        assert_eq!(ds.row(2).numerical(0), 3.0);
+        assert_eq!(ds.row(2).categorical(1), 2);
+        assert_eq!(ds.row(2).label(), 0);
+        assert_eq!(ds.class_counts(), vec![2, 2]);
+        assert_eq!(ds.nbytes(), 4 * 4 + 4 * 4 + 4 * 4);
+    }
+
+    #[test]
+    fn subset_and_head() {
+        let ds = toy();
+        let s = ds.subset(&[3, 1]);
+        assert_eq!(s.num_rows(), 2);
+        assert_eq!(s.row(0).numerical(0), 4.0);
+        assert_eq!(s.labels(), &[1, 1]);
+        let h = ds.head(2);
+        assert_eq!(h.num_rows(), 2);
+        assert_eq!(h.row(1).numerical(0), 2.0);
+    }
+
+    #[test]
+    fn holdout_split_partitions() {
+        let ds = toy();
+        let (train, test) = ds.split_holdout(2);
+        assert_eq!(train.num_rows() + test.num_rows(), ds.num_rows());
+        assert_eq!(test.num_rows(), 2); // rows 0, 2
+        assert_eq!(test.row(1).numerical(0), 3.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "wrong row count")]
+    fn row_count_mismatch_rejected() {
+        let schema = Schema::all_numerical(1);
+        Dataset::new(
+            schema,
+            vec![Column::Numerical(vec![1.0])],
+            vec![0, 1],
+        );
+    }
+}

@@ -1,0 +1,369 @@
+//! On-disk binary column files with strictly sequential access.
+//!
+//! DRF workers "only need to read their assigned part of the dataset
+//! sequentially, i.e. no random access and no writing are needed" (paper
+//! §2). This module provides that storage: one file per column, a small
+//! header, then densely packed little-endian records. Readers and
+//! writers are buffered and charge an [`IoStats`] so the complexity
+//! benches can report bytes/passes per worker exactly as Table 1 does.
+//!
+//! Three record layouts:
+//! * raw numerical column: `f32` per row;
+//! * raw categorical column: `u32` per row;
+//! * presorted numerical column (Alg. 1's `q(j)`): `(f32 value, u32
+//!   sample)` pairs in value order — produced by the presorting phase
+//!   ([`super::sort`]).
+
+use super::column::SortedEntry;
+use super::io_stats::IoStats;
+use crate::Result;
+use anyhow::{bail, ensure, Context};
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::{Path, PathBuf};
+
+/// File magic: "DRFC" (DRF Column).
+const MAGIC: [u8; 4] = *b"DRFC";
+/// Format version.
+const VERSION: u32 = 1;
+
+/// Kind tag stored in the header.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FileKind {
+    Numerical = 1,
+    Categorical = 2,
+    SortedNumerical = 3,
+}
+
+impl FileKind {
+    fn from_u32(v: u32) -> Result<Self> {
+        Ok(match v {
+            1 => FileKind::Numerical,
+            2 => FileKind::Categorical,
+            3 => FileKind::SortedNumerical,
+            _ => bail!("unknown column file kind {v}"),
+        })
+    }
+
+    /// Bytes per record for this layout.
+    pub fn record_bytes(self) -> usize {
+        match self {
+            FileKind::Numerical | FileKind::Categorical => 4,
+            FileKind::SortedNumerical => 8,
+        }
+    }
+}
+
+/// Parsed column-file header.
+#[derive(Debug, Clone, Copy)]
+pub struct Header {
+    pub kind: FileKind,
+    pub rows: u64,
+}
+
+const HEADER_BYTES: u64 = 4 + 4 + 4 + 8; // magic, version, kind, rows
+
+fn write_header(w: &mut impl Write, kind: FileKind, rows: u64) -> Result<()> {
+    w.write_all(&MAGIC)?;
+    w.write_all(&VERSION.to_le_bytes())?;
+    w.write_all(&(kind as u32).to_le_bytes())?;
+    w.write_all(&rows.to_le_bytes())?;
+    Ok(())
+}
+
+fn read_header(r: &mut impl Read) -> Result<Header> {
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic).context("reading column magic")?;
+    ensure!(magic == MAGIC, "bad column file magic");
+    let mut b4 = [0u8; 4];
+    r.read_exact(&mut b4)?;
+    let version = u32::from_le_bytes(b4);
+    ensure!(version == VERSION, "unsupported column file version {version}");
+    r.read_exact(&mut b4)?;
+    let kind = FileKind::from_u32(u32::from_le_bytes(b4))?;
+    let mut b8 = [0u8; 8];
+    r.read_exact(&mut b8)?;
+    let rows = u64::from_le_bytes(b8);
+    Ok(Header { kind, rows })
+}
+
+/// Streaming writer for a column file.
+pub struct ColumnWriter {
+    w: BufWriter<File>,
+    kind: FileKind,
+    written: u64,
+    declared: u64,
+    stats: IoStats,
+    path: PathBuf,
+}
+
+impl ColumnWriter {
+    /// Create a file declaring `rows` records of `kind`.
+    pub fn create(path: &Path, kind: FileKind, rows: u64, stats: IoStats) -> Result<Self> {
+        let f = File::create(path).with_context(|| format!("creating {}", path.display()))?;
+        let mut w = BufWriter::new(f);
+        write_header(&mut w, kind, rows)?;
+        stats.add_disk_write(HEADER_BYTES);
+        Ok(Self {
+            w,
+            kind,
+            written: 0,
+            declared: rows,
+            stats,
+            path: path.to_path_buf(),
+        })
+    }
+
+    pub fn write_f32(&mut self, v: f32) -> Result<()> {
+        ensure!(self.kind == FileKind::Numerical, "layout mismatch");
+        self.w.write_all(&v.to_le_bytes())?;
+        self.written += 1;
+        self.stats.add_disk_write(4);
+        Ok(())
+    }
+
+    pub fn write_u32(&mut self, v: u32) -> Result<()> {
+        ensure!(self.kind == FileKind::Categorical, "layout mismatch");
+        self.w.write_all(&v.to_le_bytes())?;
+        self.written += 1;
+        self.stats.add_disk_write(4);
+        Ok(())
+    }
+
+    pub fn write_sorted(&mut self, e: SortedEntry) -> Result<()> {
+        ensure!(self.kind == FileKind::SortedNumerical, "layout mismatch");
+        self.w.write_all(&e.value.to_le_bytes())?;
+        self.w.write_all(&e.sample.to_le_bytes())?;
+        self.written += 1;
+        self.stats.add_disk_write(8);
+        Ok(())
+    }
+
+    /// Finish the file; counts one write pass and validates the declared
+    /// row count.
+    pub fn finish(mut self) -> Result<()> {
+        self.w.flush()?;
+        ensure!(
+            self.written == self.declared,
+            "{}: wrote {} records, declared {}",
+            self.path.display(),
+            self.written,
+            self.declared
+        );
+        self.stats.add_write_pass();
+        Ok(())
+    }
+}
+
+/// Buffered sequential reader over a column file.
+pub struct ColumnReader {
+    r: BufReader<File>,
+    header: Header,
+    read: u64,
+    stats: IoStats,
+}
+
+impl ColumnReader {
+    pub fn open(path: &Path, stats: IoStats) -> Result<Self> {
+        let f = File::open(path).with_context(|| format!("opening {}", path.display()))?;
+        let mut r = BufReader::with_capacity(1 << 20, f);
+        let header = read_header(&mut r)?;
+        stats.add_disk_read(HEADER_BYTES);
+        Ok(Self {
+            r,
+            header,
+            read: 0,
+            stats,
+        })
+    }
+
+    pub fn header(&self) -> Header {
+        self.header
+    }
+
+    pub fn remaining(&self) -> u64 {
+        self.header.rows - self.read
+    }
+
+    pub fn next_f32(&mut self) -> Result<f32> {
+        ensure!(self.header.kind == FileKind::Numerical, "layout mismatch");
+        let mut b = [0u8; 4];
+        self.r.read_exact(&mut b)?;
+        self.read += 1;
+        self.stats.add_disk_read(4);
+        Ok(f32::from_le_bytes(b))
+    }
+
+    pub fn next_u32(&mut self) -> Result<u32> {
+        ensure!(self.header.kind == FileKind::Categorical, "layout mismatch");
+        let mut b = [0u8; 4];
+        self.r.read_exact(&mut b)?;
+        self.read += 1;
+        self.stats.add_disk_read(4);
+        Ok(u32::from_le_bytes(b))
+    }
+
+    pub fn next_sorted(&mut self) -> Result<SortedEntry> {
+        ensure!(
+            self.header.kind == FileKind::SortedNumerical,
+            "layout mismatch"
+        );
+        let mut b = [0u8; 8];
+        self.r.read_exact(&mut b)?;
+        self.read += 1;
+        self.stats.add_disk_read(8);
+        Ok(SortedEntry {
+            value: f32::from_le_bytes(b[0..4].try_into().unwrap()),
+            sample: u32::from_le_bytes(b[4..8].try_into().unwrap()),
+        })
+    }
+
+    /// Read the whole remainder as sorted entries (counts one pass).
+    pub fn read_all_sorted(mut self) -> Result<Vec<SortedEntry>> {
+        let mut out = Vec::with_capacity(self.remaining() as usize);
+        while self.remaining() > 0 {
+            out.push(self.next_sorted()?);
+        }
+        self.stats.add_read_pass();
+        Ok(out)
+    }
+
+    /// Read the whole remainder as f32 (counts one pass).
+    pub fn read_all_f32(mut self) -> Result<Vec<f32>> {
+        let mut out = Vec::with_capacity(self.remaining() as usize);
+        while self.remaining() > 0 {
+            out.push(self.next_f32()?);
+        }
+        self.stats.add_read_pass();
+        Ok(out)
+    }
+
+    /// Read the whole remainder as u32 (counts one pass).
+    pub fn read_all_u32(mut self) -> Result<Vec<u32>> {
+        let mut out = Vec::with_capacity(self.remaining() as usize);
+        while self.remaining() > 0 {
+            out.push(self.next_u32()?);
+        }
+        self.stats.add_read_pass();
+        Ok(out)
+    }
+
+    /// Mark the end of a logical pass (when the caller reads record by
+    /// record instead of via `read_all_*`).
+    pub fn end_pass(&self) {
+        self.stats.add_read_pass();
+    }
+}
+
+/// Write a full numerical column to `path`.
+pub fn write_numerical(path: &Path, values: &[f32], stats: IoStats) -> Result<()> {
+    let mut w = ColumnWriter::create(path, FileKind::Numerical, values.len() as u64, stats)?;
+    for &v in values {
+        w.write_f32(v)?;
+    }
+    w.finish()
+}
+
+/// Write a full categorical column to `path`.
+pub fn write_categorical(path: &Path, values: &[u32], stats: IoStats) -> Result<()> {
+    let mut w = ColumnWriter::create(path, FileKind::Categorical, values.len() as u64, stats)?;
+    for &v in values {
+        w.write_u32(v)?;
+    }
+    w.finish()
+}
+
+/// Write a raw u32 column (e.g. the label column) — alias of
+/// [`write_categorical`] with a name that doesn't imply arity checks.
+pub fn write_categorical_raw(path: &Path, values: &[u32], stats: IoStats) -> Result<()> {
+    write_categorical(path, values, stats)
+}
+
+/// Write a presorted numerical column to `path`.
+pub fn write_sorted(path: &Path, entries: &[SortedEntry], stats: IoStats) -> Result<()> {
+    let mut w = ColumnWriter::create(
+        path,
+        FileKind::SortedNumerical,
+        entries.len() as u64,
+        stats,
+    )?;
+    for &e in entries {
+        w.write_sorted(e)?;
+    }
+    w.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_numerical() {
+        let dir = crate::util::tempdir().unwrap();
+        let path = dir.path().join("col.drfc");
+        let stats = IoStats::new();
+        let vals = vec![1.5f32, -2.0, 0.0, 3.25];
+        write_numerical(&path, &vals, stats.clone()).unwrap();
+        let r = ColumnReader::open(&path, stats.clone()).unwrap();
+        assert_eq!(r.header().rows, 4);
+        assert_eq!(r.header().kind, FileKind::Numerical);
+        assert_eq!(r.read_all_f32().unwrap(), vals);
+        assert_eq!(stats.disk_write_passes(), 1);
+        assert_eq!(stats.disk_read_passes(), 1);
+        // 4 records * 4 bytes + header on both sides.
+        assert_eq!(stats.disk_write_bytes(), 16 + 20);
+        assert_eq!(stats.disk_read_bytes(), 16 + 20);
+    }
+
+    #[test]
+    fn roundtrip_sorted() {
+        let dir = crate::util::tempdir().unwrap();
+        let path = dir.path().join("sorted.drfc");
+        let stats = IoStats::new();
+        let entries = vec![
+            SortedEntry { value: 0.5, sample: 2 },
+            SortedEntry { value: 1.5, sample: 0 },
+        ];
+        write_sorted(&path, &entries, stats.clone()).unwrap();
+        let r = ColumnReader::open(&path, stats).unwrap();
+        assert_eq!(r.read_all_sorted().unwrap(), entries);
+    }
+
+    #[test]
+    fn roundtrip_categorical() {
+        let dir = crate::util::tempdir().unwrap();
+        let path = dir.path().join("cat.drfc");
+        let stats = IoStats::new();
+        write_categorical(&path, &[7, 8, 9], stats.clone()).unwrap();
+        let r = ColumnReader::open(&path, stats).unwrap();
+        assert_eq!(r.read_all_u32().unwrap(), vec![7, 8, 9]);
+    }
+
+    #[test]
+    fn layout_mismatch_rejected() {
+        let dir = crate::util::tempdir().unwrap();
+        let path = dir.path().join("col.drfc");
+        let stats = IoStats::new();
+        write_numerical(&path, &[1.0], stats.clone()).unwrap();
+        let mut r = ColumnReader::open(&path, stats).unwrap();
+        assert!(r.next_u32().is_err());
+    }
+
+    #[test]
+    fn truncated_count_rejected() {
+        let dir = crate::util::tempdir().unwrap();
+        let path = dir.path().join("col.drfc");
+        let stats = IoStats::new();
+        let mut w = ColumnWriter::create(&path, FileKind::Numerical, 3, stats).unwrap();
+        w.write_f32(1.0).unwrap();
+        assert!(w.finish().is_err(), "declared 3 rows but wrote 1");
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let dir = crate::util::tempdir().unwrap();
+        let path = dir.path().join("junk");
+        std::fs::write(&path, b"JUNKJUNKJUNKJUNKJUNKJUNK").unwrap();
+        assert!(ColumnReader::open(&path, IoStats::new()).is_err());
+    }
+}

@@ -1,0 +1,182 @@
+//! I/O and network accounting.
+//!
+//! Table 1 of the paper compares algorithms on *measured quantities*:
+//! bytes read/written per worker, number of sequential passes, and bytes
+//! moved over the network. Every disk reader/writer and every transport
+//! edge in this crate charges one of these counters, so the complexity
+//! benches report the same columns as the paper's table.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// A shared set of I/O counters. Cloning shares the underlying atomics,
+/// so a worker and the harness observe the same numbers.
+#[derive(Debug, Clone, Default)]
+pub struct IoStats {
+    inner: Arc<IoStatsInner>,
+}
+
+#[derive(Debug, Default)]
+struct IoStatsInner {
+    disk_read_bytes: AtomicU64,
+    disk_write_bytes: AtomicU64,
+    disk_read_passes: AtomicU64,
+    disk_write_passes: AtomicU64,
+    net_bytes: AtomicU64,
+    net_messages: AtomicU64,
+    net_broadcasts: AtomicU64,
+}
+
+impl IoStats {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add_disk_read(&self, bytes: u64) {
+        self.inner.disk_read_bytes.fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    pub fn add_disk_write(&self, bytes: u64) {
+        self.inner.disk_write_bytes.fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    /// A completed sequential read pass over some column/file.
+    pub fn add_read_pass(&self) {
+        self.inner.disk_read_passes.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A completed sequential write pass.
+    pub fn add_write_pass(&self) {
+        self.inner.disk_write_passes.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add_net(&self, bytes: u64) {
+        self.inner.net_bytes.fetch_add(bytes, Ordering::Relaxed);
+        self.inner.net_messages.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add_broadcast(&self, bytes: u64, fanout: u64) {
+        self.inner.net_bytes.fetch_add(bytes * fanout, Ordering::Relaxed);
+        self.inner
+            .net_messages
+            .fetch_add(fanout, Ordering::Relaxed);
+        self.inner.net_broadcasts.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn disk_read_bytes(&self) -> u64 {
+        self.inner.disk_read_bytes.load(Ordering::Relaxed)
+    }
+
+    pub fn disk_write_bytes(&self) -> u64 {
+        self.inner.disk_write_bytes.load(Ordering::Relaxed)
+    }
+
+    pub fn disk_read_passes(&self) -> u64 {
+        self.inner.disk_read_passes.load(Ordering::Relaxed)
+    }
+
+    pub fn disk_write_passes(&self) -> u64 {
+        self.inner.disk_write_passes.load(Ordering::Relaxed)
+    }
+
+    pub fn net_bytes(&self) -> u64 {
+        self.inner.net_bytes.load(Ordering::Relaxed)
+    }
+
+    pub fn net_messages(&self) -> u64 {
+        self.inner.net_messages.load(Ordering::Relaxed)
+    }
+
+    pub fn net_broadcasts(&self) -> u64 {
+        self.inner.net_broadcasts.load(Ordering::Relaxed)
+    }
+
+    /// Reset all counters (between bench scenarios).
+    pub fn reset(&self) {
+        self.inner.disk_read_bytes.store(0, Ordering::Relaxed);
+        self.inner.disk_write_bytes.store(0, Ordering::Relaxed);
+        self.inner.disk_read_passes.store(0, Ordering::Relaxed);
+        self.inner.disk_write_passes.store(0, Ordering::Relaxed);
+        self.inner.net_bytes.store(0, Ordering::Relaxed);
+        self.inner.net_messages.store(0, Ordering::Relaxed);
+        self.inner.net_broadcasts.store(0, Ordering::Relaxed);
+    }
+
+    /// Snapshot for reporting.
+    pub fn snapshot(&self) -> IoSnapshot {
+        IoSnapshot {
+            disk_read_bytes: self.disk_read_bytes(),
+            disk_write_bytes: self.disk_write_bytes(),
+            disk_read_passes: self.disk_read_passes(),
+            disk_write_passes: self.disk_write_passes(),
+            net_bytes: self.net_bytes(),
+            net_messages: self.net_messages(),
+            net_broadcasts: self.net_broadcasts(),
+        }
+    }
+}
+
+/// A point-in-time copy of the counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct IoSnapshot {
+    pub disk_read_bytes: u64,
+    pub disk_write_bytes: u64,
+    pub disk_read_passes: u64,
+    pub disk_write_passes: u64,
+    pub net_bytes: u64,
+    pub net_messages: u64,
+    pub net_broadcasts: u64,
+}
+
+impl IoSnapshot {
+    /// Difference vs an earlier snapshot (per-phase accounting).
+    pub fn delta_since(&self, earlier: &IoSnapshot) -> IoSnapshot {
+        IoSnapshot {
+            disk_read_bytes: self.disk_read_bytes - earlier.disk_read_bytes,
+            disk_write_bytes: self.disk_write_bytes - earlier.disk_write_bytes,
+            disk_read_passes: self.disk_read_passes - earlier.disk_read_passes,
+            disk_write_passes: self.disk_write_passes - earlier.disk_write_passes,
+            net_bytes: self.net_bytes - earlier.net_bytes,
+            net_messages: self.net_messages - earlier.net_messages,
+            net_broadcasts: self.net_broadcasts - earlier.net_broadcasts,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate_and_share() {
+        let s = IoStats::new();
+        let s2 = s.clone(); // shared handle
+        s.add_disk_read(100);
+        s2.add_disk_read(50);
+        s.add_read_pass();
+        assert_eq!(s.disk_read_bytes(), 150);
+        assert_eq!(s2.disk_read_passes(), 1);
+    }
+
+    #[test]
+    fn broadcast_multiplies_by_fanout() {
+        let s = IoStats::new();
+        s.add_broadcast(10, 8);
+        assert_eq!(s.net_bytes(), 80);
+        assert_eq!(s.net_messages(), 8);
+        assert_eq!(s.net_broadcasts(), 1);
+    }
+
+    #[test]
+    fn reset_and_snapshot_delta() {
+        let s = IoStats::new();
+        s.add_net(10);
+        let snap1 = s.snapshot();
+        s.add_net(5);
+        let d = s.snapshot().delta_since(&snap1);
+        assert_eq!(d.net_bytes, 5);
+        assert_eq!(d.net_messages, 1);
+        s.reset();
+        assert_eq!(s.net_bytes(), 0);
+    }
+}

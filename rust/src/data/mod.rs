@@ -1,0 +1,32 @@
+//! Dataset substrate: columnar storage (memory + disk), presorting,
+//! synthetic generators, and I/O accounting.
+//!
+//! DRF partitions the dataset **by column** (paper §2.1): each splitter
+//! owns a subset of columns and only ever reads them *sequentially* — no
+//! random access, no writes after the presorting phase. The structures
+//! here are built around that discipline:
+//!
+//! * [`schema`] — column types and dataset specs;
+//! * [`mod@column`] — typed columnar arrays + presorted views;
+//! * [`dataset`] — an owned columnar dataset (the unit the generator
+//!   produces and the topology shards);
+//! * [`disk`] — a paged binary column-file format with sequential
+//!   readers/writers, instrumented by [`io_stats`];
+//! * [`sort`] — in-memory and external (k-way merge) presorting of
+//!   numerical columns;
+//! * [`synthetic`] — the paper's artificial dataset families plus the
+//!   Leo-like stand-in for the proprietary real-world dataset.
+
+pub mod column;
+pub mod csv;
+pub mod dataset;
+pub mod disk;
+pub mod io_stats;
+pub mod schema;
+pub mod sort;
+pub mod store;
+pub mod synthetic;
+
+pub use column::{Column, SortedEntry};
+pub use dataset::Dataset;
+pub use schema::{ColumnSpec, ColumnType, Schema};

@@ -1,0 +1,171 @@
+//! Dataset schema: column types and metadata.
+//!
+//! The paper considers exactly two attribute kinds (§2.1): **numerical**
+//! (split condition `x ≤ τ`) and **categorical** with known arity (split
+//! condition `x ∈ C`). Labels are categorical classes (binary in all of
+//! the paper's experiments, but the code is generic over `num_classes`).
+
+
+/// The type of a feature column.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ColumnType {
+    /// Real-valued attribute; candidate conditions are `x <= τ`.
+    Numerical,
+    /// Categorical attribute with values in `0..arity`; candidate
+    /// conditions are `x ∈ C`, `C ⊆ {0..arity}`.
+    Categorical {
+        /// Number of distinct values (paper's Leo dataset has arities
+        /// from 2 to 10'000).
+        arity: u32,
+    },
+}
+
+impl ColumnType {
+    pub fn is_numerical(&self) -> bool {
+        matches!(self, ColumnType::Numerical)
+    }
+
+    pub fn is_categorical(&self) -> bool {
+        matches!(self, ColumnType::Categorical { .. })
+    }
+
+    pub fn arity(&self) -> Option<u32> {
+        match self {
+            ColumnType::Categorical { arity } => Some(*arity),
+            ColumnType::Numerical => None,
+        }
+    }
+}
+
+/// One feature column's spec.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ColumnSpec {
+    /// Human-readable name, unique within a schema.
+    pub name: String,
+    /// The column's type.
+    pub ctype: ColumnType,
+}
+
+impl ColumnSpec {
+    pub fn numerical(name: impl Into<String>) -> Self {
+        Self {
+            name: name.into(),
+            ctype: ColumnType::Numerical,
+        }
+    }
+
+    pub fn categorical(name: impl Into<String>, arity: u32) -> Self {
+        Self {
+            name: name.into(),
+            ctype: ColumnType::Categorical { arity },
+        }
+    }
+}
+
+/// A dataset schema: the ordered feature columns plus the label.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Schema {
+    /// Feature columns, in dataset order. Column index = position here.
+    pub columns: Vec<ColumnSpec>,
+    /// Number of label classes (>= 2).
+    pub num_classes: u32,
+}
+
+impl Schema {
+    pub fn new(columns: Vec<ColumnSpec>, num_classes: u32) -> Self {
+        assert!(num_classes >= 2, "need at least two classes");
+        assert!(!columns.is_empty(), "schema needs at least one feature");
+        let mut names: Vec<&str> = columns.iter().map(|c| c.name.as_str()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), columns.len(), "duplicate column names");
+        Self {
+            columns,
+            num_classes,
+        }
+    }
+
+    /// Convenience: `k` numerical columns named f0..f{k-1}, binary labels.
+    pub fn all_numerical(k: usize) -> Self {
+        Self::new(
+            (0..k).map(|i| ColumnSpec::numerical(format!("f{i}"))).collect(),
+            2,
+        )
+    }
+
+    /// Number of feature columns (paper's `m`).
+    pub fn num_features(&self) -> usize {
+        self.columns.len()
+    }
+
+    /// Index of a column by name.
+    pub fn column_index(&self, name: &str) -> Option<usize> {
+        self.columns.iter().position(|c| c.name == name)
+    }
+
+    /// Indices of numerical columns.
+    pub fn numerical_indices(&self) -> Vec<usize> {
+        self.columns
+            .iter()
+            .enumerate()
+            .filter(|(_, c)| c.ctype.is_numerical())
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Indices of categorical columns.
+    pub fn categorical_indices(&self) -> Vec<usize> {
+        self.columns
+            .iter()
+            .enumerate()
+            .filter(|(_, c)| c.ctype.is_categorical())
+            .map(|(i, _)| i)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schema_basics() {
+        let s = Schema::new(
+            vec![
+                ColumnSpec::numerical("age"),
+                ColumnSpec::categorical("country", 50),
+            ],
+            2,
+        );
+        assert_eq!(s.num_features(), 2);
+        assert_eq!(s.column_index("country"), Some(1));
+        assert_eq!(s.column_index("nope"), None);
+        assert_eq!(s.numerical_indices(), vec![0]);
+        assert_eq!(s.categorical_indices(), vec![1]);
+        assert_eq!(s.columns[1].ctype.arity(), Some(50));
+        assert!(s.columns[0].ctype.is_numerical());
+    }
+
+    #[test]
+    fn all_numerical_helper() {
+        let s = Schema::all_numerical(5);
+        assert_eq!(s.num_features(), 5);
+        assert!(s.categorical_indices().is_empty());
+        assert_eq!(s.columns[3].name, "f3");
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate")]
+    fn duplicate_names_rejected() {
+        Schema::new(
+            vec![ColumnSpec::numerical("x"), ColumnSpec::numerical("x")],
+            2,
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "two classes")]
+    fn single_class_rejected() {
+        Schema::new(vec![ColumnSpec::numerical("x")], 1);
+    }
+}

@@ -1,0 +1,259 @@
+//! Presorting of numerical columns (paper §2.1).
+//!
+//! "The most expensive operation when preparing the dataset is the
+//! sorting of the numerical attributes. In case of large datasets, this
+//! operation is done using external sorting."
+//!
+//! Two implementations:
+//! * [`presort_in_memory`] — sorts the column directly (small columns);
+//! * [`ExternalSorter`] — classic external merge sort: the column is cut
+//!   into runs that fit in a memory budget, each run is sorted and
+//!   spilled to disk as a sorted-column file, and the runs are k-way
+//!   merged into the final presorted file. All spill I/O is charged to
+//!   the worker's [`IoStats`], which is how the `PS` (presort) terms of
+//!   Table 1 get measured.
+
+use super::column::{Column, SortedEntry};
+use super::disk::{write_sorted, ColumnReader, ColumnWriter, FileKind};
+use super::io_stats::IoStats;
+use crate::Result;
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+use std::path::{Path, PathBuf};
+
+/// Deterministic ordering for sorted entries: by value, ties by sample
+/// index. NaNs sort last (the generators never emit them, but external
+/// data might).
+#[inline]
+fn entry_cmp(a: &SortedEntry, b: &SortedEntry) -> Ordering {
+    a.value
+        .partial_cmp(&b.value)
+        .unwrap_or(Ordering::Equal)
+        .then(a.sample.cmp(&b.sample))
+}
+
+/// Sort a numerical column in memory into Alg. 1's `q(j)`.
+pub fn presort_in_memory(col: &Column) -> Vec<SortedEntry> {
+    col.presort()
+}
+
+/// External merge sorter for numerical columns larger than RAM.
+pub struct ExternalSorter {
+    /// Directory for spill runs.
+    spill_dir: PathBuf,
+    /// Maximum entries held in memory at once.
+    run_capacity: usize,
+    stats: IoStats,
+}
+
+impl ExternalSorter {
+    /// `run_capacity` is the in-memory budget in *entries* (8 bytes each).
+    pub fn new(spill_dir: &Path, run_capacity: usize, stats: IoStats) -> Self {
+        assert!(run_capacity >= 2, "run capacity too small");
+        Self {
+            spill_dir: spill_dir.to_path_buf(),
+            run_capacity,
+            stats,
+        }
+    }
+
+    /// Sort `values` (row order) into a presorted file at `out`.
+    /// Returns the number of spill runs used (1 = in-memory fast path).
+    pub fn sort_column(&self, values: &[f32], out: &Path) -> Result<usize> {
+        let entries_iter = values.iter().enumerate().map(|(i, &v)| SortedEntry {
+            value: v,
+            sample: i as u32,
+        });
+        self.sort_stream(entries_iter, values.len(), out)
+    }
+
+    /// Sort an arbitrary entry stream of known length.
+    pub fn sort_stream(
+        &self,
+        entries: impl Iterator<Item = SortedEntry>,
+        len: usize,
+        out: &Path,
+    ) -> Result<usize> {
+        // Phase 1: cut into sorted runs.
+        let mut runs: Vec<PathBuf> = Vec::new();
+        let mut buf: Vec<SortedEntry> = Vec::with_capacity(self.run_capacity.min(len.max(1)));
+        let mut entries = entries.peekable();
+        while entries.peek().is_some() {
+            buf.clear();
+            while buf.len() < self.run_capacity {
+                match entries.next() {
+                    Some(e) => buf.push(e),
+                    None => break,
+                }
+            }
+            buf.sort_by(entry_cmp);
+            if runs.is_empty() && entries.peek().is_none() {
+                // Single run: write final output directly.
+                write_sorted(out, &buf, self.stats.clone())?;
+                return Ok(1);
+            }
+            let run_path = self.spill_dir.join(format!("run_{}.drfc", runs.len()));
+            write_sorted(&run_path, &buf, self.stats.clone())?;
+            runs.push(run_path);
+        }
+        if runs.is_empty() {
+            // Empty input.
+            write_sorted(out, &[], self.stats.clone())?;
+            return Ok(1);
+        }
+
+        // Phase 2: k-way merge with a min-heap over run heads.
+        self.merge_runs(&runs, len, out)?;
+        for r in &runs {
+            let _ = std::fs::remove_file(r);
+        }
+        Ok(runs.len())
+    }
+
+    fn merge_runs(&self, runs: &[PathBuf], len: usize, out: &Path) -> Result<()> {
+        struct HeapItem {
+            entry: SortedEntry,
+            run: usize,
+        }
+        impl PartialEq for HeapItem {
+            fn eq(&self, other: &Self) -> bool {
+                entry_cmp(&self.entry, &other.entry) == Ordering::Equal && self.run == other.run
+            }
+        }
+        impl Eq for HeapItem {}
+        impl PartialOrd for HeapItem {
+            fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+                Some(self.cmp(other))
+            }
+        }
+        impl Ord for HeapItem {
+            fn cmp(&self, other: &Self) -> Ordering {
+                // Reverse for a min-heap; tie-break on run index for
+                // determinism.
+                entry_cmp(&other.entry, &self.entry).then(other.run.cmp(&self.run))
+            }
+        }
+
+        let mut readers: Vec<ColumnReader> = runs
+            .iter()
+            .map(|p| ColumnReader::open(p, self.stats.clone()))
+            .collect::<Result<_>>()?;
+        let mut heap = BinaryHeap::new();
+        for (i, r) in readers.iter_mut().enumerate() {
+            if r.remaining() > 0 {
+                heap.push(HeapItem {
+                    entry: r.next_sorted()?,
+                    run: i,
+                });
+            }
+        }
+        let mut w = ColumnWriter::create(
+            out,
+            FileKind::SortedNumerical,
+            len as u64,
+            self.stats.clone(),
+        )?;
+        while let Some(item) = heap.pop() {
+            w.write_sorted(item.entry)?;
+            let r = &mut readers[item.run];
+            if r.remaining() > 0 {
+                heap.push(HeapItem {
+                    entry: r.next_sorted()?,
+                    run: item.run,
+                });
+            }
+        }
+        for r in &readers {
+            r.end_pass();
+        }
+        w.finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256pp;
+
+    fn check_sorted(entries: &[SortedEntry]) {
+        for w in entries.windows(2) {
+            assert!(
+                entry_cmp(&w[0], &w[1]) != Ordering::Greater,
+                "out of order: {:?} > {:?}",
+                w[0],
+                w[1]
+            );
+        }
+    }
+
+    #[test]
+    fn external_sort_matches_in_memory() {
+        let dir = crate::util::tempdir().unwrap();
+        let stats = IoStats::new();
+        let mut rng = Xoshiro256pp::new(1);
+        let values: Vec<f32> = (0..10_000).map(|_| rng.next_f64() as f32).collect();
+        let col = Column::Numerical(values.clone());
+        let expect = presort_in_memory(&col);
+
+        let sorter = ExternalSorter::new(dir.path(), 700, stats.clone());
+        let out = dir.path().join("sorted.drfc");
+        let runs = sorter.sort_column(&values, &out).unwrap();
+        assert!(runs > 1, "should need multiple runs, got {runs}");
+        let got = ColumnReader::open(&out, stats).unwrap().read_all_sorted().unwrap();
+        assert_eq!(got, expect);
+        check_sorted(&got);
+    }
+
+    #[test]
+    fn single_run_fast_path() {
+        let dir = crate::util::tempdir().unwrap();
+        let stats = IoStats::new();
+        let values = vec![3.0f32, 1.0, 2.0];
+        let sorter = ExternalSorter::new(dir.path(), 100, stats.clone());
+        let out = dir.path().join("s.drfc");
+        let runs = sorter.sort_column(&values, &out).unwrap();
+        assert_eq!(runs, 1);
+        let got = ColumnReader::open(&out, stats).unwrap().read_all_sorted().unwrap();
+        assert_eq!(
+            got.iter().map(|e| e.sample).collect::<Vec<_>>(),
+            vec![1, 2, 0]
+        );
+    }
+
+    #[test]
+    fn empty_column() {
+        let dir = crate::util::tempdir().unwrap();
+        let stats = IoStats::new();
+        let sorter = ExternalSorter::new(dir.path(), 10, stats.clone());
+        let out = dir.path().join("e.drfc");
+        sorter.sort_column(&[], &out).unwrap();
+        let got = ColumnReader::open(&out, stats).unwrap().read_all_sorted().unwrap();
+        assert!(got.is_empty());
+    }
+
+    #[test]
+    fn duplicate_values_stable_by_sample() {
+        let dir = crate::util::tempdir().unwrap();
+        let stats = IoStats::new();
+        let values = vec![1.0f32; 50];
+        let sorter = ExternalSorter::new(dir.path(), 7, stats.clone());
+        let out = dir.path().join("d.drfc");
+        sorter.sort_column(&values, &out).unwrap();
+        let got = ColumnReader::open(&out, stats).unwrap().read_all_sorted().unwrap();
+        let samples: Vec<u32> = got.iter().map(|e| e.sample).collect();
+        assert_eq!(samples, (0..50).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn spill_io_is_accounted() {
+        let dir = crate::util::tempdir().unwrap();
+        let stats = IoStats::new();
+        let values: Vec<f32> = (0..1000).map(|i| (999 - i) as f32).collect();
+        let sorter = ExternalSorter::new(dir.path(), 100, stats.clone());
+        let out = dir.path().join("s.drfc");
+        sorter.sort_column(&values, &out).unwrap();
+        // Each entry written twice (run + final) at 8 bytes.
+        assert!(stats.disk_write_bytes() >= 2 * 8 * 1000);
+        assert!(stats.disk_read_bytes() >= 8 * 1000);
+    }
+}

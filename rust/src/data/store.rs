@@ -1,0 +1,160 @@
+//! On-disk dataset store: persist a columnar dataset as a directory of
+//! binary column files plus a JSON schema — the "dataset preparation"
+//! output of paper §2.1 (prepare and presort once, train many forests).
+//!
+//! Layout:
+//! ```text
+//! <dir>/schema.json          column specs + num_classes + row count
+//! <dir>/labels.drfc          u32 label column
+//! <dir>/col_<j>.drfc         raw column (f32 or u32)
+//! <dir>/col_<j>.sorted.drfc  presorted entries (numerical columns)
+//! ```
+//! Splitters can consume these files directly in `Disk` storage mode;
+//! `load_dataset` materializes the whole thing for in-memory work.
+
+use super::column::Column;
+use super::dataset::Dataset;
+use super::disk::{self, ColumnReader};
+use super::io_stats::IoStats;
+use super::schema::{ColumnSpec, ColumnType, Schema};
+use crate::util::Json;
+use crate::Result;
+use anyhow::{ensure, Context};
+use std::path::Path;
+
+fn schema_to_json(schema: &Schema, rows: usize) -> Json {
+    let mut o = Json::object();
+    o.set("rows", Json::from_usize(rows))
+        .set("num_classes", Json::from_u64(schema.num_classes as u64))
+        .set(
+            "columns",
+            Json::Arr(
+                schema
+                    .columns
+                    .iter()
+                    .map(|c| {
+                        let mut cj = Json::object();
+                        cj.set("name", Json::Str(c.name.clone()));
+                        match c.ctype {
+                            ColumnType::Numerical => {
+                                cj.set("type", Json::Str("numerical".into()));
+                            }
+                            ColumnType::Categorical { arity } => {
+                                cj.set("type", Json::Str("categorical".into()))
+                                    .set("arity", Json::from_u64(arity as u64));
+                            }
+                        }
+                        cj
+                    })
+                    .collect(),
+            ),
+        );
+    o
+}
+
+fn schema_from_json(v: &Json) -> Result<(Schema, usize)> {
+    let rows = v.get("rows")?.as_usize()?;
+    let num_classes = v.get("num_classes")?.as_u32()?;
+    let columns = v
+        .get("columns")?
+        .as_arr()?
+        .iter()
+        .map(|cj| {
+            let name = cj.get("name")?.as_str()?.to_string();
+            Ok(match cj.get("type")?.as_str()? {
+                "numerical" => ColumnSpec::numerical(name),
+                "categorical" => ColumnSpec::categorical(name, cj.get("arity")?.as_u32()?),
+                t => anyhow::bail!("unknown column type '{t}'"),
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+    Ok((Schema::new(columns, num_classes), rows))
+}
+
+/// Persist a dataset (including presorted numerical columns).
+pub fn save_dataset(ds: &Dataset, dir: &Path, stats: IoStats) -> Result<()> {
+    std::fs::create_dir_all(dir)?;
+    std::fs::write(
+        dir.join("schema.json"),
+        schema_to_json(ds.schema(), ds.num_rows()).to_string(),
+    )?;
+    disk::write_categorical_raw(&dir.join("labels.drfc"), ds.labels(), stats.clone())?;
+    for (j, col) in ds.columns().iter().enumerate() {
+        let raw = dir.join(format!("col_{j}.drfc"));
+        match col {
+            Column::Numerical(vals) => {
+                disk::write_numerical(&raw, vals, stats.clone())?;
+                disk::write_sorted(
+                    &dir.join(format!("col_{j}.sorted.drfc")),
+                    &col.presort(),
+                    stats.clone(),
+                )?;
+            }
+            Column::Categorical { values, .. } => {
+                disk::write_categorical(&raw, values, stats.clone())?;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Load a dataset saved by [`save_dataset`].
+pub fn load_dataset(dir: &Path, stats: IoStats) -> Result<Dataset> {
+    let text = std::fs::read_to_string(dir.join("schema.json"))
+        .with_context(|| format!("reading {}/schema.json", dir.display()))?;
+    let (schema, rows) = schema_from_json(&Json::parse(&text)?)?;
+    let labels =
+        ColumnReader::open(&dir.join("labels.drfc"), stats.clone())?.read_all_u32()?;
+    ensure!(labels.len() == rows, "label count mismatch");
+    let mut columns = Vec::with_capacity(schema.num_features());
+    for (j, spec) in schema.columns.iter().enumerate() {
+        let raw = dir.join(format!("col_{j}.drfc"));
+        let r = ColumnReader::open(&raw, stats.clone())?;
+        let col = match spec.ctype {
+            ColumnType::Numerical => Column::Numerical(r.read_all_f32()?),
+            ColumnType::Categorical { arity } => Column::Categorical {
+                values: r.read_all_u32()?,
+                arity,
+            },
+        };
+        ensure!(col.len() == rows, "column {j} row-count mismatch");
+        columns.push(col);
+    }
+    Ok(Dataset::new(schema, columns, labels))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::LeoLikeSpec;
+
+    #[test]
+    fn roundtrip_mixed_dataset() {
+        let ds = LeoLikeSpec::new(500, 3).generate();
+        let dir = crate::util::tempdir().unwrap();
+        let stats = IoStats::new();
+        save_dataset(&ds, dir.path(), stats.clone()).unwrap();
+        let back = load_dataset(dir.path(), stats).unwrap();
+        assert_eq!(ds.schema(), back.schema());
+        assert_eq!(ds.labels(), back.labels());
+        for j in 0..ds.num_features() {
+            assert_eq!(ds.column(j), back.column(j), "column {j}");
+        }
+        // Presorted files exist for numerical columns.
+        assert!(dir.path().join("col_0.sorted.drfc").exists());
+        assert!(!dir.path().join("col_3.sorted.drfc").exists());
+    }
+
+    #[test]
+    fn missing_dir_fails_cleanly() {
+        let err = load_dataset(Path::new("/nonexistent/nope"), IoStats::new());
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn corrupt_schema_fails() {
+        let dir = crate::util::tempdir().unwrap();
+        std::fs::write(dir.path().join("schema.json"), "{\"rows\": 1}").unwrap();
+        assert!(load_dataset(dir.path(), IoStats::new()).is_err());
+    }
+}

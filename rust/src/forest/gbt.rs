@@ -1,0 +1,459 @@
+//! Gradient Boosted Trees on the DRF substrate (paper §1: "the proposed
+//! algorithm can be applied to other DF models, notably Gradient
+//! Boosted Trees (Ye et al., 2009)", and §2: "DRF can also be used to
+//! train co-dependent sets of trees ... while trees cannot be trained
+//! in parallel, the training of each individual tree is still
+//! distributed").
+//!
+//! Binary classification with logistic loss and second-order (Newton)
+//! split scoring (see [`crate::splits::regression`]). Trees are
+//! regression trees over per-round gradient/hessian pairs; the extra
+//! distributed cost relative to RF is one `(g, h)` refresh per sample
+//! per round — a `2·f32`-per-sample broadcast, since column-partitioned
+//! splitters cannot evaluate the ensemble themselves. The engine below
+//! is single-process but charges that broadcast to an [`IoStats`] so
+//! the complexity benches can put GBT's network cost next to RF's
+//! 1 bit/sample/level.
+
+use crate::data::column::{Column, SortedEntry};
+use crate::data::io_stats::IoStats;
+use crate::data::Dataset;
+use crate::splits::regression::{
+    best_categorical_regression, best_regression_split, GradStats, RegSplit,
+};
+use crate::tree::{CategorySet, Condition};
+use crate::Result;
+
+/// GBT hyperparameters.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GbtParams {
+    pub num_rounds: usize,
+    pub learning_rate: f64,
+    pub max_depth: u32,
+    /// L2 regularization on leaf weights (λ).
+    pub lambda: f64,
+    /// Minimum summed hessian per child.
+    pub min_child_hess: f64,
+}
+
+impl Default for GbtParams {
+    fn default() -> Self {
+        Self {
+            num_rounds: 50,
+            learning_rate: 0.2,
+            max_depth: 4,
+            lambda: 1.0,
+            min_child_hess: 1.0,
+        }
+    }
+}
+
+/// One regression-tree node.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RegNode {
+    pub condition: Option<Condition>,
+    pub left: u32,
+    pub right: u32,
+    /// Leaf weight (logit contribution), meaningful for leaves.
+    pub weight: f64,
+}
+
+/// A regression tree of the boosted ensemble.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct RegTree {
+    pub nodes: Vec<RegNode>,
+}
+
+impl RegTree {
+    pub fn predict(&self, ds: &Dataset, row: usize) -> f64 {
+        let mut id = 0usize;
+        loop {
+            let node = &self.nodes[id];
+            match &node.condition {
+                None => return node.weight,
+                Some(Condition::NumLe { feature, threshold }) => {
+                    id = if ds.column(*feature).as_numerical()[row] <= *threshold {
+                        node.left as usize
+                    } else {
+                        node.right as usize
+                    };
+                }
+                Some(Condition::CatIn { feature, set }) => {
+                    id = if set.contains(ds.column(*feature).as_categorical()[row]) {
+                        node.left as usize
+                    } else {
+                        node.right as usize
+                    };
+                }
+            }
+        }
+    }
+
+    pub fn num_leaves(&self) -> usize {
+        self.nodes.iter().filter(|n| n.condition.is_none()).count()
+    }
+}
+
+/// A trained boosted ensemble (binary logistic).
+#[derive(Debug, Clone, PartialEq)]
+pub struct GbtModel {
+    pub trees: Vec<RegTree>,
+    pub learning_rate: f64,
+    pub base_score: f64,
+}
+
+impl GbtModel {
+    /// Raw logit for a row.
+    pub fn logit(&self, ds: &Dataset, row: usize) -> f64 {
+        self.base_score
+            + self.learning_rate * self.trees.iter().map(|t| t.predict(ds, row)).sum::<f64>()
+    }
+
+    /// P(class 1).
+    pub fn score(&self, ds: &Dataset, row: usize) -> f64 {
+        1.0 / (1.0 + (-self.logit(ds, row)).exp())
+    }
+
+    pub fn predict_scores(&self, ds: &Dataset) -> Vec<f64> {
+        (0..ds.num_rows()).map(|i| self.score(ds, i)).collect()
+    }
+
+    /// Mean logistic loss on a dataset.
+    pub fn logloss(&self, ds: &Dataset) -> f64 {
+        let mut sum = 0.0;
+        for i in 0..ds.num_rows() {
+            let p = self.score(ds, i).clamp(1e-12, 1.0 - 1e-12);
+            let y = ds.labels()[i] as f64;
+            sum -= y * p.ln() + (1.0 - y) * (1.0 - p).ln();
+        }
+        sum / ds.num_rows() as f64
+    }
+}
+
+/// GBT trainer. Presorts numerical columns once (shared across rounds,
+/// like DRF's dataset preparation).
+pub struct GbtTrainer<'a> {
+    ds: &'a Dataset,
+    params: GbtParams,
+    sorted: Vec<Option<Vec<SortedEntry>>>,
+    stats: IoStats,
+}
+
+impl<'a> GbtTrainer<'a> {
+    pub fn new(ds: &'a Dataset, params: GbtParams) -> Result<Self> {
+        anyhow::ensure!(ds.num_classes() == 2, "GBT supports binary labels only");
+        anyhow::ensure!(params.num_rounds > 0 && params.learning_rate > 0.0);
+        let sorted = (0..ds.num_features())
+            .map(|j| match ds.column(j) {
+                Column::Numerical(_) => Some(ds.column(j).presort()),
+                _ => None,
+            })
+            .collect();
+        Ok(Self {
+            ds,
+            params,
+            sorted,
+            stats: IoStats::new(),
+        })
+    }
+
+    pub fn stats(&self) -> &IoStats {
+        &self.stats
+    }
+
+    /// Train the ensemble.
+    pub fn train(&self) -> Result<GbtModel> {
+        let ds = self.ds;
+        let n = ds.num_rows();
+        let p0 = (ds.class_counts()[1] as f64 / n as f64).clamp(1e-6, 1.0 - 1e-6);
+        let base_score = (p0 / (1.0 - p0)).ln();
+        let mut logits = vec![base_score; n];
+        let mut model = GbtModel {
+            trees: Vec::with_capacity(self.params.num_rounds),
+            learning_rate: self.params.learning_rate,
+            base_score,
+        };
+        let mut grads = vec![0.0f64; n];
+        let mut hess = vec![0.0f64; n];
+        for _round in 0..self.params.num_rounds {
+            // Gradient refresh — the per-round 2-float-per-sample
+            // broadcast in the distributed setting.
+            for i in 0..n {
+                let p = 1.0 / (1.0 + (-logits[i]).exp());
+                grads[i] = p - ds.labels()[i] as f64;
+                hess[i] = (p * (1.0 - p)).max(1e-16);
+            }
+            self.stats.add_broadcast(n as u64 * 8, 1);
+
+            let tree = self.build_tree(&grads, &hess);
+            for i in 0..n {
+                logits[i] += self.params.learning_rate * tree.predict(ds, i);
+            }
+            model.trees.push(tree);
+        }
+        Ok(model)
+    }
+
+    /// One regression tree, breadth-first with row partitioning.
+    fn build_tree(&self, grads: &[f64], hess: &[f64]) -> RegTree {
+        let ds = self.ds;
+        let n = ds.num_rows();
+        let root_rows: Vec<u32> = (0..n as u32).collect();
+        let mut root_stats = GradStats::default();
+        for i in 0..n {
+            root_stats.add(grads[i], hess[i]);
+        }
+        let mut tree = RegTree {
+            nodes: vec![RegNode {
+                condition: None,
+                left: u32::MAX,
+                right: u32::MAX,
+                weight: root_stats.weight(self.params.lambda),
+            }],
+        };
+        let mut open: Vec<(u32, Vec<u32>, GradStats)> = vec![(0, root_rows, root_stats)];
+        let mut depth = 0u32;
+        while !open.is_empty() && depth < self.params.max_depth {
+            let mut next = Vec::new();
+            for (node_id, rows, stats) in std::mem::take(&mut open) {
+                let Some((cond, split)) = self.best_split(&rows, stats, grads, hess) else {
+                    continue;
+                };
+                let (mut lrows, mut rrows) = (Vec::new(), Vec::new());
+                match &cond {
+                    Condition::NumLe { feature, threshold } => {
+                        let vals = ds.column(*feature).as_numerical();
+                        for &i in &rows {
+                            if vals[i as usize] <= *threshold {
+                                lrows.push(i);
+                            } else {
+                                rrows.push(i);
+                            }
+                        }
+                    }
+                    Condition::CatIn { feature, set } => {
+                        let vals = ds.column(*feature).as_categorical();
+                        for &i in &rows {
+                            if set.contains(vals[i as usize]) {
+                                lrows.push(i);
+                            } else {
+                                rrows.push(i);
+                            }
+                        }
+                    }
+                }
+                let l = tree.nodes.len() as u32;
+                let r = l + 1;
+                tree.nodes.push(RegNode {
+                    condition: None,
+                    left: u32::MAX,
+                    right: u32::MAX,
+                    weight: split.left.weight(self.params.lambda),
+                });
+                tree.nodes.push(RegNode {
+                    condition: None,
+                    left: u32::MAX,
+                    right: u32::MAX,
+                    weight: split.right.weight(self.params.lambda),
+                });
+                let node = &mut tree.nodes[node_id as usize];
+                node.condition = Some(cond);
+                node.left = l;
+                node.right = r;
+                next.push((l, lrows, split.left));
+                next.push((r, rrows, split.right));
+            }
+            open = next;
+            depth += 1;
+        }
+        tree
+    }
+
+    /// Best regression split of a node across all features.
+    fn best_split(
+        &self,
+        rows: &[u32],
+        parent: GradStats,
+        grads: &[f64],
+        hess: &[f64],
+    ) -> Option<(Condition, RegSplit)> {
+        let ds = self.ds;
+        let in_node: std::collections::HashSet<u32> = rows.iter().copied().collect();
+        let mut best: Option<(Condition, RegSplit)> = None;
+        for j in 0..ds.num_features() {
+            let cand: Option<(Condition, RegSplit)> = match ds.column(j) {
+                Column::Numerical(_) => {
+                    let entries: Vec<SortedEntry> = self.sorted[j]
+                        .as_ref()
+                        .unwrap()
+                        .iter()
+                        .filter(|e| in_node.contains(&e.sample))
+                        .copied()
+                        .collect();
+                    self.stats.add_disk_read(entries.len() as u64 * 8);
+                    best_regression_split(
+                        &entries,
+                        grads,
+                        hess,
+                        parent,
+                        self.params.lambda,
+                        self.params.min_child_hess,
+                    )
+                    .map(|s| {
+                        (
+                            Condition::NumLe {
+                                feature: j,
+                                threshold: s.threshold,
+                            },
+                            s,
+                        )
+                    })
+                }
+                Column::Categorical { values, arity } => {
+                    self.stats.add_disk_read(rows.len() as u64 * 4);
+                    best_categorical_regression(
+                        rows.iter().map(|&i| {
+                            (values[i as usize], grads[i as usize], hess[i as usize])
+                        }),
+                        parent,
+                        self.params.lambda,
+                        self.params.min_child_hess,
+                    )
+                    .map(|s| {
+                        (
+                            Condition::CatIn {
+                                feature: j,
+                                set: CategorySet::from_values(*arity, s.values.iter().copied()),
+                            },
+                            RegSplit {
+                                threshold: 0.0,
+                                gain: s.gain,
+                                left: s.left,
+                                right: s.right,
+                            },
+                        )
+                    })
+                }
+            };
+            if let Some((c, s)) = cand {
+                let better = match &best {
+                    None => true,
+                    Some((bc, bs)) => {
+                        s.gain > bs.gain || (s.gain == bs.gain && c.feature() < bc.feature())
+                    }
+                };
+                if better {
+                    best = Some((c, s));
+                }
+            }
+        }
+        best
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{Family, LeoLikeSpec, SyntheticSpec};
+    use crate::metrics::auc;
+
+    #[test]
+    fn gbt_fits_xor() {
+        // XOR needs interactions: single stumps fail, depth-2 boosting
+        // succeeds.
+        let train = SyntheticSpec::new(Family::Xor { informative: 2 }, 2000, 4, 1).generate();
+        let test = SyntheticSpec::new(Family::Xor { informative: 2 }, 1000, 4, 2).generate();
+        let model = GbtTrainer::new(
+            &train,
+            GbtParams {
+                num_rounds: 40,
+                max_depth: 3,
+                ..Default::default()
+            },
+        )
+        .unwrap()
+        .train()
+        .unwrap();
+        let a = auc(&model.predict_scores(&test), test.labels());
+        assert!(a > 0.95, "GBT should crack XOR, AUC {a}");
+    }
+
+    #[test]
+    fn training_loss_decreases() {
+        let ds = SyntheticSpec::new(Family::Majority { informative: 5 }, 1500, 8, 3).generate();
+        let short = GbtTrainer::new(
+            &ds,
+            GbtParams {
+                num_rounds: 5,
+                ..Default::default()
+            },
+        )
+        .unwrap()
+        .train()
+        .unwrap();
+        let long = GbtTrainer::new(
+            &ds,
+            GbtParams {
+                num_rounds: 40,
+                ..Default::default()
+            },
+        )
+        .unwrap()
+        .train()
+        .unwrap();
+        assert!(
+            long.logloss(&ds) < short.logloss(&ds),
+            "more rounds must reduce training loss: {} vs {}",
+            long.logloss(&ds),
+            short.logloss(&ds)
+        );
+    }
+
+    #[test]
+    fn gbt_handles_mixed_types() {
+        let spec = LeoLikeSpec::new(6000, 4);
+        let ds = spec.generate();
+        let test = spec.generate_rows(6000, 3000);
+        let model = GbtTrainer::new(
+            &ds,
+            GbtParams {
+                num_rounds: 30,
+                max_depth: 4,
+                ..Default::default()
+            },
+        )
+        .unwrap()
+        .train()
+        .unwrap();
+        let a = auc(&model.predict_scores(&test), test.labels());
+        assert!(a > 0.6, "GBT on leo-like mixed data, AUC {a}");
+        // Gradient broadcasts accounted: one per round.
+        // (net_broadcasts counter comes from the trainer stats.)
+    }
+
+    #[test]
+    fn rejects_multiclass() {
+        let ds = crate::data::Dataset::new(
+            crate::data::Schema::new(vec![crate::data::ColumnSpec::numerical("x")], 3),
+            vec![crate::data::Column::Numerical(vec![1.0, 2.0, 3.0])],
+            vec![0, 1, 2],
+        );
+        assert!(GbtTrainer::new(&ds, GbtParams::default()).is_err());
+    }
+
+    #[test]
+    fn gradient_broadcast_accounted() {
+        let ds = SyntheticSpec::new(Family::Xor { informative: 2 }, 500, 4, 1).generate();
+        let trainer = GbtTrainer::new(
+            &ds,
+            GbtParams {
+                num_rounds: 7,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let _ = trainer.train().unwrap();
+        assert_eq!(trainer.stats().net_broadcasts(), 7);
+        assert_eq!(trainer.stats().net_bytes(), 7 * 500 * 8);
+    }
+}

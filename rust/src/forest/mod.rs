@@ -1,0 +1,258 @@
+//! The Random Forest model: training entry point, prediction,
+//! serialization, and feature importance.
+
+pub mod gbt;
+pub mod importance;
+pub mod oob;
+
+use crate::config::TrainConfig;
+pub use crate::config::{ForestParams, TopologyParams};
+use crate::coordinator::{Manager, TrainReport};
+use crate::data::Dataset;
+use crate::tree::Tree;
+use crate::Result;
+use anyhow::Context;
+use std::path::Path;
+
+/// A trained Random Forest.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RandomForest {
+    pub trees: Vec<Tree>,
+    pub num_classes: u32,
+}
+
+impl RandomForest {
+    /// Train with default topology on the in-process distributed runtime.
+    pub fn train(ds: &Dataset, params: &ForestParams) -> Result<RandomForest> {
+        let cfg = TrainConfig {
+            forest: *params,
+            ..Default::default()
+        };
+        Ok(Self::train_with_config(ds, &cfg)?.0)
+    }
+
+    /// Train with a full [`TrainConfig`]; also returns the training
+    /// report (per-level stats, I/O and network counters).
+    pub fn train_with_config(
+        ds: &Dataset,
+        cfg: &TrainConfig,
+    ) -> Result<(RandomForest, TrainReport)> {
+        let manager = Manager::new(cfg.clone())?;
+        let (trees, report) = manager.train(ds)?;
+        Ok((
+            RandomForest {
+                trees,
+                num_classes: ds.num_classes(),
+            },
+            report,
+        ))
+    }
+
+    pub fn num_trees(&self) -> usize {
+        self.trees.len()
+    }
+
+    /// Forest score for one row: mean of tree scores (P(class 1)).
+    pub fn score(&self, row: &crate::data::dataset::RowView<'_>) -> f64 {
+        if self.trees.is_empty() {
+            return 0.5;
+        }
+        self.trees.iter().map(|t| t.score(row)).sum::<f64>() / self.trees.len() as f64
+    }
+
+    /// Forest score with every tree truncated at `max_depth` (paper
+    /// Figure 3's per-depth AUC curves, no retraining needed).
+    pub fn score_at_depth(
+        &self,
+        row: &crate::data::dataset::RowView<'_>,
+        max_depth: u32,
+    ) -> f64 {
+        if self.trees.is_empty() {
+            return 0.5;
+        }
+        self.trees
+            .iter()
+            .map(|t| t.score_at_depth(row, max_depth))
+            .sum::<f64>()
+            / self.trees.len() as f64
+    }
+
+    /// Scores for every row of a dataset.
+    pub fn predict_scores(&self, ds: &Dataset) -> Vec<f64> {
+        (0..ds.num_rows()).map(|i| self.score(&ds.row(i))).collect()
+    }
+
+    /// Depth-truncated scores for every row.
+    pub fn predict_scores_at_depth(&self, ds: &Dataset, max_depth: u32) -> Vec<f64> {
+        (0..ds.num_rows())
+            .map(|i| self.score_at_depth(&ds.row(i), max_depth))
+            .collect()
+    }
+
+    /// Majority-vote class predictions.
+    pub fn predict_classes(&self, ds: &Dataset) -> Vec<u32> {
+        (0..ds.num_rows())
+            .map(|i| {
+                let row = ds.row(i);
+                let mut votes = vec![0u32; self.num_classes as usize];
+                for t in &self.trees {
+                    votes[t.predict_class(&row) as usize] += 1;
+                }
+                votes
+                    .iter()
+                    .enumerate()
+                    .max_by_key(|(c, &v)| (v, usize::MAX - c)) // ties to lower class
+                    .map(|(c, _)| c as u32)
+                    .unwrap_or(0)
+            })
+            .collect()
+    }
+
+    /// Total node count across trees.
+    pub fn num_nodes(&self) -> usize {
+        self.trees.iter().map(|t| t.num_nodes()).sum()
+    }
+
+    /// Mean leaves per tree (Table 2's "Leaves" column).
+    pub fn mean_leaves(&self) -> f64 {
+        if self.trees.is_empty() {
+            return 0.0;
+        }
+        self.trees.iter().map(|t| t.num_leaves() as f64).sum::<f64>() / self.trees.len() as f64
+    }
+
+    /// Mean node density per tree (Table 2).
+    pub fn mean_node_density(&self) -> f64 {
+        if self.trees.is_empty() {
+            return 0.0;
+        }
+        self.trees.iter().map(|t| t.node_density()).sum::<f64>() / self.trees.len() as f64
+    }
+
+    /// Mean sample density per tree (Table 2).
+    pub fn mean_sample_density(&self) -> f64 {
+        if self.trees.is_empty() {
+            return 0.0;
+        }
+        self.trees.iter().map(|t| t.sample_density()).sum::<f64>() / self.trees.len() as f64
+    }
+
+    pub fn to_json(&self) -> Result<String> {
+        let mut o = crate::util::Json::object();
+        o.set(
+            "num_classes",
+            crate::util::Json::from_u64(self.num_classes as u64),
+        )
+        .set(
+            "trees",
+            crate::util::Json::Arr(self.trees.iter().map(|t| t.to_json_value()).collect()),
+        );
+        Ok(o.to_string())
+    }
+
+    pub fn from_json(s: &str) -> Result<Self> {
+        let v = crate::util::Json::parse(s)?;
+        let trees = v
+            .get("trees")?
+            .as_arr()?
+            .iter()
+            .map(Tree::from_json_value)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(RandomForest {
+            trees,
+            num_classes: v.get("num_classes")?.as_u32()?,
+        })
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_json()?)
+            .with_context(|| format!("saving forest to {}", path.display()))
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        Self::from_json(
+            &std::fs::read_to_string(path)
+                .with_context(|| format!("loading forest from {}", path.display()))?,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{Family, SyntheticSpec};
+    use crate::metrics::auc;
+    use crate::rng::BaggingMode;
+
+    fn params(trees: usize, seed: u64) -> ForestParams {
+        ForestParams {
+            num_trees: trees,
+            max_depth: 8,
+            seed,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn forest_learns_majority() {
+        let train = SyntheticSpec::new(Family::Majority { informative: 5 }, 2000, 8, 1).generate();
+        let test = SyntheticSpec::new(Family::Majority { informative: 5 }, 1000, 8, 2).generate();
+        let f = RandomForest::train(&train, &params(10, 3)).unwrap();
+        let a = auc(&f.predict_scores(&test), test.labels());
+        assert!(a > 0.9, "forest should learn majority, AUC = {a}");
+    }
+
+    #[test]
+    fn more_trees_help_on_xor() {
+        let train = SyntheticSpec::new(Family::Xor { informative: 3 }, 3000, 6, 1).generate();
+        let test = SyntheticSpec::new(Family::Xor { informative: 3 }, 1000, 6, 2).generate();
+        let f1 = RandomForest::train(&train, &params(1, 3)).unwrap();
+        let f10 = RandomForest::train(&train, &params(10, 3)).unwrap();
+        let a1 = auc(&f1.predict_scores(&test), test.labels());
+        let a10 = auc(&f10.predict_scores(&test), test.labels());
+        assert!(a10 > a1 - 0.02, "more trees should not hurt: {a1} vs {a10}");
+        assert!(a10 > 0.75, "10-tree forest should crack 3-XOR, AUC = {a10}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let ds = SyntheticSpec::new(Family::Xor { informative: 2 }, 500, 4, 1).generate();
+        let f1 = RandomForest::train(&ds, &params(3, 7)).unwrap();
+        let f2 = RandomForest::train(&ds, &params(3, 7)).unwrap();
+        assert_eq!(f1, f2);
+        let f3 = RandomForest::train(&ds, &params(3, 8)).unwrap();
+        assert_ne!(f1, f3);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let ds = SyntheticSpec::new(Family::Xor { informative: 2 }, 200, 4, 1).generate();
+        let f = RandomForest::train(&ds, &params(2, 7)).unwrap();
+        let back = RandomForest::from_json(&f.to_json().unwrap()).unwrap();
+        assert_eq!(f, back);
+    }
+
+    #[test]
+    fn depth_truncated_scores_interpolate() {
+        let ds = SyntheticSpec::new(Family::Majority { informative: 3 }, 800, 6, 1).generate();
+        let mut p = params(5, 7);
+        p.bagging = BaggingMode::Poisson;
+        let f = RandomForest::train(&ds, &p).unwrap();
+        let full = f.predict_scores(&ds);
+        let deep = f.predict_scores_at_depth(&ds, 50);
+        assert_eq!(full, deep, "depth beyond tree depth = full scores");
+        let shallow = f.predict_scores_at_depth(&ds, 0);
+        assert!(shallow.iter().all(|&s| (s - shallow[0]).abs() < 1e-9),
+            "depth 0 = root prior for everyone");
+    }
+
+    #[test]
+    fn table2_metric_helpers() {
+        let ds = SyntheticSpec::new(Family::Majority { informative: 3 }, 500, 6, 1).generate();
+        let f = RandomForest::train(&ds, &params(3, 7)).unwrap();
+        assert!(f.mean_leaves() >= 1.0);
+        assert!(f.mean_node_density() > 0.0 && f.mean_node_density() <= 1.0);
+        assert!((0.0..=1.0).contains(&f.mean_sample_density()));
+        assert!(f.num_nodes() >= f.num_trees());
+    }
+}

@@ -1,0 +1,112 @@
+//! Out-of-bag (OOB) evaluation — a free byproduct of DRF's seeded
+//! bagging (§2.2): whether a sample is out-of-bag for a tree is a pure
+//! function of `(seed, tree, sample)`, so OOB scores need no stored
+//! masks and can be computed by any worker (here: the manager after
+//! training).
+
+use super::RandomForest;
+use crate::data::Dataset;
+use crate::rng::{Bagger, BaggingMode};
+
+/// OOB score per training row: the mean P(class 1) over the trees for
+/// which the row was out-of-bag. Rows that are in-bag everywhere get
+/// `None`.
+pub fn oob_scores(
+    forest: &RandomForest,
+    ds: &Dataset,
+    seed: u64,
+    bagging: BaggingMode,
+) -> Vec<Option<f64>> {
+    let bagger = Bagger::new(seed, bagging);
+    (0..ds.num_rows())
+        .map(|i| {
+            let row = ds.row(i);
+            let mut sum = 0.0;
+            let mut count = 0u32;
+            for (t, tree) in forest.trees.iter().enumerate() {
+                if !bagger.in_bag(t as u32, i as u64) {
+                    sum += tree.score(&row);
+                    count += 1;
+                }
+            }
+            (count > 0).then(|| sum / count as f64)
+        })
+        .collect()
+}
+
+/// OOB AUC over the rows that have at least one OOB tree.
+pub fn oob_auc(
+    forest: &RandomForest,
+    ds: &Dataset,
+    seed: u64,
+    bagging: BaggingMode,
+) -> Option<f64> {
+    let scores = oob_scores(forest, ds, seed, bagging);
+    let mut s = Vec::new();
+    let mut y = Vec::new();
+    for (i, sc) in scores.iter().enumerate() {
+        if let Some(v) = sc {
+            s.push(*v);
+            y.push(ds.labels()[i]);
+        }
+    }
+    (!s.is_empty()).then(|| crate::metrics::auc(&s, &y))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ForestParams;
+    use crate::data::synthetic::{Family, SyntheticSpec};
+    use crate::metrics::auc;
+
+    #[test]
+    fn oob_estimates_generalization() {
+        let train = SyntheticSpec::new(Family::Majority { informative: 5 }, 4000, 10, 1).generate();
+        let test = SyntheticSpec::new(Family::Majority { informative: 5 }, 4000, 10, 2).generate();
+        let params = ForestParams {
+            num_trees: 20,
+            max_depth: 10,
+            seed: 7,
+            ..Default::default()
+        };
+        let forest = crate::forest::RandomForest::train(&train, &params).unwrap();
+        let oob = oob_auc(&forest, &train, params.seed, params.bagging).unwrap();
+        let test_auc = auc(&forest.predict_scores(&test), test.labels());
+        // OOB tracks held-out performance.
+        assert!(
+            (oob - test_auc).abs() < 0.06,
+            "OOB {oob:.3} should estimate test {test_auc:.3}"
+        );
+    }
+
+    #[test]
+    fn without_bagging_no_oob() {
+        let ds = SyntheticSpec::new(Family::Xor { informative: 2 }, 200, 4, 1).generate();
+        let params = ForestParams {
+            num_trees: 3,
+            bagging: BaggingMode::None,
+            seed: 7,
+            ..Default::default()
+        };
+        let forest = crate::forest::RandomForest::train(&ds, &params).unwrap();
+        assert!(oob_auc(&forest, &ds, params.seed, BaggingMode::None).is_none());
+        assert!(oob_scores(&forest, &ds, params.seed, BaggingMode::None)
+            .iter()
+            .all(|s| s.is_none()));
+    }
+
+    #[test]
+    fn oob_fraction_matches_poisson() {
+        let ds = SyntheticSpec::new(Family::Xor { informative: 2 }, 5000, 4, 1).generate();
+        let params = ForestParams {
+            num_trees: 1,
+            seed: 7,
+            ..Default::default()
+        };
+        let forest = crate::forest::RandomForest::train(&ds, &params).unwrap();
+        let scores = oob_scores(&forest, &ds, params.seed, params.bagging);
+        let frac = scores.iter().filter(|s| s.is_some()).count() as f64 / 5000.0;
+        assert!((frac - 0.368).abs() < 0.03, "single-tree OOB fraction {frac}");
+    }
+}

@@ -1,0 +1,54 @@
+//! # drf — Exact Distributed Random Forest
+//!
+//! A production-quality reproduction of *"Exact Distributed Training:
+//! Random Forest with Billions of Examples"* (Guillame-Bert & Teytaud,
+//! 2018). DRF trains Random Forests (and other decision-forest models)
+//! **exactly** — producing bit-identical models to the classical
+//! sequential algorithm — while distributing both the computation and the
+//! dataset across workers:
+//!
+//! * the dataset is partitioned **by column** across *splitter* workers;
+//! * each tree is driven depth-level-by-depth-level by a *tree builder*;
+//! * a *manager* coordinates tree builders and assembles the forest;
+//! * bagging uses a deterministic seeded PRNG so no sample indices are
+//!   ever shipped over the network (§2.2 of the paper);
+//! * the sample→leaf mapping ("class list") is bit-packed to
+//!   `n·⌈log2(ℓ+1)⌉` bits (§2.3);
+//! * per depth level, exactly one bit per live sample is broadcast to
+//!   update class lists (§2.4, Alg. 2 step 5-7).
+//!
+//! The numeric hot-spot — scoring all candidate thresholds of a
+//! presorted feature against cumulative label histograms (Alg. 1) — is
+//! additionally available as an AOT-compiled XLA/Pallas artifact executed
+//! through PJRT (see [`runtime`] and [`splits::xla_scorer`]); the exact
+//! scalar scorer remains the default and the correctness oracle.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use drf::data::synthetic::{SyntheticSpec, Family};
+//! use drf::forest::{RandomForest, ForestParams};
+//!
+//! let ds = SyntheticSpec::new(Family::Xor { informative: 4 }, 10_000, 8, 42).generate();
+//! let params = ForestParams { num_trees: 10, max_depth: 16, ..Default::default() };
+//! let forest = RandomForest::train(&ds, &params).unwrap();
+//! let auc = drf::metrics::auc(&forest.predict_scores(&ds), ds.labels());
+//! println!("train AUC = {auc:.3}");
+//! ```
+
+pub mod baselines;
+pub mod classlist;
+pub mod complexity;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod forest;
+pub mod metrics;
+pub mod rng;
+pub mod runtime;
+pub mod splits;
+pub mod tree;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

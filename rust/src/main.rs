@@ -1,0 +1,377 @@
+//! `drf` — the DRF leader binary.
+//!
+//! Subcommands:
+//!
+//! * `train`     — train a forest on a synthetic family or the Leo-like
+//!                 dataset and save it as JSON (plus a training report);
+//! * `evaluate`  — score a saved forest on a freshly generated test set;
+//! * `importance`— print MDI feature importances of a saved forest;
+//! * `info`      — runtime/platform info (PJRT client, artifacts).
+//!
+//! Examples:
+//!
+//! ```text
+//! drf train --family xor --informative 3 --rows 10000 --features 6 \
+//!     --trees 10 --depth 12 --out /tmp/forest.json
+//! drf train --family leo --rows 100000 --trees 3 --depth 20 \
+//!     --storage disk --report /tmp/report.json
+//! drf evaluate --model /tmp/forest.json --family xor --informative 3 \
+//!     --rows 5000 --features 6 --seed 99
+//! ```
+
+use anyhow::{bail, Context, Result};
+use drf::config::{Engine, ScorerBackend, StorageMode, TrainConfig};
+use drf::data::synthetic::{Family, LeoLikeSpec, SyntheticSpec};
+use drf::data::Dataset;
+use drf::forest::importance::{mdi_importance, rank_features};
+use drf::forest::RandomForest;
+use drf::metrics::auc;
+use drf::rng::{BaggingMode, FeatureSampling};
+use drf::util::cli::Args;
+use drf::util::Json;
+
+const TRAIN_FLAGS: &[&str] = &[
+    "csv",
+    "label-column",
+    "data",
+    "family",
+    "informative",
+    "rows",
+    "features",
+    "seed",
+    "trees",
+    "depth",
+    "min-records",
+    "candidates",
+    "sampling",
+    "bagging",
+    "splitters",
+    "redundancy",
+    "builders",
+    "latency-us",
+    "storage",
+    "engine",
+    "scorer",
+    "artifacts-dir",
+    "config",
+    "out",
+    "report",
+];
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(&argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run(argv: &[String]) -> Result<()> {
+    let command = argv.first().map(|s| s.as_str()).unwrap_or("help");
+    match command {
+        "train" => cmd_train(&argv[1..]),
+        "generate" => cmd_generate(&argv[1..]),
+        "evaluate" => cmd_evaluate(&argv[1..]),
+        "importance" => cmd_importance(&argv[1..]),
+        "info" => cmd_info(),
+        "help" | "--help" | "-h" => {
+            print!("{}", HELP);
+            Ok(())
+        }
+        other => bail!("unknown command '{other}' (try `drf help`)"),
+    }
+}
+
+const HELP: &str = "\
+drf — exact distributed Random Forest (DRF)
+
+USAGE:
+  drf train [--family xor|majority|needle|linear|leo] [--rows N]
+            [--features M] [--informative K] [--seed S]
+            [--trees T] [--depth D] [--min-records R] [--candidates M']
+            [--sampling per_node|per_depth|all] [--bagging poisson|none]
+            [--splitters W] [--redundancy D] [--builders B]
+            [--latency-us U] [--storage memory|disk]
+            [--engine direct|threaded|tcp] [--scorer native|xla]
+            [--artifacts-dir DIR] [--config cfg.json]
+            [--out forest.json] [--report report.json]
+            [--csv file.csv [--label-column NAME]] [--data dataset-dir]
+  drf generate [--family ...] [--rows N] [--seed S] --out-dir DIR
+  drf evaluate --model forest.json [--family ...|--csv ...|--data DIR]
+  drf importance --model forest.json [--features M]
+  drf info
+
+Data sources (train/evaluate): --csv loads a CSV file (schema inferred,
+label column by name); --data loads a dataset directory written by
+`drf generate`; otherwise a synthetic family is generated in memory.
+";
+
+/// Build the dataset described by the common data flags.
+fn dataset_from_args(args: &Args) -> Result<(Dataset, String)> {
+    if let Some(path) = args.get("csv") {
+        let opts = drf::data::csv::CsvOptions {
+            label_column: args.get_string("label-column", "label"),
+            ..Default::default()
+        };
+        let ds = drf::data::csv::load_csv(std::path::Path::new(path), &opts)?;
+        return Ok((ds, format!("csv:{path}")));
+    }
+    if let Some(dir) = args.get("data") {
+        let ds = drf::data::store::load_dataset(
+            std::path::Path::new(dir),
+            drf::data::io_stats::IoStats::new(),
+        )?;
+        return Ok((ds, format!("store:{dir}")));
+    }
+    let family = args.get_string("family", "majority");
+    let rows = args.get_usize("rows", 10_000)?;
+    let seed = args.get_u64("seed", 1)?;
+    let informative = args.get_usize("informative", 3)?;
+    let ds = match family.as_str() {
+        "leo" => LeoLikeSpec::new(rows, seed).generate(),
+        name => {
+            let features = args.get_usize("features", informative + 3)?;
+            let fam = match name {
+                "xor" => Family::Xor { informative },
+                "majority" => Family::Majority { informative },
+                "needle" => Family::Needle { informative },
+                "linear" => Family::LinearCont { informative },
+                other => bail!("unknown family '{other}'"),
+            };
+            SyntheticSpec::new(fam, rows, features, seed).generate()
+        }
+    };
+    Ok((ds, family))
+}
+
+fn cmd_train(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv, TRAIN_FLAGS)?;
+    let mut cfg = match args.get("config") {
+        Some(path) => TrainConfig::load(std::path::Path::new(path))
+            .with_context(|| format!("loading config {path}"))?,
+        None => TrainConfig::default(),
+    };
+    // CLI overrides.
+    cfg.forest.num_trees = args.get_usize("trees", cfg.forest.num_trees)?;
+    cfg.forest.max_depth = args.get_u32("depth", cfg.forest.max_depth)?;
+    cfg.forest.min_records = args.get_u64("min-records", cfg.forest.min_records)?;
+    cfg.forest.seed = args.get_u64("seed", cfg.forest.seed)?;
+    if let Some(v) = args.get("candidates") {
+        cfg.forest.num_candidate_features = Some(v.parse()?);
+    }
+    if let Some(v) = args.get("sampling") {
+        cfg.forest.feature_sampling = FeatureSampling::parse(v)?;
+    }
+    if let Some(v) = args.get("bagging") {
+        cfg.forest.bagging = BaggingMode::parse(v)?;
+    }
+    if let Some(v) = args.get("splitters") {
+        cfg.topology.num_splitters = Some(v.parse()?);
+    }
+    cfg.topology.redundancy = args.get_usize("redundancy", cfg.topology.redundancy)?;
+    cfg.topology.tree_builders = args.get_usize("builders", cfg.topology.tree_builders)?;
+    cfg.topology.latency_us = args.get_u64("latency-us", cfg.topology.latency_us)?;
+    if let Some(v) = args.get("storage") {
+        cfg.storage = match v {
+            "memory" => StorageMode::Memory,
+            "disk" => StorageMode::Disk,
+            _ => bail!("storage must be memory|disk"),
+        };
+    }
+    if let Some(v) = args.get("engine") {
+        cfg.engine = match v {
+            "direct" => Engine::Direct,
+            "threaded" => Engine::Threaded,
+            "tcp" => Engine::Tcp,
+            _ => bail!("engine must be direct|threaded|tcp"),
+        };
+    }
+    if let Some(v) = args.get("scorer") {
+        cfg.scorer = match v {
+            "native" => ScorerBackend::Native,
+            "xla" => ScorerBackend::Xla,
+            _ => bail!("scorer must be native|xla"),
+        };
+    }
+    if let Some(v) = args.get("artifacts-dir") {
+        cfg.artifacts_dir = Some(v.into());
+    }
+    cfg.validate()?;
+
+    let (ds, family) = dataset_from_args(&args)?;
+    println!(
+        "training {} trees (depth<={}) on {} [{} rows x {} features], {} splitters",
+        cfg.forest.num_trees,
+        cfg.forest.max_depth,
+        family,
+        ds.num_rows(),
+        ds.num_features(),
+        cfg.topology.splitters_for(ds.num_features()),
+    );
+    let (forest, report) = RandomForest::train_with_config(&ds, &cfg)?;
+    let train_auc = auc(&forest.predict_scores(&ds), ds.labels());
+    println!(
+        "done in {:.2}s: {} nodes, {:.0} leaves/tree, node density {:.3}, sample density {:.3}, train AUC {:.4}",
+        report.wall_seconds,
+        forest.num_nodes(),
+        forest.mean_leaves(),
+        forest.mean_node_density(),
+        forest.mean_sample_density(),
+        train_auc,
+    );
+    println!(
+        "network: {} bytes in {} messages ({} broadcasts)",
+        report.net.net_bytes, report.net.net_messages, report.net.net_broadcasts
+    );
+
+    if let Some(path) = args.get("out") {
+        forest.save(std::path::Path::new(path))?;
+        println!("forest saved to {path}");
+    }
+    if let Some(path) = args.get("report") {
+        std::fs::write(path, report_to_json(&report).to_string())?;
+        println!("report saved to {path}");
+    }
+    Ok(())
+}
+
+/// Serialize a TrainReport for the --report flag.
+fn report_to_json(report: &drf::coordinator::TrainReport) -> Json {
+    let mut o = Json::object();
+    o.set("wall_seconds", Json::Num(report.wall_seconds))
+        .set("num_splitters", Json::from_usize(report.num_splitters))
+        .set("net_bytes", Json::from_u64(report.net.net_bytes))
+        .set("net_messages", Json::from_u64(report.net.net_messages))
+        .set(
+            "trees",
+            Json::Arr(
+                report
+                    .per_tree
+                    .iter()
+                    .map(|t| {
+                        let mut tj = Json::object();
+                        tj.set("tree", Json::from_u64(t.tree as u64))
+                            .set("seconds", Json::Num(t.seconds))
+                            .set(
+                                "levels",
+                                Json::Arr(
+                                    t.levels
+                                        .iter()
+                                        .map(|l| {
+                                            let mut lj = Json::object();
+                                            lj.set("depth", Json::from_u64(l.depth as u64))
+                                                .set("seconds", Json::Num(l.seconds))
+                                                .set(
+                                                    "open_before",
+                                                    Json::from_u64(l.open_before as u64),
+                                                )
+                                                .set(
+                                                    "open_after",
+                                                    Json::from_u64(l.open_after as u64),
+                                                )
+                                                .set(
+                                                    "num_splits",
+                                                    Json::from_u64(l.num_splits as u64),
+                                                )
+                                                .set(
+                                                    "m_double_prime",
+                                                    Json::from_usize(l.m_double_prime),
+                                                )
+                                                .set("z", Json::from_usize(l.z_max_load))
+                                                .set("net_bytes", Json::from_u64(l.net_bytes))
+                                                .set(
+                                                    "open_weight",
+                                                    Json::from_u64(l.open_weight),
+                                                );
+                                            lj
+                                        })
+                                        .collect(),
+                                ),
+                            );
+                        tj
+                    })
+                    .collect(),
+            ),
+        );
+    o
+}
+
+fn cmd_generate(argv: &[String]) -> Result<()> {
+    let mut flags = TRAIN_FLAGS.to_vec();
+    flags.push("out-dir");
+    let args = Args::parse(argv, &flags)?;
+    let out = args.get("out-dir").context("--out-dir is required")?;
+    let (ds, family) = dataset_from_args(&args)?;
+    drf::data::store::save_dataset(
+        &ds,
+        std::path::Path::new(out),
+        drf::data::io_stats::IoStats::new(),
+    )?;
+    println!(
+        "wrote {} ({} rows x {} features, presorted) to {out}",
+        family,
+        ds.num_rows(),
+        ds.num_features()
+    );
+    Ok(())
+}
+
+fn cmd_evaluate(argv: &[String]) -> Result<()> {
+    let mut flags = TRAIN_FLAGS.to_vec();
+    flags.push("model");
+    let args = Args::parse(argv, &flags)?;
+    let model = args.get("model").context("--model is required")?;
+    let forest = RandomForest::load(std::path::Path::new(model))?;
+    let (ds, family) = dataset_from_args(&args)?;
+    let scores = forest.predict_scores(&ds);
+    let a = auc(&scores, ds.labels());
+    let preds = forest.predict_classes(&ds);
+    let acc = drf::metrics::accuracy(&preds, ds.labels());
+    println!(
+        "{}: {} rows — AUC {:.4}, accuracy {:.4} ({} trees)",
+        family,
+        ds.num_rows(),
+        a,
+        acc,
+        forest.num_trees()
+    );
+    Ok(())
+}
+
+fn cmd_importance(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv, &["model", "features"])?;
+    let model = args.get("model").context("--model is required")?;
+    let forest = RandomForest::load(std::path::Path::new(model))?;
+    let m = args.get_usize(
+        "features",
+        forest
+            .trees
+            .iter()
+            .flat_map(|t| t.nodes.iter())
+            .filter_map(|n| n.condition.as_ref().map(|c| c.feature() + 1))
+            .max()
+            .unwrap_or(1),
+    )?;
+    let imp = mdi_importance(&forest, m);
+    for f in rank_features(&imp) {
+        println!("feature {f}: {:.4}", imp[f]);
+    }
+    Ok(())
+}
+
+fn cmd_info() -> Result<()> {
+    println!("drf {} — exact distributed Random Forest", env!("CARGO_PKG_VERSION"));
+    match drf::runtime::XlaRuntime::cpu() {
+        Ok(rt) => println!("PJRT platform: {}", rt.platform_name()),
+        Err(e) => println!("PJRT unavailable: {e}"),
+    }
+    for (b, t) in [(16usize, 512usize), (4, 64)] {
+        let name = drf::splits::xla_scorer::XlaScorer::artifact_name(b, t);
+        let path = std::path::Path::new("artifacts").join(&name);
+        println!(
+            "artifact {name}: {}",
+            if path.exists() { "present" } else { "missing (run `make artifacts`)" }
+        );
+    }
+    Ok(())
+}

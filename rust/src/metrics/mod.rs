@@ -1,0 +1,136 @@
+//! Evaluation metrics: AUC (the paper's headline metric), accuracy, and
+//! simple timing helpers used by the benches.
+
+/// Area under the ROC curve for binary labels, computed exactly via the
+/// Mann-Whitney U statistic with average ranks for tied scores.
+///
+/// Returns 0.5 for degenerate inputs (a single class), matching the
+/// paper's convention that random/majority labelling has AUC ½.
+pub fn auc(scores: &[f64], labels: &[u32]) -> f64 {
+    assert_eq!(scores.len(), labels.len());
+    let n_pos = labels.iter().filter(|&&y| y == 1).count();
+    let n_neg = labels.len() - n_pos;
+    if n_pos == 0 || n_neg == 0 {
+        return 0.5;
+    }
+    // Sort indices by score; assign average ranks to ties.
+    let mut idx: Vec<usize> = (0..scores.len()).collect();
+    idx.sort_by(|&a, &b| {
+        scores[a]
+            .partial_cmp(&scores[b])
+            .unwrap_or(std::cmp::Ordering::Equal)
+    });
+    let mut rank_sum_pos = 0.0f64;
+    let mut i = 0;
+    while i < idx.len() {
+        let mut j = i;
+        while j + 1 < idx.len() && scores[idx[j + 1]] == scores[idx[i]] {
+            j += 1;
+        }
+        // Ranks are 1-based; tied block [i..=j] gets the average rank.
+        let avg_rank = (i + j + 2) as f64 / 2.0;
+        for &k in &idx[i..=j] {
+            if labels[k] == 1 {
+                rank_sum_pos += avg_rank;
+            }
+        }
+        i = j + 1;
+    }
+    let u = rank_sum_pos - (n_pos as f64 * (n_pos as f64 + 1.0)) / 2.0;
+    u / (n_pos as f64 * n_neg as f64)
+}
+
+/// Classification accuracy of hard predictions.
+pub fn accuracy(predictions: &[u32], labels: &[u32]) -> f64 {
+    assert_eq!(predictions.len(), labels.len());
+    if labels.is_empty() {
+        return 0.0;
+    }
+    predictions
+        .iter()
+        .zip(labels)
+        .filter(|(p, y)| p == y)
+        .count() as f64
+        / labels.len() as f64
+}
+
+/// Wall-clock stopwatch for the benches and per-depth timing of Fig 3.
+#[derive(Debug)]
+pub struct Stopwatch {
+    start: std::time::Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Self {
+            start: std::time::Instant::now(),
+        }
+    }
+
+    pub fn seconds(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn restart(&mut self) -> f64 {
+        let s = self.seconds();
+        self.start = std::time::Instant::now();
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn auc_perfect_and_inverted() {
+        let labels = [0u32, 0, 1, 1];
+        assert_eq!(auc(&[0.1, 0.2, 0.8, 0.9], &labels), 1.0);
+        assert_eq!(auc(&[0.9, 0.8, 0.2, 0.1], &labels), 0.0);
+    }
+
+    #[test]
+    fn auc_random_is_half() {
+        // All scores equal -> AUC must be exactly 0.5 via tie handling.
+        let labels = [0u32, 1, 0, 1, 1, 0];
+        assert_eq!(auc(&[0.5; 6], &labels), 0.5);
+    }
+
+    #[test]
+    fn auc_degenerate_single_class() {
+        assert_eq!(auc(&[0.1, 0.9], &[1, 1]), 0.5);
+        assert_eq!(auc(&[0.1, 0.9], &[0, 0]), 0.5);
+    }
+
+    #[test]
+    fn auc_known_value() {
+        // scores: pos {0.8, 0.4}, neg {0.6, 0.2}.
+        // Pairs: (0.8>0.6) (0.8>0.2) (0.4<0.6) (0.4>0.2) -> 3/4.
+        let labels = [1u32, 0, 1, 0];
+        let scores = [0.8, 0.6, 0.4, 0.2];
+        assert!((auc(&scores, &labels) - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn auc_partial_ties() {
+        // pos {0.5}, neg {0.5, 0.1}: pair1 tie (0.5), pair2 win -> 0.75.
+        let labels = [1u32, 0, 0];
+        let scores = [0.5, 0.5, 0.1];
+        assert!((auc(&scores, &labels) - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn accuracy_basic() {
+        assert_eq!(accuracy(&[1, 0, 1], &[1, 1, 1]), 2.0 / 3.0);
+        assert_eq!(accuracy(&[], &[]), 0.0);
+    }
+
+    #[test]
+    fn stopwatch_monotone() {
+        let mut sw = Stopwatch::start();
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        let t1 = sw.restart();
+        assert!(t1 >= 0.004);
+        assert!(sw.seconds() < t1);
+    }
+}

@@ -1,0 +1,512 @@
+//! Deterministic pseudo-randomness for DRF.
+//!
+//! DRF's central networking trick (paper §2.2) is that *bagging* and
+//! *feature sampling* are pure functions of `(forest seed, tree index,
+//! sample/node index)`. Every worker evaluates the same function locally,
+//! so the manager never ships sample-index lists or per-node feature sets
+//! over the network — one 8-byte seed replaces `Θ(n)` indices.
+//!
+//! Two generators are provided:
+//!
+//! * [`SplitMix64`] — a tiny stateless-friendly mixer used to derive
+//!   independent streams from composite keys (its output is also the
+//!   recommended seeder for xoshiro-family generators);
+//! * [`Xoshiro256pp`] — the sequential generator used where a stream of
+//!   variates is needed (synthetic data generation, shuffles).
+
+/// SplitMix64 PRNG (Steele, Lea & Flood 2014). One `u64` of state; each
+/// `next` is a single add + mix, and `mix(key)` is usable as a stateless
+/// hash — this is what makes seed-only bagging possible.
+#[derive(Debug, Clone, Copy)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    /// Create a generator from a raw seed.
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    /// Next u64 variate.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        Self::finalize(self.state)
+    }
+
+    /// Uniform f64 in [0, 1).
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        // 53 high bits -> [0,1) double.
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform u64 in [0, bound) via Lemire's multiply-shift (slightly
+    /// biased for astronomically large bounds; fine for our index ranges).
+    #[inline]
+    pub fn next_below(&mut self, bound: u64) -> u64 {
+        debug_assert!(bound > 0);
+        ((self.next_u64() as u128 * bound as u128) >> 64) as u64
+    }
+
+    /// The SplitMix64 finalizer: a high-quality 64->64 bit mixer.
+    #[inline]
+    pub fn finalize(mut z: u64) -> u64 {
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+
+    /// Stateless hash of a composite key — the workhorse of deterministic
+    /// bagging/feature-sampling. Mixes each component in sequence.
+    #[inline]
+    pub fn hash_key(parts: &[u64]) -> u64 {
+        let mut acc = 0x243F6A8885A308D3u64; // pi digits
+        for &p in parts {
+            acc = Self::finalize(acc ^ p).wrapping_add(0x9E3779B97F4A7C15);
+        }
+        Self::finalize(acc)
+    }
+}
+
+/// xoshiro256++ 1.0 (Blackman & Vigna). Used for longer variate streams.
+#[derive(Debug, Clone)]
+pub struct Xoshiro256pp {
+    s: [u64; 4],
+}
+
+impl Xoshiro256pp {
+    /// Seed via SplitMix64, as recommended by the authors.
+    pub fn new(seed: u64) -> Self {
+        let mut sm = SplitMix64::new(seed);
+        Self {
+            s: [sm.next_u64(), sm.next_u64(), sm.next_u64(), sm.next_u64()],
+        }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = (self.s[0].wrapping_add(self.s[3]))
+            .rotate_left(23)
+            .wrapping_add(self.s[0]);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    #[inline]
+    pub fn next_below(&mut self, bound: u64) -> u64 {
+        debug_assert!(bound > 0);
+        ((self.next_u64() as u128 * bound as u128) >> 64) as u64
+    }
+
+    /// Standard normal via Box-Muller (one variate per call; simple and
+    /// deterministic, speed is irrelevant here).
+    pub fn next_gaussian(&mut self) -> f64 {
+        let u1 = self.next_f64().max(f64::MIN_POSITIVE);
+        let u2 = self.next_f64();
+        (-2.0 * u1.ln()).sqrt() * (std::f64::consts::TAU * u2).cos()
+    }
+}
+
+/// How records are bagged for each tree.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BaggingMode {
+    /// No bagging: every record has weight 1 in every tree.
+    None,
+    /// Poisson(1) bootstrap: each record's multiplicity in tree `t` is an
+    /// independent Poisson(1) draw keyed by `(seed, t, i)`. This is the
+    /// standard distributed approximation of n-out-of-n sampling with
+    /// replacement (identical marginal expectation, and — crucially —
+    /// evaluable *per record* with zero communication, which is the whole
+    /// point of paper §2.2).
+    Poisson,
+}
+
+impl Default for BaggingMode {
+    fn default() -> Self {
+        BaggingMode::Poisson
+    }
+}
+
+impl BaggingMode {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            BaggingMode::None => "none",
+            BaggingMode::Poisson => "poisson",
+        }
+    }
+
+    pub fn parse(s: &str) -> crate::Result<Self> {
+        Ok(match s {
+            "none" => BaggingMode::None,
+            "poisson" => BaggingMode::Poisson,
+            _ => anyhow::bail!("unknown bagging mode '{s}'"),
+        })
+    }
+}
+
+/// Deterministic bagging: `weight(tree, sample)` is a pure function of the
+/// key, so every splitter / tree builder agrees without any communication.
+#[derive(Debug, Clone, Copy)]
+pub struct Bagger {
+    seed: u64,
+    mode: BaggingMode,
+}
+
+impl Bagger {
+    pub fn new(seed: u64, mode: BaggingMode) -> Self {
+        Self { seed, mode }
+    }
+
+    pub fn mode(&self) -> BaggingMode {
+        self.mode
+    }
+
+    /// Bag multiplicity of `sample` in `tree` (paper Alg. 1's `bag(i, p)`).
+    #[inline]
+    pub fn weight(&self, tree: u32, sample: u64) -> u32 {
+        match self.mode {
+            BaggingMode::None => 1,
+            BaggingMode::Poisson => {
+                // Inverse-CDF Poisson(1) from one uniform variate.
+                // P(k) = e^-1 / k!; cumulative thresholds precomputed.
+                let u = Self::uniform(self.seed, tree, sample);
+                poisson1_icdf(u)
+            }
+        }
+    }
+
+    /// Is the sample in-bag (weight > 0)?
+    #[inline]
+    pub fn in_bag(&self, tree: u32, sample: u64) -> bool {
+        self.weight(tree, sample) > 0
+    }
+
+    #[inline]
+    fn uniform(seed: u64, tree: u32, sample: u64) -> f64 {
+        let h = SplitMix64::hash_key(&[seed, 0xBA66_1D6 ^ tree as u64, sample]);
+        (h >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+}
+
+/// Poisson(1) inverse CDF. Thresholds are cumulative probabilities of
+/// k = 0, 1, 2, ... under Poisson(1): e^-1 * sum 1/j!.
+#[inline]
+fn poisson1_icdf(u: f64) -> u32 {
+    // e^-1 * cumsum(1/k!) for k = 0..8; beyond 8 the tail is < 1e-6.
+    const CDF: [f64; 9] = [
+        0.36787944117144233,
+        0.7357588823428847,
+        0.9196986029286058,
+        0.9810118431238462,
+        0.9963401531726563,
+        0.9994058151824183,
+        0.9999167588507119,
+        0.9999897508033253,
+        0.9999988747974021,
+    ];
+    for (k, &c) in CDF.iter().enumerate() {
+        if u < c {
+            return k as u32;
+        }
+    }
+    9
+}
+
+/// Per-node feature sampling policy (paper §3.1-3.2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FeatureSampling {
+    /// Classical RF: an independent set of `m'` features per node
+    /// (`z` = number of open nodes).
+    PerNode,
+    /// USB (unique set of bagged features per depth, paper §3.2): all
+    /// nodes of a depth level share one set of `m'` features (`z = 1`).
+    /// Big win for distributed complexity; explored by XGBoost.
+    PerDepth,
+    /// All features are candidates everywhere (plain bagged trees).
+    All,
+}
+
+impl Default for FeatureSampling {
+    fn default() -> Self {
+        FeatureSampling::PerNode
+    }
+}
+
+impl FeatureSampling {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            FeatureSampling::PerNode => "per_node",
+            FeatureSampling::PerDepth => "per_depth",
+            FeatureSampling::All => "all",
+        }
+    }
+
+    pub fn parse(s: &str) -> crate::Result<Self> {
+        Ok(match s {
+            "per_node" => FeatureSampling::PerNode,
+            "per_depth" | "usb" => FeatureSampling::PerDepth,
+            "all" => FeatureSampling::All,
+            _ => anyhow::bail!("unknown feature sampling '{s}'"),
+        })
+    }
+}
+
+/// Deterministic candidate-feature sampler. Like bagging, the candidate
+/// set for `(tree, depth, node)` is a pure function of the key, so every
+/// splitter can evaluate "is feature j a candidate at (j, h, p)?" (paper
+/// Alg. 1) locally with zero communication.
+#[derive(Debug, Clone, Copy)]
+pub struct FeatureSampler {
+    seed: u64,
+    num_features: usize,
+    num_candidates: usize,
+    policy: FeatureSampling,
+}
+
+impl FeatureSampler {
+    /// `num_candidates` is the paper's `m'` (typically `⌈√m⌉`; clamped to
+    /// `[1, m]`). Ignored for [`FeatureSampling::All`].
+    pub fn new(
+        seed: u64,
+        num_features: usize,
+        num_candidates: usize,
+        policy: FeatureSampling,
+    ) -> Self {
+        assert!(num_features > 0, "feature sampler over empty schema");
+        let num_candidates = num_candidates.clamp(1, num_features);
+        Self {
+            seed,
+            num_features,
+            num_candidates,
+            policy,
+        }
+    }
+
+    /// Default `m' = ⌈√m⌉`.
+    pub fn sqrt_default(seed: u64, num_features: usize, policy: FeatureSampling) -> Self {
+        let mp = (num_features as f64).sqrt().ceil() as usize;
+        Self::new(seed, num_features, mp, policy)
+    }
+
+    pub fn num_candidates(&self) -> usize {
+        match self.policy {
+            FeatureSampling::All => self.num_features,
+            _ => self.num_candidates,
+        }
+    }
+
+    pub fn policy(&self) -> FeatureSampling {
+        self.policy
+    }
+
+    /// The stream key for a node: USB collapses all nodes of one depth
+    /// onto one key (z = 1).
+    #[inline]
+    fn node_key(&self, tree: u32, depth: u32, node_id: u32) -> u64 {
+        match self.policy {
+            FeatureSampling::PerNode => {
+                SplitMix64::hash_key(&[self.seed, 0xFEA7 ^ tree as u64, node_id as u64])
+            }
+            FeatureSampling::PerDepth => {
+                SplitMix64::hash_key(&[self.seed, 0xFEA7 ^ tree as u64, 0x0DE9 ^ depth as u64])
+            }
+            FeatureSampling::All => 0,
+        }
+    }
+
+    /// Sorted candidate feature set for a node. Uses a Fisher-Yates
+    /// partial shuffle on a per-key generator: exact sampling without
+    /// replacement of `m'` features out of `m`.
+    pub fn candidates(&self, tree: u32, depth: u32, node_id: u32) -> Vec<usize> {
+        if matches!(self.policy, FeatureSampling::All) {
+            return (0..self.num_features).collect();
+        }
+        let mut rng = SplitMix64::new(self.node_key(tree, depth, node_id));
+        let m = self.num_features;
+        let k = self.num_candidates;
+        // Partial Fisher-Yates over an index vector. m is small (features,
+        // not samples) so materializing it is fine.
+        let mut idx: Vec<usize> = (0..m).collect();
+        for i in 0..k {
+            let j = i + rng.next_below((m - i) as u64) as usize;
+            idx.swap(i, j);
+        }
+        let mut out = idx[..k].to_vec();
+        out.sort_unstable();
+        out
+    }
+
+    /// Membership test used in splitters' inner loop (Alg. 1's
+    /// `candidate feature (j, h, p)`). O(m') but m' is tiny; splitters
+    /// precompute sets per level anyway.
+    pub fn is_candidate(&self, tree: u32, depth: u32, node_id: u32, feature: usize) -> bool {
+        if matches!(self.policy, FeatureSampling::All) {
+            return feature < self.num_features;
+        }
+        self.candidates(tree, depth, node_id).contains(&feature)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_reference_values() {
+        // Reference values for SplitMix64 with seed 1234567.
+        let mut r = SplitMix64::new(1234567);
+        let a = r.next_u64();
+        let b = r.next_u64();
+        assert_ne!(a, b);
+        // Determinism.
+        let mut r2 = SplitMix64::new(1234567);
+        assert_eq!(a, r2.next_u64());
+        assert_eq!(b, r2.next_u64());
+    }
+
+    #[test]
+    fn splitmix_f64_in_unit_interval() {
+        let mut r = SplitMix64::new(99);
+        for _ in 0..1000 {
+            let x = r.next_f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn next_below_bounds() {
+        let mut r = SplitMix64::new(7);
+        for bound in [1u64, 2, 3, 17, 1000] {
+            for _ in 0..200 {
+                assert!(r.next_below(bound) < bound);
+            }
+        }
+    }
+
+    #[test]
+    fn xoshiro_determinism_and_spread() {
+        let mut a = Xoshiro256pp::new(42);
+        let mut b = Xoshiro256pp::new(42);
+        let mut distinct = std::collections::HashSet::new();
+        for _ in 0..100 {
+            let v = a.next_u64();
+            assert_eq!(v, b.next_u64());
+            distinct.insert(v);
+        }
+        assert_eq!(distinct.len(), 100);
+    }
+
+    #[test]
+    fn bagger_deterministic_across_instances() {
+        let b1 = Bagger::new(5, BaggingMode::Poisson);
+        let b2 = Bagger::new(5, BaggingMode::Poisson);
+        for t in 0..3 {
+            for i in 0..500 {
+                assert_eq!(b1.weight(t, i), b2.weight(t, i));
+            }
+        }
+    }
+
+    #[test]
+    fn bagger_poisson_mean_about_one() {
+        let b = Bagger::new(11, BaggingMode::Poisson);
+        let n = 200_000u64;
+        let total: u64 = (0..n).map(|i| b.weight(0, i) as u64).sum();
+        let mean = total as f64 / n as f64;
+        assert!((mean - 1.0).abs() < 0.02, "poisson mean {mean}");
+        // ~36.8% of samples should be out-of-bag.
+        let oob = (0..n).filter(|&i| !b.in_bag(0, i)).count() as f64 / n as f64;
+        assert!((oob - 0.3679).abs() < 0.02, "oob fraction {oob}");
+    }
+
+    #[test]
+    fn bagger_trees_independent() {
+        let b = Bagger::new(5, BaggingMode::Poisson);
+        let same = (0..10_000)
+            .filter(|&i| b.weight(0, i) == b.weight(1, i))
+            .count();
+        // Two independent Poisson(1) draws collide ~ sum p_k^2 ~ 0.31 of
+        // the time; equality everywhere would indicate broken keying.
+        assert!(same < 6_000, "trees look correlated: {same}");
+    }
+
+    #[test]
+    fn bagging_none_all_ones() {
+        let b = Bagger::new(5, BaggingMode::None);
+        assert!((0..100).all(|i| b.weight(3, i) == 1));
+    }
+
+    #[test]
+    fn feature_sampler_size_and_range() {
+        let fs = FeatureSampler::new(9, 20, 5, FeatureSampling::PerNode);
+        for node in 0..50 {
+            let c = fs.candidates(0, 3, node);
+            assert_eq!(c.len(), 5);
+            assert!(c.windows(2).all(|w| w[0] < w[1]), "sorted unique");
+            assert!(c.iter().all(|&f| f < 20));
+        }
+    }
+
+    #[test]
+    fn feature_sampler_usb_shares_per_depth() {
+        let fs = FeatureSampler::new(9, 20, 5, FeatureSampling::PerDepth);
+        let a = fs.candidates(0, 3, 10);
+        let b = fs.candidates(0, 3, 99);
+        assert_eq!(a, b, "USB: same set for all nodes at a depth");
+        let c = fs.candidates(0, 4, 10);
+        assert_ne!(a, c, "different depth -> different set (w.h.p.)");
+    }
+
+    #[test]
+    fn feature_sampler_per_node_varies() {
+        let fs = FeatureSampler::new(9, 100, 10, FeatureSampling::PerNode);
+        let a = fs.candidates(0, 3, 10);
+        let b = fs.candidates(0, 3, 11);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn feature_sampler_all() {
+        let fs = FeatureSampler::new(9, 7, 3, FeatureSampling::All);
+        assert_eq!(fs.candidates(0, 0, 0), (0..7).collect::<Vec<_>>());
+        assert!(fs.is_candidate(0, 0, 0, 6));
+        assert!(!fs.is_candidate(0, 0, 0, 7));
+    }
+
+    #[test]
+    fn feature_sampler_clamps_num_candidates() {
+        let fs = FeatureSampler::new(9, 4, 100, FeatureSampling::PerNode);
+        assert_eq!(fs.num_candidates(), 4);
+        let fs = FeatureSampler::sqrt_default(9, 82, FeatureSampling::PerNode);
+        assert_eq!(fs.num_candidates(), 10); // ceil(sqrt(82)) = 10
+    }
+
+    #[test]
+    fn gaussian_moments() {
+        let mut r = Xoshiro256pp::new(3);
+        let n = 50_000;
+        let (mut s, mut s2) = (0.0, 0.0);
+        for _ in 0..n {
+            let g = r.next_gaussian();
+            s += g;
+            s2 += g * g;
+        }
+        let mean = s / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+}

@@ -1,0 +1,410 @@
+//! Categorical supersplit search via count tables (paper §2.4, §3.1).
+//!
+//! SPRINT/SLIQ-style: one sequential pass over the column builds, for
+//! every open leaf, the count table `value × class → weighted count`.
+//! For **binary** labels the optimal subset `C ⊆ support` is then found
+//! exactly with Breiman's trick: sort values by `P(class 1 | value)` and
+//! only prefixes of that order need to be considered (Breiman et al.
+//! 1984, Thm 4.5). For more than two classes we fall back to the best
+//! one-vs-rest single-value split (exhaustive subset search is
+//! exponential; the paper's experiments are all binary).
+//!
+//! Determinism: count tables are kept in `BTreeMap`s and the ratio sort
+//! breaks ties by value id, so every worker and the classic baseline
+//! produce the same `C`.
+
+use super::histogram::Histogram;
+use super::scorer::{split_gain, ScoreKind, SplitCandidate};
+use crate::tree::{CategorySet, Condition};
+use std::collections::BTreeMap;
+
+/// Compute the best `x ∈ C` split of every open leaf for `feature`.
+/// Interface mirrors [`super::numerical::best_numerical_supersplit`];
+/// `values` is the raw column in row order.
+#[allow(clippy::too_many_arguments)]
+pub fn best_categorical_supersplit(
+    feature: usize,
+    values: &[u32],
+    arity: u32,
+    labels: &[u32],
+    num_classes: u32,
+    leaf_totals: &[Histogram],
+    kind: ScoreKind,
+    sample2node: impl Fn(u32) -> u32,
+    is_candidate: impl Fn(u32) -> bool,
+    bag: impl Fn(u32) -> u32,
+) -> Vec<Option<SplitCandidate>> {
+    let num_leaves = leaf_totals.len();
+    // Per-leaf count table: value -> histogram. Two layouts:
+    //  * dense (flat Vec indexed by value*classes) when the total
+    //    footprint is modest — no per-row tree walk, ~3x faster;
+    //  * sparse BTreeMap otherwise (huge arity, sparse support).
+    // Both produce identical tables; iteration stays in value order so
+    // split decisions are byte-identical (EXPERIMENTS.md §Perf).
+    let dense_cells = arity as usize * num_classes as usize * num_leaves;
+    if dense_cells <= (1 << 24) {
+        let stride = arity as usize * num_classes as usize;
+        let mut dense = vec![0u64; dense_cells];
+        for (i, &v) in values.iter().enumerate() {
+            let h = sample2node(i as u32);
+            if h == 0 {
+                continue;
+            }
+            if !is_candidate(h) {
+                continue;
+            }
+            let b = bag(i as u32);
+            if b == 0 {
+                continue;
+            }
+            let base = (h - 1) as usize * stride
+                + v as usize * num_classes as usize
+                + labels[i] as usize;
+            dense[base] += b as u64;
+        }
+        return (0..num_leaves)
+            .map(|leaf| {
+                let mut table: BTreeMap<u32, Histogram> = BTreeMap::new();
+                for v in 0..arity as usize {
+                    let cell = &dense[leaf * stride + v * num_classes as usize
+                        ..leaf * stride + (v + 1) * num_classes as usize];
+                    if cell.iter().any(|&c| c > 0) {
+                        table.insert(v as u32, Histogram::from_counts(cell.to_vec()));
+                    }
+                }
+                best_subset_split(feature, arity, &table, &leaf_totals[leaf], num_classes, kind)
+            })
+            .collect();
+    }
+
+    let mut tables: Vec<BTreeMap<u32, Histogram>> = vec![BTreeMap::new(); num_leaves];
+    for (i, &v) in values.iter().enumerate() {
+        let h = sample2node(i as u32);
+        if h == 0 {
+            continue;
+        }
+        if !is_candidate(h) {
+            continue;
+        }
+        let b = bag(i as u32);
+        if b == 0 {
+            continue;
+        }
+        tables[(h - 1) as usize]
+            .entry(v)
+            .or_insert_with(|| Histogram::new(num_classes))
+            .add(labels[i], b);
+    }
+
+    tables
+        .into_iter()
+        .enumerate()
+        .map(|(idx, table)| {
+            best_subset_split(
+                feature,
+                arity,
+                &table,
+                &leaf_totals[idx],
+                num_classes,
+                kind,
+            )
+        })
+        .collect()
+}
+
+/// Best subset split for one leaf given its count table.
+fn best_subset_split(
+    feature: usize,
+    arity: u32,
+    table: &BTreeMap<u32, Histogram>,
+    total: &Histogram,
+    num_classes: u32,
+    kind: ScoreKind,
+) -> Option<SplitCandidate> {
+    if table.len() < 2 {
+        return None; // single observed value cannot split
+    }
+    if num_classes == 2 {
+        best_binary_subset(feature, arity, table, total, kind)
+    } else {
+        best_one_vs_rest(feature, arity, table, total, kind)
+    }
+}
+
+/// Breiman's exact construction for binary labels: sort observed values
+/// by positive ratio, scan prefixes.
+fn best_binary_subset(
+    feature: usize,
+    arity: u32,
+    table: &BTreeMap<u32, Histogram>,
+    total: &Histogram,
+    kind: ScoreKind,
+) -> Option<SplitCandidate> {
+    let mut entries: Vec<(u32, &Histogram)> = table.iter().map(|(&v, h)| (v, h)).collect();
+    // Sort by P(class 1 | value); exact integer cross-multiplication
+    // avoids float-ratio ambiguity: p_a < p_b  <=>  pos_a*tot_b < pos_b*tot_a.
+    entries.sort_by(|(va, ha), (vb, hb)| {
+        let (pa, ta) = (ha.counts()[1] as u128, ha.total() as u128);
+        let (pb, tb) = (hb.counts()[1] as u128, hb.total() as u128);
+        (pa * tb).cmp(&(pb * ta)).then(va.cmp(vb))
+    });
+
+    let mut left = Histogram::new(2);
+    let mut best: Option<(f64, usize)> = None;
+    // Prefixes 1..len-1 (both sides non-empty).
+    for (k, (_, h)) in entries.iter().enumerate().take(entries.len() - 1) {
+        left.merge(h);
+        if let Some(gain) = split_gain(kind, total, &left) {
+            // Strict '>' keeps the shortest prefix among ties
+            // (deterministic, mirrors Alg. 1's strict improvement).
+            if gain > 0.0 && best.map_or(true, |(bg, _)| gain > bg) {
+                best = Some((gain, k + 1));
+            }
+        }
+    }
+    let (gain, prefix) = best?;
+    let set = CategorySet::from_values(arity, entries[..prefix].iter().map(|(v, _)| *v));
+    let mut left = Histogram::new(2);
+    for (_, h) in &entries[..prefix] {
+        left.merge(h);
+    }
+    let right = total.minus(&left);
+    Some(SplitCandidate {
+        condition: Condition::CatIn { feature, set },
+        gain,
+        left_counts: left.into_counts(),
+        right_counts: right.into_counts(),
+    })
+}
+
+/// Multiclass fallback: best single value vs rest.
+fn best_one_vs_rest(
+    feature: usize,
+    arity: u32,
+    table: &BTreeMap<u32, Histogram>,
+    total: &Histogram,
+    kind: ScoreKind,
+) -> Option<SplitCandidate> {
+    let mut best: Option<(f64, u32, &Histogram)> = None;
+    for (&v, h) in table {
+        if let Some(gain) = split_gain(kind, total, h) {
+            if gain > 0.0 && best.map_or(true, |(bg, _, _)| gain > bg) {
+                best = Some((gain, v, h));
+            }
+        }
+    }
+    let (gain, v, left) = best?;
+    let right = total.minus(left);
+    Some(SplitCandidate {
+        condition: Condition::CatIn {
+            feature,
+            set: CategorySet::from_values(arity, [v]),
+        },
+        gain,
+        left_counts: left.clone().into_counts(),
+        right_counts: right.into_counts(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn totals_of(labels: &[u32], weights: &[u32], num_classes: u32) -> Vec<Histogram> {
+        let mut h = Histogram::new(num_classes);
+        for (&y, &w) in labels.iter().zip(weights) {
+            h.add(y, w);
+        }
+        vec![h]
+    }
+
+    fn set_of(c: &SplitCandidate) -> Vec<u32> {
+        match &c.condition {
+            Condition::CatIn { set, .. } => set.iter().collect(),
+            _ => panic!("expected categorical"),
+        }
+    }
+
+    #[test]
+    fn perfectly_separating_subset() {
+        // Values 0,1 are class 0; values 2,3 are class 1.
+        let values = [0u32, 1, 2, 3, 0, 1, 2, 3];
+        let labels = [0u32, 0, 1, 1, 0, 0, 1, 1];
+        let w = [1u32; 8];
+        let res = best_categorical_supersplit(
+            0,
+            &values,
+            4,
+            &labels,
+            2,
+            &totals_of(&labels, &w, 2),
+            ScoreKind::Gini,
+            |_| 1,
+            |_| true,
+            |_| 1,
+        );
+        let c = res[0].as_ref().unwrap();
+        assert!((c.gain - 0.5).abs() < 1e-12);
+        assert_eq!(set_of(c), vec![0, 1], "the pure-negative values");
+        assert_eq!(c.left_counts, vec![4, 0]);
+    }
+
+    #[test]
+    fn subset_better_than_any_single_value() {
+        // Mixed ratios: values {0: 90% pos, 1: 80% pos, 2: 10% pos,
+        // 3: 20% pos}. Optimal C groups {2,3} vs {0,1}; any one-vs-rest
+        // split is worse.
+        let mut values = Vec::new();
+        let mut labels = Vec::new();
+        for (v, pos, neg) in [(0u32, 9, 1), (1, 8, 2), (2, 1, 9), (3, 2, 8)] {
+            for _ in 0..pos {
+                values.push(v);
+                labels.push(1u32);
+            }
+            for _ in 0..neg {
+                values.push(v);
+                labels.push(0u32);
+            }
+        }
+        let w = vec![1u32; values.len()];
+        let res = best_categorical_supersplit(
+            0,
+            &values,
+            4,
+            &labels,
+            2,
+            &totals_of(&labels, &w, 2),
+            ScoreKind::Gini,
+            |_| 1,
+            |_| true,
+            |_| 1,
+        );
+        let c = res[0].as_ref().unwrap();
+        assert_eq!(set_of(c), vec![2, 3]);
+    }
+
+    #[test]
+    fn single_observed_value_no_split() {
+        let values = [5u32; 6];
+        let labels = [0u32, 1, 0, 1, 0, 1];
+        let w = [1u32; 6];
+        let res = best_categorical_supersplit(
+            0,
+            &values,
+            10,
+            &labels,
+            2,
+            &totals_of(&labels, &w, 2),
+            ScoreKind::Gini,
+            |_| 1,
+            |_| true,
+            |_| 1,
+        );
+        assert!(res[0].is_none());
+    }
+
+    #[test]
+    fn bagging_zero_weight_excluded() {
+        // Without bagging value 2 is impure; with sample 4 (the stray
+        // positive in value 2) out of bag, the split is perfect.
+        let values = [0u32, 0, 2, 2, 2];
+        let labels = [1u32, 1, 0, 0, 1];
+        let bag = |i: u32| if i == 4 { 0u32 } else { 1 };
+        let weights: Vec<u32> = (0..5).map(bag).collect();
+        let res = best_categorical_supersplit(
+            0,
+            &values,
+            3,
+            &labels,
+            2,
+            &totals_of(&labels, &weights, 2),
+            ScoreKind::Gini,
+            |_| 1,
+            |_| true,
+            bag,
+        );
+        let c = res[0].as_ref().unwrap();
+        assert!((c.gain - 0.5).abs() < 1e-12);
+        assert_eq!(set_of(c), vec![2]);
+    }
+
+    #[test]
+    fn per_leaf_tables_independent() {
+        // Leaf 1 prefers isolating value 0 (pure negative); leaf 2 sees
+        // inverted labels so it prefers isolating value 2.
+        let values = [0u32, 1, 1, 2, 0, 1, 1, 2];
+        let node = |i: u32| if i < 4 { 1 } else { 2 };
+        let labels = [0u32, 1, 0, 1, 1, 0, 1, 0];
+        let mut t1 = Histogram::new(2);
+        let mut t2 = Histogram::new(2);
+        for i in 0..8u32 {
+            if i < 4 {
+                t1.add(labels[i as usize], 1);
+            } else {
+                t2.add(labels[i as usize], 1);
+            }
+        }
+        let res = best_categorical_supersplit(
+            0,
+            &values,
+            3,
+            &labels,
+            2,
+            &[t1, t2],
+            ScoreKind::Gini,
+            node,
+            |_| true,
+            |_| 1,
+        );
+        assert!(res[0].is_some());
+        assert!(res[1].is_some());
+        // Both leaves have one stray, so the two best sets differ.
+        assert_ne!(set_of(res[0].as_ref().unwrap()), set_of(res[1].as_ref().unwrap()));
+    }
+
+    #[test]
+    fn multiclass_one_vs_rest() {
+        let values = [0u32, 0, 1, 1, 2, 2];
+        let labels = [0u32, 0, 1, 1, 2, 2];
+        let w = [1u32; 6];
+        let res = best_categorical_supersplit(
+            0,
+            &values,
+            3,
+            &labels,
+            3,
+            &totals_of(&labels, &w, 3),
+            ScoreKind::Gini,
+            |_| 1,
+            |_| true,
+            |_| 1,
+        );
+        let c = res[0].as_ref().unwrap();
+        assert_eq!(set_of(c).len(), 1, "one-vs-rest");
+        assert!(c.gain > 0.0);
+    }
+
+    #[test]
+    fn high_arity_sparse_support() {
+        // Arity 10_000 but only 3 observed values — table stays sparse.
+        let values = [9999u32, 5000, 0, 9999, 5000, 0];
+        let labels = [1u32, 0, 0, 1, 0, 0];
+        let w = [1u32; 6];
+        let res = best_categorical_supersplit(
+            0,
+            &values,
+            10_000,
+            &labels,
+            2,
+            &totals_of(&labels, &w, 2),
+            ScoreKind::Gini,
+            |_| 1,
+            |_| true,
+            |_| 1,
+        );
+        let c = res[0].as_ref().unwrap();
+        // Parent [4,2] split perfectly: gain = gini([4,2]) = 4/9.
+        assert!((c.gain - 4.0 / 9.0).abs() < 1e-12);
+        assert_eq!(set_of(c), vec![0, 5000]);
+    }
+}

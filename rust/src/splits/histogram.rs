@@ -1,0 +1,172 @@
+//! Weighted label histograms and impurity measures.
+//!
+//! Alg. 1 maintains one histogram per open leaf (`H_h`) and scores each
+//! candidate threshold from it incrementally. All arithmetic that can
+//! affect a split decision is done in `f64` over exact integer counts,
+//! so scores are bit-reproducible across DRF workers and the classic
+//! baseline.
+
+
+/// A weighted per-class count vector.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Histogram {
+    counts: Vec<u64>,
+}
+
+impl Histogram {
+    pub fn new(num_classes: u32) -> Self {
+        Self {
+            counts: vec![0; num_classes as usize],
+        }
+    }
+
+    pub fn from_counts(counts: Vec<u64>) -> Self {
+        Self { counts }
+    }
+
+    pub fn num_classes(&self) -> u32 {
+        self.counts.len() as u32
+    }
+
+    pub fn counts(&self) -> &[u64] {
+        &self.counts
+    }
+
+    pub fn into_counts(self) -> Vec<u64> {
+        self.counts
+    }
+
+    /// Add `weight` observations of `class` (Alg. 1's "Add label y
+    /// weighted by b to H_h").
+    #[inline]
+    pub fn add(&mut self, class: u32, weight: u32) {
+        self.counts[class as usize] += weight as u64;
+    }
+
+    #[inline]
+    pub fn total(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    pub fn is_zero(&self) -> bool {
+        self.counts.iter().all(|&c| c == 0)
+    }
+
+    /// Reset all counts to zero.
+    pub fn clear(&mut self) {
+        self.counts.iter_mut().for_each(|c| *c = 0);
+    }
+
+    /// Element-wise sum.
+    pub fn merge(&mut self, other: &Histogram) {
+        assert_eq!(self.counts.len(), other.counts.len());
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+    }
+
+    /// `self - other`, element-wise (other must be a sub-histogram).
+    pub fn minus(&self, other: &Histogram) -> Histogram {
+        assert_eq!(self.counts.len(), other.counts.len());
+        Histogram {
+            counts: self
+                .counts
+                .iter()
+                .zip(&other.counts)
+                .map(|(&a, &b)| {
+                    debug_assert!(a >= b, "minus would underflow");
+                    a - b
+                })
+                .collect(),
+        }
+    }
+
+    /// Gini impurity: `1 - Σ p_c²`.
+    pub fn gini(&self) -> f64 {
+        let total = self.total();
+        if total == 0 {
+            return 0.0;
+        }
+        let t = total as f64;
+        1.0 - self
+            .counts
+            .iter()
+            .map(|&c| {
+                let p = c as f64 / t;
+                p * p
+            })
+            .sum::<f64>()
+    }
+
+    /// Shannon entropy in nats: `-Σ p_c ln p_c`.
+    pub fn entropy(&self) -> f64 {
+        let total = self.total();
+        if total == 0 {
+            return 0.0;
+        }
+        let t = total as f64;
+        -self
+            .counts
+            .iter()
+            .filter(|&&c| c > 0)
+            .map(|&c| {
+                let p = c as f64 / t;
+                p * p.ln()
+            })
+            .sum::<f64>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn add_total_merge_minus() {
+        let mut h = Histogram::new(3);
+        h.add(0, 2);
+        h.add(2, 5);
+        assert_eq!(h.total(), 7);
+        assert_eq!(h.counts(), &[2, 0, 5]);
+        let mut h2 = Histogram::new(3);
+        h2.add(1, 1);
+        h2.merge(&h);
+        assert_eq!(h2.counts(), &[2, 1, 5]);
+        let d = h2.minus(&h);
+        assert_eq!(d.counts(), &[0, 1, 0]);
+        assert!(!h.is_zero());
+        let mut z = h.clone();
+        z.clear();
+        assert!(z.is_zero());
+    }
+
+    #[test]
+    fn gini_known_values() {
+        let h = Histogram::from_counts(vec![5, 5]);
+        assert!((h.gini() - 0.5).abs() < 1e-12);
+        let pure = Histogram::from_counts(vec![10, 0]);
+        assert_eq!(pure.gini(), 0.0);
+        let empty = Histogram::new(2);
+        assert_eq!(empty.gini(), 0.0);
+        // 3 classes uniform: 1 - 3*(1/3)^2 = 2/3
+        let h3 = Histogram::from_counts(vec![4, 4, 4]);
+        assert!((h3.gini() - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn entropy_known_values() {
+        let h = Histogram::from_counts(vec![5, 5]);
+        assert!((h.entropy() - std::f64::consts::LN_2).abs() < 1e-12);
+        let pure = Histogram::from_counts(vec![10, 0]);
+        assert_eq!(pure.entropy(), 0.0);
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "underflow")]
+    fn minus_underflow_asserts() {
+        let a = Histogram::from_counts(vec![1]);
+        let b = Histogram::from_counts(vec![2]);
+        let _ = a.minus(&b);
+    }
+}

@@ -1,0 +1,28 @@
+//! Best-split search (paper §2.4 and Alg. 1).
+//!
+//! A *supersplit* is a set of splits mapped one-to-one with the open
+//! leaves at a given depth. The functions here compute, for one feature
+//! column, the optimal split of **every** open leaf in a **single
+//! sequential pass** over the column — the property that gives DRF its
+//! `Z·n·D` read complexity (one pass per feature per *level*, never per
+//! node).
+//!
+//! * [`histogram`] — weighted label histograms + impurity measures;
+//! * [`scorer`] — split gain, candidate comparison (deterministic
+//!   tie-breaking shared by DRF and the classic baseline — this is what
+//!   makes the two algorithms produce identical trees);
+//! * [`numerical`] — Alg. 1 over a presorted column;
+//! * [`categorical`] — count-table search with the exact
+//!   sorted-by-class-ratio subset construction for binary labels;
+//! * [`xla_scorer`] — optional batched threshold scoring through the
+//!   AOT-compiled XLA/Pallas artifact (see `runtime`).
+
+pub mod categorical;
+pub mod histogram;
+pub mod numerical;
+pub mod regression;
+pub mod scorer;
+pub mod xla_scorer;
+
+pub use histogram::Histogram;
+pub use scorer::{ScoreKind, SplitCandidate};

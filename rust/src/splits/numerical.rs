@@ -1,0 +1,379 @@
+//! Alg. 1 — best supersplit for one numerical feature, one pass.
+//!
+//! Given the presorted column `q(j)` (paper §2.1) and the sample→leaf
+//! mapping, this computes the optimal `x ≤ τ` split of **every** open
+//! leaf simultaneously in a single sequential scan: per leaf it keeps a
+//! running label histogram `H_h` of already-traversed records, the last
+//! seen value `v_h`, and the best threshold/score so far. Candidate
+//! thresholds are midpoints between consecutive *distinct* values within
+//! a leaf.
+//!
+//! The same function serves the distributed splitter and the classic
+//! baseline (which calls it with a single-node mapping), guaranteeing
+//! identical split decisions.
+
+use super::histogram::Histogram;
+use super::scorer::{midpoint, split_gain, ScoreKind, SplitCandidate};
+use crate::data::column::SortedEntry;
+use crate::tree::Condition;
+
+/// Per-leaf scan state.
+struct LeafState {
+    hist: Histogram,
+    last_value: Option<f32>,
+    best_gain: f64,
+    best_threshold: f32,
+    best_left: Option<Histogram>,
+    /// Binary-Gini constants of the parent, hoisted out of the
+    /// per-boundary gain (EXPERIMENTS.md §Perf): gain =
+    /// `parent_term − (2/n)·(L1·L0/n_L + R1·R0/n_R)`.
+    inv_n2: f64,
+    parent_term: f64,
+}
+
+impl LeafState {
+    fn new(num_classes: u32, total: &Histogram) -> Self {
+        let n = total.total() as f64;
+        let (inv_n2, parent_term) = if total.counts().len() == 2 && n > 0.0 {
+            let p1 = total.counts()[1] as f64;
+            let p0 = total.counts()[0] as f64;
+            (2.0 / n, 2.0 / n * (p1 * p0 / n))
+        } else {
+            (0.0, 0.0)
+        };
+        Self {
+            hist: Histogram::new(num_classes),
+            last_value: None,
+            best_gain: 0.0,
+            best_threshold: 0.0,
+            best_left: None,
+            inv_n2,
+            parent_term,
+        }
+    }
+}
+
+/// Compute the best `x ≤ τ` split of every open leaf for `feature`.
+///
+/// * `q` — presorted `(value, sample)` entries of the column;
+/// * `labels` — the shared label column (indexed by sample);
+/// * `leaf_totals[h-1]` — bagged label histogram of open leaf rank `h`
+///   (1-based ranks; rank 0 means closed — see [`crate::classlist`]);
+/// * `sample2node(i)` — leaf code of sample `i` (0 = closed/out);
+/// * `is_candidate(h)` — whether this feature was drawn for leaf `h`
+///   (paper Alg. 1's `candidate feature (j, h, p)`);
+/// * `bag(i)` — bagged multiplicity of sample `i` (paper's `bag(i, p)`).
+///
+/// Returns, per leaf rank−1, the best candidate split (gain > 0) if any.
+#[allow(clippy::too_many_arguments)]
+pub fn best_numerical_supersplit(
+    feature: usize,
+    q: &[SortedEntry],
+    labels: &[u32],
+    num_classes: u32,
+    leaf_totals: &[Histogram],
+    kind: ScoreKind,
+    sample2node: impl Fn(u32) -> u32,
+    is_candidate: impl Fn(u32) -> bool,
+    bag: impl Fn(u32) -> u32,
+) -> Vec<Option<SplitCandidate>> {
+    let mut states: Vec<LeafState> = leaf_totals
+        .iter()
+        .map(|t| LeafState::new(num_classes, t))
+        .collect();
+    let binary_gini = num_classes == 2 && kind == ScoreKind::Gini;
+
+    for e in q {
+        let h = sample2node(e.sample);
+        if h == 0 {
+            continue; // closed leaf
+        }
+        if !is_candidate(h) {
+            continue; // feature not drawn for this leaf
+        }
+        let b = bag(e.sample);
+        if b == 0 {
+            continue; // out-of-bag
+        }
+        let st = &mut states[(h - 1) as usize];
+        if let Some(v) = st.last_value {
+            // Only a *distinct-value* boundary is a candidate threshold.
+            if e.value > v {
+                let totals = &leaf_totals[(h - 1) as usize];
+                // Same ranking as scorer::split_gain; the binary-Gini
+                // branch inlines the hoisted-constant form.
+                let gain = if binary_gini {
+                    let l1 = st.hist.counts()[1] as f64;
+                    let l0 = st.hist.counts()[0] as f64;
+                    let nl = l1 + l0;
+                    let p1 = totals.counts()[1] as f64;
+                    let p0 = totals.counts()[0] as f64;
+                    let nr = (p1 - l1) + (p0 - l0);
+                    if nl == 0.0 || nr == 0.0 {
+                        None
+                    } else {
+                        Some(
+                            st.parent_term
+                                - st.inv_n2
+                                    * (l1 * l0 / nl + (p1 - l1) * (p0 - l0) / nr),
+                        )
+                    }
+                } else {
+                    split_gain(kind, totals, &st.hist)
+                };
+                if let Some(gain) = gain {
+                    // Strict '>' keeps the first (lowest) best threshold,
+                    // exactly as Alg. 1's `if s' > s_h`.
+                    if gain > 0.0 && gain > st.best_gain {
+                        st.best_gain = gain;
+                        st.best_threshold = midpoint(v, e.value);
+                        st.best_left = Some(st.hist.clone());
+                    }
+                }
+            }
+        }
+        st.hist.add(labels[e.sample as usize], b);
+        st.last_value = Some(e.value);
+    }
+
+    states
+        .into_iter()
+        .enumerate()
+        .map(|(idx, st)| {
+            let left = st.best_left?;
+            let right = leaf_totals[idx].minus(&left);
+            Some(SplitCandidate {
+                condition: Condition::NumLe {
+                    feature,
+                    threshold: st.best_threshold,
+                },
+                gain: st.best_gain,
+                left_counts: left.into_counts(),
+                right_counts: right.into_counts(),
+            })
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::column::Column;
+
+    fn presort(values: &[f32]) -> Vec<SortedEntry> {
+        Column::Numerical(values.to_vec()).presort()
+    }
+
+    fn totals_of(labels: &[u32], num_classes: u32) -> Vec<Histogram> {
+        let mut h = Histogram::new(num_classes);
+        for &y in labels {
+            h.add(y, 1);
+        }
+        vec![h]
+    }
+
+    #[test]
+    fn perfectly_separable_single_leaf() {
+        // values < 5 are class 0, values >= 5 are class 1.
+        let values = [1.0f32, 2.0, 3.0, 7.0, 8.0, 9.0];
+        let labels = [0u32, 0, 0, 1, 1, 1];
+        let res = best_numerical_supersplit(
+            0,
+            &presort(&values),
+            &labels,
+            2,
+            &totals_of(&labels, 2),
+            ScoreKind::Gini,
+            |_| 1,
+            |_| true,
+            |_| 1,
+        );
+        let c = res[0].as_ref().unwrap();
+        assert!((c.gain - 0.5).abs() < 1e-12, "full gini gain");
+        match &c.condition {
+            Condition::NumLe { threshold, .. } => {
+                assert_eq!(*threshold, 5.0, "midpoint of 3 and 7");
+            }
+            _ => panic!(),
+        }
+        assert_eq!(c.left_counts, vec![3, 0]);
+        assert_eq!(c.right_counts, vec![0, 3]);
+    }
+
+    #[test]
+    fn constant_column_has_no_split() {
+        let values = [2.0f32; 5];
+        let labels = [0u32, 1, 0, 1, 0];
+        let res = best_numerical_supersplit(
+            0,
+            &presort(&values),
+            &labels,
+            2,
+            &totals_of(&labels, 2),
+            ScoreKind::Gini,
+            |_| 1,
+            |_| true,
+            |_| 1,
+        );
+        assert!(res[0].is_none());
+    }
+
+    #[test]
+    fn pure_leaf_has_no_positive_gain() {
+        let values = [1.0f32, 2.0, 3.0];
+        let labels = [1u32, 1, 1];
+        let res = best_numerical_supersplit(
+            0,
+            &presort(&values),
+            &labels,
+            2,
+            &totals_of(&labels, 2),
+            ScoreKind::Gini,
+            |_| 1,
+            |_| true,
+            |_| 1,
+        );
+        assert!(res[0].is_none());
+    }
+
+    #[test]
+    fn respects_bagging_weights() {
+        // Sample 2 (the only class-1 below 5) is out-of-bag; with it
+        // excluded the best split separates perfectly.
+        let values = [1.0f32, 2.0, 3.0, 7.0, 8.0];
+        let labels = [0u32, 0, 1, 1, 1];
+        let bag = |i: u32| if i == 2 { 0 } else { 1 };
+        let mut totals = Histogram::new(2);
+        for (i, &y) in labels.iter().enumerate() {
+            totals.add(y, bag(i as u32));
+        }
+        let res = best_numerical_supersplit(
+            0,
+            &presort(&values),
+            &labels,
+            2,
+            &[totals],
+            ScoreKind::Gini,
+            |_| 1,
+            |_| true,
+            bag,
+        );
+        let c = res[0].as_ref().unwrap();
+        assert_eq!(c.left_counts, vec![2, 0]);
+        assert_eq!(c.right_counts, vec![0, 2]);
+    }
+
+    #[test]
+    fn two_leaves_split_independently_in_one_pass() {
+        // Leaf 1 = even samples (class = value > 4), leaf 2 = odd samples
+        // (class = value > 6).
+        let values = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0];
+        let node = |i: u32| (i % 2) + 1;
+        let labels: Vec<u32> = values
+            .iter()
+            .enumerate()
+            .map(|(i, &v)| {
+                if i % 2 == 0 {
+                    (v > 4.0) as u32
+                } else {
+                    (v > 6.0) as u32
+                }
+            })
+            .collect();
+        let mut t1 = Histogram::new(2);
+        let mut t2 = Histogram::new(2);
+        for (i, &y) in labels.iter().enumerate() {
+            if i % 2 == 0 {
+                t1.add(y, 1)
+            } else {
+                t2.add(y, 1)
+            }
+        }
+        let res = best_numerical_supersplit(
+            0,
+            &presort(&values),
+            &labels,
+            2,
+            &[t1, t2],
+            ScoreKind::Gini,
+            node,
+            |_| true,
+            |_| 1,
+        );
+        let c1 = res[0].as_ref().unwrap();
+        let c2 = res[1].as_ref().unwrap();
+        let thr = |c: &SplitCandidate| match c.condition {
+            Condition::NumLe { threshold, .. } => threshold,
+            _ => panic!(),
+        };
+        assert_eq!(thr(c1), 4.0, "leaf1 splits between 3 and 5");
+        assert_eq!(thr(c2), 7.0, "leaf2 splits between 6 and 8");
+        // Leaf1: [2,2] separated perfectly -> gini gain 0.5.
+        assert!((c1.gain - 0.5).abs() < 1e-12);
+        // Leaf2: [3,1] separated perfectly -> gain = gini([3,1]) = 0.375.
+        assert!((c2.gain - 0.375).abs() < 1e-12);
+    }
+
+    #[test]
+    fn non_candidate_feature_skipped() {
+        let values = [1.0f32, 2.0, 3.0, 4.0];
+        let labels = [0u32, 0, 1, 1];
+        let res = best_numerical_supersplit(
+            0,
+            &presort(&values),
+            &labels,
+            2,
+            &totals_of(&labels, 2),
+            ScoreKind::Gini,
+            |_| 1,
+            |_| false, // not drawn for any leaf
+            |_| 1,
+        );
+        assert!(res[0].is_none());
+    }
+
+    #[test]
+    fn ties_prefer_lowest_threshold() {
+        // Two equally good thresholds (symmetric XOR-free case):
+        // labels 0,1,0,1 -> splits at 1.5 and 3.5 both give gain 0 — no
+        // split. Use labels 0,1,1,0: thresholds 1.5 / 3.5 give equal
+        // gain; Alg. 1's strict '>' keeps the first (1.5).
+        let values = [1.0f32, 2.0, 3.0, 4.0];
+        let labels = [0u32, 1, 1, 0];
+        let res = best_numerical_supersplit(
+            0,
+            &presort(&values),
+            &labels,
+            2,
+            &totals_of(&labels, 2),
+            ScoreKind::Gini,
+            |_| 1,
+            |_| true,
+            |_| 1,
+        );
+        let c = res[0].as_ref().unwrap();
+        match c.condition {
+            Condition::NumLe { threshold, .. } => assert_eq!(threshold, 1.5),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn entropy_kind_works() {
+        let values = [1.0f32, 2.0, 3.0, 4.0];
+        let labels = [0u32, 0, 1, 1];
+        let res = best_numerical_supersplit(
+            0,
+            &presort(&values),
+            &labels,
+            2,
+            &totals_of(&labels, 2),
+            ScoreKind::Entropy,
+            |_| 1,
+            |_| true,
+            |_| 1,
+        );
+        let c = res[0].as_ref().unwrap();
+        assert!((c.gain - std::f64::consts::LN_2).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,265 @@
+//! Regression split search for gradient-boosted trees (paper §1/§2:
+//! "the proposed algorithm can be applied to other DF models, notably
+//! Gradient Boosted Trees").
+//!
+//! Second-order (Newton) scoring à la XGBoost: each sample carries a
+//! gradient/hessian pair `(g, h)`; the quality of a split is
+//!
+//! `gain = ½ [ G_L²/(H_L+λ) + G_R²/(H_R+λ) − G²/(H+λ) ]`
+//!
+//! and the optimal leaf weight is `−G/(H+λ)`. The scan structure is
+//! identical to Alg. 1 (one pass over the presorted column per level),
+//! so a distributed GBT inherits DRF's complexity — except gradients
+//! change per tree, which costs one `2·f32` broadcast per sample per
+//! tree (see DESIGN.md §5 and `forest::gbt`).
+
+use crate::data::column::SortedEntry;
+use crate::splits::scorer::midpoint;
+
+/// Aggregated gradient statistics of a sample set.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct GradStats {
+    pub grad: f64,
+    pub hess: f64,
+}
+
+impl GradStats {
+    #[inline]
+    pub fn add(&mut self, g: f64, h: f64) {
+        self.grad += g;
+        self.hess += h;
+    }
+
+    #[inline]
+    pub fn minus(&self, other: &GradStats) -> GradStats {
+        GradStats {
+            grad: self.grad - other.grad,
+            hess: self.hess - other.hess,
+        }
+    }
+
+    /// Newton objective reduction contributed by a leaf with these stats.
+    #[inline]
+    pub fn score(&self, lambda: f64) -> f64 {
+        self.grad * self.grad / (self.hess + lambda)
+    }
+
+    /// Optimal leaf weight.
+    #[inline]
+    pub fn weight(&self, lambda: f64) -> f64 {
+        -self.grad / (self.hess + lambda)
+    }
+}
+
+/// A found regression split.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RegSplit {
+    pub threshold: f32,
+    pub gain: f64,
+    pub left: GradStats,
+    pub right: GradStats,
+}
+
+/// Best `x ≤ τ` regression split of one node over a presorted column
+/// slice (entries already restricted to the node's rows).
+pub fn best_regression_split(
+    entries: &[SortedEntry],
+    grads: &[f64],
+    hess: &[f64],
+    parent: GradStats,
+    lambda: f64,
+    min_child_hess: f64,
+) -> Option<RegSplit> {
+    let mut left = GradStats::default();
+    let mut last: Option<f32> = None;
+    let mut best: Option<RegSplit> = None;
+    let parent_score = parent.score(lambda);
+    for e in entries {
+        if let Some(v) = last {
+            if e.value > v {
+                let right = parent.minus(&left);
+                if left.hess >= min_child_hess && right.hess >= min_child_hess {
+                    let gain =
+                        0.5 * (left.score(lambda) + right.score(lambda) - parent_score);
+                    // Strict improvement keeps the lowest threshold on ties.
+                    if gain > 1e-12 && best.as_ref().map_or(true, |b| gain > b.gain) {
+                        best = Some(RegSplit {
+                            threshold: midpoint(v, e.value),
+                            gain,
+                            left,
+                            right,
+                        });
+                    }
+                }
+            }
+        }
+        left.add(grads[e.sample as usize], hess[e.sample as usize]);
+        last = Some(e.value);
+    }
+    best
+}
+
+/// A found categorical regression split: subset + stats.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RegCatSplit {
+    pub values: Vec<u32>,
+    pub gain: f64,
+    pub left: GradStats,
+    pub right: GradStats,
+}
+
+/// Best `x ∈ C` regression split of one node. The exact construction
+/// for squared-error-style objectives: sort observed values by their
+/// optimal leaf weight and scan prefixes (the regression analogue of
+/// the Breiman trick).
+pub fn best_categorical_regression(
+    values_in_node: impl Iterator<Item = (u32, f64, f64)>, // (value, g, h)
+    parent: GradStats,
+    lambda: f64,
+    min_child_hess: f64,
+) -> Option<RegCatSplit> {
+    use std::collections::BTreeMap;
+    let mut table: BTreeMap<u32, GradStats> = BTreeMap::new();
+    for (v, g, h) in values_in_node {
+        table.entry(v).or_default().add(g, h);
+    }
+    if table.len() < 2 {
+        return None;
+    }
+    let mut entries: Vec<(u32, GradStats)> = table.into_iter().collect();
+    entries.sort_by(|(va, sa), (vb, sb)| {
+        sa.weight(lambda)
+            .partial_cmp(&sb.weight(lambda))
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(va.cmp(vb))
+    });
+    let parent_score = parent.score(lambda);
+    let mut left = GradStats::default();
+    let mut best: Option<(f64, usize)> = None;
+    for (k, (_, s)) in entries.iter().enumerate().take(entries.len() - 1) {
+        left.add(s.grad, s.hess);
+        let right = parent.minus(&left);
+        if left.hess < min_child_hess || right.hess < min_child_hess {
+            continue;
+        }
+        let gain = 0.5 * (left.score(lambda) + right.score(lambda) - parent_score);
+        if gain > 1e-12 && best.map_or(true, |(bg, _)| gain > bg) {
+            best = Some((gain, k + 1));
+        }
+    }
+    let (gain, prefix) = best?;
+    let mut left = GradStats::default();
+    for (_, s) in &entries[..prefix] {
+        left.add(s.grad, s.hess);
+    }
+    Some(RegCatSplit {
+        values: entries[..prefix].iter().map(|(v, _)| *v).collect(),
+        gain,
+        left,
+        right: parent.minus(&left),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entries(values: &[f32]) -> Vec<SortedEntry> {
+        let mut v: Vec<SortedEntry> = values
+            .iter()
+            .enumerate()
+            .map(|(i, &value)| SortedEntry {
+                value,
+                sample: i as u32,
+            })
+            .collect();
+        v.sort_by(|a, b| a.value.partial_cmp(&b.value).unwrap());
+        v
+    }
+
+    #[test]
+    fn separates_opposite_gradients() {
+        // Samples below 5 want +1, above want -1 (gradients −1 / +1).
+        let values = [1.0f32, 2.0, 3.0, 7.0, 8.0, 9.0];
+        let grads = [-1.0, -1.0, -1.0, 1.0, 1.0, 1.0];
+        let hess = [1.0; 6];
+        let parent = GradStats {
+            grad: 0.0,
+            hess: 6.0,
+        };
+        let s = best_regression_split(&entries(&values), &grads, &hess, parent, 1.0, 0.0)
+            .unwrap();
+        assert_eq!(s.threshold, 5.0);
+        assert!(s.gain > 0.0);
+        assert!((s.left.weight(1.0) - 0.75).abs() < 1e-12); // -(-3)/(3+1)
+        assert!((s.right.weight(1.0) + 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn uniform_gradients_no_split() {
+        let values = [1.0f32, 2.0, 3.0, 4.0];
+        let grads = [1.0; 4];
+        let hess = [1.0; 4];
+        let parent = GradStats {
+            grad: 4.0,
+            hess: 4.0,
+        };
+        assert!(
+            best_regression_split(&entries(&values), &grads, &hess, parent, 1.0, 0.0).is_none()
+        );
+    }
+
+    #[test]
+    fn min_child_hess_enforced() {
+        let values = [1.0f32, 2.0, 3.0, 4.0];
+        let grads = [-5.0, 1.0, 1.0, 1.0];
+        let hess = [0.5; 4];
+        let parent = GradStats {
+            grad: -2.0,
+            hess: 2.0,
+        };
+        // The natural cut isolates sample 0 (hess 0.5) — forbidden at
+        // min_child_hess = 1.0.
+        let s = best_regression_split(&entries(&values), &grads, &hess, parent, 1.0, 1.0);
+        if let Some(s) = s {
+            assert!(s.left.hess >= 1.0 && s.right.hess >= 1.0);
+        }
+    }
+
+    #[test]
+    fn categorical_regression_groups_by_weight() {
+        // values 0,1 pull negative weights; 2,3 positive.
+        let samples = vec![
+            (0u32, 2.0, 1.0),
+            (0, 2.0, 1.0),
+            (1, 1.5, 1.0),
+            (2, -1.5, 1.0),
+            (3, -2.0, 1.0),
+            (3, -2.0, 1.0),
+        ];
+        let mut parent = GradStats::default();
+        for &(_, g, h) in &samples {
+            parent.add(g, h);
+        }
+        let s = best_categorical_regression(samples.into_iter(), parent, 1.0, 0.0).unwrap();
+        // Sorted by weight: positive-grad values first (negative weight).
+        assert!(s.gain > 0.0);
+        let mut vals = s.values.clone();
+        vals.sort_unstable();
+        assert!(vals == vec![0, 1] || vals == vec![2, 3], "grouping {vals:?}");
+    }
+
+    #[test]
+    fn constant_column_no_split() {
+        let values = [2.0f32; 4];
+        let grads = [-1.0, 1.0, -1.0, 1.0];
+        let hess = [1.0; 4];
+        let parent = GradStats {
+            grad: 0.0,
+            hess: 4.0,
+        };
+        assert!(
+            best_regression_split(&entries(&values), &grads, &hess, parent, 1.0, 0.0).is_none()
+        );
+    }
+}

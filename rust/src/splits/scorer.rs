@@ -1,0 +1,306 @@
+//! Split gain and deterministic candidate comparison.
+//!
+//! DRF's exactness claim requires every worker — and the classic
+//! sequential baseline — to rank candidate splits identically. All
+//! ranking therefore goes through this module: the same `f64` gain
+//! formula over exact integer counts, and one total order
+//! ([`SplitCandidate::better_than`]) with explicit tie-breaking.
+
+use super::histogram::Histogram;
+use crate::tree::Condition;
+
+/// Which impurity measure drives split selection.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScoreKind {
+    /// Gini index (Breiman's Random Forest default).
+    Gini,
+    /// Information gain (Shannon entropy).
+    Entropy,
+}
+
+impl Default for ScoreKind {
+    fn default() -> Self {
+        ScoreKind::Gini
+    }
+}
+
+impl ScoreKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ScoreKind::Gini => "gini",
+            ScoreKind::Entropy => "entropy",
+        }
+    }
+
+    pub fn parse(s: &str) -> crate::Result<Self> {
+        Ok(match s {
+            "gini" => ScoreKind::Gini,
+            "entropy" => ScoreKind::Entropy,
+            _ => anyhow::bail!("unknown score kind '{s}'"),
+        })
+    }
+
+    #[inline]
+    pub fn impurity(self, h: &Histogram) -> f64 {
+        match self {
+            ScoreKind::Gini => h.gini(),
+            ScoreKind::Entropy => h.entropy(),
+        }
+    }
+}
+
+/// Weighted impurity decrease of splitting `parent` into `left` and
+/// `parent - left`:
+///
+/// `gain = imp(parent) − (n_L/n)·imp(L) − (n_R/n)·imp(R)`
+///
+/// Returns `None` when either side is empty (not a real split).
+///
+/// Allocation-free: the right child's impurity is computed from the
+/// count differences directly (this sits in Alg. 1's innermost loop —
+/// see EXPERIMENTS.md §Perf).
+#[inline]
+pub fn split_gain(kind: ScoreKind, parent: &Histogram, left: &Histogram) -> Option<f64> {
+    let n = parent.total();
+    let nl = left.total();
+    if nl == 0 || nl >= n {
+        return None;
+    }
+    let nr = n - nl;
+    // Binary Gini fast path (the overwhelmingly common case, and the
+    // innermost loop of Alg. 1): algebraically identical ranking with 3
+    // divisions instead of 5 impurity evaluations —
+    //   gain = 2/n · ( P1·P0/n − L1·L0/n_L − R1·R0/n_R ).
+    if kind == ScoreKind::Gini && parent.counts().len() == 2 {
+        let p1 = parent.counts()[1] as f64;
+        let p0 = parent.counts()[0] as f64;
+        let l1 = left.counts()[1] as f64;
+        let l0 = left.counts()[0] as f64;
+        let r1 = p1 - l1;
+        let r0 = p0 - l0;
+        let nf = n as f64;
+        return Some(
+            2.0 / nf * (p1 * p0 / nf - l1 * l0 / nl as f64 - r1 * r0 / nr as f64),
+        );
+    }
+    let imp = |counts: ImpurityInput<'_>, total: u64| -> f64 {
+        let t = total as f64;
+        match kind {
+            ScoreKind::Gini => {
+                let mut acc = 0.0;
+                counts.for_each(|c| {
+                    let p = c as f64 / t;
+                    acc += p * p;
+                });
+                1.0 - acc
+            }
+            ScoreKind::Entropy => {
+                let mut acc = 0.0;
+                counts.for_each(|c| {
+                    if c > 0 {
+                        let p = c as f64 / t;
+                        acc -= p * p.ln();
+                    }
+                });
+                acc
+            }
+        }
+    };
+    let pc = parent.counts();
+    let lc = left.counts();
+    let nf = n as f64;
+    Some(
+        imp(ImpurityInput::Direct(pc), n)
+            - (nl as f64 / nf) * imp(ImpurityInput::Direct(lc), nl)
+            - (nr as f64 / nf) * imp(ImpurityInput::Diff(pc, lc), nr),
+    )
+}
+
+/// Count source for impurity: a slice, or an elementwise difference of
+/// two slices (the right child), iterated without materialization.
+enum ImpurityInput<'a> {
+    Direct(&'a [u64]),
+    Diff(&'a [u64], &'a [u64]),
+}
+
+impl ImpurityInput<'_> {
+    #[inline]
+    fn for_each(&self, mut f: impl FnMut(u64)) {
+        match self {
+            ImpurityInput::Direct(c) => {
+                for &v in *c {
+                    f(v);
+                }
+            }
+            ImpurityInput::Diff(a, b) => {
+                for (&x, &y) in a.iter().zip(*b) {
+                    debug_assert!(x >= y);
+                    f(x - y);
+                }
+            }
+        }
+    }
+}
+
+/// Midpoint threshold between two consecutive distinct sorted values
+/// (Alg. 1's `τ = (a + v_h)/2`). Computed in f64, stored as f32 —
+/// **every implementation must use this function** so thresholds agree
+/// bit-for-bit.
+#[inline]
+pub fn midpoint(lo: f32, hi: f32) -> f32 {
+    ((lo as f64 + hi as f64) / 2.0) as f32
+}
+
+/// A fully scored candidate split for one leaf.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SplitCandidate {
+    pub condition: Condition,
+    /// Weighted impurity decrease (strictly positive for usable splits).
+    pub gain: f64,
+    /// Label histogram of the left child (condition true).
+    pub left_counts: Vec<u64>,
+    /// Label histogram of the right child.
+    pub right_counts: Vec<u64>,
+}
+
+impl SplitCandidate {
+    /// Total order used everywhere a "best" split is chosen.
+    ///
+    /// Higher gain wins. Exact ties break to the **lower feature
+    /// index**, then to the numerically lower threshold / smaller
+    /// category set — all deterministic, no HashMap iteration order or
+    /// float ambiguity involved.
+    pub fn better_than(&self, other: &SplitCandidate) -> bool {
+        if self.gain != other.gain {
+            return self.gain > other.gain;
+        }
+        let (fa, fb) = (self.condition.feature(), other.condition.feature());
+        if fa != fb {
+            return fa < fb;
+        }
+        match (&self.condition, &other.condition) {
+            (
+                Condition::NumLe { threshold: a, .. },
+                Condition::NumLe { threshold: b, .. },
+            ) => a < b,
+            (Condition::CatIn { set: a, .. }, Condition::CatIn { set: b, .. }) => {
+                if a.len() != b.len() {
+                    return a.len() < b.len();
+                }
+                // Lexicographic on members.
+                a.iter().lt(b.iter())
+            }
+            // A feature is either numerical or categorical, never both.
+            _ => false,
+        }
+    }
+}
+
+/// Reduce candidates to the best one (used by splitters over their local
+/// features and by the tree builder over splitter answers).
+pub fn pick_best(candidates: impl IntoIterator<Item = SplitCandidate>) -> Option<SplitCandidate> {
+    let mut best: Option<SplitCandidate> = None;
+    for c in candidates {
+        match &best {
+            None => best = Some(c),
+            Some(b) => {
+                if c.better_than(b) {
+                    best = Some(c);
+                }
+            }
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tree::CategorySet;
+
+    fn num_cand(feature: usize, threshold: f32, gain: f64) -> SplitCandidate {
+        SplitCandidate {
+            condition: Condition::NumLe { feature, threshold },
+            gain,
+            left_counts: vec![1, 0],
+            right_counts: vec![0, 1],
+        }
+    }
+
+    #[test]
+    fn gain_matches_hand_computation() {
+        // parent: [4, 4] gini 0.5; left [4, 0] gini 0; right [0, 4] gini 0.
+        let parent = Histogram::from_counts(vec![4, 4]);
+        let left = Histogram::from_counts(vec![4, 0]);
+        let g = split_gain(ScoreKind::Gini, &parent, &left).unwrap();
+        assert!((g - 0.5).abs() < 1e-12);
+        // Useless split: left [2,2] -> gain 0.
+        let left2 = Histogram::from_counts(vec![2, 2]);
+        let g2 = split_gain(ScoreKind::Gini, &parent, &left2).unwrap();
+        assert!(g2.abs() < 1e-12);
+    }
+
+    #[test]
+    fn gain_rejects_empty_sides() {
+        let parent = Histogram::from_counts(vec![4, 4]);
+        assert!(split_gain(ScoreKind::Gini, &parent, &Histogram::new(2)).is_none());
+        assert!(split_gain(ScoreKind::Gini, &parent, &parent).is_none());
+    }
+
+    #[test]
+    fn entropy_gain_positive_for_separating_split() {
+        let parent = Histogram::from_counts(vec![6, 2]);
+        let left = Histogram::from_counts(vec![6, 0]);
+        let g = split_gain(ScoreKind::Entropy, &parent, &left).unwrap();
+        assert!(g > 0.0);
+    }
+
+    #[test]
+    fn ordering_gain_then_feature_then_threshold() {
+        let a = num_cand(3, 1.0, 0.5);
+        let b = num_cand(0, 1.0, 0.4);
+        assert!(a.better_than(&b), "higher gain wins");
+        let c = num_cand(0, 1.0, 0.5);
+        assert!(c.better_than(&a), "tie: lower feature wins");
+        let d = num_cand(0, 0.5, 0.5);
+        assert!(d.better_than(&c), "tie: lower threshold wins");
+        assert!(!c.better_than(&c), "irreflexive");
+    }
+
+    #[test]
+    fn ordering_categorical_sets() {
+        let mk = |vals: &[u32], gain: f64| SplitCandidate {
+            condition: Condition::CatIn {
+                feature: 1,
+                set: CategorySet::from_values(10, vals.iter().copied()),
+            },
+            gain,
+            left_counts: vec![1, 0],
+            right_counts: vec![0, 1],
+        };
+        let small = mk(&[1], 0.3);
+        let big = mk(&[1, 2], 0.3);
+        assert!(small.better_than(&big), "tie: smaller set wins");
+        let lex1 = mk(&[1, 3], 0.3);
+        let lex2 = mk(&[2, 3], 0.3);
+        assert!(lex1.better_than(&lex2), "tie: lexicographic");
+    }
+
+    #[test]
+    fn pick_best_returns_max() {
+        let best = pick_best(vec![
+            num_cand(1, 0.0, 0.1),
+            num_cand(2, 0.0, 0.9),
+            num_cand(3, 0.0, 0.5),
+        ])
+        .unwrap();
+        assert_eq!(best.condition.feature(), 2);
+        assert!(pick_best(vec![]).is_none());
+    }
+
+    #[test]
+    fn midpoint_deterministic() {
+        assert_eq!(midpoint(1.0, 2.0), 1.5);
+        assert_eq!(midpoint(0.1, 0.2), ((0.1f32 as f64 + 0.2f32 as f64) / 2.0) as f32);
+    }
+}

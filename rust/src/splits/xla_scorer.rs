@@ -1,0 +1,420 @@
+//! Batched split scoring through the AOT XLA/Pallas artifact.
+//!
+//! The Pallas kernel (`python/compile/kernels/split_gain.py`) computes,
+//! for a batch of `B` scoring *tasks* × `T` candidate thresholds, the
+//! binary Gini gain of every threshold plus the per-task argmax. A task
+//! is one (leaf, feature) pair: its inputs are the cumulative
+//! positive/total weights at each candidate boundary (exactly the
+//! prefix state Alg. 1 maintains incrementally).
+//!
+//! This is the paper's compute hot-spot lifted to the accelerator stack.
+//! It is **optional**: the scalar scorer in [`super::numerical`] is the
+//! default and the exactness oracle (the kernel computes in f32; ties
+//! can fall differently than the f64 scalar path, so XLA scoring is for
+//! throughput experiments, not for bit-exact reproduction — see
+//! DESIGN.md §5.5).
+
+use super::histogram::Histogram;
+use super::scorer::{midpoint, SplitCandidate};
+use crate::data::column::SortedEntry;
+use crate::runtime::{literal_f32, Executable, XlaRuntime};
+use crate::tree::Condition;
+use crate::Result;
+use std::path::Path;
+
+/// One scoring task: cumulative counts at each candidate boundary.
+#[derive(Debug, Clone, Default)]
+pub struct ScoreTask {
+    /// Cumulative class-1 weight at each boundary (left side of the cut).
+    pub pos_prefix: Vec<f32>,
+    /// Cumulative total weight at each boundary.
+    pub tot_prefix: Vec<f32>,
+    /// Parent class-1 weight.
+    pub parent_pos: f32,
+    /// Parent total weight.
+    pub parent_tot: f32,
+}
+
+/// Result of one task: best boundary index and its gain.
+pub type TaskBest = Option<(usize, f64)>;
+
+/// Anything that can score batches of tasks. Implemented by
+/// [`XlaScorer`] (same-thread use) and [`ScorerClient`] (cross-thread
+/// use — the PJRT client is `!Send`, so in the threaded runtime a
+/// [`ScorerService`] thread owns it and splitters talk to it over a
+/// channel, like a device server).
+pub trait ScoreTasks {
+    fn score_tasks(&self, tasks: &[ScoreTask]) -> Result<Vec<TaskBest>>;
+}
+
+/// The loaded split-scorer artifact (fixed `B × T` block shape; callers
+/// chunk and pad).
+pub struct XlaScorer {
+    exe: Executable,
+    batch: usize,
+    thresholds: usize,
+}
+
+impl XlaScorer {
+    /// Artifact file name for a block shape.
+    pub fn artifact_name(batch: usize, thresholds: usize) -> String {
+        format!("split_scorer_{batch}x{thresholds}.hlo.txt")
+    }
+
+    /// Load `artifacts/split_scorer_{B}x{T}.hlo.txt` from `dir`.
+    pub fn load(rt: &XlaRuntime, dir: &Path, batch: usize, thresholds: usize) -> Result<Self> {
+        let path = dir.join(Self::artifact_name(batch, thresholds));
+        let exe = rt.load_hlo_file(&path)?;
+        Ok(Self {
+            exe,
+            batch,
+            thresholds,
+        })
+    }
+
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    pub fn thresholds(&self) -> usize {
+        self.thresholds
+    }
+
+    /// Score a slice of tasks (any length; chunked into `B`-sized calls,
+    /// each task's boundary list truncated/padded to `T`).
+    ///
+    /// Tasks with more than `T` boundaries are scored in multiple chunks
+    /// and reduced (first-best wins ties, matching `jnp.argmax`).
+    pub fn score_tasks(&self, tasks: &[ScoreTask]) -> Result<Vec<TaskBest>> {
+        // Expand tasks into (task_idx, boundary_offset) chunks of <= T.
+        struct Chunk {
+            task: usize,
+            offset: usize,
+            len: usize,
+        }
+        let mut chunks = Vec::new();
+        for (ti, task) in tasks.iter().enumerate() {
+            debug_assert_eq!(task.pos_prefix.len(), task.tot_prefix.len());
+            if task.pos_prefix.is_empty() {
+                continue;
+            }
+            let mut off = 0;
+            while off < task.pos_prefix.len() {
+                let len = (task.pos_prefix.len() - off).min(self.thresholds);
+                chunks.push(Chunk {
+                    task: ti,
+                    offset: off,
+                    len,
+                });
+                off += len;
+            }
+        }
+
+        let mut best: Vec<TaskBest> = vec![None; tasks.len()];
+        let (b, t) = (self.batch, self.thresholds);
+        for group in chunks.chunks(b) {
+            let mut pos = vec![0f32; b * t];
+            let mut tot = vec![0f32; b * t];
+            let mut valid = vec![0f32; b * t];
+            let mut ppos = vec![0f32; b];
+            let mut ptot = vec![1f32; b]; // avoid 0/0 in padding rows
+            for (row, ch) in group.iter().enumerate() {
+                let task = &tasks[ch.task];
+                let src = ch.offset..ch.offset + ch.len;
+                pos[row * t..row * t + ch.len].copy_from_slice(&task.pos_prefix[src.clone()]);
+                tot[row * t..row * t + ch.len].copy_from_slice(&task.tot_prefix[src]);
+                valid[row * t..row * t + ch.len].fill(1.0);
+                ppos[row] = task.parent_pos;
+                ptot[row] = task.parent_tot.max(1.0);
+            }
+            let inputs = [
+                literal_f32(&pos, &[b as i64, t as i64])?,
+                literal_f32(&tot, &[b as i64, t as i64])?,
+                literal_f32(&ppos, &[b as i64])?,
+                literal_f32(&ptot, &[b as i64])?,
+                literal_f32(&valid, &[b as i64, t as i64])?,
+            ];
+            let outputs = self.exe.execute_tuple(&inputs)?;
+            anyhow::ensure!(outputs.len() == 2, "expected (best_gain, best_idx)");
+            let gains = outputs[0].to_vec::<f32>()?;
+            let idxs = outputs[1].to_vec::<i32>()?;
+            for (row, ch) in group.iter().enumerate() {
+                let g = gains[row] as f64;
+                let idx = idxs[row] as usize;
+                if g > 0.0 && idx < ch.len {
+                    let global_idx = ch.offset + idx;
+                    let cur = &mut best[ch.task];
+                    // Strictly-greater: earlier chunks win ties, matching
+                    // a single argmax over the concatenation.
+                    if cur.map_or(true, |(_, bg)| g > bg) {
+                        *cur = Some((global_idx, g));
+                    }
+                }
+            }
+        }
+        Ok(best)
+    }
+}
+
+impl ScoreTasks for XlaScorer {
+    fn score_tasks(&self, tasks: &[ScoreTask]) -> Result<Vec<TaskBest>> {
+        XlaScorer::score_tasks(self, tasks)
+    }
+}
+
+/// A scoring request travelling to the service thread.
+type ScoreRequest = (Vec<ScoreTask>, std::sync::mpsc::Sender<Result<Vec<TaskBest>>>);
+
+/// Dedicated thread owning the PJRT client + compiled artifact.
+/// Splitter threads hold [`ScorerClient`]s.
+pub struct ScorerService {
+    tx: std::sync::mpsc::Sender<ScoreRequest>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ScorerService {
+    /// Spawn the service; fails fast if the artifact cannot be loaded.
+    pub fn spawn(artifacts_dir: &Path, batch: usize, thresholds: usize) -> Result<Self> {
+        let (tx, rx) = std::sync::mpsc::channel::<ScoreRequest>();
+        let (ready_tx, ready_rx) = std::sync::mpsc::channel::<std::result::Result<(), String>>();
+        let dir = artifacts_dir.to_path_buf();
+        let handle = std::thread::Builder::new()
+            .name("drf-xla-scorer".into())
+            .spawn(move || {
+                let scorer = XlaRuntime::cpu()
+                    .and_then(|rt| XlaScorer::load(&rt, &dir, batch, thresholds));
+                let scorer = match scorer {
+                    Ok(s) => {
+                        let _ = ready_tx.send(Ok(()));
+                        s
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(format!("{e:#}")));
+                        return;
+                    }
+                };
+                while let Ok((tasks, reply)) = rx.recv() {
+                    let _ = reply.send(scorer.score_tasks(&tasks));
+                }
+            })?;
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("scorer service died during startup"))?
+            .map_err(|e| anyhow::anyhow!("loading XLA scorer artifact: {e}"))?;
+        Ok(Self {
+            tx,
+            handle: Some(handle),
+        })
+    }
+
+    /// A cloneable, `Send + Sync` client handle.
+    pub fn client(&self) -> ScorerClient {
+        ScorerClient {
+            tx: std::sync::Mutex::new(self.tx.clone()),
+        }
+    }
+}
+
+impl Drop for ScorerService {
+    fn drop(&mut self) {
+        // Closing the channel stops the service loop.
+        let (tx, _) = std::sync::mpsc::channel();
+        self.tx = tx;
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Channel-backed scorer handle (Send + Sync; `mpsc::Sender` is Send but
+/// not Sync, hence the mutex).
+pub struct ScorerClient {
+    tx: std::sync::Mutex<std::sync::mpsc::Sender<ScoreRequest>>,
+}
+
+impl ScoreTasks for ScorerClient {
+    fn score_tasks(&self, tasks: &[ScoreTask]) -> Result<Vec<TaskBest>> {
+        let (reply_tx, reply_rx) = std::sync::mpsc::channel();
+        self.tx
+            .lock()
+            .unwrap()
+            .send((tasks.to_vec(), reply_tx))
+            .map_err(|_| anyhow::anyhow!("scorer service is gone"))?;
+        reply_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("scorer service dropped the request"))?
+    }
+}
+
+/// Candidate boundaries of one leaf collected from a presorted scan:
+/// the inputs the XLA scorer needs, plus the threshold values.
+#[derive(Debug, Clone, Default)]
+pub struct LeafBoundaries {
+    /// Midpoint thresholds, one per candidate boundary.
+    pub thresholds: Vec<f32>,
+    /// Cumulative (left-side) class-1 weight at each boundary.
+    pub pos_prefix: Vec<f32>,
+    /// Cumulative total weight at each boundary.
+    pub tot_prefix: Vec<f32>,
+    /// Left-side full histograms at each boundary — kept so the winning
+    /// boundary can be turned into a `SplitCandidate` with exact counts.
+    pub left_hists: Vec<Histogram>,
+}
+
+/// Scan a presorted numerical column and materialize, per open leaf, the
+/// candidate-boundary arrays (the "wide" form of Alg. 1's incremental
+/// state). Shared by the XLA scoring path and its tests.
+#[allow(clippy::too_many_arguments)]
+pub fn collect_boundaries(
+    q: &[SortedEntry],
+    labels: &[u32],
+    num_classes: u32,
+    num_leaves: usize,
+    sample2node: impl Fn(u32) -> u32,
+    is_candidate: impl Fn(u32) -> bool,
+    bag: impl Fn(u32) -> u32,
+) -> Vec<LeafBoundaries> {
+    struct State {
+        hist: Histogram,
+        last: Option<f32>,
+    }
+    let mut states: Vec<State> = (0..num_leaves)
+        .map(|_| State {
+            hist: Histogram::new(num_classes),
+            last: None,
+        })
+        .collect();
+    let mut out: Vec<LeafBoundaries> = vec![LeafBoundaries::default(); num_leaves];
+
+    for e in q {
+        let h = sample2node(e.sample);
+        if h == 0 || !is_candidate(h) {
+            continue;
+        }
+        let b = bag(e.sample);
+        if b == 0 {
+            continue;
+        }
+        let st = &mut states[(h - 1) as usize];
+        if let Some(v) = st.last {
+            if e.value > v {
+                let lb = &mut out[(h - 1) as usize];
+                lb.thresholds.push(midpoint(v, e.value));
+                lb.pos_prefix
+                    .push(st.hist.counts().get(1).copied().unwrap_or(0) as f32);
+                lb.tot_prefix.push(st.hist.total() as f32);
+                lb.left_hists.push(st.hist.clone());
+            }
+        }
+        st.hist.add(labels[e.sample as usize], b);
+        st.last = Some(e.value);
+    }
+    out
+}
+
+/// XLA-accelerated variant of Alg. 1: collect boundaries, score them in
+/// batch on the artifact, and assemble `SplitCandidate`s. Binary labels
+/// only (the kernel computes binary Gini).
+#[allow(clippy::too_many_arguments)]
+pub fn best_numerical_supersplit_xla(
+    scorer: &dyn ScoreTasks,
+    feature: usize,
+    q: &[SortedEntry],
+    labels: &[u32],
+    leaf_totals: &[Histogram],
+    sample2node: impl Fn(u32) -> u32,
+    is_candidate: impl Fn(u32) -> bool,
+    bag: impl Fn(u32) -> u32,
+) -> Result<Vec<Option<SplitCandidate>>> {
+    let num_leaves = leaf_totals.len();
+    let boundaries = collect_boundaries(
+        q,
+        labels,
+        2,
+        num_leaves,
+        sample2node,
+        is_candidate,
+        bag,
+    );
+    let tasks: Vec<ScoreTask> = boundaries
+        .iter()
+        .zip(leaf_totals)
+        .map(|(lb, total)| ScoreTask {
+            pos_prefix: lb.pos_prefix.clone(),
+            tot_prefix: lb.tot_prefix.clone(),
+            parent_pos: total.counts().get(1).copied().unwrap_or(0) as f32,
+            parent_tot: total.total() as f32,
+        })
+        .collect();
+    let bests = scorer.score_tasks(&tasks)?;
+    Ok(bests
+        .into_iter()
+        .enumerate()
+        .map(|(leaf, best)| {
+            let (idx, gain) = best?;
+            let lb = &boundaries[leaf];
+            let left = lb.left_hists[idx].clone();
+            let right = leaf_totals[leaf].minus(&left);
+            Some(SplitCandidate {
+                condition: Condition::NumLe {
+                    feature,
+                    threshold: lb.thresholds[idx],
+                },
+                gain,
+                left_counts: left.into_counts(),
+                right_counts: right.into_counts(),
+            })
+        })
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::column::Column;
+
+    #[test]
+    fn collect_boundaries_matches_manual() {
+        // values 1,2,2,3 labels 0,1,1,1 — boundaries at 1.5 (between 1
+        // and 2) and 2.5 (between 2 and 3).
+        let col = Column::Numerical(vec![1.0, 2.0, 2.0, 3.0]);
+        let labels = [0u32, 1, 1, 1];
+        let out = collect_boundaries(
+            &col.presort(),
+            &labels,
+            2,
+            1,
+            |_| 1,
+            |_| true,
+            |_| 1,
+        );
+        let lb = &out[0];
+        assert_eq!(lb.thresholds, vec![1.5, 2.5]);
+        assert_eq!(lb.pos_prefix, vec![0.0, 2.0]);
+        assert_eq!(lb.tot_prefix, vec![1.0, 3.0]);
+        assert_eq!(lb.left_hists[1].counts(), &[1, 2]);
+    }
+
+    #[test]
+    fn collect_boundaries_respects_closed_and_oob() {
+        let col = Column::Numerical(vec![1.0, 2.0, 3.0, 4.0]);
+        let labels = [0u32, 1, 0, 1];
+        // Sample 1 out of bag; samples routed to leaf 1 except sample 3
+        // (closed).
+        let out = collect_boundaries(
+            &col.presort(),
+            &labels,
+            2,
+            1,
+            |i| if i == 3 { 0 } else { 1 },
+            |_| true,
+            |i| if i == 1 { 0 } else { 1 },
+        );
+        // Remaining live samples: 0 (v=1) and 2 (v=3) -> one boundary at 2.
+        assert_eq!(out[0].thresholds, vec![2.0]);
+        assert_eq!(out[0].tot_prefix, vec![1.0]);
+    }
+
+    // End-to-end kernel agreement tests live in rust/tests/xla_agreement.rs
+    // (they need `make artifacts`).
+}

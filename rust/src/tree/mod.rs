@@ -1,0 +1,373 @@
+//! Decision tree structure: nodes, split conditions, and tree metrics.
+//!
+//! Conditions follow the paper §2.4: numerical columns split on
+//! `x ≤ τ` (τ ∈ ℝ), categorical columns split on `x ∈ C` with `C` a
+//! subset of the column's support, stored as a bitset.
+//!
+//! Node ids are assigned in **breadth-first creation order** — the same
+//! order in both the distributed builder and the classic baseline — so
+//! that deterministic per-node feature sampling (keyed by node id) makes
+//! the two algorithms produce *identical* trees. This is the crux of the
+//! "exact" claim and is enforced by `tests/exactness.rs`.
+
+pub mod predict;
+pub mod serialize;
+
+
+/// A set of category ids, bit-packed. Categorical split conditions test
+/// membership in such a set.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CategorySet {
+    arity: u32,
+    words: Vec<u64>,
+}
+
+impl CategorySet {
+    pub fn empty(arity: u32) -> Self {
+        Self {
+            arity,
+            words: vec![0u64; (arity as usize).div_ceil(64)],
+        }
+    }
+
+    pub fn from_values(arity: u32, values: impl IntoIterator<Item = u32>) -> Self {
+        let mut s = Self::empty(arity);
+        for v in values {
+            s.insert(v);
+        }
+        s
+    }
+
+    pub fn arity(&self) -> u32 {
+        self.arity
+    }
+
+    #[inline]
+    pub fn insert(&mut self, v: u32) {
+        debug_assert!(v < self.arity);
+        self.words[(v / 64) as usize] |= 1u64 << (v % 64);
+    }
+
+    #[inline]
+    pub fn contains(&self, v: u32) -> bool {
+        if v >= self.arity {
+            return false;
+        }
+        (self.words[(v / 64) as usize] >> (v % 64)) & 1 == 1
+    }
+
+    pub fn len(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = u32> + '_ {
+        (0..self.arity).filter(move |&v| self.contains(v))
+    }
+
+    /// Wire size in bytes when shipped in a supersplit answer.
+    pub fn wire_bytes(&self) -> u64 {
+        4 + self.words.len() as u64 * 8
+    }
+}
+
+/// A split condition; `true` routes the sample to the **left** child.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Condition {
+    /// `x[feature] <= threshold`.
+    NumLe { feature: usize, threshold: f32 },
+    /// `x[feature] ∈ set`.
+    CatIn { feature: usize, set: CategorySet },
+}
+
+impl Condition {
+    pub fn feature(&self) -> usize {
+        match self {
+            Condition::NumLe { feature, .. } | Condition::CatIn { feature, .. } => *feature,
+        }
+    }
+
+    /// Wire size in bytes (for network accounting).
+    pub fn wire_bytes(&self) -> u64 {
+        match self {
+            Condition::NumLe { .. } => 4 + 4,
+            Condition::CatIn { set, .. } => 4 + set.wire_bytes(),
+        }
+    }
+}
+
+/// Sentinel for "no child".
+pub const NO_CHILD: u32 = u32::MAX;
+
+/// One tree node.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Node {
+    /// Split condition; `None` for leaves.
+    pub condition: Option<Condition>,
+    /// Left child id (condition true), or `NO_CHILD`.
+    pub left: u32,
+    /// Right child id (condition false), or `NO_CHILD`.
+    pub right: u32,
+    /// Depth (root = 0).
+    pub depth: u32,
+    /// Bagged (weighted) label histogram of training samples at this node.
+    pub class_counts: Vec<u64>,
+    /// Gain of the chosen split (0 for leaves); feeds feature importance.
+    pub split_gain: f64,
+}
+
+impl Node {
+    pub fn is_leaf(&self) -> bool {
+        self.condition.is_none()
+    }
+
+    /// Total bagged weight at this node.
+    pub fn total_count(&self) -> u64 {
+        self.class_counts.iter().sum()
+    }
+
+    /// Majority class (ties to the lower class id, deterministically).
+    pub fn majority_class(&self) -> u32 {
+        let mut best = 0usize;
+        for (c, &n) in self.class_counts.iter().enumerate() {
+            if n > self.class_counts[best] {
+                best = c;
+            }
+        }
+        best as u32
+    }
+
+    /// P(class) estimates (uniform if the node is empty).
+    pub fn distribution(&self) -> Vec<f64> {
+        let total = self.total_count();
+        if total == 0 {
+            return vec![1.0 / self.class_counts.len() as f64; self.class_counts.len()];
+        }
+        self.class_counts
+            .iter()
+            .map(|&c| c as f64 / total as f64)
+            .collect()
+    }
+}
+
+/// A decision tree. Node 0 is the root; children are appended in
+/// breadth-first creation order during training.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tree {
+    pub nodes: Vec<Node>,
+    pub num_classes: u32,
+}
+
+impl Tree {
+    /// A tree with a single root leaf holding `class_counts`.
+    pub fn new_root(class_counts: Vec<u64>) -> Self {
+        let num_classes = class_counts.len() as u32;
+        Self {
+            nodes: vec![Node {
+                condition: None,
+                left: NO_CHILD,
+                right: NO_CHILD,
+                depth: 0,
+                class_counts,
+                split_gain: 0.0,
+            }],
+            num_classes,
+        }
+    }
+
+    /// Split a leaf: attach `condition` and create left/right children
+    /// with the given histograms. Returns `(left_id, right_id)`.
+    pub fn split_node(
+        &mut self,
+        node_id: u32,
+        condition: Condition,
+        gain: f64,
+        left_counts: Vec<u64>,
+        right_counts: Vec<u64>,
+    ) -> (u32, u32) {
+        let depth = self.nodes[node_id as usize].depth;
+        assert!(
+            self.nodes[node_id as usize].is_leaf(),
+            "splitting a non-leaf"
+        );
+        let left = self.nodes.len() as u32;
+        let right = left + 1;
+        self.nodes.push(Node {
+            condition: None,
+            left: NO_CHILD,
+            right: NO_CHILD,
+            depth: depth + 1,
+            class_counts: left_counts,
+            split_gain: 0.0,
+        });
+        self.nodes.push(Node {
+            condition: None,
+            left: NO_CHILD,
+            right: NO_CHILD,
+            depth: depth + 1,
+            class_counts: right_counts,
+            split_gain: 0.0,
+        });
+        let node = &mut self.nodes[node_id as usize];
+        node.condition = Some(condition);
+        node.left = left;
+        node.right = right;
+        node.split_gain = gain;
+        (left, right)
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn num_leaves(&self) -> usize {
+        self.nodes.iter().filter(|n| n.is_leaf()).count()
+    }
+
+    /// Effective depth D: depth of the deepest leaf.
+    pub fn depth(&self) -> u32 {
+        self.nodes
+            .iter()
+            .filter(|n| n.is_leaf())
+            .map(|n| n.depth)
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Average leaf depth weighted by bagged sample count (paper's D̄).
+    pub fn mean_leaf_depth(&self) -> f64 {
+        let (mut num, mut den) = (0.0, 0.0);
+        for n in self.nodes.iter().filter(|n| n.is_leaf()) {
+            let w = n.total_count() as f64;
+            num += n.depth as f64 * w;
+            den += w;
+        }
+        if den == 0.0 {
+            0.0
+        } else {
+            num / den
+        }
+    }
+
+    /// Node density (paper §5): #leaves / 2^D — how close the tree is to
+    /// a dense tree of the same depth.
+    pub fn node_density(&self) -> f64 {
+        let d = self.depth();
+        self.num_leaves() as f64 / 2f64.powi(d as i32)
+    }
+
+    /// Sample density (paper §5): fraction of bagged training weight
+    /// sitting in leaves at the maximum depth.
+    pub fn sample_density(&self) -> f64 {
+        let d = self.depth();
+        let (mut deep, mut total) = (0u64, 0u64);
+        for n in self.nodes.iter().filter(|n| n.is_leaf()) {
+            let w = n.total_count();
+            total += w;
+            if n.depth == d {
+                deep += w;
+            }
+        }
+        if total == 0 {
+            0.0
+        } else {
+            deep as f64 / total as f64
+        }
+    }
+
+    /// Leaf ids in id order.
+    pub fn leaf_ids(&self) -> Vec<u32> {
+        (0..self.nodes.len() as u32)
+            .filter(|&i| self.nodes[i as usize].is_leaf())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn split_cond(f: usize, t: f32) -> Condition {
+        Condition::NumLe {
+            feature: f,
+            threshold: t,
+        }
+    }
+
+    #[test]
+    fn category_set_ops() {
+        let mut s = CategorySet::empty(130);
+        s.insert(0);
+        s.insert(64);
+        s.insert(129);
+        assert!(s.contains(0) && s.contains(64) && s.contains(129));
+        assert!(!s.contains(1) && !s.contains(200));
+        assert_eq!(s.len(), 3);
+        assert_eq!(s.iter().collect::<Vec<_>>(), vec![0, 64, 129]);
+        let s2 = CategorySet::from_values(130, [0, 64, 129]);
+        assert_eq!(s, s2);
+    }
+
+    #[test]
+    fn tree_construction_and_metrics() {
+        let mut t = Tree::new_root(vec![6, 4]);
+        assert_eq!(t.num_leaves(), 1);
+        assert_eq!(t.depth(), 0);
+        let (l, r) = t.split_node(0, split_cond(0, 0.5), 0.1, vec![5, 1], vec![1, 3]);
+        assert_eq!((l, r), (1, 2));
+        assert_eq!(t.num_nodes(), 3);
+        assert_eq!(t.num_leaves(), 2);
+        assert_eq!(t.depth(), 1);
+        assert_eq!(t.node_density(), 1.0); // 2 leaves / 2^1
+        let (_l2, _r2) = t.split_node(1, split_cond(1, 0.0), 0.05, vec![5, 0], vec![0, 1]);
+        assert_eq!(t.num_leaves(), 3);
+        assert_eq!(t.depth(), 2);
+        assert_eq!(t.node_density(), 3.0 / 4.0);
+        // Deep leaves hold 6 of 10 samples.
+        assert!((t.sample_density() - 0.6).abs() < 1e-12);
+        // D̄ = (2*5 + 2*1 + 1*4)/10 = 1.6
+        assert!((t.mean_leaf_depth() - 1.6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn majority_and_distribution() {
+        let n = Node {
+            condition: None,
+            left: NO_CHILD,
+            right: NO_CHILD,
+            depth: 0,
+            class_counts: vec![2, 5, 3],
+            split_gain: 0.0,
+        };
+        assert_eq!(n.majority_class(), 1);
+        let d = n.distribution();
+        assert!((d[1] - 0.5).abs() < 1e-12);
+        // Tie breaks low.
+        let tie = Node {
+            class_counts: vec![3, 3],
+            ..n.clone()
+        };
+        assert_eq!(tie.majority_class(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "non-leaf")]
+    fn double_split_panics() {
+        let mut t = Tree::new_root(vec![1, 1]);
+        t.split_node(0, split_cond(0, 0.5), 0.0, vec![1, 0], vec![0, 1]);
+        t.split_node(0, split_cond(0, 0.5), 0.0, vec![1, 0], vec![0, 1]);
+    }
+
+    #[test]
+    fn condition_wire_bytes() {
+        assert_eq!(split_cond(3, 1.0).wire_bytes(), 8);
+        let c = Condition::CatIn {
+            feature: 1,
+            set: CategorySet::empty(100),
+        };
+        assert_eq!(c.wire_bytes(), 4 + 4 + 16);
+    }
+}

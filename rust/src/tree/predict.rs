@@ -1,0 +1,172 @@
+//! Tree and forest inference.
+
+use super::{Condition, Tree};
+use crate::data::dataset::{Dataset, RowView};
+
+impl Tree {
+    /// Walk a row to its leaf; returns the leaf node id.
+    pub fn leaf_for(&self, row: &RowView<'_>) -> u32 {
+        let mut id = 0u32;
+        loop {
+            let node = &self.nodes[id as usize];
+            match &node.condition {
+                None => return id,
+                Some(Condition::NumLe { feature, threshold }) => {
+                    id = if row.numerical(*feature) <= *threshold {
+                        node.left
+                    } else {
+                        node.right
+                    };
+                }
+                Some(Condition::CatIn { feature, set }) => {
+                    id = if set.contains(row.categorical(*feature)) {
+                        node.left
+                    } else {
+                        node.right
+                    };
+                }
+            }
+        }
+    }
+
+    /// Walk a row only down to `max_depth`, returning the node reached.
+    /// Used for the paper's Figure 3: evaluating the AUC of depth-
+    /// truncated trees without retraining.
+    pub fn node_at_depth(&self, row: &RowView<'_>, max_depth: u32) -> u32 {
+        let mut id = 0u32;
+        loop {
+            let node = &self.nodes[id as usize];
+            if node.depth >= max_depth {
+                return id;
+            }
+            match &node.condition {
+                None => return id,
+                Some(Condition::NumLe { feature, threshold }) => {
+                    id = if row.numerical(*feature) <= *threshold {
+                        node.left
+                    } else {
+                        node.right
+                    };
+                }
+                Some(Condition::CatIn { feature, set }) => {
+                    id = if set.contains(row.categorical(*feature)) {
+                        node.left
+                    } else {
+                        node.right
+                    };
+                }
+            }
+        }
+    }
+
+    /// P(class 1) for a row (binary classification score).
+    pub fn score(&self, row: &RowView<'_>) -> f64 {
+        let leaf = self.leaf_for(row);
+        self.nodes[leaf as usize].distribution()[1]
+    }
+
+    /// P(class 1) with traversal truncated at `max_depth`.
+    pub fn score_at_depth(&self, row: &RowView<'_>, max_depth: u32) -> f64 {
+        let node = self.node_at_depth(row, max_depth);
+        self.nodes[node as usize].distribution()[1]
+    }
+
+    /// Predicted class for a row.
+    pub fn predict_class(&self, row: &RowView<'_>) -> u32 {
+        let leaf = self.leaf_for(row);
+        self.nodes[leaf as usize].majority_class()
+    }
+
+    /// Scores for every row of a dataset.
+    pub fn predict_scores(&self, ds: &Dataset) -> Vec<f64> {
+        (0..ds.num_rows()).map(|i| self.score(&ds.row(i))).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::column::Column;
+    use crate::data::schema::{ColumnSpec, Schema};
+    use crate::tree::CategorySet;
+
+    fn toy_ds() -> Dataset {
+        let schema = Schema::new(
+            vec![
+                ColumnSpec::numerical("x"),
+                ColumnSpec::categorical("c", 4),
+            ],
+            2,
+        );
+        Dataset::new(
+            schema,
+            vec![
+                Column::Numerical(vec![0.2, 0.8, 0.4, 0.9]),
+                Column::Categorical {
+                    values: vec![0, 1, 2, 3],
+                    arity: 4,
+                },
+            ],
+            vec![0, 1, 0, 1],
+        )
+    }
+
+    fn toy_tree() -> Tree {
+        // root: x <= 0.5 ? left : (c in {1,3} ? pos-ish : neg)
+        let mut t = Tree::new_root(vec![2, 2]);
+        t.split_node(
+            0,
+            Condition::NumLe {
+                feature: 0,
+                threshold: 0.5,
+            },
+            0.2,
+            vec![2, 0],
+            vec![0, 2],
+        );
+        t.split_node(
+            2,
+            Condition::CatIn {
+                feature: 1,
+                set: CategorySet::from_values(4, [1, 3]),
+            },
+            0.1,
+            vec![0, 2],
+            vec![0, 0],
+        );
+        t
+    }
+
+    #[test]
+    fn traversal_routes_correctly() {
+        let ds = toy_ds();
+        let t = toy_tree();
+        assert_eq!(t.leaf_for(&ds.row(0)), 1); // x=0.2 <= 0.5
+        assert_eq!(t.leaf_for(&ds.row(1)), 3); // x=0.8, c=1 in set
+        assert_eq!(t.leaf_for(&ds.row(2)), 1);
+        assert_eq!(t.leaf_for(&ds.row(3)), 3); // c=3 in set
+        assert_eq!(t.predict_class(&ds.row(0)), 0);
+        assert_eq!(t.predict_class(&ds.row(1)), 1);
+    }
+
+    #[test]
+    fn depth_truncated_traversal() {
+        let ds = toy_ds();
+        let t = toy_tree();
+        // Depth 0: everyone at root.
+        assert_eq!(t.node_at_depth(&ds.row(1), 0), 0);
+        assert_eq!(t.score_at_depth(&ds.row(1), 0), 0.5);
+        // Depth 1: row 1 reaches node 2 (internal at depth 1).
+        assert_eq!(t.node_at_depth(&ds.row(1), 1), 2);
+        // Full depth equals leaf_for.
+        assert_eq!(t.node_at_depth(&ds.row(1), 99), t.leaf_for(&ds.row(1)));
+    }
+
+    #[test]
+    fn batch_scores() {
+        let ds = toy_ds();
+        let t = toy_tree();
+        let scores = t.predict_scores(&ds);
+        assert_eq!(scores, vec![0.0, 1.0, 0.0, 1.0]);
+    }
+}

@@ -1,0 +1,242 @@
+//! Tree (de)serialization via the in-tree JSON module.
+//!
+//! Human-inspectable, diff-able in tests, and the manager uses it to
+//! persist fully trained trees ("The manager is responsible for the
+//! fully trained trees", §2). The format stores f32 thresholds by their
+//! bit pattern so round-trips are exact.
+
+use super::{CategorySet, Condition, Node, Tree, NO_CHILD};
+use crate::util::Json;
+use crate::Result;
+use anyhow::Context;
+use std::path::Path;
+
+impl CategorySet {
+    fn to_json(&self) -> Json {
+        let mut o = Json::object();
+        o.set("arity", Json::from_u64(self.arity() as u64)).set(
+            "values",
+            Json::Arr(self.iter().map(|v| Json::from_u64(v as u64)).collect()),
+        );
+        o
+    }
+
+    fn from_json(v: &Json) -> Result<CategorySet> {
+        let arity = v.get("arity")?.as_u32()?;
+        let values: Vec<u32> = v
+            .get("values")?
+            .as_arr()?
+            .iter()
+            .map(|x| x.as_u32())
+            .collect::<Result<_>>()?;
+        Ok(CategorySet::from_values(arity, values))
+    }
+}
+
+impl Condition {
+    fn to_json(&self) -> Json {
+        let mut o = Json::object();
+        match self {
+            Condition::NumLe { feature, threshold } => {
+                o.set("kind", Json::Str("num_le".into()))
+                    .set("feature", Json::from_usize(*feature))
+                    // Bit-exact f32 roundtrip.
+                    .set("threshold_bits", Json::from_u64(threshold.to_bits() as u64));
+            }
+            Condition::CatIn { feature, set } => {
+                o.set("kind", Json::Str("cat_in".into()))
+                    .set("feature", Json::from_usize(*feature))
+                    .set("set", set.to_json());
+            }
+        }
+        o
+    }
+
+    fn from_json(v: &Json) -> Result<Condition> {
+        match v.get("kind")?.as_str()? {
+            "num_le" => Ok(Condition::NumLe {
+                feature: v.get("feature")?.as_usize()?,
+                threshold: f32::from_bits(v.get("threshold_bits")?.as_u32()?),
+            }),
+            "cat_in" => Ok(Condition::CatIn {
+                feature: v.get("feature")?.as_usize()?,
+                set: CategorySet::from_json(v.get("set")?)?,
+            }),
+            k => anyhow::bail!("unknown condition kind '{k}'"),
+        }
+    }
+}
+
+impl Node {
+    fn to_json(&self) -> Json {
+        let mut o = Json::object();
+        o.set(
+            "condition",
+            match &self.condition {
+                None => Json::Null,
+                Some(c) => c.to_json(),
+            },
+        )
+        .set("left", Json::from_u64(self.left as u64))
+        .set("right", Json::from_u64(self.right as u64))
+        .set("depth", Json::from_u64(self.depth as u64))
+        .set("class_counts", Json::from_slice_u64(&self.class_counts))
+        .set("split_gain", Json::Num(self.split_gain));
+        o
+    }
+
+    fn from_json(v: &Json) -> Result<Node> {
+        Ok(Node {
+            condition: match v.get("condition")? {
+                Json::Null => None,
+                c => Some(Condition::from_json(c)?),
+            },
+            left: v.get("left")?.as_u32()?,
+            right: v.get("right")?.as_u32()?,
+            depth: v.get("depth")?.as_u32()?,
+            class_counts: v.get("class_counts")?.as_vec_u64()?,
+            split_gain: v.get("split_gain")?.as_f64()?,
+        })
+    }
+}
+
+impl Tree {
+    /// Serialize to a JSON value.
+    pub fn to_json_value(&self) -> Json {
+        let mut o = Json::object();
+        o.set("num_classes", Json::from_u64(self.num_classes as u64))
+            .set(
+                "nodes",
+                Json::Arr(self.nodes.iter().map(|n| n.to_json()).collect()),
+            );
+        o
+    }
+
+    /// Serialize to a JSON string.
+    pub fn to_json(&self) -> Result<String> {
+        Ok(self.to_json_value().to_string())
+    }
+
+    /// Deserialize from a JSON value.
+    pub fn from_json_value(v: &Json) -> Result<Tree> {
+        let nodes: Vec<Node> = v
+            .get("nodes")?
+            .as_arr()?
+            .iter()
+            .map(Node::from_json)
+            .collect::<Result<_>>()?;
+        anyhow::ensure!(!nodes.is_empty(), "tree has no nodes");
+        // Structural validation: child ids in range, no self-loops.
+        for (i, n) in nodes.iter().enumerate() {
+            if !n.is_leaf() {
+                anyhow::ensure!(
+                    n.left != NO_CHILD && n.right != NO_CHILD,
+                    "internal node {i} missing children"
+                );
+                anyhow::ensure!(
+                    (n.left as usize) < nodes.len()
+                        && (n.right as usize) < nodes.len()
+                        && n.left as usize != i
+                        && n.right as usize != i,
+                    "node {i} has invalid child ids"
+                );
+            }
+        }
+        Ok(Tree {
+            nodes,
+            num_classes: v.get("num_classes")?.as_u32()?,
+        })
+    }
+
+    /// Deserialize from a JSON string.
+    pub fn from_json(s: &str) -> Result<Tree> {
+        Self::from_json_value(&Json::parse(s)?)
+    }
+
+    /// Save to a file.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_json()?)
+            .with_context(|| format!("saving tree to {}", path.display()))
+    }
+
+    /// Load from a file.
+    pub fn load(path: &Path) -> Result<Tree> {
+        let s = std::fs::read_to_string(path)
+            .with_context(|| format!("loading tree from {}", path.display()))?;
+        Tree::from_json(&s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_roundtrip() {
+        let mut t = Tree::new_root(vec![3, 2]);
+        t.split_node(
+            0,
+            Condition::CatIn {
+                feature: 2,
+                set: CategorySet::from_values(10, [1, 5, 9]),
+            },
+            0.33,
+            vec![3, 0],
+            vec![0, 2],
+        );
+        t.split_node(
+            1,
+            Condition::NumLe {
+                feature: 0,
+                threshold: 0.1f32, // not exactly representable in decimal
+            },
+            0.125,
+            vec![2, 0],
+            vec![1, 0],
+        );
+        let json = t.to_json().unwrap();
+        let back = Tree::from_json(&json).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn threshold_bit_exactness() {
+        let mut t = Tree::new_root(vec![1, 1]);
+        let weird = f32::from_bits(0x3DCCCCCD); // 0.1f32
+        t.split_node(
+            0,
+            Condition::NumLe {
+                feature: 0,
+                threshold: weird,
+            },
+            0.0,
+            vec![1, 0],
+            vec![0, 1],
+        );
+        let back = Tree::from_json(&t.to_json().unwrap()).unwrap();
+        match back.nodes[0].condition.as_ref().unwrap() {
+            Condition::NumLe { threshold, .. } => {
+                assert_eq!(threshold.to_bits(), weird.to_bits());
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = crate::util::tempdir().unwrap();
+        let path = dir.path().join("tree.json");
+        let t = Tree::new_root(vec![1, 1]);
+        t.save(&path).unwrap();
+        assert_eq!(Tree::load(&path).unwrap(), t);
+    }
+
+    #[test]
+    fn corrupt_json_fails_cleanly() {
+        assert!(Tree::from_json("{not json").is_err());
+        assert!(Tree::from_json("{\"num_classes\": 2, \"nodes\": []}").is_err());
+        // Internal node with out-of-range child.
+        let bad = r#"{"num_classes":2,"nodes":[{"condition":{"kind":"num_le","feature":0,"threshold_bits":0},"left":5,"right":6,"depth":0,"class_counts":[1,1],"split_gain":0}]}"#;
+        assert!(Tree::from_json(bad).is_err());
+    }
+}

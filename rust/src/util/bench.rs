@@ -1,0 +1,158 @@
+//! Tiny benchmark harness (in-tree replacement for `criterion`; this
+//! project builds fully offline). Benches are `harness = false` mains
+//! that time closures with warmup + repeated measurement and print
+//! aligned tables — each bench binary regenerates one of the paper's
+//! tables/figures.
+
+use crate::metrics::Stopwatch;
+
+/// Timing summary of one benchmark case.
+#[derive(Debug, Clone, Copy)]
+pub struct Timing {
+    pub iters: u32,
+    pub mean_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+}
+
+impl Timing {
+    pub fn per_iter_label(&self) -> String {
+        format_seconds(self.mean_s)
+    }
+}
+
+/// Human-friendly seconds.
+pub fn format_seconds(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else {
+        format!("{:.1} µs", s * 1e6)
+    }
+}
+
+/// Time `f` with one warmup run and up to `max_iters` measured runs
+/// (stops early after `budget_s` of measurement).
+pub fn bench(max_iters: u32, budget_s: f64, mut f: impl FnMut()) -> Timing {
+    f(); // warmup
+    let mut times = Vec::new();
+    let total = Stopwatch::start();
+    for _ in 0..max_iters.max(1) {
+        let sw = Stopwatch::start();
+        f();
+        times.push(sw.seconds());
+        if total.seconds() > budget_s {
+            break;
+        }
+    }
+    let n = times.len() as f64;
+    Timing {
+        iters: times.len() as u32,
+        mean_s: times.iter().sum::<f64>() / n,
+        min_s: times.iter().cloned().fold(f64::INFINITY, f64::min),
+        max_s: times.iter().cloned().fold(0.0, f64::max),
+    }
+}
+
+/// Fixed-width table printer for bench outputs.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "column count mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.chars().count()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.chars().count());
+            }
+        }
+        let line = |cells: &[String]| {
+            let parts: Vec<String> = cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:<width$}", c, width = widths[i]))
+                .collect();
+            println!("| {} |", parts.join(" | "));
+        };
+        line(&self.headers);
+        let sep: Vec<String> = widths.iter().map(|w| "-".repeat(*w)).collect();
+        line(&sep);
+        for row in &self.rows {
+            line(row);
+        }
+    }
+}
+
+/// Helpers shared by bench mains.
+pub fn fmt_count(v: f64) -> String {
+    if v >= 1e9 {
+        format!("{:.2}e9", v / 1e9)
+    } else if v >= 1e6 {
+        format!("{:.2}e6", v / 1e6)
+    } else if v >= 1e3 {
+        format!("{:.1}e3", v / 1e3)
+    } else {
+        format!("{v:.0}")
+    }
+}
+
+pub fn fmt_bytes(b: u64) -> String {
+    let b = b as f64;
+    if b >= 1e9 {
+        format!("{:.2} GB", b / 1e9)
+    } else if b >= 1e6 {
+        format!("{:.2} MB", b / 1e6)
+    } else if b >= 1e3 {
+        format!("{:.2} KB", b / 1e3)
+    } else {
+        format!("{b:.0} B")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_summarizes() {
+        let mut count = 0;
+        let t = bench(5, 10.0, || {
+            count += 1;
+        });
+        assert_eq!(t.iters, 5);
+        assert_eq!(count, 6, "warmup + 5 measured");
+        assert!(t.min_s <= t.mean_s && t.mean_s <= t.max_s);
+    }
+
+    #[test]
+    fn formatting() {
+        assert_eq!(format_seconds(2.5), "2.500 s");
+        assert_eq!(format_seconds(0.0025), "2.500 ms");
+        assert_eq!(format_seconds(2.5e-6), "2.5 µs");
+        assert_eq!(fmt_bytes(1500), "1.50 KB");
+        assert_eq!(fmt_count(1234.0), "1.2e3");
+        assert_eq!(fmt_count(17.3e9), "17.30e9");
+    }
+
+    #[test]
+    fn table_prints_without_panic() {
+        let mut t = Table::new(&["a", "bb"]);
+        t.row(&["1".into(), "2".into()]);
+        t.print();
+    }
+}

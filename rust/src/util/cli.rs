@@ -1,0 +1,147 @@
+//! Tiny command-line argument parser (in-tree replacement for `clap`;
+//! this project builds fully offline).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, and
+//! positional arguments. Unknown flags are an error, listing the valid
+//! set.
+
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+
+/// Parsed arguments.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    flags: BTreeMap<String, String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse `argv` (without the program name). `known` lists the
+    /// value-taking flags; names prefixed with `!` declare boolean
+    /// switches that never consume the next token (e.g. `"!quick"`).
+    pub fn parse(argv: &[String], known: &[&str]) -> Result<Args> {
+        let value_flags: Vec<&str> = known
+            .iter()
+            .filter(|n| !n.starts_with('!'))
+            .copied()
+            .collect();
+        let switch_flags: Vec<&str> = known
+            .iter()
+            .filter_map(|n| n.strip_prefix('!'))
+            .collect();
+        let mut flags = BTreeMap::new();
+        let mut positional = Vec::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(stripped) = a.strip_prefix("--") {
+                let (name, inline_val) = match stripped.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let is_switch = switch_flags.contains(&name.as_str());
+                if !is_switch && !value_flags.contains(&name.as_str()) {
+                    bail!("unknown flag --{name}; known flags: {known:?}");
+                }
+                let value = match inline_val {
+                    Some(v) => v,
+                    None if is_switch => "true".to_string(),
+                    None => {
+                        // Next token is the value unless it is another flag
+                        // or the end (then treat as boolean true).
+                        if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                            i += 1;
+                            argv[i].clone()
+                        } else {
+                            "true".to_string()
+                        }
+                    }
+                };
+                flags.insert(name, value);
+            } else {
+                positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(Args { flags, positional })
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_string(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => Ok(v.parse()?),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => Ok(v.parse()?),
+        }
+    }
+
+    pub fn get_u32(&self, name: &str, default: u32) -> Result<u32> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => Ok(v.parse()?),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => Ok(v.parse()?),
+        }
+    }
+
+    pub fn get_bool(&self, name: &str) -> bool {
+        matches!(self.get(name), Some("true") | Some("1") | Some("yes"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_flags_and_positionals() {
+        let a = Args::parse(
+            &argv(&["train", "--rows", "100", "--deep=5", "--quick", "x.json"]),
+            &["rows", "deep", "!quick"],
+        )
+        .unwrap();
+        assert_eq!(a.positional(), &["train", "x.json"]);
+        assert_eq!(a.get_usize("rows", 0).unwrap(), 100);
+        assert_eq!(a.get_u32("deep", 0).unwrap(), 5);
+        assert!(a.get_bool("quick"));
+        assert!(!a.get_bool("absent"));
+        assert_eq!(a.get_string("absent", "d"), "d");
+    }
+
+    #[test]
+    fn unknown_flag_rejected() {
+        assert!(Args::parse(&argv(&["--nope"]), &["yes"]).is_err());
+    }
+
+    #[test]
+    fn bad_number_is_error() {
+        let a = Args::parse(&argv(&["--rows", "abc"]), &["rows"]).unwrap();
+        assert!(a.get_usize("rows", 0).is_err());
+    }
+}

@@ -1,0 +1,468 @@
+//! Minimal JSON: a value model, a recursive-descent parser, and a
+//! writer. Built in-tree because this project builds fully offline from
+//! a small vendored crate set (no serde). Covers the full JSON grammar
+//! except for `\u` surrogate pairs outside the BMP (sufficient for our
+//! model/config/report files, which are ASCII).
+
+use anyhow::{bail, ensure, Context, Result};
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// A JSON value. Objects use `BTreeMap` for deterministic output.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(BTreeMap<String, Json>),
+}
+
+impl Json {
+    // ---------------- constructors ----------------
+
+    pub fn object() -> Json {
+        Json::Obj(BTreeMap::new())
+    }
+
+    pub fn from_u64(v: u64) -> Json {
+        Json::Num(v as f64)
+    }
+
+    pub fn from_usize(v: usize) -> Json {
+        Json::Num(v as f64)
+    }
+
+    pub fn from_slice_u64(v: &[u64]) -> Json {
+        Json::Arr(v.iter().map(|&x| Json::from_u64(x)).collect())
+    }
+
+    pub fn from_slice_f64(v: &[f64]) -> Json {
+        Json::Arr(v.iter().map(|&x| Json::Num(x)).collect())
+    }
+
+    // ---------------- object helpers ----------------
+
+    /// Insert into an object (panics on non-objects — builder misuse).
+    pub fn set(&mut self, key: &str, value: Json) -> &mut Json {
+        match self {
+            Json::Obj(m) => {
+                m.insert(key.to_string(), value);
+            }
+            _ => panic!("set() on non-object"),
+        }
+        self
+    }
+
+    pub fn get(&self, key: &str) -> Result<&Json> {
+        match self {
+            Json::Obj(m) => m.get(key).with_context(|| format!("missing key '{key}'")),
+            _ => bail!("get('{key}') on non-object"),
+        }
+    }
+
+    pub fn get_opt(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(m) => m.get(key),
+            _ => None,
+        }
+    }
+
+    // ---------------- typed accessors ----------------
+
+    pub fn as_f64(&self) -> Result<f64> {
+        match self {
+            Json::Num(v) => Ok(*v),
+            _ => bail!("expected number, got {self:?}"),
+        }
+    }
+
+    pub fn as_u64(&self) -> Result<u64> {
+        let v = self.as_f64()?;
+        ensure!(
+            v >= 0.0 && v.fract() == 0.0 && v <= 2f64.powi(53),
+            "expected unsigned integer, got {v}"
+        );
+        Ok(v as u64)
+    }
+
+    pub fn as_u32(&self) -> Result<u32> {
+        let v = self.as_u64()?;
+        ensure!(v <= u32::MAX as u64, "u32 overflow: {v}");
+        Ok(v as u32)
+    }
+
+    pub fn as_usize(&self) -> Result<usize> {
+        Ok(self.as_u64()? as usize)
+    }
+
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            Json::Bool(b) => Ok(*b),
+            _ => bail!("expected bool, got {self:?}"),
+        }
+    }
+
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            Json::Str(s) => Ok(s),
+            _ => bail!("expected string, got {self:?}"),
+        }
+    }
+
+    pub fn as_arr(&self) -> Result<&[Json]> {
+        match self {
+            Json::Arr(v) => Ok(v),
+            _ => bail!("expected array, got {self:?}"),
+        }
+    }
+
+    pub fn as_vec_u64(&self) -> Result<Vec<u64>> {
+        self.as_arr()?.iter().map(|v| v.as_u64()).collect()
+    }
+
+    pub fn as_vec_f64(&self) -> Result<Vec<f64>> {
+        self.as_arr()?.iter().map(|v| v.as_f64()).collect()
+    }
+
+    // ---------------- writer ----------------
+
+    /// Compact serialization.
+    pub fn to_string(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out);
+        out
+    }
+
+    fn write(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(true) => out.push_str("true"),
+            Json::Bool(false) => out.push_str("false"),
+            Json::Num(v) => write_num(*v, out),
+            Json::Str(s) => write_str(s, out),
+            Json::Arr(v) => {
+                out.push('[');
+                for (i, e) in v.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    e.write(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(m) => {
+                out.push('{');
+                for (i, (k, v)) in m.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    write_str(k, out);
+                    out.push(':');
+                    v.write(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+
+    // ---------------- parser ----------------
+
+    pub fn parse(input: &str) -> Result<Json> {
+        let mut p = Parser {
+            bytes: input.as_bytes(),
+            pos: 0,
+        };
+        p.skip_ws();
+        let v = p.value()?;
+        p.skip_ws();
+        ensure!(p.pos == p.bytes.len(), "trailing garbage at byte {}", p.pos);
+        Ok(v)
+    }
+}
+
+fn write_num(v: f64, out: &mut String) {
+    if v.is_finite() {
+        if v.fract() == 0.0 && v.abs() < 2f64.powi(53) {
+            let _ = write!(out, "{}", v as i64);
+        } else {
+            // Roundtrip-exact float formatting (Rust's default is
+            // shortest-roundtrip).
+            let _ = write!(out, "{v}");
+        }
+    } else {
+        // JSON has no NaN/inf; encode as null (we never store these).
+        out.push_str("null");
+    }
+}
+
+fn write_str(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn skip_ws(&mut self) {
+        while self.pos < self.bytes.len()
+            && matches!(self.bytes[self.pos], b' ' | b'\t' | b'\n' | b'\r')
+        {
+            self.pos += 1;
+        }
+    }
+
+    fn peek(&self) -> Result<u8> {
+        self.bytes
+            .get(self.pos)
+            .copied()
+            .context("unexpected end of JSON")
+    }
+
+    fn expect(&mut self, b: u8) -> Result<()> {
+        ensure!(
+            self.peek()? == b,
+            "expected '{}' at byte {}, found '{}'",
+            b as char,
+            self.pos,
+            self.peek()? as char
+        );
+        self.pos += 1;
+        Ok(())
+    }
+
+    fn value(&mut self) -> Result<Json> {
+        match self.peek()? {
+            b'{' => self.object(),
+            b'[' => self.array(),
+            b'"' => Ok(Json::Str(self.string()?)),
+            b't' => self.keyword("true", Json::Bool(true)),
+            b'f' => self.keyword("false", Json::Bool(false)),
+            b'n' => self.keyword("null", Json::Null),
+            b'-' | b'0'..=b'9' => self.number(),
+            c => bail!("unexpected character '{}' at byte {}", c as char, self.pos),
+        }
+    }
+
+    fn keyword(&mut self, word: &str, v: Json) -> Result<Json> {
+        ensure!(
+            self.bytes[self.pos..].starts_with(word.as_bytes()),
+            "bad keyword at byte {}",
+            self.pos
+        );
+        self.pos += word.len();
+        Ok(v)
+    }
+
+    fn object(&mut self) -> Result<Json> {
+        self.expect(b'{')?;
+        let mut m = BTreeMap::new();
+        self.skip_ws();
+        if self.peek()? == b'}' {
+            self.pos += 1;
+            return Ok(Json::Obj(m));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.expect(b':')?;
+            self.skip_ws();
+            let val = self.value()?;
+            m.insert(key, val);
+            self.skip_ws();
+            match self.peek()? {
+                b',' => {
+                    self.pos += 1;
+                }
+                b'}' => {
+                    self.pos += 1;
+                    return Ok(Json::Obj(m));
+                }
+                c => bail!("expected ',' or '}}', found '{}'", c as char),
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Json> {
+        self.expect(b'[')?;
+        let mut v = Vec::new();
+        self.skip_ws();
+        if self.peek()? == b']' {
+            self.pos += 1;
+            return Ok(Json::Arr(v));
+        }
+        loop {
+            self.skip_ws();
+            v.push(self.value()?);
+            self.skip_ws();
+            match self.peek()? {
+                b',' => {
+                    self.pos += 1;
+                }
+                b']' => {
+                    self.pos += 1;
+                    return Ok(Json::Arr(v));
+                }
+                c => bail!("expected ',' or ']', found '{}'", c as char),
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.expect(b'"')?;
+        let mut s = String::new();
+        loop {
+            let c = self.peek()?;
+            self.pos += 1;
+            match c {
+                b'"' => return Ok(s),
+                b'\\' => {
+                    let e = self.peek()?;
+                    self.pos += 1;
+                    match e {
+                        b'"' => s.push('"'),
+                        b'\\' => s.push('\\'),
+                        b'/' => s.push('/'),
+                        b'n' => s.push('\n'),
+                        b'r' => s.push('\r'),
+                        b't' => s.push('\t'),
+                        b'b' => s.push('\u{0008}'),
+                        b'f' => s.push('\u{000C}'),
+                        b'u' => {
+                            ensure!(self.pos + 4 <= self.bytes.len(), "truncated \\u escape");
+                            let hex = std::str::from_utf8(&self.bytes[self.pos..self.pos + 4])?;
+                            let code = u32::from_str_radix(hex, 16)?;
+                            self.pos += 4;
+                            s.push(char::from_u32(code).context("bad \\u escape")?);
+                        }
+                        c => bail!("bad escape '\\{}'", c as char),
+                    }
+                }
+                c if c < 0x80 => s.push(c as char),
+                _ => {
+                    // Multi-byte UTF-8: re-decode from the byte slice.
+                    let start = self.pos - 1;
+                    let rest = std::str::from_utf8(&self.bytes[start..])
+                        .context("invalid UTF-8 in string")?;
+                    let ch = rest.chars().next().unwrap();
+                    s.push(ch);
+                    self.pos = start + ch.len_utf8();
+                }
+            }
+        }
+    }
+
+    fn number(&mut self) -> Result<Json> {
+        let start = self.pos;
+        if self.peek()? == b'-' {
+            self.pos += 1;
+        }
+        while self.pos < self.bytes.len()
+            && matches!(self.bytes[self.pos], b'0'..=b'9' | b'.' | b'e' | b'E' | b'+' | b'-')
+        {
+            self.pos += 1;
+        }
+        let text = std::str::from_utf8(&self.bytes[start..self.pos])?;
+        let v: f64 = text
+            .parse()
+            .with_context(|| format!("bad number '{text}'"))?;
+        Ok(Json::Num(v))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_all_types() {
+        let mut obj = Json::object();
+        obj.set("null", Json::Null)
+            .set("b", Json::Bool(true))
+            .set("i", Json::Num(42.0))
+            .set("f", Json::Num(0.125))
+            .set("neg", Json::Num(-7.0))
+            .set("s", Json::Str("he\"llo\n\\ wörld".into()))
+            .set(
+                "arr",
+                Json::Arr(vec![Json::Num(1.0), Json::Str("x".into()), Json::Null]),
+            )
+            .set("nested", {
+                let mut o = Json::object();
+                o.set("k", Json::Num(1e-9));
+                o
+            });
+        let text = obj.to_string();
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(obj, back);
+    }
+
+    #[test]
+    fn parses_whitespace_and_escapes() {
+        let v = Json::parse(" { \"a\" : [ 1 , 2.5 , \"\\u0041\\t\" ] } ").unwrap();
+        let arr = v.get("a").unwrap().as_arr().unwrap();
+        assert_eq!(arr[0].as_u64().unwrap(), 1);
+        assert_eq!(arr[1].as_f64().unwrap(), 2.5);
+        assert_eq!(arr[2].as_str().unwrap(), "A\t");
+    }
+
+    #[test]
+    fn float_roundtrip_is_exact() {
+        for v in [0.1f64, 1.0 / 3.0, 1e300, -2.5e-10, f64::MIN_POSITIVE] {
+            let text = Json::Num(v).to_string();
+            let back = Json::parse(&text).unwrap().as_f64().unwrap();
+            assert_eq!(v, back, "roundtrip of {v}");
+        }
+    }
+
+    #[test]
+    fn large_integers_exact() {
+        let v = (1u64 << 53) - 1;
+        let text = Json::from_u64(v).to_string();
+        assert_eq!(Json::parse(&text).unwrap().as_u64().unwrap(), v);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Json::parse("{").is_err());
+        assert!(Json::parse("[1,]").is_err());
+        assert!(Json::parse("12 34").is_err());
+        assert!(Json::parse("\"unterminated").is_err());
+        assert!(Json::parse("{\"a\":01x}").is_err());
+        assert!(Json::parse("nul").is_err());
+    }
+
+    #[test]
+    fn typed_accessor_errors() {
+        let v = Json::parse("{\"a\": -1}").unwrap();
+        assert!(v.get("a").unwrap().as_u64().is_err());
+        assert!(v.get("b").is_err());
+        assert!(v.get("a").unwrap().as_str().is_err());
+        assert!(Json::Num(1.5).as_u64().is_err());
+    }
+
+    #[test]
+    fn deterministic_object_order() {
+        let mut a = Json::object();
+        a.set("z", Json::Num(1.0)).set("a", Json::Num(2.0));
+        assert_eq!(a.to_string(), "{\"a\":2,\"z\":1}");
+    }
+}

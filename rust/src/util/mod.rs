@@ -1,0 +1,17 @@
+//! In-tree utility substrates. This project builds fully offline from a
+//! small vendored crate set (`xla` + `anyhow`), so the usual helpers are
+//! implemented here instead of pulled from crates.io:
+//!
+//! * [`json`] — JSON value model, parser, writer (replaces serde_json);
+//! * [`mod@tempdir`] — self-deleting temp dirs (replaces tempfile);
+//! * [`mod@bench`] — timing harness + table printer (replaces criterion);
+//! * [`proptest`] — seeded property-testing loops (replaces proptest).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod proptest;
+pub mod tempdir;
+
+pub use json::Json;
+pub use tempdir::{tempdir, TempDir};

@@ -1,0 +1,115 @@
+//! Minimal property-testing helper (in-tree replacement for `proptest`;
+//! this project builds fully offline).
+//!
+//! A property test runs a closure over `cases` seeded inputs; on
+//! failure it reports the failing case seed so the case can be replayed
+//! deterministically (`CaseRng::new(seed)` regenerates the exact input).
+
+use crate::rng::Xoshiro256pp;
+
+/// Per-case random generator handed to properties.
+pub struct CaseRng {
+    rng: Xoshiro256pp,
+    seed: u64,
+}
+
+impl CaseRng {
+    pub fn new(seed: u64) -> Self {
+        Self {
+            rng: Xoshiro256pp::new(seed),
+            seed,
+        }
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    pub fn u64(&mut self, bound: u64) -> u64 {
+        self.rng.next_below(bound.max(1))
+    }
+
+    pub fn usize(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo <= hi);
+        lo + self.rng.next_below((hi - lo + 1) as u64) as usize
+    }
+
+    pub fn f64(&mut self) -> f64 {
+        self.rng.next_f64()
+    }
+
+    pub fn f32(&mut self) -> f32 {
+        self.rng.next_f64() as f32
+    }
+
+    pub fn bool(&mut self, p_true: f64) -> bool {
+        self.rng.next_f64() < p_true
+    }
+
+    /// A vector of length in [lo, hi] filled by `gen`.
+    pub fn vec<T>(&mut self, lo: usize, hi: usize, mut gen: impl FnMut(&mut Self) -> T) -> Vec<T> {
+        let n = self.usize(lo, hi);
+        (0..n).map(|_| gen(self)).collect()
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        &items[self.usize(0, items.len() - 1)]
+    }
+}
+
+/// Run `property` over `cases` deterministic cases derived from
+/// `test_seed`. Panics (with the case seed) on the first failure.
+pub fn run_cases(test_seed: u64, cases: u32, mut property: impl FnMut(&mut CaseRng)) {
+    for case in 0..cases {
+        let case_seed = crate::rng::SplitMix64::hash_key(&[test_seed, case as u64]);
+        let mut rng = CaseRng::new(case_seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            property(&mut rng);
+        }));
+        if let Err(e) = result {
+            eprintln!(
+                "property failed on case {case} (replay with CaseRng::new({case_seed:#x}))"
+            );
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cases_are_deterministic() {
+        let mut first_run = Vec::new();
+        run_cases(1, 5, |rng| first_run.push(rng.u64(1000)));
+        let mut second_run = Vec::new();
+        run_cases(1, 5, |rng| second_run.push(rng.u64(1000)));
+        assert_eq!(first_run, second_run);
+        assert!(first_run.iter().collect::<std::collections::HashSet<_>>().len() > 1);
+    }
+
+    #[test]
+    fn generators_respect_bounds() {
+        run_cases(2, 50, |rng| {
+            let v = rng.usize(3, 7);
+            assert!((3..=7).contains(&v));
+            let x = rng.f64();
+            assert!((0.0..1.0).contains(&x));
+            let vec = rng.vec(0, 4, |r| r.bool(0.5));
+            assert!(vec.len() <= 4);
+            let c = *rng.choose(&[10, 20, 30]);
+            assert!([10, 20, 30].contains(&c));
+        });
+    }
+
+    #[test]
+    #[should_panic]
+    fn failures_propagate() {
+        run_cases(3, 10, |rng| {
+            assert!(rng.u64(100) < 101); // always true
+            assert!(rng.u64(10) > 100); // always false -> must panic
+        });
+    }
+}

@@ -1,0 +1,73 @@
+//! Self-deleting temporary directories (in-tree replacement for the
+//! `tempfile` crate; this project builds fully offline).
+
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static COUNTER: AtomicU64 = AtomicU64::new(0);
+
+/// A temporary directory removed (recursively) on drop.
+#[derive(Debug)]
+pub struct TempDir {
+    path: PathBuf,
+}
+
+impl TempDir {
+    /// Create a fresh directory under the system temp dir.
+    pub fn new() -> Result<TempDir> {
+        let id = COUNTER.fetch_add(1, Ordering::SeqCst);
+        let nanos = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .unwrap()
+            .as_nanos();
+        let path = std::env::temp_dir().join(format!(
+            "drf-{}-{}-{}",
+            std::process::id(),
+            id,
+            nanos
+        ));
+        std::fs::create_dir_all(&path)
+            .with_context(|| format!("creating temp dir {}", path.display()))?;
+        Ok(TempDir { path })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+impl Drop for TempDir {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.path);
+    }
+}
+
+/// `crate::util::tempdir()`-compatible shorthand.
+pub fn tempdir() -> Result<TempDir> {
+    TempDir::new()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn creates_and_removes() {
+        let p;
+        {
+            let d = tempdir().unwrap();
+            p = d.path().to_path_buf();
+            assert!(p.is_dir());
+            std::fs::write(p.join("x"), b"hi").unwrap();
+        }
+        assert!(!p.exists(), "directory should be removed on drop");
+    }
+
+    #[test]
+    fn two_dirs_distinct() {
+        let a = tempdir().unwrap();
+        let b = tempdir().unwrap();
+        assert_ne!(a.path(), b.path());
+    }
+}

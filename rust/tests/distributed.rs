@@ -1,0 +1,193 @@
+//! Distributed-runtime invariants: network accounting matches the
+//! paper's claims (Dn-bit broadcasts, no index shipping), class-list
+//! memory follows the n·⌈log2(ℓ+1)⌉ formula, latency insensitivity,
+//! and engine/storage equivalence.
+
+use drf::classlist::width_for;
+use drf::config::{Engine, ForestParams, StorageMode, TrainConfig};
+use drf::data::synthetic::{Family, LeoLikeSpec, SyntheticSpec};
+use drf::forest::RandomForest;
+use drf::rng::BaggingMode;
+
+fn base_cfg(trees: usize, seed: u64) -> TrainConfig {
+    TrainConfig {
+        forest: ForestParams {
+            num_trees: trees,
+            max_depth: 6,
+            bagging: BaggingMode::Poisson,
+            seed,
+            ..Default::default()
+        },
+        ..Default::default()
+    }
+}
+
+#[test]
+fn network_scales_with_levels_not_nodes() {
+    // DRF's broadcast volume is ~ (levels x n bits x splitters), NOT
+    // per-node. Compare a deep tree against the level count.
+    let ds = SyntheticSpec::new(Family::LinearCont { informative: 3 }, 2000, 6, 1).generate();
+    let cfg = base_cfg(1, 9);
+    let (forest, report) = RandomForest::train_with_config(&ds, &cfg).unwrap();
+    let levels = report.per_tree[0].levels.len() as u64;
+    assert!(levels >= 3);
+    let w = report.num_splitters as u64;
+    let n = ds.num_rows() as u64;
+    // Upper bound: every level broadcasts at most ~n/8 bytes (1 bit per
+    // live sample) to w splitters, plus queries/answers overhead that is
+    // O(leaves x classes), far below n for this dataset.
+    let broadcast_bound = levels * (n / 8 + 64) * w;
+    let total = report.net.net_bytes;
+    assert!(
+        total < broadcast_bound * 3,
+        "net {total} should be O(levels*n*w) = {broadcast_bound}"
+    );
+    // And the model actually has many more nodes than levels (so
+    // per-node broadcasting would have cost much more).
+    assert!(forest.trees[0].num_nodes() as u64 > levels * 2);
+}
+
+#[test]
+fn no_bagging_indices_on_the_wire() {
+    // Seeded bagging (§2.2): network bytes must NOT grow with the
+    // number of bagged records beyond the 1-bit-per-sample updates.
+    // Train on n and 2n rows with 1 splitter; the ratio of net bytes
+    // must be ~2 (bitmaps scale) not ~2x8 bytes/index.
+    let mk = |n: usize| {
+        let ds = SyntheticSpec::new(Family::Majority { informative: 3 }, n, 4, 3).generate();
+        let mut cfg = base_cfg(1, 4);
+        cfg.forest.max_depth = 3;
+        cfg.topology.num_splitters = Some(1);
+        let (_, report) = RandomForest::train_with_config(&ds, &cfg).unwrap();
+        report.net.net_bytes as f64
+    };
+    let b1 = mk(2000);
+    let b2 = mk(4000);
+    let ratio = b2 / b1;
+    assert!(
+        ratio < 2.6,
+        "net bytes ratio {ratio} suggests per-index shipping"
+    );
+}
+
+#[test]
+fn class_list_width_is_logarithmic() {
+    // Indirect check through the formula + a training run that reaches
+    // many leaves: width_for matches ⌈log2(ℓ+1)⌉ and the level stats
+    // report hundreds of leaves.
+    let ds = SyntheticSpec::new(Family::LinearCont { informative: 4 }, 4000, 6, 8).generate();
+    let mut cfg = base_cfg(1, 5);
+    cfg.forest.max_depth = 10;
+    cfg.forest.min_records = 2;
+    let (_, report) = RandomForest::train_with_config(&ds, &cfg).unwrap();
+    let max_open = report.per_tree[0]
+        .levels
+        .iter()
+        .map(|l| l.open_after)
+        .max()
+        .unwrap();
+    assert!(max_open > 20, "expected a bushy tree, got {max_open} leaves");
+    assert_eq!(width_for(1), 1);
+    assert_eq!(width_for(max_open), (max_open as u64 + 1).next_power_of_two().trailing_zeros().max(1));
+}
+
+#[test]
+fn latency_insensitivity_messages_scale_with_depth() {
+    // DRF is "relatively insensitive to the latency of communication"
+    // (§2) because the message COUNT is O(splitters x depth), not O(n).
+    let ds = SyntheticSpec::new(Family::Majority { informative: 3 }, 3000, 6, 3).generate();
+    let cfg = base_cfg(1, 4);
+    let (_, report) = RandomForest::train_with_config(&ds, &cfg).unwrap();
+    let levels = report.per_tree[0].levels.len() as u64;
+    let w = report.num_splitters as u64;
+    let msgs = report.net.net_messages;
+    // Per level: <= w find queries+answers, <= w eval pairs, w broadcast,
+    // plus constant tree start/finish traffic.
+    let bound = levels * w * 6 + 4 * w + 10;
+    assert!(
+        msgs <= bound,
+        "messages {msgs} exceed O(w x depth) bound {bound} — latency sensitivity"
+    );
+}
+
+#[test]
+fn report_levels_are_consistent() {
+    let ds = LeoLikeSpec::new(1500, 3).generate();
+    let mut cfg = base_cfg(2, 6);
+    cfg.forest.min_records = 10;
+    let (forest, report) = RandomForest::train_with_config(&ds, &cfg).unwrap();
+    for (t, tr) in report.per_tree.iter().enumerate() {
+        // open_after of level k == open_before of level k+1.
+        for w in tr.levels.windows(2) {
+            assert_eq!(w[0].open_after, w[1].open_before);
+        }
+        // splits + closed == open_before
+        for l in &tr.levels {
+            assert_eq!(l.num_splits + l.num_closed, l.open_before);
+            assert!(l.z_max_load >= 1);
+            assert!(l.m_double_prime >= 1);
+        }
+        // Tree depth equals number of levels with splits.
+        let levels_with_splits = tr.levels.iter().filter(|l| l.num_splits > 0).count() as u32;
+        assert_eq!(forest.trees[t].depth(), levels_with_splits);
+    }
+}
+
+#[test]
+fn threaded_parallel_trees_identical_to_direct() {
+    let ds = SyntheticSpec::new(Family::Xor { informative: 3 }, 800, 6, 12).generate();
+    let cfg = base_cfg(4, 77);
+    let (direct, _) = RandomForest::train_with_config(&ds, &cfg).unwrap();
+    let mut cfg2 = base_cfg(4, 77);
+    cfg2.engine = Engine::Threaded;
+    cfg2.topology.tree_builders = 3;
+    let (threaded, _) = RandomForest::train_with_config(&ds, &cfg2).unwrap();
+    assert_eq!(direct, threaded);
+}
+
+#[test]
+fn tcp_engine_identical_to_direct() {
+    let ds = SyntheticSpec::new(Family::Majority { informative: 3 }, 400, 6, 8).generate();
+    let cfg = base_cfg(2, 55);
+    let (direct, _) = RandomForest::train_with_config(&ds, &cfg).unwrap();
+    let mut cfg2 = base_cfg(2, 55);
+    cfg2.engine = Engine::Tcp;
+    let (tcp, report) = RandomForest::train_with_config(&ds, &cfg2).unwrap();
+    assert_eq!(direct, tcp, "TCP engine must not change the model");
+    assert!(report.net.net_bytes > 0, "real bytes over real sockets");
+}
+
+#[test]
+fn disk_mode_reads_are_sequential_passes() {
+    let ds = SyntheticSpec::new(Family::LinearCont { informative: 2 }, 500, 4, 3).generate();
+    let mut cfg = base_cfg(1, 3);
+    cfg.storage = StorageMode::Disk;
+    cfg.forest.max_depth = 3;
+    let (_, report) = RandomForest::train_with_config(&ds, &cfg).unwrap();
+    let total_passes: u64 = report
+        .splitter_io
+        .iter()
+        .map(|s| s.disk_read_passes)
+        .sum();
+    let total_read: u64 = report.splitter_io.iter().map(|s| s.disk_read_bytes).sum();
+    assert!(total_passes > 0 && total_read > 0);
+    // Reads per pass ~ column size: bytes/passes should be less than
+    // around one full column (sorted entries are 8B/row + header).
+    let per_pass = total_read / total_passes;
+    assert!(
+        per_pass <= 8 * 500 + 200,
+        "per-pass bytes {per_pass} exceeds one sequential column scan"
+    );
+}
+
+#[test]
+fn feature_importance_finds_planted_signal_distributed() {
+    let ds = SyntheticSpec::new(Family::Majority { informative: 3 }, 2500, 10, 6).generate();
+    let mut cfg = base_cfg(8, 15);
+    cfg.forest.max_depth = 8;
+    let (forest, _) = RandomForest::train_with_config(&ds, &cfg).unwrap();
+    let imp = drf::forest::importance::mdi_importance(&forest, 10);
+    let ranks = drf::forest::importance::rank_features(&imp);
+    let top: std::collections::HashSet<usize> = ranks[..3].iter().copied().collect();
+    assert_eq!(top, [0usize, 1, 2].into_iter().collect());
+}

@@ -1,0 +1,198 @@
+//! THE core claim of the paper: DRF is *exact* — the distributed,
+//! column-partitioned, depth-wise algorithm produces bit-identical
+//! trees to the classic in-memory row-partitioning trainer, for every
+//! configuration: bagging modes, feature-sampling policies, worker
+//! counts, redundancy, storage modes, and mixed column types.
+
+use drf::baselines::classic::ClassicTrainer;
+use drf::baselines::sliq::SliqTrainer;
+use drf::baselines::sprint::SprintTrainer;
+use drf::config::{ForestParams, StorageMode, TrainConfig};
+use drf::data::io_stats::IoStats;
+use drf::data::synthetic::{Family, LeoLikeSpec, SyntheticSpec};
+use drf::data::Dataset;
+use drf::forest::RandomForest;
+use drf::rng::{BaggingMode, FeatureSampling};
+use drf::util::proptest::run_cases;
+
+fn drf_trees(ds: &Dataset, params: &ForestParams, cfg_mut: impl Fn(&mut TrainConfig)) -> Vec<drf::tree::Tree> {
+    let mut cfg = TrainConfig {
+        forest: *params,
+        ..Default::default()
+    };
+    cfg_mut(&mut cfg);
+    let (forest, _) = RandomForest::train_with_config(ds, &cfg).unwrap();
+    forest.trees
+}
+
+fn assert_exact(ds: &Dataset, params: &ForestParams, cfg_mut: impl Fn(&mut TrainConfig)) {
+    let classic = ClassicTrainer::new(ds, params).train_forest();
+    let distributed = drf_trees(ds, params, cfg_mut);
+    assert_eq!(classic.len(), distributed.len());
+    for (t, (c, d)) in classic.iter().zip(&distributed).enumerate() {
+        assert_eq!(c, d, "tree {t} differs between classic and DRF");
+    }
+}
+
+#[test]
+fn exact_on_binary_features_per_node_sampling() {
+    let ds = SyntheticSpec::new(Family::Xor { informative: 3 }, 600, 9, 11).generate();
+    let params = ForestParams {
+        num_trees: 3,
+        max_depth: 8,
+        bagging: BaggingMode::Poisson,
+        feature_sampling: FeatureSampling::PerNode,
+        seed: 1234,
+        ..Default::default()
+    };
+    assert_exact(&ds, &params, |_| {});
+}
+
+#[test]
+fn exact_on_continuous_features() {
+    let ds = SyntheticSpec::new(Family::LinearCont { informative: 4 }, 500, 8, 3).generate();
+    let params = ForestParams {
+        num_trees: 2,
+        max_depth: 10,
+        min_records: 5,
+        bagging: BaggingMode::Poisson,
+        seed: 99,
+        ..Default::default()
+    };
+    assert_exact(&ds, &params, |_| {});
+}
+
+#[test]
+fn exact_with_usb_sampling() {
+    let ds = SyntheticSpec::new(Family::Majority { informative: 5 }, 400, 12, 7).generate();
+    let params = ForestParams {
+        num_trees: 2,
+        max_depth: 6,
+        feature_sampling: FeatureSampling::PerDepth,
+        bagging: BaggingMode::Poisson,
+        seed: 5,
+        ..Default::default()
+    };
+    assert_exact(&ds, &params, |_| {});
+}
+
+#[test]
+fn exact_on_leo_like_mixed_types() {
+    // 3 numerical + 69 categorical with arities up to 10'000.
+    let ds = LeoLikeSpec::new(800, 21).generate();
+    let params = ForestParams {
+        num_trees: 2,
+        max_depth: 5,
+        min_records: 10,
+        bagging: BaggingMode::Poisson,
+        seed: 42,
+        ..Default::default()
+    };
+    assert_exact(&ds, &params, |_| {});
+}
+
+#[test]
+fn exact_with_few_splitters_and_redundancy() {
+    let ds = SyntheticSpec::new(Family::Xor { informative: 2 }, 300, 10, 2).generate();
+    let params = ForestParams {
+        num_trees: 2,
+        max_depth: 6,
+        bagging: BaggingMode::Poisson,
+        seed: 8,
+        ..Default::default()
+    };
+    // 3 splitters for 10 columns, each column on 2 replicas.
+    assert_exact(&ds, &params, |cfg| {
+        cfg.topology.num_splitters = Some(3);
+        cfg.topology.redundancy = 2;
+    });
+}
+
+#[test]
+fn exact_with_disk_storage() {
+    let ds = LeoLikeSpec::new(300, 5).generate();
+    let params = ForestParams {
+        num_trees: 1,
+        max_depth: 4,
+        min_records: 5,
+        bagging: BaggingMode::Poisson,
+        seed: 13,
+        ..Default::default()
+    };
+    assert_exact(&ds, &params, |cfg| {
+        cfg.storage = StorageMode::Disk;
+        cfg.topology.num_splitters = Some(5);
+    });
+}
+
+#[test]
+fn exact_with_adaptive_pruning() {
+    // SPRINT-style pruning is a performance feature; it must never
+    // change the model.
+    let ds = SyntheticSpec::new(Family::LinearCont { informative: 3 }, 600, 6, 17).generate();
+    let params = ForestParams {
+        num_trees: 1,
+        max_depth: 8,
+        min_records: 50, // leaves close early -> pruning triggers
+        bagging: BaggingMode::Poisson,
+        seed: 3,
+        ..Default::default()
+    };
+    assert_exact(&ds, &params, |cfg| {
+        cfg.prune = drf::config::PruneMode::Adaptive { threshold: 0.2 };
+    });
+}
+
+#[test]
+fn sliq_and_sprint_also_exact_on_mixed_data() {
+    let ds = LeoLikeSpec::new(400, 9).generate();
+    let params = ForestParams {
+        num_trees: 1,
+        max_depth: 4,
+        min_records: 10,
+        bagging: BaggingMode::Poisson,
+        seed: 55,
+        ..Default::default()
+    };
+    let classic = ClassicTrainer::new(&ds, &params).train_tree(0);
+    let sliq = SliqTrainer::new(&ds, &params, IoStats::new()).train_tree(0);
+    let sprint = SprintTrainer::new(&ds, &params, IoStats::new()).train_tree(0);
+    assert_eq!(classic, sliq);
+    assert_eq!(classic, sprint);
+}
+
+#[test]
+fn property_exactness_over_random_configs() {
+    // Property test: random schema/seed/worker-count configurations all
+    // preserve exactness.
+    run_cases(0xE8AC7, 12, |rng| {
+        let informative = rng.usize(2, 4);
+        let features = informative + rng.usize(0, 4);
+        let family = *rng.choose(&[
+            Family::Xor { informative },
+            Family::Majority { informative },
+            Family::LinearCont { informative },
+        ]);
+        let n = rng.usize(50, 400);
+        let ds = SyntheticSpec::new(family, n, features, rng.u64(1 << 40)).generate();
+        let params = ForestParams {
+            num_trees: 1,
+            max_depth: rng.usize(2, 6) as u32,
+            min_records: rng.usize(1, 20) as u64,
+            bagging: *rng.choose(&[BaggingMode::None, BaggingMode::Poisson]),
+            feature_sampling: *rng.choose(&[
+                FeatureSampling::PerNode,
+                FeatureSampling::PerDepth,
+                FeatureSampling::All,
+            ]),
+            seed: rng.u64(1 << 40),
+            ..Default::default()
+        };
+        let splitters = rng.usize(1, features);
+        let redundancy = rng.usize(1, 2);
+        assert_exact(&ds, &params, |cfg| {
+            cfg.topology.num_splitters = Some(splitters);
+            cfg.topology.redundancy = redundancy;
+        });
+    });
+}

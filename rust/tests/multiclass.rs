@@ -1,0 +1,122 @@
+//! Multiclass coverage: the paper's experiments are binary, but the
+//! algorithm (and this implementation) is generic over the number of
+//! classes — histograms, Gini/entropy, numerical supersplits, and the
+//! one-vs-rest categorical fallback. Exactness must hold here too.
+
+use drf::baselines::classic::ClassicTrainer;
+use drf::config::{ForestParams, TrainConfig};
+use drf::data::column::Column;
+use drf::data::schema::{ColumnSpec, Schema};
+use drf::data::Dataset;
+use drf::forest::RandomForest;
+use drf::metrics::accuracy;
+use drf::rng::{BaggingMode, SplitMix64};
+use drf::splits::ScoreKind;
+
+/// 3-class dataset: class = which of three intervals x falls in, plus a
+/// categorical feature whose value leaks the class for half the rows.
+fn three_class(n: usize, seed: u64) -> Dataset {
+    let u = |tag: u64, i: usize| {
+        (SplitMix64::hash_key(&[seed, tag, i as u64]) >> 11) as f64 / (1u64 << 53) as f64
+    };
+    let xs: Vec<f32> = (0..n).map(|i| u(1, i) as f32).collect();
+    let labels: Vec<u32> = xs
+        .iter()
+        .map(|&x| {
+            if x < 0.33 {
+                0
+            } else if x < 0.66 {
+                1
+            } else {
+                2
+            }
+        })
+        .collect();
+    let cats: Vec<u32> = (0..n)
+        .map(|i| {
+            if u(2, i) < 0.5 {
+                labels[i] + 3 // leaky values 3,4,5
+            } else {
+                (u(3, i) * 3.0) as u32 // noise values 0,1,2
+            }
+        })
+        .collect();
+    let noise: Vec<f32> = (0..n).map(|i| u(4, i) as f32).collect();
+    Dataset::new(
+        Schema::new(
+            vec![
+                ColumnSpec::numerical("x"),
+                ColumnSpec::categorical("c", 6),
+                ColumnSpec::numerical("noise"),
+            ],
+            3,
+        ),
+        vec![
+            Column::Numerical(xs),
+            Column::Categorical {
+                values: cats,
+                arity: 6,
+            },
+            Column::Numerical(noise),
+        ],
+        labels,
+    )
+}
+
+#[test]
+fn multiclass_forest_learns() {
+    let train = three_class(3000, 1);
+    let test = three_class(1000, 2);
+    let params = ForestParams {
+        num_trees: 10,
+        max_depth: 8,
+        seed: 5,
+        ..Default::default()
+    };
+    let forest = RandomForest::train(&train, &params).unwrap();
+    let acc = accuracy(&forest.predict_classes(&test), test.labels());
+    assert!(acc > 0.9, "3-class accuracy {acc}");
+}
+
+#[test]
+fn multiclass_exactness() {
+    let ds = three_class(700, 3);
+    for score_kind in [ScoreKind::Gini, ScoreKind::Entropy] {
+        let params = ForestParams {
+            num_trees: 2,
+            max_depth: 6,
+            min_records: 5,
+            bagging: BaggingMode::Poisson,
+            score_kind,
+            seed: 77,
+            ..Default::default()
+        };
+        let classic = ClassicTrainer::new(&ds, &params).train_forest();
+        let cfg = TrainConfig {
+            forest: params,
+            ..Default::default()
+        };
+        let (drf, _) = RandomForest::train_with_config(&ds, &cfg).unwrap();
+        assert_eq!(classic, drf.trees, "multiclass exactness ({score_kind:?})");
+    }
+}
+
+#[test]
+fn entropy_vs_gini_differ_but_both_learn() {
+    let train = three_class(2000, 4);
+    let test = three_class(800, 5);
+    let mk = |kind| {
+        let params = ForestParams {
+            num_trees: 5,
+            max_depth: 8,
+            score_kind: kind,
+            seed: 6,
+            ..Default::default()
+        };
+        RandomForest::train(&train, &params).unwrap()
+    };
+    let gini = mk(ScoreKind::Gini);
+    let entropy = mk(ScoreKind::Entropy);
+    assert!(accuracy(&gini.predict_classes(&test), test.labels()) > 0.85);
+    assert!(accuracy(&entropy.predict_classes(&test), test.labels()) > 0.85);
+}

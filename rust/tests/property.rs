@@ -1,0 +1,262 @@
+//! Property-based tests over substrate invariants (seeded in-tree
+//! harness, see util::proptest): class-list transitions, bitmaps,
+//! external sort, JSON, AUC, and the classlist/bitmap interplay that
+//! the coordinator depends on.
+
+use drf::classlist::{width_for, ClassList};
+use drf::coordinator::messages::{Bitmap, LeafOutcome, LevelUpdate};
+use drf::coordinator::splitter::apply_update_to_class_list;
+use drf::data::column::{Column, SortedEntry};
+use drf::data::io_stats::IoStats;
+use drf::data::sort::ExternalSorter;
+use drf::metrics::auc;
+use drf::util::json::Json;
+use drf::util::proptest::run_cases;
+
+#[test]
+fn classlist_set_get_random() {
+    run_cases(1, 30, |rng| {
+        let n = rng.usize(1, 300);
+        let num_open = rng.usize(1, 5000) as u32;
+        let mut cl = ClassList::with_open(n, num_open);
+        let mut shadow = vec![0u32; n];
+        for _ in 0..n * 2 {
+            let i = rng.usize(0, n - 1);
+            let code = rng.u64(num_open as u64 + 1) as u32;
+            cl.set(i, code);
+            shadow[i] = code;
+        }
+        for i in 0..n {
+            assert_eq!(cl.get(i), shadow[i]);
+        }
+        // Width matches the paper's formula.
+        assert_eq!(cl.width(), width_for(num_open));
+    });
+}
+
+#[test]
+fn classlist_level_transition_matches_naive_model() {
+    // Build a random class list, a random outcome per open leaf, and
+    // check apply_update_to_class_list against a naive per-sample
+    // simulation.
+    run_cases(2, 25, |rng| {
+        let n = rng.usize(1, 200);
+        let num_open = rng.usize(1, 6) as u32;
+        let mut cl = ClassList::with_open(n, num_open);
+        let mut codes = vec![0u32; n];
+        for i in 0..n {
+            let c = rng.u64(num_open as u64 + 1) as u32;
+            cl.set(i, c);
+            codes[i] = c;
+        }
+        // Random outcomes with correctly-sized bitmaps.
+        let mut per_leaf_count = vec![0usize; num_open as usize];
+        for &c in &codes {
+            if c > 0 {
+                per_leaf_count[(c - 1) as usize] += 1;
+            }
+        }
+        let mut outcomes = Vec::new();
+        let mut bits: Vec<Vec<bool>> = Vec::new();
+        for r in 0..num_open as usize {
+            if rng.bool(0.3) {
+                outcomes.push(LeafOutcome::Closed);
+                bits.push(vec![]);
+            } else {
+                let b: Vec<bool> = (0..per_leaf_count[r]).map(|_| rng.bool(0.5)).collect();
+                let mut bm = Bitmap::with_len(b.len());
+                for (k, &v) in b.iter().enumerate() {
+                    bm.set(k, v);
+                }
+                outcomes.push(LeafOutcome::Split {
+                    bitmap: bm,
+                    left_open: rng.bool(0.8),
+                    right_open: rng.bool(0.8),
+                });
+                bits.push(b);
+            }
+        }
+        let update = LevelUpdate {
+            tree: 0,
+            depth: 0,
+            outcomes: outcomes.clone(),
+        };
+        let got = apply_update_to_class_list(&cl, &update).unwrap();
+
+        // Naive model: assign new ranks in outcome order.
+        let mut left_rank = vec![0u32; num_open as usize];
+        let mut right_rank = vec![0u32; num_open as usize];
+        let mut next = 0u32;
+        for (r, o) in outcomes.iter().enumerate() {
+            if let LeafOutcome::Split {
+                left_open,
+                right_open,
+                ..
+            } = o
+            {
+                if *left_open {
+                    next += 1;
+                    left_rank[r] = next;
+                }
+                if *right_open {
+                    next += 1;
+                    right_rank[r] = next;
+                }
+            }
+        }
+        let mut pos = vec![0usize; num_open as usize];
+        for i in 0..n {
+            let c = codes[i];
+            let expect = if c == 0 {
+                0
+            } else {
+                let r = (c - 1) as usize;
+                match &outcomes[r] {
+                    LeafOutcome::Closed => 0,
+                    LeafOutcome::Split { .. } => {
+                        let p = pos[r];
+                        pos[r] += 1;
+                        if bits[r][p] {
+                            left_rank[r]
+                        } else {
+                            right_rank[r]
+                        }
+                    }
+                }
+            };
+            assert_eq!(got.get(i), expect, "sample {i}");
+        }
+        assert_eq!(got.num_open(), next);
+    });
+}
+
+#[test]
+fn external_sort_equals_std_sort() {
+    run_cases(3, 15, |rng| {
+        let n = rng.usize(0, 3000);
+        let values: Vec<f32> = (0..n).map(|_| (rng.f32() * 100.0).round() / 10.0).collect();
+        let dir = drf::util::tempdir().unwrap();
+        let sorter = ExternalSorter::new(dir.path(), rng.usize(2, 257), IoStats::new());
+        let out = dir.path().join("out.drfc");
+        sorter.sort_column(&values, &out).unwrap();
+        let got = drf::data::disk::ColumnReader::open(&out, IoStats::new())
+            .unwrap()
+            .read_all_sorted()
+            .unwrap();
+        let want: Vec<SortedEntry> = Column::Numerical(values).presort();
+        assert_eq!(got, want);
+    });
+}
+
+#[test]
+fn json_roundtrip_random_values() {
+    fn gen(rng: &mut drf::util::proptest::CaseRng, depth: usize) -> Json {
+        if depth == 0 || rng.bool(0.4) {
+            match rng.usize(0, 3) {
+                0 => Json::Null,
+                1 => Json::Bool(rng.bool(0.5)),
+                2 => Json::Num((rng.f64() * 1e6).floor() / 8.0),
+                _ => Json::Str(
+                    (0..rng.usize(0, 12))
+                        .map(|_| char::from_u32(rng.u64(0x250) as u32 + 32).unwrap_or('x'))
+                        .collect(),
+                ),
+            }
+        } else if rng.bool(0.5) {
+            Json::Arr((0..rng.usize(0, 5)).map(|_| gen(rng, depth - 1)).collect())
+        } else {
+            let mut o = Json::object();
+            for k in 0..rng.usize(0, 5) {
+                o.set(&format!("k{k}"), gen(rng, depth - 1));
+            }
+            o
+        }
+    }
+    run_cases(4, 50, |rng| {
+        let v = gen(rng, 4);
+        let text = v.to_string();
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(v, back, "roundtrip of {text}");
+    });
+}
+
+#[test]
+fn auc_matches_brute_force_pair_counting() {
+    run_cases(5, 25, |rng| {
+        let n = rng.usize(2, 120);
+        let labels: Vec<u32> = (0..n).map(|_| rng.bool(0.4) as u32).collect();
+        // Coarse scores force plenty of ties.
+        let scores: Vec<f64> = (0..n).map(|_| rng.usize(0, 5) as f64 / 5.0).collect();
+        let fast = auc(&scores, &labels);
+        // Brute force: P(score_pos > score_neg) + 0.5 P(tie).
+        let (mut wins, mut ties, mut pairs) = (0f64, 0f64, 0f64);
+        for i in 0..n {
+            for j in 0..n {
+                if labels[i] == 1 && labels[j] == 0 {
+                    pairs += 1.0;
+                    if scores[i] > scores[j] {
+                        wins += 1.0;
+                    } else if scores[i] == scores[j] {
+                        ties += 1.0;
+                    }
+                }
+            }
+        }
+        let want = if pairs == 0.0 {
+            0.5
+        } else {
+            (wins + 0.5 * ties) / pairs
+        };
+        assert!((fast - want).abs() < 1e-9, "auc {fast} vs brute {want}");
+    });
+}
+
+#[test]
+fn bitmap_roundtrip_random() {
+    run_cases(6, 30, |rng| {
+        let n = rng.usize(0, 500);
+        let mut bm = Bitmap::with_len(n);
+        let bits: Vec<bool> = (0..n).map(|_| rng.bool(0.5)).collect();
+        for (i, &b) in bits.iter().enumerate() {
+            bm.set(i, b);
+        }
+        for (i, &b) in bits.iter().enumerate() {
+            assert_eq!(bm.get(i), b);
+        }
+        assert_eq!(bm.count_ones(), bits.iter().filter(|&&b| b).count());
+        assert_eq!(bm.wire_bytes(), (n as u64).div_ceil(8));
+    });
+}
+
+#[test]
+fn classlist_rewrite_histogram_conservation() {
+    // Splitting never loses samples: histogram mass before == after
+    // (closed samples move to code 0).
+    run_cases(7, 20, |rng| {
+        let n = rng.usize(1, 400);
+        let num_open = rng.usize(1, 9) as u32;
+        let mut cl = ClassList::with_open(n, num_open);
+        for i in 0..n {
+            cl.set(i, rng.u64(num_open as u64 + 1) as u32);
+        }
+        let before: u64 = cl.histogram().iter().sum();
+        let new_open = rng.usize(0, 2 * num_open as usize) as u32;
+        let got = cl.rewrite(new_open, |_, old| {
+            if old == 0 {
+                0
+            } else {
+                rng_free_map(old, new_open)
+            }
+        });
+        let after: u64 = got.histogram().iter().sum();
+        assert_eq!(before, after, "sample conservation");
+    });
+
+    fn rng_free_map(old: u32, new_open: u32) -> u32 {
+        if new_open == 0 {
+            0
+        } else {
+            old % (new_open + 1)
+        }
+    }
+}

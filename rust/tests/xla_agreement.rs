@@ -1,0 +1,161 @@
+//! Rust ⇄ XLA artifact integration: the AOT-compiled Pallas split
+//! scorer must agree with the exact scalar scorer. Requires
+//! `make artifacts`; tests skip (with a loud message) if artifacts are
+//! missing.
+
+use drf::config::{ForestParams, ScorerBackend, TrainConfig};
+use drf::data::column::Column;
+use drf::data::synthetic::{Family, SyntheticSpec};
+use drf::forest::RandomForest;
+use drf::rng::BaggingMode;
+use drf::runtime::XlaRuntime;
+use drf::splits::histogram::Histogram;
+use drf::splits::numerical::best_numerical_supersplit;
+use drf::splits::scorer::ScoreKind;
+use drf::splits::xla_scorer::{
+    best_numerical_supersplit_xla, ScoreTask, ScoreTasks, XlaScorer,
+};
+use drf::util::proptest::run_cases;
+use std::path::{Path, PathBuf};
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join(XlaScorer::artifact_name(4, 64)).exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts missing — run `make artifacts`");
+        None
+    }
+}
+
+#[test]
+fn scorer_loads_and_scores_simple_case() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = XlaRuntime::cpu().unwrap();
+    let scorer = XlaScorer::load(&rt, &dir, 4, 64).unwrap();
+    // labels 0,0,0,1,1,1 at distinct values: best boundary idx 2, gain 0.5.
+    let task = ScoreTask {
+        pos_prefix: vec![0.0, 0.0, 0.0, 1.0, 2.0],
+        tot_prefix: vec![1.0, 2.0, 3.0, 4.0, 5.0],
+        parent_pos: 3.0,
+        parent_tot: 6.0,
+    };
+    let out = scorer.score_tasks(&[task]).unwrap();
+    let (idx, gain) = out[0].unwrap();
+    assert_eq!(idx, 2);
+    assert!((gain - 0.5).abs() < 1e-6);
+}
+
+#[test]
+fn xla_matches_native_scorer_on_random_tasks() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = XlaRuntime::cpu().unwrap();
+    let scorer = XlaScorer::load(&rt, &dir, 4, 64).unwrap();
+
+    run_cases(0xA9, 10, |rng| {
+        // Random sorted column + labels, single leaf.
+        let n = rng.usize(5, 200);
+        let values: Vec<f32> = (0..n).map(|_| (rng.usize(0, 30) as f32) * 0.5).collect();
+        let labels: Vec<u32> = (0..n).map(|_| rng.bool(0.4) as u32).collect();
+        let col = Column::Numerical(values);
+        let q = col.presort();
+        let mut total = Histogram::new(2);
+        for &y in &labels {
+            total.add(y, 1);
+        }
+        let totals = vec![total];
+
+        let native = best_numerical_supersplit(
+            0, &q, &labels, 2, &totals, ScoreKind::Gini, |_| 1, |_| true, |_| 1,
+        );
+        let xla = best_numerical_supersplit_xla(
+            &scorer, 0, &q, &labels, &totals, |_| 1, |_| true, |_| 1,
+        )
+        .unwrap();
+        match (&native[0], &xla[0]) {
+            (None, None) => {}
+            (Some(a), Some(b)) => {
+                // f32 vs f64 rounding: gains agree to ~1e-5; on exact
+                // ties the argmax may pick a different boundary, so
+                // compare gains, not thresholds.
+                assert!(
+                    (a.gain - b.gain).abs() < 1e-4 * a.gain.max(1e-3),
+                    "gain mismatch: native {} vs xla {}",
+                    a.gain,
+                    b.gain
+                );
+            }
+            (a, b) => panic!("split presence mismatch: native {a:?} vs xla {b:?}"),
+        }
+    });
+}
+
+#[test]
+fn xla_chunking_handles_more_boundaries_than_t() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = XlaRuntime::cpu().unwrap();
+    let scorer = XlaScorer::load(&rt, &dir, 4, 64).unwrap();
+    // 300 boundaries > T=64: forces multi-chunk reduction. Put the best
+    // boundary deep in the 3rd chunk.
+    let n = 300usize;
+    let mut pos = Vec::new();
+    let mut tot = Vec::new();
+    let (mut p, mut t) = (0f32, 0f32);
+    for i in 0..n {
+        t += 1.0;
+        if i >= 200 {
+            p += 1.0;
+        }
+        pos.push(p);
+        tot.push(t);
+    }
+    let task = ScoreTask {
+        pos_prefix: pos,
+        tot_prefix: tot,
+        parent_pos: 101.0,
+        parent_tot: 301.0,
+    };
+    let out = scorer.score_tasks(&[task]).unwrap();
+    let (idx, gain) = out[0].unwrap();
+    assert!(gain > 0.0);
+    // Boundary i has the first i+1 records on the left; all 200
+    // negatives are left of boundary 199.
+    assert_eq!(idx, 199);
+}
+
+#[test]
+fn full_training_with_xla_backend_matches_native_auc() {
+    let Some(dir) = artifacts_dir() else { return };
+    // End-to-end: train with the XLA scorer backend. The model may not
+    // be bit-identical (f32 scoring) but must have statistically
+    // indistinguishable quality and identical structure on well-
+    // separated data.
+    let train = SyntheticSpec::new(Family::LinearCont { informative: 3 }, 800, 6, 31).generate();
+    let test = SyntheticSpec::new(Family::LinearCont { informative: 3 }, 500, 6, 32).generate();
+    let params = ForestParams {
+        num_trees: 3,
+        max_depth: 6,
+        bagging: BaggingMode::Poisson,
+        seed: 7,
+        ..Default::default()
+    };
+    let native_cfg = TrainConfig {
+        forest: params,
+        ..Default::default()
+    };
+    let (native, _) = RandomForest::train_with_config(&train, &native_cfg).unwrap();
+    let xla_cfg = TrainConfig {
+        forest: params,
+        scorer: ScorerBackend::Xla,
+        artifacts_dir: Some(dir),
+        ..Default::default()
+    };
+    let (xla, _) = RandomForest::train_with_config(&train, &xla_cfg).unwrap();
+    let auc_native = drf::metrics::auc(&native.predict_scores(&test), test.labels());
+    let auc_xla = drf::metrics::auc(&xla.predict_scores(&test), test.labels());
+    assert!(
+        (auc_native - auc_xla).abs() < 0.05,
+        "AUC drift: native {auc_native} vs xla {auc_xla}"
+    );
+    assert!(auc_xla > 0.8, "xla-backed forest should learn, AUC {auc_xla}");
+}
