@@ -48,5 +48,25 @@ fn main() -> anyhow::Result<()> {
     let back = RandomForest::load(&path)?;
     assert_eq!(forest, back);
     println!("  model JSON roundtrip OK ({} bytes)", std::fs::metadata(&path)?.len());
+
+    // 5. Compile for serving: the flattened engine scores in cache-
+    //    friendly batches (this is what `drf serve` runs behind TCP)
+    //    and stays bit-identical to the reference traversal.
+    let flat = drf::serve::FlatForest::compile(&forest);
+    let batched = flat.predict_scores_batch(&test, &drf::serve::BatchOptions::default());
+    let reference = forest.predict_scores_reference(&test);
+    assert_eq!(batched.len(), reference.len());
+    assert!(
+        batched
+            .iter()
+            .zip(&reference)
+            .all(|(a, b)| a.to_bits() == b.to_bits()),
+        "flat batch scores must be bit-identical to the reference"
+    );
+    println!(
+        "  serving engine: {} nodes flattened into {} KB, batch scores exact",
+        flat.num_nodes(),
+        flat.nbytes() / 1000
+    );
     Ok(())
 }

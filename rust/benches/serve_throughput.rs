@@ -1,0 +1,107 @@
+//! Serving throughput: reference row-at-a-time traversal vs the
+//! flattened engine, single-threaded and multi-threaded.
+//!
+//! Acceptance target for the serve subsystem: flat batched prediction
+//! ≥ 3× the reference `predict_scores` throughput on a 20-tree /
+//! depth-12 forest. Results are printed as a table and recorded in
+//! `BENCH_serve.json` (in the working directory) so later PRs have a
+//! perf trajectory to compare against.
+
+use drf::data::synthetic::{Family, SyntheticSpec};
+use drf::forest::{ForestParams, RandomForest};
+use drf::serve::{BatchOptions, FlatForest};
+use drf::util::bench::{bench, fmt_count, Table};
+use drf::util::Json;
+
+fn main() {
+    // Train on a modest sample; score a bigger disjoint set (training
+    // time is not what this bench measures).
+    let train = SyntheticSpec::new(Family::Majority { informative: 5 }, 30_000, 10, 1).generate();
+    let test = SyntheticSpec::new(Family::Majority { informative: 5 }, 100_000, 10, 2).generate();
+    let params = ForestParams {
+        num_trees: 20,
+        max_depth: 12,
+        seed: 7,
+        ..Default::default()
+    };
+    println!(
+        "training {} trees (depth<={}) on {} rows…",
+        params.num_trees,
+        params.max_depth,
+        train.num_rows()
+    );
+    let forest = RandomForest::train(&train, &params).unwrap();
+    let flat = FlatForest::compile(&forest);
+    println!(
+        "model: {} nodes, {} KB flattened; scoring {} rows",
+        forest.num_nodes(),
+        flat.nbytes() / 1000,
+        test.num_rows()
+    );
+
+    let n = test.num_rows() as f64;
+    let threads = std::thread::available_parallelism()
+        .map(|t| t.get())
+        .unwrap_or(1);
+
+    let t_ref = bench(5, 15.0, || {
+        std::hint::black_box(forest.predict_scores_reference(&test));
+    });
+    let t_flat = bench(5, 15.0, || {
+        std::hint::black_box(flat.predict_scores_batch(&test, &BatchOptions::single_thread()));
+    });
+    let t_mt = bench(5, 15.0, || {
+        std::hint::black_box(flat.predict_scores_batch(&test, &BatchOptions::default()));
+    });
+
+    // Sanity: the three paths agree bit-for-bit before we compare speed.
+    let a = forest.predict_scores_reference(&test);
+    let b = flat.predict_scores_batch(&test, &BatchOptions::single_thread());
+    let c = flat.predict_scores_batch(&test, &BatchOptions::default());
+    assert!(
+        a.iter().zip(&b).all(|(x, y)| x.to_bits() == y.to_bits())
+            && a.iter().zip(&c).all(|(x, y)| x.to_bits() == y.to_bits()),
+        "serving paths disagree — exactness before speed"
+    );
+
+    let rps = |mean_s: f64| n / mean_s;
+    let mut table = Table::new(&["path", "time / pass", "rows/s", "speedup"]);
+    table.row(&[
+        "reference (row-at-a-time)".into(),
+        t_ref.per_iter_label(),
+        fmt_count(rps(t_ref.mean_s)),
+        "1.00x".into(),
+    ]);
+    table.row(&[
+        "flat (1 thread)".into(),
+        t_flat.per_iter_label(),
+        fmt_count(rps(t_flat.mean_s)),
+        format!("{:.2}x", t_ref.mean_s / t_flat.mean_s),
+    ]);
+    table.row(&[
+        format!("flat ({threads} threads)"),
+        t_mt.per_iter_label(),
+        fmt_count(rps(t_mt.mean_s)),
+        format!("{:.2}x", t_ref.mean_s / t_mt.mean_s),
+    ]);
+    table.print();
+
+    let mut o = Json::object();
+    o.set("bench", Json::Str("serve_throughput".into()))
+        .set("rows", Json::from_usize(test.num_rows()))
+        .set("trees", Json::from_usize(params.num_trees))
+        .set("max_depth", Json::from_u64(params.max_depth as u64))
+        .set("num_nodes", Json::from_usize(forest.num_nodes()))
+        .set("threads", Json::from_usize(threads))
+        .set("reference_rows_per_s", Json::Num(rps(t_ref.mean_s)))
+        .set("flat_rows_per_s", Json::Num(rps(t_flat.mean_s)))
+        .set("flat_mt_rows_per_s", Json::Num(rps(t_mt.mean_s)))
+        .set("speedup_flat", Json::Num(t_ref.mean_s / t_flat.mean_s))
+        .set("speedup_flat_mt", Json::Num(t_ref.mean_s / t_mt.mean_s));
+    let path = "BENCH_serve.json";
+    std::fs::write(path, o.to_string()).unwrap();
+    println!("\nsummary written to {path}");
+    if t_ref.mean_s / t_flat.mean_s < 3.0 {
+        println!("WARNING: flat single-thread speedup below the 3x acceptance target");
+    }
+}

@@ -86,6 +86,13 @@ impl<'a> Reader<'a> {
         Ok(())
     }
 
+    /// Bytes left in the frame. Decoders facing untrusted peers use
+    /// this to bound length prefixes by element size before allocating
+    /// (see `serve::wire`).
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
     fn take(&mut self, n: usize) -> Result<&'a [u8]> {
         ensure!(self.pos + n <= self.buf.len(), "frame truncated");
         let s = &self.buf[self.pos..self.pos + n];

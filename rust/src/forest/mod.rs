@@ -9,10 +9,29 @@ use crate::config::TrainConfig;
 pub use crate::config::{ForestParams, TopologyParams};
 use crate::coordinator::{Manager, TrainReport};
 use crate::data::Dataset;
+use crate::serve::{BatchOptions, FlatForest};
 use crate::tree::Tree;
 use crate::Result;
 use anyhow::Context;
 use std::path::Path;
+
+/// The class that wins a vote histogram: the **highest vote count,
+/// ties broken to the lowest class id**. This is the forest's only
+/// vote-resolution rule — shared by the reference per-row path and the
+/// flattened serving engine so the two can never disagree. (It replaces
+/// an opaque `usize::MAX - c` key-packing trick with an explicit,
+/// documented comparator.) Returns class 0 for an all-zero (or empty)
+/// histogram.
+pub fn winning_class(votes: &[u32]) -> u32 {
+    let mut best = 0usize;
+    for (c, &v) in votes.iter().enumerate().skip(1) {
+        // Strictly-greater keeps the earlier (lower) class on ties.
+        if v > votes[best] {
+            best = c;
+        }
+    }
+    best as u32
+}
 
 /// A trained Random Forest.
 #[derive(Debug, Clone, PartialEq)]
@@ -77,8 +96,25 @@ impl RandomForest {
             / self.trees.len() as f64
     }
 
+    /// Compile this forest for serving (see [`crate::serve::flat`]).
+    pub fn compile(&self) -> FlatForest {
+        FlatForest::compile(self)
+    }
+
     /// Scores for every row of a dataset.
+    ///
+    /// Runs through the flattened serving engine — blocked, breadth-
+    /// first, multi-threaded batch traversal — which is bit-identical
+    /// to [`Self::predict_scores_reference`]. Compilation is linear in
+    /// the model size and paid per call; callers scoring many batches
+    /// should [`Self::compile`] once and reuse the [`FlatForest`].
     pub fn predict_scores(&self, ds: &Dataset) -> Vec<f64> {
+        self.compile().predict_scores_batch(ds, &BatchOptions::default())
+    }
+
+    /// Reference row-at-a-time scores (the correctness oracle for the
+    /// serving engine; also the baseline in `benches/serve_throughput`).
+    pub fn predict_scores_reference(&self, ds: &Dataset) -> Vec<f64> {
         (0..ds.num_rows()).map(|i| self.score(&ds.row(i))).collect()
     }
 
@@ -89,8 +125,15 @@ impl RandomForest {
             .collect()
     }
 
-    /// Majority-vote class predictions.
+    /// Majority-vote class predictions (ties to the lowest class id,
+    /// see [`winning_class`]), via the flattened batch engine.
     pub fn predict_classes(&self, ds: &Dataset) -> Vec<u32> {
+        self.compile().predict_classes_batch(ds, &BatchOptions::default())
+    }
+
+    /// Reference row-at-a-time class predictions; same vote-resolution
+    /// rule ([`winning_class`]) as the batch path.
+    pub fn predict_classes_reference(&self, ds: &Dataset) -> Vec<u32> {
         (0..ds.num_rows())
             .map(|i| {
                 let row = ds.row(i);
@@ -98,12 +141,7 @@ impl RandomForest {
                 for t in &self.trees {
                     votes[t.predict_class(&row) as usize] += 1;
                 }
-                votes
-                    .iter()
-                    .enumerate()
-                    .max_by_key(|(c, &v)| (v, usize::MAX - c)) // ties to lower class
-                    .map(|(c, _)| c as u32)
-                    .unwrap_or(0)
+                winning_class(&votes)
             })
             .collect()
     }
@@ -244,6 +282,63 @@ mod tests {
         let shallow = f.predict_scores_at_depth(&ds, 0);
         assert!(shallow.iter().all(|&s| (s - shallow[0]).abs() < 1e-9),
             "depth 0 = root prior for everyone");
+    }
+
+    #[test]
+    fn winning_class_ties_break_low() {
+        assert_eq!(winning_class(&[]), 0);
+        assert_eq!(winning_class(&[0, 0, 0]), 0);
+        assert_eq!(winning_class(&[1, 3, 2]), 1);
+        assert_eq!(winning_class(&[2, 3, 3]), 1, "tie 1-vs-2 goes to 1");
+        assert_eq!(winning_class(&[3, 3, 3]), 0, "three-way tie goes to 0");
+    }
+
+    #[test]
+    fn multiclass_tie_predicts_lowest_class() {
+        // Three single-leaf trees voting for classes 2, 1, and 0: a
+        // three-way tie that must resolve to class 0, through both the
+        // batched fast path and the reference path.
+        let forest = RandomForest {
+            trees: vec![
+                Tree::new_root(vec![0, 0, 5]),
+                Tree::new_root(vec![0, 5, 0]),
+                Tree::new_root(vec![5, 0, 0]),
+            ],
+            num_classes: 3,
+        };
+        let ds = Dataset::new(
+            crate::data::schema::Schema::new(
+                vec![crate::data::schema::ColumnSpec::numerical("x")],
+                3,
+            ),
+            vec![crate::data::column::Column::Numerical(vec![0.0, 1.0])],
+            vec![0, 2],
+        );
+        assert_eq!(forest.predict_classes(&ds), vec![0, 0]);
+        assert_eq!(forest.predict_classes_reference(&ds), vec![0, 0]);
+        // Two votes for class 2 beat one for class 1.
+        let skewed = RandomForest {
+            trees: vec![
+                Tree::new_root(vec![0, 0, 5]),
+                Tree::new_root(vec![0, 0, 5]),
+                Tree::new_root(vec![0, 5, 0]),
+            ],
+            num_classes: 3,
+        };
+        assert_eq!(skewed.predict_classes(&ds), vec![2, 2]);
+    }
+
+    #[test]
+    fn batched_scores_match_reference_bitwise() {
+        let ds = SyntheticSpec::new(Family::Majority { informative: 3 }, 900, 7, 1).generate();
+        let f = RandomForest::train(&ds, &params(6, 2)).unwrap();
+        let fast = f.predict_scores(&ds);
+        let slow = f.predict_scores_reference(&ds);
+        assert_eq!(fast.len(), slow.len());
+        for (i, (a, b)) in fast.iter().zip(&slow).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "row {i}");
+        }
+        assert_eq!(f.predict_classes(&ds), f.predict_classes_reference(&ds));
     }
 
     #[test]

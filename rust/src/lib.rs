@@ -23,6 +23,15 @@
 //! through PJRT (see [`runtime`] and [`splits::xla_scorer`]); the exact
 //! scalar scorer remains the default and the correctness oracle.
 //!
+//! Trained forests are **served** by the [`serve`] subsystem: the
+//! forest is compiled into a [`serve::FlatForest`] (structure-of-arrays
+//! nodes + a shared categorical-bitset arena) and scored with blocked,
+//! breadth-first, multi-threaded batch traversal that stays
+//! bit-identical to the reference per-row walk. A threaded TCP
+//! prediction server ([`serve::PredictionServer`]) exposes `Score`,
+//! `Classify`, `ModelInfo`, and hot model `Reload` over a
+//! length-prefixed binary protocol.
+//!
 //! ## Quickstart
 //!
 //! ```no_run
@@ -35,6 +44,32 @@
 //! let auc = drf::metrics::auc(&forest.predict_scores(&ds), ds.labels());
 //! println!("train AUC = {auc:.3}");
 //! ```
+//!
+//! ## Serving quickstart
+//!
+//! Train and save a model, serve it, then score over TCP:
+//!
+//! ```text
+//! drf train --family xor --informative 3 --rows 10000 --features 6 \
+//!     --trees 20 --depth 12 --out /tmp/forest.json
+//! drf serve --model /tmp/forest.json --addr 127.0.0.1:7878
+//! drf predict --addr 127.0.0.1:7878 --family xor --informative 3 \
+//!     --rows 5000 --features 6 --seed 99
+//! ```
+//!
+//! or in-process:
+//!
+//! ```no_run
+//! use drf::data::synthetic::{SyntheticSpec, Family};
+//! use drf::forest::{RandomForest, ForestParams};
+//! use drf::serve::{BatchOptions, FlatForest};
+//!
+//! let ds = SyntheticSpec::new(Family::Xor { informative: 4 }, 10_000, 8, 42).generate();
+//! let forest = RandomForest::train(&ds, &ForestParams::default()).unwrap();
+//! let flat = FlatForest::compile(&forest); // compile once…
+//! let scores = flat.predict_scores_batch(&ds, &BatchOptions::default()); // …score many times
+//! assert_eq!(scores.len(), ds.num_rows());
+//! ```
 
 pub mod baselines;
 pub mod classlist;
@@ -46,6 +81,7 @@ pub mod forest;
 pub mod metrics;
 pub mod rng;
 pub mod runtime;
+pub mod serve;
 pub mod splits;
 pub mod tree;
 pub mod util;

@@ -6,6 +6,10 @@
 //!                 dataset and save it as JSON (plus a training report);
 //! * `evaluate`  — score a saved forest on a freshly generated test set;
 //! * `importance`— print MDI feature importances of a saved forest;
+//! * `serve`     — serve a saved forest over TCP (flattened engine,
+//!                 hot reload);
+//! * `predict`   — score a dataset against a running server (`--addr`)
+//!                 or locally against a saved model (`--model`);
 //! * `info`      — runtime/platform info (PJRT client, artifacts).
 //!
 //! Examples:
@@ -16,6 +20,9 @@
 //! drf train --family leo --rows 100000 --trees 3 --depth 20 \
 //!     --storage disk --report /tmp/report.json
 //! drf evaluate --model /tmp/forest.json --family xor --informative 3 \
+//!     --rows 5000 --features 6 --seed 99
+//! drf serve --model /tmp/forest.json --addr 127.0.0.1:7878
+//! drf predict --addr 127.0.0.1:7878 --family xor --informative 3 \
 //!     --rows 5000 --features 6 --seed 99
 //! ```
 
@@ -73,6 +80,8 @@ fn run(argv: &[String]) -> Result<()> {
         "generate" => cmd_generate(&argv[1..]),
         "evaluate" => cmd_evaluate(&argv[1..]),
         "importance" => cmd_importance(&argv[1..]),
+        "serve" => cmd_serve(&argv[1..]),
+        "predict" => cmd_predict(&argv[1..]),
         "info" => cmd_info(),
         "help" | "--help" | "-h" => {
             print!("{}", HELP);
@@ -99,11 +108,20 @@ USAGE:
   drf generate [--family ...] [--rows N] [--seed S] --out-dir DIR
   drf evaluate --model forest.json [--family ...|--csv ...|--data DIR]
   drf importance --model forest.json [--features M]
+  drf serve --model forest.json [--addr HOST:PORT]
+  drf predict (--addr HOST:PORT | --model forest.json)
+              [--family ...|--csv ...|--data DIR] [--show N]
   drf info
 
-Data sources (train/evaluate): --csv loads a CSV file (schema inferred,
-label column by name); --data loads a dataset directory written by
-`drf generate`; otherwise a synthetic family is generated in memory.
+Data sources (train/evaluate/predict): --csv loads a CSV file (schema
+inferred, label column by name); --data loads a dataset directory
+written by `drf generate`; otherwise a synthetic family is generated in
+memory.
+
+Serving: `drf serve` compiles the model into the flattened inference
+engine and answers Score/Classify/ModelInfo/Reload RPCs over a
+length-prefixed binary protocol; `drf predict --addr` scores over TCP,
+`drf predict --model` scores in-process.
 ";
 
 /// Build the dataset described by the common data flags.
@@ -323,9 +341,13 @@ fn cmd_evaluate(argv: &[String]) -> Result<()> {
     let model = args.get("model").context("--model is required")?;
     let forest = RandomForest::load(std::path::Path::new(model))?;
     let (ds, family) = dataset_from_args(&args)?;
-    let scores = forest.predict_scores(&ds);
+    // Compile once, score and classify on the same flat forest.
+    let flat = forest.compile();
+    flat.check_dataset(&ds)?;
+    let opts = drf::serve::BatchOptions::default();
+    let scores = flat.predict_scores_batch(&ds, &opts);
     let a = auc(&scores, ds.labels());
-    let preds = forest.predict_classes(&ds);
+    let preds = flat.predict_classes_batch(&ds, &opts);
     let acc = drf::metrics::accuracy(&preds, ds.labels());
     println!(
         "{}: {} rows — AUC {:.4}, accuracy {:.4} ({} trees)",
@@ -355,6 +377,75 @@ fn cmd_importance(argv: &[String]) -> Result<()> {
     let imp = mdi_importance(&forest, m);
     for f in rank_features(&imp) {
         println!("feature {f}: {:.4}", imp[f]);
+    }
+    Ok(())
+}
+
+fn cmd_serve(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv, &["model", "addr"])?;
+    let model = args.require("model")?;
+    let addr = args.get_string("addr", "127.0.0.1:7878");
+    let path = std::path::PathBuf::from(model);
+    let forest = RandomForest::load(&path)?;
+    // The server compiles the forest itself; don't flatten twice.
+    let server = drf::serve::PredictionServer::spawn(&forest, &addr, Some(path))?;
+    println!(
+        "serving {} trees / {} nodes ({} classes) on {}",
+        forest.num_trees(),
+        forest.num_nodes(),
+        forest.num_classes,
+        server.addr(),
+    );
+    println!("RPCs: Score, Classify, ModelInfo, Reload (hot). Ctrl-C to stop.");
+    // Serve until killed; connections are handled by the server's
+    // accept/worker threads.
+    loop {
+        std::thread::park();
+    }
+}
+
+fn cmd_predict(argv: &[String]) -> Result<()> {
+    let mut flags = TRAIN_FLAGS.to_vec();
+    flags.extend(["model", "addr", "show"]);
+    let args = Args::parse(argv, &flags)?;
+    let (ds, family) = dataset_from_args(&args)?;
+    let (scores, classes, source) = match args.get("addr") {
+        Some(addr) => {
+            let mut client = drf::serve::PredictClient::connect(addr)?;
+            let info = client.model_info()?;
+            println!(
+                "connected to {addr}: {} trees / {} nodes, {} classes",
+                info.num_trees, info.num_nodes, info.num_classes
+            );
+            (
+                client.score_dataset(&ds)?,
+                client.classify_dataset(&ds)?,
+                format!("tcp:{addr}"),
+            )
+        }
+        None => {
+            let model = args.get("model").context(
+                "predict needs --addr (remote server) or --model (local scoring)",
+            )?;
+            let forest = RandomForest::load(std::path::Path::new(model))?;
+            let flat = forest.compile();
+            flat.check_dataset(&ds)?;
+            let opts = drf::serve::BatchOptions::default();
+            (
+                flat.predict_scores_batch(&ds, &opts),
+                flat.predict_classes_batch(&ds, &opts),
+                format!("local:{model}"),
+            )
+        }
+    };
+    let a = auc(&scores, ds.labels());
+    let acc = drf::metrics::accuracy(&classes, ds.labels());
+    println!(
+        "{family} via {source}: {} rows — AUC {a:.4}, accuracy {acc:.4}",
+        ds.num_rows()
+    );
+    for i in 0..args.get_usize("show", 0)?.min(ds.num_rows()) {
+        println!("row {i}: score {:.4}, class {}", scores[i], classes[i]);
     }
     Ok(())
 }

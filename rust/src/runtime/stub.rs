@@ -1,0 +1,87 @@
+//! API-compatible stand-in for the PJRT runtime, compiled when the
+//! `xla` feature is off (the default, and the only configuration that
+//! builds without the vendored `xla` crate).
+//!
+//! Every entry point type-checks exactly like the real runtime but
+//! [`XlaRuntime::cpu`] fails with a clear message, so the XLA scorer
+//! path degrades to an error *only when explicitly requested*
+//! (`--scorer xla`); the exact scalar scorer — the default and the
+//! correctness oracle — is unaffected.
+
+use crate::Result;
+use anyhow::bail;
+use std::path::Path;
+
+const UNAVAILABLE: &str =
+    "XLA/PJRT support is not compiled in (rebuild with `--features xla` and the vendored `xla` crate)";
+
+/// Placeholder for `xla::Literal`. Never constructed.
+#[derive(Debug)]
+pub struct Literal {
+    _never: std::convert::Infallible,
+}
+
+impl Literal {
+    /// Mirrors `xla::Literal::to_vec`; unreachable because no `Literal`
+    /// can be constructed in a stub build.
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        match self._never {}
+    }
+}
+
+/// Placeholder PJRT client. [`Self::cpu`] always fails.
+pub struct XlaRuntime {
+    _never: std::convert::Infallible,
+}
+
+impl XlaRuntime {
+    /// Always fails in a stub build.
+    pub fn cpu() -> Result<Self> {
+        bail!(UNAVAILABLE)
+    }
+
+    pub fn platform_name(&self) -> String {
+        match self._never {}
+    }
+
+    pub fn load_hlo_file(&self, _path: &Path) -> Result<Executable> {
+        match self._never {}
+    }
+
+    pub fn load_hlo_text(&self, _text: &str) -> Result<Executable> {
+        match self._never {}
+    }
+}
+
+/// Placeholder compiled executable. Never constructed.
+pub struct Executable {
+    _never: std::convert::Infallible,
+}
+
+impl Executable {
+    pub fn execute(&self, _inputs: &[Literal]) -> Result<Literal> {
+        match self._never {}
+    }
+
+    pub fn execute_tuple(&self, _inputs: &[Literal]) -> Result<Vec<Literal>> {
+        match self._never {}
+    }
+}
+
+/// Mirrors `runtime::pjrt::literal_f32`; fails because literals cannot
+/// exist without a PJRT client.
+pub fn literal_f32(_data: &[f32], _dims: &[i64]) -> Result<Literal> {
+    bail!(UNAVAILABLE)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_reports_unavailable() {
+        let err = XlaRuntime::cpu().err().expect("stub cpu() must fail");
+        assert!(format!("{err}").contains("not compiled in"));
+        assert!(literal_f32(&[1.0], &[1]).is_err());
+    }
+}

@@ -1,0 +1,262 @@
+//! Blocked, breadth-first batch prediction over a [`FlatForest`].
+//!
+//! Row-at-a-time inference walks one row through all trees, touching a
+//! cold node path per tree per row. Following the cache discipline of
+//! breadth-first/depth-next traversal (arXiv 1910.06853), the batch
+//! engine instead carries a **block** of rows through the forest
+//! together: per block it keeps an active-node cursor per row and
+//! advances every still-active row one level at a time, so the hot top
+//! levels of each tree — and the block's column values — stay resident
+//! in cache while they are reused.
+//!
+//! Blocks are independent, so they fan out across `std::thread` scoped
+//! workers (the crate builds offline; no rayon) pulling block indices
+//! from a shared queue. **Within** a block, trees are visited strictly
+//! in forest order: the per-row score accumulation then performs the
+//! exact same f64 additions, in the same order, as the reference
+//! [`crate::forest::RandomForest::score`], keeping batched scores
+//! bit-identical to the row-at-a-time path — exactness is the brand,
+//! even in serving.
+
+use super::flat::FlatForest;
+use crate::data::Dataset;
+use crate::forest::winning_class;
+use std::sync::Mutex;
+
+/// Tuning knobs for batched prediction.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchOptions {
+    /// Rows per block. The per-block working set (cursor + scores) is
+    /// a few KiB at the default, sized to stay L1/L2-resident next to
+    /// the forest's top levels.
+    pub block_rows: usize,
+    /// Worker threads; `0` = one per available core (capped at the
+    /// number of blocks).
+    pub threads: usize,
+}
+
+impl Default for BatchOptions {
+    fn default() -> Self {
+        Self {
+            block_rows: 512,
+            threads: 0,
+        }
+    }
+}
+
+impl BatchOptions {
+    /// Single-threaded with the default block size (used by benches to
+    /// isolate the layout win from the threading win).
+    pub fn single_thread() -> Self {
+        Self {
+            threads: 1,
+            ..Self::default()
+        }
+    }
+
+    fn resolve_threads(&self, num_blocks: usize) -> usize {
+        let t = if self.threads > 0 {
+            self.threads
+        } else {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+        };
+        t.max(1).min(num_blocks.max(1))
+    }
+}
+
+impl FlatForest {
+    /// Mean P(class 1) for every row — the batched fast path behind
+    /// [`crate::forest::RandomForest::predict_scores`]. Bit-identical
+    /// to scoring each row with [`FlatForest::score`] (and hence to the
+    /// reference traversal), at any thread count.
+    pub fn predict_scores_batch(&self, ds: &Dataset, opts: &BatchOptions) -> Vec<f64> {
+        let mut scores = vec![0.0f64; ds.num_rows()];
+        let block = opts.block_rows.max(1);
+        run_blocks(opts, &mut scores, block, |bi, out| {
+            self.score_block(ds, bi * block, out)
+        });
+        scores
+    }
+
+    /// Majority-vote class for every row (ties to the lowest class id)
+    /// — the batched fast path behind
+    /// [`crate::forest::RandomForest::predict_classes`].
+    pub fn predict_classes_batch(&self, ds: &Dataset, opts: &BatchOptions) -> Vec<u32> {
+        let mut classes = vec![0u32; ds.num_rows()];
+        let block = opts.block_rows.max(1);
+        run_blocks(opts, &mut classes, block, |bi, out| {
+            self.classify_block(ds, bi * block, out)
+        });
+        classes
+    }
+
+    /// Advance every still-active cursor of a block one level down its
+    /// current tree. Returns whether any row is still at an internal
+    /// node.
+    #[inline]
+    fn advance_level(&self, ds: &Dataset, start: usize, cur: &mut [u32]) -> bool {
+        let mut active = false;
+        for (i, c) in cur.iter_mut().enumerate() {
+            if !self.is_leaf(*c) {
+                let row = start + i;
+                *c = self.step(
+                    *c,
+                    |f| ds.column(f).as_numerical()[row],
+                    |f| ds.column(f).as_categorical()[row],
+                );
+                active = !self.is_leaf(*c) || active;
+            }
+        }
+        active
+    }
+
+    /// Score one block of rows: `out[i]` = forest score of row
+    /// `start + i`.
+    fn score_block(&self, ds: &Dataset, start: usize, out: &mut [f64]) {
+        let num_trees = self.num_trees();
+        if num_trees == 0 {
+            out.fill(0.5); // same prior as the reference empty-forest score
+            return;
+        }
+        out.fill(0.0);
+        let mut cur = vec![0u32; out.len()];
+        for t in 0..num_trees {
+            cur.fill(self.root_of(t));
+            while self.advance_level(ds, start, &mut cur) {}
+            for (o, &c) in out.iter_mut().zip(cur.iter()) {
+                *o += self.leaf_score(c);
+            }
+        }
+        for o in out.iter_mut() {
+            *o /= num_trees as f64;
+        }
+    }
+
+    /// Classify one block of rows: `out[i]` = majority-vote class of
+    /// row `start + i`.
+    fn classify_block(&self, ds: &Dataset, start: usize, out: &mut [u32]) {
+        let k = self.num_classes() as usize;
+        let n = out.len();
+        let mut votes = vec![0u32; n * k];
+        let mut cur = vec![0u32; n];
+        for t in 0..self.num_trees() {
+            cur.fill(self.root_of(t));
+            while self.advance_level(ds, start, &mut cur) {}
+            for (i, &c) in cur.iter().enumerate() {
+                votes[i * k + self.leaf_major(c) as usize] += 1;
+            }
+        }
+        for (i, o) in out.iter_mut().enumerate() {
+            *o = winning_class(&votes[i * k..(i + 1) * k]);
+        }
+    }
+}
+
+/// Split `out` into `block`-sized chunks and process each with
+/// `work(block_index, chunk)`, fanning out over scoped worker threads
+/// when more than one is warranted. Chunks are disjoint, so workers
+/// never contend on output.
+fn run_blocks<T: Send>(
+    opts: &BatchOptions,
+    out: &mut [T],
+    block: usize,
+    work: impl Fn(usize, &mut [T]) + Sync,
+) {
+    if out.is_empty() {
+        return;
+    }
+    let num_blocks = out.len().div_ceil(block);
+    let threads = opts.resolve_threads(num_blocks);
+    if threads <= 1 {
+        for (bi, chunk) in out.chunks_mut(block).enumerate() {
+            work(bi, chunk);
+        }
+        return;
+    }
+    let queue = Mutex::new(out.chunks_mut(block).enumerate());
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| loop {
+                let next = queue.lock().unwrap().next();
+                match next {
+                    Some((bi, chunk)) => work(bi, chunk),
+                    None => break,
+                }
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{Family, SyntheticSpec};
+    use crate::forest::{ForestParams, RandomForest};
+
+    fn trained() -> (RandomForest, Dataset) {
+        let ds = SyntheticSpec::new(Family::Xor { informative: 3 }, 700, 6, 9).generate();
+        let params = ForestParams {
+            num_trees: 5,
+            max_depth: 7,
+            seed: 4,
+            ..Default::default()
+        };
+        (RandomForest::train(&ds, &params).unwrap(), ds)
+    }
+
+    #[test]
+    fn batched_scores_match_rowwise_bitwise() {
+        let (forest, ds) = trained();
+        let flat = FlatForest::compile(&forest);
+        let rowwise: Vec<f64> = (0..ds.num_rows()).map(|i| flat.score(&ds.row(i))).collect();
+        for opts in [
+            BatchOptions::single_thread(),
+            BatchOptions {
+                block_rows: 64,
+                threads: 3,
+            },
+            BatchOptions {
+                block_rows: 1, // degenerate block size still correct
+                threads: 2,
+            },
+        ] {
+            let batched = flat.predict_scores_batch(&ds, &opts);
+            assert_eq!(batched.len(), rowwise.len());
+            for (i, (a, b)) in batched.iter().zip(&rowwise).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "row {i} with {opts:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn batched_classes_match_rowwise() {
+        let (forest, ds) = trained();
+        let flat = FlatForest::compile(&forest);
+        let rowwise: Vec<u32> = (0..ds.num_rows())
+            .map(|i| flat.predict_class(&ds.row(i)))
+            .collect();
+        let batched = flat.predict_classes_batch(
+            &ds,
+            &BatchOptions {
+                block_rows: 100,
+                threads: 2,
+            },
+        );
+        assert_eq!(batched, rowwise);
+    }
+
+    #[test]
+    fn empty_dataset_and_empty_forest() {
+        let (forest, ds) = trained();
+        let flat = FlatForest::compile(&forest);
+        let none = ds.head(0);
+        assert!(flat
+            .predict_scores_batch(&none, &BatchOptions::default())
+            .is_empty());
+        let empty = FlatForest::from_trees(&[], 2);
+        let scores = empty.predict_scores_batch(&ds.head(3), &BatchOptions::default());
+        assert_eq!(scores, vec![0.5; 3]);
+    }
+}

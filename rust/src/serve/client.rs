@@ -1,0 +1,100 @@
+//! Blocking TCP client for the prediction protocol.
+//!
+//! One persistent connection, one in-flight request at a time (matching
+//! the RPC semantics of the training-side pools). The client stamps
+//! every request with a monotonically increasing id and verifies the
+//! server echoes it back.
+
+use super::wire::{
+    decode_response, encode_request, read_frame, write_frame, ModelInfo, RowsBatch, ServeRequest,
+    ServeResponse,
+};
+use crate::data::Dataset;
+use crate::Result;
+use anyhow::{bail, ensure, Context};
+use std::io::{BufReader, BufWriter};
+use std::net::{TcpStream, ToSocketAddrs};
+
+/// A connected prediction client.
+pub struct PredictClient {
+    reader: BufReader<TcpStream>,
+    writer: BufWriter<TcpStream>,
+    next_id: u64,
+}
+
+impl PredictClient {
+    /// Connect to a running [`super::server::PredictionServer`].
+    pub fn connect(addr: impl ToSocketAddrs + std::fmt::Debug) -> Result<PredictClient> {
+        let stream = TcpStream::connect(&addr)
+            .with_context(|| format!("connecting to prediction server at {addr:?}"))?;
+        stream.set_nodelay(true)?;
+        Ok(PredictClient {
+            reader: BufReader::new(stream.try_clone()?),
+            writer: BufWriter::new(stream),
+            next_id: 1,
+        })
+    }
+
+    fn call(&mut self, req: &ServeRequest) -> Result<ServeResponse> {
+        let id = self.next_id;
+        self.next_id += 1;
+        write_frame(&mut self.writer, &encode_request(id, req))?;
+        let frame = read_frame(&mut self.reader).context("reading server response")?;
+        let (resp_id, resp) = decode_response(&frame)?;
+        if let ServeResponse::Err(msg) = resp {
+            bail!("server error: {msg}");
+        }
+        ensure!(
+            resp_id == id,
+            "response id {resp_id} does not match request id {id}"
+        );
+        Ok(resp)
+    }
+
+    /// Mean P(class 1) per row of the batch.
+    pub fn score(&mut self, batch: RowsBatch) -> Result<Vec<f64>> {
+        match self.call(&ServeRequest::Score(batch))? {
+            ServeResponse::Scores(s) => Ok(s),
+            r => bail!("unexpected response {r:?}"),
+        }
+    }
+
+    /// Convenience: score a dataset's feature columns.
+    pub fn score_dataset(&mut self, ds: &Dataset) -> Result<Vec<f64>> {
+        self.score(RowsBatch::from_dataset(ds))
+    }
+
+    /// Majority-vote class per row of the batch.
+    pub fn classify(&mut self, batch: RowsBatch) -> Result<Vec<u32>> {
+        match self.call(&ServeRequest::Classify(batch))? {
+            ServeResponse::Classes(c) => Ok(c),
+            r => bail!("unexpected response {r:?}"),
+        }
+    }
+
+    /// Convenience: classify a dataset's feature columns.
+    pub fn classify_dataset(&mut self, ds: &Dataset) -> Result<Vec<u32>> {
+        self.classify(RowsBatch::from_dataset(ds))
+    }
+
+    /// Describe the model the server is currently holding.
+    pub fn model_info(&mut self) -> Result<ModelInfo> {
+        match self.call(&ServeRequest::ModelInfo)? {
+            ServeResponse::Info(i) => Ok(i),
+            r => bail!("unexpected response {r:?}"),
+        }
+    }
+
+    /// Hot-reload the served model from the server's startup path
+    /// (`None`). Servers refuse `Some(path)` overrides from the
+    /// network. Returns the reloaded model's tree count.
+    pub fn reload(&mut self, path: Option<&str>) -> Result<u32> {
+        let req = ServeRequest::Reload {
+            path: path.map(str::to_string),
+        };
+        match self.call(&req)? {
+            ServeResponse::Reloaded { num_trees } => Ok(num_trees),
+            r => bail!("unexpected response {r:?}"),
+        }
+    }
+}

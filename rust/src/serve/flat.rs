@@ -1,0 +1,522 @@
+//! `FlatForest` — the forest compiled for inference.
+//!
+//! Training produces pointer-rich [`Tree`]s: every node owns an
+//! `Option<Condition>` (a heap-boxed enum whose categorical arm carries
+//! its own `CategorySet` allocation) plus a `class_counts` vector that
+//! [`crate::tree::Node::distribution`] re-materializes on every visit.
+//! Row-at-a-time traversal therefore chases pointers and allocates on
+//! the hot path.
+//!
+//! `FlatForest` re-lays the same forest out as **structure-of-arrays**
+//! node storage so traversal touches only dense, contiguous arrays:
+//!
+//! * `threshold` — one `f64` per node (f32 thresholds widened; the
+//!   widening is exact and order-preserving, so `x as f64 <= τ as f64`
+//!   routes bit-identically to the reference `x <= τ` on f32);
+//! * `left` / `right` / `feature` — `u32` per node, children stored as
+//!   *flat* (forest-global) ids so no per-tree base is added per step;
+//! * a shared **categorical-bitset arena**: all `CategorySet` words are
+//!   concatenated into one `Vec<u64>` and nodes hold `(offset, nwords)`
+//!   — replacing one heap allocation per categorical node;
+//! * `leaf_score` / `leaf_major` — leaf outputs precomputed at compile
+//!   time, so scoring performs zero allocations per row.
+//!
+//! Node ids are preserved: flat id = `tree_offsets[t] + node_id`, which
+//! is what lets `tests/serving.rs` compare routing against
+//! [`Tree::leaf_for`] node-for-node. Exactness is the repo's brand: the
+//! compiled engine must route every row to the same leaf and produce
+//! bit-identical scores to the reference traversal.
+
+use crate::data::dataset::{Dataset, RowView};
+use crate::forest::{winning_class, RandomForest};
+use crate::tree::{Condition, Tree};
+use crate::Result;
+use anyhow::{bail, ensure};
+
+/// Sentinel in `feature[]` marking a leaf node.
+const LEAF: u32 = u32::MAX;
+/// Sentinel in `cat_offset[]` marking a non-categorical node.
+const NOT_CAT: u32 = u32::MAX;
+
+/// How a feature index is used by the compiled forest — drives request
+/// validation in the prediction server (a mismatched column type would
+/// otherwise panic deep inside traversal).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FeatureKind {
+    /// No condition in the forest reads this feature.
+    Unused,
+    /// Read by `x ≤ τ` conditions: the column must be numerical.
+    Numerical,
+    /// Read by `x ∈ C` conditions: the column must be categorical.
+    Categorical,
+    /// Read both ways — only possible in a corrupt/hand-edited model
+    /// (training types each column once). No dataset can satisfy it;
+    /// [`FlatForest::check_dataset`] always rejects, so servers return
+    /// a clean error instead of panicking mid-traversal.
+    Conflicting,
+}
+
+/// A forest compiled to structure-of-arrays storage for fast inference.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FlatForest {
+    num_classes: u32,
+    /// `num_trees + 1` offsets; tree `t` owns flat ids
+    /// `tree_offsets[t] .. tree_offsets[t + 1]` and its root is the
+    /// first of them.
+    tree_offsets: Vec<u32>,
+    /// Split feature per node; [`LEAF`] for leaves.
+    feature: Vec<u32>,
+    /// Numerical threshold per node (f32 widened exactly; 0.0 for
+    /// categorical nodes and leaves).
+    threshold: Vec<f64>,
+    /// Flat id of the condition-true child (undefined for leaves).
+    left: Vec<u32>,
+    /// Flat id of the condition-false child (undefined for leaves).
+    right: Vec<u32>,
+    /// Word offset into `cat_arena`; [`NOT_CAT`] for numerical nodes
+    /// and leaves.
+    cat_offset: Vec<u32>,
+    /// Number of arena words backing this node's category set.
+    cat_nwords: Vec<u32>,
+    /// Shared bitset arena: every categorical node's `CategorySet`
+    /// words, concatenated.
+    cat_arena: Vec<u64>,
+    /// Per node: `distribution()[1]` for leaves (P(class 1), the value
+    /// [`Tree::score`] returns), 0.0 for internal nodes.
+    leaf_score: Vec<f64>,
+    /// Per node: majority class for leaves, 0 for internal nodes.
+    leaf_major: Vec<u32>,
+    /// Usage kind per feature index (length = highest feature + 1).
+    feature_kinds: Vec<FeatureKind>,
+}
+
+impl FlatForest {
+    /// Compile a trained forest. Linear in the number of nodes.
+    pub fn compile(forest: &RandomForest) -> FlatForest {
+        Self::from_trees(&forest.trees, forest.num_classes)
+    }
+
+    /// Compile a slice of trees (shared by [`Self::compile`] and tests
+    /// that build trees directly).
+    pub fn from_trees(trees: &[Tree], num_classes: u32) -> FlatForest {
+        let total: usize = trees.iter().map(|t| t.nodes.len()).sum();
+        let mut f = FlatForest {
+            num_classes,
+            tree_offsets: Vec::with_capacity(trees.len() + 1),
+            feature: Vec::with_capacity(total),
+            threshold: Vec::with_capacity(total),
+            left: Vec::with_capacity(total),
+            right: Vec::with_capacity(total),
+            cat_offset: Vec::with_capacity(total),
+            cat_nwords: Vec::with_capacity(total),
+            cat_arena: Vec::new(),
+            leaf_score: Vec::with_capacity(total),
+            leaf_major: Vec::with_capacity(total),
+            feature_kinds: Vec::new(),
+        };
+        let mut offset = 0u32;
+        for tree in trees {
+            f.tree_offsets.push(offset);
+            for node in &tree.nodes {
+                match &node.condition {
+                    None => {
+                        f.feature.push(LEAF);
+                        f.threshold.push(0.0);
+                        f.left.push(0);
+                        f.right.push(0);
+                        f.cat_offset.push(NOT_CAT);
+                        f.cat_nwords.push(0);
+                        // Same arithmetic as the reference traversal
+                        // (`distribution()[1]`) so scores stay
+                        // bit-identical; 0.0 if the forest is
+                        // single-class (the reference would panic on
+                        // `score`, which never happens in practice:
+                        // schemas require >= 2 classes).
+                        let d = node.distribution();
+                        f.leaf_score.push(d.get(1).copied().unwrap_or(0.0));
+                        f.leaf_major.push(node.majority_class());
+                    }
+                    Some(Condition::NumLe { feature, threshold }) => {
+                        f.note_feature(*feature, FeatureKind::Numerical);
+                        f.feature.push(*feature as u32);
+                        f.threshold.push(*threshold as f64);
+                        f.left.push(offset + node.left);
+                        f.right.push(offset + node.right);
+                        f.cat_offset.push(NOT_CAT);
+                        f.cat_nwords.push(0);
+                        f.leaf_score.push(0.0);
+                        f.leaf_major.push(0);
+                    }
+                    Some(Condition::CatIn { feature, set }) => {
+                        f.note_feature(*feature, FeatureKind::Categorical);
+                        f.feature.push(*feature as u32);
+                        f.threshold.push(0.0);
+                        f.left.push(offset + node.left);
+                        f.right.push(offset + node.right);
+                        f.cat_offset.push(f.cat_arena.len() as u32);
+                        f.cat_nwords.push(set.words().len() as u32);
+                        f.cat_arena.extend_from_slice(set.words());
+                        f.leaf_score.push(0.0);
+                        f.leaf_major.push(0);
+                    }
+                }
+            }
+            offset += tree.nodes.len() as u32;
+        }
+        f.tree_offsets.push(offset);
+        f
+    }
+
+    fn note_feature(&mut self, feature: usize, kind: FeatureKind) {
+        if self.feature_kinds.len() <= feature {
+            self.feature_kinds.resize(feature + 1, FeatureKind::Unused);
+        }
+        // Training types each column once, but a hand-edited model can
+        // split one feature both ways — record the conflict so
+        // `check_dataset` rejects it instead of traversal panicking.
+        let slot = &mut self.feature_kinds[feature];
+        *slot = match *slot {
+            FeatureKind::Unused => kind,
+            prev if prev == kind => prev,
+            _ => FeatureKind::Conflicting,
+        };
+    }
+
+    pub fn num_trees(&self) -> usize {
+        self.tree_offsets.len() - 1
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        self.feature.len()
+    }
+
+    pub fn num_classes(&self) -> u32 {
+        self.num_classes
+    }
+
+    /// Bytes of the compiled representation (node arrays + arena).
+    pub fn nbytes(&self) -> usize {
+        self.feature.len() * (4 + 8 + 4 + 4 + 4 + 4 + 8 + 4)
+            + self.cat_arena.len() * 8
+            + self.tree_offsets.len() * 4
+    }
+
+    /// How each feature index is used ([`FeatureKind::Unused`] entries
+    /// included); the length is the minimum feature count a dataset
+    /// must provide.
+    pub fn feature_kinds(&self) -> &[FeatureKind] {
+        &self.feature_kinds
+    }
+
+    /// Check that `ds` can be scored: enough columns, and every column
+    /// the forest reads has the type its conditions expect.
+    pub fn check_dataset(&self, ds: &Dataset) -> Result<()> {
+        ensure!(
+            ds.num_features() >= self.feature_kinds.len(),
+            "dataset has {} feature columns but the model reads feature {}",
+            ds.num_features(),
+            self.feature_kinds.len() - 1,
+        );
+        for (j, kind) in self.feature_kinds.iter().enumerate() {
+            let ctype = &ds.schema().columns[j].ctype;
+            match kind {
+                FeatureKind::Unused => {}
+                FeatureKind::Numerical if ctype.is_numerical() => {}
+                FeatureKind::Categorical if ctype.is_categorical() => {}
+                FeatureKind::Numerical => {
+                    bail!("model splits feature {j} numerically but column {j} is categorical")
+                }
+                FeatureKind::Categorical => {
+                    bail!("model tests feature {j} by category but column {j} is numerical")
+                }
+                FeatureKind::Conflicting => {
+                    bail!(
+                        "model splits feature {j} both numerically and by category \
+                         (corrupt model); no dataset can satisfy it"
+                    )
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Flat id of the root of tree `t`.
+    #[inline]
+    pub fn root_of(&self, tree: usize) -> u32 {
+        self.tree_offsets[tree]
+    }
+
+    /// Whether flat node `id` is a leaf.
+    #[inline]
+    pub fn is_leaf(&self, id: u32) -> bool {
+        self.feature[id as usize] == LEAF
+    }
+
+    /// P(class 1) stored at flat leaf `id`.
+    #[inline]
+    pub fn leaf_score(&self, id: u32) -> f64 {
+        self.leaf_score[id as usize]
+    }
+
+    /// Majority class stored at flat leaf `id`.
+    #[inline]
+    pub fn leaf_major(&self, id: u32) -> u32 {
+        self.leaf_major[id as usize]
+    }
+
+    /// Advance one step from internal node `id` for the row whose
+    /// feature values are read through `num` / `cat`. Returns the flat
+    /// child id.
+    #[inline(always)]
+    pub(crate) fn step(
+        &self,
+        id: u32,
+        num: impl Fn(usize) -> f32,
+        cat: impl Fn(usize) -> u32,
+    ) -> u32 {
+        let i = id as usize;
+        let f = self.feature[i] as usize;
+        let go_left = if self.cat_offset[i] == NOT_CAT {
+            // Exact: f32 → f64 widening is lossless and monotone, and
+            // NaN is incomparable on both sides, so this routes
+            // identically to the reference f32 compare.
+            (num(f) as f64) <= self.threshold[i]
+        } else {
+            let v = cat(f);
+            let w = (v >> 6) as usize;
+            // Stored sets never contain bits >= arity, so the word
+            // bound check alone reproduces `CategorySet::contains`
+            // (out-of-range values fall in missing or zero words).
+            w < self.cat_nwords[i] as usize
+                && (self.cat_arena[self.cat_offset[i] as usize + w] >> (v & 63)) & 1 == 1
+        };
+        if go_left {
+            self.left[i]
+        } else {
+            self.right[i]
+        }
+    }
+
+    /// Walk one row down tree `t`; returns the **tree-local** leaf node
+    /// id (directly comparable with [`Tree::leaf_for`]).
+    pub fn leaf_for(&self, tree: usize, row: &RowView<'_>) -> u32 {
+        let mut id = self.root_of(tree);
+        while !self.is_leaf(id) {
+            id = self.step(id, |f| row.numerical(f), |f| row.categorical(f));
+        }
+        id - self.tree_offsets[tree]
+    }
+
+    /// Forest score for one row: mean of per-tree P(class 1), summed in
+    /// tree order — bit-identical to [`RandomForest::score`].
+    pub fn score(&self, row: &RowView<'_>) -> f64 {
+        if self.num_trees() == 0 {
+            return 0.5;
+        }
+        let mut sum = 0.0;
+        for t in 0..self.num_trees() {
+            let mut id = self.root_of(t);
+            while !self.is_leaf(id) {
+                id = self.step(id, |f| row.numerical(f), |f| row.categorical(f));
+            }
+            sum += self.leaf_score[id as usize];
+        }
+        sum / self.num_trees() as f64
+    }
+
+    /// Majority-vote class for one row (ties to the lowest class id,
+    /// see [`winning_class`]).
+    pub fn predict_class(&self, row: &RowView<'_>) -> u32 {
+        let mut votes = vec![0u32; self.num_classes as usize];
+        for t in 0..self.num_trees() {
+            let mut id = self.root_of(t);
+            while !self.is_leaf(id) {
+                id = self.step(id, |f| row.numerical(f), |f| row.categorical(f));
+            }
+            votes[self.leaf_major[id as usize] as usize] += 1;
+        }
+        winning_class(&votes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::column::Column;
+    use crate::data::schema::{ColumnSpec, Schema};
+    use crate::tree::CategorySet;
+
+    fn mixed_ds() -> Dataset {
+        let schema = Schema::new(
+            vec![
+                ColumnSpec::numerical("x"),
+                ColumnSpec::categorical("c", 130),
+            ],
+            2,
+        );
+        Dataset::new(
+            schema,
+            vec![
+                Column::Numerical(vec![0.2, 0.8, 0.4, 0.9, f32::NAN]),
+                Column::Categorical {
+                    values: vec![0, 64, 2, 129, 1],
+                    arity: 130,
+                },
+            ],
+            vec![0, 1, 0, 1, 0],
+        )
+    }
+
+    fn mixed_tree() -> Tree {
+        let mut t = Tree::new_root(vec![3, 2]);
+        t.split_node(
+            0,
+            Condition::NumLe {
+                feature: 0,
+                threshold: 0.5,
+            },
+            0.2,
+            vec![2, 0],
+            vec![1, 2],
+        );
+        // Multi-word category set exercises the arena.
+        t.split_node(
+            2,
+            Condition::CatIn {
+                feature: 1,
+                set: CategorySet::from_values(130, [64, 129]),
+            },
+            0.1,
+            vec![0, 2],
+            vec![1, 0],
+        );
+        t
+    }
+
+    #[test]
+    fn routing_matches_reference_on_mixed_tree() {
+        let ds = mixed_ds();
+        let tree = mixed_tree();
+        let flat = FlatForest::from_trees(std::slice::from_ref(&tree), 2);
+        assert_eq!(flat.num_trees(), 1);
+        assert_eq!(flat.num_nodes(), tree.num_nodes());
+        for i in 0..ds.num_rows() {
+            let row = ds.row(i);
+            assert_eq!(
+                flat.leaf_for(0, &row),
+                tree.leaf_for(&row),
+                "row {i} routed differently"
+            );
+        }
+        // NaN goes right at the numerical root (x <= τ is false), same
+        // as the reference.
+        assert_ne!(flat.leaf_for(0, &ds.row(4)), 1);
+    }
+
+    #[test]
+    fn scores_are_bit_identical_to_reference() {
+        let ds = mixed_ds();
+        let tree = mixed_tree();
+        let flat = FlatForest::from_trees(std::slice::from_ref(&tree), 2);
+        for i in 0..ds.num_rows() {
+            let row = ds.row(i);
+            assert_eq!(flat.score(&row).to_bits(), tree.score(&row).to_bits());
+        }
+    }
+
+    #[test]
+    fn empty_forest_scores_half() {
+        let flat = FlatForest::from_trees(&[], 2);
+        let ds = mixed_ds();
+        assert_eq!(flat.score(&ds.row(0)), 0.5);
+        assert_eq!(flat.predict_class(&ds.row(0)), 0);
+    }
+
+    #[test]
+    fn arena_is_shared_and_offsets_preserved() {
+        let t1 = mixed_tree();
+        let t2 = mixed_tree();
+        let flat = FlatForest::from_trees(&[t1.clone(), t2], 2);
+        assert_eq!(flat.num_trees(), 2);
+        assert_eq!(flat.root_of(1), t1.num_nodes() as u32);
+        // Two categorical nodes × ceil(130 / 64) words each.
+        assert_eq!(flat.cat_arena.len(), 2 * 3);
+        assert!(flat.nbytes() > 0);
+    }
+
+    #[test]
+    fn feature_kinds_and_dataset_check() {
+        let flat = FlatForest::from_trees(&[mixed_tree()], 2);
+        assert_eq!(
+            flat.feature_kinds(),
+            &[FeatureKind::Numerical, FeatureKind::Categorical]
+        );
+        let ds = mixed_ds();
+        assert!(flat.check_dataset(&ds).is_ok());
+        // Swap column types: both reads are now mistyped.
+        let bad = Dataset::new(
+            Schema::new(
+                vec![
+                    ColumnSpec::categorical("x", 4),
+                    ColumnSpec::numerical("c"),
+                ],
+                2,
+            ),
+            vec![
+                Column::Categorical {
+                    values: vec![0],
+                    arity: 4,
+                },
+                Column::Numerical(vec![1.0]),
+            ],
+            vec![0],
+        );
+        assert!(flat.check_dataset(&bad).is_err());
+        // Too few columns.
+        let narrow = Dataset::new(
+            Schema::all_numerical(1),
+            vec![Column::Numerical(vec![1.0])],
+            vec![0],
+        );
+        assert!(flat.check_dataset(&narrow).is_err());
+    }
+
+    #[test]
+    fn conflicting_feature_use_is_rejected_cleanly() {
+        // A corrupt/hand-edited model splitting feature 0 numerically
+        // in one tree and categorically in another: compiles, but no
+        // dataset passes check_dataset (this is what keeps the server
+        // from panicking mid-traversal on such a model).
+        let mut num_tree = Tree::new_root(vec![1, 1]);
+        num_tree.split_node(
+            0,
+            Condition::NumLe {
+                feature: 0,
+                threshold: 0.5,
+            },
+            0.0,
+            vec![1, 0],
+            vec![0, 1],
+        );
+        let mut cat_tree = Tree::new_root(vec![1, 1]);
+        cat_tree.split_node(
+            0,
+            Condition::CatIn {
+                feature: 0,
+                set: CategorySet::from_values(4, [1]),
+            },
+            0.0,
+            vec![1, 0],
+            vec![0, 1],
+        );
+        let flat = FlatForest::from_trees(&[num_tree, cat_tree], 2);
+        assert_eq!(flat.feature_kinds(), &[FeatureKind::Conflicting]);
+        let numerical = Dataset::new(
+            Schema::all_numerical(1),
+            vec![Column::Numerical(vec![0.1])],
+            vec![0],
+        );
+        let err = flat.check_dataset(&numerical).unwrap_err();
+        assert!(format!("{err}").contains("both numerically and by category"));
+    }
+}

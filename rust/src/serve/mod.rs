@@ -1,0 +1,35 @@
+//! `drf::serve` — the inference subsystem: a flattened forest engine
+//! and a TCP prediction server.
+//!
+//! Training optimizes for exactness bookkeeping; serving optimizes for
+//! rows/second. The pipeline is:
+//!
+//! 1. [`flat`] — compile a trained [`crate::forest::RandomForest`] into
+//!    a [`FlatForest`]: structure-of-arrays nodes plus a shared
+//!    categorical-bitset arena, bit-identical in routing and scores to
+//!    the reference [`crate::tree::Tree::leaf_for`] traversal (enforced
+//!    by `tests/serving.rs` across every synthetic family);
+//! 2. [`batch`] — blocked, breadth-first batch prediction with
+//!    `std::thread` scoped workers, reached transparently through
+//!    `RandomForest::predict_scores` / `predict_classes`;
+//! 3. [`server`] / [`client`] — a threaded TCP prediction service
+//!    speaking the length-prefixed binary protocol of [`wire`]
+//!    (magic bytes, version, request ids) with `Score`, `Classify`,
+//!    `ModelInfo`, and hot `Reload` RPCs; the CLI front ends are
+//!    `drf serve` and `drf predict`.
+//!
+//! Throughput across the three rungs (reference → flat → flat+threads)
+//! is tracked by `benches/serve_throughput.rs`, which records
+//! `BENCH_serve.json` for the perf trajectory.
+
+pub mod batch;
+pub mod client;
+pub mod flat;
+pub mod server;
+pub mod wire;
+
+pub use batch::BatchOptions;
+pub use client::PredictClient;
+pub use flat::{FeatureKind, FlatForest};
+pub use server::PredictionServer;
+pub use wire::{ModelInfo, RowsBatch, ServeRequest, ServeResponse};

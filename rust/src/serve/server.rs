@@ -1,0 +1,217 @@
+//! The TCP prediction server.
+//!
+//! Same shape as the training-side [`crate::coordinator::tcp`] engine:
+//! a blocking accept loop, one thread per connection, length-prefixed
+//! binary frames — but speaking the serving protocol
+//! ([`super::wire`]) and holding a [`FlatForest`] behind an `RwLock`
+//! so **hot model reload** swaps the compiled forest without dropping
+//! connections: in-flight requests finish on the old model, later
+//! requests see the new one.
+
+use super::batch::BatchOptions;
+use super::flat::FlatForest;
+use super::wire::{
+    decode_request, encode_response, read_frame, write_frame, ModelInfo, ServeRequest,
+    ServeResponse,
+};
+use crate::forest::RandomForest;
+use crate::Result;
+use anyhow::Context;
+use std::io::{BufReader, BufWriter};
+use std::net::{TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, RwLock};
+
+/// A model compiled for serving (immutable once built; reload installs
+/// a fresh one).
+struct ServedModel {
+    flat: FlatForest,
+    info: ModelInfo,
+}
+
+impl ServedModel {
+    fn build(forest: &RandomForest) -> ServedModel {
+        ServedModel {
+            flat: FlatForest::compile(forest),
+            info: ModelInfo {
+                num_trees: forest.num_trees() as u32,
+                num_classes: forest.num_classes,
+                num_nodes: forest.num_nodes() as u64,
+            },
+        }
+    }
+}
+
+/// A running prediction server. Dropping it stops accepting new
+/// connections (open connections end when their peer disconnects).
+pub struct PredictionServer {
+    addr: std::net::SocketAddr,
+    accept_handle: Option<std::thread::JoinHandle<()>>,
+    shutdown: Arc<AtomicBool>,
+}
+
+impl PredictionServer {
+    /// Bind `addr` (e.g. `"127.0.0.1:0"` for an ephemeral port) and
+    /// serve `forest`. `model_path` is the file `Reload { path: None }`
+    /// re-reads — pass the path the model was loaded from.
+    pub fn spawn(
+        forest: &RandomForest,
+        addr: &str,
+        model_path: Option<PathBuf>,
+    ) -> Result<PredictionServer> {
+        let listener =
+            TcpListener::bind(addr).with_context(|| format!("binding prediction server to {addr}"))?;
+        let addr = listener.local_addr()?;
+        let state = Arc::new(ServerState {
+            model: RwLock::new(Arc::new(ServedModel::build(forest))),
+            model_path,
+            batch: BatchOptions::default(),
+        });
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let shutdown2 = shutdown.clone();
+        let accept_handle = std::thread::Builder::new()
+            .name("drf-serve-accept".into())
+            .spawn(move || {
+                for conn in listener.incoming() {
+                    if shutdown2.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    // Transient accept errors (ECONNABORTED, fd
+                    // pressure) must not kill the accept loop — unlike
+                    // the short-lived training-side SplitterServer,
+                    // this server is long-running. Back off briefly so
+                    // a persistent error cannot spin hot.
+                    let stream = match conn {
+                        Ok(s) => s,
+                        Err(_) => {
+                            std::thread::sleep(std::time::Duration::from_millis(10));
+                            continue;
+                        }
+                    };
+                    let state = state.clone();
+                    // One thread per connection; clients keep one
+                    // persistent connection, like tree builders do on
+                    // the training side.
+                    let _ = std::thread::Builder::new()
+                        .name("drf-serve-conn".into())
+                        .spawn(move || {
+                            let _ = serve_connection(&state, stream);
+                        });
+                }
+            })?;
+        Ok(PredictionServer {
+            addr,
+            accept_handle: Some(accept_handle),
+            shutdown,
+        })
+    }
+
+    /// The bound address (useful with an ephemeral port).
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.addr
+    }
+}
+
+impl Drop for PredictionServer {
+    fn drop(&mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        // Poke the listener so the accept loop wakes and exits.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.accept_handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+struct ServerState {
+    model: RwLock<Arc<ServedModel>>,
+    model_path: Option<PathBuf>,
+    batch: BatchOptions,
+}
+
+/// Handle one connection's request loop. Malformed frames get an `Err`
+/// response with request id 0 and close the connection (the peer is
+/// speaking another protocol); well-framed but invalid requests get an
+/// `Err` response and the loop continues.
+fn serve_connection(state: &ServerState, stream: TcpStream) -> Result<()> {
+    stream.set_nodelay(true)?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = BufWriter::new(stream);
+    loop {
+        let frame = match read_frame(&mut reader) {
+            Ok(f) => f,
+            Err(_) => return Ok(()), // peer closed
+        };
+        let (id, response) = match decode_request(&frame) {
+            Err(e) => {
+                let resp = ServeResponse::Err(format!("bad request frame: {e}"));
+                write_frame(&mut writer, &encode_response(0, &resp))?;
+                return Ok(());
+            }
+            Ok((id, req)) => (id, handle(state, req)),
+        };
+        write_frame(&mut writer, &encode_response(id, &response))?;
+    }
+}
+
+/// Decode a batch against the current model and run `predict` on it;
+/// shared by `Score` and `Classify` so validation can never drift
+/// between the two.
+fn predict_batch(
+    state: &ServerState,
+    what: &str,
+    batch: super::wire::RowsBatch,
+    predict: impl FnOnce(&ServedModel, &crate::data::Dataset) -> ServeResponse,
+) -> ServeResponse {
+    let model = state.model.read().unwrap().clone();
+    match batch
+        .into_dataset(model.info.num_classes)
+        .and_then(|ds| model.flat.check_dataset(&ds).map(|()| ds))
+    {
+        Ok(ds) => predict(&model, &ds),
+        Err(e) => ServeResponse::Err(format!("{what}: {e}")),
+    }
+}
+
+fn handle(state: &ServerState, req: ServeRequest) -> ServeResponse {
+    match req {
+        ServeRequest::Score(batch) => predict_batch(state, "score", batch, |m, ds| {
+            ServeResponse::Scores(m.flat.predict_scores_batch(ds, &state.batch))
+        }),
+        ServeRequest::Classify(batch) => predict_batch(state, "classify", batch, |m, ds| {
+            ServeResponse::Classes(m.flat.predict_classes_batch(ds, &state.batch))
+        }),
+        ServeRequest::ModelInfo => ServeResponse::Info(state.model.read().unwrap().info),
+        ServeRequest::Reload { path } => {
+            // Remote path overrides are refused: an unauthenticated
+            // peer must not be able to point the server at arbitrary
+            // server-side files (read oracle / memory DoS). Reload
+            // always re-reads the operator-configured startup path.
+            if path.is_some() {
+                return ServeResponse::Err(
+                    "reload: remote path overrides are not permitted; \
+                     the server reloads its startup --model path"
+                        .into(),
+                );
+            }
+            let path = match &state.model_path {
+                Some(p) => p.clone(),
+                None => {
+                    return ServeResponse::Err(
+                        "reload: the server was not started from a model file".into(),
+                    )
+                }
+            };
+            match RandomForest::load(&path) {
+                Ok(forest) => {
+                    let served = Arc::new(ServedModel::build(&forest));
+                    let num_trees = served.info.num_trees;
+                    *state.model.write().unwrap() = served;
+                    ServeResponse::Reloaded { num_trees }
+                }
+                Err(e) => ServeResponse::Err(format!("reload: {e:#}")),
+            }
+        }
+    }
+}

@@ -1,0 +1,462 @@
+//! Binary wire codec for the prediction protocol.
+//!
+//! Same idiom as the coordinator codec ([`crate::coordinator::wire`]):
+//! length-prefixed frames carrying a compact little-endian body — no
+//! serde/bincode. Serving frames additionally start with **magic
+//! bytes**, a **protocol version**, and a caller-chosen **request id**
+//! that the server echoes back, so clients can detect protocol
+//! mismatches and correlate responses. Round-trips and malformed-frame
+//! rejection are covered below and in `tests/serving.rs`.
+//!
+//! Frame body layout (after the 4-byte length prefix shared with the
+//! coordinator's `read_frame`/`write_frame`):
+//!
+//! ```text
+//! "DRFS" | version u8 | request_id u64 | tag u8 | payload…
+//! ```
+
+use crate::coordinator::wire::{Reader, Writer};
+pub use crate::coordinator::wire::{read_frame, write_frame};
+use crate::data::column::Column;
+use crate::data::schema::{ColumnSpec, Schema};
+use crate::data::Dataset;
+use crate::Result;
+use anyhow::{bail, ensure};
+
+/// Magic bytes opening every serving frame.
+pub const MAGIC: [u8; 4] = *b"DRFS";
+/// Protocol version (bumped on incompatible changes).
+pub const WIRE_VERSION: u8 = 1;
+
+/// A batch of feature rows shipped column-wise — the same columnar shape
+/// the engine consumes, so the server decodes straight into a
+/// [`Dataset`] without transposing.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RowsBatch {
+    pub columns: Vec<Column>,
+}
+
+impl RowsBatch {
+    /// Package a dataset's feature columns (labels are not shipped).
+    pub fn from_dataset(ds: &Dataset) -> RowsBatch {
+        RowsBatch {
+            columns: ds.columns().to_vec(),
+        }
+    }
+
+    pub fn num_rows(&self) -> usize {
+        self.columns.first().map_or(0, |c| c.len())
+    }
+
+    /// Validate shape invariants and build a scorable [`Dataset`]
+    /// (placeholder labels — prediction never reads them).
+    /// `num_classes` comes from the served model.
+    pub fn into_dataset(self, num_classes: u32) -> Result<Dataset> {
+        ensure!(!self.columns.is_empty(), "batch has no feature columns");
+        let n = self.columns[0].len();
+        let mut specs = Vec::with_capacity(self.columns.len());
+        for (j, col) in self.columns.iter().enumerate() {
+            ensure!(
+                col.len() == n,
+                "batch column {j} has {} rows, expected {n}",
+                col.len()
+            );
+            match col {
+                Column::Numerical(_) => specs.push(ColumnSpec::numerical(format!("f{j}"))),
+                Column::Categorical { values, arity } => {
+                    ensure!(*arity > 0, "batch column {j} has zero arity");
+                    if let Some(&v) = values.iter().find(|&&v| v >= *arity) {
+                        bail!("batch column {j} has value {v} >= arity {arity}");
+                    }
+                    specs.push(ColumnSpec::categorical(format!("f{j}"), *arity));
+                }
+            }
+        }
+        Ok(Dataset::new(
+            Schema::new(specs, num_classes.max(2)),
+            self.columns,
+            vec![0; n],
+        ))
+    }
+}
+
+/// Summary of the model a server is holding.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ModelInfo {
+    pub num_trees: u32,
+    pub num_classes: u32,
+    pub num_nodes: u64,
+}
+
+/// A prediction RPC request.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ServeRequest {
+    /// Mean P(class 1) per row.
+    Score(RowsBatch),
+    /// Majority-vote class per row.
+    Classify(RowsBatch),
+    /// Describe the currently served model.
+    ModelInfo,
+    /// Hot-reload the model. `path: None` re-reads the path the server
+    /// was started with; servers refuse `Some(path)` overrides from
+    /// the network (arbitrary-file read oracle) — the field exists for
+    /// future operator-side allowlists.
+    Reload { path: Option<String> },
+}
+
+/// A prediction RPC response.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ServeResponse {
+    Scores(Vec<f64>),
+    Classes(Vec<u32>),
+    Info(ModelInfo),
+    Reloaded { num_trees: u32 },
+    Err(String),
+}
+
+fn put_header(w: &mut Writer, request_id: u64) {
+    for b in MAGIC {
+        w.u8(b);
+    }
+    w.u8(WIRE_VERSION);
+    w.u64(request_id);
+}
+
+fn get_header(r: &mut Reader<'_>) -> Result<u64> {
+    let mut magic = [0u8; 4];
+    for b in &mut magic {
+        *b = r.u8()?;
+    }
+    ensure!(magic == MAGIC, "bad magic {magic:02x?} (not a DRF serving frame)");
+    let version = r.u8()?;
+    ensure!(
+        version == WIRE_VERSION,
+        "unsupported serving protocol version {version} (want {WIRE_VERSION})"
+    );
+    r.u64()
+}
+
+/// Read a length prefix and require the claimed `n` elements of at
+/// least `elem_bytes` each to actually fit in the rest of the frame.
+/// `Reader::len_u32`'s own bound is sized for u64 payloads; serving
+/// frames come from **untrusted peers**, so without this a forged
+/// count could drive multi-GiB `with_capacity` calls from a small
+/// frame.
+fn len_checked(r: &mut Reader<'_>, elem_bytes: usize) -> Result<usize> {
+    let n = r.len_u32()?;
+    ensure!(
+        n <= r.remaining() / elem_bytes.max(1),
+        "length prefix {n} exceeds frame"
+    );
+    Ok(n)
+}
+
+fn put_columns(w: &mut Writer, batch: &RowsBatch) {
+    w.usize_u32(batch.columns.len());
+    for col in &batch.columns {
+        match col {
+            Column::Numerical(values) => {
+                w.u8(0);
+                w.usize_u32(values.len());
+                for &v in values {
+                    w.f32(v);
+                }
+            }
+            Column::Categorical { values, arity } => {
+                w.u8(1);
+                w.u32(*arity);
+                w.usize_u32(values.len());
+                for &v in values {
+                    w.u32(v);
+                }
+            }
+        }
+    }
+}
+
+fn get_columns(r: &mut Reader<'_>) -> Result<RowsBatch> {
+    // Each column costs at least tag + length prefix = 5 bytes.
+    let nc = len_checked(r, 5)?;
+    let mut columns = Vec::with_capacity(nc);
+    for _ in 0..nc {
+        columns.push(match r.u8()? {
+            0 => {
+                let n = len_checked(r, 4)?;
+                Column::Numerical((0..n).map(|_| r.f32()).collect::<Result<_>>()?)
+            }
+            1 => {
+                let arity = r.u32()?;
+                let n = len_checked(r, 4)?;
+                Column::Categorical {
+                    values: (0..n).map(|_| r.u32()).collect::<Result<_>>()?,
+                    arity,
+                }
+            }
+            t => bail!("bad column tag {t}"),
+        });
+    }
+    Ok(RowsBatch { columns })
+}
+
+fn put_string(w: &mut Writer, s: &str) {
+    let bytes = s.as_bytes();
+    w.usize_u32(bytes.len());
+    for &b in bytes {
+        w.u8(b);
+    }
+}
+
+fn get_string(r: &mut Reader<'_>) -> Result<String> {
+    let n = len_checked(r, 1)?;
+    let bytes: Vec<u8> = (0..n).map(|_| r.u8()).collect::<Result<_>>()?;
+    Ok(String::from_utf8(bytes)?)
+}
+
+/// Encode a request frame body (pass to [`write_frame`]).
+pub fn encode_request(request_id: u64, req: &ServeRequest) -> Vec<u8> {
+    let mut w = Writer::new();
+    put_header(&mut w, request_id);
+    match req {
+        ServeRequest::Score(batch) => {
+            w.u8(0);
+            put_columns(&mut w, batch);
+        }
+        ServeRequest::Classify(batch) => {
+            w.u8(1);
+            put_columns(&mut w, batch);
+        }
+        ServeRequest::ModelInfo => w.u8(2),
+        ServeRequest::Reload { path } => {
+            w.u8(3);
+            match path {
+                None => w.bool(false),
+                Some(p) => {
+                    w.bool(true);
+                    put_string(&mut w, p);
+                }
+            }
+        }
+    }
+    w.into_bytes()
+}
+
+/// Decode a request frame body into `(request_id, request)`.
+pub fn decode_request(buf: &[u8]) -> Result<(u64, ServeRequest)> {
+    let mut r = Reader::new(buf);
+    let id = get_header(&mut r)?;
+    let req = match r.u8()? {
+        0 => ServeRequest::Score(get_columns(&mut r)?),
+        1 => ServeRequest::Classify(get_columns(&mut r)?),
+        2 => ServeRequest::ModelInfo,
+        3 => ServeRequest::Reload {
+            path: if r.bool()? {
+                Some(get_string(&mut r)?)
+            } else {
+                None
+            },
+        },
+        t => bail!("bad request tag {t}"),
+    };
+    r.done()?;
+    Ok((id, req))
+}
+
+/// Encode a response frame body echoing the request id.
+pub fn encode_response(request_id: u64, resp: &ServeResponse) -> Vec<u8> {
+    let mut w = Writer::new();
+    put_header(&mut w, request_id);
+    match resp {
+        ServeResponse::Scores(scores) => {
+            w.u8(0);
+            w.usize_u32(scores.len());
+            for &s in scores {
+                w.f64(s);
+            }
+        }
+        ServeResponse::Classes(classes) => {
+            w.u8(1);
+            w.usize_u32(classes.len());
+            for &c in classes {
+                w.u32(c);
+            }
+        }
+        ServeResponse::Info(info) => {
+            w.u8(2);
+            w.u32(info.num_trees);
+            w.u32(info.num_classes);
+            w.u64(info.num_nodes);
+        }
+        ServeResponse::Reloaded { num_trees } => {
+            w.u8(3);
+            w.u32(*num_trees);
+        }
+        ServeResponse::Err(msg) => {
+            w.u8(4);
+            put_string(&mut w, msg);
+        }
+    }
+    w.into_bytes()
+}
+
+/// Decode a response frame body into `(request_id, response)`.
+pub fn decode_response(buf: &[u8]) -> Result<(u64, ServeResponse)> {
+    let mut r = Reader::new(buf);
+    let id = get_header(&mut r)?;
+    let resp = match r.u8()? {
+        0 => {
+            let n = len_checked(&mut r, 8)?;
+            ServeResponse::Scores((0..n).map(|_| r.f64()).collect::<Result<_>>()?)
+        }
+        1 => {
+            let n = len_checked(&mut r, 4)?;
+            ServeResponse::Classes((0..n).map(|_| r.u32()).collect::<Result<_>>()?)
+        }
+        2 => ServeResponse::Info(ModelInfo {
+            num_trees: r.u32()?,
+            num_classes: r.u32()?,
+            num_nodes: r.u64()?,
+        }),
+        3 => ServeResponse::Reloaded {
+            num_trees: r.u32()?,
+        },
+        4 => ServeResponse::Err(get_string(&mut r)?),
+        t => bail!("bad response tag {t}"),
+    };
+    r.done()?;
+    Ok((id, resp))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::run_cases;
+
+    fn random_batch(rng: &mut crate::util::proptest::CaseRng) -> RowsBatch {
+        let n = rng.usize(0, 20);
+        let columns = (1..=rng.usize(1, 4))
+            .map(|_| {
+                if rng.bool(0.5) {
+                    Column::Numerical((0..n).map(|_| rng.f32() * 4.0 - 2.0).collect())
+                } else {
+                    let arity = rng.usize(1, 40) as u32;
+                    Column::Categorical {
+                        values: (0..n).map(|_| rng.u64(arity as u64) as u32).collect(),
+                        arity,
+                    }
+                }
+            })
+            .collect();
+        RowsBatch { columns }
+    }
+
+    #[test]
+    fn request_roundtrip_random() {
+        run_cases(0x5E41, 40, |rng| {
+            let req = match rng.usize(0, 3) {
+                0 => ServeRequest::Score(random_batch(rng)),
+                1 => ServeRequest::Classify(random_batch(rng)),
+                2 => ServeRequest::ModelInfo,
+                _ => ServeRequest::Reload {
+                    path: rng.bool(0.5).then(|| "/tmp/forest.json".to_string()),
+                },
+            };
+            let id = rng.u64(u64::MAX);
+            let bytes = encode_request(id, &req);
+            let (back_id, back) = decode_request(&bytes).unwrap();
+            assert_eq!((back_id, back), (id, req));
+        });
+    }
+
+    #[test]
+    fn response_roundtrip_random() {
+        run_cases(0x5E42, 40, |rng| {
+            let resp = match rng.usize(0, 4) {
+                0 => ServeResponse::Scores(
+                    (0..rng.usize(0, 30)).map(|_| rng.f64()).collect(),
+                ),
+                1 => ServeResponse::Classes(
+                    (0..rng.usize(0, 30)).map(|_| rng.u64(5) as u32).collect(),
+                ),
+                2 => ServeResponse::Info(ModelInfo {
+                    num_trees: rng.u64(500) as u32,
+                    num_classes: rng.u64(10) as u32 + 2,
+                    num_nodes: rng.u64(1 << 40),
+                }),
+                3 => ServeResponse::Reloaded {
+                    num_trees: rng.u64(500) as u32,
+                },
+                _ => ServeResponse::Err("model reload failed: no such file".into()),
+            };
+            let id = rng.u64(u64::MAX);
+            let bytes = encode_response(id, &resp);
+            let (back_id, back) = decode_response(&bytes).unwrap();
+            assert_eq!((back_id, back), (id, resp));
+        });
+    }
+
+    #[test]
+    fn malformed_frames_rejected() {
+        // Too short / wrong magic / wrong version / bad tag / trailing.
+        assert!(decode_request(&[]).is_err());
+        assert!(decode_request(b"NOPE\x01\0\0\0\0\0\0\0\0\x02").is_err());
+        assert!(decode_request(b"DRFS\x63\0\0\0\0\0\0\0\0\x02").is_err());
+        let mut bytes = encode_request(7, &ServeRequest::ModelInfo);
+        let tag = bytes.len() - 1;
+        bytes[tag] = 99;
+        assert!(decode_request(&bytes).is_err());
+        let mut bytes = encode_request(7, &ServeRequest::ModelInfo);
+        bytes.push(0);
+        assert!(decode_request(&bytes).is_err());
+        // Forged length prefix: a tiny Score frame claiming u32::MAX
+        // columns must be rejected before any allocation.
+        let mut forged = Vec::new();
+        forged.extend_from_slice(&MAGIC);
+        forged.push(WIRE_VERSION);
+        forged.extend_from_slice(&7u64.to_le_bytes());
+        forged.push(0); // Score tag
+        forged.extend_from_slice(&u32::MAX.to_le_bytes());
+        assert!(decode_request(&forged).is_err());
+        // A coordinator frame is not a serving frame.
+        assert!(decode_response(&crate::coordinator::wire::encode_response(
+            &crate::coordinator::wire::Response::Ok
+        ))
+        .is_err());
+    }
+
+    #[test]
+    fn batch_dataset_validation() {
+        // Ragged columns rejected.
+        let ragged = RowsBatch {
+            columns: vec![
+                Column::Numerical(vec![1.0, 2.0]),
+                Column::Numerical(vec![1.0]),
+            ],
+        };
+        assert!(ragged.into_dataset(2).is_err());
+        // Out-of-arity categorical value rejected.
+        let bad = RowsBatch {
+            columns: vec![Column::Categorical {
+                values: vec![5],
+                arity: 3,
+            }],
+        };
+        assert!(bad.into_dataset(2).is_err());
+        // Empty batch rejected.
+        assert!(RowsBatch { columns: vec![] }.into_dataset(2).is_err());
+        // A good batch round-trips into a scorable dataset.
+        let good = RowsBatch {
+            columns: vec![
+                Column::Numerical(vec![0.5, -1.0]),
+                Column::Categorical {
+                    values: vec![2, 0],
+                    arity: 3,
+                },
+            ],
+        };
+        assert_eq!(good.num_rows(), 2);
+        let ds = good.into_dataset(2).unwrap();
+        assert_eq!(ds.num_rows(), 2);
+        assert_eq!(ds.num_features(), 2);
+        assert_eq!(ds.row(0).categorical(1), 2);
+    }
+}

@@ -68,6 +68,13 @@ impl CategorySet {
         (0..self.arity).filter(move |&v| self.contains(v))
     }
 
+    /// The raw bit-packed words (bit `v` of word `v / 64` set ⇔ `v` is a
+    /// member). Only bits below `arity` can be set. The serving engine
+    /// copies these into its shared bitset arena ([`crate::serve::flat`]).
+    pub fn words(&self) -> &[u64] {
+        &self.words
+    }
+
     /// Wire size in bytes when shipped in a supersplit answer.
     pub fn wire_bytes(&self) -> u64 {
         4 + self.words.len() as u64 * 8

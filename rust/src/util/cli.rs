@@ -74,6 +74,14 @@ impl Args {
         self.flags.get(name).map(|s| s.as_str())
     }
 
+    /// A flag that must be present (clean error instead of a default).
+    pub fn require(&self, name: &str) -> Result<&str> {
+        match self.get(name) {
+            Some(v) => Ok(v),
+            None => bail!("--{name} is required"),
+        }
+    }
+
     pub fn get_string(&self, name: &str, default: &str) -> String {
         self.get(name).unwrap_or(default).to_string()
     }
@@ -137,6 +145,14 @@ mod tests {
     #[test]
     fn unknown_flag_rejected() {
         assert!(Args::parse(&argv(&["--nope"]), &["yes"]).is_err());
+    }
+
+    #[test]
+    fn require_present_and_missing() {
+        let a = Args::parse(&argv(&["--model", "f.json"]), &["model", "addr"]).unwrap();
+        assert_eq!(a.require("model").unwrap(), "f.json");
+        let err = a.require("addr").unwrap_err();
+        assert!(format!("{err}").contains("--addr"));
     }
 
     #[test]

@@ -1,0 +1,242 @@
+//! Serving-engine integration tests.
+//!
+//! Two claims are enforced here. **Exactness:** the flattened
+//! inference engine must be bit-identical to the reference
+//! `Tree::leaf_for` traversal — leaf-for-leaf and score-bit-for-
+//! score-bit — across every synthetic family, tree depth, and the
+//! Leo-like mixed numerical/categorical schema. **Fidelity over TCP:**
+//! scores fetched through the prediction server must equal in-process
+//! flat scores exactly, malformed frames must be rejected cleanly, and
+//! hot reload must swap models without dropping the connection.
+
+use drf::data::synthetic::{Family, LeoLikeSpec, SyntheticSpec};
+use drf::data::Dataset;
+use drf::forest::{ForestParams, RandomForest};
+use drf::serve::wire::{decode_response, read_frame, write_frame};
+use drf::serve::{BatchOptions, FlatForest, PredictClient, PredictionServer, RowsBatch, ServeResponse};
+
+fn train(ds: &Dataset, trees: usize, depth: u32, seed: u64) -> RandomForest {
+    let params = ForestParams {
+        num_trees: trees,
+        max_depth: depth,
+        seed,
+        ..Default::default()
+    };
+    RandomForest::train(ds, &params).unwrap()
+}
+
+/// The tentpole property: flat routing ≡ reference routing, on every
+/// family, at shallow and deep settings.
+#[test]
+fn flat_forest_is_bit_identical_to_reference_traversal() {
+    let families = [
+        Family::Xor { informative: 3 },
+        Family::Majority { informative: 5 },
+        Family::Needle { informative: 3 },
+        Family::LinearCont { informative: 4 },
+    ];
+    for (fi, family) in families.into_iter().enumerate() {
+        for depth in [2u32, 6, 12] {
+            let seed = 100 + fi as u64 * 10 + depth as u64;
+            let ds = SyntheticSpec::new(family, 400, 8, seed).generate();
+            let forest = train(&ds, 3, depth, seed);
+            assert_flat_matches(&forest, &ds, &format!("{family:?} depth {depth}"));
+        }
+    }
+}
+
+/// Same property on the Leo-like schema: mixed numerical + categorical
+/// columns. A trained forest covers whatever splits training picked; a
+/// hand-built forest guarantees `CatIn` conditions (and the bitset
+/// arena) are exercised regardless of what the trainer chose.
+#[test]
+fn flat_forest_matches_reference_on_leo_categoricals() {
+    let spec = LeoLikeSpec::new(700, 3);
+    let ds = spec.generate();
+    let forest = train(&ds, 2, 8, 17);
+    assert_flat_matches(&forest, &ds, "leo-trained");
+
+    // Deterministic categorical coverage: split on two categorical
+    // columns and one numerical column, whatever the trainer did.
+    use drf::tree::{CategorySet, Condition, Tree};
+    let cat_feature = |c: usize| LeoLikeSpec::NUM_NUMERICAL + c;
+    let mut tree = Tree::new_root(vec![350, 350]);
+    tree.split_node(
+        0,
+        Condition::CatIn {
+            feature: cat_feature(0),
+            set: CategorySet::from_values(spec.arity_at(0), [0]),
+        },
+        0.1,
+        vec![200, 150],
+        vec![150, 200],
+    );
+    tree.split_node(
+        1,
+        Condition::NumLe {
+            feature: 0,
+            threshold: 0.25,
+        },
+        0.05,
+        vec![120, 80],
+        vec![80, 70],
+    );
+    tree.split_node(
+        2,
+        Condition::CatIn {
+            feature: cat_feature(10),
+            set: CategorySet::from_values(spec.arity_at(10), [1]),
+        },
+        0.05,
+        vec![60, 90],
+        vec![90, 110],
+    );
+    let handmade = RandomForest {
+        trees: vec![tree],
+        num_classes: 2,
+    };
+    assert_flat_matches(&handmade, &ds, "leo-handmade");
+}
+
+fn assert_flat_matches(forest: &RandomForest, ds: &Dataset, label: &str) {
+    let flat = FlatForest::compile(forest);
+    assert_eq!(flat.num_trees(), forest.num_trees(), "{label}");
+    assert_eq!(flat.num_nodes(), forest.num_nodes(), "{label}");
+    // Leaf-for-leaf routing agreement with the reference traversal.
+    for (t, tree) in forest.trees.iter().enumerate() {
+        for i in 0..ds.num_rows() {
+            let row = ds.row(i);
+            assert_eq!(
+                flat.leaf_for(t, &row),
+                tree.leaf_for(&row),
+                "{label}: tree {t} row {i} routed differently"
+            );
+        }
+    }
+    // Bit-identical scores, at several block/thread shapes.
+    let reference = forest.predict_scores_reference(ds);
+    for opts in [
+        BatchOptions::single_thread(),
+        BatchOptions {
+            block_rows: 37,
+            threads: 4,
+        },
+    ] {
+        let batched = flat.predict_scores_batch(ds, &opts);
+        for (i, (a, b)) in batched.iter().zip(&reference).enumerate() {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "{label}: score differs at row {i} with {opts:?}"
+            );
+        }
+    }
+    // Identical class votes.
+    assert_eq!(
+        flat.predict_classes_batch(ds, &BatchOptions::default()),
+        forest.predict_classes_reference(ds),
+        "{label}: classes differ"
+    );
+}
+
+#[test]
+fn tcp_round_trip_matches_in_process_scores() {
+    let ds = SyntheticSpec::new(Family::Xor { informative: 3 }, 500, 6, 5).generate();
+    let forest = train(&ds, 4, 8, 21);
+    let flat = FlatForest::compile(&forest);
+
+    let server = PredictionServer::spawn(&forest, "127.0.0.1:0", None).unwrap();
+    let mut client = PredictClient::connect(server.addr()).unwrap();
+
+    let info = client.model_info().unwrap();
+    assert_eq!(info.num_trees as usize, forest.num_trees());
+    assert_eq!(info.num_classes, forest.num_classes);
+    assert_eq!(info.num_nodes as usize, forest.num_nodes());
+
+    // Scores over TCP == in-process flat scores, bit for bit.
+    let remote = client.score_dataset(&ds).unwrap();
+    let local = flat.predict_scores_batch(&ds, &BatchOptions::default());
+    assert_eq!(remote.len(), local.len());
+    for (i, (r, l)) in remote.iter().zip(&local).enumerate() {
+        assert_eq!(r.to_bits(), l.to_bits(), "row {i} differs over TCP");
+    }
+    assert_eq!(
+        client.classify_dataset(&ds).unwrap(),
+        flat.predict_classes_batch(&ds, &BatchOptions::default())
+    );
+
+    // A mistyped batch is rejected with a clean error…
+    let bad = RowsBatch {
+        columns: vec![drf::data::column::Column::Categorical {
+            values: vec![0, 1],
+            arity: 2,
+        }],
+    };
+    let err = client.score(bad).unwrap_err();
+    assert!(format!("{err}").contains("server error"), "{err}");
+    // …and the connection stays usable afterwards.
+    let again = client.score_dataset(&ds).unwrap();
+    assert_eq!(again.len(), ds.num_rows());
+}
+
+#[test]
+fn malformed_frames_are_rejected() {
+    let ds = SyntheticSpec::new(Family::Xor { informative: 2 }, 100, 4, 5).generate();
+    let forest = train(&ds, 1, 4, 3);
+    let server = PredictionServer::spawn(&forest, "127.0.0.1:0", None).unwrap();
+
+    // Speak raw bytes: a well-framed body that is not a serving request.
+    let mut stream = std::net::TcpStream::connect(server.addr()).unwrap();
+    write_frame(&mut stream, b"this is not a DRFS frame").unwrap();
+    let resp_frame = read_frame(&mut stream).unwrap();
+    let (id, resp) = decode_response(&resp_frame).unwrap();
+    assert_eq!(id, 0, "unparseable requests are answered with id 0");
+    match resp {
+        ServeResponse::Err(msg) => assert!(msg.contains("bad request frame"), "{msg}"),
+        r => panic!("expected Err response, got {r:?}"),
+    }
+    // The server closes the connection after a malformed frame.
+    assert!(read_frame(&mut stream).is_err());
+
+    // A fresh, well-spoken connection still works.
+    let mut client = PredictClient::connect(server.addr()).unwrap();
+    assert_eq!(client.model_info().unwrap().num_trees, 1);
+}
+
+#[test]
+fn hot_reload_swaps_the_served_model() {
+    let dir = drf::util::tempdir().unwrap();
+    let path = dir.path().join("forest.json");
+    let ds = SyntheticSpec::new(Family::Majority { informative: 3 }, 300, 6, 8).generate();
+
+    let first = train(&ds, 2, 6, 1);
+    first.save(&path).unwrap();
+    let server = PredictionServer::spawn(&first, "127.0.0.1:0", Some(path.clone())).unwrap();
+    let mut client = PredictClient::connect(server.addr()).unwrap();
+    assert_eq!(client.model_info().unwrap().num_trees, 2);
+
+    // Retrain with more trees, overwrite the file, reload in place.
+    let second = train(&ds, 5, 6, 2);
+    second.save(&path).unwrap();
+    assert_eq!(client.reload(None).unwrap(), 5);
+    assert_eq!(client.model_info().unwrap().num_trees, 5);
+    let remote = client.score_dataset(&ds).unwrap();
+    let local = FlatForest::compile(&second).predict_scores_batch(&ds, &BatchOptions::default());
+    assert_eq!(remote, local, "post-reload scores must come from the new model");
+
+    // Remote path overrides are refused (arbitrary-file read oracle)
+    // and the server keeps serving the current model.
+    let other = dir.path().join("other.json").display().to_string();
+    let err = client.reload(Some(&other)).unwrap_err();
+    assert!(
+        format!("{err}").contains("not permitted"),
+        "path override must be refused: {err}"
+    );
+    assert_eq!(client.model_info().unwrap().num_trees, 5);
+
+    // Reload when the startup file has gone missing is a clean error
+    // that also keeps the old model serving.
+    std::fs::remove_file(&path).unwrap();
+    assert!(client.reload(None).is_err());
+    assert_eq!(client.model_info().unwrap().num_trees, 5);
+}
