@@ -149,16 +149,21 @@ impl Default for ScorerBackend {
     }
 }
 
-/// Where splitters keep their column shards.
+/// Where splitters keep their column shards (which
+/// [`crate::data::store::ColumnStore`] backend the manager builds).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum StorageMode {
     /// Shards in RAM (fast path; the paper's "small and moderate size"
     /// configuration).
     Memory,
-    /// Shards on disk, re-read sequentially every pass (the paper's §5
-    /// configuration: "all experiments have been run with the datasets
-    /// remaining on drive").
+    /// Shards on disk as monolithic DRFC v1 files, re-read sequentially
+    /// every pass (the paper's §5 configuration: "all experiments have
+    /// been run with the datasets remaining on drive").
     Disk,
+    /// Shards on disk in the chunked DRFC v2 layout (per-chunk record
+    /// counts in the header, so passes can be resumed/limited without
+    /// reading the tail). Trees are bit-identical to the other modes.
+    DiskV2,
 }
 
 impl Default for StorageMode {
@@ -188,7 +193,7 @@ impl Default for Engine {
 }
 
 /// Top-level training configuration.
-#[derive(Debug, Clone, PartialEq, Default)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct TrainConfig {
     pub forest: ForestParams,
     pub topology: TopologyParams,
@@ -196,14 +201,35 @@ pub struct TrainConfig {
     pub scorer: ScorerBackend,
     pub storage: StorageMode,
     pub engine: Engine,
+    /// Concurrent column scans per splitter: a splitter owning `k`
+    /// columns scans up to this many of them at once on a scoped
+    /// worker pool. Purely a wall-clock knob — trees and `IoStats`
+    /// accounting are identical for any value.
+    pub scan_threads: usize,
     /// Directory holding AOT artifacts (for `ScorerBackend::Xla`).
     pub artifacts_dir: Option<std::path::PathBuf>,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        Self {
+            forest: ForestParams::default(),
+            topology: TopologyParams::default(),
+            prune: PruneMode::default(),
+            scorer: ScorerBackend::default(),
+            storage: StorageMode::default(),
+            engine: Engine::default(),
+            scan_threads: 1,
+            artifacts_dir: None,
+        }
+    }
 }
 
 impl TrainConfig {
     pub fn validate(&self) -> crate::Result<()> {
         self.forest.validate()?;
         self.topology.validate()?;
+        anyhow::ensure!(self.scan_threads >= 1, "scan_threads must be >= 1");
         if let PruneMode::Adaptive { threshold } = self.prune {
             anyhow::ensure!(
                 (0.0..=1.0).contains(&threshold),
@@ -270,10 +296,12 @@ impl TrainConfig {
                     match self.storage {
                         StorageMode::Memory => "memory",
                         StorageMode::Disk => "disk",
+                        StorageMode::DiskV2 => "disk_v2",
                     }
                     .into(),
                 ),
             )
+            .set("scan_threads", Json::from_usize(self.scan_threads))
             .set(
                 "engine",
                 Json::Str(
@@ -364,8 +392,12 @@ impl TrainConfig {
             cfg.storage = match x.as_str()? {
                 "memory" => StorageMode::Memory,
                 "disk" => StorageMode::Disk,
+                "disk_v2" => StorageMode::DiskV2,
                 s => anyhow::bail!("unknown storage mode '{s}'"),
             };
+        }
+        if let Some(x) = v.get_opt("scan_threads") {
+            cfg.scan_threads = x.as_usize()?;
         }
         if let Some(x) = v.get_opt("engine") {
             cfg.engine = match x.as_str()? {
@@ -412,9 +444,14 @@ mod tests {
         cfg.storage = StorageMode::Disk;
         cfg.engine = Engine::Threaded;
         cfg.scorer = ScorerBackend::Xla;
+        cfg.scan_threads = 6;
         cfg.artifacts_dir = Some(std::path::PathBuf::from("artifacts"));
         let s = cfg.to_json().to_string();
         let back = TrainConfig::from_json(&s).unwrap();
+        assert_eq!(cfg, back);
+        // The v2 storage mode roundtrips too.
+        cfg.storage = StorageMode::DiskV2;
+        let back = TrainConfig::from_json(&cfg.to_json().to_string()).unwrap();
         assert_eq!(cfg, back);
     }
 
@@ -429,11 +466,16 @@ mod tests {
     fn invalid_configs_rejected() {
         assert!(TrainConfig::from_json("{\"forest\": {\"num_trees\": 0}}").is_err());
         assert!(TrainConfig::from_json("{\"scorer\": \"gpu\"}").is_err());
+        assert!(TrainConfig::from_json("{\"storage\": \"tape\"}").is_err());
+        assert!(TrainConfig::from_json("{\"scan_threads\": 0}").is_err());
         let mut cfg = TrainConfig::default();
         cfg.prune = PruneMode::Adaptive { threshold: 1.5 };
         assert!(cfg.validate().is_err());
         cfg.prune = PruneMode::Never;
         cfg.topology.redundancy = 0;
+        assert!(cfg.validate().is_err());
+        cfg.topology.redundancy = 1;
+        cfg.scan_threads = 0;
         assert!(cfg.validate().is_err());
     }
 

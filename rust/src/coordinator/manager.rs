@@ -2,7 +2,9 @@
 //! builders, runs the forest-level training loop, and assembles the
 //! finished trees. Also home of the threaded worker engine.
 
-use super::splitter::{disk_storage_for, memory_storage_for, SplitterConfig, SplitterCore};
+use super::splitter::{
+    disk_storage_for, disk_v2_storage_for, memory_storage_for, SplitterConfig, SplitterCore,
+};
 use super::topology::Topology;
 use super::transport::{DirectPool, SplitterPool};
 use super::tree_builder::{LevelStats, TreeBuilderCore};
@@ -80,9 +82,10 @@ impl Manager {
             num_candidates: cfg.forest.candidates_for(ds.num_features()),
             score_kind: cfg.forest.score_kind,
             prune: cfg.prune,
+            scan_threads: cfg.scan_threads,
         };
         let tmp_dir = match cfg.storage {
-            StorageMode::Disk => Some(crate::util::tempdir()?),
+            StorageMode::Disk | StorageMode::DiskV2 => Some(crate::util::tempdir()?),
             StorageMode::Memory => None,
         };
 
@@ -109,12 +112,21 @@ impl Manager {
             let cols = topology.columns_of(s);
             let stats = IoStats::new();
             splitter_stats.push(stats.clone());
-            let storage = match &tmp_dir {
-                None => memory_storage_for(ds, &cols),
-                Some(dir) => {
+            let storage = match (&tmp_dir, cfg.storage) {
+                (None, _) => memory_storage_for(ds, &cols),
+                (Some(dir), mode) => {
                     let sub = dir.path().join(format!("splitter_{s}"));
                     std::fs::create_dir_all(&sub)?;
-                    disk_storage_for(ds, &cols, &sub, stats.clone())?
+                    match mode {
+                        StorageMode::DiskV2 => disk_v2_storage_for(
+                            ds,
+                            &cols,
+                            &sub,
+                            crate::data::disk::DEFAULT_CHUNK_ROWS as u32,
+                            stats.clone(),
+                        )?,
+                        _ => disk_storage_for(ds, &cols, &sub, stats.clone())?,
+                    }
                 }
             };
             let mut core = SplitterCore::new(
@@ -298,10 +310,28 @@ mod tests {
         let (mem_trees, _) = Manager::new(cfg.clone()).unwrap().train(&ds).unwrap();
         let mut cfg2 = cfg;
         cfg2.storage = StorageMode::Disk;
-        let (disk_trees, report) = Manager::new(cfg2).unwrap().train(&ds).unwrap();
+        let (disk_trees, report) = Manager::new(cfg2.clone()).unwrap().train(&ds).unwrap();
         assert_eq!(mem_trees, disk_trees, "storage mode must not change the model");
         // Disk mode must actually have read from disk.
         let total_read: u64 = report.splitter_io.iter().map(|s| s.disk_read_bytes).sum();
         assert!(total_read > 0);
+        // The chunked v2 layout is bit-identical too.
+        cfg2.storage = StorageMode::DiskV2;
+        let (v2_trees, report) = Manager::new(cfg2).unwrap().train(&ds).unwrap();
+        assert_eq!(mem_trees, v2_trees, "DRFC v2 must not change the model");
+        let total_read: u64 = report.splitter_io.iter().map(|s| s.disk_read_bytes).sum();
+        assert!(total_read > 0);
+    }
+
+    #[test]
+    fn scan_threads_do_not_change_the_model() {
+        let ds = SyntheticSpec::new(Family::Majority { informative: 3 }, 400, 6, 3).generate();
+        let mut cfg = small_cfg(2);
+        // 2 splitters x 3 columns each: the scan pool has real work.
+        cfg.topology.num_splitters = Some(2);
+        let (serial, _) = Manager::new(cfg.clone()).unwrap().train(&ds).unwrap();
+        cfg.scan_threads = 4;
+        let (parallel, _) = Manager::new(cfg).unwrap().train(&ds).unwrap();
+        assert_eq!(serial, parallel, "scan_threads must not change the model");
     }
 }

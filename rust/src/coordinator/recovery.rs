@@ -207,6 +207,7 @@ mod tests {
             num_candidates: params.candidates_for(ds.num_features()),
             score_kind: params.score_kind,
             prune: PruneMode::Never,
+            scan_threads: 1,
         };
         let splitters = (0..topo.num_splitters())
             .map(|s| {

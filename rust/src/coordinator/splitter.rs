@@ -4,19 +4,27 @@
 //!
 //! A splitter never sees the tree structure and never talks to other
 //! splitters — only to tree builders, via the message types in
-//! [`super::messages`]. All dataset access is sequential; in `Disk`
-//! storage mode every access is a fresh sequential pass charged to the
-//! worker's [`IoStats`] (this is what the Table 1 bench measures).
+//! [`super::messages`]. All dataset access goes through the
+//! [`ColumnStore`] data plane as **chunk-granular sequential scans**:
+//! in the disk backends every pass streams through a bounded buffer and
+//! is charged to the worker's [`IoStats`] (this is what the Table 1
+//! bench measures); the memory backend visits borrowed slices.
+//!
+//! A splitter owning `k` columns scans them **in parallel** on a scoped
+//! worker pool bounded by [`SplitterConfig::scan_threads`]. Per-column
+//! scan results are merged in deterministic column order, so the thread
+//! count can never change a split decision — trees are bit-identical
+//! for any `scan_threads` (asserted by `tests/storage_backends.rs`).
 
 use super::messages::{
     Bitmap, EvalQuery, EvalResult, LevelUpdate, PartialSupersplit, SupersplitQuery,
 };
 use crate::classlist::ClassList;
 use crate::config::PruneMode;
-use crate::data::column::{Column, SortedEntry};
-use crate::data::disk::{self, ColumnReader};
+use crate::data::column::SortedEntry;
 use crate::data::io_stats::IoStats;
 use crate::data::schema::{ColumnType, Schema};
+use crate::data::store::{self, ColumnStore, RawChunk};
 use crate::rng::{Bagger, FeatureSampler, FeatureSampling};
 use crate::splits::histogram::Histogram;
 use crate::splits::scorer::{pick_best, ScoreKind};
@@ -26,33 +34,7 @@ use crate::tree::Condition;
 use crate::Result;
 use std::borrow::Cow;
 use std::collections::{BTreeMap, HashMap};
-use std::path::PathBuf;
 use std::sync::{Arc, Mutex};
-
-/// Where a splitter's columns live.
-pub enum SplitterStorage {
-    /// Columns held in RAM (paper: "workers can be configured to load
-    /// the dataset in memory").
-    Memory {
-        /// column index → raw column (row order).
-        columns: BTreeMap<usize, Column>,
-        /// column index → presorted entries (numerical columns only).
-        sorted: BTreeMap<usize, Vec<SortedEntry>>,
-    },
-    /// Columns on disk; every access is a sequential pass.
-    Disk {
-        /// column index → (raw file, optional presorted file).
-        files: BTreeMap<usize, ColumnFiles>,
-    },
-}
-
-/// Paths of one on-disk column.
-#[derive(Debug, Clone)]
-pub struct ColumnFiles {
-    pub raw: PathBuf,
-    pub sorted: Option<PathBuf>,
-    pub ctype: ColumnType,
-}
 
 /// Static configuration every splitter shares (derived from the forest
 /// params; identical across workers — that is what makes seeded bagging
@@ -65,6 +47,9 @@ pub struct SplitterConfig {
     pub num_candidates: usize,
     pub score_kind: ScoreKind,
     pub prune: PruneMode,
+    /// Upper bound on concurrent column scans inside this splitter
+    /// (1 = fully sequential). Never affects results, only wall clock.
+    pub scan_threads: usize,
 }
 
 /// Per-tree state a splitter maintains.
@@ -85,7 +70,8 @@ struct TreeState {
 pub struct SplitterCore {
     id: usize,
     schema: Schema,
-    storage: SplitterStorage,
+    /// The data plane: all column access is chunked sequential scans.
+    storage: Arc<dyn ColumnStore>,
     /// Label column — replicated on every splitter at dataset-prep time.
     labels: Arc<Vec<u32>>,
     cfg: SplitterConfig,
@@ -99,7 +85,7 @@ impl SplitterCore {
     pub fn new(
         id: usize,
         schema: Schema,
-        storage: SplitterStorage,
+        storage: Arc<dyn ColumnStore>,
         labels: Arc<Vec<u32>>,
         cfg: SplitterConfig,
         stats: IoStats,
@@ -132,10 +118,7 @@ impl SplitterCore {
 
     /// Columns this splitter holds.
     pub fn columns_owned(&self) -> Vec<usize> {
-        match &self.storage {
-            SplitterStorage::Memory { columns, .. } => columns.keys().copied().collect(),
-            SplitterStorage::Disk { files } => files.keys().copied().collect(),
-        }
+        self.storage.columns()
     }
 
     fn num_rows(&self) -> usize {
@@ -155,50 +138,40 @@ impl SplitterCore {
         )
     }
 
-    /// Raw column values (memory: borrowed; disk: sequential read, one
-    /// pass charged).
-    fn raw_column(&self, j: usize) -> Result<Cow<'_, Column>> {
-        match &self.storage {
-            SplitterStorage::Memory { columns, .. } => Ok(Cow::Borrowed(
-                columns.get(&j).ok_or_else(|| anyhow::anyhow!("splitter {} lacks column {j}", self.id))?,
-            )),
-            SplitterStorage::Disk { files } => {
-                let f = files
-                    .get(&j)
-                    .ok_or_else(|| anyhow::anyhow!("splitter {} lacks column {j}", self.id))?;
-                let r = ColumnReader::open(&f.raw, self.stats.clone())?;
-                let col = match f.ctype {
-                    ColumnType::Numerical => Column::Numerical(r.read_all_f32()?),
-                    ColumnType::Categorical { arity } => Column::Categorical {
-                        values: r.read_all_u32()?,
-                        arity,
-                    },
-                };
-                Ok(Cow::Owned(col))
-            }
-        }
+    /// SPRINT-pruned per-tree entries of column `j`, if active, with
+    /// the pass charged (a pruned scan still reads data — same
+    /// accounting as the chunked store paths).
+    fn charged_pruned_entries<'a>(
+        &self,
+        state: &'a TreeState,
+        j: usize,
+    ) -> Option<&'a [SortedEntry]> {
+        let entries = state
+            .pruned_sorted
+            .as_ref()?
+            .get(&j)
+            .map(|v| v.as_slice())?;
+        self.stats.add_disk_read(entries.len() as u64 * 8);
+        self.stats.add_read_pass();
+        Some(entries)
     }
 
-    /// Presorted entries of a numerical column (one pass in disk mode).
-    fn sorted_entries(&self, j: usize) -> Result<Cow<'_, [SortedEntry]>> {
-        match &self.storage {
-            SplitterStorage::Memory { sorted, .. } => Ok(Cow::Borrowed(
-                sorted
-                    .get(&j)
-                    .ok_or_else(|| anyhow::anyhow!("no presorted data for column {j}"))?,
-            )),
-            SplitterStorage::Disk { files } => {
-                let f = files
-                    .get(&j)
-                    .ok_or_else(|| anyhow::anyhow!("splitter {} lacks column {j}", self.id))?;
-                let path = f
-                    .sorted
-                    .as_ref()
-                    .ok_or_else(|| anyhow::anyhow!("column {j} has no presorted file"))?;
-                let r = ColumnReader::open(path, self.stats.clone())?;
-                Ok(Cow::Owned(r.read_all_sorted()?))
-            }
+    /// Whole presorted view of column `j` for consumers that need the
+    /// full slice at once (the XLA scorer): the pruned per-tree copy
+    /// when active, a zero-copy borrow when the backend holds the view
+    /// resident, else one materializing pass over the store.
+    fn materialize_sorted<'a>(
+        &'a self,
+        state: &'a TreeState,
+        j: usize,
+    ) -> Result<Cow<'a, [SortedEntry]>> {
+        if let Some(entries) = self.charged_pruned_entries(state, j) {
+            return Ok(Cow::Borrowed(entries));
         }
+        if let Some(entries) = self.storage.borrow_sorted(j) {
+            return Ok(Cow::Borrowed(entries));
+        }
+        Ok(Cow::Owned(self.storage.read_sorted(j)?))
     }
 
     // ------------------------------------------------------------------
@@ -230,19 +203,30 @@ impl SplitterCore {
     }
 
     /// Bagged label histogram of the root (queried once per tree by the
-    /// tree builder, which owns no data).
+    /// tree builder, which owns no data). A chunk-granular fold like
+    /// every other scan — the label column just happens to always live
+    /// in RAM.
     pub fn root_stats(&self, tree: u32) -> Vec<u64> {
         let mut h = Histogram::new(self.num_classes());
-        for (i, &y) in self.labels.iter().enumerate() {
-            let b = self.cfg.bagger.weight(tree, i as u64);
-            if b > 0 {
-                h.add(y, b);
+        let mut base = 0u64;
+        for chunk in self.labels.chunks(crate::data::disk::DEFAULT_CHUNK_ROWS) {
+            for (k, &y) in chunk.iter().enumerate() {
+                let b = self.cfg.bagger.weight(tree, base + k as u64);
+                if b > 0 {
+                    h.add(y, b);
+                }
             }
+            base += chunk.len() as u64;
         }
         h.into_counts()
     }
 
     /// Alg. 2 step 3: find this splitter's partial optimal supersplit.
+    ///
+    /// Columns are scanned independently (in parallel up to
+    /// `scan_threads`); per-column candidates are merged with
+    /// [`pick_best`] in assigned-column order, so the result is
+    /// identical to a fully sequential pass.
     pub fn find_splits(&self, q: &SupersplitQuery) -> Result<PartialSupersplit> {
         let trees = self.trees.lock().unwrap();
         let state = trees
@@ -271,62 +255,25 @@ impl SplitterCore {
             .map(|l| Histogram::from_counts(l.totals.clone()))
             .collect();
 
+        // Columns drawn for at least one leaf, with their per-leaf
+        // candidacy masks; a non-candidate column skips its pass
+        // entirely.
+        let jobs: Vec<(usize, Vec<bool>)> = q
+            .assigned_columns
+            .iter()
+            .filter_map(|&j| {
+                let mask: Vec<bool> = leaf_candidates.iter().map(|c| c.contains(&j)).collect();
+                mask.iter().any(|&b| b).then_some((j, mask))
+            })
+            .collect();
+
+        let per_column = store::run_scans(self.cfg.scan_threads, jobs.len(), |k| {
+            let (j, mask) = &jobs[k];
+            self.scan_column_supersplit(*j, mask, state, &leaf_totals)
+        })?;
+
         let mut best: Vec<Option<SplitCandidate>> = vec![None; q.leaves.len()];
-        let bag_weights = &state.bag_weights;
-
-        for &j in &q.assigned_columns {
-            // Mask of leaves for which column j was drawn.
-            let mask: Vec<bool> = leaf_candidates.iter().map(|c| c.contains(&j)).collect();
-            if !mask.iter().any(|&b| b) {
-                continue; // not a candidate anywhere: skip the pass entirely
-            }
-            let is_candidate = |h: u32| mask[(h - 1) as usize];
-            let sample2node = |i: u32| cl.get(i as usize);
-            let bag = |i: u32| bag_weights[i as usize] as u32;
-
-            let candidates: Vec<Option<SplitCandidate>> = match self.schema.columns[j].ctype {
-                ColumnType::Numerical => {
-                    let q_j = self.pruned_or_sorted(state, j)?;
-                    match (&self.xla, self.num_classes()) {
-                        (Some(scorer), 2) => best_numerical_supersplit_xla(
-                            scorer.as_ref(),
-                            j,
-                            &q_j,
-                            &self.labels,
-                            &leaf_totals,
-                            sample2node,
-                            is_candidate,
-                            bag,
-                        )?,
-                        _ => numerical::best_numerical_supersplit(
-                            j,
-                            &q_j,
-                            &self.labels,
-                            self.num_classes(),
-                            &leaf_totals,
-                            self.cfg.score_kind,
-                            sample2node,
-                            is_candidate,
-                            bag,
-                        ),
-                    }
-                }
-                ColumnType::Categorical { arity } => {
-                    let col = self.raw_column(j)?;
-                    categorical::best_categorical_supersplit(
-                        j,
-                        col.as_categorical(),
-                        arity,
-                        &self.labels,
-                        self.num_classes(),
-                        &leaf_totals,
-                        self.cfg.score_kind,
-                        sample2node,
-                        is_candidate,
-                        bag,
-                    )
-                }
-            };
+        for candidates in per_column {
             for (leaf, cand) in candidates.into_iter().enumerate() {
                 if let Some(c) = cand {
                     best[leaf] = pick_best([best[leaf].take(), Some(c)].into_iter().flatten());
@@ -336,18 +283,83 @@ impl SplitterCore {
         Ok(PartialSupersplit { splits: best })
     }
 
-    /// Presorted entries, preferring the pruned per-tree copy when
-    /// SPRINT-style pruning is active.
-    fn pruned_or_sorted(&self, state: &TreeState, j: usize) -> Result<Cow<'_, [SortedEntry]>> {
-        if let Some(pruned) = &state.pruned_sorted {
-            if let Some(entries) = pruned.get(&j) {
-                // A pruned scan still reads data: charge it.
-                self.stats.add_disk_read(entries.len() as u64 * 8);
-                self.stats.add_read_pass();
-                return Ok(Cow::Owned(entries.clone()));
+    /// One column's contribution to the supersplit: a chunk-granular
+    /// scan through the store feeding the incremental Alg. 1 /
+    /// count-table state.
+    fn scan_column_supersplit(
+        &self,
+        j: usize,
+        mask: &[bool],
+        state: &TreeState,
+        leaf_totals: &[Histogram],
+    ) -> Result<Vec<Option<SplitCandidate>>> {
+        let cl = &state.class_list;
+        let bag_weights = &state.bag_weights;
+        let is_candidate = |h: u32| mask[(h - 1) as usize];
+        let sample2node = |i: u32| cl.get(i as usize);
+        let bag = |i: u32| bag_weights[i as usize] as u32;
+
+        match self.schema.columns[j].ctype {
+            ColumnType::Numerical => {
+                if let (Some(scorer), 2) = (&self.xla, self.num_classes()) {
+                    // The batched XLA task builder needs the whole
+                    // presorted slice at once.
+                    let q_j = self.materialize_sorted(state, j)?;
+                    return best_numerical_supersplit_xla(
+                        scorer.as_ref(),
+                        j,
+                        &q_j,
+                        &self.labels,
+                        leaf_totals,
+                        sample2node,
+                        is_candidate,
+                        bag,
+                    );
+                }
+                let mut scan = numerical::NumericalSupersplitScan::new(
+                    j,
+                    &self.labels,
+                    self.num_classes(),
+                    leaf_totals,
+                    self.cfg.score_kind,
+                    sample2node,
+                    is_candidate,
+                    bag,
+                );
+                if let Some(entries) = self.charged_pruned_entries(state, j) {
+                    scan.push(entries);
+                } else {
+                    self.storage.scan_sorted(j, &mut |chunk| {
+                        scan.push(chunk);
+                        Ok(())
+                    })?;
+                }
+                Ok(scan.finish())
+            }
+            ColumnType::Categorical { arity } => {
+                let mut scan = categorical::CategoricalSupersplitScan::new(
+                    j,
+                    arity,
+                    &self.labels,
+                    self.num_classes(),
+                    leaf_totals,
+                    self.cfg.score_kind,
+                    sample2node,
+                    is_candidate,
+                    bag,
+                );
+                self.storage.scan_raw(j, &mut |base, chunk| match chunk {
+                    RawChunk::Categorical(values) => {
+                        scan.push(base, values);
+                        Ok(())
+                    }
+                    RawChunk::Numerical(_) => {
+                        anyhow::bail!("column {j}: chunk/type mismatch")
+                    }
+                })?;
+                Ok(scan.finish())
             }
         }
-        self.sorted_entries(j)
     }
 
     /// Alg. 2 step 5: evaluate the winning conditions this splitter owns
@@ -358,6 +370,8 @@ impl SplitterCore {
     /// scanned **once per level**, no matter how many leaves chose it —
     /// the per-level (not per-node) pass structure the paper's
     /// complexity analysis relies on (see EXPERIMENTS.md §Perf).
+    /// Distinct features own disjoint condition slots, so the passes
+    /// run in parallel up to `scan_threads`.
     pub fn eval_conditions(&self, q: &EvalQuery) -> Result<EvalResult> {
         let trees = self.trees.lock().unwrap();
         let state = trees
@@ -365,67 +379,97 @@ impl SplitterCore {
             .ok_or_else(|| anyhow::anyhow!("splitter {}: unknown tree {}", self.id, q.tree))?;
         let cl = &state.class_list;
 
-        // rank -> slot in the output (and per-rank write cursor).
         let max_rank = q.conditions.iter().map(|(r, _)| *r).max().unwrap_or(0) as usize;
-        let mut slot_of_rank = vec![usize::MAX; max_rank + 1];
         let counts = cl.histogram();
-        let mut out: Vec<(u32, Bitmap)> = Vec::with_capacity(q.conditions.len());
-        for (slot, (rank, _)) in q.conditions.iter().enumerate() {
-            anyhow::ensure!(
-                (*rank as usize) < counts.len(),
-                "rank {rank} out of range"
-            );
-            slot_of_rank[*rank as usize] = slot;
-            out.push((*rank, Bitmap::with_len(counts[*rank as usize] as usize)));
+        for (rank, _) in &q.conditions {
+            anyhow::ensure!((*rank as usize) < counts.len(), "rank {rank} out of range");
         }
-        let mut cursor = vec![0usize; q.conditions.len()];
 
         // Group condition slots by feature; one sequential pass each.
         let mut by_feature: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
         for (slot, (_, cond)) in q.conditions.iter().enumerate() {
             by_feature.entry(cond.feature()).or_default().push(slot);
         }
-        for (feature, slots) in by_feature {
-            let col = self.raw_column(feature)?;
-            let n = col.len();
-            // Which ranks does this pass serve?
-            let mut rank_wanted = vec![false; max_rank + 1];
-            for &slot in &slots {
-                rank_wanted[q.conditions[slot].0 as usize] = true;
+        let groups: Vec<(usize, Vec<usize>)> = by_feature.into_iter().collect();
+
+        let results = store::run_scans(self.cfg.scan_threads, groups.len(), |g| {
+            let (feature, slots) = &groups[g];
+            self.eval_feature_pass(*feature, slots, &q.conditions, cl, &counts, max_rank)
+        })?;
+
+        // Reassemble in slot (condition) order.
+        let mut out: Vec<Option<(u32, Bitmap)>> = q.conditions.iter().map(|_| None).collect();
+        for group in results {
+            for (slot, bm) in group {
+                out[slot] = Some((q.conditions[slot].0, bm));
             }
-            match col.as_ref() {
-                Column::Numerical(vals) => {
-                    for i in 0..n {
-                        let c = cl.get(i) as usize;
+        }
+        let bitmaps = out
+            .into_iter()
+            .map(|o| o.expect("every condition slot belongs to exactly one feature pass"))
+            .collect();
+        Ok(EvalResult { bitmaps })
+    }
+
+    /// One feature's evaluation pass: a chunked scan over the raw
+    /// column filling the bitmaps of this feature's condition slots.
+    fn eval_feature_pass(
+        &self,
+        feature: usize,
+        slots: &[usize],
+        conditions: &[(u32, Condition)],
+        cl: &ClassList,
+        counts: &[u64],
+        max_rank: usize,
+    ) -> Result<Vec<(usize, Bitmap)>> {
+        // Local (per-pass) slot index by leaf rank; ranks are unique
+        // across conditions, so each belongs to exactly one slot.
+        let mut local_of_rank = vec![usize::MAX; max_rank + 1];
+        let mut rank_wanted = vec![false; max_rank + 1];
+        let mut bitmaps: Vec<Bitmap> = Vec::with_capacity(slots.len());
+        let mut cursor = vec![0usize; slots.len()];
+        for (li, &slot) in slots.iter().enumerate() {
+            let rank = conditions[slot].0 as usize;
+            local_of_rank[rank] = li;
+            rank_wanted[rank] = true;
+            bitmaps.push(Bitmap::with_len(counts[rank] as usize));
+        }
+
+        self.storage.scan_raw(feature, &mut |base, chunk| {
+            match chunk {
+                RawChunk::Numerical(vals) => {
+                    for (k, &v) in vals.iter().enumerate() {
+                        let c = cl.get(base + k) as usize;
                         if c <= max_rank && rank_wanted[c] {
-                            let slot = slot_of_rank[c];
-                            let Condition::NumLe { threshold, .. } = &q.conditions[slot].1
+                            let li = local_of_rank[c];
+                            let Condition::NumLe { threshold, .. } = &conditions[slots[li]].1
                             else {
                                 anyhow::bail!("type mismatch on feature {feature}");
                             };
-                            let p = cursor[slot];
-                            out[slot].1.set(p, vals[i] <= *threshold);
-                            cursor[slot] = p + 1;
+                            let p = cursor[li];
+                            bitmaps[li].set(p, v <= *threshold);
+                            cursor[li] = p + 1;
                         }
                     }
                 }
-                Column::Categorical { values, .. } => {
-                    for i in 0..n {
-                        let c = cl.get(i) as usize;
+                RawChunk::Categorical(vals) => {
+                    for (k, &v) in vals.iter().enumerate() {
+                        let c = cl.get(base + k) as usize;
                         if c <= max_rank && rank_wanted[c] {
-                            let slot = slot_of_rank[c];
-                            let Condition::CatIn { set, .. } = &q.conditions[slot].1 else {
+                            let li = local_of_rank[c];
+                            let Condition::CatIn { set, .. } = &conditions[slots[li]].1 else {
                                 anyhow::bail!("type mismatch on feature {feature}");
                             };
-                            let p = cursor[slot];
-                            out[slot].1.set(p, set.contains(values[i]));
-                            cursor[slot] = p + 1;
+                            let p = cursor[li];
+                            bitmaps[li].set(p, set.contains(v));
+                            cursor[li] = p + 1;
                         }
                     }
                 }
             }
-        }
-        Ok(EvalResult { bitmaps: out })
+            Ok(())
+        })?;
+        Ok(slots.iter().copied().zip(bitmaps).collect())
     }
 
     /// Alg. 2 step 7: apply the broadcast level update to the local
@@ -439,26 +483,39 @@ impl SplitterCore {
 
         // SPRINT-style adaptive pruning (paper §3): once the closed
         // fraction crosses the threshold, rebuild per-tree attribute
-        // lists containing only samples still in open leaves.
+        // lists containing only samples still in open leaves — one
+        // chunked filter pass per owned numerical column (parallel up
+        // to `scan_threads`).
         if let PruneMode::Adaptive { threshold } = self.cfg.prune {
             let open = state.class_list.iter_open().count();
             let closed_frac = 1.0 - open as f64 / self.num_rows().max(1) as f64;
             if closed_frac >= threshold {
                 let cl = &state.class_list;
+                let cols: Vec<usize> = self
+                    .storage
+                    .columns()
+                    .into_iter()
+                    .filter(|&j| self.schema.columns[j].ctype.is_numerical())
+                    .collect();
+                let kept_lists = store::run_scans(self.cfg.scan_threads, cols.len(), |k| {
+                    let mut kept: Vec<SortedEntry> = Vec::new();
+                    self.storage.scan_sorted(cols[k], &mut |chunk| {
+                        kept.extend(
+                            chunk
+                                .iter()
+                                .filter(|e| cl.get(e.sample as usize) != 0)
+                                .copied(),
+                        );
+                        Ok(())
+                    })?;
+                    Ok(kept)
+                })?;
                 let mut pruned = BTreeMap::new();
-                for j in self.columns_owned() {
-                    if self.schema.columns[j].ctype.is_numerical() {
-                        let entries = self.sorted_entries(j)?;
-                        let kept: Vec<SortedEntry> = entries
-                            .iter()
-                            .filter(|e| cl.get(e.sample as usize) != 0)
-                            .copied()
-                            .collect();
-                        // Pruning is a write pass (Sprint's cost).
-                        self.stats.add_disk_write(kept.len() as u64 * 8);
-                        self.stats.add_write_pass();
-                        pruned.insert(j, kept);
-                    }
+                for (j, kept) in cols.into_iter().zip(kept_lists) {
+                    // Pruning is a write pass (Sprint's cost).
+                    self.stats.add_disk_write(kept.len() as u64 * 8);
+                    self.stats.add_write_pass();
+                    pruned.insert(j, kept);
                 }
                 state.pruned_sorted = Some(pruned);
             }
@@ -554,59 +611,34 @@ pub fn apply_update_to_class_list(cl: &ClassList, u: &LevelUpdate) -> Result<Cla
     Ok(new_cl)
 }
 
-/// Build a splitter's in-memory storage from a full dataset and its
+/// Build a splitter's in-memory store from a full dataset and its
 /// column assignment (presorting numerical columns on the way — the
 /// dataset-preparation phase of §2.1).
-pub fn memory_storage_for(ds: &crate::data::Dataset, columns: &[usize]) -> SplitterStorage {
-    let mut cols = BTreeMap::new();
-    let mut sorted = BTreeMap::new();
-    for &j in columns {
-        let col = ds.column(j).clone();
-        if col.is_numerical() {
-            sorted.insert(j, col.presort());
-        }
-        cols.insert(j, col);
-    }
-    SplitterStorage::Memory {
-        columns: cols,
-        sorted,
-    }
+pub fn memory_storage_for(ds: &crate::data::Dataset, columns: &[usize]) -> Arc<dyn ColumnStore> {
+    crate::data::store::mem_store_for(ds, columns)
 }
 
-/// Write a splitter's columns to disk files under `dir` and return the
-/// Disk storage description (used by the disk-mode benches/tests).
+/// Write a splitter's columns to DRFC v1 files under `dir` and return
+/// the disk store (used by the disk-mode benches/tests).
 pub fn disk_storage_for(
     ds: &crate::data::Dataset,
     columns: &[usize],
     dir: &std::path::Path,
     stats: IoStats,
-) -> Result<SplitterStorage> {
-    let mut files = BTreeMap::new();
-    for &j in columns {
-        let raw = dir.join(format!("col_{j}.drfc"));
-        let ctype = ds.schema().columns[j].ctype;
-        let mut sorted_path = None;
-        match ds.column(j) {
-            Column::Numerical(vals) => {
-                disk::write_numerical(&raw, vals, stats.clone())?;
-                let sp = dir.join(format!("col_{j}.sorted.drfc"));
-                disk::write_sorted(&sp, &ds.column(j).presort(), stats.clone())?;
-                sorted_path = Some(sp);
-            }
-            Column::Categorical { values, .. } => {
-                disk::write_categorical(&raw, values, stats.clone())?;
-            }
-        }
-        files.insert(
-            j,
-            ColumnFiles {
-                raw,
-                sorted: sorted_path,
-                ctype,
-            },
-        );
-    }
-    Ok(SplitterStorage::Disk { files })
+) -> Result<Arc<dyn ColumnStore>> {
+    crate::data::store::disk_store_for(ds, columns, dir, stats)
+}
+
+/// Write a splitter's columns to chunked DRFC v2 files under `dir` and
+/// return the disk store.
+pub fn disk_v2_storage_for(
+    ds: &crate::data::Dataset,
+    columns: &[usize],
+    dir: &std::path::Path,
+    chunk_rows: u32,
+    stats: IoStats,
+) -> Result<Arc<dyn ColumnStore>> {
+    crate::data::store::disk_v2_store_for(ds, columns, dir, chunk_rows, stats)
 }
 
 #[cfg(test)]
@@ -624,6 +656,7 @@ mod tests {
             num_candidates: 8,
             score_kind: ScoreKind::Gini,
             prune: PruneMode::Never,
+            scan_threads: 1,
         }
     }
 
@@ -669,6 +702,65 @@ mod tests {
         // panic, and that any candidate has positive gain.
         if let Some(c) = &p.splits[0] {
             assert!(c.gain > 0.0);
+        }
+    }
+
+    #[test]
+    fn parallel_scans_match_serial() {
+        // The scan pool must never change any RPC answer: same query,
+        // scan_threads 1 vs 4, memory and disk stores.
+        let ds = SyntheticSpec::new(Family::Majority { informative: 3 }, 600, 6, 9).generate();
+        let labels = Arc::new(ds.labels().to_vec());
+        let dir = crate::util::tempdir().unwrap();
+        let q = SupersplitQuery {
+            tree: 0,
+            depth: 0,
+            leaves: vec![LeafInfo {
+                node_id: 0,
+                totals: ds.class_counts(),
+            }],
+            assigned_columns: vec![0, 1, 2, 3, 4, 5],
+        };
+        let eq = EvalQuery {
+            tree: 0,
+            depth: 0,
+            conditions: vec![(
+                1,
+                Condition::NumLe {
+                    feature: 2,
+                    threshold: 0.5,
+                },
+            )],
+        };
+        let mut answers = Vec::new();
+        for threads in [1usize, 4] {
+            for disk in [false, true] {
+                let storage = if disk {
+                    let sub = dir.path().join(format!("s{threads}_{disk}"));
+                    std::fs::create_dir_all(&sub).unwrap();
+                    disk_storage_for(&ds, &[0, 1, 2, 3, 4, 5], &sub, IoStats::new()).unwrap()
+                } else {
+                    memory_storage_for(&ds, &[0, 1, 2, 3, 4, 5])
+                };
+                let cfg = SplitterConfig {
+                    scan_threads: threads,
+                    ..test_cfg()
+                };
+                let s = SplitterCore::new(
+                    0,
+                    ds.schema().clone(),
+                    storage,
+                    labels.clone(),
+                    cfg,
+                    IoStats::new(),
+                );
+                s.start_tree(0);
+                answers.push((s.find_splits(&q).unwrap(), s.eval_conditions(&eq).unwrap()));
+            }
+        }
+        for a in &answers[1..] {
+            assert_eq!(answers[0].0, a.0, "find_splits must be scan-invariant");
+            assert_eq!(answers[0].1, a.1, "eval_conditions must be scan-invariant");
         }
     }
 
@@ -792,11 +884,11 @@ mod tests {
             stats.clone(),
         );
         assert_eq!(s.columns_owned(), vec![0, 2]);
-        let col = s.raw_column(0).unwrap();
+        let col = s.storage.read_raw(0).unwrap();
         assert_eq!(col.as_numerical(), ds.column(0).as_numerical());
-        let sorted = s.sorted_entries(2).unwrap();
-        assert_eq!(sorted.as_ref(), ds.column(2).presort().as_slice());
+        let sorted = s.storage.read_sorted(2).unwrap();
+        assert_eq!(sorted.as_slice(), ds.column(2).presort().as_slice());
         assert!(stats.disk_read_bytes() > 0);
-        assert!(s.raw_column(1).is_err(), "column 1 not owned");
+        assert!(s.storage.read_raw(1).is_err(), "column 1 not owned");
     }
 }

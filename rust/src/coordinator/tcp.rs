@@ -287,6 +287,7 @@ mod tests {
             num_candidates: params.candidates_for(ds.num_features()),
             score_kind: ScoreKind::Gini,
             prune: PruneMode::Never,
+            scan_threads: 1,
         };
         let make_cores = || -> Vec<Arc<SplitterCore>> {
             (0..topology.num_splitters())
@@ -336,6 +337,7 @@ mod tests {
             num_candidates: 4,
             score_kind: ScoreKind::Gini,
             prune: PruneMode::Never,
+            scan_threads: 1,
         };
         let core = Arc::new(SplitterCore::new(
             0,

@@ -149,6 +149,7 @@ mod tests {
             num_candidates: 4,
             score_kind: ScoreKind::Gini,
             prune: PruneMode::Never,
+            scan_threads: 1,
         };
         let splitters = (0..2)
             .map(|s| {

@@ -13,133 +13,13 @@ use super::messages::{
 use crate::splits::SplitCandidate;
 use crate::tree::{CategorySet, Condition};
 use crate::Result;
-use anyhow::{bail, ensure, Context};
+use anyhow::{bail, Context};
 
-/// Growable little-endian writer.
-#[derive(Debug, Default)]
-pub struct Writer {
-    buf: Vec<u8>,
-}
-
-impl Writer {
-    pub fn new() -> Self {
-        Self::default()
-    }
-
-    pub fn into_bytes(self) -> Vec<u8> {
-        self.buf
-    }
-
-    pub fn u8(&mut self, v: u8) {
-        self.buf.push(v);
-    }
-
-    pub fn u32(&mut self, v: u32) {
-        self.buf.extend_from_slice(&v.to_le_bytes());
-    }
-
-    pub fn u64(&mut self, v: u64) {
-        self.buf.extend_from_slice(&v.to_le_bytes());
-    }
-
-    pub fn f32(&mut self, v: f32) {
-        self.buf.extend_from_slice(&v.to_le_bytes());
-    }
-
-    pub fn f64(&mut self, v: f64) {
-        self.buf.extend_from_slice(&v.to_le_bytes());
-    }
-
-    pub fn usize_u32(&mut self, v: usize) {
-        self.u32(v as u32);
-    }
-
-    pub fn u64_slice(&mut self, v: &[u64]) {
-        self.usize_u32(v.len());
-        for &x in v {
-            self.u64(x);
-        }
-    }
-
-    pub fn bool(&mut self, v: bool) {
-        self.u8(v as u8);
-    }
-}
-
-/// Cursor-based reader with explicit errors.
-pub struct Reader<'a> {
-    buf: &'a [u8],
-    pos: usize,
-}
-
-impl<'a> Reader<'a> {
-    pub fn new(buf: &'a [u8]) -> Self {
-        Self { buf, pos: 0 }
-    }
-
-    pub fn done(&self) -> Result<()> {
-        ensure!(
-            self.pos == self.buf.len(),
-            "trailing {} bytes in frame",
-            self.buf.len() - self.pos
-        );
-        Ok(())
-    }
-
-    /// Bytes left in the frame. Decoders facing untrusted peers use
-    /// this to bound length prefixes by element size before allocating
-    /// (see `serve::wire`).
-    pub fn remaining(&self) -> usize {
-        self.buf.len() - self.pos
-    }
-
-    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
-        ensure!(self.pos + n <= self.buf.len(), "frame truncated");
-        let s = &self.buf[self.pos..self.pos + n];
-        self.pos += n;
-        Ok(s)
-    }
-
-    pub fn u8(&mut self) -> Result<u8> {
-        Ok(self.take(1)?[0])
-    }
-
-    pub fn u32(&mut self) -> Result<u32> {
-        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
-    }
-
-    pub fn u64(&mut self) -> Result<u64> {
-        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
-    }
-
-    pub fn f32(&mut self) -> Result<f32> {
-        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
-    }
-
-    pub fn f64(&mut self) -> Result<f64> {
-        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
-    }
-
-    pub fn len_u32(&mut self) -> Result<usize> {
-        let n = self.u32()? as usize;
-        // Cheap sanity bound: even 1-byte elements cannot outnumber the
-        // remaining frame bytes.
-        ensure!(
-            n <= self.buf.len().saturating_sub(self.pos) * 8 + 8,
-            "length prefix {n} exceeds frame"
-        );
-        Ok(n)
-    }
-
-    pub fn u64_vec(&mut self) -> Result<Vec<u64>> {
-        let n = self.len_u32()?;
-        (0..n).map(|_| self.u64()).collect()
-    }
-
-    pub fn bool(&mut self) -> Result<bool> {
-        Ok(self.u8()? != 0)
-    }
-}
+// The writer/reader scalars and frame helpers are the shared wire
+// substrate ([`crate::util::wire`]); re-exported here because this
+// module historically defined them and the TCP engine + serving codec
+// import them from this path.
+pub use crate::util::wire::{read_frame, write_frame, Reader, Writer};
 
 // ---------------------------------------------------------------------
 // Message encodings
@@ -421,11 +301,7 @@ pub fn encode_response(resp: &Response) -> Vec<u8> {
         }
         Response::Err(msg) => {
             w.u8(4);
-            let bytes = msg.as_bytes();
-            w.usize_u32(bytes.len());
-            for &b in bytes {
-                w.u8(b);
-            }
+            w.str(msg);
         }
     }
     w.into_bytes()
@@ -456,34 +332,11 @@ pub fn decode_response(buf: &[u8]) -> Result<Response> {
                 .collect::<Result<_>>()?;
             Response::Evals(EvalResult { bitmaps })
         }
-        4 => {
-            let n = r.len_u32()?;
-            let bytes: Vec<u8> = (0..n).map(|_| r.u8()).collect::<Result<_>>()?;
-            Response::Err(String::from_utf8(bytes)?)
-        }
+        4 => Response::Err(r.str()?),
         t => bail!("bad response tag {t}"),
     };
     r.done()?;
     Ok(resp)
-}
-
-/// Write one length-prefixed frame.
-pub fn write_frame(stream: &mut impl std::io::Write, body: &[u8]) -> Result<()> {
-    stream.write_all(&(body.len() as u32).to_le_bytes())?;
-    stream.write_all(body)?;
-    stream.flush()?;
-    Ok(())
-}
-
-/// Read one length-prefixed frame (cap: 256 MiB).
-pub fn read_frame(stream: &mut impl std::io::Read) -> Result<Vec<u8>> {
-    let mut len_bytes = [0u8; 4];
-    stream.read_exact(&mut len_bytes)?;
-    let len = u32::from_le_bytes(len_bytes) as usize;
-    ensure!(len <= (1 << 28), "frame too large: {len}");
-    let mut body = vec![0u8; len];
-    stream.read_exact(&mut body)?;
-    Ok(body)
 }
 
 #[cfg(test)]
@@ -613,14 +466,4 @@ mod tests {
         assert!(decode_request(&bytes).is_err());
     }
 
-    #[test]
-    fn frame_io_roundtrip() {
-        let mut buf = Vec::new();
-        write_frame(&mut buf, b"hello").unwrap();
-        write_frame(&mut buf, b"").unwrap();
-        let mut cursor = std::io::Cursor::new(buf);
-        assert_eq!(read_frame(&mut cursor).unwrap(), b"hello");
-        assert_eq!(read_frame(&mut cursor).unwrap(), b"");
-        assert!(read_frame(&mut cursor).is_err(), "EOF");
-    }
 }

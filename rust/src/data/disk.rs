@@ -13,6 +13,23 @@
 //! * presorted numerical column (Alg. 1's `q(j)`): `(f32 value, u32
 //!   sample)` pairs in value order — produced by the presorting phase
 //!   ([`super::sort`]).
+//!
+//! Two container versions:
+//! * **DRFC v1** — header (magic, version, kind, row count) followed by
+//!   one monolithic record stream;
+//! * **DRFC v2** — the v1 header fields plus a **chunk table**: the
+//!   per-chunk record counts, written up front. A reader can therefore
+//!   resume or stop a pass at any chunk boundary without scanning to
+//!   the end of the file — the property the chunked
+//!   [`super::store::ColumnStore`] scan path and SPRINT-style partial
+//!   passes rely on.
+//!
+//! Readers of either version expose **bounded-buffer chunk reads**
+//! (`next_chunk_*`): at most `max_records` records are materialized per
+//! call, so a pass over an arbitrarily large column runs in constant
+//! memory. Byte/pass accounting is identical to the historical
+//! whole-column reads: the header is charged at open, each record
+//! exactly once as its chunk is read, and one read pass per full scan.
 
 use super::column::SortedEntry;
 use super::io_stats::IoStats;
@@ -24,8 +41,14 @@ use std::path::{Path, PathBuf};
 
 /// File magic: "DRFC" (DRF Column).
 const MAGIC: [u8; 4] = *b"DRFC";
-/// Format version.
-const VERSION: u32 = 1;
+/// Monolithic format version.
+const VERSION_V1: u32 = 1;
+/// Chunk-table format version.
+const VERSION_V2: u32 = 2;
+
+/// Default records per chunk for bounded-buffer scans and v2 files
+/// (64Ki records = 256 KiB raw / 512 KiB sorted per chunk buffer).
+pub const DEFAULT_CHUNK_ROWS: usize = 64 * 1024;
 
 /// Kind tag stored in the header.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -54,21 +77,77 @@ impl FileKind {
     }
 }
 
+/// Container layout of a column file.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Layout {
+    /// DRFC v1: one monolithic record stream.
+    V1,
+    /// DRFC v2: per-chunk record counts in the header; `chunk_rows`
+    /// records per chunk (the last chunk may be short).
+    V2 { chunk_rows: u32 },
+}
+
+/// The per-chunk record counts of a v2 file with `rows` records cut
+/// into `chunk_rows`-record chunks. Callers validate `chunk_rows >= 1`
+/// ([`write_header`] rejects 0 with an error).
+fn chunk_counts(rows: u64, chunk_rows: u32) -> Vec<u32> {
+    debug_assert!(chunk_rows >= 1);
+    let mut counts = Vec::new();
+    let mut left = rows;
+    while left > 0 {
+        let c = left.min(chunk_rows as u64) as u32;
+        counts.push(c);
+        left -= c as u64;
+    }
+    counts
+}
+
 /// Parsed column-file header.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct Header {
     pub kind: FileKind,
     pub rows: u64,
+    pub version: u32,
+    /// v2 chunk table (empty for v1 files).
+    pub chunks: Vec<u32>,
 }
 
-const HEADER_BYTES: u64 = 4 + 4 + 4 + 8; // magic, version, kind, rows
+impl Header {
+    /// Serialized size of this header in bytes.
+    pub fn nbytes(&self) -> u64 {
+        match self.version {
+            VERSION_V1 => HEADER_BYTES_V1,
+            _ => HEADER_BYTES_V1 + 4 + 4 * self.chunks.len() as u64,
+        }
+    }
+}
 
-fn write_header(w: &mut impl Write, kind: FileKind, rows: u64) -> Result<()> {
+const HEADER_BYTES_V1: u64 = 4 + 4 + 4 + 8; // magic, version, kind, rows
+
+fn write_header(w: &mut impl Write, kind: FileKind, rows: u64, layout: Layout) -> Result<Header> {
+    let (version, chunks) = match layout {
+        Layout::V1 => (VERSION_V1, Vec::new()),
+        Layout::V2 { chunk_rows } => {
+            ensure!(chunk_rows >= 1, "v2 layout needs chunk_rows >= 1");
+            (VERSION_V2, chunk_counts(rows, chunk_rows))
+        }
+    };
     w.write_all(&MAGIC)?;
-    w.write_all(&VERSION.to_le_bytes())?;
+    w.write_all(&version.to_le_bytes())?;
     w.write_all(&(kind as u32).to_le_bytes())?;
     w.write_all(&rows.to_le_bytes())?;
-    Ok(())
+    if version == VERSION_V2 {
+        w.write_all(&(chunks.len() as u32).to_le_bytes())?;
+        for &c in &chunks {
+            w.write_all(&c.to_le_bytes())?;
+        }
+    }
+    Ok(Header {
+        kind,
+        rows,
+        version,
+        chunks,
+    })
 }
 
 fn read_header(r: &mut impl Read) -> Result<Header> {
@@ -78,13 +157,49 @@ fn read_header(r: &mut impl Read) -> Result<Header> {
     let mut b4 = [0u8; 4];
     r.read_exact(&mut b4)?;
     let version = u32::from_le_bytes(b4);
-    ensure!(version == VERSION, "unsupported column file version {version}");
+    ensure!(
+        version == VERSION_V1 || version == VERSION_V2,
+        "unsupported column file version {version}"
+    );
     r.read_exact(&mut b4)?;
     let kind = FileKind::from_u32(u32::from_le_bytes(b4))?;
     let mut b8 = [0u8; 8];
     r.read_exact(&mut b8)?;
     let rows = u64::from_le_bytes(b8);
-    Ok(Header { kind, rows })
+    let chunks = if version == VERSION_V2 {
+        r.read_exact(&mut b4)?;
+        let n = u32::from_le_bytes(b4) as usize;
+        // Each table entry describes >= 1 record, so the row count
+        // bounds the table size — reject forged counts before
+        // allocating.
+        ensure!(
+            n as u64 <= rows,
+            "chunk table claims {n} chunks for {rows} rows"
+        );
+        let mut chunks = Vec::with_capacity(n);
+        for _ in 0..n {
+            r.read_exact(&mut b4)?;
+            chunks.push(u32::from_le_bytes(b4));
+        }
+        ensure!(
+            chunks.iter().map(|&c| c as u64).sum::<u64>() == rows,
+            "chunk table sums to {} records, header declares {rows}",
+            chunks.iter().map(|&c| c as u64).sum::<u64>()
+        );
+        ensure!(
+            chunks.iter().all(|&c| c > 0),
+            "chunk table contains an empty chunk"
+        );
+        chunks
+    } else {
+        Vec::new()
+    };
+    Ok(Header {
+        kind,
+        rows,
+        version,
+        chunks,
+    })
 }
 
 /// Streaming writer for a column file.
@@ -98,12 +213,23 @@ pub struct ColumnWriter {
 }
 
 impl ColumnWriter {
-    /// Create a file declaring `rows` records of `kind`.
+    /// Create a v1 file declaring `rows` records of `kind`.
     pub fn create(path: &Path, kind: FileKind, rows: u64, stats: IoStats) -> Result<Self> {
+        Self::create_with(path, kind, rows, Layout::V1, stats)
+    }
+
+    /// Create a file declaring `rows` records of `kind` in `layout`.
+    pub fn create_with(
+        path: &Path,
+        kind: FileKind,
+        rows: u64,
+        layout: Layout,
+        stats: IoStats,
+    ) -> Result<Self> {
         let f = File::create(path).with_context(|| format!("creating {}", path.display()))?;
         let mut w = BufWriter::new(f);
-        write_header(&mut w, kind, rows)?;
-        stats.add_disk_write(HEADER_BYTES);
+        let header = write_header(&mut w, kind, rows, layout)?;
+        stats.add_disk_write(header.nbytes());
         Ok(Self {
             w,
             kind,
@@ -155,30 +281,58 @@ impl ColumnWriter {
     }
 }
 
-/// Buffered sequential reader over a column file.
+/// Buffered sequential reader over a column file (either version).
 pub struct ColumnReader {
     r: BufReader<File>,
     header: Header,
     read: u64,
     stats: IoStats,
+    /// Scratch byte buffer for bounded chunk reads.
+    scratch: Vec<u8>,
+    /// v2 chunk cursor: index of the chunk the read position sits in,
+    /// and the cumulative record count through that chunk (makes
+    /// [`Self::next_chunk_records`] amortized O(1)).
+    chunk_idx: usize,
+    chunk_end: u64,
 }
 
 impl ColumnReader {
     pub fn open(path: &Path, stats: IoStats) -> Result<Self> {
         let f = File::open(path).with_context(|| format!("opening {}", path.display()))?;
+        let file_len = f.metadata()?.len();
         let mut r = BufReader::with_capacity(1 << 20, f);
-        let header = read_header(&mut r)?;
-        stats.add_disk_read(HEADER_BYTES);
+        let header = read_header(&mut r)
+            .with_context(|| format!("reading header of {}", path.display()))?;
+        // Reject truncated files up front: a payload shorter than the
+        // declared row count would otherwise surface later as a
+        // confusing mid-scan EOF deep inside a training pass.
+        // (Saturating: a forged astronomic row count must fail the
+        // check, not overflow it.)
+        let expected = header
+            .nbytes()
+            .saturating_add(header.rows.saturating_mul(header.kind.record_bytes() as u64));
+        ensure!(
+            file_len >= expected,
+            "{}: truncated column file — header declares {} records \
+             ({expected} bytes incl. header) but the file has {file_len} bytes",
+            path.display(),
+            header.rows
+        );
+        stats.add_disk_read(header.nbytes());
+        let chunk_end = header.chunks.first().copied().unwrap_or(0) as u64;
         Ok(Self {
             r,
             header,
             read: 0,
             stats,
+            scratch: Vec::new(),
+            chunk_idx: 0,
+            chunk_end,
         })
     }
 
-    pub fn header(&self) -> Header {
-        self.header
+    pub fn header(&self) -> &Header {
+        &self.header
     }
 
     pub fn remaining(&self) -> u64 {
@@ -218,11 +372,116 @@ impl ColumnReader {
         })
     }
 
+    /// Read up to `max_records` records' worth of raw bytes into the
+    /// scratch buffer; returns the record count (0 = end of column).
+    fn fill_chunk(&mut self, max_records: usize) -> Result<usize> {
+        let n = (self.remaining() as usize).min(max_records);
+        let bytes = n * self.header.kind.record_bytes();
+        self.scratch.resize(bytes, 0);
+        self.r.read_exact(&mut self.scratch)?;
+        self.read += n as u64;
+        self.stats.add_disk_read(bytes as u64);
+        Ok(n)
+    }
+
+    /// Bounded-buffer chunk read: replace `buf` with the next (up to)
+    /// `max_records` f32 records. Returns the record count (0 = EOF).
+    pub fn next_chunk_f32(&mut self, buf: &mut Vec<f32>, max_records: usize) -> Result<usize> {
+        ensure!(self.header.kind == FileKind::Numerical, "layout mismatch");
+        let n = self.fill_chunk(max_records)?;
+        buf.clear();
+        buf.extend(
+            self.scratch
+                .chunks_exact(4)
+                .map(|b| f32::from_le_bytes(b.try_into().unwrap())),
+        );
+        Ok(n)
+    }
+
+    /// Bounded-buffer chunk read of u32 records.
+    pub fn next_chunk_u32(&mut self, buf: &mut Vec<u32>, max_records: usize) -> Result<usize> {
+        ensure!(self.header.kind == FileKind::Categorical, "layout mismatch");
+        let n = self.fill_chunk(max_records)?;
+        buf.clear();
+        buf.extend(
+            self.scratch
+                .chunks_exact(4)
+                .map(|b| u32::from_le_bytes(b.try_into().unwrap())),
+        );
+        Ok(n)
+    }
+
+    /// Bounded-buffer chunk read of sorted entries.
+    pub fn next_chunk_sorted(
+        &mut self,
+        buf: &mut Vec<SortedEntry>,
+        max_records: usize,
+    ) -> Result<usize> {
+        ensure!(
+            self.header.kind == FileKind::SortedNumerical,
+            "layout mismatch"
+        );
+        let n = self.fill_chunk(max_records)?;
+        buf.clear();
+        buf.extend(self.scratch.chunks_exact(8).map(|b| SortedEntry {
+            value: f32::from_le_bytes(b[0..4].try_into().unwrap()),
+            sample: u32::from_le_bytes(b[4..8].try_into().unwrap()),
+        }));
+        Ok(n)
+    }
+
+    /// Chunk sizes of a full pass from the start of the file: the
+    /// file's own chunk table (v2) or `DEFAULT_CHUNK_ROWS` cuts (v1).
+    /// Callers doing a whole-column scan iterate this once instead of
+    /// probing [`Self::next_chunk_records`] per chunk.
+    pub fn chunk_plan(&self) -> Vec<usize> {
+        if self.header.version == VERSION_V2 {
+            self.header.chunks.iter().map(|&c| c as usize).collect()
+        } else {
+            let mut plan = Vec::new();
+            let mut left = self.header.rows as usize;
+            while left > 0 {
+                let c = left.min(DEFAULT_CHUNK_ROWS);
+                plan.push(c);
+                left -= c;
+            }
+            plan
+        }
+    }
+
+    /// Record count of the next chunk of a scan: the file's own chunk
+    /// table entry (v2) or `DEFAULT_CHUNK_ROWS` (v1), clamped to the
+    /// remaining records. Record-granular reads may leave the cursor
+    /// mid-chunk; scans that mix the two APIs just get a short chunk,
+    /// which is harmless. Amortized O(1) across a whole pass.
+    pub fn next_chunk_records(&mut self) -> usize {
+        if self.header.version == VERSION_V2 {
+            while self.chunk_idx < self.header.chunks.len() && self.read >= self.chunk_end {
+                self.chunk_idx += 1;
+                self.chunk_end += self
+                    .header
+                    .chunks
+                    .get(self.chunk_idx)
+                    .copied()
+                    .unwrap_or(0) as u64;
+            }
+            if self.chunk_idx >= self.header.chunks.len() {
+                0
+            } else {
+                (self.chunk_end - self.read) as usize
+            }
+        } else {
+            (self.remaining() as usize).min(DEFAULT_CHUNK_ROWS)
+        }
+    }
+
     /// Read the whole remainder as sorted entries (counts one pass).
     pub fn read_all_sorted(mut self) -> Result<Vec<SortedEntry>> {
         let mut out = Vec::with_capacity(self.remaining() as usize);
+        let mut buf = Vec::new();
         while self.remaining() > 0 {
-            out.push(self.next_sorted()?);
+            self.next_chunk_sorted(&mut buf, DEFAULT_CHUNK_ROWS)?;
+            out.extend_from_slice(&buf);
         }
         self.stats.add_read_pass();
         Ok(out)
@@ -231,8 +490,10 @@ impl ColumnReader {
     /// Read the whole remainder as f32 (counts one pass).
     pub fn read_all_f32(mut self) -> Result<Vec<f32>> {
         let mut out = Vec::with_capacity(self.remaining() as usize);
+        let mut buf = Vec::new();
         while self.remaining() > 0 {
-            out.push(self.next_f32()?);
+            self.next_chunk_f32(&mut buf, DEFAULT_CHUNK_ROWS)?;
+            out.extend_from_slice(&buf);
         }
         self.stats.add_read_pass();
         Ok(out)
@@ -241,15 +502,17 @@ impl ColumnReader {
     /// Read the whole remainder as u32 (counts one pass).
     pub fn read_all_u32(mut self) -> Result<Vec<u32>> {
         let mut out = Vec::with_capacity(self.remaining() as usize);
+        let mut buf = Vec::new();
         while self.remaining() > 0 {
-            out.push(self.next_u32()?);
+            self.next_chunk_u32(&mut buf, DEFAULT_CHUNK_ROWS)?;
+            out.extend_from_slice(&buf);
         }
         self.stats.add_read_pass();
         Ok(out)
     }
 
     /// Mark the end of a logical pass (when the caller reads record by
-    /// record instead of via `read_all_*`).
+    /// record or chunk by chunk instead of via `read_all_*`).
     pub fn end_pass(&self) {
         self.stats.add_read_pass();
     }
@@ -257,7 +520,23 @@ impl ColumnReader {
 
 /// Write a full numerical column to `path`.
 pub fn write_numerical(path: &Path, values: &[f32], stats: IoStats) -> Result<()> {
-    let mut w = ColumnWriter::create(path, FileKind::Numerical, values.len() as u64, stats)?;
+    write_numerical_with(path, values, Layout::V1, stats)
+}
+
+/// Write a full numerical column to `path` in `layout`.
+pub fn write_numerical_with(
+    path: &Path,
+    values: &[f32],
+    layout: Layout,
+    stats: IoStats,
+) -> Result<()> {
+    let mut w = ColumnWriter::create_with(
+        path,
+        FileKind::Numerical,
+        values.len() as u64,
+        layout,
+        stats,
+    )?;
     for &v in values {
         w.write_f32(v)?;
     }
@@ -266,7 +545,23 @@ pub fn write_numerical(path: &Path, values: &[f32], stats: IoStats) -> Result<()
 
 /// Write a full categorical column to `path`.
 pub fn write_categorical(path: &Path, values: &[u32], stats: IoStats) -> Result<()> {
-    let mut w = ColumnWriter::create(path, FileKind::Categorical, values.len() as u64, stats)?;
+    write_categorical_with(path, values, Layout::V1, stats)
+}
+
+/// Write a full categorical column to `path` in `layout`.
+pub fn write_categorical_with(
+    path: &Path,
+    values: &[u32],
+    layout: Layout,
+    stats: IoStats,
+) -> Result<()> {
+    let mut w = ColumnWriter::create_with(
+        path,
+        FileKind::Categorical,
+        values.len() as u64,
+        layout,
+        stats,
+    )?;
     for &v in values {
         w.write_u32(v)?;
     }
@@ -281,10 +576,21 @@ pub fn write_categorical_raw(path: &Path, values: &[u32], stats: IoStats) -> Res
 
 /// Write a presorted numerical column to `path`.
 pub fn write_sorted(path: &Path, entries: &[SortedEntry], stats: IoStats) -> Result<()> {
-    let mut w = ColumnWriter::create(
+    write_sorted_with(path, entries, Layout::V1, stats)
+}
+
+/// Write a presorted numerical column to `path` in `layout`.
+pub fn write_sorted_with(
+    path: &Path,
+    entries: &[SortedEntry],
+    layout: Layout,
+    stats: IoStats,
+) -> Result<()> {
+    let mut w = ColumnWriter::create_with(
         path,
         FileKind::SortedNumerical,
         entries.len() as u64,
+        layout,
         stats,
     )?;
     for &e in entries {
@@ -340,6 +646,83 @@ mod tests {
     }
 
     #[test]
+    fn roundtrip_v2_with_chunk_table() {
+        let dir = crate::util::tempdir().unwrap();
+        let path = dir.path().join("col.v2.drfc");
+        let stats = IoStats::new();
+        let vals: Vec<f32> = (0..10).map(|i| i as f32).collect();
+        write_numerical_with(&path, &vals, Layout::V2 { chunk_rows: 4 }, stats.clone()).unwrap();
+        let mut r = ColumnReader::open(&path, stats.clone()).unwrap();
+        assert_eq!(r.header().version, 2);
+        assert_eq!(r.header().chunks, vec![4, 4, 2]);
+        // The reader announces the file's own chunk boundaries.
+        let mut buf = Vec::new();
+        let mut got = Vec::new();
+        let mut sizes = Vec::new();
+        loop {
+            let want = r.next_chunk_records();
+            if want == 0 {
+                break;
+            }
+            let n = r.next_chunk_f32(&mut buf, want).unwrap();
+            sizes.push(n);
+            got.extend_from_slice(&buf);
+        }
+        r.end_pass();
+        assert_eq!(sizes, vec![4, 4, 2]);
+        assert_eq!(got, vals);
+        // Bytes: header (20 + 4 + 3*4 = 36) + 40 payload, one pass.
+        assert_eq!(stats.disk_read_bytes(), 36 + 40);
+        assert_eq!(stats.disk_read_passes(), 1);
+    }
+
+    #[test]
+    fn v2_pass_can_stop_early() {
+        let dir = crate::util::tempdir().unwrap();
+        let path = dir.path().join("cat.v2.drfc");
+        let stats = IoStats::new();
+        let vals: Vec<u32> = (0..100).collect();
+        write_categorical_with(&path, &vals, Layout::V2 { chunk_rows: 32 }, stats.clone())
+            .unwrap();
+        let mut r = ColumnReader::open(&path, stats.clone()).unwrap();
+        let mut buf = Vec::new();
+        // Read only the first chunk; the tail is never touched.
+        let want = r.next_chunk_records();
+        let n = r.next_chunk_u32(&mut buf, want).unwrap();
+        assert_eq!(n, 32);
+        assert_eq!(buf, (0..32).collect::<Vec<u32>>());
+        assert_eq!(r.remaining(), 68);
+        // Only header + one chunk charged.
+        let header_bytes = r.header().nbytes();
+        assert_eq!(stats.disk_read_bytes(), header_bytes + 32 * 4);
+    }
+
+    #[test]
+    fn chunked_reads_match_record_reads() {
+        let dir = crate::util::tempdir().unwrap();
+        let path = dir.path().join("s.drfc");
+        let stats = IoStats::new();
+        let entries: Vec<SortedEntry> = (0..1000)
+            .map(|i| SortedEntry {
+                value: (i % 37) as f32,
+                sample: i as u32,
+            })
+            .collect();
+        write_sorted(&path, &entries, stats.clone()).unwrap();
+        let mut r = ColumnReader::open(&path, stats.clone()).unwrap();
+        let mut buf = Vec::new();
+        let mut got = Vec::new();
+        while r.next_chunk_sorted(&mut buf, 123).unwrap() > 0 {
+            got.extend_from_slice(&buf);
+        }
+        r.end_pass();
+        assert_eq!(got, entries);
+        // Byte totals identical to a record-by-record pass.
+        assert_eq!(stats.disk_read_bytes(), 20 + 8 * 1000);
+        assert_eq!(stats.disk_read_passes(), 1);
+    }
+
+    #[test]
     fn layout_mismatch_rejected() {
         let dir = crate::util::tempdir().unwrap();
         let path = dir.path().join("col.drfc");
@@ -347,6 +730,7 @@ mod tests {
         write_numerical(&path, &[1.0], stats.clone()).unwrap();
         let mut r = ColumnReader::open(&path, stats).unwrap();
         assert!(r.next_u32().is_err());
+        assert!(r.next_chunk_u32(&mut Vec::new(), 8).is_err());
     }
 
     #[test]
@@ -357,6 +741,58 @@ mod tests {
         let mut w = ColumnWriter::create(&path, FileKind::Numerical, 3, stats).unwrap();
         w.write_f32(1.0).unwrap();
         assert!(w.finish().is_err(), "declared 3 rows but wrote 1");
+    }
+
+    #[test]
+    fn truncated_payload_rejected_at_open() {
+        let dir = crate::util::tempdir().unwrap();
+        let path = dir.path().join("col.drfc");
+        let stats = IoStats::new();
+        let vals = vec![1.0f32, 2.0, 3.0, 4.0];
+        write_numerical(&path, &vals, stats.clone()).unwrap();
+        // Chop two records off the tail; the header still claims 4.
+        let full = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &full[..full.len() - 8]).unwrap();
+        let err = ColumnReader::open(&path, stats.clone()).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("truncated column file"),
+            "unexpected error: {err:#}"
+        );
+        // Same for v2 (header is larger, check survives the table).
+        let path2 = dir.path().join("col.v2.drfc");
+        write_numerical_with(&path2, &vals, Layout::V2 { chunk_rows: 2 }, stats.clone())
+            .unwrap();
+        let full = std::fs::read(&path2).unwrap();
+        std::fs::write(&path2, &full[..full.len() - 4]).unwrap();
+        assert!(ColumnReader::open(&path2, stats).is_err());
+    }
+
+    #[test]
+    fn zero_chunk_rows_rejected() {
+        let dir = crate::util::tempdir().unwrap();
+        let path = dir.path().join("z.drfc");
+        let err = write_numerical_with(
+            &path,
+            &[1.0, 2.0],
+            Layout::V2 { chunk_rows: 0 },
+            IoStats::new(),
+        );
+        assert!(err.is_err(), "chunk_rows = 0 must be an error, not a panic");
+    }
+
+    #[test]
+    fn corrupt_chunk_table_rejected() {
+        let dir = crate::util::tempdir().unwrap();
+        let path = dir.path().join("c.v2.drfc");
+        let stats = IoStats::new();
+        write_categorical_with(&path, &[1, 2, 3], Layout::V2 { chunk_rows: 2 }, stats.clone())
+            .unwrap();
+        // Flip one chunk count so the table no longer sums to rows.
+        let mut bytes = std::fs::read(&path).unwrap();
+        // Layout: magic(4) version(4) kind(4) rows(8) nchunks(4) c0(4)…
+        bytes[24] = 3; // first chunk count 2 -> 3
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(ColumnReader::open(&path, stats).is_err());
     }
 
     #[test]

@@ -10,8 +10,14 @@
 //! * [`mod@column`] — typed columnar arrays + presorted views;
 //! * [`dataset`] — an owned columnar dataset (the unit the generator
 //!   produces and the topology shards);
-//! * [`disk`] — a paged binary column-file format with sequential
-//!   readers/writers, instrumented by [`io_stats`];
+//! * [`disk`] — the DRFC binary column-file format (v1 monolithic, v2
+//!   chunk-tabled) with bounded-buffer sequential readers/writers,
+//!   instrumented by [`io_stats`];
+//! * [`store`] — the **[`store::ColumnStore`]** abstraction: every
+//!   splitter scan is a chunk-granular sequential pass over one of its
+//!   backends ([`store::MemStore`], [`store::DiskStore`],
+//!   [`store::DiskV2Store`]), plus [`store::run_scans`] for bounded
+//!   intra-splitter scan parallelism;
 //! * [`sort`] — in-memory and external (k-way merge) presorting of
 //!   numerical columns;
 //! * [`synthetic`] — the paper's artificial dataset families plus the
@@ -30,3 +36,4 @@ pub mod synthetic;
 pub use column::{Column, SortedEntry};
 pub use dataset::Dataset;
 pub use schema::{ColumnSpec, ColumnType, Schema};
+pub use store::{ColumnStore, DiskStore, DiskV2Store, MemStore, RawChunk};

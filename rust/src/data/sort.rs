@@ -14,7 +14,7 @@
 //!   Table 1 get measured.
 
 use super::column::{Column, SortedEntry};
-use super::disk::{write_sorted, ColumnReader, ColumnWriter, FileKind};
+use super::disk::{write_sorted_with, ColumnReader, ColumnWriter, FileKind, Layout};
 use super::io_stats::IoStats;
 use crate::Result;
 use std::cmp::Ordering;
@@ -43,6 +43,9 @@ pub struct ExternalSorter {
     spill_dir: PathBuf,
     /// Maximum entries held in memory at once.
     run_capacity: usize,
+    /// Container layout of the **final** output file (spill runs are
+    /// always v1 — they are deleted after the merge).
+    out_layout: Layout,
     stats: IoStats,
 }
 
@@ -53,8 +56,16 @@ impl ExternalSorter {
         Self {
             spill_dir: spill_dir.to_path_buf(),
             run_capacity,
+            out_layout: Layout::V1,
             stats,
         }
+    }
+
+    /// Emit the final presorted file in `layout` (e.g. the chunk-tabled
+    /// DRFC v2 used by [`super::store::DiskV2Store`]).
+    pub fn with_output_layout(mut self, layout: Layout) -> Self {
+        self.out_layout = layout;
+        self
     }
 
     /// Sort `values` (row order) into a presorted file at `out`.
@@ -89,16 +100,16 @@ impl ExternalSorter {
             buf.sort_by(entry_cmp);
             if runs.is_empty() && entries.peek().is_none() {
                 // Single run: write final output directly.
-                write_sorted(out, &buf, self.stats.clone())?;
+                write_sorted_with(out, &buf, self.out_layout, self.stats.clone())?;
                 return Ok(1);
             }
             let run_path = self.spill_dir.join(format!("run_{}.drfc", runs.len()));
-            write_sorted(&run_path, &buf, self.stats.clone())?;
+            write_sorted_with(&run_path, &buf, Layout::V1, self.stats.clone())?;
             runs.push(run_path);
         }
         if runs.is_empty() {
             // Empty input.
-            write_sorted(out, &[], self.stats.clone())?;
+            write_sorted_with(out, &[], self.out_layout, self.stats.clone())?;
             return Ok(1);
         }
 
@@ -147,10 +158,11 @@ impl ExternalSorter {
                 });
             }
         }
-        let mut w = ColumnWriter::create(
+        let mut w = ColumnWriter::create_with(
             out,
             FileKind::SortedNumerical,
             len as u64,
+            self.out_layout,
             self.stats.clone(),
         )?;
         while let Some(item) = heap.pop() {
@@ -242,6 +254,24 @@ mod tests {
         let got = ColumnReader::open(&out, stats).unwrap().read_all_sorted().unwrap();
         let samples: Vec<u32> = got.iter().map(|e| e.sample).collect();
         assert_eq!(samples, (0..50).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn v2_output_layout_roundtrips() {
+        let dir = crate::util::tempdir().unwrap();
+        let stats = IoStats::new();
+        let mut rng = Xoshiro256pp::new(9);
+        let values: Vec<f32> = (0..3000).map(|_| rng.next_f64() as f32).collect();
+        let expect = presort_in_memory(&Column::Numerical(values.clone()));
+        let sorter = ExternalSorter::new(dir.path(), 500, stats.clone())
+            .with_output_layout(Layout::V2 { chunk_rows: 256 });
+        let out = dir.path().join("v2.drfc");
+        let runs = sorter.sort_column(&values, &out).unwrap();
+        assert!(runs > 1);
+        let r = ColumnReader::open(&out, stats).unwrap();
+        assert_eq!(r.header().version, 2);
+        assert_eq!(r.header().chunks.len(), 3000usize.div_ceil(256));
+        assert_eq!(r.read_all_sorted().unwrap(), expect);
     }
 
     #[test]

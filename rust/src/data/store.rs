@@ -1,26 +1,494 @@
-//! On-disk dataset store: persist a columnar dataset as a directory of
-//! binary column files plus a JSON schema — the "dataset preparation"
-//! output of paper §2.1 (prepare and presort once, train many forests).
+//! The data plane: the [`ColumnStore`] abstraction every splitter scan
+//! runs on, its three backends, and on-disk dataset persistence.
 //!
-//! Layout:
+//! DRF's contract with its storage is narrow (paper §2): a worker reads
+//! its assigned columns **sequentially**, never writes after the
+//! presorting phase, and never does random access. [`ColumnStore`]
+//! captures exactly that contract as **chunk-granular sequential
+//! scans** — a visitor is fed bounded slices of the column, so a pass
+//! over an arbitrarily large column runs in constant memory and any
+//! backend that can produce ordered chunks can plug in:
+//!
+//! * [`MemStore`] — columns (and presorted views) held in RAM; scans
+//!   visit borrowed slices, zero copies, no I/O charged;
+//! * [`DiskStore`] — one DRFC v1 file per column, re-read sequentially
+//!   through a bounded chunk buffer every pass; every byte charged to
+//!   the worker's [`IoStats`] exactly as the Table 1 benches expect;
+//! * [`DiskV2Store`] — DRFC v2 files whose header carries the per-chunk
+//!   record counts ([`disk::Layout::V2`]), so a pass can be resumed or
+//!   stopped at any chunk boundary without reading the tail.
+//!
+//! Because the scan algorithms (Alg. 1 supersplit search, condition
+//! evaluation, SPRINT pruning) are pure left-to-right folds, chunk
+//! boundaries cannot change any result: all three backends produce
+//! bit-identical trees (asserted by `tests/storage_backends.rs`).
+//!
+//! [`run_scans`] is the intra-splitter parallelism substrate: a scoped
+//! worker pool that runs per-column scan jobs concurrently (bounded by
+//! `TrainConfig::scan_threads`) and returns results in deterministic
+//! job order.
+//!
+//! The module also persists whole datasets as a directory of column
+//! files plus a JSON schema — the "dataset preparation" output of paper
+//! §2.1 (prepare and presort once, train many forests):
 //! ```text
 //! <dir>/schema.json          column specs + num_classes + row count
 //! <dir>/labels.drfc          u32 label column
 //! <dir>/col_<j>.drfc         raw column (f32 or u32)
 //! <dir>/col_<j>.sorted.drfc  presorted entries (numerical columns)
 //! ```
-//! Splitters can consume these files directly in `Disk` storage mode;
-//! `load_dataset` materializes the whole thing for in-memory work.
 
-use super::column::Column;
+use super::column::{Column, SortedEntry};
 use super::dataset::Dataset;
-use super::disk::{self, ColumnReader};
+use super::disk::{self, ColumnReader, Layout};
 use super::io_stats::IoStats;
 use super::schema::{ColumnSpec, ColumnType, Schema};
 use crate::util::Json;
 use crate::Result;
 use anyhow::{ensure, Context};
-use std::path::Path;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+// ---------------------------------------------------------------------
+// ColumnStore: the chunked scan abstraction
+// ---------------------------------------------------------------------
+
+/// One borrowed chunk of a raw (row-order) column.
+#[derive(Debug, Clone, Copy)]
+pub enum RawChunk<'a> {
+    Numerical(&'a [f32]),
+    Categorical(&'a [u32]),
+}
+
+impl<'a> RawChunk<'a> {
+    pub fn len(&self) -> usize {
+        match self {
+            RawChunk::Numerical(v) => v.len(),
+            RawChunk::Categorical(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Sequential, chunk-granular access to a set of columns — the only
+/// storage interface the splitter knows. Implementations must feed
+/// chunks strictly in order and cover every record exactly once per
+/// scan; chunk sizes are an implementation detail (the fold-style scan
+/// algorithms are invariant to them).
+pub trait ColumnStore: Send + Sync {
+    /// Column indices this store holds, ascending.
+    fn columns(&self) -> Vec<usize>;
+
+    /// Type of column `j` (errors if the store lacks it).
+    fn column_type(&self, j: usize) -> Result<ColumnType>;
+
+    /// One sequential pass over the raw column in row order. The
+    /// visitor receives `(base_row, chunk)`; `base_row` is the row
+    /// index of the chunk's first record.
+    fn scan_raw(
+        &self,
+        j: usize,
+        visit: &mut dyn FnMut(usize, RawChunk<'_>) -> Result<()>,
+    ) -> Result<()>;
+
+    /// One sequential pass over the presorted entries (Alg. 1's `q(j)`)
+    /// of numerical column `j`, in value order.
+    fn scan_sorted(
+        &self,
+        j: usize,
+        visit: &mut dyn FnMut(&[SortedEntry]) -> Result<()>,
+    ) -> Result<()>;
+
+    /// Materialize the whole raw column (one pass). Only for consumers
+    /// that genuinely need the full column at once (e.g. the XLA
+    /// scorer's batched task builder).
+    fn read_raw(&self, j: usize) -> Result<Column> {
+        match self.column_type(j)? {
+            ColumnType::Numerical => {
+                let mut vals = Vec::new();
+                self.scan_raw(j, &mut |_base, chunk| {
+                    match chunk {
+                        RawChunk::Numerical(v) => vals.extend_from_slice(v),
+                        RawChunk::Categorical(_) => anyhow::bail!("chunk/type mismatch"),
+                    }
+                    Ok(())
+                })?;
+                Ok(Column::Numerical(vals))
+            }
+            ColumnType::Categorical { arity } => {
+                let mut vals = Vec::new();
+                self.scan_raw(j, &mut |_base, chunk| {
+                    match chunk {
+                        RawChunk::Categorical(v) => vals.extend_from_slice(v),
+                        RawChunk::Numerical(_) => anyhow::bail!("chunk/type mismatch"),
+                    }
+                    Ok(())
+                })?;
+                Ok(Column::Categorical {
+                    values: vals,
+                    arity,
+                })
+            }
+        }
+    }
+
+    /// Materialize the whole presorted view (one pass).
+    fn read_sorted(&self, j: usize) -> Result<Vec<SortedEntry>> {
+        let mut out = Vec::new();
+        self.scan_sorted(j, &mut |chunk| {
+            out.extend_from_slice(chunk);
+            Ok(())
+        })?;
+        Ok(out)
+    }
+
+    /// Zero-copy borrow of the whole presorted view, for backends that
+    /// hold it resident ([`MemStore`]). `None` means the caller must
+    /// stream ([`Self::scan_sorted`]) or materialize
+    /// ([`Self::read_sorted`]) instead — never an error.
+    fn borrow_sorted(&self, _j: usize) -> Option<&[SortedEntry]> {
+        None
+    }
+}
+
+/// Run `jobs` independent scan jobs on up to `threads` scoped worker
+/// threads and return their results **in job order** (deterministic
+/// regardless of scheduling). `threads <= 1` runs inline. Errors are
+/// propagated; the first job's error (in job order) wins.
+pub fn run_scans<T: Send>(
+    threads: usize,
+    jobs: usize,
+    run: impl Fn(usize) -> Result<T> + Sync,
+) -> Result<Vec<T>> {
+    if threads <= 1 || jobs <= 1 {
+        return (0..jobs).map(&run).collect();
+    }
+    let next = std::sync::atomic::AtomicUsize::new(0);
+    let slots: Vec<std::sync::Mutex<Option<Result<T>>>> =
+        (0..jobs).map(|_| std::sync::Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..threads.min(jobs) {
+            scope.spawn(|| loop {
+                let k = next.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+                if k >= jobs {
+                    break;
+                }
+                *slots[k].lock().unwrap() = Some(run(k));
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("scan job not completed"))
+        .collect()
+}
+
+// ---------------------------------------------------------------------
+// MemStore
+// ---------------------------------------------------------------------
+
+/// Columns held in RAM (paper: "workers can be configured to load the
+/// dataset in memory"). Scans visit borrowed whole-column slices —
+/// zero copies, nothing charged to I/O stats.
+pub struct MemStore {
+    /// column index → raw column (row order).
+    columns: BTreeMap<usize, Column>,
+    /// column index → presorted entries (numerical columns only).
+    sorted: BTreeMap<usize, Vec<SortedEntry>>,
+}
+
+impl MemStore {
+    /// Build from a full dataset and a column assignment, presorting
+    /// numerical columns on the way (the dataset-preparation phase of
+    /// §2.1).
+    pub fn build(ds: &Dataset, columns: &[usize]) -> MemStore {
+        let mut cols = BTreeMap::new();
+        let mut sorted = BTreeMap::new();
+        for &j in columns {
+            let col = ds.column(j).clone();
+            if col.is_numerical() {
+                sorted.insert(j, col.presort());
+            }
+            cols.insert(j, col);
+        }
+        MemStore {
+            columns: cols,
+            sorted,
+        }
+    }
+
+    fn column(&self, j: usize) -> Result<&Column> {
+        self.columns
+            .get(&j)
+            .ok_or_else(|| anyhow::anyhow!("store lacks column {j}"))
+    }
+}
+
+impl ColumnStore for MemStore {
+    fn columns(&self) -> Vec<usize> {
+        self.columns.keys().copied().collect()
+    }
+
+    fn column_type(&self, j: usize) -> Result<ColumnType> {
+        Ok(match self.column(j)? {
+            Column::Numerical(_) => ColumnType::Numerical,
+            Column::Categorical { arity, .. } => ColumnType::Categorical { arity: *arity },
+        })
+    }
+
+    fn scan_raw(
+        &self,
+        j: usize,
+        visit: &mut dyn FnMut(usize, RawChunk<'_>) -> Result<()>,
+    ) -> Result<()> {
+        match self.column(j)? {
+            Column::Numerical(v) => visit(0, RawChunk::Numerical(v.as_slice())),
+            Column::Categorical { values, .. } => {
+                visit(0, RawChunk::Categorical(values.as_slice()))
+            }
+        }
+    }
+
+    fn scan_sorted(
+        &self,
+        j: usize,
+        visit: &mut dyn FnMut(&[SortedEntry]) -> Result<()>,
+    ) -> Result<()> {
+        let entries = self
+            .sorted
+            .get(&j)
+            .ok_or_else(|| anyhow::anyhow!("no presorted data for column {j}"))?;
+        visit(entries.as_slice())
+    }
+
+    fn borrow_sorted(&self, j: usize) -> Option<&[SortedEntry]> {
+        self.sorted.get(&j).map(|v| v.as_slice())
+    }
+}
+
+// ---------------------------------------------------------------------
+// DiskStore (DRFC v1) and DiskV2Store (DRFC v2)
+// ---------------------------------------------------------------------
+
+/// Paths of one on-disk column.
+#[derive(Debug, Clone)]
+pub struct ColumnFiles {
+    pub raw: PathBuf,
+    pub sorted: Option<PathBuf>,
+    pub ctype: ColumnType,
+}
+
+/// Columns on disk; every scan is a fresh sequential pass through a
+/// bounded chunk buffer, charged to the worker's [`IoStats`]. Reads
+/// both DRFC versions; [`DiskStore::build`] writes v1 files.
+pub struct DiskStore {
+    files: BTreeMap<usize, ColumnFiles>,
+    stats: IoStats,
+}
+
+impl DiskStore {
+    /// Write the columns of `ds` named by `columns` under `dir` in
+    /// `layout` and return the store (used by the manager in disk
+    /// storage modes and by the disk benches/tests).
+    fn build_with(
+        ds: &Dataset,
+        columns: &[usize],
+        dir: &Path,
+        layout: Layout,
+        stats: IoStats,
+    ) -> Result<DiskStore> {
+        let mut files = BTreeMap::new();
+        for &j in columns {
+            let raw = dir.join(format!("col_{j}.drfc"));
+            let ctype = ds.schema().columns[j].ctype;
+            let mut sorted_path = None;
+            match ds.column(j) {
+                Column::Numerical(vals) => {
+                    disk::write_numerical_with(&raw, vals, layout, stats.clone())?;
+                    let sp = dir.join(format!("col_{j}.sorted.drfc"));
+                    disk::write_sorted_with(&sp, &ds.column(j).presort(), layout, stats.clone())?;
+                    sorted_path = Some(sp);
+                }
+                Column::Categorical { values, .. } => {
+                    disk::write_categorical_with(&raw, values, layout, stats.clone())?;
+                }
+            }
+            files.insert(
+                j,
+                ColumnFiles {
+                    raw,
+                    sorted: sorted_path,
+                    ctype,
+                },
+            );
+        }
+        Ok(DiskStore { files, stats })
+    }
+
+    /// Build a v1 (monolithic) disk store.
+    pub fn build(
+        ds: &Dataset,
+        columns: &[usize],
+        dir: &Path,
+        stats: IoStats,
+    ) -> Result<DiskStore> {
+        Self::build_with(ds, columns, dir, Layout::V1, stats)
+    }
+
+    fn file(&self, j: usize) -> Result<&ColumnFiles> {
+        self.files
+            .get(&j)
+            .ok_or_else(|| anyhow::anyhow!("store lacks column {j}"))
+    }
+}
+
+impl ColumnStore for DiskStore {
+    fn columns(&self) -> Vec<usize> {
+        self.files.keys().copied().collect()
+    }
+
+    fn column_type(&self, j: usize) -> Result<ColumnType> {
+        Ok(self.file(j)?.ctype)
+    }
+
+    fn scan_raw(
+        &self,
+        j: usize,
+        visit: &mut dyn FnMut(usize, RawChunk<'_>) -> Result<()>,
+    ) -> Result<()> {
+        let f = self.file(j)?;
+        let mut r = ColumnReader::open(&f.raw, self.stats.clone())?;
+        let plan = r.chunk_plan();
+        let mut base = 0usize;
+        match f.ctype {
+            ColumnType::Numerical => {
+                let mut buf: Vec<f32> = Vec::new();
+                for want in plan {
+                    let n = r.next_chunk_f32(&mut buf, want)?;
+                    visit(base, RawChunk::Numerical(buf.as_slice()))?;
+                    base += n;
+                }
+            }
+            ColumnType::Categorical { .. } => {
+                let mut buf: Vec<u32> = Vec::new();
+                for want in plan {
+                    let n = r.next_chunk_u32(&mut buf, want)?;
+                    visit(base, RawChunk::Categorical(buf.as_slice()))?;
+                    base += n;
+                }
+            }
+        }
+        r.end_pass();
+        Ok(())
+    }
+
+    fn scan_sorted(
+        &self,
+        j: usize,
+        visit: &mut dyn FnMut(&[SortedEntry]) -> Result<()>,
+    ) -> Result<()> {
+        let f = self.file(j)?;
+        let path = f
+            .sorted
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("column {j} has no presorted file"))?;
+        let mut r = ColumnReader::open(path, self.stats.clone())?;
+        let plan = r.chunk_plan();
+        let mut buf: Vec<SortedEntry> = Vec::new();
+        for want in plan {
+            r.next_chunk_sorted(&mut buf, want)?;
+            visit(buf.as_slice())?;
+        }
+        r.end_pass();
+        Ok(())
+    }
+}
+
+/// Columns in the chunked DRFC v2 layout: per-chunk record counts live
+/// in each file's header, so scans follow the file's own chunk table
+/// and partial passes never read the tail. Scan semantics (and tree
+/// output) are identical to the other backends.
+pub struct DiskV2Store {
+    inner: DiskStore,
+}
+
+impl DiskV2Store {
+    /// Write v2 column files (`chunk_rows` records per chunk) under
+    /// `dir` and return the store.
+    pub fn build(
+        ds: &Dataset,
+        columns: &[usize],
+        dir: &Path,
+        chunk_rows: u32,
+        stats: IoStats,
+    ) -> Result<DiskV2Store> {
+        Ok(DiskV2Store {
+            inner: DiskStore::build_with(ds, columns, dir, Layout::V2 { chunk_rows }, stats)?,
+        })
+    }
+}
+
+impl ColumnStore for DiskV2Store {
+    fn columns(&self) -> Vec<usize> {
+        self.inner.columns()
+    }
+
+    fn column_type(&self, j: usize) -> Result<ColumnType> {
+        self.inner.column_type(j)
+    }
+
+    fn scan_raw(
+        &self,
+        j: usize,
+        visit: &mut dyn FnMut(usize, RawChunk<'_>) -> Result<()>,
+    ) -> Result<()> {
+        self.inner.scan_raw(j, visit)
+    }
+
+    fn scan_sorted(
+        &self,
+        j: usize,
+        visit: &mut dyn FnMut(&[SortedEntry]) -> Result<()>,
+    ) -> Result<()> {
+        self.inner.scan_sorted(j, visit)
+    }
+}
+
+/// In-memory store for `columns` of `ds` (presorts numerical columns).
+pub fn mem_store_for(ds: &Dataset, columns: &[usize]) -> Arc<dyn ColumnStore> {
+    Arc::new(MemStore::build(ds, columns))
+}
+
+/// v1 disk store for `columns` of `ds`, files written under `dir`.
+pub fn disk_store_for(
+    ds: &Dataset,
+    columns: &[usize],
+    dir: &Path,
+    stats: IoStats,
+) -> Result<Arc<dyn ColumnStore>> {
+    Ok(Arc::new(DiskStore::build(ds, columns, dir, stats)?))
+}
+
+/// v2 (chunked) disk store for `columns` of `ds`.
+pub fn disk_v2_store_for(
+    ds: &Dataset,
+    columns: &[usize],
+    dir: &Path,
+    chunk_rows: u32,
+    stats: IoStats,
+) -> Result<Arc<dyn ColumnStore>> {
+    Ok(Arc::new(DiskV2Store::build(
+        ds, columns, dir, chunk_rows, stats,
+    )?))
+}
+
+// ---------------------------------------------------------------------
+// Dataset directory persistence
+// ---------------------------------------------------------------------
 
 fn schema_to_json(schema: &Schema, rows: usize) -> Json {
     let mut o = Json::object();
@@ -126,7 +594,7 @@ pub fn load_dataset(dir: &Path, stats: IoStats) -> Result<Dataset> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::data::synthetic::LeoLikeSpec;
+    use crate::data::synthetic::{Family, LeoLikeSpec, SyntheticSpec};
 
     #[test]
     fn roundtrip_mixed_dataset() {
@@ -156,5 +624,94 @@ mod tests {
         let dir = crate::util::tempdir().unwrap();
         std::fs::write(dir.path().join("schema.json"), "{\"rows\": 1}").unwrap();
         assert!(load_dataset(dir.path(), IoStats::new()).is_err());
+    }
+
+    /// Every backend must deliver identical data through scans, chunk
+    /// boundaries notwithstanding.
+    #[test]
+    fn backends_scan_identical_data() {
+        let ds = LeoLikeSpec::new(700, 11).generate();
+        let cols: Vec<usize> = vec![0, 1, 3, 5];
+        let dir1 = crate::util::tempdir().unwrap();
+        let dir2 = crate::util::tempdir().unwrap();
+        let stats = IoStats::new();
+        let stores: Vec<Arc<dyn ColumnStore>> = vec![
+            mem_store_for(&ds, &cols),
+            disk_store_for(&ds, &cols, dir1.path(), stats.clone()).unwrap(),
+            // Tiny chunks so the v2 scan actually visits many chunks.
+            disk_v2_store_for(&ds, &cols, dir2.path(), 97, stats.clone()).unwrap(),
+        ];
+        for store in &stores {
+            assert_eq!(store.columns(), cols);
+            for &j in &cols {
+                assert_eq!(store.column_type(j).unwrap(), ds.schema().columns[j].ctype);
+                // Raw scan reassembles the column.
+                assert_eq!(&store.read_raw(j).unwrap(), ds.column(j), "column {j}");
+                // Sorted scan reassembles the presorted view.
+                if ds.column(j).is_numerical() {
+                    assert_eq!(store.read_sorted(j).unwrap(), ds.column(j).presort());
+                }
+            }
+            // Chunks arrive in row order with correct base offsets.
+            let mut seen = 0usize;
+            store
+                .scan_raw(cols[0], &mut |base, chunk| {
+                    assert_eq!(base, seen);
+                    seen += chunk.len();
+                    Ok(())
+                })
+                .unwrap();
+            assert_eq!(seen, ds.num_rows());
+            // Missing column errors.
+            assert!(store.scan_raw(2, &mut |_, _| Ok(())).is_err());
+            assert!(store.read_raw(2).is_err());
+        }
+    }
+
+    /// Disk scans charge exactly the historical whole-pass byte counts.
+    #[test]
+    fn disk_scan_accounting_matches_monolithic_pass() {
+        let ds = SyntheticSpec::new(Family::LinearCont { informative: 2 }, 300, 3, 5).generate();
+        let dir = crate::util::tempdir().unwrap();
+        let stats = IoStats::new();
+        let store = disk_store_for(&ds, &[0], dir.path(), stats.clone()).unwrap();
+        let before = stats.snapshot();
+        let col = store.read_raw(0).unwrap();
+        assert_eq!(col.len(), 300);
+        let d = stats.snapshot().delta_since(&before);
+        // v1 header (20) + 300 f32 records, one pass.
+        assert_eq!(d.disk_read_bytes, 20 + 300 * 4);
+        assert_eq!(d.disk_read_passes, 1);
+    }
+
+    #[test]
+    fn mem_store_charges_nothing() {
+        let ds = SyntheticSpec::new(Family::Xor { informative: 2 }, 100, 3, 9).generate();
+        let store = mem_store_for(&ds, &[0, 1, 2]);
+        store.read_raw(1).unwrap();
+        store.read_sorted(0).unwrap_or_default();
+        // MemStore holds no IoStats at all — nothing to charge. Getting
+        // here without panicking is the assertion.
+        assert_eq!(store.columns(), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn run_scans_is_ordered_and_propagates_errors() {
+        // Order: results line up with job indices whatever the threads.
+        for threads in [1, 4] {
+            let out = run_scans(threads, 17, |k| Ok(k * k)).unwrap();
+            assert_eq!(out, (0..17).map(|k| k * k).collect::<Vec<_>>());
+        }
+        // Errors propagate.
+        let err = run_scans(4, 8, |k| {
+            if k == 5 {
+                anyhow::bail!("job {k} failed")
+            } else {
+                Ok(k)
+            }
+        });
+        assert!(err.is_err());
+        // Zero jobs is fine.
+        assert_eq!(run_scans(4, 0, |_| Ok(0u8)).unwrap(), Vec::<u8>::new());
     }
 }

@@ -17,6 +17,33 @@
 //! * per depth level, exactly one bit per live sample is broadcast to
 //!   update class lists (§2.4, Alg. 2 step 5-7).
 //!
+//! ## Data plane
+//!
+//! All splitter dataset access goes through the
+//! [`data::store::ColumnStore`] trait: **chunk-granular sequential
+//! scans** (a visitor is fed bounded, ordered slices of a column), the
+//! narrowest interface that still covers every scan site — Alg. 1
+//! supersplit search, condition evaluation, root statistics, and the
+//! SPRINT pruning rebuild. Three backends implement it:
+//!
+//! * [`data::store::MemStore`] — columns in RAM, zero-copy borrowed
+//!   chunks;
+//! * [`data::store::DiskStore`] — DRFC v1 files streamed through a
+//!   bounded buffer, every byte charged to [`data::io_stats::IoStats`];
+//! * [`data::store::DiskV2Store`] — chunked DRFC v2 files (per-chunk
+//!   record counts in the header) whose passes can be resumed or
+//!   stopped at any chunk boundary.
+//!
+//! Because every scan algorithm is a pure left-to-right fold, chunk
+//! boundaries — and therefore the backend — cannot change a single
+//! split decision: all backends produce bit-identical forests. On top
+//! of the store, a splitter owning `k` columns scans them concurrently
+//! on a scoped pool bounded by `TrainConfig::scan_threads`
+//! ([`data::store::run_scans`]); per-column results merge in
+//! deterministic column order, so the thread count is a pure
+//! wall-clock knob. A future mmap or remote-object-store backend only
+//! has to produce ordered chunks to plug into the same seam.
+//!
 //! The numeric hot-spot — scoring all candidate thresholds of a
 //! presorted feature against cumulative label histograms (Alg. 1) — is
 //! additionally available as an AOT-compiled XLA/Pallas artifact executed

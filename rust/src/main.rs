@@ -57,6 +57,7 @@ const TRAIN_FLAGS: &[&str] = &[
     "builders",
     "latency-us",
     "storage",
+    "scan-threads",
     "engine",
     "scorer",
     "artifacts-dir",
@@ -100,8 +101,9 @@ USAGE:
             [--trees T] [--depth D] [--min-records R] [--candidates M']
             [--sampling per_node|per_depth|all] [--bagging poisson|none]
             [--splitters W] [--redundancy D] [--builders B]
-            [--latency-us U] [--storage memory|disk]
-            [--engine direct|threaded|tcp] [--scorer native|xla]
+            [--latency-us U] [--storage memory|disk|disk_v2]
+            [--scan-threads K] [--engine direct|threaded|tcp]
+            [--scorer native|xla]
             [--artifacts-dir DIR] [--config cfg.json]
             [--out forest.json] [--report report.json]
             [--csv file.csv [--label-column NAME]] [--data dataset-dir]
@@ -193,9 +195,11 @@ fn cmd_train(argv: &[String]) -> Result<()> {
         cfg.storage = match v {
             "memory" => StorageMode::Memory,
             "disk" => StorageMode::Disk,
-            _ => bail!("storage must be memory|disk"),
+            "disk_v2" => StorageMode::DiskV2,
+            _ => bail!("storage must be memory|disk|disk_v2"),
         };
     }
+    cfg.scan_threads = args.get_usize("scan-threads", cfg.scan_threads)?;
     if let Some(v) = args.get("engine") {
         cfg.engine = match v {
             "direct" => Engine::Direct,

@@ -8,15 +8,15 @@
 //! mismatches and correlate responses. Round-trips and malformed-frame
 //! rejection are covered below and in `tests/serving.rs`.
 //!
-//! Frame body layout (after the 4-byte length prefix shared with the
-//! coordinator's `read_frame`/`write_frame`):
+//! Frame body layout (after the 4-byte length prefix of the shared
+//! [`crate::util::wire`] frame helpers):
 //!
 //! ```text
 //! "DRFS" | version u8 | request_id u64 | tag u8 | payload…
 //! ```
 
-use crate::coordinator::wire::{Reader, Writer};
-pub use crate::coordinator::wire::{read_frame, write_frame};
+use crate::util::wire::{Reader, Writer};
+pub use crate::util::wire::{read_frame, write_frame};
 use crate::data::column::Column;
 use crate::data::schema::{ColumnSpec, Schema};
 use crate::data::Dataset;
@@ -115,19 +115,13 @@ pub enum ServeResponse {
 }
 
 fn put_header(w: &mut Writer, request_id: u64) {
-    for b in MAGIC {
-        w.u8(b);
-    }
+    w.magic(MAGIC);
     w.u8(WIRE_VERSION);
     w.u64(request_id);
 }
 
 fn get_header(r: &mut Reader<'_>) -> Result<u64> {
-    let mut magic = [0u8; 4];
-    for b in &mut magic {
-        *b = r.u8()?;
-    }
-    ensure!(magic == MAGIC, "bad magic {magic:02x?} (not a DRF serving frame)");
+    r.expect_magic(MAGIC, "DRF serving")?;
     let version = r.u8()?;
     ensure!(
         version == WIRE_VERSION,
@@ -136,19 +130,10 @@ fn get_header(r: &mut Reader<'_>) -> Result<u64> {
     r.u64()
 }
 
-/// Read a length prefix and require the claimed `n` elements of at
-/// least `elem_bytes` each to actually fit in the rest of the frame.
-/// `Reader::len_u32`'s own bound is sized for u64 payloads; serving
-/// frames come from **untrusted peers**, so without this a forged
-/// count could drive multi-GiB `with_capacity` calls from a small
-/// frame.
+/// Serving frames come from **untrusted peers**: every length prefix
+/// goes through the allocation-bounded [`Reader::len_checked`].
 fn len_checked(r: &mut Reader<'_>, elem_bytes: usize) -> Result<usize> {
-    let n = r.len_u32()?;
-    ensure!(
-        n <= r.remaining() / elem_bytes.max(1),
-        "length prefix {n} exceeds frame"
-    );
-    Ok(n)
+    r.len_checked(elem_bytes)
 }
 
 fn put_columns(w: &mut Writer, batch: &RowsBatch) {
@@ -199,17 +184,11 @@ fn get_columns(r: &mut Reader<'_>) -> Result<RowsBatch> {
 }
 
 fn put_string(w: &mut Writer, s: &str) {
-    let bytes = s.as_bytes();
-    w.usize_u32(bytes.len());
-    for &b in bytes {
-        w.u8(b);
-    }
+    w.str(s);
 }
 
 fn get_string(r: &mut Reader<'_>) -> Result<String> {
-    let n = len_checked(r, 1)?;
-    let bytes: Vec<u8> = (0..n).map(|_| r.u8()).collect::<Result<_>>()?;
-    Ok(String::from_utf8(bytes)?)
+    r.str()
 }
 
 /// Encode a request frame body (pass to [`write_frame`]).

@@ -18,9 +18,169 @@ use super::scorer::{split_gain, ScoreKind, SplitCandidate};
 use crate::tree::{CategorySet, Condition};
 use std::collections::BTreeMap;
 
-/// Compute the best `x ∈ C` split of every open leaf for `feature`.
-/// Interface mirrors [`super::numerical::best_numerical_supersplit`];
-/// `values` is the raw column in row order.
+/// Per-leaf count-table representation. Two layouts:
+///  * dense (flat Vec indexed by value*classes) when the total
+///    footprint is modest — no per-row tree walk, ~3x faster;
+///  * sparse BTreeMap otherwise (huge arity, sparse support).
+/// Both produce identical tables; the per-leaf split search iterates in
+/// value order either way, so split decisions are byte-identical
+/// (EXPERIMENTS.md §Perf).
+enum CountTables {
+    Dense { cells: Vec<u64>, stride: usize },
+    Sparse { tables: Vec<BTreeMap<u32, Histogram>> },
+}
+
+/// Chunk-incremental supersplit scan over one categorical feature.
+///
+/// Building the `value × class → weighted count` tables is a pure fold
+/// over the raw column in row order, so chunks can be fed one at a time
+/// ([`push`](Self::push)) with any boundaries — the
+/// [`crate::data::store::ColumnStore`] backends stream columns through
+/// a bounded buffer this way. [`best_categorical_supersplit`] is the
+/// single-slice wrapper.
+pub struct CategoricalSupersplitScan<'a, S, C, B>
+where
+    S: Fn(u32) -> u32,
+    C: Fn(u32) -> bool,
+    B: Fn(u32) -> u32,
+{
+    feature: usize,
+    arity: u32,
+    labels: &'a [u32],
+    num_classes: u32,
+    leaf_totals: &'a [Histogram],
+    kind: ScoreKind,
+    tables: CountTables,
+    sample2node: S,
+    is_candidate: C,
+    bag: B,
+}
+
+impl<'a, S, C, B> CategoricalSupersplitScan<'a, S, C, B>
+where
+    S: Fn(u32) -> u32,
+    C: Fn(u32) -> bool,
+    B: Fn(u32) -> u32,
+{
+    /// Interface mirrors [`super::numerical::NumericalSupersplitScan`].
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        feature: usize,
+        arity: u32,
+        labels: &'a [u32],
+        num_classes: u32,
+        leaf_totals: &'a [Histogram],
+        kind: ScoreKind,
+        sample2node: S,
+        is_candidate: C,
+        bag: B,
+    ) -> Self {
+        let num_leaves = leaf_totals.len();
+        let dense_cells = arity as usize * num_classes as usize * num_leaves;
+        let tables = if dense_cells <= (1 << 24) {
+            CountTables::Dense {
+                cells: vec![0u64; dense_cells],
+                stride: arity as usize * num_classes as usize,
+            }
+        } else {
+            CountTables::Sparse {
+                tables: vec![BTreeMap::new(); num_leaves],
+            }
+        };
+        Self {
+            feature,
+            arity,
+            labels,
+            num_classes,
+            leaf_totals,
+            kind,
+            tables,
+            sample2node,
+            is_candidate,
+            bag,
+        }
+    }
+
+    /// Feed the next chunk of raw values; `base_row` is the row index
+    /// of `values[0]`.
+    pub fn push(&mut self, base_row: usize, values: &[u32]) {
+        for (k, &v) in values.iter().enumerate() {
+            let i = (base_row + k) as u32;
+            let h = (self.sample2node)(i);
+            if h == 0 {
+                continue;
+            }
+            if !(self.is_candidate)(h) {
+                continue;
+            }
+            let b = (self.bag)(i);
+            if b == 0 {
+                continue;
+            }
+            let y = self.labels[i as usize];
+            match &mut self.tables {
+                CountTables::Dense { cells, stride } => {
+                    let base = (h - 1) as usize * *stride
+                        + v as usize * self.num_classes as usize
+                        + y as usize;
+                    cells[base] += b as u64;
+                }
+                CountTables::Sparse { tables } => {
+                    tables[(h - 1) as usize]
+                        .entry(v)
+                        .or_insert_with(|| Histogram::new(self.num_classes))
+                        .add(y, b);
+                }
+            }
+        }
+    }
+
+    /// Close the scan: per leaf rank−1, the best candidate split if any.
+    pub fn finish(self) -> Vec<Option<SplitCandidate>> {
+        let num_leaves = self.leaf_totals.len();
+        match self.tables {
+            CountTables::Dense { cells, stride } => (0..num_leaves)
+                .map(|leaf| {
+                    let mut table: BTreeMap<u32, Histogram> = BTreeMap::new();
+                    for v in 0..self.arity as usize {
+                        let cell = &cells[leaf * stride + v * self.num_classes as usize
+                            ..leaf * stride + (v + 1) * self.num_classes as usize];
+                        if cell.iter().any(|&c| c > 0) {
+                            table.insert(v as u32, Histogram::from_counts(cell.to_vec()));
+                        }
+                    }
+                    best_subset_split(
+                        self.feature,
+                        self.arity,
+                        &table,
+                        &self.leaf_totals[leaf],
+                        self.num_classes,
+                        self.kind,
+                    )
+                })
+                .collect(),
+            CountTables::Sparse { tables } => tables
+                .into_iter()
+                .enumerate()
+                .map(|(idx, table)| {
+                    best_subset_split(
+                        self.feature,
+                        self.arity,
+                        &table,
+                        &self.leaf_totals[idx],
+                        self.num_classes,
+                        self.kind,
+                    )
+                })
+                .collect(),
+        }
+    }
+}
+
+/// Compute the best `x ∈ C` split of every open leaf for `feature` in
+/// one call; `values` is the whole raw column in row order. The
+/// single-slice wrapper around [`CategoricalSupersplitScan`] (used by
+/// the baselines and in-memory fast paths).
 #[allow(clippy::too_many_arguments)]
 pub fn best_categorical_supersplit(
     feature: usize,
@@ -34,82 +194,19 @@ pub fn best_categorical_supersplit(
     is_candidate: impl Fn(u32) -> bool,
     bag: impl Fn(u32) -> u32,
 ) -> Vec<Option<SplitCandidate>> {
-    let num_leaves = leaf_totals.len();
-    // Per-leaf count table: value -> histogram. Two layouts:
-    //  * dense (flat Vec indexed by value*classes) when the total
-    //    footprint is modest — no per-row tree walk, ~3x faster;
-    //  * sparse BTreeMap otherwise (huge arity, sparse support).
-    // Both produce identical tables; iteration stays in value order so
-    // split decisions are byte-identical (EXPERIMENTS.md §Perf).
-    let dense_cells = arity as usize * num_classes as usize * num_leaves;
-    if dense_cells <= (1 << 24) {
-        let stride = arity as usize * num_classes as usize;
-        let mut dense = vec![0u64; dense_cells];
-        for (i, &v) in values.iter().enumerate() {
-            let h = sample2node(i as u32);
-            if h == 0 {
-                continue;
-            }
-            if !is_candidate(h) {
-                continue;
-            }
-            let b = bag(i as u32);
-            if b == 0 {
-                continue;
-            }
-            let base = (h - 1) as usize * stride
-                + v as usize * num_classes as usize
-                + labels[i] as usize;
-            dense[base] += b as u64;
-        }
-        return (0..num_leaves)
-            .map(|leaf| {
-                let mut table: BTreeMap<u32, Histogram> = BTreeMap::new();
-                for v in 0..arity as usize {
-                    let cell = &dense[leaf * stride + v * num_classes as usize
-                        ..leaf * stride + (v + 1) * num_classes as usize];
-                    if cell.iter().any(|&c| c > 0) {
-                        table.insert(v as u32, Histogram::from_counts(cell.to_vec()));
-                    }
-                }
-                best_subset_split(feature, arity, &table, &leaf_totals[leaf], num_classes, kind)
-            })
-            .collect();
-    }
-
-    let mut tables: Vec<BTreeMap<u32, Histogram>> = vec![BTreeMap::new(); num_leaves];
-    for (i, &v) in values.iter().enumerate() {
-        let h = sample2node(i as u32);
-        if h == 0 {
-            continue;
-        }
-        if !is_candidate(h) {
-            continue;
-        }
-        let b = bag(i as u32);
-        if b == 0 {
-            continue;
-        }
-        tables[(h - 1) as usize]
-            .entry(v)
-            .or_insert_with(|| Histogram::new(num_classes))
-            .add(labels[i], b);
-    }
-
-    tables
-        .into_iter()
-        .enumerate()
-        .map(|(idx, table)| {
-            best_subset_split(
-                feature,
-                arity,
-                &table,
-                &leaf_totals[idx],
-                num_classes,
-                kind,
-            )
-        })
-        .collect()
+    let mut scan = CategoricalSupersplitScan::new(
+        feature,
+        arity,
+        labels,
+        num_classes,
+        leaf_totals,
+        kind,
+        sample2node,
+        is_candidate,
+        bag,
+    );
+    scan.push(0, values);
+    scan.finish()
 }
 
 /// Best subset split for one leaf given its count table.
@@ -360,6 +457,50 @@ mod tests {
         assert!(res[1].is_some());
         // Both leaves have one stray, so the two best sets differ.
         assert_ne!(set_of(res[0].as_ref().unwrap()), set_of(res[1].as_ref().unwrap()));
+    }
+
+    #[test]
+    fn chunked_push_matches_single_slice() {
+        let values: Vec<u32> = (0..300).map(|i| ((i * 17) % 6) as u32).collect();
+        let labels: Vec<u32> = (0..300).map(|i| ((i * 7) % 2) as u32).collect();
+        let w = vec![1u32; 300];
+        let totals = totals_of(&labels, &w, 2);
+        let whole = best_categorical_supersplit(
+            0,
+            &values,
+            6,
+            &labels,
+            2,
+            &totals,
+            ScoreKind::Gini,
+            |_| 1,
+            |_| true,
+            |_| 1,
+        );
+        for chunk in [1usize, 13, 128, 299] {
+            let mut scan = CategoricalSupersplitScan::new(
+                0,
+                6,
+                &labels,
+                2,
+                &totals,
+                ScoreKind::Gini,
+                |_| 1,
+                |_| true,
+                |_| 1,
+            );
+            let mut base = 0;
+            for c in values.chunks(chunk) {
+                scan.push(base, c);
+                base += c.len();
+            }
+            let got = scan.finish();
+            assert_eq!(
+                whole[0].as_ref().map(|c| (set_of(c), c.gain.to_bits())),
+                got[0].as_ref().map(|c| (set_of(c), c.gain.to_bits())),
+                "chunk={chunk}"
+            );
+        }
     }
 
     #[test]

@@ -53,18 +53,164 @@ impl LeafState {
     }
 }
 
-/// Compute the best `x ≤ τ` split of every open leaf for `feature`.
+/// Chunk-incremental supersplit scan over one numerical feature.
 ///
-/// * `q` — presorted `(value, sample)` entries of the column;
-/// * `labels` — the shared label column (indexed by sample);
-/// * `leaf_totals[h-1]` — bagged label histogram of open leaf rank `h`
-///   (1-based ranks; rank 0 means closed — see [`crate::classlist`]);
-/// * `sample2node(i)` — leaf code of sample `i` (0 = closed/out);
-/// * `is_candidate(h)` — whether this feature was drawn for leaf `h`
-///   (paper Alg. 1's `candidate feature (j, h, p)`);
-/// * `bag(i)` — bagged multiplicity of sample `i` (paper's `bag(i, p)`).
-///
-/// Returns, per leaf rank−1, the best candidate split (gain > 0) if any.
+/// Alg. 1 is a pure left-to-right fold over the presorted entries, so
+/// the scan state can be fed the column **chunk by chunk**
+/// ([`push`](Self::push)) — this is what lets the
+/// [`crate::data::store::ColumnStore`] backends stream arbitrarily
+/// large columns through a bounded buffer. Results are invariant to
+/// chunk boundaries: pushing one whole slice and pushing it split at
+/// any points produce identical candidates
+/// ([`best_numerical_supersplit`] is exactly the one-slice wrapper).
+pub struct NumericalSupersplitScan<'a, S, C, B>
+where
+    S: Fn(u32) -> u32,
+    C: Fn(u32) -> bool,
+    B: Fn(u32) -> u32,
+{
+    feature: usize,
+    labels: &'a [u32],
+    leaf_totals: &'a [Histogram],
+    kind: ScoreKind,
+    binary_gini: bool,
+    states: Vec<LeafState>,
+    sample2node: S,
+    is_candidate: C,
+    bag: B,
+}
+
+impl<'a, S, C, B> NumericalSupersplitScan<'a, S, C, B>
+where
+    S: Fn(u32) -> u32,
+    C: Fn(u32) -> bool,
+    B: Fn(u32) -> u32,
+{
+    /// * `labels` — the shared label column (indexed by sample);
+    /// * `leaf_totals[h-1]` — bagged label histogram of open leaf rank
+    ///   `h` (1-based ranks; rank 0 means closed — see
+    ///   [`crate::classlist`]);
+    /// * `sample2node(i)` — leaf code of sample `i` (0 = closed/out);
+    /// * `is_candidate(h)` — whether this feature was drawn for leaf
+    ///   `h` (paper Alg. 1's `candidate feature (j, h, p)`);
+    /// * `bag(i)` — bagged multiplicity of sample `i` (paper's
+    ///   `bag(i, p)`).
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        feature: usize,
+        labels: &'a [u32],
+        num_classes: u32,
+        leaf_totals: &'a [Histogram],
+        kind: ScoreKind,
+        sample2node: S,
+        is_candidate: C,
+        bag: B,
+    ) -> Self {
+        let states: Vec<LeafState> = leaf_totals
+            .iter()
+            .map(|t| LeafState::new(num_classes, t))
+            .collect();
+        Self {
+            feature,
+            labels,
+            leaf_totals,
+            kind,
+            binary_gini: num_classes == 2 && kind == ScoreKind::Gini,
+            states,
+            sample2node,
+            is_candidate,
+            bag,
+        }
+    }
+
+    /// Feed the next chunk of presorted entries (in value order,
+    /// continuing exactly where the previous chunk ended).
+    pub fn push(&mut self, q: &[SortedEntry]) {
+        for e in q {
+            let h = (self.sample2node)(e.sample);
+            if h == 0 {
+                continue; // closed leaf
+            }
+            if !(self.is_candidate)(h) {
+                continue; // feature not drawn for this leaf
+            }
+            let b = (self.bag)(e.sample);
+            if b == 0 {
+                continue; // out-of-bag
+            }
+            let st = &mut self.states[(h - 1) as usize];
+            if let Some(v) = st.last_value {
+                // Only a *distinct-value* boundary is a candidate
+                // threshold.
+                if e.value > v {
+                    let totals = &self.leaf_totals[(h - 1) as usize];
+                    // Same ranking as scorer::split_gain; the
+                    // binary-Gini branch inlines the hoisted-constant
+                    // form.
+                    let gain = if self.binary_gini {
+                        let l1 = st.hist.counts()[1] as f64;
+                        let l0 = st.hist.counts()[0] as f64;
+                        let nl = l1 + l0;
+                        let p1 = totals.counts()[1] as f64;
+                        let p0 = totals.counts()[0] as f64;
+                        let nr = (p1 - l1) + (p0 - l0);
+                        if nl == 0.0 || nr == 0.0 {
+                            None
+                        } else {
+                            Some(
+                                st.parent_term
+                                    - st.inv_n2
+                                        * (l1 * l0 / nl + (p1 - l1) * (p0 - l0) / nr),
+                            )
+                        }
+                    } else {
+                        split_gain(self.kind, totals, &st.hist)
+                    };
+                    if let Some(gain) = gain {
+                        // Strict '>' keeps the first (lowest) best
+                        // threshold, exactly as Alg. 1's `if s' > s_h`.
+                        if gain > 0.0 && gain > st.best_gain {
+                            st.best_gain = gain;
+                            st.best_threshold = midpoint(v, e.value);
+                            st.best_left = Some(st.hist.clone());
+                        }
+                    }
+                }
+            }
+            st.hist.add(self.labels[e.sample as usize], b);
+            st.last_value = Some(e.value);
+        }
+    }
+
+    /// Close the scan: per leaf rank−1, the best candidate split
+    /// (gain > 0) if any.
+    pub fn finish(self) -> Vec<Option<SplitCandidate>> {
+        let feature = self.feature;
+        let leaf_totals = self.leaf_totals;
+        self.states
+            .into_iter()
+            .enumerate()
+            .map(|(idx, st)| {
+                let left = st.best_left?;
+                let right = leaf_totals[idx].minus(&left);
+                Some(SplitCandidate {
+                    condition: Condition::NumLe {
+                        feature,
+                        threshold: st.best_threshold,
+                    },
+                    gain: st.best_gain,
+                    left_counts: left.into_counts(),
+                    right_counts: right.into_counts(),
+                })
+            })
+            .collect()
+    }
+}
+
+/// Compute the best `x ≤ τ` split of every open leaf for `feature` in
+/// one call over the whole presorted column `q` — the single-slice
+/// wrapper around [`NumericalSupersplitScan`] (used by the baselines
+/// and the in-memory fast paths).
 #[allow(clippy::too_many_arguments)]
 pub fn best_numerical_supersplit(
     feature: usize,
@@ -77,82 +223,18 @@ pub fn best_numerical_supersplit(
     is_candidate: impl Fn(u32) -> bool,
     bag: impl Fn(u32) -> u32,
 ) -> Vec<Option<SplitCandidate>> {
-    let mut states: Vec<LeafState> = leaf_totals
-        .iter()
-        .map(|t| LeafState::new(num_classes, t))
-        .collect();
-    let binary_gini = num_classes == 2 && kind == ScoreKind::Gini;
-
-    for e in q {
-        let h = sample2node(e.sample);
-        if h == 0 {
-            continue; // closed leaf
-        }
-        if !is_candidate(h) {
-            continue; // feature not drawn for this leaf
-        }
-        let b = bag(e.sample);
-        if b == 0 {
-            continue; // out-of-bag
-        }
-        let st = &mut states[(h - 1) as usize];
-        if let Some(v) = st.last_value {
-            // Only a *distinct-value* boundary is a candidate threshold.
-            if e.value > v {
-                let totals = &leaf_totals[(h - 1) as usize];
-                // Same ranking as scorer::split_gain; the binary-Gini
-                // branch inlines the hoisted-constant form.
-                let gain = if binary_gini {
-                    let l1 = st.hist.counts()[1] as f64;
-                    let l0 = st.hist.counts()[0] as f64;
-                    let nl = l1 + l0;
-                    let p1 = totals.counts()[1] as f64;
-                    let p0 = totals.counts()[0] as f64;
-                    let nr = (p1 - l1) + (p0 - l0);
-                    if nl == 0.0 || nr == 0.0 {
-                        None
-                    } else {
-                        Some(
-                            st.parent_term
-                                - st.inv_n2
-                                    * (l1 * l0 / nl + (p1 - l1) * (p0 - l0) / nr),
-                        )
-                    }
-                } else {
-                    split_gain(kind, totals, &st.hist)
-                };
-                if let Some(gain) = gain {
-                    // Strict '>' keeps the first (lowest) best threshold,
-                    // exactly as Alg. 1's `if s' > s_h`.
-                    if gain > 0.0 && gain > st.best_gain {
-                        st.best_gain = gain;
-                        st.best_threshold = midpoint(v, e.value);
-                        st.best_left = Some(st.hist.clone());
-                    }
-                }
-            }
-        }
-        st.hist.add(labels[e.sample as usize], b);
-        st.last_value = Some(e.value);
-    }
-
-    states
-        .into_iter()
-        .enumerate()
-        .map(|(idx, st)| {
-            let left = st.best_left?;
-            let right = leaf_totals[idx].minus(&left);
-            Some(SplitCandidate {
-                condition: Condition::NumLe {
-                    feature,
-                    threshold: st.best_threshold,
-                },
-                gain: st.best_gain,
-                left_counts: left.into_counts(),
-                right_counts: right.into_counts(),
-            })
-        })
-        .collect()
+    let mut scan = NumericalSupersplitScan::new(
+        feature,
+        labels,
+        num_classes,
+        leaf_totals,
+        kind,
+        sample2node,
+        is_candidate,
+        bag,
+    );
+    scan.push(q);
+    scan.finish()
 }
 
 #[cfg(test)]
@@ -355,6 +437,55 @@ mod tests {
         match c.condition {
             Condition::NumLe { threshold, .. } => assert_eq!(threshold, 1.5),
             _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn chunked_push_matches_single_slice() {
+        // Feeding the scan in arbitrary chunk sizes must be invariant.
+        let values: Vec<f32> = (0..200).map(|i| ((i * 37) % 50) as f32).collect();
+        let labels: Vec<u32> = (0..200).map(|i| ((i * 13) % 2) as u32).collect();
+        let q = presort(&values);
+        let totals = totals_of(&labels, 2);
+        let whole = best_numerical_supersplit(
+            0,
+            &q,
+            &labels,
+            2,
+            &totals,
+            ScoreKind::Gini,
+            |_| 1,
+            |_| true,
+            |_| 1,
+        );
+        for chunk in [1usize, 7, 64, 199] {
+            let mut scan = NumericalSupersplitScan::new(
+                0,
+                &labels,
+                2,
+                &totals,
+                ScoreKind::Gini,
+                |_| 1,
+                |_| true,
+                |_| 1,
+            );
+            for c in q.chunks(chunk) {
+                scan.push(c);
+            }
+            let got = scan.finish();
+            assert_eq!(got.len(), whole.len());
+            for (a, b) in whole.iter().zip(&got) {
+                match (a, b) {
+                    (None, None) => {}
+                    (Some(a), Some(b)) => {
+                        assert_eq!(a.condition, b.condition, "chunk={chunk}");
+                        assert_eq!(a.gain.to_bits(), b.gain.to_bits(), "chunk={chunk}");
+                        assert_eq!(a.left_counts, b.left_counts);
+                        assert_eq!(a.right_counts, b.right_counts);
+                    }
+                    _ => panic!("candidate presence differs at chunk={chunk}"),
+                }
+            }
         }
     }
 

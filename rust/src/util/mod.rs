@@ -5,13 +5,17 @@
 //! * [`json`] — JSON value model, parser, writer (replaces serde_json);
 //! * [`mod@tempdir`] — self-deleting temp dirs (replaces tempfile);
 //! * [`mod@bench`] — timing harness + table printer (replaces criterion);
-//! * [`proptest`] — seeded property-testing loops (replaces proptest).
+//! * [`proptest`] — seeded property-testing loops (replaces proptest);
+//! * [`wire`] — shared binary wire substrate (little-endian
+//!   writer/reader, length-prefixed frames, allocation bounds) used by
+//!   both the coordinator and serving protocols.
 
 pub mod bench;
 pub mod cli;
 pub mod json;
 pub mod proptest;
 pub mod tempdir;
+pub mod wire;
 
 pub use json::Json;
 pub use tempdir::{tempdir, TempDir};

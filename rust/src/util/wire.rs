@@ -1,0 +1,288 @@
+//! Shared binary wire substrate.
+//!
+//! Both wire codecs in this crate — the coordinator RPC protocol
+//! ([`crate::coordinator::wire`]) and the serving protocol
+//! ([`crate::serve::wire`]) — speak length-prefixed frames carrying a
+//! compact little-endian body. The scalar writer/reader, the frame
+//! read/write helpers, the allocation bounds on untrusted length
+//! prefixes, and the magic/string helpers live here once; the two
+//! protocol modules only define their message encodings.
+
+use crate::Result;
+use anyhow::ensure;
+
+/// Hard cap on a single frame body (256 MiB) — both protocols reject
+/// anything larger before allocating.
+pub const MAX_FRAME_BYTES: usize = 1 << 28;
+
+/// Growable little-endian writer.
+#[derive(Debug, Default)]
+pub struct Writer {
+    buf: Vec<u8>,
+}
+
+impl Writer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+
+    pub fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn f32(&mut self, v: f32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn usize_u32(&mut self, v: usize) {
+        self.u32(v as u32);
+    }
+
+    pub fn u64_slice(&mut self, v: &[u64]) {
+        self.usize_u32(v.len());
+        for &x in v {
+            self.u64(x);
+        }
+    }
+
+    pub fn bool(&mut self, v: bool) {
+        self.u8(v as u8);
+    }
+
+    /// Raw magic bytes (no length prefix).
+    pub fn magic(&mut self, m: [u8; 4]) {
+        self.buf.extend_from_slice(&m);
+    }
+
+    /// Length-prefixed UTF-8 string.
+    pub fn str(&mut self, s: &str) {
+        self.usize_u32(s.len());
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+}
+
+/// Cursor-based reader with explicit errors.
+pub struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    pub fn done(&self) -> Result<()> {
+        ensure!(
+            self.pos == self.buf.len(),
+            "trailing {} bytes in frame",
+            self.buf.len() - self.pos
+        );
+        Ok(())
+    }
+
+    /// Bytes left in the frame. Decoders facing untrusted peers use
+    /// this to bound length prefixes by element size before allocating
+    /// (see [`Self::len_checked`]).
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        ensure!(self.pos + n <= self.buf.len(), "frame truncated");
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn len_u32(&mut self) -> Result<usize> {
+        let n = self.u32()? as usize;
+        // Cheap sanity bound: even 1-byte elements cannot outnumber the
+        // remaining frame bytes.
+        ensure!(
+            n <= self.buf.len().saturating_sub(self.pos) * 8 + 8,
+            "length prefix {n} exceeds frame"
+        );
+        Ok(n)
+    }
+
+    /// Read a length prefix and require the claimed `n` elements of at
+    /// least `elem_bytes` each to actually fit in the rest of the
+    /// frame. [`Self::len_u32`]'s own bound is sized for u64 payloads;
+    /// frames from **untrusted peers** must use this instead, or a
+    /// forged count could drive multi-GiB `with_capacity` calls from a
+    /// small frame.
+    pub fn len_checked(&mut self, elem_bytes: usize) -> Result<usize> {
+        let n = self.len_u32()?;
+        ensure!(
+            n <= self.remaining() / elem_bytes.max(1),
+            "length prefix {n} exceeds frame"
+        );
+        Ok(n)
+    }
+
+    pub fn u64_vec(&mut self) -> Result<Vec<u64>> {
+        let n = self.len_u32()?;
+        (0..n).map(|_| self.u64()).collect()
+    }
+
+    pub fn bool(&mut self) -> Result<bool> {
+        Ok(self.u8()? != 0)
+    }
+
+    /// Require the next 4 bytes to equal `m` (`what` names the protocol
+    /// in the error).
+    pub fn expect_magic(&mut self, m: [u8; 4], what: &str) -> Result<()> {
+        let got: [u8; 4] = self.take(4)?.try_into().unwrap();
+        ensure!(got == m, "bad magic {got:02x?} (not a {what} frame)");
+        Ok(())
+    }
+
+    /// Length-prefixed UTF-8 string (allocation-bounded).
+    pub fn str(&mut self) -> Result<String> {
+        let n = self.len_checked(1)?;
+        Ok(String::from_utf8(self.take(n)?.to_vec())?)
+    }
+}
+
+/// Write one length-prefixed frame.
+pub fn write_frame(stream: &mut impl std::io::Write, body: &[u8]) -> Result<()> {
+    stream.write_all(&(body.len() as u32).to_le_bytes())?;
+    stream.write_all(body)?;
+    stream.flush()?;
+    Ok(())
+}
+
+/// Read one length-prefixed frame (cap: [`MAX_FRAME_BYTES`]).
+pub fn read_frame(stream: &mut impl std::io::Read) -> Result<Vec<u8>> {
+    let mut len_bytes = [0u8; 4];
+    stream.read_exact(&mut len_bytes)?;
+    let len = u32::from_le_bytes(len_bytes) as usize;
+    ensure!(len <= MAX_FRAME_BYTES, "frame too large: {len}");
+    let mut body = vec![0u8; len];
+    stream.read_exact(&mut body)?;
+    Ok(body)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_roundtrip() {
+        let mut w = Writer::new();
+        w.u8(7);
+        w.u32(0xDEAD_BEEF);
+        w.u64(1 << 40);
+        w.f32(1.5);
+        w.f64(-2.25);
+        w.bool(true);
+        w.u64_slice(&[3, 4]);
+        w.str("héllo");
+        let bytes = w.into_bytes();
+        let mut r = Reader::new(&bytes);
+        assert_eq!(r.u8().unwrap(), 7);
+        assert_eq!(r.u32().unwrap(), 0xDEAD_BEEF);
+        assert_eq!(r.u64().unwrap(), 1 << 40);
+        assert_eq!(r.f32().unwrap(), 1.5);
+        assert_eq!(r.f64().unwrap(), -2.25);
+        assert!(r.bool().unwrap());
+        assert_eq!(r.u64_vec().unwrap(), vec![3, 4]);
+        assert_eq!(r.str().unwrap(), "héllo");
+        r.done().unwrap();
+    }
+
+    #[test]
+    fn truncation_and_trailing_rejected() {
+        let mut w = Writer::new();
+        w.u32(1);
+        let bytes = w.into_bytes();
+        let mut r = Reader::new(&bytes);
+        assert!(r.u64().is_err(), "truncated");
+        let mut r = Reader::new(&bytes);
+        r.u8().unwrap();
+        assert!(r.done().is_err(), "trailing bytes");
+    }
+
+    #[test]
+    fn forged_length_prefixes_bounded() {
+        let mut w = Writer::new();
+        w.u32(u32::MAX);
+        let bytes = w.into_bytes();
+        assert!(Reader::new(&bytes).len_u32().is_err());
+        assert!(Reader::new(&bytes).len_checked(4).is_err());
+        // A claimed 2-element u64 vec with only 1 element of payload.
+        let mut w = Writer::new();
+        w.u32(2);
+        w.u64(1);
+        let bytes = w.into_bytes();
+        assert!(Reader::new(&bytes).len_checked(8).is_err());
+    }
+
+    #[test]
+    fn magic_helpers() {
+        let mut w = Writer::new();
+        w.magic(*b"DRFX");
+        let bytes = w.into_bytes();
+        let mut r = Reader::new(&bytes);
+        assert!(r.expect_magic(*b"DRFX", "test").is_ok());
+        let mut r = Reader::new(&bytes);
+        let err = r.expect_magic(*b"NOPE", "test").unwrap_err();
+        assert!(format!("{err}").contains("test"));
+    }
+
+    #[test]
+    fn frame_io_roundtrip() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, b"hello").unwrap();
+        write_frame(&mut buf, b"").unwrap();
+        let mut cursor = std::io::Cursor::new(buf);
+        assert_eq!(read_frame(&mut cursor).unwrap(), b"hello");
+        assert_eq!(read_frame(&mut cursor).unwrap(), b"");
+        assert!(read_frame(&mut cursor).is_err(), "EOF");
+    }
+
+    #[test]
+    fn oversized_frame_rejected() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&(MAX_FRAME_BYTES as u32 + 1).to_le_bytes());
+        let mut cursor = std::io::Cursor::new(buf);
+        assert!(read_frame(&mut cursor).is_err());
+    }
+}

@@ -1,0 +1,160 @@
+//! The ColumnStore data-plane contract: every storage backend
+//! (Memory, DRFC v1 disk, chunked DRFC v2 disk) and every
+//! `scan_threads` setting produces **bit-identical forests**, and
+//! within a backend the `IoStats` byte/pass accounting is invariant to
+//! the thread count (parallel scans charge exactly what sequential
+//! scans charge).
+
+use drf::config::{ForestParams, PruneMode, StorageMode, TrainConfig};
+use drf::data::synthetic::{Family, LeoLikeSpec, SyntheticSpec};
+use drf::data::Dataset;
+use drf::forest::RandomForest;
+use drf::rng::BaggingMode;
+use drf::tree::Tree;
+use drf::util::proptest::run_cases;
+
+const BACKENDS: [StorageMode; 3] = [StorageMode::Memory, StorageMode::Disk, StorageMode::DiskV2];
+
+fn config(storage: StorageMode, scan_threads: usize, splitters: usize, seed: u64) -> TrainConfig {
+    let mut cfg = TrainConfig::default();
+    cfg.forest = ForestParams {
+        num_trees: 2,
+        max_depth: 5,
+        min_records: 4,
+        bagging: BaggingMode::Poisson,
+        seed,
+        ..Default::default()
+    };
+    // Few splitters for many columns: each owns several, so the scan
+    // pool has real work to parallelize.
+    cfg.topology.num_splitters = Some(splitters);
+    cfg.storage = storage;
+    cfg.scan_threads = scan_threads;
+    cfg
+}
+
+fn families() -> Vec<(&'static str, Dataset)> {
+    vec![
+        (
+            "xor",
+            SyntheticSpec::new(Family::Xor { informative: 3 }, 400, 8, 11).generate(),
+        ),
+        (
+            "majority",
+            SyntheticSpec::new(Family::Majority { informative: 3 }, 400, 6, 7).generate(),
+        ),
+        (
+            "linear",
+            SyntheticSpec::new(Family::LinearCont { informative: 3 }, 350, 6, 5).generate(),
+        ),
+        // Mixed numerical + high-arity categorical columns.
+        ("leo", LeoLikeSpec::new(300, 13).generate()),
+    ]
+}
+
+/// Per-splitter disk accounting in comparable form.
+fn io_fingerprint(report: &drf::coordinator::TrainReport) -> Vec<(u64, u64, u64, u64)> {
+    report
+        .splitter_io
+        .iter()
+        .map(|s| {
+            (
+                s.disk_read_bytes,
+                s.disk_write_bytes,
+                s.disk_read_passes,
+                s.disk_write_passes,
+            )
+        })
+        .collect()
+}
+
+#[test]
+fn backends_and_scan_threads_are_bit_identical() {
+    for (name, ds) in families() {
+        let mut reference: Option<Vec<Tree>> = None;
+        for storage in BACKENDS {
+            let mut io_reference: Option<Vec<(u64, u64, u64, u64)>> = None;
+            for scan_threads in [1usize, 4] {
+                let cfg = config(storage, scan_threads, 3, 0x51D0 + name.len() as u64);
+                let (forest, report) = RandomForest::train_with_config(&ds, &cfg).unwrap();
+                match &reference {
+                    None => reference = Some(forest.trees),
+                    Some(r) => assert_eq!(
+                        r, &forest.trees,
+                        "{name}: {storage:?} x scan_threads={scan_threads} \
+                         must match the reference forest bit for bit"
+                    ),
+                }
+                let io = io_fingerprint(&report);
+                if storage != StorageMode::Memory {
+                    assert!(
+                        io.iter().any(|x| x.0 > 0),
+                        "{name}/{storage:?}: disk backend never read from disk"
+                    );
+                }
+                match &io_reference {
+                    None => io_reference = Some(io),
+                    Some(r) => assert_eq!(
+                        r, &io,
+                        "{name}/{storage:?}: IoStats accounting must be \
+                         invariant to scan_threads"
+                    ),
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn sprint_pruning_is_backend_invariant() {
+    // The SPRINT rebuild is a storage scan site too: adaptive pruning
+    // across every backend and thread count must not move a single bit.
+    let ds = SyntheticSpec::new(Family::LinearCont { informative: 3 }, 500, 6, 23).generate();
+    let mut reference: Option<Vec<Tree>> = None;
+    for storage in BACKENDS {
+        for scan_threads in [1usize, 4] {
+            let mut cfg = config(storage, scan_threads, 2, 99);
+            cfg.forest.min_records = 40; // leaves close early -> pruning fires
+            cfg.prune = PruneMode::Adaptive { threshold: 0.2 };
+            let (forest, _) = RandomForest::train_with_config(&ds, &cfg).unwrap();
+            match &reference {
+                None => reference = Some(forest.trees),
+                Some(r) => assert_eq!(r, &forest.trees, "{storage:?}/t{scan_threads}"),
+            }
+        }
+    }
+}
+
+#[test]
+fn property_backend_invariance_over_random_configs() {
+    run_cases(0xC0_57_0E, 6, |rng| {
+        let informative = rng.usize(2, 4);
+        let features = informative + rng.usize(1, 4);
+        let family = *rng.choose(&[
+            Family::Xor { informative },
+            Family::Majority { informative },
+            Family::LinearCont { informative },
+        ]);
+        let ds = SyntheticSpec::new(family, rng.usize(80, 300), features, rng.u64(1 << 40))
+            .generate();
+        let splitters = rng.usize(1, features.min(3));
+        let seed = rng.u64(1 << 40);
+        let max_depth = rng.usize(2, 5) as u32;
+        let threads = rng.usize(2, 5);
+        let mut reference: Option<Vec<Tree>> = None;
+        for storage in BACKENDS {
+            for scan_threads in [1usize, threads] {
+                let mut cfg = config(storage, scan_threads, splitters, seed);
+                cfg.forest.num_trees = 1;
+                cfg.forest.max_depth = max_depth;
+                let (forest, _) = RandomForest::train_with_config(&ds, &cfg).unwrap();
+                match &reference {
+                    None => reference = Some(forest.trees),
+                    Some(r) => {
+                        assert_eq!(r, &forest.trees, "{storage:?}/t{scan_threads}")
+                    }
+                }
+            }
+        }
+    });
+}
