@@ -1,0 +1,133 @@
+//! Training throughput across the deployment plane: rows/s for the
+//! in-process engine vs loopback TCP vs real shard-pack-backed cluster
+//! workers, by splitter count.
+//!
+//! The interesting comparisons:
+//!
+//! * direct vs tcp — the cost of pushing every RPC through the wire
+//!   codec and the loopback stack;
+//! * tcp vs cluster — the additional cost of the full deployment path:
+//!   Hello-validated connections and workers that stream their columns
+//!   from DRFC v2 shard packs on disk instead of sharing the leader's
+//!   address space (each training run reconnects, so the handshake is
+//!   part of the measured cost, exactly as a fresh leader would pay);
+//! * splitter count — how the per-level fan-out amortizes.
+//!
+//! Exactness first: every configuration's forest is checked
+//! bit-identical to the direct reference before timing. Results go to
+//! `BENCH_cluster.json` in the working directory.
+
+use drf::cluster::{load_shard, write_shards, ShardOptions, WorkerOptions, WorkerServer};
+use drf::config::{Engine, ForestParams, TrainConfig};
+use drf::data::io_stats::IoStats;
+use drf::data::synthetic::{Family, SyntheticSpec};
+use drf::forest::RandomForest;
+use drf::rng::BaggingMode;
+use drf::util::bench::{bench, fmt_count, Table};
+use drf::util::Json;
+
+const ROWS: usize = 20_000;
+const FEATURES: usize = 8;
+const TREES: usize = 2;
+const SPLITTER_COUNTS: [usize; 2] = [2, 4];
+
+fn config(splitters: usize) -> TrainConfig {
+    let mut cfg = TrainConfig::default();
+    cfg.forest = ForestParams {
+        num_trees: TREES,
+        max_depth: 8,
+        bagging: BaggingMode::Poisson,
+        seed: 29,
+        ..Default::default()
+    };
+    cfg.topology.num_splitters = Some(splitters);
+    cfg
+}
+
+fn main() {
+    let ds = SyntheticSpec::new(Family::Majority { informative: 5 }, ROWS, FEATURES, 3).generate();
+
+    let mut table = Table::new(&["splitters", "engine", "time / forest", "rows/s", "vs direct"]);
+    let mut configs: Vec<Json> = Vec::new();
+
+    for &w in &SPLITTER_COUNTS {
+        // Shard packs + one in-process worker fleet per splitter count
+        // (real sockets, real DRFC v2 files — only the OS process
+        // boundary is folded away; tests/cluster.rs covers that).
+        let shard_dir = drf::util::tempdir().unwrap();
+        let mut cfg = config(w);
+        write_shards(
+            &ds,
+            &cfg.topology,
+            shard_dir.path(),
+            &ShardOptions::default(),
+            IoStats::new(),
+        )
+        .unwrap();
+        let workers: Vec<WorkerServer> = (0..w)
+            .map(|s| {
+                let shard = load_shard(
+                    &shard_dir.path().join(format!("shard_{s}")),
+                    &WorkerOptions::default(),
+                )
+                .unwrap();
+                WorkerServer::spawn(shard, "127.0.0.1:0", 1).unwrap()
+            })
+            .collect();
+
+        let reference = RandomForest::train_with_config(&ds, &cfg).unwrap().0;
+        let mut direct_rps = 0.0f64;
+        for engine in ["direct", "tcp", "cluster"] {
+            match engine {
+                "direct" => cfg.engine = Engine::Direct,
+                "tcp" => cfg.engine = Engine::Tcp,
+                _ => {
+                    cfg.engine = Engine::Cluster;
+                    cfg.cluster_manifest = Some(shard_dir.path().join("cluster.json"));
+                    cfg.cluster_workers =
+                        workers.iter().map(|s| s.addr().to_string()).collect();
+                }
+            }
+            // Exactness before speed.
+            let forest = RandomForest::train_with_config(&ds, &cfg).unwrap().0;
+            assert_eq!(
+                reference.trees, forest.trees,
+                "{engine}/{w} splitters: engines must agree bit for bit"
+            );
+            let t = bench(3, 10.0, || {
+                std::hint::black_box(RandomForest::train_with_config(&ds, &cfg).unwrap());
+            });
+            let rps = (ROWS * TREES) as f64 / t.mean_s;
+            if engine == "direct" {
+                direct_rps = rps;
+            }
+            let relative = rps / direct_rps;
+            table.row(&[
+                format!("{w}"),
+                engine.into(),
+                t.per_iter_label(),
+                fmt_count(rps),
+                format!("{relative:.2}x"),
+            ]);
+            let mut r = Json::object();
+            r.set("splitters", Json::from_usize(w))
+                .set("engine", Json::Str(engine.into()))
+                .set("seconds_per_forest", Json::Num(t.mean_s))
+                .set("rows_per_s", Json::Num(rps))
+                .set("relative_to_direct", Json::Num(relative));
+            configs.push(r);
+        }
+    }
+
+    table.print();
+
+    let mut o = Json::object();
+    o.set("bench", Json::Str("cluster_throughput".into()))
+        .set("rows", Json::from_usize(ROWS))
+        .set("features", Json::from_usize(FEATURES))
+        .set("trees", Json::from_usize(TREES))
+        .set("configs", Json::Arr(configs));
+    let path = "BENCH_cluster.json";
+    std::fs::write(path, o.to_string()).unwrap();
+    println!("\nsummary written to {path}");
+}

@@ -1,0 +1,589 @@
+//! The cluster engine: a [`SplitterPool`] over remote worker processes.
+//!
+//! [`ClusterPool`] is what `--engine cluster` puts under the tree
+//! builders instead of spawning splitter cores in-process: one
+//! persistent, mutex-guarded connection per worker, each opened with a
+//! bounded connect-retry loop and validated by the Hello handshake
+//! (protocol version, shard id, column inventory, row count) so a
+//! misdeployed fleet fails before any training traffic flows.
+//!
+//! Failure handling is layered. The pool owns *connections*: when a
+//! round trip dies mid-call it reconnects — retrying while the worker
+//! restarts — re-handshakes, and re-issues the request once. A worker
+//! that came back empty then answers "unknown tree", and the *state*
+//! layer ([`RecoveringPool`]) replays the level-update log to rebuild
+//! it. Neither layer needs the other's knowledge: connection loss never
+//! reaches the recovery layer, state loss never reaches the tree
+//! builder.
+//!
+//! [`RecoveringPool`]: crate::coordinator::recovery::RecoveringPool
+
+use super::manifest::ClusterManifest;
+use crate::config::{PruneMode, TrainConfig};
+use crate::coordinator::messages::{
+    EvalQuery, EvalResult, LevelUpdate, PartialSupersplit, SupersplitQuery,
+};
+use crate::coordinator::topology::Topology;
+use crate::coordinator::transport::SplitterPool;
+use crate::coordinator::wire::{
+    decode_response, encode_request, read_frame, write_frame, HelloConfig, Request, Response,
+    PROTOCOL_VERSION,
+};
+use crate::data::io_stats::IoStats;
+use crate::Result;
+use anyhow::{anyhow, bail, ensure, Context};
+use std::io::{BufReader, BufWriter};
+use std::net::{SocketAddr, TcpStream, ToSocketAddrs};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Connection policy of the cluster pool.
+#[derive(Debug, Clone)]
+pub struct ClusterOptions {
+    /// Connection attempts per (re)connect before giving up.
+    pub connect_retries: usize,
+    /// Pause between attempts (covers a worker restart window of
+    /// roughly `connect_retries x retry_delay`).
+    pub retry_delay: Duration,
+    /// Per-attempt TCP connect timeout.
+    pub connect_timeout: Duration,
+}
+
+impl Default for ClusterOptions {
+    fn default() -> Self {
+        Self {
+            connect_retries: 50,
+            retry_delay: Duration::from_millis(200),
+            connect_timeout: Duration::from_secs(2),
+        }
+    }
+}
+
+/// Derive the Hello handshake a leader sends from its training config
+/// and the cluster manifest (`shard` is filled in per connection).
+pub fn hello_template(cfg: &TrainConfig, manifest: &ClusterManifest) -> HelloConfig {
+    HelloConfig {
+        protocol: PROTOCOL_VERSION,
+        shard: 0,
+        num_splitters: manifest.num_splitters as u32,
+        redundancy: manifest.redundancy as u32,
+        seed: cfg.forest.seed,
+        bagging: cfg.forest.bagging.as_str().into(),
+        sampling: cfg.forest.feature_sampling.as_str().into(),
+        num_candidates: cfg.forest.candidates_for(manifest.num_features) as u32,
+        score_kind: cfg.forest.score_kind.as_str().into(),
+        prune_threshold: match cfg.prune {
+            PruneMode::Never => None,
+            PruneMode::Adaptive { threshold } => Some(threshold),
+        },
+    }
+}
+
+/// One worker's persistent connection (requests on a connection are
+/// serialized, matching the RPC semantics).
+struct Conn {
+    r: BufReader<TcpStream>,
+    w: BufWriter<TcpStream>,
+}
+
+struct Slot {
+    /// Where the worker lives. Behind a lock so a supervisor can
+    /// redirect the leader when a worker is rescheduled elsewhere
+    /// ([`ClusterPool::set_worker_addr`]). Lock order: `conn` first,
+    /// then `addr` (reconnection reads the address while holding the
+    /// connection lock).
+    addr: Mutex<SocketAddr>,
+    columns: Vec<usize>,
+    conn: Mutex<Option<Conn>>,
+}
+
+fn resolve(addr: &str) -> Result<SocketAddr> {
+    addr.to_socket_addrs()
+        .with_context(|| format!("resolving worker address '{addr}'"))?
+        .next()
+        .ok_or_else(|| anyhow!("worker address '{addr}' resolved to nothing"))
+}
+
+/// A [`SplitterPool`] backed by remote `drf worker` processes.
+pub struct ClusterPool {
+    slots: Vec<Slot>,
+    hello: HelloConfig,
+    expected_rows: u64,
+    expected_classes: u32,
+    opts: ClusterOptions,
+    net: IoStats,
+}
+
+impl ClusterPool {
+    /// Connect to `workers[s]` for each splitter `s` and validate the
+    /// whole fleet via the Hello handshake before returning.
+    pub fn connect(
+        workers: &[String],
+        topology: &Topology,
+        hello: HelloConfig,
+        expected_rows: u64,
+        expected_classes: u32,
+        opts: ClusterOptions,
+    ) -> Result<ClusterPool> {
+        ensure!(
+            workers.len() == topology.num_splitters(),
+            "cluster lists {} workers for a {}-splitter topology",
+            workers.len(),
+            topology.num_splitters()
+        );
+        let mut slots = Vec::with_capacity(workers.len());
+        for (s, w) in workers.iter().enumerate() {
+            slots.push(Slot {
+                addr: Mutex::new(resolve(w)?),
+                columns: topology.columns_of(s),
+                conn: Mutex::new(None),
+            });
+        }
+        let pool = ClusterPool {
+            slots,
+            hello,
+            expected_rows,
+            expected_classes,
+            opts,
+            net: IoStats::new(),
+        };
+        for s in 0..pool.slots.len() {
+            let conn = pool.open_conn(s)?;
+            *pool.slots[s].conn.lock().unwrap() = Some(conn);
+        }
+        Ok(pool)
+    }
+
+    fn hello_for(&self, s: usize) -> HelloConfig {
+        HelloConfig {
+            shard: s as u32,
+            ..self.hello.clone()
+        }
+    }
+
+    /// Redirect worker `s` to a new address (e.g. a supervisor
+    /// rescheduled it on another host/port). The stale connection is
+    /// dropped; the next call reconnects and re-handshakes.
+    pub fn set_worker_addr(&self, s: usize, addr: &str) -> Result<()> {
+        let resolved = resolve(addr)?;
+        let slot = &self.slots[s];
+        let mut conn = slot.conn.lock().unwrap();
+        *slot.addr.lock().unwrap() = resolved;
+        *conn = None;
+        Ok(())
+    }
+
+    /// Establish a validated connection to worker `s`, retrying while
+    /// the worker comes (back) up. A *handshake* failure is a hard
+    /// error — the fleet is wrong and retrying cannot fix it.
+    fn open_conn(&self, s: usize) -> Result<Conn> {
+        let attempts = self.opts.connect_retries.max(1);
+        let mut last_err: Option<std::io::Error> = None;
+        let mut last_addr = None;
+        for attempt in 0..attempts {
+            if attempt > 0 {
+                std::thread::sleep(self.opts.retry_delay);
+            }
+            // Re-read per attempt: the address may be redirected while
+            // we wait out a restart.
+            let addr = *self.slots[s].addr.lock().unwrap();
+            last_addr = Some(addr);
+            match TcpStream::connect_timeout(&addr, self.opts.connect_timeout) {
+                Ok(stream) => return self.handshake(s, stream),
+                Err(e) => last_err = Some(e),
+            }
+        }
+        Err(anyhow!(
+            "worker {s} at {} unreachable after {attempts} attempts: {}",
+            last_addr.map(|a| a.to_string()).unwrap_or_default(),
+            last_err.map(|e| e.to_string()).unwrap_or_default()
+        ))
+    }
+
+    /// Hello over a fresh stream; validates the worker's inventory.
+    fn handshake(&self, s: usize, stream: TcpStream) -> Result<Conn> {
+        stream.set_nodelay(true)?;
+        let mut conn = Conn {
+            r: BufReader::new(stream.try_clone()?),
+            w: BufWriter::new(stream),
+        };
+        let body = encode_request(&Request::Hello(self.hello_for(s)));
+        write_frame(&mut conn.w, &body)?;
+        let frame = read_frame(&mut conn.r)?;
+        self.net.add_net(body.len() as u64 + 4);
+        self.net.add_net(frame.len() as u64 + 4);
+        let info = match decode_response(&frame)? {
+            Response::Hello(i) => i,
+            Response::Err(msg) => bail!("worker {s} rejected the handshake: {msg}"),
+            r => bail!("unexpected handshake response {r:?}"),
+        };
+        ensure!(
+            info.protocol == PROTOCOL_VERSION,
+            "worker {s} speaks protocol v{}, leader v{PROTOCOL_VERSION}",
+            info.protocol
+        );
+        ensure!(
+            info.shard as usize == s,
+            "worker {s} serves shard {}, expected {s}",
+            info.shard
+        );
+        ensure!(
+            info.rows == self.expected_rows,
+            "worker {s} holds {} rows, leader expects {}",
+            info.rows,
+            self.expected_rows
+        );
+        ensure!(
+            info.num_classes == self.expected_classes,
+            "worker {s} reports {} classes, leader expects {}",
+            info.num_classes,
+            self.expected_classes
+        );
+        let cols: Vec<usize> = info.columns.iter().map(|&c| c as usize).collect();
+        ensure!(
+            cols == self.slots[s].columns,
+            "worker {s} column inventory {cols:?} does not match the topology's {:?}",
+            self.slots[s].columns
+        );
+        Ok(conn)
+    }
+
+    /// One serialized request/response round trip with transparent
+    /// reconnect-and-retry on connection loss.
+    fn call(&self, s: usize, req: &Request) -> Result<Response> {
+        let slot = &self.slots[s];
+        let mut guard = slot.conn.lock().unwrap();
+        if guard.is_none() {
+            *guard = Some(self.open_conn(s)?);
+        }
+        let body = encode_request(req);
+        let round_trip = |conn: &mut Conn| -> Result<Vec<u8>> {
+            write_frame(&mut conn.w, &body)?;
+            read_frame(&mut conn.r)
+        };
+        let frame = match round_trip(guard.as_mut().unwrap()) {
+            Ok(f) => f,
+            Err(_) => {
+                // The worker went away mid-call. Reconnect (waiting out
+                // a restart) and re-issue once; a restarted worker then
+                // answers "unknown tree", which the recovery layer
+                // turns into a replay.
+                *guard = None;
+                let mut conn = self.open_conn(s)?;
+                let f = round_trip(&mut conn)
+                    .with_context(|| format!("worker {s}: retry after reconnect failed"))?;
+                *guard = Some(conn);
+                f
+            }
+        };
+        self.net.add_net(body.len() as u64 + 4);
+        self.net.add_net(frame.len() as u64 + 4);
+        let resp = decode_response(&frame)?;
+        if let Response::Err(msg) = &resp {
+            bail!("{msg}");
+        }
+        Ok(resp)
+    }
+}
+
+impl SplitterPool for ClusterPool {
+    fn num_splitters(&self) -> usize {
+        self.slots.len()
+    }
+
+    fn columns_of(&self, splitter: usize) -> Vec<usize> {
+        self.slots[splitter].columns.clone()
+    }
+
+    fn start_tree(&self, tree: u32) -> Result<()> {
+        for s in 0..self.slots.len() {
+            self.start_tree_on(s, tree)?;
+        }
+        Ok(())
+    }
+
+    fn root_stats(&self, splitter: usize, tree: u32) -> Result<Vec<u64>> {
+        match self.call(splitter, &Request::RootStats(tree))? {
+            Response::RootStats(v) => Ok(v),
+            r => bail!("unexpected response {r:?}"),
+        }
+    }
+
+    fn find_splits(&self, splitter: usize, q: &SupersplitQuery) -> Result<PartialSupersplit> {
+        match self.call(splitter, &Request::FindSplits(q.clone()))? {
+            Response::Splits(p) => Ok(p),
+            r => bail!("unexpected response {r:?}"),
+        }
+    }
+
+    fn eval_conditions(&self, splitter: usize, q: &EvalQuery) -> Result<EvalResult> {
+        match self.call(splitter, &Request::EvalConditions(q.clone()))? {
+            Response::Evals(e) => Ok(e),
+            r => bail!("unexpected response {r:?}"),
+        }
+    }
+
+    fn broadcast_level_update(&self, u: &LevelUpdate) -> Result<()> {
+        for s in 0..self.slots.len() {
+            self.apply_level_update_on(s, u)?;
+        }
+        // Bytes/messages were charged per peer; count the event.
+        self.net.add_broadcast_event();
+        Ok(())
+    }
+
+    fn finish_tree(&self, tree: u32) -> Result<()> {
+        for s in 0..self.slots.len() {
+            self.finish_tree_on(s, tree)?;
+        }
+        Ok(())
+    }
+
+    fn net_stats(&self) -> IoStats {
+        self.net.clone()
+    }
+
+    fn start_tree_on(&self, splitter: usize, tree: u32) -> Result<()> {
+        match self.call(splitter, &Request::StartTree(tree))? {
+            Response::Ok => Ok(()),
+            r => bail!("unexpected response {r:?}"),
+        }
+    }
+
+    fn apply_level_update_on(&self, splitter: usize, u: &LevelUpdate) -> Result<()> {
+        match self.call(splitter, &Request::LevelUpdate(u.clone()))? {
+            Response::Ok => Ok(()),
+            r => bail!("unexpected response {r:?}"),
+        }
+    }
+
+    fn finish_tree_on(&self, splitter: usize, tree: u32) -> Result<()> {
+        match self.call(splitter, &Request::FinishTree(tree))? {
+            Response::Ok => Ok(()),
+            r => bail!("unexpected response {r:?}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::shard::{write_shards, ShardOptions};
+    use crate::cluster::worker::{load_shard, WorkerOptions, WorkerServer};
+    use crate::config::{ForestParams, TopologyParams};
+    use crate::coordinator::recovery::{InjectedFailure, RecoveringPool};
+    use crate::coordinator::tree_builder::TreeBuilderCore;
+    use crate::data::synthetic::{Family, SyntheticSpec};
+    use crate::forest::RandomForest;
+
+    fn quick_opts() -> ClusterOptions {
+        ClusterOptions {
+            connect_retries: 5,
+            retry_delay: Duration::from_millis(20),
+            connect_timeout: Duration::from_millis(500),
+        }
+    }
+
+    fn spawn_fleet(
+        dir: &std::path::Path,
+        splitters: usize,
+    ) -> (crate::data::Dataset, Vec<WorkerServer>, Vec<String>) {
+        let ds = SyntheticSpec::new(Family::Xor { informative: 3 }, 300, 6, 13).generate();
+        write_shards(
+            &ds,
+            &TopologyParams {
+                num_splitters: Some(splitters),
+                ..Default::default()
+            },
+            dir,
+            &ShardOptions::default(),
+            IoStats::new(),
+        )
+        .unwrap();
+        let servers: Vec<WorkerServer> = (0..splitters)
+            .map(|s| {
+                let shard =
+                    load_shard(&dir.join(format!("shard_{s}")), &WorkerOptions::default())
+                        .unwrap();
+                WorkerServer::spawn(shard, "127.0.0.1:0", 1).unwrap()
+            })
+            .collect();
+        let addrs = servers.iter().map(|s| s.addr().to_string()).collect();
+        (ds, servers, addrs)
+    }
+
+    fn params() -> ForestParams {
+        ForestParams {
+            num_trees: 1,
+            max_depth: 5,
+            seed: 77,
+            ..Default::default()
+        }
+    }
+
+    fn hello(cfg: &ForestParams, num_features: usize, splitters: u32) -> HelloConfig {
+        HelloConfig {
+            protocol: PROTOCOL_VERSION,
+            shard: 0,
+            num_splitters: splitters,
+            redundancy: 1,
+            seed: cfg.seed,
+            bagging: cfg.bagging.as_str().into(),
+            sampling: cfg.feature_sampling.as_str().into(),
+            num_candidates: cfg.candidates_for(num_features) as u32,
+            score_kind: cfg.score_kind.as_str().into(),
+            prune_threshold: None,
+        }
+    }
+
+    #[test]
+    fn cluster_training_matches_in_process() {
+        let dir = crate::util::tempdir().unwrap();
+        let (ds, _servers, addrs) = spawn_fleet(dir.path(), 2);
+        let p = params();
+        let topo = Topology::new(
+            ds.num_features(),
+            &TopologyParams {
+                num_splitters: Some(2),
+                ..Default::default()
+            },
+        );
+
+        // Reference: plain in-process training, same seed/config.
+        let mut cfg = crate::config::TrainConfig::default();
+        cfg.forest = p;
+        cfg.topology.num_splitters = Some(2);
+        let (reference, _) = RandomForest::train_with_config(&ds, &cfg).unwrap();
+
+        let pool = ClusterPool::connect(
+            &addrs,
+            &topo,
+            hello(&p, ds.num_features(), 2),
+            ds.num_rows() as u64,
+            ds.num_classes(),
+            quick_opts(),
+        )
+        .unwrap();
+        let builder = TreeBuilderCore::new(&pool, &topo, &p, ds.num_features());
+        let (tree, _) = builder.build_tree(0).unwrap();
+        assert_eq!(reference.trees[0], tree, "cluster engine must be exact");
+        assert!(pool.net_stats().net_bytes() > 0);
+    }
+
+    #[test]
+    fn fleet_validation_rejects_swapped_workers() {
+        let dir = crate::util::tempdir().unwrap();
+        let (ds, _servers, mut addrs) = spawn_fleet(dir.path(), 2);
+        addrs.swap(0, 1);
+        let p = params();
+        let topo = Topology::new(
+            ds.num_features(),
+            &TopologyParams {
+                num_splitters: Some(2),
+                ..Default::default()
+            },
+        );
+        let err = ClusterPool::connect(
+            &addrs,
+            &topo,
+            hello(&p, ds.num_features(), 2),
+            ds.num_rows() as u64,
+            ds.num_classes(),
+            quick_opts(),
+        )
+        .unwrap_err();
+        assert!(
+            format!("{err:#}").contains("shard"),
+            "swapped fleet must fail the handshake: {err:#}"
+        );
+    }
+
+    #[test]
+    fn unreachable_worker_fails_after_retries() {
+        let ds = SyntheticSpec::new(Family::Xor { informative: 2 }, 50, 4, 3).generate();
+        let p = params();
+        let topo = Topology::new(
+            ds.num_features(),
+            &TopologyParams {
+                num_splitters: Some(1),
+                ..Default::default()
+            },
+        );
+        // A port nobody listens on (bind-then-drop reserves a dead one).
+        let dead = {
+            let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap().to_string()
+        };
+        let opts = ClusterOptions {
+            connect_retries: 2,
+            retry_delay: Duration::from_millis(10),
+            connect_timeout: Duration::from_millis(200),
+        };
+        let err = ClusterPool::connect(
+            &[dead],
+            &topo,
+            hello(&p, ds.num_features(), 1),
+            ds.num_rows() as u64,
+            ds.num_classes(),
+            opts,
+        )
+        .unwrap_err();
+        assert!(
+            format!("{err:#}").contains("unreachable"),
+            "expected a retry-exhausted error: {err:#}"
+        );
+    }
+
+    #[test]
+    fn recovery_replays_over_cluster_transport() {
+        // Injected state loss (FinishTree mid-run) on real worker
+        // processes' cores; the generic recovery layer must replay and
+        // keep the tree bit-identical.
+        let dir = crate::util::tempdir().unwrap();
+        let (ds, _servers, addrs) = spawn_fleet(dir.path(), 3);
+        let p = params();
+        let topo = Topology::new(
+            ds.num_features(),
+            &TopologyParams {
+                num_splitters: Some(3),
+                ..Default::default()
+            },
+        );
+        let connect = || {
+            ClusterPool::connect(
+                &addrs,
+                &topo,
+                hello(&p, ds.num_features(), 3),
+                ds.num_rows() as u64,
+                ds.num_classes(),
+                quick_opts(),
+            )
+            .unwrap()
+        };
+
+        let clean = connect();
+        let builder = TreeBuilderCore::new(&clean, &topo, &p, ds.num_features());
+        let (reference, _) = builder.build_tree(0).unwrap();
+
+        // Injection points cover every splitter at the chosen indices,
+        // so whichever splitter the 2nd/9th RPC targets loses its state
+        // — the kill is guaranteed to fire.
+        let failures: Vec<InjectedFailure> = (0..3)
+            .flat_map(|s| {
+                [2u64, 9].map(|rpc_index| InjectedFailure {
+                    splitter: s,
+                    rpc_index,
+                })
+            })
+            .collect();
+        let failing = RecoveringPool::with_failures(connect(), failures);
+        let builder = TreeBuilderCore::new(&failing, &topo, &p, ds.num_features());
+        let (recovered, _) = builder.build_tree(1).unwrap();
+        let builder = TreeBuilderCore::new(&clean, &topo, &p, ds.num_features());
+        let (reference1, _) = builder.build_tree(1).unwrap();
+        assert!(failing.recoveries() >= 1);
+        assert_eq!(reference1, recovered);
+        // Different trees of the same forest still differ (sanity).
+        assert_ne!(reference, recovered);
+    }
+}

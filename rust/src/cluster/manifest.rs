@@ -1,0 +1,451 @@
+//! Shard and cluster manifests: the JSON metadata that makes a shard
+//! pack self-describing and lets a leader validate a worker fleet.
+//!
+//! `drf shard` writes one [`ShardManifest`] per shard directory (schema,
+//! topology parameters, per-column file names + FNV-1a checksums) and a
+//! top-level [`ClusterManifest`] (the ownership map plus, optionally,
+//! the worker addresses a deployment filled in). A worker refuses to
+//! serve a pack whose files fail their checksums or whose topology does
+//! not match the leader's handshake; the leader refuses a fleet whose
+//! inventory does not match the manifest. Checksums travel as 16-digit
+//! hex strings — JSON numbers are f64 and cannot hold a full u64.
+
+use crate::config::TopologyParams;
+use crate::coordinator::topology::Topology;
+use crate::coordinator::wire::PROTOCOL_VERSION;
+use crate::data::schema::Schema;
+use crate::data::store::{schema_from_json, schema_to_json};
+use crate::util::Json;
+use crate::Result;
+use anyhow::{ensure, Context};
+use std::io::Read;
+use std::path::Path;
+
+/// Format tag of a shard manifest (fail fast on foreign JSON).
+pub const SHARD_FORMAT: &str = "drf-shard-v1";
+/// Format tag of a cluster manifest.
+pub const CLUSTER_FORMAT: &str = "drf-cluster-v1";
+
+/// Streaming FNV-1a 64 of a file's bytes (constant memory).
+pub fn checksum_file(path: &Path) -> Result<u64> {
+    let f = std::fs::File::open(path)
+        .with_context(|| format!("checksumming {}", path.display()))?;
+    let mut r = std::io::BufReader::with_capacity(1 << 16, f);
+    let mut hash: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut buf = [0u8; 1 << 16];
+    loop {
+        let n = r.read(&mut buf)?;
+        if n == 0 {
+            break;
+        }
+        for &b in &buf[..n] {
+            hash ^= b as u64;
+            hash = hash.wrapping_mul(0x1_0000_0000_01b3);
+        }
+    }
+    Ok(hash)
+}
+
+fn hex_u64(v: u64) -> Json {
+    Json::Str(format!("{v:016x}"))
+}
+
+fn parse_hex_u64(v: &Json) -> Result<u64> {
+    Ok(u64::from_str_radix(v.as_str()?, 16)?)
+}
+
+/// One column of a shard pack.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShardColumn {
+    /// Global column index (the schema's numbering).
+    pub index: usize,
+    /// Raw column file, relative to the shard directory.
+    pub file: String,
+    pub checksum: u64,
+    /// Presorted file (numerical columns only).
+    pub sorted_file: Option<String>,
+    pub sorted_checksum: Option<u64>,
+}
+
+/// The self-describing metadata of one shard pack (`manifest.json`
+/// inside the shard directory).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShardManifest {
+    pub shard: usize,
+    /// Topology the pack was cut for: the ownership map is a function
+    /// of (columns, splitters, redundancy), so a pack is only valid
+    /// against a leader using the same parameters.
+    pub num_splitters: usize,
+    pub redundancy: usize,
+    pub rows: usize,
+    pub schema: Schema,
+    pub columns: Vec<ShardColumn>,
+    /// The replicated label column (every shard carries it — §2.1).
+    pub labels_file: String,
+    pub labels_checksum: u64,
+}
+
+impl ShardManifest {
+    pub const FILE: &'static str = "manifest.json";
+
+    /// Ascending global indices of the columns this shard holds.
+    pub fn column_indices(&self) -> Vec<usize> {
+        self.columns.iter().map(|c| c.index).collect()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::object();
+        o.set("format", Json::Str(SHARD_FORMAT.into()))
+            .set("protocol", Json::from_u64(PROTOCOL_VERSION as u64))
+            .set("shard", Json::from_usize(self.shard))
+            .set("num_splitters", Json::from_usize(self.num_splitters))
+            .set("redundancy", Json::from_usize(self.redundancy))
+            .set("schema", schema_to_json(&self.schema, self.rows))
+            .set("labels_file", Json::Str(self.labels_file.clone()))
+            .set("labels_checksum", hex_u64(self.labels_checksum))
+            .set(
+                "columns",
+                Json::Arr(
+                    self.columns
+                        .iter()
+                        .map(|c| {
+                            let mut cj = Json::object();
+                            cj.set("index", Json::from_usize(c.index))
+                                .set("file", Json::Str(c.file.clone()))
+                                .set("checksum", hex_u64(c.checksum));
+                            if let (Some(sf), Some(sc)) = (&c.sorted_file, c.sorted_checksum) {
+                                cj.set("sorted_file", Json::Str(sf.clone()))
+                                    .set("sorted_checksum", hex_u64(sc));
+                            }
+                            cj
+                        })
+                        .collect(),
+                ),
+            );
+        o
+    }
+
+    pub fn from_json(v: &Json) -> Result<ShardManifest> {
+        ensure!(
+            v.get("format")?.as_str()? == SHARD_FORMAT,
+            "not a {SHARD_FORMAT} manifest"
+        );
+        let protocol = v.get("protocol")?.as_u32()?;
+        ensure!(
+            protocol == PROTOCOL_VERSION,
+            "shard pack speaks protocol v{protocol}, this build v{PROTOCOL_VERSION}"
+        );
+        let (schema, rows) = schema_from_json(v.get("schema")?)?;
+        let columns = v
+            .get("columns")?
+            .as_arr()?
+            .iter()
+            .map(|cj| {
+                Ok(ShardColumn {
+                    index: cj.get("index")?.as_usize()?,
+                    file: cj.get("file")?.as_str()?.to_string(),
+                    checksum: parse_hex_u64(cj.get("checksum")?)?,
+                    sorted_file: match cj.get_opt("sorted_file") {
+                        Some(x) => Some(x.as_str()?.to_string()),
+                        None => None,
+                    },
+                    sorted_checksum: match cj.get_opt("sorted_checksum") {
+                        Some(x) => Some(parse_hex_u64(x)?),
+                        None => None,
+                    },
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(ShardManifest {
+            shard: v.get("shard")?.as_usize()?,
+            num_splitters: v.get("num_splitters")?.as_usize()?,
+            redundancy: v.get("redundancy")?.as_usize()?,
+            rows,
+            schema,
+            columns,
+            labels_file: v.get("labels_file")?.as_str()?.to_string(),
+            labels_checksum: parse_hex_u64(v.get("labels_checksum")?)?,
+        })
+    }
+
+    /// Write `manifest.json` into the shard directory.
+    pub fn save(&self, dir: &Path) -> Result<()> {
+        std::fs::write(dir.join(Self::FILE), self.to_json().to_string())?;
+        Ok(())
+    }
+
+    /// Load `manifest.json` from a shard directory.
+    pub fn load(dir: &Path) -> Result<ShardManifest> {
+        let path = dir.join(Self::FILE);
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::from_json(&Json::parse(&text)?)
+            .with_context(|| format!("parsing {}", path.display()))
+    }
+}
+
+/// One shard's entry in the cluster manifest.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShardEntry {
+    pub shard: usize,
+    /// Shard directory, relative to the cluster manifest's directory.
+    pub dir: String,
+    /// Columns the shard holds (must equal the topology's ownership).
+    pub columns: Vec<usize>,
+}
+
+/// The deployment map `drf shard` writes next to the shard directories
+/// (`cluster.json`) and `drf train --engine cluster --manifest` reads.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterManifest {
+    pub num_splitters: usize,
+    pub redundancy: usize,
+    pub rows: usize,
+    pub num_features: usize,
+    pub num_classes: u32,
+    pub shards: Vec<ShardEntry>,
+    /// Worker addresses (`host:port`), one per shard in shard order.
+    /// May be empty at shard time — a deployment fills it in (or the
+    /// leader overrides with `--workers`).
+    pub workers: Vec<String>,
+}
+
+impl ClusterManifest {
+    pub const FILE: &'static str = "cluster.json";
+
+    /// The topology parameters the packs were cut for.
+    pub fn topology_params(&self) -> TopologyParams {
+        TopologyParams {
+            num_splitters: Some(self.num_splitters),
+            redundancy: self.redundancy,
+            ..Default::default()
+        }
+    }
+
+    /// Rebuild the ownership map and check it against the recorded
+    /// shard column lists (a stale manifest must not silently train).
+    pub fn topology(&self) -> Result<Topology> {
+        let topo = Topology::new(self.num_features, &self.topology_params());
+        ensure!(
+            self.shards.len() == topo.num_splitters(),
+            "manifest lists {} shards for a {}-splitter topology",
+            self.shards.len(),
+            topo.num_splitters()
+        );
+        for (s, entry) in self.shards.iter().enumerate() {
+            ensure!(entry.shard == s, "shard entries out of order at {s}");
+            let expect = topo.columns_of(s);
+            ensure!(
+                entry.columns == expect,
+                "shard {s} holds columns {:?}, topology assigns {:?}",
+                entry.columns,
+                expect
+            );
+        }
+        Ok(topo)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::object();
+        o.set("format", Json::Str(CLUSTER_FORMAT.into()))
+            .set("protocol", Json::from_u64(PROTOCOL_VERSION as u64))
+            .set("num_splitters", Json::from_usize(self.num_splitters))
+            .set("redundancy", Json::from_usize(self.redundancy))
+            .set("rows", Json::from_usize(self.rows))
+            .set("num_features", Json::from_usize(self.num_features))
+            .set("num_classes", Json::from_u64(self.num_classes as u64))
+            .set(
+                "shards",
+                Json::Arr(
+                    self.shards
+                        .iter()
+                        .map(|e| {
+                            let mut ej = Json::object();
+                            ej.set("shard", Json::from_usize(e.shard))
+                                .set("dir", Json::Str(e.dir.clone()))
+                                .set(
+                                    "columns",
+                                    Json::Arr(
+                                        e.columns.iter().map(|&c| Json::from_usize(c)).collect(),
+                                    ),
+                                );
+                            ej
+                        })
+                        .collect(),
+                ),
+            )
+            .set(
+                "workers",
+                Json::Arr(self.workers.iter().map(|w| Json::Str(w.clone())).collect()),
+            );
+        o
+    }
+
+    pub fn from_json(v: &Json) -> Result<ClusterManifest> {
+        ensure!(
+            v.get("format")?.as_str()? == CLUSTER_FORMAT,
+            "not a {CLUSTER_FORMAT} manifest"
+        );
+        let protocol = v.get("protocol")?.as_u32()?;
+        ensure!(
+            protocol == PROTOCOL_VERSION,
+            "cluster manifest speaks protocol v{protocol}, this build v{PROTOCOL_VERSION}"
+        );
+        let shards = v
+            .get("shards")?
+            .as_arr()?
+            .iter()
+            .map(|ej| {
+                Ok(ShardEntry {
+                    shard: ej.get("shard")?.as_usize()?,
+                    dir: ej.get("dir")?.as_str()?.to_string(),
+                    columns: ej
+                        .get("columns")?
+                        .as_arr()?
+                        .iter()
+                        .map(|c| c.as_usize())
+                        .collect::<Result<Vec<_>>>()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let workers = match v.get_opt("workers") {
+            None => Vec::new(),
+            Some(ws) => ws
+                .as_arr()?
+                .iter()
+                .map(|w| Ok(w.as_str()?.to_string()))
+                .collect::<Result<Vec<_>>>()?,
+        };
+        Ok(ClusterManifest {
+            num_splitters: v.get("num_splitters")?.as_usize()?,
+            redundancy: v.get("redundancy")?.as_usize()?,
+            rows: v.get("rows")?.as_usize()?,
+            num_features: v.get("num_features")?.as_usize()?,
+            num_classes: v.get("num_classes")?.as_u32()?,
+            shards,
+            workers,
+        })
+    }
+
+    /// Write the manifest to `path` (conventionally
+    /// `<out_dir>/cluster.json`).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string())?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<ClusterManifest> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading cluster manifest {}", path.display()))?;
+        Self::from_json(&Json::parse(&text)?)
+            .with_context(|| format!("parsing {}", path.display()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::schema::ColumnSpec;
+
+    fn sample_shard() -> ShardManifest {
+        ShardManifest {
+            shard: 1,
+            num_splitters: 3,
+            redundancy: 2,
+            rows: 1000,
+            schema: Schema::new(
+                vec![
+                    ColumnSpec::numerical("a"),
+                    ColumnSpec::categorical("b", 7),
+                    ColumnSpec::numerical("c"),
+                ],
+                2,
+            ),
+            columns: vec![
+                ShardColumn {
+                    index: 0,
+                    file: "col_0.drfc".into(),
+                    checksum: u64::MAX - 3,
+                    sorted_file: Some("col_0.sorted.drfc".into()),
+                    sorted_checksum: Some(42),
+                },
+                ShardColumn {
+                    index: 1,
+                    file: "col_1.drfc".into(),
+                    checksum: 7,
+                    sorted_file: None,
+                    sorted_checksum: None,
+                },
+            ],
+            labels_file: "labels.drfc".into(),
+            labels_checksum: 0x0123_4567_89ab_cdef,
+        }
+    }
+
+    #[test]
+    fn shard_manifest_roundtrip() {
+        let m = sample_shard();
+        let back = ShardManifest::from_json(&Json::parse(&m.to_json().to_string()).unwrap())
+            .unwrap();
+        // Full-range u64 checksums must survive the JSON trip exactly
+        // (they travel as hex strings, not f64).
+        assert_eq!(m, back);
+        assert_eq!(back.column_indices(), vec![0, 1]);
+    }
+
+    #[test]
+    fn cluster_manifest_roundtrip_and_topology() {
+        let topo = Topology::new(
+            6,
+            &TopologyParams {
+                num_splitters: Some(3),
+                redundancy: 1,
+                ..Default::default()
+            },
+        );
+        let m = ClusterManifest {
+            num_splitters: 3,
+            redundancy: 1,
+            rows: 500,
+            num_features: 6,
+            num_classes: 2,
+            shards: (0..3)
+                .map(|s| ShardEntry {
+                    shard: s,
+                    dir: format!("shard_{s}"),
+                    columns: topo.columns_of(s),
+                })
+                .collect(),
+            workers: vec!["127.0.0.1:1".into(), "127.0.0.1:2".into(), "127.0.0.1:3".into()],
+        };
+        let back =
+            ClusterManifest::from_json(&Json::parse(&m.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(m, back);
+        back.topology().unwrap();
+
+        // A tampered column list must be rejected.
+        let mut bad = back.clone();
+        bad.shards[0].columns = vec![1, 2, 3];
+        assert!(bad.topology().is_err());
+    }
+
+    #[test]
+    fn foreign_json_rejected() {
+        assert!(ShardManifest::from_json(&Json::parse("{\"format\": \"nope\"}").unwrap()).is_err());
+        assert!(
+            ClusterManifest::from_json(&Json::parse("{\"format\": \"nope\"}").unwrap()).is_err()
+        );
+    }
+
+    #[test]
+    fn checksum_is_stable_and_sensitive() {
+        let dir = crate::util::tempdir().unwrap();
+        let p = dir.path().join("f");
+        std::fs::write(&p, b"hello drfc").unwrap();
+        let a = checksum_file(&p).unwrap();
+        assert_eq!(a, checksum_file(&p).unwrap(), "deterministic");
+        std::fs::write(&p, b"hello drfd").unwrap();
+        assert_ne!(a, checksum_file(&p).unwrap(), "one flipped byte changes it");
+        assert!(checksum_file(&dir.path().join("missing")).is_err());
+    }
+}

@@ -1,0 +1,39 @@
+//! `drf::cluster` — the sharded multi-process deployment plane.
+//!
+//! The coordinator's engines up to here all ran splitters inside the
+//! leader process; this module makes the paper's distribution *literal*
+//! across OS processes and machines. Three pieces, one lifecycle:
+//!
+//! 1. **Shard** ([`shard`]): `drf shard` cuts a prepared dataset by the
+//!    [`Topology`] ownership map into per-splitter shard packs —
+//!    presorted DRFC v2 column files plus a JSON [`ShardManifest`]
+//!    (schema, topology parameters, redundancy, per-column FNV-1a
+//!    checksums) and a top-level [`ClusterManifest`] deployment map.
+//! 2. **Worker** ([`worker`]): `drf worker --shard DIR --addr A:P`
+//!    loads a pack through the existing
+//!    [`ColumnStore`](crate::data::store::ColumnStore) backends
+//!    (streaming from disk, or `--preload`ed into RAM), verifies the
+//!    checksums, and serves the splitter wire protocol. Training
+//!    configuration arrives with the leader's Hello handshake — a
+//!    worker binary is deployment-agnostic.
+//! 3. **Leader** ([`engine`]): `drf train --engine cluster
+//!    --manifest cluster.json` connects a [`ClusterPool`] to the fleet
+//!    (connect retry/timeout, Hello validation of protocol version,
+//!    shard ids, column inventories, and row counts) and trains over
+//!    it. Composed with the generic
+//!    [`RecoveringPool`](crate::coordinator::recovery::RecoveringPool),
+//!    a worker killed and restarted mid-training is rebuilt by
+//!    replaying the level-update log — trees stay bit-identical to
+//!    `--engine direct` (asserted end-to-end in `tests/cluster.rs`).
+//!
+//! [`Topology`]: crate::coordinator::topology::Topology
+
+pub mod engine;
+pub mod manifest;
+pub mod shard;
+pub mod worker;
+
+pub use engine::{hello_template, ClusterOptions, ClusterPool};
+pub use manifest::{checksum_file, ClusterManifest, ShardColumn, ShardEntry, ShardManifest};
+pub use shard::{write_shards, ShardOptions};
+pub use worker::{load_shard, LoadedShard, WorkerOptions, WorkerServer};

@@ -1,0 +1,218 @@
+//! The shard writer: `drf shard` partitions a dataset by the
+//! [`Topology`] ownership map into per-splitter shard packs.
+//!
+//! One pack per splitter, each a directory of chunk-tabled DRFC v2
+//! column files (raw + presorted for numerical columns), the replicated
+//! label column, and a [`ShardManifest`]. This is the paper's
+//! dataset-preparation phase (§2.1) made deployable: prepare and
+//! presort once, then hand each directory to a `drf worker` on any
+//! machine — workers never re-sort and never see columns they don't
+//! own.
+
+use super::manifest::{checksum_file, ClusterManifest, ShardColumn, ShardEntry, ShardManifest};
+use crate::config::TopologyParams;
+use crate::coordinator::topology::Topology;
+use crate::data::disk::{self, Layout};
+use crate::data::io_stats::IoStats;
+use crate::data::{Column, Dataset};
+use crate::Result;
+use std::path::Path;
+
+/// Knobs of the shard writer.
+#[derive(Debug, Clone)]
+pub struct ShardOptions {
+    /// Records per DRFC v2 chunk in the written column files.
+    pub chunk_rows: u32,
+    /// Worker addresses to record in the cluster manifest (one per
+    /// shard, in shard order); empty = fill in at deploy time.
+    pub workers: Vec<String>,
+}
+
+impl Default for ShardOptions {
+    fn default() -> Self {
+        Self {
+            chunk_rows: disk::DEFAULT_CHUNK_ROWS as u32,
+            workers: Vec::new(),
+        }
+    }
+}
+
+/// Cut `ds` into shard packs under `out_dir` (one `shard_<s>/` per
+/// splitter plus `cluster.json`) and return the cluster manifest.
+pub fn write_shards(
+    ds: &Dataset,
+    params: &TopologyParams,
+    out_dir: &Path,
+    opts: &ShardOptions,
+    stats: IoStats,
+) -> Result<ClusterManifest> {
+    let topo = Topology::new(ds.num_features(), params);
+    anyhow::ensure!(
+        opts.workers.is_empty() || opts.workers.len() == topo.num_splitters(),
+        "{} worker addresses for {} shards",
+        opts.workers.len(),
+        topo.num_splitters()
+    );
+    std::fs::create_dir_all(out_dir)?;
+    let layout = Layout::V2 {
+        chunk_rows: opts.chunk_rows,
+    };
+
+    let mut shards = Vec::with_capacity(topo.num_splitters());
+    for s in 0..topo.num_splitters() {
+        let dir_name = format!("shard_{s}");
+        let dir = out_dir.join(&dir_name);
+        std::fs::create_dir_all(&dir)?;
+
+        // The label column is replicated on every splitter (§2.1).
+        let labels_file = "labels.drfc".to_string();
+        disk::write_categorical_with(&dir.join(&labels_file), ds.labels(), layout, stats.clone())?;
+        let labels_checksum = checksum_file(&dir.join(&labels_file))?;
+
+        let owned = topo.columns_of(s);
+        let mut columns = Vec::with_capacity(owned.len());
+        for &j in &owned {
+            let file = format!("col_{j}.drfc");
+            let raw = dir.join(&file);
+            let (sorted_file, sorted_checksum) = match ds.column(j) {
+                Column::Numerical(vals) => {
+                    disk::write_numerical_with(&raw, vals, layout, stats.clone())?;
+                    let sf = format!("col_{j}.sorted.drfc");
+                    disk::write_sorted_with(
+                        &dir.join(&sf),
+                        &ds.column(j).presort(),
+                        layout,
+                        stats.clone(),
+                    )?;
+                    let sc = checksum_file(&dir.join(&sf))?;
+                    (Some(sf), Some(sc))
+                }
+                Column::Categorical { values, .. } => {
+                    disk::write_categorical_with(&raw, values, layout, stats.clone())?;
+                    (None, None)
+                }
+            };
+            columns.push(ShardColumn {
+                index: j,
+                checksum: checksum_file(&raw)?,
+                file,
+                sorted_file,
+                sorted_checksum,
+            });
+        }
+
+        ShardManifest {
+            shard: s,
+            num_splitters: topo.num_splitters(),
+            redundancy: topo.redundancy(),
+            rows: ds.num_rows(),
+            schema: ds.schema().clone(),
+            columns,
+            labels_file,
+            labels_checksum,
+        }
+        .save(&dir)?;
+        shards.push(ShardEntry {
+            shard: s,
+            dir: dir_name,
+            columns: owned,
+        });
+    }
+
+    let cluster = ClusterManifest {
+        num_splitters: topo.num_splitters(),
+        redundancy: topo.redundancy(),
+        rows: ds.num_rows(),
+        num_features: ds.num_features(),
+        num_classes: ds.num_classes(),
+        shards,
+        workers: opts.workers.clone(),
+    };
+    cluster.save(&out_dir.join(ClusterManifest::FILE))?;
+    Ok(cluster)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::LeoLikeSpec;
+
+    #[test]
+    fn shards_cover_every_column_with_valid_checksums() {
+        // Leo-like: mixed numerical + categorical columns.
+        let ds = LeoLikeSpec::new(300, 5).generate();
+        let dir = crate::util::tempdir().unwrap();
+        let params = TopologyParams {
+            num_splitters: Some(3),
+            redundancy: 2,
+            ..Default::default()
+        };
+        let cluster = write_shards(
+            &ds,
+            &params,
+            dir.path(),
+            &ShardOptions {
+                chunk_rows: 64,
+                ..Default::default()
+            },
+            IoStats::new(),
+        )
+        .unwrap();
+        assert_eq!(cluster.num_splitters, 3);
+        assert_eq!(cluster.rows, 300);
+        cluster.topology().unwrap();
+
+        // With redundancy 2 every column appears in exactly 2 shards.
+        let mut owners = vec![0usize; ds.num_features()];
+        for e in &cluster.shards {
+            let m = ShardManifest::load(&dir.path().join(&e.dir)).unwrap();
+            assert_eq!(m.shard, e.shard);
+            assert_eq!(m.column_indices(), e.columns);
+            assert_eq!(m.rows, 300);
+            let shard_dir = dir.path().join(&e.dir);
+            assert_eq!(
+                checksum_file(&shard_dir.join(&m.labels_file)).unwrap(),
+                m.labels_checksum
+            );
+            for c in &m.columns {
+                owners[c.index] += 1;
+                assert_eq!(
+                    checksum_file(&shard_dir.join(&c.file)).unwrap(),
+                    c.checksum,
+                    "column {} checksum",
+                    c.index
+                );
+                let numerical = ds.schema().columns[c.index].ctype.is_numerical();
+                assert_eq!(c.sorted_file.is_some(), numerical);
+                if let (Some(sf), Some(sc)) = (&c.sorted_file, c.sorted_checksum) {
+                    assert_eq!(checksum_file(&shard_dir.join(sf)).unwrap(), sc);
+                }
+            }
+        }
+        assert!(owners.iter().all(|&n| n == 2), "redundancy 2: {owners:?}");
+
+        // The cluster manifest reloads from disk.
+        let back = ClusterManifest::load(&dir.path().join(ClusterManifest::FILE)).unwrap();
+        assert_eq!(back, cluster);
+    }
+
+    #[test]
+    fn worker_count_mismatch_rejected() {
+        let ds = LeoLikeSpec::new(50, 1).generate();
+        let dir = crate::util::tempdir().unwrap();
+        let err = write_shards(
+            &ds,
+            &TopologyParams {
+                num_splitters: Some(2),
+                ..Default::default()
+            },
+            dir.path(),
+            &ShardOptions {
+                workers: vec!["127.0.0.1:1".into()],
+                ..Default::default()
+            },
+            IoStats::new(),
+        );
+        assert!(err.is_err());
+    }
+}

@@ -1,0 +1,469 @@
+//! The standalone splitter worker: `drf worker --shard DIR --addr A:P`.
+//!
+//! A worker is a shard pack brought to life: it loads (and, by default,
+//! checksums) the pack written by `drf shard`, opens the columns
+//! through the existing [`ColumnStore`] backends — streaming from disk,
+//! or preloaded into RAM with `--preload` — and serves the splitter
+//! wire protocol on a TCP listener. It starts with **no training
+//! configuration**: the leader's Hello handshake carries the seed,
+//! bagging/sampling modes, and scorer, and the worker builds its
+//! [`SplitterCore`] from them (validating that the pack's topology
+//! matches what the leader is training). A worker that is killed and
+//! restarted comes back empty; the leader's recovery layer replays the
+//! level-update log to rebuild its per-tree state.
+
+use super::manifest::{checksum_file, ShardManifest};
+use crate::config::PruneMode;
+use crate::coordinator::splitter::{SplitterConfig, SplitterCore};
+use crate::coordinator::tcp::{handle_request, hello_info_for};
+use crate::coordinator::wire::{
+    decode_request, encode_response, read_frame, write_frame, HelloConfig, HelloInfo, Request,
+    Response, PROTOCOL_VERSION,
+};
+use crate::data::disk::ColumnReader;
+use crate::data::io_stats::IoStats;
+use crate::data::store::{ColumnFiles, ColumnStore, DiskStore, MemStore};
+use crate::rng::{Bagger, BaggingMode, FeatureSampling};
+use crate::splits::scorer::ScoreKind;
+use crate::Result;
+use anyhow::{ensure, Context};
+use std::collections::BTreeMap;
+use std::io::{BufReader, BufWriter};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// How a worker loads and serves its shard pack.
+#[derive(Debug, Clone)]
+pub struct WorkerOptions {
+    /// Concurrent column scans inside the splitter (wall clock only).
+    pub scan_threads: usize,
+    /// Materialize the pack into RAM instead of streaming from disk.
+    pub preload: bool,
+    /// Checksum every file against the manifest before serving.
+    pub verify: bool,
+}
+
+impl Default for WorkerOptions {
+    fn default() -> Self {
+        Self {
+            scan_threads: 1,
+            preload: false,
+            verify: true,
+        }
+    }
+}
+
+/// A shard pack opened and ready to serve.
+pub struct LoadedShard {
+    pub manifest: ShardManifest,
+    pub storage: Arc<dyn ColumnStore>,
+    pub labels: Arc<Vec<u32>>,
+    /// Disk I/O counters of this worker (header validation, loading,
+    /// and every subsequent training scan).
+    pub stats: IoStats,
+}
+
+/// Open (and optionally verify) the shard pack in `dir`.
+pub fn load_shard(dir: &std::path::Path, opts: &WorkerOptions) -> Result<LoadedShard> {
+    let manifest = ShardManifest::load(dir)?;
+    if opts.verify {
+        let lc = checksum_file(&dir.join(&manifest.labels_file))?;
+        ensure!(
+            lc == manifest.labels_checksum,
+            "label column {} failed its checksum",
+            manifest.labels_file
+        );
+        for c in &manifest.columns {
+            ensure!(
+                checksum_file(&dir.join(&c.file))? == c.checksum,
+                "column {} file {} failed its checksum",
+                c.index,
+                c.file
+            );
+            if let (Some(sf), Some(sc)) = (&c.sorted_file, c.sorted_checksum) {
+                ensure!(
+                    checksum_file(&dir.join(sf))? == sc,
+                    "column {} presorted file {sf} failed its checksum",
+                    c.index
+                );
+            }
+        }
+    }
+
+    let stats = IoStats::new();
+    let labels = ColumnReader::open(&dir.join(&manifest.labels_file), stats.clone())?
+        .read_all_u32()?;
+    ensure!(
+        labels.len() == manifest.rows,
+        "label column has {} rows, manifest declares {}",
+        labels.len(),
+        manifest.rows
+    );
+
+    let mut files = BTreeMap::new();
+    for c in &manifest.columns {
+        let spec = manifest
+            .schema
+            .columns
+            .get(c.index)
+            .with_context(|| format!("column {} is not in the schema", c.index))?;
+        ensure!(
+            c.sorted_file.is_some() == spec.ctype.is_numerical(),
+            "column {}: presorted file presence does not match its type",
+            c.index
+        );
+        files.insert(
+            c.index,
+            ColumnFiles {
+                raw: dir.join(&c.file),
+                sorted: c.sorted_file.as_ref().map(|s| dir.join(s)),
+                ctype: spec.ctype,
+            },
+        );
+    }
+
+    let storage: Arc<dyn ColumnStore> = if opts.preload {
+        // One pass per file through the disk store, then serve from RAM
+        // (the presorted views come from the pack — nothing re-sorts).
+        let d = DiskStore::open(files, stats.clone())?;
+        let mut cols = BTreeMap::new();
+        let mut sorted = BTreeMap::new();
+        for j in d.columns() {
+            if manifest.schema.columns[j].ctype.is_numerical() {
+                sorted.insert(j, d.read_sorted(j)?);
+            }
+            cols.insert(j, d.read_raw(j)?);
+        }
+        Arc::new(MemStore::from_parts(cols, sorted))
+    } else {
+        Arc::new(DiskStore::open(files, stats.clone())?)
+    };
+
+    Ok(LoadedShard {
+        manifest,
+        storage,
+        labels: Arc::new(labels),
+        stats,
+    })
+}
+
+/// Shared worker state: the loaded pack plus the splitter core the
+/// leader's Hello configures (all connections see the same core, so a
+/// reconnect does not wipe per-tree state).
+struct WorkerState {
+    shard: LoadedShard,
+    scan_threads: usize,
+    core: Mutex<Option<(HelloConfig, Arc<SplitterCore>)>>,
+}
+
+impl WorkerState {
+    /// Handle the Hello handshake: validate identity/topology, build
+    /// (or keep) the splitter core, report the inventory.
+    fn configure(&self, h: &HelloConfig) -> Result<HelloInfo> {
+        let m = &self.shard.manifest;
+        ensure!(
+            h.protocol == PROTOCOL_VERSION,
+            "protocol mismatch: leader speaks v{}, this worker v{PROTOCOL_VERSION}",
+            h.protocol
+        );
+        ensure!(
+            h.shard as usize == m.shard,
+            "shard mismatch: leader expects shard {}, this pack is shard {}",
+            h.shard,
+            m.shard
+        );
+        ensure!(
+            h.num_splitters as usize == m.num_splitters
+                && h.redundancy as usize == m.redundancy,
+            "topology mismatch: leader trains {} splitters x redundancy {}, \
+             pack was cut for {} x {}",
+            h.num_splitters,
+            h.redundancy,
+            m.num_splitters,
+            m.redundancy
+        );
+
+        let mut guard = self.core.lock().unwrap();
+        let rebuild = match guard.as_ref() {
+            Some((cfg, _)) => cfg != h,
+            None => true,
+        };
+        if rebuild {
+            let scfg = SplitterConfig {
+                seed: h.seed,
+                bagger: Bagger::new(h.seed, BaggingMode::parse(&h.bagging)?),
+                feature_sampling: FeatureSampling::parse(&h.sampling)?,
+                num_candidates: h.num_candidates as usize,
+                score_kind: ScoreKind::parse(&h.score_kind)?,
+                prune: match h.prune_threshold {
+                    None => PruneMode::Never,
+                    Some(threshold) => PruneMode::Adaptive { threshold },
+                },
+                scan_threads: self.scan_threads,
+            };
+            let core = SplitterCore::new(
+                m.shard,
+                m.schema.clone(),
+                self.shard.storage.clone(),
+                self.shard.labels.clone(),
+                scfg,
+                self.shard.stats.clone(),
+            );
+            *guard = Some((h.clone(), Arc::new(core)));
+        }
+        Ok(hello_info_for(&guard.as_ref().unwrap().1))
+    }
+
+    fn core(&self) -> Option<Arc<SplitterCore>> {
+        self.core.lock().unwrap().as_ref().map(|(_, c)| c.clone())
+    }
+}
+
+/// A running worker: the TCP listener serving one shard pack. Dropping
+/// it stops accepting new connections.
+pub struct WorkerServer {
+    addr: std::net::SocketAddr,
+    accept_handle: Option<std::thread::JoinHandle<()>>,
+    shutdown: Arc<AtomicBool>,
+}
+
+impl WorkerServer {
+    /// Bind `addr` (`host:0` picks an ephemeral port — see
+    /// [`WorkerServer::addr`]) and serve the shard.
+    pub fn spawn(shard: LoadedShard, addr: &str, scan_threads: usize) -> Result<WorkerServer> {
+        let listener =
+            TcpListener::bind(addr).with_context(|| format!("binding worker to {addr}"))?;
+        let addr = listener.local_addr()?;
+        let state = Arc::new(WorkerState {
+            shard,
+            scan_threads,
+            core: Mutex::new(None),
+        });
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let shutdown2 = shutdown.clone();
+        let accept_handle = std::thread::Builder::new()
+            .name(format!("drf-worker-{}", state.shard.manifest.shard))
+            .spawn(move || {
+                for conn in listener.incoming() {
+                    if shutdown2.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    let stream = match conn {
+                        Ok(s) => s,
+                        Err(_) => {
+                            // Transient accept failures (ECONNABORTED,
+                            // fd pressure) must not take down a
+                            // deployment worker's listener for good.
+                            std::thread::sleep(std::time::Duration::from_millis(10));
+                            continue;
+                        }
+                    };
+                    let state = state.clone();
+                    let _ = std::thread::Builder::new()
+                        .name("drf-worker-conn".into())
+                        .spawn(move || {
+                            let _ = serve_connection(&state, stream);
+                        });
+                }
+            })?;
+        Ok(WorkerServer {
+            addr,
+            accept_handle: Some(accept_handle),
+            shutdown,
+        })
+    }
+
+    /// The actually bound address (resolves `:0` bindings).
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.addr
+    }
+}
+
+impl Drop for WorkerServer {
+    fn drop(&mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        // Poke the listener so the accept loop wakes and exits.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.accept_handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// One connection's request loop.
+fn serve_connection(state: &WorkerState, stream: TcpStream) -> Result<()> {
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = BufWriter::new(stream);
+    loop {
+        let frame = match read_frame(&mut reader) {
+            Ok(f) => f,
+            Err(_) => return Ok(()), // peer closed
+        };
+        let response = match decode_request(&frame) {
+            Err(e) => Response::Err(format!("bad request: {e}")),
+            Ok(Request::Shutdown) => {
+                write_frame(&mut writer, &encode_response(&Response::Ok))?;
+                return Ok(());
+            }
+            Ok(Request::Hello(h)) => match state.configure(&h) {
+                Ok(info) => Response::Hello(info),
+                Err(e) => Response::Err(format!("{e:#}")),
+            },
+            Ok(req) => match state.core() {
+                None => Response::Err("no handshake: send Hello before other requests".into()),
+                Some(core) => handle_request(&core, req),
+            },
+        };
+        write_frame(&mut writer, &encode_response(&response))?;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::shard::{write_shards, ShardOptions};
+    use crate::config::TopologyParams;
+    use crate::coordinator::wire::{decode_response, encode_request};
+    use crate::data::synthetic::{Family, SyntheticSpec};
+
+    fn shard_a_dataset(dir: &std::path::Path, splitters: usize) -> crate::data::Dataset {
+        let ds = SyntheticSpec::new(Family::Majority { informative: 3 }, 200, 6, 11).generate();
+        write_shards(
+            &ds,
+            &TopologyParams {
+                num_splitters: Some(splitters),
+                ..Default::default()
+            },
+            dir,
+            &ShardOptions {
+                chunk_rows: 48,
+                ..Default::default()
+            },
+            IoStats::new(),
+        )
+        .unwrap();
+        ds
+    }
+
+    fn hello(shard: u32, splitters: u32) -> HelloConfig {
+        HelloConfig {
+            protocol: PROTOCOL_VERSION,
+            shard,
+            num_splitters: splitters,
+            redundancy: 1,
+            seed: 9,
+            bagging: "poisson".into(),
+            sampling: "per_node".into(),
+            num_candidates: 3,
+            score_kind: "gini".into(),
+            prune_threshold: None,
+        }
+    }
+
+    fn roundtrip(stream: &TcpStream, req: &Request) -> Response {
+        let mut r = BufReader::new(stream.try_clone().unwrap());
+        let mut w = BufWriter::new(stream.try_clone().unwrap());
+        write_frame(&mut w, &encode_request(req)).unwrap();
+        decode_response(&read_frame(&mut r).unwrap()).unwrap()
+    }
+
+    #[test]
+    fn worker_serves_after_handshake_only() {
+        let dir = crate::util::tempdir().unwrap();
+        let ds = shard_a_dataset(dir.path(), 2);
+        let shard = load_shard(&dir.path().join("shard_0"), &WorkerOptions::default()).unwrap();
+        let server = WorkerServer::spawn(shard, "127.0.0.1:0", 1).unwrap();
+        let stream = TcpStream::connect(server.addr()).unwrap();
+
+        // Before Hello: refused.
+        match roundtrip(&stream, &Request::StartTree(0)) {
+            Response::Err(msg) => assert!(msg.contains("no handshake"), "{msg}"),
+            r => panic!("expected Err, got {r:?}"),
+        }
+        // Wrong shard id: refused.
+        match roundtrip(&stream, &Request::Hello(hello(1, 2))) {
+            Response::Err(msg) => assert!(msg.contains("shard mismatch"), "{msg}"),
+            r => panic!("expected Err, got {r:?}"),
+        }
+        // Wrong topology: refused.
+        match roundtrip(&stream, &Request::Hello(hello(0, 3))) {
+            Response::Err(msg) => assert!(msg.contains("topology mismatch"), "{msg}"),
+            r => panic!("expected Err, got {r:?}"),
+        }
+        // Correct Hello: inventory comes back.
+        match roundtrip(&stream, &Request::Hello(hello(0, 2))) {
+            Response::Hello(info) => {
+                assert_eq!(info.shard, 0);
+                assert_eq!(info.rows, 200);
+                assert_eq!(info.num_classes, ds.num_classes());
+                let cols: Vec<usize> = info.columns.iter().map(|&c| c as usize).collect();
+                assert_eq!(cols, vec![0, 2, 4], "round-robin shard 0 of 2");
+            }
+            r => panic!("expected Hello, got {r:?}"),
+        }
+        // Now real RPCs flow and root stats match the dataset's bagged
+        // histogram (computable locally because bagging is seeded).
+        match roundtrip(&stream, &Request::StartTree(0)) {
+            Response::Ok => {}
+            r => panic!("expected Ok, got {r:?}"),
+        }
+        match roundtrip(&stream, &Request::RootStats(0)) {
+            Response::RootStats(v) => assert_eq!(v.len(), ds.num_classes() as usize),
+            r => panic!("expected RootStats, got {r:?}"),
+        }
+    }
+
+    #[test]
+    fn preloaded_worker_matches_streaming() {
+        let dir = crate::util::tempdir().unwrap();
+        shard_a_dataset(dir.path(), 2);
+        let sdir = dir.path().join("shard_1");
+        let streaming = load_shard(&sdir, &WorkerOptions::default()).unwrap();
+        let preloaded = load_shard(
+            &sdir,
+            &WorkerOptions {
+                preload: true,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert_eq!(streaming.storage.columns(), preloaded.storage.columns());
+        for j in streaming.storage.columns() {
+            assert_eq!(
+                streaming.storage.read_raw(j).unwrap(),
+                preloaded.storage.read_raw(j).unwrap(),
+                "column {j}"
+            );
+        }
+        assert_eq!(streaming.labels, preloaded.labels);
+    }
+
+    #[test]
+    fn corrupt_pack_refused() {
+        let dir = crate::util::tempdir().unwrap();
+        shard_a_dataset(dir.path(), 2);
+        let sdir = dir.path().join("shard_0");
+        // Flip one payload byte in a column file.
+        let m = ShardManifest::load(&sdir).unwrap();
+        let target = sdir.join(&m.columns[0].file);
+        let mut bytes = std::fs::read(&target).unwrap();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0xFF;
+        std::fs::write(&target, &bytes).unwrap();
+        let err = load_shard(&sdir, &WorkerOptions::default()).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("checksum"),
+            "unexpected error: {err:#}"
+        );
+        // --no-verify skips the check and still opens (header intact).
+        load_shard(
+            &sdir,
+            &WorkerOptions {
+                verify: false,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+    }
+}

@@ -182,8 +182,14 @@ pub enum Engine {
     /// run concurrently.
     Threaded,
     /// Splitters served over localhost TCP sockets with the binary wire
-    /// codec — the fully literal distributed mode.
+    /// codec — the fully literal distributed mode (still spawned by
+    /// the leader process).
     Tcp,
+    /// Remote `drf worker` processes located by a cluster manifest
+    /// (`drf shard` output): the leader spawns nothing, connects to the
+    /// fleet, validates it via the Hello handshake, and recovers
+    /// restarted workers by replaying the level-update log.
+    Cluster,
 }
 
 impl Default for Engine {
@@ -208,6 +214,12 @@ pub struct TrainConfig {
     pub scan_threads: usize,
     /// Directory holding AOT artifacts (for `ScorerBackend::Xla`).
     pub artifacts_dir: Option<std::path::PathBuf>,
+    /// Cluster manifest (`cluster.json` from `drf shard`); required by
+    /// [`Engine::Cluster`], ignored otherwise.
+    pub cluster_manifest: Option<std::path::PathBuf>,
+    /// Worker addresses (`host:port`, one per shard in shard order).
+    /// Empty = use the addresses recorded in the cluster manifest.
+    pub cluster_workers: Vec<String>,
 }
 
 impl Default for TrainConfig {
@@ -221,6 +233,8 @@ impl Default for TrainConfig {
             engine: Engine::default(),
             scan_threads: 1,
             artifacts_dir: None,
+            cluster_manifest: None,
+            cluster_workers: Vec::new(),
         }
     }
 }
@@ -234,6 +248,12 @@ impl TrainConfig {
             anyhow::ensure!(
                 (0.0..=1.0).contains(&threshold),
                 "prune threshold must be in [0,1]"
+            );
+        }
+        if self.engine == Engine::Cluster {
+            anyhow::ensure!(
+                self.cluster_manifest.is_some(),
+                "--engine cluster needs a cluster manifest (--manifest cluster.json)"
             );
         }
         Ok(())
@@ -309,6 +329,7 @@ impl TrainConfig {
                         Engine::Direct => "direct",
                         Engine::Threaded => "threaded",
                         Engine::Tcp => "tcp",
+                        Engine::Cluster => "cluster",
                     }
                     .into(),
                 ),
@@ -319,6 +340,22 @@ impl TrainConfig {
                     Some(p) => Json::Str(p.display().to_string()),
                     None => Json::Null,
                 },
+            )
+            .set(
+                "cluster_manifest",
+                match &self.cluster_manifest {
+                    Some(p) => Json::Str(p.display().to_string()),
+                    None => Json::Null,
+                },
+            )
+            .set(
+                "cluster_workers",
+                Json::Arr(
+                    self.cluster_workers
+                        .iter()
+                        .map(|w| Json::Str(w.clone()))
+                        .collect(),
+                ),
             );
         o
     }
@@ -404,6 +441,7 @@ impl TrainConfig {
                 "direct" => Engine::Direct,
                 "threaded" => Engine::Threaded,
                 "tcp" => Engine::Tcp,
+                "cluster" => Engine::Cluster,
                 s => anyhow::bail!("unknown engine '{s}'"),
             };
         }
@@ -412,6 +450,19 @@ impl TrainConfig {
                 Json::Null => None,
                 other => Some(std::path::PathBuf::from(other.as_str()?)),
             };
+        }
+        if let Some(x) = v.get_opt("cluster_manifest") {
+            cfg.cluster_manifest = match x {
+                Json::Null => None,
+                other => Some(std::path::PathBuf::from(other.as_str()?)),
+            };
+        }
+        if let Some(x) = v.get_opt("cluster_workers") {
+            cfg.cluster_workers = x
+                .as_arr()?
+                .iter()
+                .map(|w| Ok(w.as_str()?.to_string()))
+                .collect::<crate::Result<Vec<_>>>()?;
         }
         cfg.validate()?;
         Ok(cfg)
@@ -453,6 +504,21 @@ mod tests {
         cfg.storage = StorageMode::DiskV2;
         let back = TrainConfig::from_json(&cfg.to_json().to_string()).unwrap();
         assert_eq!(cfg, back);
+        // And the cluster engine with its manifest + worker list.
+        cfg.engine = Engine::Cluster;
+        cfg.cluster_manifest = Some(std::path::PathBuf::from("/tmp/cluster.json"));
+        cfg.cluster_workers = vec!["10.0.0.1:7777".into(), "10.0.0.2:7777".into()];
+        let back = TrainConfig::from_json(&cfg.to_json().to_string()).unwrap();
+        assert_eq!(cfg, back);
+    }
+
+    #[test]
+    fn cluster_engine_requires_manifest() {
+        let mut cfg = TrainConfig::default();
+        cfg.engine = Engine::Cluster;
+        assert!(cfg.validate().is_err());
+        cfg.cluster_manifest = Some(std::path::PathBuf::from("cluster.json"));
+        cfg.validate().unwrap();
     }
 
     #[test]

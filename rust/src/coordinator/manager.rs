@@ -68,6 +68,9 @@ impl Manager {
     /// Train a forest on `ds`. Returns the trees (index = tree id) and
     /// the training report.
     pub fn train(&self, ds: &Dataset) -> Result<(Vec<Tree>, TrainReport)> {
+        if self.cfg.engine == Engine::Cluster {
+            return self.train_cluster(ds);
+        }
         let sw = Stopwatch::start();
         let cfg = &self.cfg;
         let topology = Topology::new(ds.num_features(), &cfg.topology);
@@ -172,26 +175,80 @@ impl Manager {
                 trees_and_stats = self.train_sequential(&pool, &topology, ds)?;
                 pool_net = pool.net_stats();
             }
+            Engine::Cluster => unreachable!("handled above"),
         }
 
-        let mut trees = Vec::with_capacity(trees_and_stats.len());
-        let mut per_tree = Vec::with_capacity(trees_and_stats.len());
-        for (t, (tree, levels, secs)) in trees_and_stats.into_iter().enumerate() {
-            per_tree.push(TreeReport {
-                tree: t as u32,
-                seconds: secs,
-                levels,
-            });
-            trees.push(tree);
-        }
-        let report = TrainReport {
-            per_tree,
-            wall_seconds: sw.seconds(),
-            net: pool_net.snapshot(),
-            splitter_io: splitter_stats.iter().map(|s| s.snapshot()).collect(),
-            num_splitters: topology.num_splitters(),
+        Ok(assemble_report(
+            trees_and_stats,
+            sw.seconds(),
+            pool_net.snapshot(),
+            splitter_stats.iter().map(|s| s.snapshot()).collect(),
+            topology.num_splitters(),
+        ))
+    }
+
+    /// Train over a remote worker fleet (`Engine::Cluster`): the leader
+    /// spawns no splitters and loads no columns — it connects a
+    /// [`crate::cluster::ClusterPool`] to the addresses in the cluster
+    /// manifest (or `cluster_workers`), validates the fleet via the
+    /// Hello handshake, and wraps it in the replay-recovery layer so a
+    /// worker killed and restarted mid-training rejoins transparently.
+    /// `ds` anchors the leader-side expectations (feature/row/class
+    /// counts) and downstream evaluation; its columns are never read.
+    fn train_cluster(&self, ds: &Dataset) -> Result<(Vec<Tree>, TrainReport)> {
+        let sw = Stopwatch::start();
+        let cfg = &self.cfg;
+        let path = cfg
+            .cluster_manifest
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("--engine cluster needs --manifest cluster.json"))?;
+        let manifest = crate::cluster::ClusterManifest::load(path)?;
+        anyhow::ensure!(
+            manifest.num_features == ds.num_features(),
+            "dataset has {} features, cluster manifest declares {}",
+            ds.num_features(),
+            manifest.num_features
+        );
+        anyhow::ensure!(
+            manifest.rows == ds.num_rows(),
+            "dataset has {} rows, cluster manifest declares {}",
+            ds.num_rows(),
+            manifest.rows
+        );
+        anyhow::ensure!(
+            manifest.num_classes == ds.num_classes(),
+            "dataset has {} classes, cluster manifest declares {}",
+            ds.num_classes(),
+            manifest.num_classes
+        );
+        let topology = manifest.topology()?;
+        let workers = if cfg.cluster_workers.is_empty() {
+            manifest.workers.clone()
+        } else {
+            cfg.cluster_workers.clone()
         };
-        Ok((trees, report))
+        anyhow::ensure!(
+            !workers.is_empty(),
+            "no worker addresses: record them in the cluster manifest or pass --workers"
+        );
+        let pool = crate::cluster::ClusterPool::connect(
+            &workers,
+            &topology,
+            crate::cluster::hello_template(cfg, &manifest),
+            manifest.rows as u64,
+            manifest.num_classes,
+            crate::cluster::ClusterOptions::default(),
+        )?;
+        let pool = crate::coordinator::recovery::RecoveringPool::new(pool);
+        let trees_and_stats = self.train_sequential(&pool, &topology, ds)?;
+        Ok(assemble_report(
+            trees_and_stats,
+            sw.seconds(),
+            pool.net_stats().snapshot(),
+            // Workers' disk I/O is accounted in their own processes.
+            Vec::new(),
+            topology.num_splitters(),
+        ))
     }
 
     fn train_sequential(
@@ -261,6 +318,34 @@ impl Manager {
             })
             .collect()
     }
+}
+
+/// Assemble the per-tree reports and the run-level report.
+fn assemble_report(
+    trees_and_stats: Vec<(Tree, Vec<LevelStats>, f64)>,
+    wall_seconds: f64,
+    net: IoSnapshot,
+    splitter_io: Vec<IoSnapshot>,
+    num_splitters: usize,
+) -> (Vec<Tree>, TrainReport) {
+    let mut trees = Vec::with_capacity(trees_and_stats.len());
+    let mut per_tree = Vec::with_capacity(trees_and_stats.len());
+    for (t, (tree, levels, secs)) in trees_and_stats.into_iter().enumerate() {
+        per_tree.push(TreeReport {
+            tree: t as u32,
+            seconds: secs,
+            levels,
+        });
+        trees.push(tree);
+    }
+    let report = TrainReport {
+        per_tree,
+        wall_seconds,
+        net,
+        splitter_io,
+        num_splitters,
+    };
+    (trees, report)
 }
 
 #[cfg(test)]

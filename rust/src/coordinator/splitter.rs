@@ -63,6 +63,12 @@ struct TreeState {
     /// SPRINT-style pruned attribute lists (adaptive mode only): sorted
     /// entries filtered to samples still in open leaves.
     pruned_sorted: Option<BTreeMap<usize, Vec<SortedEntry>>>,
+    /// Next depth level this tree's class list expects. Makes level
+    /// updates idempotent: an at-least-once transport (the cluster
+    /// pool re-issues a request after a reconnect) may deliver the
+    /// same `LevelUpdate` twice, and applying the class-list
+    /// transition twice would corrupt the mapping.
+    next_depth: u32,
 }
 
 /// The splitter worker core (synchronous; thread wiring lives in
@@ -121,11 +127,12 @@ impl SplitterCore {
         self.storage.columns()
     }
 
-    fn num_rows(&self) -> usize {
+    /// Rows in the (replicated) label column — the dataset row count.
+    pub fn num_rows(&self) -> usize {
         self.labels.len()
     }
 
-    fn num_classes(&self) -> u32 {
+    pub fn num_classes(&self) -> u32 {
         self.schema.num_classes
     }
 
@@ -198,6 +205,7 @@ impl SplitterCore {
                 class_list: cl,
                 bag_weights: weights,
                 pruned_sorted: None,
+                next_depth: 0,
             },
         );
     }
@@ -474,12 +482,30 @@ impl SplitterCore {
 
     /// Alg. 2 step 7: apply the broadcast level update to the local
     /// class list (identical logic on every worker and the tree builder).
+    ///
+    /// Idempotent under duplicate delivery: an update for a depth this
+    /// tree already passed is acknowledged without re-applying (the
+    /// cluster transport re-issues in-flight requests after a
+    /// reconnect, so a worker that never lost state can legitimately
+    /// see the same update twice). A *gap* is still an error — it
+    /// means state was lost and the caller must replay from scratch.
     pub fn apply_level_update(&self, u: &LevelUpdate) -> Result<()> {
         let mut trees = self.trees.lock().unwrap();
         let state = trees
             .get_mut(&u.tree)
             .ok_or_else(|| anyhow::anyhow!("splitter {}: unknown tree {}", self.id, u.tree))?;
+        if u.depth < state.next_depth {
+            return Ok(()); // duplicate delivery — already applied
+        }
+        anyhow::ensure!(
+            u.depth == state.next_depth,
+            "splitter {}: level update out of order (got depth {}, expected {})",
+            self.id,
+            u.depth,
+            state.next_depth
+        );
         state.class_list = apply_update_to_class_list(&state.class_list, u)?;
+        state.next_depth = u.depth + 1;
 
         // SPRINT-style adaptive pruning (paper §3): once the closed
         // fraction crosses the threshold, rebuild per-tree attribute
@@ -815,6 +841,50 @@ mod tests {
         for i in 0..10 {
             assert_eq!(cl.get(i), if i % 2 == 0 { 1 } else { 0 });
         }
+    }
+
+    #[test]
+    fn duplicate_level_update_is_idempotent() {
+        // An at-least-once transport may deliver the same update twice
+        // to a worker that never lost state; the second must be a
+        // no-op ack, and a *skipped* level must still error.
+        let (s, _ds) = make_splitter(10);
+        s.start_tree(0);
+        let mut bm = Bitmap::with_len(10);
+        for i in 0..10 {
+            bm.set(i, i % 2 == 0);
+        }
+        let u = LevelUpdate {
+            tree: 0,
+            depth: 0,
+            outcomes: vec![LeafOutcome::Split {
+                bitmap: bm,
+                left_open: true,
+                right_open: false,
+            }],
+        };
+        s.apply_level_update(&u).unwrap();
+        let after_first: Vec<u32> = {
+            let trees = s.trees.lock().unwrap();
+            let cl = &trees.get(&0).unwrap().class_list;
+            (0..10).map(|i| cl.get(i)).collect()
+        };
+        // Same frame again: accepted, nothing changes.
+        s.apply_level_update(&u).unwrap();
+        {
+            let trees = s.trees.lock().unwrap();
+            let cl = &trees.get(&0).unwrap().class_list;
+            let after_dup: Vec<u32> = (0..10).map(|i| cl.get(i)).collect();
+            assert_eq!(after_first, after_dup, "duplicate must not re-apply");
+        }
+        // A gap (depth 2 while expecting 1) is state loss, not a dup.
+        let skip = LevelUpdate {
+            tree: 0,
+            depth: 2,
+            outcomes: vec![LeafOutcome::Closed],
+        };
+        let err = s.apply_level_update(&skip).unwrap_err();
+        assert!(format!("{err}").contains("out of order"), "{err}");
     }
 
     #[test]

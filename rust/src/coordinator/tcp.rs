@@ -14,7 +14,7 @@ use super::splitter::SplitterCore;
 use super::transport::SplitterPool;
 use super::wire::{
     decode_request, decode_response, encode_request, encode_response, read_frame, write_frame,
-    Request, Response,
+    HelloInfo, Request, Response, PROTOCOL_VERSION,
 };
 use crate::data::io_stats::IoStats;
 use crate::Result;
@@ -95,13 +95,17 @@ fn serve_connection(core: &SplitterCore, stream: TcpStream) -> Result<()> {
                 write_frame(&mut writer, &encode_response(&Response::Ok))?;
                 return Ok(());
             }
-            Ok(req) => handle(core, req),
+            Ok(req) => handle_request(core, req),
         };
         write_frame(&mut writer, &encode_response(&response))?;
     }
 }
 
-fn handle(core: &SplitterCore, req: Request) -> Response {
+/// Dispatch one decoded request against a configured splitter core.
+/// Shared by the in-process [`SplitterServer`] and the standalone
+/// cluster worker ([`crate::cluster::worker`]), which adds its own
+/// Hello/configuration handling on top.
+pub(crate) fn handle_request(core: &SplitterCore, req: Request) -> Response {
     match req {
         Request::StartTree(t) => {
             core.start_tree(t);
@@ -125,6 +129,35 @@ fn handle(core: &SplitterCore, req: Request) -> Response {
             Response::Ok
         }
         Request::Shutdown => Response::Ok,
+        Request::Hello(h) => {
+            // The core is already configured (in-process servers) — the
+            // handshake validates identity and reports the inventory.
+            if h.protocol != PROTOCOL_VERSION {
+                Response::Err(format!(
+                    "protocol mismatch: peer speaks v{}, this splitter v{PROTOCOL_VERSION}",
+                    h.protocol
+                ))
+            } else if h.shard as usize != core.id() {
+                Response::Err(format!(
+                    "shard mismatch: peer expects shard {}, this is splitter {}",
+                    h.shard,
+                    core.id()
+                ))
+            } else {
+                Response::Hello(hello_info_for(core))
+            }
+        }
+    }
+}
+
+/// The inventory a splitter core reports in the Hello handshake.
+pub(crate) fn hello_info_for(core: &SplitterCore) -> HelloInfo {
+    HelloInfo {
+        protocol: PROTOCOL_VERSION,
+        shard: core.id() as u32,
+        rows: core.num_rows() as u64,
+        num_classes: core.num_classes(),
+        columns: core.columns_owned().iter().map(|&c| c as u32).collect(),
     }
 }
 
@@ -197,11 +230,8 @@ impl SplitterPool for TcpPool {
     }
 
     fn start_tree(&self, tree: u32) -> Result<()> {
-        for c in &self.clients {
-            match c.call(&Request::StartTree(tree), &self.net)? {
-                Response::Ok => {}
-                r => bail!("unexpected response {r:?}"),
-            }
+        for s in 0..self.clients.len() {
+            self.start_tree_on(s, tree)?;
         }
         Ok(())
     }
@@ -228,27 +258,44 @@ impl SplitterPool for TcpPool {
     }
 
     fn broadcast_level_update(&self, u: &LevelUpdate) -> Result<()> {
-        for c in &self.clients {
-            match c.call(&Request::LevelUpdate(u.clone()), &self.net)? {
-                Response::Ok => {}
-                r => bail!("unexpected response {r:?}"),
-            }
+        for s in 0..self.clients.len() {
+            self.apply_level_update_on(s, u)?;
         }
+        // Bytes/messages were charged per peer; count the event.
+        self.net.add_broadcast_event();
         Ok(())
     }
 
     fn finish_tree(&self, tree: u32) -> Result<()> {
-        for c in &self.clients {
-            match c.call(&Request::FinishTree(tree), &self.net)? {
-                Response::Ok => {}
-                r => bail!("unexpected response {r:?}"),
-            }
+        for s in 0..self.clients.len() {
+            self.finish_tree_on(s, tree)?;
         }
         Ok(())
     }
 
     fn net_stats(&self) -> IoStats {
         self.net.clone()
+    }
+
+    fn start_tree_on(&self, splitter: usize, tree: u32) -> Result<()> {
+        match self.clients[splitter].call(&Request::StartTree(tree), &self.net)? {
+            Response::Ok => Ok(()),
+            r => bail!("unexpected response {r:?}"),
+        }
+    }
+
+    fn apply_level_update_on(&self, splitter: usize, u: &LevelUpdate) -> Result<()> {
+        match self.clients[splitter].call(&Request::LevelUpdate(u.clone()), &self.net)? {
+            Response::Ok => Ok(()),
+            r => bail!("unexpected response {r:?}"),
+        }
+    }
+
+    fn finish_tree_on(&self, splitter: usize, tree: u32) -> Result<()> {
+        match self.clients[splitter].call(&Request::FinishTree(tree), &self.net)? {
+            Response::Ok => Ok(()),
+            r => bail!("unexpected response {r:?}"),
+        }
     }
 }
 

@@ -34,6 +34,20 @@ pub trait SplitterPool: Send + Sync {
     fn finish_tree(&self, tree: u32) -> Result<()>;
     /// Shared network counters.
     fn net_stats(&self) -> IoStats;
+
+    // Single-splitter control RPCs. The tree builder only ever uses the
+    // broadcast forms above; these exist so replay-based recovery
+    // ([`super::recovery::RecoveringPool`]) can rebuild ONE splitter's
+    // per-tree state over any transport — in-process or TCP — without
+    // touching the rest of the fleet.
+
+    /// Begin `tree` on a single splitter (recovery replay).
+    fn start_tree_on(&self, splitter: usize, tree: u32) -> Result<()>;
+    /// Apply one level update on a single splitter (recovery replay).
+    fn apply_level_update_on(&self, splitter: usize, u: &LevelUpdate) -> Result<()>;
+    /// Drop `tree`'s state on a single splitter (failure injection /
+    /// cleanup).
+    fn finish_tree_on(&self, splitter: usize, tree: u32) -> Result<()>;
 }
 
 /// In-process pool: direct calls + byte accounting + optional latency.
@@ -127,6 +141,23 @@ impl SplitterPool for DirectPool {
 
     fn net_stats(&self) -> IoStats {
         self.net.clone()
+    }
+
+    fn start_tree_on(&self, splitter: usize, tree: u32) -> Result<()> {
+        self.net.add_net(8);
+        self.splitters[splitter].start_tree(tree);
+        Ok(())
+    }
+
+    fn apply_level_update_on(&self, splitter: usize, u: &LevelUpdate) -> Result<()> {
+        self.net.add_net(u.wire_bytes());
+        self.splitters[splitter].apply_level_update(u)
+    }
+
+    fn finish_tree_on(&self, splitter: usize, tree: u32) -> Result<()> {
+        self.net.add_net(8);
+        self.splitters[splitter].finish_tree(tree);
+        Ok(())
     }
 }
 

@@ -111,6 +111,47 @@ fn get_candidate(r: &mut Reader<'_>) -> Result<SplitCandidate> {
     })
 }
 
+/// Version of the splitter RPC protocol. Bumped on any wire change;
+/// exchanged in the Hello handshake so a leader and a standalone worker
+/// from different builds fail fast instead of mis-decoding frames.
+pub const PROTOCOL_VERSION: u32 = 1;
+
+/// Leader → worker handshake. Identifies the protocol and shard the
+/// leader expects on this connection and carries the training
+/// configuration a standalone worker needs to build its splitter core
+/// (enums travel as their canonical `as_str` names). In-process
+/// splitter servers already hold a configured core and only validate
+/// and answer.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HelloConfig {
+    pub protocol: u32,
+    /// Splitter / shard id this connection is for.
+    pub shard: u32,
+    /// Topology the shard packs were cut for; a worker refuses a
+    /// mismatch (a pack is only valid for its own ownership map).
+    pub num_splitters: u32,
+    pub redundancy: u32,
+    pub seed: u64,
+    pub bagging: String,
+    pub sampling: String,
+    pub num_candidates: u32,
+    pub score_kind: String,
+    /// SPRINT prune threshold (`None` = never prune).
+    pub prune_threshold: Option<f64>,
+}
+
+/// Worker → leader handshake answer: the worker's actual inventory, so
+/// the leader can validate the whole fleet before training starts.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HelloInfo {
+    pub protocol: u32,
+    pub shard: u32,
+    pub rows: u64,
+    pub num_classes: u32,
+    /// Column indices the worker's shard pack holds, ascending.
+    pub columns: Vec<u32>,
+}
+
 /// The RPC request frame body.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Request {
@@ -121,6 +162,7 @@ pub enum Request {
     LevelUpdate(LevelUpdate),
     FinishTree(u32),
     Shutdown,
+    Hello(HelloConfig),
 }
 
 /// The RPC response frame body.
@@ -131,6 +173,7 @@ pub enum Response {
     Splits(PartialSupersplit),
     Evals(EvalResult),
     Err(String),
+    Hello(HelloInfo),
 }
 
 pub fn encode_request(req: &Request) -> Vec<u8> {
@@ -194,6 +237,25 @@ pub fn encode_request(req: &Request) -> Vec<u8> {
             w.u32(*t);
         }
         Request::Shutdown => w.u8(6),
+        Request::Hello(h) => {
+            w.u8(7);
+            w.u32(h.protocol);
+            w.u32(h.shard);
+            w.u32(h.num_splitters);
+            w.u32(h.redundancy);
+            w.u64(h.seed);
+            w.str(&h.bagging);
+            w.str(&h.sampling);
+            w.u32(h.num_candidates);
+            w.str(&h.score_kind);
+            match h.prune_threshold {
+                None => w.bool(false),
+                Some(t) => {
+                    w.bool(true);
+                    w.f64(t);
+                }
+            }
+        }
     }
     w.into_bytes()
 }
@@ -264,6 +326,30 @@ pub fn decode_request(buf: &[u8]) -> Result<Request> {
         }
         5 => Request::FinishTree(r.u32()?),
         6 => Request::Shutdown,
+        7 => {
+            let protocol = r.u32()?;
+            let shard = r.u32()?;
+            let num_splitters = r.u32()?;
+            let redundancy = r.u32()?;
+            let seed = r.u64()?;
+            let bagging = r.str()?;
+            let sampling = r.str()?;
+            let num_candidates = r.u32()?;
+            let score_kind = r.str()?;
+            let prune_threshold = if r.bool()? { Some(r.f64()?) } else { None };
+            Request::Hello(HelloConfig {
+                protocol,
+                shard,
+                num_splitters,
+                redundancy,
+                seed,
+                bagging,
+                sampling,
+                num_candidates,
+                score_kind,
+                prune_threshold,
+            })
+        }
         t => bail!("bad request tag {t}"),
     };
     r.done()?;
@@ -303,6 +389,17 @@ pub fn encode_response(resp: &Response) -> Vec<u8> {
             w.u8(4);
             w.str(msg);
         }
+        Response::Hello(i) => {
+            w.u8(5);
+            w.u32(i.protocol);
+            w.u32(i.shard);
+            w.u64(i.rows);
+            w.u32(i.num_classes);
+            w.usize_u32(i.columns.len());
+            for &c in &i.columns {
+                w.u32(c);
+            }
+        }
     }
     w.into_bytes()
 }
@@ -333,6 +430,21 @@ pub fn decode_response(buf: &[u8]) -> Result<Response> {
             Response::Evals(EvalResult { bitmaps })
         }
         4 => Response::Err(r.str()?),
+        5 => {
+            let protocol = r.u32()?;
+            let shard = r.u32()?;
+            let rows = r.u64()?;
+            let num_classes = r.u32()?;
+            let n = r.len_checked(4)?;
+            let columns = (0..n).map(|_| r.u32()).collect::<Result<_>>()?;
+            Response::Hello(HelloInfo {
+                protocol,
+                shard,
+                rows,
+                num_classes,
+                columns,
+            })
+        }
         t => bail!("bad response tag {t}"),
     };
     r.done()?;
@@ -466,4 +578,41 @@ mod tests {
         assert!(decode_request(&bytes).is_err());
     }
 
+    #[test]
+    fn hello_roundtrip() {
+        let req = Request::Hello(HelloConfig {
+            protocol: PROTOCOL_VERSION,
+            shard: 3,
+            num_splitters: 8,
+            redundancy: 2,
+            seed: 0xDEAD_BEEF_CAFE,
+            bagging: "poisson".into(),
+            sampling: "per_node".into(),
+            num_candidates: 5,
+            score_kind: "gini".into(),
+            prune_threshold: Some(0.75),
+        });
+        assert_eq!(decode_request(&encode_request(&req)).unwrap(), req);
+        let req2 = Request::Hello(HelloConfig {
+            protocol: PROTOCOL_VERSION,
+            shard: 0,
+            num_splitters: 1,
+            redundancy: 1,
+            seed: 7,
+            bagging: "none".into(),
+            sampling: "all".into(),
+            num_candidates: 1,
+            score_kind: "entropy".into(),
+            prune_threshold: None,
+        });
+        assert_eq!(decode_request(&encode_request(&req2)).unwrap(), req2);
+        let resp = Response::Hello(HelloInfo {
+            protocol: PROTOCOL_VERSION,
+            shard: 3,
+            rows: 1 << 33,
+            num_classes: 5,
+            columns: vec![1, 4, 9],
+        });
+        assert_eq!(decode_response(&encode_response(&resp)).unwrap(), resp);
+    }
 }

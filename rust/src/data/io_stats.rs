@@ -63,6 +63,14 @@ impl IoStats {
         self.inner.net_broadcasts.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Record that a set of already-charged per-peer messages logically
+    /// formed one broadcast (transports that fan a broadcast out as
+    /// individual RPCs charge bytes/messages per peer and count the
+    /// event here).
+    pub fn add_broadcast_event(&self) {
+        self.inner.net_broadcasts.fetch_add(1, Ordering::Relaxed);
+    }
+
     pub fn disk_read_bytes(&self) -> u64 {
         self.inner.disk_read_bytes.load(Ordering::Relaxed)
     }

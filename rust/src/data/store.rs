@@ -215,10 +215,18 @@ impl MemStore {
             }
             cols.insert(j, col);
         }
-        MemStore {
-            columns: cols,
-            sorted,
-        }
+        MemStore::from_parts(cols, sorted)
+    }
+
+    /// Assemble from already-materialized columns and presorted views
+    /// (e.g. a cluster worker preloading its shard pack into RAM —
+    /// the presorted files were written at shard time, so nothing is
+    /// re-sorted here).
+    pub fn from_parts(
+        columns: BTreeMap<usize, Column>,
+        sorted: BTreeMap<usize, Vec<SortedEntry>>,
+    ) -> MemStore {
+        MemStore { columns, sorted }
     }
 
     fn column(&self, j: usize) -> Result<&Column> {
@@ -337,6 +345,36 @@ impl DiskStore {
         stats: IoStats,
     ) -> Result<DiskStore> {
         Self::build_with(ds, columns, dir, Layout::V1, stats)
+    }
+
+    /// Open a store over column files that already exist on disk (e.g.
+    /// a shard pack written by `drf shard`). Each file's header is
+    /// validated up front; scans then stream the files sequentially
+    /// like any other disk store.
+    pub fn open(files: BTreeMap<usize, ColumnFiles>, stats: IoStats) -> Result<DiskStore> {
+        for (j, f) in &files {
+            let r = ColumnReader::open(&f.raw, stats.clone())?;
+            let expected = match f.ctype {
+                ColumnType::Numerical => disk::FileKind::Numerical,
+                ColumnType::Categorical { .. } => disk::FileKind::Categorical,
+            };
+            ensure!(
+                r.header().kind == expected,
+                "column {j}: file {} holds {:?}, manifest says {:?}",
+                f.raw.display(),
+                r.header().kind,
+                f.ctype
+            );
+            if let Some(sp) = &f.sorted {
+                let r = ColumnReader::open(sp, stats.clone())?;
+                ensure!(
+                    r.header().kind == disk::FileKind::SortedNumerical,
+                    "column {j}: {} is not a presorted column file",
+                    sp.display()
+                );
+            }
+        }
+        Ok(DiskStore { files, stats })
     }
 
     fn file(&self, j: usize) -> Result<&ColumnFiles> {
@@ -490,7 +528,9 @@ pub fn disk_v2_store_for(
 // Dataset directory persistence
 // ---------------------------------------------------------------------
 
-fn schema_to_json(schema: &Schema, rows: usize) -> Json {
+/// Serialize a schema (+ row count) to the JSON shape shared by the
+/// dataset directory format and the cluster shard manifests.
+pub fn schema_to_json(schema: &Schema, rows: usize) -> Json {
     let mut o = Json::object();
     o.set("rows", Json::from_usize(rows))
         .set("num_classes", Json::from_u64(schema.num_classes as u64))
@@ -520,7 +560,8 @@ fn schema_to_json(schema: &Schema, rows: usize) -> Json {
     o
 }
 
-fn schema_from_json(v: &Json) -> Result<(Schema, usize)> {
+/// Parse a schema serialized by [`schema_to_json`].
+pub fn schema_from_json(v: &Json) -> Result<(Schema, usize)> {
     let rows = v.get("rows")?.as_usize()?;
     let num_classes = v.get("num_classes")?.as_u32()?;
     let columns = v

@@ -44,6 +44,35 @@
 //! wall-clock knob. A future mmap or remote-object-store backend only
 //! has to produce ordered chunks to plug into the same seam.
 //!
+//! ## Cluster plane
+//!
+//! The [`cluster`] subsystem turns the reproduction into a deployable
+//! multi-process trainer (shard → worker → leader):
+//!
+//! * `drf shard` partitions a dataset by the topology ownership map
+//!   into per-splitter **shard packs** — presorted DRFC v2 column
+//!   files plus a [`cluster::ShardManifest`] carrying the schema,
+//!   topology parameters, and per-column checksums — and a
+//!   [`cluster::ClusterManifest`] deployment map;
+//! * `drf worker --shard DIR --addr A:P` serves one pack over the
+//!   splitter wire protocol, loading it through the same
+//!   [`data::store::ColumnStore`] backends training uses in-process;
+//!   the leader's Hello handshake delivers the training configuration
+//!   and validates protocol version, shard id, column inventory, and
+//!   row count;
+//! * `drf train --engine cluster --manifest cluster.json` puts a
+//!   [`cluster::ClusterPool`] (connect retry/timeout, reconnect on
+//!   drop) under the tree builders, wrapped in the generic
+//!   [`coordinator::recovery::RecoveringPool`] so a worker killed and
+//!   restarted mid-training is rebuilt by replaying the level-update
+//!   log. Trees are bit-identical to `--engine direct` by construction
+//!   and by end-to-end test (`tests/cluster.rs`).
+//!
+//! A remote/object-store shard source slots in underneath: implement
+//! `ColumnStore` over the remote medium (ordered chunks + `IoStats`),
+//! hand it to `cluster::worker::load_shard`'s storage seam, and
+//! nothing above the store changes.
+//!
 //! The numeric hot-spot — scoring all candidate thresholds of a
 //! presorted feature against cumulative label histograms (Alg. 1) — is
 //! additionally available as an AOT-compiled XLA/Pallas artifact executed
@@ -100,6 +129,7 @@
 
 pub mod baselines;
 pub mod classlist;
+pub mod cluster;
 pub mod complexity;
 pub mod config;
 pub mod coordinator;

@@ -1,9 +1,15 @@
-//! `drf` — the DRF leader binary.
+//! `drf` — the DRF leader/worker binary.
 //!
 //! Subcommands:
 //!
 //! * `train`     — train a forest on a synthetic family or the Leo-like
 //!                 dataset and save it as JSON (plus a training report);
+//! * `generate`  — write a dataset directory (schema + presorted
+//!                 columns) for later `--data` runs;
+//! * `shard`     — cut a dataset into per-splitter shard packs plus a
+//!                 cluster manifest (`drf::cluster`);
+//! * `worker`    — serve one shard pack as a standalone splitter
+//!                 process (the leader's Hello handshake configures it);
 //! * `evaluate`  — score a saved forest on a freshly generated test set;
 //! * `importance`— print MDI feature importances of a saved forest;
 //! * `serve`     — serve a saved forest over TCP (flattened engine,
@@ -19,6 +25,11 @@
 //!     --trees 10 --depth 12 --out /tmp/forest.json
 //! drf train --family leo --rows 100000 --trees 3 --depth 20 \
 //!     --storage disk --report /tmp/report.json
+//! drf shard --family leo --rows 100000 --splitters 4 --out-dir /tmp/shards
+//! drf worker --shard /tmp/shards/shard_0 --addr 0.0.0.0:7001
+//! drf train --engine cluster --manifest /tmp/shards/cluster.json \
+//!     --workers host0:7001,host1:7001,host2:7001,host3:7001 \
+//!     --family leo --rows 100000 --trees 3
 //! drf evaluate --model /tmp/forest.json --family xor --informative 3 \
 //!     --rows 5000 --features 6 --seed 99
 //! drf serve --model /tmp/forest.json --addr 127.0.0.1:7878
@@ -61,6 +72,8 @@ const TRAIN_FLAGS: &[&str] = &[
     "engine",
     "scorer",
     "artifacts-dir",
+    "manifest",
+    "workers",
     "config",
     "out",
     "report",
@@ -79,6 +92,8 @@ fn run(argv: &[String]) -> Result<()> {
     match command {
         "train" => cmd_train(&argv[1..]),
         "generate" => cmd_generate(&argv[1..]),
+        "shard" => cmd_shard(&argv[1..]),
+        "worker" => cmd_worker(&argv[1..]),
         "evaluate" => cmd_evaluate(&argv[1..]),
         "importance" => cmd_importance(&argv[1..]),
         "serve" => cmd_serve(&argv[1..]),
@@ -102,12 +117,18 @@ USAGE:
             [--sampling per_node|per_depth|all] [--bagging poisson|none]
             [--splitters W] [--redundancy D] [--builders B]
             [--latency-us U] [--storage memory|disk|disk_v2]
-            [--scan-threads K] [--engine direct|threaded|tcp]
+            [--scan-threads K] [--engine direct|threaded|tcp|cluster]
+            [--manifest cluster.json] [--workers ADDR,ADDR,...]
             [--scorer native|xla]
             [--artifacts-dir DIR] [--config cfg.json]
             [--out forest.json] [--report report.json]
             [--csv file.csv [--label-column NAME]] [--data dataset-dir]
   drf generate [--family ...] [--rows N] [--seed S] --out-dir DIR
+  drf shard [--family ...|--csv ...|--data DIR] [--rows N] [--seed S]
+            [--splitters W] [--redundancy D] [--chunk-rows C]
+            [--workers ADDR,ADDR,...] --out-dir DIR
+  drf worker --shard SHARD_DIR [--addr HOST:PORT] [--scan-threads K]
+             [--preload] [--no-verify]
   drf evaluate --model forest.json [--family ...|--csv ...|--data DIR]
   drf importance --model forest.json [--features M]
   drf serve --model forest.json [--addr HOST:PORT]
@@ -115,10 +136,21 @@ USAGE:
               [--family ...|--csv ...|--data DIR] [--show N]
   drf info
 
-Data sources (train/evaluate/predict): --csv loads a CSV file (schema
-inferred, label column by name); --data loads a dataset directory
-written by `drf generate`; otherwise a synthetic family is generated in
-memory.
+Data sources (train/evaluate/shard/predict): --csv loads a CSV file
+(schema inferred, label column by name); --data loads a dataset
+directory written by `drf generate`; otherwise a synthetic family is
+generated in memory.
+
+Cluster training: `drf shard` cuts the dataset into per-splitter shard
+packs (presorted DRFC v2 columns + checksummed manifests) plus a
+cluster.json deployment map; each pack is served by a `drf worker`
+process (`--addr host:0` picks an ephemeral port and prints it;
+`--preload` loads the pack into RAM; `--no-verify` skips checksums);
+`drf train --engine cluster --manifest cluster.json` connects to the
+fleet (addresses from the manifest or --workers, comma-separated, in
+shard order), validates it via the Hello handshake, and recovers
+killed-and-restarted workers by replaying the level-update log — the
+forest is bit-identical to --engine direct.
 
 Serving: `drf serve` compiles the model into the flattened inference
 engine and answers Score/Classify/ModelInfo/Reload RPCs over a
@@ -205,8 +237,15 @@ fn cmd_train(argv: &[String]) -> Result<()> {
             "direct" => Engine::Direct,
             "threaded" => Engine::Threaded,
             "tcp" => Engine::Tcp,
-            _ => bail!("engine must be direct|threaded|tcp"),
+            "cluster" => Engine::Cluster,
+            _ => bail!("engine must be direct|threaded|tcp|cluster"),
         };
+    }
+    if let Some(v) = args.get("manifest") {
+        cfg.cluster_manifest = Some(v.into());
+    }
+    if let Some(v) = args.get("workers") {
+        cfg.cluster_workers = parse_worker_list(v);
     }
     if let Some(v) = args.get("scorer") {
         cfg.scorer = match v {
@@ -316,6 +355,90 @@ fn report_to_json(report: &drf::coordinator::TrainReport) -> Json {
             ),
         );
     o
+}
+
+/// `--workers a:1,b:2` → ["a:1", "b:2"] (shard order).
+fn parse_worker_list(v: &str) -> Vec<String> {
+    v.split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect()
+}
+
+fn cmd_shard(argv: &[String]) -> Result<()> {
+    let mut flags = TRAIN_FLAGS.to_vec();
+    flags.extend(["out-dir", "chunk-rows"]);
+    let args = Args::parse(argv, &flags)?;
+    let out = args.require("out-dir")?;
+    let (ds, family) = dataset_from_args(&args)?;
+    let mut topo = drf::config::TopologyParams::default();
+    if let Some(v) = args.get("splitters") {
+        topo.num_splitters = Some(v.parse()?);
+    }
+    topo.redundancy = args.get_usize("redundancy", topo.redundancy)?;
+    topo.validate()?;
+    let mut opts = drf::cluster::ShardOptions::default();
+    opts.chunk_rows = args.get_u32("chunk-rows", opts.chunk_rows)?;
+    if let Some(v) = args.get("workers") {
+        opts.workers = parse_worker_list(v);
+    }
+    let out_dir = std::path::Path::new(out);
+    let cluster = drf::cluster::write_shards(
+        &ds,
+        &topo,
+        out_dir,
+        &opts,
+        drf::data::io_stats::IoStats::new(),
+    )?;
+    println!(
+        "sharded {family} ({} rows x {} features) into {} packs (redundancy {}) under {out}",
+        cluster.rows, cluster.num_features, cluster.num_splitters, cluster.redundancy
+    );
+    println!(
+        "cluster manifest: {}",
+        out_dir.join(drf::cluster::ClusterManifest::FILE).display()
+    );
+    println!("serve each pack:   drf worker --shard {out}/shard_<i> --addr HOST:PORT");
+    println!(
+        "then train:        drf train --engine cluster --manifest {} --workers ...",
+        out_dir.join(drf::cluster::ClusterManifest::FILE).display()
+    );
+    Ok(())
+}
+
+fn cmd_worker(argv: &[String]) -> Result<()> {
+    let args = Args::parse(
+        argv,
+        &["shard", "addr", "scan-threads", "!preload", "!no-verify"],
+    )?;
+    let dir = args.require("shard")?;
+    let addr = args.get_string("addr", "127.0.0.1:0");
+    let opts = drf::cluster::WorkerOptions {
+        scan_threads: args.get_usize("scan-threads", 1)?,
+        preload: args.get_bool("preload"),
+        verify: !args.get_bool("no-verify"),
+    };
+    let shard = drf::cluster::load_shard(std::path::Path::new(dir), &opts)?;
+    let (id, cols, rows) = (
+        shard.manifest.shard,
+        shard.manifest.columns.len(),
+        shard.manifest.rows,
+    );
+    let server = drf::cluster::WorkerServer::spawn(shard, &addr, opts.scan_threads)?;
+    println!(
+        "drf worker: shard {id} ({cols} columns x {rows} rows, {}) listening on {}",
+        if opts.preload { "preloaded" } else { "streaming" },
+        server.addr(),
+    );
+    // Flush explicitly: a piped stdout (the cluster smoke test, a
+    // process supervisor) is block-buffered and would otherwise hold
+    // the ready line back indefinitely.
+    std::io::Write::flush(&mut std::io::stdout())?;
+    // Serve until killed; connections are handled by the server's
+    // accept/worker threads.
+    loop {
+        std::thread::park();
+    }
 }
 
 fn cmd_generate(argv: &[String]) -> Result<()> {

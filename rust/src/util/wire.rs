@@ -104,7 +104,10 @@ impl<'a> Reader<'a> {
         self.buf.len() - self.pos
     }
 
-    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+    /// Borrow the next `n` raw bytes of the frame (consuming them).
+    /// Callers reading variable-length payloads must bound `n` first
+    /// (see [`Self::len_checked`]).
+    pub fn take(&mut self, n: usize) -> Result<&'a [u8]> {
         ensure!(self.pos + n <= self.buf.len(), "frame truncated");
         let s = &self.buf[self.pos..self.pos + n];
         self.pos += n;
@@ -189,14 +192,30 @@ pub fn write_frame(stream: &mut impl std::io::Write, body: &[u8]) -> Result<()> 
     Ok(())
 }
 
+/// Incremental read granularity for frame bodies. Bodies are read (and
+/// the buffer grown) in steps of this size, so a forged length prefix
+/// can only force this much allocation beyond the bytes the peer
+/// actually sent.
+const FRAME_READ_CHUNK: usize = 64 * 1024;
+
 /// Read one length-prefixed frame (cap: [`MAX_FRAME_BYTES`]).
+///
+/// The body buffer grows as bytes actually arrive rather than being
+/// allocated up front from the untrusted prefix: a peer claiming a
+/// 256 MiB frame but sending 10 bytes costs one read chunk, not
+/// 256 MiB, before the truncation error surfaces.
 pub fn read_frame(stream: &mut impl std::io::Read) -> Result<Vec<u8>> {
     let mut len_bytes = [0u8; 4];
     stream.read_exact(&mut len_bytes)?;
     let len = u32::from_le_bytes(len_bytes) as usize;
     ensure!(len <= MAX_FRAME_BYTES, "frame too large: {len}");
-    let mut body = vec![0u8; len];
-    stream.read_exact(&mut body)?;
+    let mut body = Vec::with_capacity(len.min(FRAME_READ_CHUNK));
+    while body.len() < len {
+        let step = (len - body.len()).min(FRAME_READ_CHUNK);
+        let start = body.len();
+        body.resize(start + step, 0);
+        stream.read_exact(&mut body[start..])?;
+    }
     Ok(body)
 }
 
@@ -284,5 +303,48 @@ mod tests {
         buf.extend_from_slice(&(MAX_FRAME_BYTES as u32 + 1).to_le_bytes());
         let mut cursor = std::io::Cursor::new(buf);
         assert!(read_frame(&mut cursor).is_err());
+    }
+
+    #[test]
+    fn truncated_body_rejected() {
+        // The prefix claims 1 MiB; the peer sent 3 bytes. The chunked
+        // reader must hit EOF after at most one read chunk instead of
+        // allocating the full claimed body up front.
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&(1u32 << 20).to_le_bytes());
+        buf.extend_from_slice(b"abc");
+        let mut cursor = std::io::Cursor::new(buf);
+        assert!(read_frame(&mut cursor).is_err());
+        // Same for a frame claiming the maximum legal size.
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&(MAX_FRAME_BYTES as u32).to_le_bytes());
+        buf.extend_from_slice(&[0u8; 16]);
+        let mut cursor = std::io::Cursor::new(buf);
+        assert!(read_frame(&mut cursor).is_err());
+    }
+
+    #[test]
+    fn take_is_bounded() {
+        let bytes = [1u8, 2, 3];
+        let mut r = Reader::new(&bytes);
+        assert_eq!(r.take(2).unwrap(), &[1, 2]);
+        assert!(r.take(2).is_err(), "frame truncated");
+    }
+
+    #[test]
+    fn forged_string_length_rejected() {
+        // A str claiming 1 GiB inside a 4-byte frame must error before
+        // allocating.
+        let mut w = Writer::new();
+        w.u32(1 << 30);
+        let bytes = w.into_bytes();
+        assert!(Reader::new(&bytes).str().is_err());
+    }
+
+    #[test]
+    fn truncated_magic_rejected() {
+        let bytes = [b'D', b'R'];
+        let mut r = Reader::new(&bytes);
+        assert!(r.expect_magic(*b"DRFX", "test").is_err());
     }
 }

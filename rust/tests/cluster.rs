@@ -1,0 +1,292 @@
+//! End-to-end cluster plane: `drf shard` + real `drf worker` OS
+//! processes + `--engine cluster` training must produce forests
+//! bit-identical to `--engine direct` — including across one injected
+//! worker kill + restart mid-training (replay recovery).
+
+use drf::cluster::{ClusterOptions, ClusterPool};
+use drf::config::{Engine, TopologyParams, TrainConfig};
+use drf::coordinator::messages::{
+    EvalQuery, EvalResult, LevelUpdate, PartialSupersplit, SupersplitQuery,
+};
+use drf::coordinator::recovery::RecoveringPool;
+use drf::coordinator::topology::Topology;
+use drf::coordinator::transport::SplitterPool;
+use drf::coordinator::tree_builder::TreeBuilderCore;
+use drf::coordinator::wire::{HelloConfig, PROTOCOL_VERSION};
+use drf::data::io_stats::IoStats;
+use drf::data::synthetic::{Family, SyntheticSpec};
+use drf::forest::RandomForest;
+use std::io::BufRead;
+use std::path::Path;
+use std::process::{Child, Command, Stdio};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+
+const DRF_BIN: &str = env!("CARGO_BIN_EXE_drf");
+const ROWS: usize = 400;
+const FEATURES: usize = 6;
+const SEED: u64 = 41;
+
+/// Kills the worker process when dropped (panic-safe cleanup).
+struct ChildGuard(Child);
+
+impl Drop for ChildGuard {
+    fn drop(&mut self) {
+        let _ = self.0.kill();
+        let _ = self.0.wait();
+    }
+}
+
+/// The dataset the shard CLI invocation below generates (synthetic
+/// generation is deterministic in its spec, so the in-process copy is
+/// byte-identical to what the packs were cut from).
+fn dataset() -> drf::data::Dataset {
+    SyntheticSpec::new(Family::Xor { informative: 3 }, ROWS, FEATURES, SEED).generate()
+}
+
+/// Run `drf shard` (the real CLI) into `dir` for `splitters` shards.
+fn shard_via_cli(dir: &Path, splitters: usize) {
+    let status = Command::new(DRF_BIN)
+        .args([
+            "shard",
+            "--family",
+            "xor",
+            "--informative",
+            "3",
+            "--rows",
+            &ROWS.to_string(),
+            "--features",
+            &FEATURES.to_string(),
+            "--seed",
+            &SEED.to_string(),
+            "--splitters",
+            &splitters.to_string(),
+            "--chunk-rows",
+            "128",
+            "--out-dir",
+            dir.to_str().unwrap(),
+        ])
+        .status()
+        .expect("running drf shard");
+    assert!(status.success(), "drf shard failed: {status}");
+}
+
+/// Spawn a real `drf worker` process on an ephemeral port and parse
+/// the bound address from its ready line.
+fn spawn_worker(shard_dir: &Path) -> (ChildGuard, String) {
+    let mut child = Command::new(DRF_BIN)
+        .args([
+            "worker",
+            "--shard",
+            shard_dir.to_str().unwrap(),
+            "--addr",
+            "127.0.0.1:0",
+        ])
+        .stdout(Stdio::piped())
+        .stderr(Stdio::inherit())
+        .spawn()
+        .expect("spawning drf worker");
+    let stdout = child.stdout.take().expect("worker stdout piped");
+    let mut line = String::new();
+    std::io::BufReader::new(stdout)
+        .read_line(&mut line)
+        .expect("reading worker ready line");
+    assert!(
+        line.contains("listening on"),
+        "unexpected worker output: {line:?}"
+    );
+    let addr = line
+        .trim()
+        .rsplit(' ')
+        .next()
+        .expect("address token")
+        .to_string();
+    (ChildGuard(child), addr)
+}
+
+fn forest_cfg(splitters: usize) -> TrainConfig {
+    let mut cfg = TrainConfig::default();
+    cfg.forest.num_trees = 2;
+    cfg.forest.max_depth = 6;
+    cfg.forest.seed = SEED;
+    cfg.topology.num_splitters = Some(splitters);
+    cfg
+}
+
+#[test]
+fn cluster_worker_processes_match_direct_engine() {
+    let tmp = drf::util::tempdir().unwrap();
+    shard_via_cli(tmp.path(), 2);
+    let ds = dataset();
+
+    let (_g0, addr0) = spawn_worker(&tmp.path().join("shard_0"));
+    let (_g1, addr1) = spawn_worker(&tmp.path().join("shard_1"));
+
+    // Reference: the plain in-process engine, same seed and topology.
+    let cfg = forest_cfg(2);
+    let (direct, _) = RandomForest::train_with_config(&ds, &cfg).unwrap();
+
+    // Cluster: train against the two worker processes.
+    let mut ccfg = cfg.clone();
+    ccfg.engine = Engine::Cluster;
+    ccfg.cluster_manifest = Some(tmp.path().join("cluster.json"));
+    ccfg.cluster_workers = vec![addr0, addr1];
+    let (clustered, report) = RandomForest::train_with_config(&ds, &ccfg).unwrap();
+
+    assert_eq!(
+        direct.trees, clustered.trees,
+        "cluster engine must be bit-identical to direct"
+    );
+    assert!(report.net.net_bytes > 0, "bytes actually crossed sockets");
+    assert_eq!(report.num_splitters, 2);
+}
+
+/// Delegating pool that kills + restarts one worker process the first
+/// time a supersplit query for `trigger_depth` comes through — i.e.
+/// deterministically mid-tree, after the replay log has real entries.
+struct KillOnce<'a> {
+    inner: &'a ClusterPool,
+    kill: Box<dyn Fn() + Send + Sync + 'a>,
+    fired: AtomicBool,
+    trigger_depth: u32,
+}
+
+impl SplitterPool for KillOnce<'_> {
+    fn num_splitters(&self) -> usize {
+        self.inner.num_splitters()
+    }
+
+    fn columns_of(&self, splitter: usize) -> Vec<usize> {
+        self.inner.columns_of(splitter)
+    }
+
+    fn start_tree(&self, tree: u32) -> anyhow::Result<()> {
+        self.inner.start_tree(tree)
+    }
+
+    fn root_stats(&self, splitter: usize, tree: u32) -> anyhow::Result<Vec<u64>> {
+        self.inner.root_stats(splitter, tree)
+    }
+
+    fn find_splits(
+        &self,
+        splitter: usize,
+        q: &SupersplitQuery,
+    ) -> anyhow::Result<PartialSupersplit> {
+        if q.depth == self.trigger_depth && !self.fired.swap(true, Ordering::SeqCst) {
+            (self.kill)();
+        }
+        self.inner.find_splits(splitter, q)
+    }
+
+    fn eval_conditions(&self, splitter: usize, q: &EvalQuery) -> anyhow::Result<EvalResult> {
+        self.inner.eval_conditions(splitter, q)
+    }
+
+    fn broadcast_level_update(&self, u: &LevelUpdate) -> anyhow::Result<()> {
+        self.inner.broadcast_level_update(u)
+    }
+
+    fn finish_tree(&self, tree: u32) -> anyhow::Result<()> {
+        self.inner.finish_tree(tree)
+    }
+
+    fn net_stats(&self) -> IoStats {
+        self.inner.net_stats()
+    }
+
+    fn start_tree_on(&self, splitter: usize, tree: u32) -> anyhow::Result<()> {
+        self.inner.start_tree_on(splitter, tree)
+    }
+
+    fn apply_level_update_on(&self, splitter: usize, u: &LevelUpdate) -> anyhow::Result<()> {
+        self.inner.apply_level_update_on(splitter, u)
+    }
+
+    fn finish_tree_on(&self, splitter: usize, tree: u32) -> anyhow::Result<()> {
+        self.inner.finish_tree_on(splitter, tree)
+    }
+}
+
+#[test]
+fn training_survives_worker_kill_and_restart() {
+    let tmp = drf::util::tempdir().unwrap();
+    shard_via_cli(tmp.path(), 2);
+    let ds = dataset();
+    let cfg = forest_cfg(2);
+    let topo = Topology::new(
+        ds.num_features(),
+        &TopologyParams {
+            num_splitters: Some(2),
+            ..Default::default()
+        },
+    );
+
+    // Reference forest from the in-process engine.
+    let (direct, _) = RandomForest::train_with_config(&ds, &cfg).unwrap();
+
+    let (_keep0, addr0) = spawn_worker(&tmp.path().join("shard_0"));
+    let (g1, addr1) = spawn_worker(&tmp.path().join("shard_1"));
+    let victim = Mutex::new(g1);
+
+    let hello = HelloConfig {
+        protocol: PROTOCOL_VERSION,
+        shard: 0,
+        num_splitters: 2,
+        redundancy: 1,
+        seed: cfg.forest.seed,
+        bagging: cfg.forest.bagging.as_str().into(),
+        sampling: cfg.forest.feature_sampling.as_str().into(),
+        num_candidates: cfg.forest.candidates_for(FEATURES) as u32,
+        score_kind: cfg.forest.score_kind.as_str().into(),
+        prune_threshold: None,
+    };
+    let pool = ClusterPool::connect(
+        &[addr0, addr1],
+        &topo,
+        hello,
+        ROWS as u64,
+        ds.num_classes(),
+        ClusterOptions::default(),
+    )
+    .unwrap();
+
+    // Kill worker 1 mid-tree and restart it from the same shard pack
+    // on a fresh ephemeral port (a same-port rebind would trip over
+    // the dead process's lingering sockets), redirecting the leader
+    // like a supervisor would. The restarted worker has no tree state
+    // — the recovery layer must replay the level-update log.
+    let shard1_dir = tmp.path().join("shard_1");
+    let kill = || {
+        let mut guard = victim.lock().unwrap();
+        let _ = guard.0.kill();
+        let _ = guard.0.wait();
+        let (fresh, new_addr) = spawn_worker(&shard1_dir);
+        pool.set_worker_addr(1, &new_addr).unwrap();
+        *guard = fresh;
+    };
+    let killer = KillOnce {
+        inner: &pool,
+        kill: Box::new(kill),
+        fired: AtomicBool::new(false),
+        trigger_depth: 2,
+    };
+    let recovering = RecoveringPool::new(killer);
+    let builder = TreeBuilderCore::new(&recovering, &topo, &cfg.forest, ds.num_features());
+    let trees: Vec<_> = (0..cfg.forest.num_trees as u32)
+        .map(|t| builder.build_tree(t).unwrap().0)
+        .collect();
+
+    assert!(
+        recovering.inner().fired.load(Ordering::SeqCst),
+        "the kill must actually have fired (tree never reached depth 2?)"
+    );
+    assert!(
+        recovering.recoveries() >= 1,
+        "the restarted worker must have been rebuilt by replay"
+    );
+    assert_eq!(
+        direct.trees, trees,
+        "a worker kill + restart mid-training must not change the forest"
+    );
+}
