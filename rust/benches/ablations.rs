@@ -10,9 +10,10 @@ use drf::data::synthetic::{Family, LeoLikeSpec, SyntheticSpec};
 use drf::forest::gbt::{GbtParams, GbtTrainer};
 use drf::forest::RandomForest;
 use drf::metrics::{auc, Stopwatch};
-use drf::util::bench::{bench, fmt_bytes, Table};
+use drf::util::bench::{bench, fmt_bytes, write_bench_json, Table};
+use drf::util::Json;
 
-fn classlist_ablation() {
+fn classlist_ablation() -> Json {
     println!("=== Ablation 1: bit-packed class list vs u32 ===");
     let n = 1_000_000usize;
     let mut t = Table::new(&["layout", "ℓ=63 memory", "get x n", "note"]);
@@ -48,9 +49,10 @@ fn classlist_ablation() {
         "32 bits/sample (5.3x memory)".into(),
     ]);
     t.print();
+    t.to_json()
 }
 
-fn pruning_ablation() {
+fn pruning_ablation() -> Json {
     println!("\n=== Ablation 2: SPRINT-style adaptive pruning (disk mode) ===");
     // min_records high -> most records land in closed leaves early,
     // the regime where the paper says pruning *would* help Sprint.
@@ -91,9 +93,10 @@ fn pruning_ablation() {
         ]);
     }
     t.print();
+    t.to_json()
 }
 
-fn latency_ablation() {
+fn latency_ablation() -> Json {
     println!("\n=== Ablation 3: injected network latency (paper §2: DRF is latency-insensitive) ===");
     let ds = SyntheticSpec::new(Family::Majority { informative: 3 }, 30_000, 6, 3).generate();
     let mut t = Table::new(&["latency/msg", "wall s", "messages", "latency share"]);
@@ -120,9 +123,10 @@ fn latency_ablation() {
         ]);
     }
     t.print();
+    t.to_json()
 }
 
-fn gbt_vs_rf() {
+fn gbt_vs_rf() -> Json {
     println!("\n=== Ablation 4: GBT vs RF on the Leo-like dataset ===");
     let spec = LeoLikeSpec::new(40_000, 20_626);
     let train = spec.generate();
@@ -172,11 +176,18 @@ fn gbt_vs_rf() {
     ]);
     t.print();
     println!("\n(RF ships ~1 bit/sample/level; GBT adds 8 B/sample/round of gradients.)");
+    t.to_json()
 }
 
 fn main() {
-    classlist_ablation();
-    pruning_ablation();
-    latency_ablation();
-    gbt_vs_rf();
+    let classlist = classlist_ablation();
+    let pruning = pruning_ablation();
+    let latency = latency_ablation();
+    let gbt = gbt_vs_rf();
+    let mut o = Json::object();
+    o.set("classlist", classlist)
+        .set("pruning", pruning)
+        .set("latency", latency)
+        .set("gbt_vs_rf", gbt);
+    write_bench_json("ablations", o);
 }

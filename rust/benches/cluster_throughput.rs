@@ -23,7 +23,7 @@ use drf::data::io_stats::IoStats;
 use drf::data::synthetic::{Family, SyntheticSpec};
 use drf::forest::RandomForest;
 use drf::rng::BaggingMode;
-use drf::util::bench::{bench, fmt_count, Table};
+use drf::util::bench::{bench, fmt_count, write_bench_json, Table};
 use drf::util::Json;
 
 const ROWS: usize = 20_000;
@@ -127,7 +127,5 @@ fn main() {
         .set("features", Json::from_usize(FEATURES))
         .set("trees", Json::from_usize(TREES))
         .set("configs", Json::Arr(configs));
-    let path = "BENCH_cluster.json";
-    std::fs::write(path, o.to_string()).unwrap();
-    println!("\nsummary written to {path}");
+    write_bench_json("cluster", o);
 }

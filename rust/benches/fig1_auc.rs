@@ -13,6 +13,8 @@ use drf::forest::RandomForest;
 use drf::metrics::auc;
 use drf::util::bench::Table;
 
+// Results go to BENCH_fig1_auc.json (perf/quality trajectory).
+
 fn main() {
     let sizes = [1_000usize, 10_000, 100_000];
     let tree_counts = [1usize, 3, 10];
@@ -55,5 +57,6 @@ fn main() {
         }
     }
     t.print();
+    t.write_json("fig1_auc");
     println!("\nShape check: AUC(n) non-decreasing per family; rote ~0.5 with UV.");
 }

@@ -45,5 +45,6 @@ fn main() {
         }
     }
     t.print();
+    t.write_json("fig2_time");
     println!("\nShape check: s/tree/1e5-rows roughly flat (linear scaling modulo depth growth).");
 }

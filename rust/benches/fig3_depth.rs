@@ -11,7 +11,8 @@ use drf::config::{ForestParams, TrainConfig};
 use drf::data::synthetic::LeoLikeSpec;
 use drf::forest::RandomForest;
 use drf::metrics::auc;
-use drf::util::bench::Table;
+use drf::util::bench::{write_bench_json, Table};
+use drf::util::Json;
 
 fn main() {
     let n: usize = std::env::args()
@@ -22,6 +23,7 @@ fn main() {
     let full = spec.generate();
     let test = spec.generate_rows(n, (n / 4).max(5_000));
 
+    let mut sections = Json::object();
     for (label, frac, min_records) in [("10%", 0.1f64, 13u64), ("100%", 1.0, 133)] {
         let sub_n = (n as f64 * frac) as usize;
         let ds = full.head(sub_n);
@@ -76,5 +78,7 @@ fn main() {
             ]);
         }
         t.print();
+        sections.set(label, t.to_json());
     }
+    write_bench_json("fig3_depth", sections);
 }

@@ -6,6 +6,18 @@
 //!   * class-list get/set and level-update application;
 //!   * condition-evaluation bitmap production;
 //!   * XLA batched scorer vs native scalar scorer (when artifacts exist).
+//!
+//! The `before/after` section pins the branchless/word-level rewrites
+//! of the two splitter hot loops against their scalar predecessors
+//! (reimplemented here verbatim), so `BENCH_hotpath.json` records the
+//! speedup of each rewrite on every run:
+//!   * `eval bitmap fill` — per-row `ClassList::get` + branchy
+//!     `Bitmap::set` vs word-level `decode_into` + trash-slot OR fill;
+//!   * `supersplit gather` — the closed/non-candidate/out-of-bag
+//!     branch ladder vs the fused table-driven gather;
+//!   * `classlist decode` — per-row `get` vs `decode_into`.
+//!
+//! `DRF_BENCH_SMOKE=1` shrinks the inputs for CI.
 
 use drf::classlist::ClassList;
 use drf::coordinator::messages::{Bitmap, LeafOutcome, LevelUpdate};
@@ -14,12 +26,21 @@ use drf::data::column::Column;
 use drf::data::synthetic::{Family, SyntheticSpec};
 use drf::rng::{SplitMix64, Xoshiro256pp};
 use drf::splits::histogram::Histogram;
-use drf::splits::numerical::best_numerical_supersplit;
+use drf::splits::numerical::{best_numerical_supersplit, NumericalSupersplitScan};
 use drf::splits::scorer::ScoreKind;
-use drf::util::bench::{bench, format_seconds, Table};
+use drf::util::bench::{bench, format_seconds, sized, write_bench_json, Table};
+use drf::util::Json;
+
+/// One before/after datapoint for BENCH_hotpath.json.
+struct Rewrite {
+    hot_loop: &'static str,
+    unit: &'static str,
+    before: f64,
+    after: f64,
+}
 
 fn main() {
-    let n = 1_000_000usize;
+    let n = sized(1_000_000, 50_000);
     let mut rng = Xoshiro256pp::new(1);
     let values: Vec<f32> = (0..n).map(|_| rng.next_f64() as f32).collect();
     let labels: Vec<u32> = (0..n).map(|_| (rng.next_f64() < 0.3) as u32).collect();
@@ -27,6 +48,7 @@ fn main() {
     let sorted = col.presort();
 
     let mut t = Table::new(&["hot path", "input", "time", "throughput"]);
+    let mut rewrites: Vec<Rewrite> = Vec::new();
 
     // Alg. 1 scan at 1 and 64 open leaves.
     for leaves in [1u32, 64] {
@@ -56,9 +78,236 @@ fn main() {
         ]);
     }
 
-    // Alg. 1 with realistic bagging + candidate checks (closure cost).
+    // ------------------------------------------------------------------
+    // Rewrite 1: the supersplit class-list + bag-weight gather.
+    // Before: the historical three-branch ladder (closed leaf, feature
+    // not drawn, out-of-bag) over closures into the bit-packed class
+    // list and the bag-weight array. After: the splitter's fused
+    // table-driven gather (one multiply folds all three skips).
+    // Identical candidates either way — asserted before timing.
+    // ------------------------------------------------------------------
+    let leaves = 64u32;
+    let mut cl = ClassList::with_open(n, leaves);
     let bagger = drf::rng::Bagger::new(7, drf::rng::BaggingMode::Poisson);
-    let totals = {
+    let mut bag_weights = vec![0u8; n];
+    let mut totals = vec![Histogram::new(2); leaves as usize];
+    // Candidate mask: this feature drawn for half the leaves.
+    let cand: Vec<bool> = (0..leaves).map(|h| h % 2 == 0).collect();
+    for i in 0..n {
+        let h = (i as u32 % leaves) + 1;
+        let b = bagger.weight(0, i as u64).min(255) as u8;
+        bag_weights[i] = b;
+        if b > 0 {
+            cl.set(i, h);
+            totals[(h - 1) as usize].add(labels[i], b as u32);
+        }
+    }
+    let before_scan = || {
+        // The pre-rewrite shape: three separate predicates, branch per
+        // predicate per row (via the compatibility adapter, which is
+        // exactly the historical control flow).
+        let r = best_numerical_supersplit(
+            0,
+            &sorted,
+            &labels,
+            2,
+            &totals,
+            ScoreKind::Gini,
+            |i| cl.get(i as usize),
+            |h| cand[(h - 1) as usize],
+            |i| bag_weights[i as usize] as u32,
+        );
+        std::hint::black_box(&r);
+        r
+    };
+    let fused_scan = || {
+        // The splitter's table-driven gather (scan_column_supersplit).
+        let mut cand_tbl = vec![0u8; leaves as usize + 1];
+        for (r, &m) in cand.iter().enumerate() {
+            cand_tbl[r + 1] = m as u8;
+        }
+        let mut scan = NumericalSupersplitScan::new(
+            0,
+            &labels,
+            2,
+            &totals,
+            ScoreKind::Gini,
+            |i: u32| {
+                let h = cl.get(i as usize);
+                let b = bag_weights[i as usize] as u32;
+                let live = (cand_tbl[h as usize] as u32) & (b != 0) as u32;
+                (h * live, b)
+            },
+        );
+        scan.push(&sorted);
+        let r = scan.finish();
+        std::hint::black_box(&r);
+        r
+    };
+    assert_eq!(before_scan(), fused_scan(), "gather rewrite must be exact");
+    let before = bench(5, 8.0, || {
+        before_scan();
+    });
+    let after = bench(5, 8.0, || {
+        fused_scan();
+    });
+    for (name, timing) in [("3-branch gather", &before), ("fused table gather", &after)] {
+        t.row(&[
+            format!("supersplit gather: {name}"),
+            format!("{n} rows, {leaves} leaves"),
+            timing.per_iter_label(),
+            format!("{:.1} Mrows/s", n as f64 / timing.mean_s / 1e6),
+        ]);
+    }
+    rewrites.push(Rewrite {
+        hot_loop: "supersplit gather",
+        unit: "Mrows/s",
+        before: n as f64 / before.mean_s / 1e6,
+        after: n as f64 / after.mean_s / 1e6,
+    });
+
+    // ------------------------------------------------------------------
+    // Rewrite 2: the condition-evaluation bitmap fill.
+    // Before: per-row class-list get + rank check + branchy
+    // Bitmap::set. After: word-level decode_into + rank→slot table
+    // with a trash slot + OR-only writes (the eval_feature_pass inner
+    // loop). Identical bitmaps either way — asserted before timing.
+    // ------------------------------------------------------------------
+    let raw = col.as_numerical();
+    let threshold = 0.5f32;
+    let counts = cl.histogram();
+    // One condition per even rank (mirrors a realistic eval query).
+    let want_rank: Vec<usize> = (1..=leaves as usize).filter(|r| r % 2 == 1).collect();
+    let eval_before = || {
+        let mut bitmaps: Vec<Bitmap> = want_rank
+            .iter()
+            .map(|&r| Bitmap::with_len(counts[r] as usize))
+            .collect();
+        let mut local_of_rank = vec![usize::MAX; leaves as usize + 1];
+        let mut wanted = vec![false; leaves as usize + 1];
+        for (li, &r) in want_rank.iter().enumerate() {
+            local_of_rank[r] = li;
+            wanted[r] = true;
+        }
+        let mut cursor = vec![0usize; want_rank.len()];
+        for (i, &v) in raw.iter().enumerate() {
+            let c = cl.get(i) as usize;
+            if wanted[c] {
+                let li = local_of_rank[c];
+                let p = cursor[li];
+                bitmaps[li].set(p, v <= threshold);
+                cursor[li] = p + 1;
+            }
+        }
+        std::hint::black_box(&bitmaps);
+        bitmaps
+    };
+    let eval_after = || {
+        // The branchless shape of eval_feature_pass.
+        let trash = want_rank.len();
+        let mut slot_of = vec![trash; leaves as usize + 1];
+        let mut thresholds = vec![f32::NAN; trash + 1];
+        let mut lens = Vec::with_capacity(trash);
+        let mut offset = Vec::with_capacity(trash + 2);
+        let mut nwords = 0usize;
+        for (li, &r) in want_rank.iter().enumerate() {
+            slot_of[r] = li;
+            thresholds[li] = threshold;
+            let len = counts[r] as usize;
+            lens.push(len);
+            offset.push(nwords);
+            nwords += len.div_ceil(64);
+        }
+        offset.push(nwords);
+        let mut words = vec![0u64; nwords + 1];
+        let mut wmask = vec![usize::MAX; trash + 1];
+        wmask[trash] = 0;
+        let mut cursor = vec![0usize; trash + 1];
+        let mut codes = vec![0u32; 64 * 1024];
+        let mut base = 0usize;
+        for chunk in raw.chunks(64 * 1024) {
+            let codes = &mut codes[..chunk.len()];
+            cl.decode_into(base, codes);
+            for (k, &v) in chunk.iter().enumerate() {
+                let li = slot_of[codes[k] as usize];
+                let p = cursor[li];
+                let bit = (v <= thresholds[li]) as u64;
+                words[offset[li] + ((p >> 6) & wmask[li])] |= bit << (p & 63);
+                cursor[li] = p + 1;
+            }
+            base += chunk.len();
+        }
+        let bitmaps: Vec<Bitmap> = want_rank
+            .iter()
+            .enumerate()
+            .map(|(li, _)| Bitmap::from_words(lens[li], words[offset[li]..offset[li + 1]].to_vec()))
+            .collect();
+        std::hint::black_box(&bitmaps);
+        bitmaps
+    };
+    assert_eq!(eval_before(), eval_after(), "eval rewrite must be exact");
+    let before = bench(5, 8.0, || {
+        eval_before();
+    });
+    let after = bench(5, 8.0, || {
+        eval_after();
+    });
+    for (name, timing) in [("branchy set", &before), ("word-level fill", &after)] {
+        t.row(&[
+            format!("eval bitmap fill: {name}"),
+            format!("{n} rows, {} conditions", want_rank.len()),
+            timing.per_iter_label(),
+            format!("{:.1} Mrows/s", n as f64 / timing.mean_s / 1e6),
+        ]);
+    }
+    rewrites.push(Rewrite {
+        hot_loop: "eval bitmap fill",
+        unit: "Mrows/s",
+        before: n as f64 / before.mean_s / 1e6,
+        after: n as f64 / after.mean_s / 1e6,
+    });
+
+    // ------------------------------------------------------------------
+    // Rewrite 3: sequential class-list decoding (the substrate of the
+    // eval fill): per-row get vs word-level decode_into.
+    // ------------------------------------------------------------------
+    let decode_before = bench(10, 8.0, || {
+        let mut acc = 0u64;
+        for i in 0..n {
+            acc += cl.get(i) as u64;
+        }
+        std::hint::black_box(acc);
+    });
+    let mut codes = vec![0u32; n];
+    let decode_after = bench(10, 8.0, || {
+        cl.decode_into(0, &mut codes);
+        let acc: u64 = codes.iter().map(|&c| c as u64).sum();
+        std::hint::black_box(acc);
+    });
+    {
+        let mut check = vec![0u32; n];
+        cl.decode_into(0, &mut check);
+        for i in 0..n {
+            assert_eq!(check[i], cl.get(i), "decode rewrite must be exact");
+        }
+    }
+    for (name, timing) in [("get x n", &decode_before), ("decode_into", &decode_after)] {
+        t.row(&[
+            format!("classlist decode: {name}"),
+            format!("{n} codes (width {})", cl.width()),
+            timing.per_iter_label(),
+            format!("{:.1} Mops/s", n as f64 / timing.mean_s / 1e6),
+        ]);
+    }
+    rewrites.push(Rewrite {
+        hot_loop: "classlist decode",
+        unit: "Mops/s",
+        before: n as f64 / decode_before.mean_s / 1e6,
+        after: n as f64 / decode_after.mean_s / 1e6,
+    });
+
+    // Alg. 1 with realistic bagging + candidate checks (closure cost).
+    let full_totals = {
         let mut h = Histogram::new(2);
         for i in 0..n {
             let w = bagger.weight(0, i as u64);
@@ -74,7 +323,7 @@ fn main() {
             &sorted,
             &labels,
             2,
-            &totals,
+            &full_totals,
             ScoreKind::Gini,
             |_| 1,
             |_| true,
@@ -101,7 +350,7 @@ fn main() {
             arity,
             &labels,
             2,
-            &totals,
+            &full_totals,
             ScoreKind::Gini,
             |_| 1,
             |_| true,
@@ -116,32 +365,12 @@ fn main() {
         format!("{:.1} Mrows/s", n as f64 / timing.mean_s / 1e6),
     ]);
 
-    // Class-list reads (the sample2node closure inside every scan).
-    let mut cl = ClassList::with_open(n, 64);
-    for i in 0..n {
-        cl.set(i, (i % 65) as u32);
-    }
-    let timing = bench(10, 10.0, || {
-        let mut acc = 0u64;
-        for i in 0..n {
-            acc += cl.get(i) as u64;
-        }
-        std::hint::black_box(acc);
-    });
-    t.row(&[
-        "classlist get x n".into(),
-        format!("{n} reads (width {})", cl.width()),
-        timing.per_iter_label(),
-        format!("{:.1} Mops/s", n as f64 / timing.mean_s / 1e6),
-    ]);
-
     // Level-update application (rewrite + repack).
-    let bitmap = {
-        let count = cl.histogram()[1..].iter().sum::<u64>() as usize;
-        let mut per_leaf: Vec<Bitmap> = (1..=64)
-            .map(|r| Bitmap::with_len(cl.histogram()[r] as usize))
+    let update = {
+        let mut per_leaf: Vec<Bitmap> = (1..=leaves as usize)
+            .map(|r| Bitmap::with_len(counts[r] as usize))
             .collect();
-        let mut pos = vec![0usize; 64];
+        let mut pos = vec![0usize; leaves as usize];
         for i in 0..n {
             let c = cl.get(i);
             if c > 0 {
@@ -149,34 +378,34 @@ fn main() {
                 pos[(c - 1) as usize] += 1;
             }
         }
-        std::hint::black_box(count);
-        per_leaf
-    };
-    let update = LevelUpdate {
-        tree: 0,
-        depth: 6,
-        outcomes: bitmap
-            .into_iter()
-            .map(|bm| LeafOutcome::Split {
-                bitmap: bm,
-                left_open: true,
-                right_open: true,
-            })
-            .collect(),
+        LevelUpdate {
+            tree: 0,
+            depth: 6,
+            outcomes: per_leaf
+                .into_iter()
+                .map(|bm| LeafOutcome::Split {
+                    bitmap: bm,
+                    left_open: true,
+                    right_open: true,
+                })
+                .collect(),
+        }
     };
     let timing = bench(5, 10.0, || {
         let r = apply_update_to_class_list(&cl, &update).unwrap();
         std::hint::black_box(&r);
     });
     t.row(&[
-        "level update (64->128 leaves)".into(),
+        format!("level update ({leaves}->{} leaves)", leaves * 2),
         format!("{n} samples"),
         timing.per_iter_label(),
         format!("{:.1} Mrows/s", n as f64 / timing.mean_s / 1e6),
     ]);
 
     // End-to-end single tree on a mid-size dataset (the composite).
-    let ds = SyntheticSpec::new(Family::LinearCont { informative: 4 }, 100_000, 12, 5).generate();
+    let e2e_rows = sized(100_000, 5_000);
+    let ds =
+        SyntheticSpec::new(Family::LinearCont { informative: 4 }, e2e_rows, 12, 5).generate();
     let params = drf::config::ForestParams {
         num_trees: 1,
         max_depth: 12,
@@ -193,10 +422,10 @@ fn main() {
         std::hint::black_box(&r);
     });
     t.row(&[
-        "end-to-end tree (n=100k, m=12)".into(),
+        format!("end-to-end tree (n={e2e_rows}, m=12)"),
         "1 tree".into(),
         timing.per_iter_label(),
-        format!("{:.2} Mrows*levels/s", 100_000.0 * 12.0 / timing.mean_s / 1e6),
+        format!("{:.2} Mrows*levels/s", e2e_rows as f64 * 12.0 / timing.mean_s / 1e6),
     ]);
 
     // XLA scorer vs native (artifact-dependent).
@@ -246,5 +475,27 @@ fn main() {
     }
 
     t.print();
-    println!("\n(hotpath timings feed EXPERIMENTS.md §Perf; times via {})", format_seconds(1.0));
+
+    // BENCH_hotpath.json: the table plus typed before/after rows
+    // proving each branchless rewrite.
+    let mut o = t.to_json();
+    o.set("rows_scanned", Json::from_usize(n)).set(
+        "rewrites",
+        Json::Arr(
+            rewrites
+                .iter()
+                .map(|r| {
+                    let mut rj = Json::object();
+                    rj.set("hot_loop", Json::Str(r.hot_loop.into()))
+                        .set("unit", Json::Str(r.unit.into()))
+                        .set("before", Json::Num(r.before))
+                        .set("after", Json::Num(r.after))
+                        .set("speedup", Json::Num(r.after / r.before));
+                    rj
+                })
+                .collect(),
+        ),
+    );
+    write_bench_json("hotpath", o);
+    println!("(hotpath timings feed EXPERIMENTS.md §Perf; times via {})", format_seconds(1.0));
 }

@@ -10,7 +10,7 @@
 use drf::data::synthetic::{Family, SyntheticSpec};
 use drf::forest::{ForestParams, RandomForest};
 use drf::serve::{BatchOptions, FlatForest};
-use drf::util::bench::{bench, fmt_count, Table};
+use drf::util::bench::{bench, fmt_count, write_bench_json, Table};
 use drf::util::Json;
 
 fn main() {
@@ -98,9 +98,7 @@ fn main() {
         .set("flat_mt_rows_per_s", Json::Num(rps(t_mt.mean_s)))
         .set("speedup_flat", Json::Num(t_ref.mean_s / t_flat.mean_s))
         .set("speedup_flat_mt", Json::Num(t_ref.mean_s / t_mt.mean_s));
-    let path = "BENCH_serve.json";
-    std::fs::write(path, o.to_string()).unwrap();
-    println!("\nsummary written to {path}");
+    write_bench_json("serve", o);
     if t_ref.mean_s / t_flat.mean_s < 3.0 {
         println!("WARNING: flat single-thread speedup below the 3x acceptance target");
     }

@@ -18,9 +18,10 @@ use drf::data::synthetic::{Family, SyntheticSpec};
 use drf::forest::RandomForest;
 use drf::metrics::Stopwatch;
 use drf::rng::{BaggingMode, FeatureSampling};
-use drf::util::bench::{fmt_bytes, fmt_count, Table};
+use drf::util::bench::{fmt_bytes, fmt_count, write_bench_json, Table};
+use drf::util::Json;
 
-fn analytic() {
+fn analytic() -> Json {
     println!("=== Table 1 (analytic), paper scale: n=17.3e9, m=72, m'=9, w=82, D=20 ===");
     let mut wl = Workload::with_defaults(17_300_000_000, 72, 82, 20);
     wl.z = 400_000; // ~open leaves at depth 20 (Table 2)
@@ -48,9 +49,10 @@ fn analytic() {
         ]);
     }
     t.print();
+    t.to_json()
 }
 
-fn measured() {
+fn measured() -> Json {
     println!("\n=== Table 1 (measured) on a shared workload: n=20k, m=12, depth<=8 ===");
     let ds = SyntheticSpec::new(Family::LinearCont { informative: 4 }, 20_000, 12, 5).generate();
     let params = ForestParams {
@@ -163,9 +165,13 @@ fn measured() {
          records; DRF never writes after prep and broadcasts ~1 bit/sample/level;\n\
          USB cuts DRF reads further (z=1)."
     );
+    t.to_json()
 }
 
 fn main() {
-    analytic();
-    measured();
+    let a = analytic();
+    let m = measured();
+    let mut o = Json::object();
+    o.set("analytic", a).set("measured", m);
+    write_bench_json("table1_complexity", o);
 }

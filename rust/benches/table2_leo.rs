@@ -76,4 +76,5 @@ fn main() {
         ]);
     }
     t.print();
+    t.write_json("table2_leo");
 }

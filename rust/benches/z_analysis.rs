@@ -13,9 +13,10 @@ use drf::config::{ForestParams, TopologyParams, TrainConfig};
 use drf::data::synthetic::{Family, SyntheticSpec};
 use drf::forest::RandomForest;
 use drf::rng::FeatureSampling;
-use drf::util::bench::Table;
+use drf::util::bench::{write_bench_json, Table};
+use drf::util::Json;
 
-fn monte_carlo() {
+fn monte_carlo() -> Json {
     println!("=== E[Z]: Monte-Carlo vs closed-form regimes ===");
     let mut t = Table::new(&["m", "m'", "z", "w", "d", "E[m'']", "E[Z] (MC)", "Z (model)"]);
     let cases = [
@@ -55,9 +56,10 @@ fn monte_carlo() {
         ]);
     }
     t.print();
+    t.to_json()
 }
 
-fn measured() {
+fn measured() -> Json {
     println!("\n=== Z measured during real training (per-level max load) ===");
     let ds = SyntheticSpec::new(Family::Majority { informative: 4 }, 20_000, 64, 3).generate();
     let mut t = Table::new(&["sampling", "w", "d", "mean Z", "max Z", "mean m''"]);
@@ -111,9 +113,13 @@ fn measured() {
         "\nShape check (paper §3.2): USB (PerDepth) slashes m'' and Z;\n\
          redundancy d>1 cuts Z again at the w≈m'' balance point."
     );
+    t.to_json()
 }
 
 fn main() {
-    monte_carlo();
-    measured();
+    let mc = monte_carlo();
+    let meas = measured();
+    let mut o = Json::object();
+    o.set("monte_carlo", mc).set("measured", meas);
+    write_bench_json("z_analysis", o);
 }

@@ -168,6 +168,46 @@ impl ClassList {
             (c != 0).then_some((i, c))
         })
     }
+
+    /// Word-level sequential decode: the leaf codes of samples
+    /// `start..start + out.len()`, written into `out`.
+    ///
+    /// Equivalent to `out[k] = self.get(start + k)` but each packed
+    /// word is loaded **once** into a shift register instead of being
+    /// re-fetched (and its offsets re-derived) per sample — the
+    /// sequential scans (condition evaluation walks the column in row
+    /// order) decode their chunk of codes up front through this
+    /// (BENCH_hotpath.json `classlist decode`).
+    pub fn decode_into(&self, start: usize, out: &mut [u32]) {
+        debug_assert!(start + out.len() <= self.n);
+        if out.is_empty() {
+            return;
+        }
+        let width = self.width;
+        let mask = if width == 64 {
+            u64::MAX
+        } else {
+            (1u64 << width) - 1
+        };
+        let start_bit = start as u64 * width as u64;
+        let mut word_idx = (start_bit / 64) as usize;
+        let off = (start_bit % 64) as u32;
+        // Shift register: low bits are the next undecoded code.
+        let mut acc: u128 = (self.words[word_idx] >> off) as u128;
+        let mut acc_bits: u32 = 64 - off;
+        word_idx += 1;
+        for o in out.iter_mut() {
+            if acc_bits < width {
+                let w = self.words.get(word_idx).copied().unwrap_or(0);
+                acc |= (w as u128) << acc_bits;
+                acc_bits += 64;
+                word_idx += 1;
+            }
+            *o = (acc as u64 & mask) as u32;
+            acc >>= width;
+            acc_bits -= width;
+        }
+    }
 }
 
 #[cfg(test)]
@@ -221,6 +261,35 @@ mod tests {
         assert_eq!(cl.get(49), 65_535);
         assert_eq!(cl.get(25), 1);
         assert_eq!(cl.get(24), 0);
+    }
+
+    #[test]
+    fn decode_into_matches_get() {
+        // Every width that matters: 1, 3 (straddles words), 5, 17, 33.
+        for num_open in [1u32, 7, 31, 100_000, u32::MAX] {
+            let n = 257usize;
+            let mut cl = ClassList::with_open(n, num_open);
+            for i in 0..n {
+                cl.set(
+                    i,
+                    ((i as u64 * 2_654_435_761) % (num_open as u64 + 1)) as u32,
+                );
+            }
+            // Whole-range decode.
+            let mut out = vec![0u32; n];
+            cl.decode_into(0, &mut out);
+            for i in 0..n {
+                assert_eq!(out[i], cl.get(i), "i={i} width={}", cl.width());
+            }
+            // Arbitrary offsets and lengths (chunked decoding).
+            for (start, len) in [(0usize, 0usize), (1, 64), (63, 65), (100, 157), (256, 1)] {
+                let mut out = vec![0u32; len];
+                cl.decode_into(start, &mut out);
+                for k in 0..len {
+                    assert_eq!(out[k], cl.get(start + k), "start={start} k={k}");
+                }
+            }
+        }
     }
 
     #[test]

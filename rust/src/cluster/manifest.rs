@@ -31,19 +31,34 @@ pub fn checksum_file(path: &Path) -> Result<u64> {
     let f = std::fs::File::open(path)
         .with_context(|| format!("checksumming {}", path.display()))?;
     let mut r = std::io::BufReader::with_capacity(1 << 16, f);
-    let mut hash: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut hash: u64 = FNV_OFFSET;
     let mut buf = [0u8; 1 << 16];
     loop {
         let n = r.read(&mut buf)?;
         if n == 0 {
             break;
         }
-        for &b in &buf[..n] {
-            hash ^= b as u64;
-            hash = hash.wrapping_mul(0x1_0000_0000_01b3);
-        }
+        hash = fnv_update(hash, &buf[..n]);
     }
     Ok(hash)
+}
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+
+fn fnv_update(mut hash: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        hash ^= b as u64;
+        hash = hash.wrapping_mul(0x1_0000_0000_01b3);
+    }
+    hash
+}
+
+/// FNV-1a over an in-memory byte slice — same hash as
+/// [`checksum_file`]; used to verify a shard pack against the *mapped*
+/// bytes an [`crate::data::MmapStore`]-backed worker will actually
+/// scan (warming the pages on the way).
+pub fn checksum_bytes(bytes: &[u8]) -> u64 {
+    fnv_update(FNV_OFFSET, bytes)
 }
 
 fn hex_u64(v: u64) -> Json {

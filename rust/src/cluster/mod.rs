@@ -34,6 +34,8 @@ pub mod shard;
 pub mod worker;
 
 pub use engine::{hello_template, ClusterOptions, ClusterPool};
-pub use manifest::{checksum_file, ClusterManifest, ShardColumn, ShardEntry, ShardManifest};
+pub use manifest::{
+    checksum_bytes, checksum_file, ClusterManifest, ShardColumn, ShardEntry, ShardManifest,
+};
 pub use shard::{write_shards, ShardOptions};
 pub use worker::{load_shard, LoadedShard, WorkerOptions, WorkerServer};

@@ -3,8 +3,20 @@
 //! A worker is a shard pack brought to life: it loads (and, by default,
 //! checksums) the pack written by `drf shard`, opens the columns
 //! through the existing [`ColumnStore`] backends — streaming from disk,
-//! or preloaded into RAM with `--preload` — and serves the splitter
-//! wire protocol on a TCP listener. It starts with **no training
+//! or zero-copy memory-mapped with `--preload` — and serves the
+//! splitter wire protocol on a TCP listener.
+//!
+//! `--preload` serves the pack through [`MmapStore`]: the presorted
+//! DRFC v2 files are mapped once and every training scan borrows chunk
+//! slices straight from the mapping (no syscalls, no copies after the
+//! first-touch pass; on non-unix the store falls back to one buffered
+//! whole-file read, which is the old materialize-into-RAM behavior).
+//! Manifest checksum verification still runs unless `--no-verify` is
+//! given — for a preloaded pack it runs against the **mapped bytes**
+//! training will actually scan (also warming the page cache), so
+//! `--preload` never weakens integrity checking; `--no-verify` skips
+//! the checksums in both modes but header/truncation validation at
+//! open always happens. It starts with **no training
 //! configuration**: the leader's Hello handshake carries the seed,
 //! bagging/sampling modes, and scorer, and the worker builds its
 //! [`SplitterCore`] from them (validating that the pack's topology
@@ -12,7 +24,7 @@
 //! restarted comes back empty; the leader's recovery layer replays the
 //! level-update log to rebuild its per-tree state.
 
-use super::manifest::{checksum_file, ShardManifest};
+use super::manifest::{checksum_bytes, checksum_file, ShardManifest};
 use crate::config::PruneMode;
 use crate::coordinator::splitter::{SplitterConfig, SplitterCore};
 use crate::coordinator::tcp::{handle_request, hello_info_for};
@@ -22,7 +34,8 @@ use crate::coordinator::wire::{
 };
 use crate::data::disk::ColumnReader;
 use crate::data::io_stats::IoStats;
-use crate::data::store::{ColumnFiles, ColumnStore, DiskStore, MemStore};
+use crate::data::mmap::MmapStore;
+use crate::data::store::{ColumnFiles, ColumnStore, DiskStore};
 use crate::rng::{Bagger, BaggingMode, FeatureSampling};
 use crate::splits::scorer::ScoreKind;
 use crate::Result;
@@ -38,10 +51,16 @@ use std::sync::{Arc, Mutex};
 pub struct WorkerOptions {
     /// Concurrent column scans inside the splitter (wall clock only).
     pub scan_threads: usize,
-    /// Materialize the pack into RAM instead of streaming from disk.
+    /// Serve the pack zero-copy through [`MmapStore`] instead of
+    /// streaming every pass from disk (see module docs for the
+    /// interaction with `verify`).
     pub preload: bool,
-    /// Checksum every file against the manifest before serving.
+    /// Checksum every file against the manifest before serving. With
+    /// `preload` the checksums run over the mapped bytes.
     pub verify: bool,
+    /// Streaming-mode disk-scan prefetch depth (chunks a background
+    /// reader may run ahead; 0 = synchronous; ignored with `preload`).
+    pub prefetch_chunks: usize,
 }
 
 impl Default for WorkerOptions {
@@ -50,6 +69,7 @@ impl Default for WorkerOptions {
             scan_threads: 1,
             preload: false,
             verify: true,
+            prefetch_chunks: 0,
         }
     }
 }
@@ -67,6 +87,9 @@ pub struct LoadedShard {
 /// Open (and optionally verify) the shard pack in `dir`.
 pub fn load_shard(dir: &std::path::Path, opts: &WorkerOptions) -> Result<LoadedShard> {
     let manifest = ShardManifest::load(dir)?;
+    // The label column is always materialized (it is replicated per
+    // splitter and read constantly); checksum it from the file either
+    // way.
     if opts.verify {
         let lc = checksum_file(&dir.join(&manifest.labels_file))?;
         ensure!(
@@ -74,21 +97,6 @@ pub fn load_shard(dir: &std::path::Path, opts: &WorkerOptions) -> Result<LoadedS
             "label column {} failed its checksum",
             manifest.labels_file
         );
-        for c in &manifest.columns {
-            ensure!(
-                checksum_file(&dir.join(&c.file))? == c.checksum,
-                "column {} file {} failed its checksum",
-                c.index,
-                c.file
-            );
-            if let (Some(sf), Some(sc)) = (&c.sorted_file, c.sorted_checksum) {
-                ensure!(
-                    checksum_file(&dir.join(sf))? == sc,
-                    "column {} presorted file {sf} failed its checksum",
-                    c.index
-                );
-            }
-        }
     }
 
     let stats = IoStats::new();
@@ -124,20 +132,34 @@ pub fn load_shard(dir: &std::path::Path, opts: &WorkerOptions) -> Result<LoadedS
     }
 
     let storage: Arc<dyn ColumnStore> = if opts.preload {
-        // One pass per file through the disk store, then serve from RAM
-        // (the presorted views come from the pack — nothing re-sorts).
-        let d = DiskStore::open(files, stats.clone())?;
-        let mut cols = BTreeMap::new();
-        let mut sorted = BTreeMap::new();
-        for j in d.columns() {
-            if manifest.schema.columns[j].ctype.is_numerical() {
-                sorted.insert(j, d.read_sorted(j)?);
-            }
-            cols.insert(j, d.read_raw(j)?);
+        // Zero-copy: map the pack once; every scan borrows from the
+        // mapping (the presorted views come from the pack — nothing is
+        // re-sorted, nothing is copied). Checksums run over the mapped
+        // bytes — the exact bytes training will scan — which also
+        // faults the pages in up front.
+        let m = MmapStore::open(files, stats.clone())?;
+        if opts.verify {
+            verify_columns(&manifest, |c, sorted| {
+                Ok(checksum_bytes(if sorted {
+                    m.sorted_file_bytes(c.index)?
+                        .expect("presorted mapping exists (validated above)")
+                } else {
+                    m.raw_file_bytes(c.index)?
+                }))
+            })?;
         }
-        Arc::new(MemStore::from_parts(cols, sorted))
+        Arc::new(m)
     } else {
-        Arc::new(DiskStore::open(files, stats.clone())?)
+        if opts.verify {
+            verify_columns(&manifest, |c, sorted| {
+                checksum_file(&dir.join(if sorted {
+                    c.sorted_file.as_ref().expect("sorted=true only for Some")
+                } else {
+                    &c.file
+                }))
+            })?;
+        }
+        Arc::new(DiskStore::open(files, stats.clone())?.with_prefetch(opts.prefetch_chunks))
     };
 
     Ok(LoadedShard {
@@ -146,6 +168,34 @@ pub fn load_shard(dir: &std::path::Path, opts: &WorkerOptions) -> Result<LoadedS
         labels: Arc::new(labels),
         stats,
     })
+}
+
+/// Check every column of `manifest` against its recorded checksums.
+/// `checksum_of(column, sorted)` produces the hash of the raw
+/// (`sorted = false`) or presorted (`sorted = true`, only called when
+/// the column has one) file — from disk for the streaming store, from
+/// the mapped bytes for the preloaded one, or from a remote fetch for
+/// a future remote shard source.
+fn verify_columns(
+    manifest: &ShardManifest,
+    mut checksum_of: impl FnMut(&super::manifest::ShardColumn, bool) -> Result<u64>,
+) -> Result<()> {
+    for c in &manifest.columns {
+        ensure!(
+            checksum_of(c, false)? == c.checksum,
+            "column {} file {} failed its checksum",
+            c.index,
+            c.file
+        );
+        if let (Some(sf), Some(sc)) = (&c.sorted_file, c.sorted_checksum) {
+            ensure!(
+                checksum_of(c, true)? == sc,
+                "column {} presorted file {sf} failed its checksum",
+                c.index
+            );
+        }
+    }
+    Ok(())
 }
 
 /// Shared worker state: the loaded pack plus the splitter core the
@@ -456,14 +506,32 @@ mod tests {
             format!("{err:#}").contains("checksum"),
             "unexpected error: {err:#}"
         );
-        // --no-verify skips the check and still opens (header intact).
-        load_shard(
+        // The preloaded (mmap) path verifies against the mapped bytes
+        // and must catch the same corruption.
+        let err = load_shard(
             &sdir,
             &WorkerOptions {
-                verify: false,
+                preload: true,
                 ..Default::default()
             },
         )
-        .unwrap();
+        .unwrap_err();
+        assert!(
+            format!("{err:#}").contains("checksum"),
+            "mapped-byte verification missed the corruption: {err:#}"
+        );
+        // --no-verify skips the check and still opens (header intact),
+        // in both modes.
+        for preload in [false, true] {
+            load_shard(
+                &sdir,
+                &WorkerOptions {
+                    preload,
+                    verify: false,
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+        }
     }
 }

@@ -164,6 +164,12 @@ pub enum StorageMode {
     /// counts in the header, so passes can be resumed/limited without
     /// reading the tail). Trees are bit-identical to the other modes.
     DiskV2,
+    /// Shards on disk as chunked DRFC v2 files, memory-mapped once:
+    /// scans borrow chunk slices straight from the mapping (zero
+    /// syscalls and zero copies after the first-touch pass; buffered
+    /// fallback on non-unix). Trees are bit-identical to the other
+    /// modes.
+    Mmap,
 }
 
 impl Default for StorageMode {
@@ -212,6 +218,13 @@ pub struct TrainConfig {
     /// worker pool. Purely a wall-clock knob — trees and `IoStats`
     /// accounting are identical for any value.
     pub scan_threads: usize,
+    /// Disk-scan prefetch depth: how many chunks a background reader
+    /// may decode ahead of the scan visitor (applies to the `Disk` /
+    /// `DiskV2` storage modes; 0 = synchronous scans). Chunks are
+    /// still delivered strictly in order, so this — like
+    /// `scan_threads` — never changes a tree or a completed pass's
+    /// accounting, only wall clock.
+    pub prefetch_chunks: usize,
     /// Directory holding AOT artifacts (for `ScorerBackend::Xla`).
     pub artifacts_dir: Option<std::path::PathBuf>,
     /// Cluster manifest (`cluster.json` from `drf shard`); required by
@@ -232,6 +245,7 @@ impl Default for TrainConfig {
             storage: StorageMode::default(),
             engine: Engine::default(),
             scan_threads: 1,
+            prefetch_chunks: 0,
             artifacts_dir: None,
             cluster_manifest: None,
             cluster_workers: Vec::new(),
@@ -317,11 +331,13 @@ impl TrainConfig {
                         StorageMode::Memory => "memory",
                         StorageMode::Disk => "disk",
                         StorageMode::DiskV2 => "disk_v2",
+                        StorageMode::Mmap => "mmap",
                     }
                     .into(),
                 ),
             )
             .set("scan_threads", Json::from_usize(self.scan_threads))
+            .set("prefetch_chunks", Json::from_usize(self.prefetch_chunks))
             .set(
                 "engine",
                 Json::Str(
@@ -430,11 +446,15 @@ impl TrainConfig {
                 "memory" => StorageMode::Memory,
                 "disk" => StorageMode::Disk,
                 "disk_v2" => StorageMode::DiskV2,
+                "mmap" => StorageMode::Mmap,
                 s => anyhow::bail!("unknown storage mode '{s}'"),
             };
         }
         if let Some(x) = v.get_opt("scan_threads") {
             cfg.scan_threads = x.as_usize()?;
+        }
+        if let Some(x) = v.get_opt("prefetch_chunks") {
+            cfg.prefetch_chunks = x.as_usize()?;
         }
         if let Some(x) = v.get_opt("engine") {
             cfg.engine = match x.as_str()? {
@@ -502,6 +522,11 @@ mod tests {
         assert_eq!(cfg, back);
         // The v2 storage mode roundtrips too.
         cfg.storage = StorageMode::DiskV2;
+        let back = TrainConfig::from_json(&cfg.to_json().to_string()).unwrap();
+        assert_eq!(cfg, back);
+        // And the mmap mode + prefetch depth.
+        cfg.storage = StorageMode::Mmap;
+        cfg.prefetch_chunks = 3;
         let back = TrainConfig::from_json(&cfg.to_json().to_string()).unwrap();
         assert_eq!(cfg, back);
         // And the cluster engine with its manifest + worker list.

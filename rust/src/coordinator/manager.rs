@@ -3,7 +3,8 @@
 //! finished trees. Also home of the threaded worker engine.
 
 use super::splitter::{
-    disk_storage_for, disk_v2_storage_for, memory_storage_for, SplitterConfig, SplitterCore,
+    disk_storage_for, disk_v2_storage_for, memory_storage_for, mmap_storage_for, SplitterConfig,
+    SplitterCore,
 };
 use super::topology::Topology;
 use super::transport::{DirectPool, SplitterPool};
@@ -88,7 +89,9 @@ impl Manager {
             scan_threads: cfg.scan_threads,
         };
         let tmp_dir = match cfg.storage {
-            StorageMode::Disk | StorageMode::DiskV2 => Some(crate::util::tempdir()?),
+            StorageMode::Disk | StorageMode::DiskV2 | StorageMode::Mmap => {
+                Some(crate::util::tempdir()?)
+            }
             StorageMode::Memory => None,
         };
 
@@ -127,8 +130,22 @@ impl Manager {
                             &sub,
                             crate::data::disk::DEFAULT_CHUNK_ROWS as u32,
                             stats.clone(),
+                            cfg.prefetch_chunks,
                         )?,
-                        _ => disk_storage_for(ds, &cols, &sub, stats.clone())?,
+                        StorageMode::Mmap => mmap_storage_for(
+                            ds,
+                            &cols,
+                            &sub,
+                            crate::data::disk::DEFAULT_CHUNK_ROWS as u32,
+                            stats.clone(),
+                        )?,
+                        _ => disk_storage_for(
+                            ds,
+                            &cols,
+                            &sub,
+                            stats.clone(),
+                            cfg.prefetch_chunks,
+                        )?,
                     }
                 }
             };
@@ -402,10 +419,22 @@ mod tests {
         assert!(total_read > 0);
         // The chunked v2 layout is bit-identical too.
         cfg2.storage = StorageMode::DiskV2;
-        let (v2_trees, report) = Manager::new(cfg2).unwrap().train(&ds).unwrap();
+        let (v2_trees, report) = Manager::new(cfg2.clone()).unwrap().train(&ds).unwrap();
         assert_eq!(mem_trees, v2_trees, "DRFC v2 must not change the model");
         let total_read: u64 = report.splitter_io.iter().map(|s| s.disk_read_bytes).sum();
         assert!(total_read > 0);
+        // The zero-copy mmap backend is bit-identical too, and its
+        // first-touch passes still register as disk reads.
+        cfg2.storage = StorageMode::Mmap;
+        let (mmap_trees, report) = Manager::new(cfg2.clone()).unwrap().train(&ds).unwrap();
+        assert_eq!(mem_trees, mmap_trees, "mmap must not change the model");
+        let total_read: u64 = report.splitter_io.iter().map(|s| s.disk_read_bytes).sum();
+        assert!(total_read > 0);
+        // And prefetching disk scans change nothing but wall clock.
+        cfg2.storage = StorageMode::DiskV2;
+        cfg2.prefetch_chunks = 2;
+        let (pf_trees, _) = Manager::new(cfg2).unwrap().train(&ds).unwrap();
+        assert_eq!(mem_trees, pf_trees, "prefetch must not change the model");
     }
 
     #[test]

@@ -50,6 +50,19 @@ impl Bitmap {
         (self.words[i / 64] >> (i % 64)) & 1 == 1
     }
 
+    /// Assemble a bitmap from pre-filled packed words (the branchless
+    /// condition-evaluation pass builds its bitmaps word-level and
+    /// wraps them here). Bits at `len` and beyond must be zero; word
+    /// count must match exactly.
+    pub fn from_words(len: usize, words: Vec<u64>) -> Self {
+        debug_assert_eq!(words.len(), len.div_ceil(64));
+        debug_assert!(
+            len % 64 == 0 || words.last().map_or(true, |w| w >> (len % 64) == 0),
+            "stray bits beyond len"
+        );
+        Self { len, words }
+    }
+
     pub fn count_ones(&self) -> usize {
         self.words.iter().map(|w| w.count_ones() as usize).sum()
     }

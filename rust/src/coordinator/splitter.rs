@@ -30,9 +30,8 @@ use crate::splits::histogram::Histogram;
 use crate::splits::scorer::{pick_best, ScoreKind};
 use crate::splits::xla_scorer::{best_numerical_supersplit_xla, ScoreTasks};
 use crate::splits::{categorical, numerical, SplitCandidate};
-use crate::tree::Condition;
+use crate::tree::{CategorySet, Condition};
 use crate::Result;
-use std::borrow::Cow;
 use std::collections::{BTreeMap, HashMap};
 use std::sync::{Arc, Mutex};
 
@@ -63,12 +62,35 @@ struct TreeState {
     /// SPRINT-style pruned attribute lists (adaptive mode only): sorted
     /// entries filtered to samples still in open leaves.
     pruned_sorted: Option<BTreeMap<usize, Vec<SortedEntry>>>,
+    /// Presorted columns materialized for the XLA scoring path, cached
+    /// per column for the current level round (cleared on every level
+    /// update). Without it, every supersplit query on a disk backend
+    /// re-materialized the full column per query; with it, a level
+    /// charges exactly one chunked pass per column, like the native
+    /// scan path.
+    sorted_cache: Mutex<HashMap<usize, Arc<Vec<SortedEntry>>>>,
     /// Next depth level this tree's class list expects. Makes level
     /// updates idempotent: an at-least-once transport (the cluster
     /// pool re-issues a request after a reconnect) may deliver the
     /// same `LevelUpdate` twice, and applying the class-list
     /// transition twice would corrupt the mapping.
     next_depth: u32,
+}
+
+/// A materialized presorted view: borrowed straight from storage (or a
+/// pruned per-tree list), or shared out of the per-level cache.
+enum SortedView<'a> {
+    Borrowed(&'a [SortedEntry]),
+    Cached(Arc<Vec<SortedEntry>>),
+}
+
+impl SortedView<'_> {
+    fn as_slice(&self) -> &[SortedEntry] {
+        match self {
+            SortedView::Borrowed(s) => s,
+            SortedView::Cached(v) => v.as_slice(),
+        }
+    }
 }
 
 /// The splitter worker core (synchronous; thread wiring lives in
@@ -166,19 +188,33 @@ impl SplitterCore {
     /// Whole presorted view of column `j` for consumers that need the
     /// full slice at once (the XLA scorer): the pruned per-tree copy
     /// when active, a zero-copy borrow when the backend holds the view
-    /// resident, else one materializing pass over the store.
+    /// resident (MemStore, MmapStore), else the per-level cache —
+    /// filled by one materializing pass over the store, charged exactly
+    /// like the chunked native-scan path, then reused free of charge
+    /// for the rest of the level round (like a resident borrow).
     fn materialize_sorted<'a>(
         &'a self,
         state: &'a TreeState,
         j: usize,
-    ) -> Result<Cow<'a, [SortedEntry]>> {
+    ) -> Result<SortedView<'a>> {
         if let Some(entries) = self.charged_pruned_entries(state, j) {
-            return Ok(Cow::Borrowed(entries));
+            return Ok(SortedView::Borrowed(entries));
         }
         if let Some(entries) = self.storage.borrow_sorted(j) {
-            return Ok(Cow::Borrowed(entries));
+            return Ok(SortedView::Borrowed(entries));
         }
-        Ok(Cow::Owned(self.storage.read_sorted(j)?))
+        if let Some(cached) = state.sorted_cache.lock().unwrap().get(&j) {
+            return Ok(SortedView::Cached(cached.clone()));
+        }
+        // Fill outside the lock: parallel scan jobs materialize
+        // *different* columns and must not serialize on each other.
+        let entries = Arc::new(self.storage.read_sorted(j)?);
+        state
+            .sorted_cache
+            .lock()
+            .unwrap()
+            .insert(j, entries.clone());
+        Ok(SortedView::Cached(entries))
     }
 
     // ------------------------------------------------------------------
@@ -205,6 +241,7 @@ impl SplitterCore {
                 class_list: cl,
                 bag_weights: weights,
                 pruned_sorted: None,
+                sorted_cache: Mutex::new(HashMap::new()),
                 next_depth: 0,
             },
         );
@@ -294,6 +331,13 @@ impl SplitterCore {
     /// One column's contribution to the supersplit: a chunk-granular
     /// scan through the store feeding the incremental Alg. 1 /
     /// count-table state.
+    ///
+    /// The per-sample class-list + bag-weight gather is table-driven:
+    /// the per-leaf candidacy mask becomes a rank-indexed byte table,
+    /// so "is this sample live for this column" folds to two loads and
+    /// one multiply instead of the historical closed-leaf /
+    /// non-candidate / out-of-bag branch ladder (BENCH_hotpath.json
+    /// `supersplit gather`).
     fn scan_column_supersplit(
         &self,
         j: usize,
@@ -303,9 +347,18 @@ impl SplitterCore {
     ) -> Result<Vec<Option<SplitCandidate>>> {
         let cl = &state.class_list;
         let bag_weights = &state.bag_weights;
-        let is_candidate = |h: u32| mask[(h - 1) as usize];
-        let sample2node = |i: u32| cl.get(i as usize);
-        let bag = |i: u32| bag_weights[i as usize] as u32;
+        // Rank → "feature drawn for this leaf" (index 0 = closed leaf,
+        // never a candidate).
+        let mut cand_tbl = vec![0u8; mask.len() + 1];
+        for (r, &m) in mask.iter().enumerate() {
+            cand_tbl[r + 1] = m as u8;
+        }
+        let gather = move |i: u32| {
+            let h = cl.get(i as usize);
+            let b = bag_weights[i as usize] as u32;
+            let live = (cand_tbl[h as usize] as u32) & (b != 0) as u32;
+            (h * live, b)
+        };
 
         match self.schema.columns[j].ctype {
             ColumnType::Numerical => {
@@ -316,12 +369,12 @@ impl SplitterCore {
                     return best_numerical_supersplit_xla(
                         scorer.as_ref(),
                         j,
-                        &q_j,
+                        q_j.as_slice(),
                         &self.labels,
                         leaf_totals,
-                        sample2node,
-                        is_candidate,
-                        bag,
+                        |i| cl.get(i as usize),
+                        |h| mask[(h - 1) as usize],
+                        |i| bag_weights[i as usize] as u32,
                     );
                 }
                 let mut scan = numerical::NumericalSupersplitScan::new(
@@ -330,9 +383,7 @@ impl SplitterCore {
                     self.num_classes(),
                     leaf_totals,
                     self.cfg.score_kind,
-                    sample2node,
-                    is_candidate,
-                    bag,
+                    gather,
                 );
                 if let Some(entries) = self.charged_pruned_entries(state, j) {
                     scan.push(entries);
@@ -352,9 +403,7 @@ impl SplitterCore {
                     self.num_classes(),
                     leaf_totals,
                     self.cfg.score_kind,
-                    sample2node,
-                    is_candidate,
-                    bag,
+                    gather,
                 );
                 self.storage.scan_raw(j, &mut |base, chunk| match chunk {
                     RawChunk::Categorical(values) => {
@@ -421,6 +470,18 @@ impl SplitterCore {
 
     /// One feature's evaluation pass: a chunked scan over the raw
     /// column filling the bitmaps of this feature's condition slots.
+    ///
+    /// The per-row fill is branchless (BENCH_hotpath.json `eval bitmap
+    /// fill`): condition payloads (threshold / category set) are
+    /// hoisted out of the loop into per-slot tables — the historical
+    /// loop re-matched the `Condition` enum **per row** — and every row
+    /// is routed through a rank→slot table. Rows whose rank carries no
+    /// condition here land on a trailing *trash slot* whose single word
+    /// absorbs the writes (its word index is masked to 0), so the
+    /// inner loop is a fixed load/compare/OR sequence with no
+    /// data-dependent branches. Class-list codes are decoded
+    /// chunk-wise with the word-level [`ClassList::decode_into`]
+    /// instead of per-row bit extraction.
     fn eval_feature_pass(
         &self,
         feature: usize,
@@ -430,54 +491,89 @@ impl SplitterCore {
         counts: &[u64],
         max_rank: usize,
     ) -> Result<Vec<(usize, Bitmap)>> {
-        // Local (per-pass) slot index by leaf rank; ranks are unique
-        // across conditions, so each belongs to exactly one slot.
-        let mut local_of_rank = vec![usize::MAX; max_rank + 1];
-        let mut rank_wanted = vec![false; max_rank + 1];
-        let mut bitmaps: Vec<Bitmap> = Vec::with_capacity(slots.len());
-        let mut cursor = vec![0usize; slots.len()];
+        // Rank → local slot; ranks are unique across conditions, so
+        // each belongs to exactly one slot. Unclaimed ranks (and rank
+        // 0 = closed) route to the trash slot.
+        let trash = slots.len();
+        let mut slot_of = vec![trash; counts.len().max(max_rank + 1)];
+
+        let ctype = self.schema.columns[feature].ctype;
+        // Per-slot payloads, one trailing trash entry each. The trash
+        // threshold is NaN (`v <= NaN` is false) and the trash set is
+        // empty, so trash bits are always 0 — not that anyone reads
+        // them.
+        let mut thresholds = vec![f32::NAN; slots.len() + 1];
+        let trash_set = CategorySet::empty(match ctype {
+            ColumnType::Categorical { arity } => arity,
+            ColumnType::Numerical => 0,
+        });
+        let mut sets: Vec<&CategorySet> = vec![&trash_set; slots.len() + 1];
+        // Bitmap words, flattened: slot li owns words[offset[li]..offset[li+1]].
+        let mut lens = Vec::with_capacity(slots.len());
+        let mut offset = Vec::with_capacity(slots.len() + 2);
+        let mut nwords = 0usize;
         for (li, &slot) in slots.iter().enumerate() {
             let rank = conditions[slot].0 as usize;
-            local_of_rank[rank] = li;
-            rank_wanted[rank] = true;
-            bitmaps.push(Bitmap::with_len(counts[rank] as usize));
+            slot_of[rank] = li;
+            // Validate the condition type once per slot, not per row.
+            match (&conditions[slot].1, ctype) {
+                (Condition::NumLe { threshold, .. }, ColumnType::Numerical) => {
+                    thresholds[li] = *threshold;
+                }
+                (Condition::CatIn { set, .. }, ColumnType::Categorical { .. }) => {
+                    sets[li] = set;
+                }
+                _ => anyhow::bail!("type mismatch on feature {feature}"),
+            }
+            let len = counts[rank] as usize;
+            lens.push(len);
+            offset.push(nwords);
+            nwords += len.div_ceil(64);
         }
+        offset.push(nwords); // trash words start here
+        let mut words = vec![0u64; nwords + 1]; // +1 = the trash word
+        // Word-index mask: identity for real slots, 0 for trash (all
+        // trash writes land on its single word).
+        let mut wmask = vec![usize::MAX; slots.len() + 1];
+        wmask[trash] = 0;
+        let mut cursor = vec![0usize; slots.len() + 1];
+        let mut codes: Vec<u32> = Vec::new();
 
         self.storage.scan_raw(feature, &mut |base, chunk| {
+            codes.resize(chunk.len(), 0);
+            cl.decode_into(base, &mut codes);
             match chunk {
                 RawChunk::Numerical(vals) => {
                     for (k, &v) in vals.iter().enumerate() {
-                        let c = cl.get(base + k) as usize;
-                        if c <= max_rank && rank_wanted[c] {
-                            let li = local_of_rank[c];
-                            let Condition::NumLe { threshold, .. } = &conditions[slots[li]].1
-                            else {
-                                anyhow::bail!("type mismatch on feature {feature}");
-                            };
-                            let p = cursor[li];
-                            bitmaps[li].set(p, v <= *threshold);
-                            cursor[li] = p + 1;
-                        }
+                        let li = slot_of[codes[k] as usize];
+                        let p = cursor[li];
+                        let bit = (v <= thresholds[li]) as u64;
+                        words[offset[li] + ((p >> 6) & wmask[li])] |= bit << (p & 63);
+                        cursor[li] = p + 1;
                     }
                 }
                 RawChunk::Categorical(vals) => {
                     for (k, &v) in vals.iter().enumerate() {
-                        let c = cl.get(base + k) as usize;
-                        if c <= max_rank && rank_wanted[c] {
-                            let li = local_of_rank[c];
-                            let Condition::CatIn { set, .. } = &conditions[slots[li]].1 else {
-                                anyhow::bail!("type mismatch on feature {feature}");
-                            };
-                            let p = cursor[li];
-                            bitmaps[li].set(p, set.contains(v));
-                            cursor[li] = p + 1;
-                        }
+                        let li = slot_of[codes[k] as usize];
+                        let p = cursor[li];
+                        let bit = sets[li].contains(v) as u64;
+                        words[offset[li] + ((p >> 6) & wmask[li])] |= bit << (p & 63);
+                        cursor[li] = p + 1;
                     }
                 }
             }
             Ok(())
         })?;
-        Ok(slots.iter().copied().zip(bitmaps).collect())
+
+        Ok(slots
+            .iter()
+            .enumerate()
+            .map(|(li, &slot)| {
+                debug_assert_eq!(cursor[li], lens[li], "slot fill must cover the leaf");
+                let bm = Bitmap::from_words(lens[li], words[offset[li]..offset[li + 1]].to_vec());
+                (slot, bm)
+            })
+            .collect())
     }
 
     /// Alg. 2 step 7: apply the broadcast level update to the local
@@ -506,6 +602,11 @@ impl SplitterCore {
         );
         state.class_list = apply_update_to_class_list(&state.class_list, u)?;
         state.next_depth = u.depth + 1;
+        // The level round is over: drop the presorted views cached for
+        // the XLA path (the cache is scoped to one level round so a
+        // deep disk-backed run never holds more than one level's worth
+        // of materialized columns).
+        state.sorted_cache.lock().unwrap().clear();
 
         // SPRINT-style adaptive pruning (paper §3): once the closed
         // fraction crosses the threshold, rebuild per-tree attribute
@@ -645,14 +746,16 @@ pub fn memory_storage_for(ds: &crate::data::Dataset, columns: &[usize]) -> Arc<d
 }
 
 /// Write a splitter's columns to DRFC v1 files under `dir` and return
-/// the disk store (used by the disk-mode benches/tests).
+/// the disk store (used by the disk-mode benches/tests), prefetching
+/// `prefetch_chunks` ahead per scan (0 = synchronous).
 pub fn disk_storage_for(
     ds: &crate::data::Dataset,
     columns: &[usize],
     dir: &std::path::Path,
     stats: IoStats,
+    prefetch_chunks: usize,
 ) -> Result<Arc<dyn ColumnStore>> {
-    crate::data::store::disk_store_for(ds, columns, dir, stats)
+    crate::data::store::disk_store_for(ds, columns, dir, stats, prefetch_chunks)
 }
 
 /// Write a splitter's columns to chunked DRFC v2 files under `dir` and
@@ -663,8 +766,22 @@ pub fn disk_v2_storage_for(
     dir: &std::path::Path,
     chunk_rows: u32,
     stats: IoStats,
+    prefetch_chunks: usize,
 ) -> Result<Arc<dyn ColumnStore>> {
-    crate::data::store::disk_v2_store_for(ds, columns, dir, chunk_rows, stats)
+    crate::data::store::disk_v2_store_for(ds, columns, dir, chunk_rows, stats, prefetch_chunks)
+}
+
+/// Write a splitter's columns as chunked DRFC v2 files under `dir` and
+/// memory-map them — scans borrow chunk slices straight from the
+/// mapping ([`crate::data::mmap::MmapStore`]).
+pub fn mmap_storage_for(
+    ds: &crate::data::Dataset,
+    columns: &[usize],
+    dir: &std::path::Path,
+    chunk_rows: u32,
+    stats: IoStats,
+) -> Result<Arc<dyn ColumnStore>> {
+    crate::data::store::mmap_store_for(ds, columns, dir, chunk_rows, stats)
 }
 
 #[cfg(test)]
@@ -764,7 +881,7 @@ mod tests {
                 let storage = if disk {
                     let sub = dir.path().join(format!("s{threads}_{disk}"));
                     std::fs::create_dir_all(&sub).unwrap();
-                    disk_storage_for(&ds, &[0, 1, 2, 3, 4, 5], &sub, IoStats::new()).unwrap()
+                    disk_storage_for(&ds, &[0, 1, 2, 3, 4, 5], &sub, IoStats::new(), 0).unwrap()
                 } else {
                     memory_storage_for(&ds, &[0, 1, 2, 3, 4, 5])
                 };
@@ -944,7 +1061,7 @@ mod tests {
         let ds = SyntheticSpec::new(Family::LinearCont { informative: 2 }, 200, 3, 1).generate();
         let dir = crate::util::tempdir().unwrap();
         let stats = IoStats::new();
-        let storage = disk_storage_for(&ds, &[0, 2], dir.path(), stats.clone()).unwrap();
+        let storage = disk_storage_for(&ds, &[0, 2], dir.path(), stats.clone(), 0).unwrap();
         let s = SplitterCore::new(
             0,
             ds.schema().clone(),

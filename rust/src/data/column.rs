@@ -12,6 +12,11 @@
 
 /// One entry of a presorted numerical column: Alg. 1's `(a, i)` (the
 /// label `y` is looked up from the label column at scan time).
+///
+/// `repr(C)` pins the layout to the on-disk DRFC record (little-endian
+/// `f32` value then `u32` sample, 8 bytes, align 4) so the mmap backend
+/// can reinterpret mapped file bytes as `&[SortedEntry]` without a copy.
+#[repr(C)]
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct SortedEntry {
     /// Attribute value.

@@ -120,6 +120,52 @@ impl Header {
             _ => HEADER_BYTES_V1 + 4 + 4 * self.chunks.len() as u64,
         }
     }
+
+    /// Parse a header from the start of `bytes` (the mmap backend reads
+    /// headers straight out of the mapping; same validation as the
+    /// streaming reader).
+    pub fn parse(mut bytes: &[u8]) -> Result<Header> {
+        read_header(&mut bytes)
+    }
+
+    /// Reject a file whose payload is shorter than this header's
+    /// declared row count — shared by every backend so a truncated
+    /// column file fails **at open** with the same error, never as a
+    /// confusing mid-scan EOF/fault deep inside a training pass.
+    /// (Saturating: a forged astronomic row count must fail the check,
+    /// not overflow it.)
+    pub fn ensure_untruncated(&self, file_len: u64, path: &Path) -> Result<()> {
+        let expected = self
+            .nbytes()
+            .saturating_add(self.rows.saturating_mul(self.kind.record_bytes() as u64));
+        ensure!(
+            file_len >= expected,
+            "{}: truncated column file — header declares {} records \
+             ({expected} bytes incl. header) but the file has {file_len} bytes",
+            path.display(),
+            self.rows
+        );
+        Ok(())
+    }
+
+    /// Chunk sizes of a full pass over the records: the file's own
+    /// chunk table (v2) or [`DEFAULT_CHUNK_ROWS`] cuts (v1). Shared by
+    /// every backend so chunk boundaries — and therefore scan-visitor
+    /// call sequences — are identical for the same file.
+    pub fn chunk_plan(&self) -> Vec<usize> {
+        if self.version == VERSION_V2 {
+            self.chunks.iter().map(|&c| c as usize).collect()
+        } else {
+            let mut plan = Vec::new();
+            let mut left = self.rows as usize;
+            while left > 0 {
+                let c = left.min(DEFAULT_CHUNK_ROWS);
+                plan.push(c);
+                left -= c;
+            }
+            plan
+        }
+    }
 }
 
 const HEADER_BYTES_V1: u64 = 4 + 4 + 4 + 8; // magic, version, kind, rows
@@ -200,6 +246,39 @@ fn read_header(r: &mut impl Read) -> Result<Header> {
         version,
         chunks,
     })
+}
+
+/// Decode packed little-endian `f32` records into `buf` (replacing its
+/// contents). The single source of truth for the record layout, shared
+/// by the streaming reader's chunk reads and the mmap backend's
+/// non-zero-copy fallback.
+pub fn decode_f32(bytes: &[u8], buf: &mut Vec<f32>) {
+    buf.clear();
+    buf.extend(
+        bytes
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes(b.try_into().unwrap())),
+    );
+}
+
+/// Decode packed little-endian `u32` records into `buf`.
+pub fn decode_u32(bytes: &[u8], buf: &mut Vec<u32>) {
+    buf.clear();
+    buf.extend(
+        bytes
+            .chunks_exact(4)
+            .map(|b| u32::from_le_bytes(b.try_into().unwrap())),
+    );
+}
+
+/// Decode packed little-endian `(f32 value, u32 sample)` records into
+/// `buf`.
+pub fn decode_sorted(bytes: &[u8], buf: &mut Vec<SortedEntry>) {
+    buf.clear();
+    buf.extend(bytes.chunks_exact(8).map(|b| SortedEntry {
+        value: f32::from_le_bytes(b[0..4].try_into().unwrap()),
+        sample: u32::from_le_bytes(b[4..8].try_into().unwrap()),
+    }));
 }
 
 /// Streaming writer for a column file.
@@ -303,21 +382,7 @@ impl ColumnReader {
         let mut r = BufReader::with_capacity(1 << 20, f);
         let header = read_header(&mut r)
             .with_context(|| format!("reading header of {}", path.display()))?;
-        // Reject truncated files up front: a payload shorter than the
-        // declared row count would otherwise surface later as a
-        // confusing mid-scan EOF deep inside a training pass.
-        // (Saturating: a forged astronomic row count must fail the
-        // check, not overflow it.)
-        let expected = header
-            .nbytes()
-            .saturating_add(header.rows.saturating_mul(header.kind.record_bytes() as u64));
-        ensure!(
-            file_len >= expected,
-            "{}: truncated column file — header declares {} records \
-             ({expected} bytes incl. header) but the file has {file_len} bytes",
-            path.display(),
-            header.rows
-        );
+        header.ensure_untruncated(file_len, path)?;
         stats.add_disk_read(header.nbytes());
         let chunk_end = header.chunks.first().copied().unwrap_or(0) as u64;
         Ok(Self {
@@ -389,12 +454,7 @@ impl ColumnReader {
     pub fn next_chunk_f32(&mut self, buf: &mut Vec<f32>, max_records: usize) -> Result<usize> {
         ensure!(self.header.kind == FileKind::Numerical, "layout mismatch");
         let n = self.fill_chunk(max_records)?;
-        buf.clear();
-        buf.extend(
-            self.scratch
-                .chunks_exact(4)
-                .map(|b| f32::from_le_bytes(b.try_into().unwrap())),
-        );
+        decode_f32(&self.scratch, buf);
         Ok(n)
     }
 
@@ -402,12 +462,7 @@ impl ColumnReader {
     pub fn next_chunk_u32(&mut self, buf: &mut Vec<u32>, max_records: usize) -> Result<usize> {
         ensure!(self.header.kind == FileKind::Categorical, "layout mismatch");
         let n = self.fill_chunk(max_records)?;
-        buf.clear();
-        buf.extend(
-            self.scratch
-                .chunks_exact(4)
-                .map(|b| u32::from_le_bytes(b.try_into().unwrap())),
-        );
+        decode_u32(&self.scratch, buf);
         Ok(n)
     }
 
@@ -422,11 +477,7 @@ impl ColumnReader {
             "layout mismatch"
         );
         let n = self.fill_chunk(max_records)?;
-        buf.clear();
-        buf.extend(self.scratch.chunks_exact(8).map(|b| SortedEntry {
-            value: f32::from_le_bytes(b[0..4].try_into().unwrap()),
-            sample: u32::from_le_bytes(b[4..8].try_into().unwrap()),
-        }));
+        decode_sorted(&self.scratch, buf);
         Ok(n)
     }
 
@@ -435,18 +486,7 @@ impl ColumnReader {
     /// Callers doing a whole-column scan iterate this once instead of
     /// probing [`Self::next_chunk_records`] per chunk.
     pub fn chunk_plan(&self) -> Vec<usize> {
-        if self.header.version == VERSION_V2 {
-            self.header.chunks.iter().map(|&c| c as usize).collect()
-        } else {
-            let mut plan = Vec::new();
-            let mut left = self.header.rows as usize;
-            while left > 0 {
-                let c = left.min(DEFAULT_CHUNK_ROWS);
-                plan.push(c);
-                left -= c;
-            }
-            plan
-        }
+        self.header.chunk_plan()
     }
 
     /// Record count of the next chunk of a scan: the file's own chunk

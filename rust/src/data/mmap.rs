@@ -1,0 +1,566 @@
+//! Zero-copy mmap [`ColumnStore`] backend.
+//!
+//! [`DiskStore`](super::store::DiskStore) re-reads warm page-cache
+//! bytes through `read(2)` into bounded buffers on every pass — at
+//! billions of examples the per-level syscall + copy tax on the
+//! splitter scans *is* training overhead (the paper's complexity
+//! analysis charges one sequential pass per column per level, so scan
+//! throughput is training throughput). [`MmapStore`] maps each DRFC
+//! column file once and hands the scan visitors **borrowed slices
+//! straight out of the mapping**: after the first (page-faulting) pass
+//! a scan touches no syscalls and copies no bytes.
+//!
+//! * On unix the mapping is real `mmap(2)` via self-declared FFI (no
+//!   new crates — the dependency policy is anyhow-only), advised
+//!   `MADV_SEQUENTIAL` to keep kernel readahead aligned with the
+//!   strictly sequential scan discipline of paper §2.
+//! * On non-unix platforms the same type falls back to one buffered
+//!   whole-file read at open; scans then serve borrowed slices from the
+//!   owned buffer (same API, same accounting, no mapping).
+//!
+//! Validation happens **at open**, exactly like the streaming reader:
+//! DRFC v1/v2 magic/version/kind, chunk-table consistency, and the
+//! truncation check (payload at least `rows × record_bytes`). A
+//! truncated or forged file is rejected before any scan runs
+//! (`tests/storage_backends.rs` holds the rejection matrix).
+//!
+//! Accounting: the header is charged at open (like
+//! [`ColumnReader::open`](super::disk::ColumnReader)); a file's payload
+//! bytes and its read pass are charged on the **first-touch pass**
+//! only — that pass is the one that actually faults pages in from
+//! disk. Warm re-scans are free, like [`MemStore`](super::store::MemStore)
+//! scans, which is precisely the economy the backend exists to exhibit
+//! in the Table 1 benches.
+//!
+//! Byte→record reinterpretation is zero-copy only on little-endian
+//! targets with the 4-byte payload alignment every DRFC header
+//! guarantees (v1 header = 20 bytes, v2 = 20 + 4 + 4·chunks); otherwise
+//! chunks are decoded through a scratch buffer, bit-identically.
+
+use super::column::SortedEntry;
+use super::disk::{self, Header};
+use super::io_stats::IoStats;
+use super::schema::ColumnType;
+use super::store::{ColumnFiles, ColumnStore, RawChunk};
+use crate::Result;
+use anyhow::{ensure, Context};
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
+
+// ---------------------------------------------------------------------
+// The mapping itself (unix mmap / non-unix buffered fallback)
+// ---------------------------------------------------------------------
+
+#[cfg(unix)]
+mod sys {
+    use std::os::raw::{c_int, c_void};
+
+    pub const PROT_READ: c_int = 0x1;
+    pub const MAP_PRIVATE: c_int = 0x2;
+    pub const MADV_SEQUENTIAL: c_int = 2;
+
+    extern "C" {
+        pub fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: c_int,
+            flags: c_int,
+            fd: c_int,
+            offset: i64,
+        ) -> *mut c_void;
+        pub fn munmap(addr: *mut c_void, len: usize) -> c_int;
+        pub fn madvise(addr: *mut c_void, len: usize, advice: c_int) -> c_int;
+    }
+}
+
+/// One read-only mapped (or buffered) file.
+enum Backing {
+    #[cfg(unix)]
+    Mapped {
+        ptr: *mut std::os::raw::c_void,
+        len: usize,
+    },
+    /// Non-unix fallback (and zero-length guard): the file read once
+    /// into an owned buffer at open.
+    #[allow(dead_code)]
+    Buffered(Vec<u8>),
+}
+
+// The mapping is read-only for its entire lifetime; sharing the raw
+// pointer across scan threads is safe because nothing ever writes
+// through it and `munmap` only runs at drop (after all borrows end).
+unsafe impl Send for Backing {}
+unsafe impl Sync for Backing {}
+
+impl Backing {
+    #[cfg(unix)]
+    fn open(path: &Path) -> Result<Backing> {
+        use std::os::unix::io::AsRawFd;
+        let f = std::fs::File::open(path)
+            .with_context(|| format!("opening {}", path.display()))?;
+        let len = f.metadata()?.len() as usize;
+        if len == 0 {
+            // mmap(2) rejects zero-length mappings.
+            return Ok(Backing::Buffered(Vec::new()));
+        }
+        let ptr = unsafe {
+            sys::mmap(
+                std::ptr::null_mut(),
+                len,
+                sys::PROT_READ,
+                sys::MAP_PRIVATE,
+                f.as_raw_fd(),
+                0,
+            )
+        };
+        ensure!(
+            ptr as isize != -1,
+            "mmap of {} ({len} bytes) failed: {}",
+            path.display(),
+            std::io::Error::last_os_error()
+        );
+        // Readahead hint; purely advisory, failure is not an error.
+        unsafe { sys::madvise(ptr, len, sys::MADV_SEQUENTIAL) };
+        Ok(Backing::Mapped { ptr, len })
+    }
+
+    #[cfg(not(unix))]
+    fn open(path: &Path) -> Result<Backing> {
+        Ok(Backing::Buffered(std::fs::read(path).with_context(
+            || format!("reading {}", path.display()),
+        )?))
+    }
+
+    fn bytes(&self) -> &[u8] {
+        match self {
+            #[cfg(unix)]
+            Backing::Mapped { ptr, len } => unsafe {
+                std::slice::from_raw_parts(*ptr as *const u8, *len)
+            },
+            Backing::Buffered(v) => v.as_slice(),
+        }
+    }
+}
+
+impl Drop for Backing {
+    fn drop(&mut self) {
+        #[cfg(unix)]
+        if let Backing::Mapped { ptr, len } = *self {
+            unsafe { sys::munmap(ptr, len) };
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Record reinterpretation
+// ---------------------------------------------------------------------
+
+/// Reinterpret the packed little-endian payload as records of `T`, or
+/// `None` if the platform cannot do it zero-copy (big-endian, or a
+/// misaligned buffer — DRFC headers are 4-byte multiples, so mapped
+/// payloads are always aligned; the fallback only triggers on exotic
+/// targets).
+fn cast_records<T: Copy>(payload: &[u8]) -> Option<&[T]> {
+    if cfg!(target_endian = "big") {
+        return None;
+    }
+    let size = std::mem::size_of::<T>();
+    if payload.len() % size != 0 || payload.as_ptr() as usize % std::mem::align_of::<T>() != 0 {
+        return None;
+    }
+    // Safety: T is one of f32/u32/SortedEntry — Copy, repr(C), no
+    // padding, valid for every bit pattern — and the pointer is
+    // aligned, in-bounds, and read-only for the borrow's lifetime.
+    Some(unsafe {
+        std::slice::from_raw_parts(payload.as_ptr() as *const T, payload.len() / size)
+    })
+}
+
+/// One mapped DRFC column file.
+struct MappedFile {
+    backing: Backing,
+    header: Header,
+    payload: std::ops::Range<usize>,
+    /// Whether a pass has already faulted this file in (first-touch
+    /// accounting; see module docs).
+    touched: AtomicBool,
+}
+
+impl MappedFile {
+    fn open(path: &Path, expect: disk::FileKind, stats: &IoStats) -> Result<MappedFile> {
+        let backing = Backing::open(path)?;
+        let bytes = backing.bytes();
+        let header = Header::parse(bytes)
+            .with_context(|| format!("reading header of {}", path.display()))?;
+        ensure!(
+            header.kind == expect,
+            "{}: file holds {:?}, expected {:?}",
+            path.display(),
+            header.kind,
+            expect
+        );
+        // Same truncation rejection as the streaming reader's open.
+        header.ensure_untruncated(bytes.len() as u64, path)?;
+        let start = header.nbytes() as usize;
+        let end = start + header.rows as usize * header.kind.record_bytes();
+        stats.add_disk_read(header.nbytes());
+        Ok(MappedFile {
+            backing,
+            header,
+            payload: start..end,
+            touched: AtomicBool::new(false),
+        })
+    }
+
+    fn payload(&self) -> &[u8] {
+        &self.backing.bytes()[self.payload.clone()]
+    }
+
+    /// Charge this file's payload + pass if this is its first scan.
+    fn charge_first_touch(&self, stats: &IoStats) {
+        if !self.touched.swap(true, Ordering::Relaxed) {
+            stats.add_disk_read(self.payload.len() as u64);
+            stats.add_read_pass();
+        }
+    }
+
+    /// Feed the payload to `visit` as `(base_record, &[T])` chunks
+    /// following the file's chunk plan — zero-copy when the platform
+    /// allows, decoded through a scratch buffer otherwise.
+    fn scan<T: Copy>(
+        &self,
+        decode: impl Fn(&[u8], &mut Vec<T>),
+        mut visit: impl FnMut(usize, &[T]) -> Result<()>,
+    ) -> Result<()> {
+        let payload = self.payload();
+        let rec = self.header.kind.record_bytes();
+        let mut base = 0usize;
+        match cast_records::<T>(payload) {
+            Some(records) => {
+                for want in self.header.chunk_plan() {
+                    visit(base, &records[base..base + want])?;
+                    base += want;
+                }
+            }
+            None => {
+                let mut buf: Vec<T> = Vec::new();
+                for want in self.header.chunk_plan() {
+                    decode(&payload[base * rec..(base + want) * rec], &mut buf);
+                    visit(base, buf.as_slice())?;
+                    base += want;
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------
+// MmapStore
+// ---------------------------------------------------------------------
+
+struct MmapColumn {
+    raw: MappedFile,
+    sorted: Option<MappedFile>,
+    ctype: ColumnType,
+}
+
+/// Memory-mapped DRFC columns: scans hand out borrowed chunk slices
+/// straight from the mapping (see module docs for accounting and
+/// platform behavior). Files are validated at open and never copied.
+pub struct MmapStore {
+    columns: BTreeMap<usize, MmapColumn>,
+    stats: IoStats,
+}
+
+impl MmapStore {
+    /// Map column files that already exist on disk (a shard pack, a
+    /// dataset directory, or files written by [`MmapStore::build`]).
+    /// Every header is parsed and validated up front.
+    pub fn open(files: BTreeMap<usize, ColumnFiles>, stats: IoStats) -> Result<MmapStore> {
+        let mut columns = BTreeMap::new();
+        for (j, f) in files {
+            let expect = match f.ctype {
+                ColumnType::Numerical => disk::FileKind::Numerical,
+                ColumnType::Categorical { .. } => disk::FileKind::Categorical,
+            };
+            let raw = MappedFile::open(&f.raw, expect, &stats)
+                .with_context(|| format!("column {j}"))?;
+            let sorted = f
+                .sorted
+                .as_ref()
+                .map(|sp| {
+                    MappedFile::open(sp, disk::FileKind::SortedNumerical, &stats)
+                        .with_context(|| format!("column {j} (presorted)"))
+                })
+                .transpose()?;
+            columns.insert(
+                j,
+                MmapColumn {
+                    raw,
+                    sorted,
+                    ctype: f.ctype,
+                },
+            );
+        }
+        Ok(MmapStore { columns, stats })
+    }
+
+    /// Write `columns` of `ds` as chunked DRFC v2 files under `dir`
+    /// (presorting numerical columns) and map them — the mmap
+    /// equivalent of [`super::store::DiskV2Store::build`].
+    pub fn build(
+        ds: &super::dataset::Dataset,
+        columns: &[usize],
+        dir: &Path,
+        chunk_rows: u32,
+        stats: IoStats,
+    ) -> Result<MmapStore> {
+        let layout = disk::Layout::V2 { chunk_rows };
+        let mut files = BTreeMap::new();
+        for &j in columns {
+            let raw = dir.join(format!("col_{j}.drfc"));
+            let ctype = ds.schema().columns[j].ctype;
+            let mut sorted_path = None;
+            match ds.column(j) {
+                super::column::Column::Numerical(vals) => {
+                    disk::write_numerical_with(&raw, vals, layout, stats.clone())?;
+                    let sp = dir.join(format!("col_{j}.sorted.drfc"));
+                    disk::write_sorted_with(&sp, &ds.column(j).presort(), layout, stats.clone())?;
+                    sorted_path = Some(sp);
+                }
+                super::column::Column::Categorical { values, .. } => {
+                    disk::write_categorical_with(&raw, values, layout, stats.clone())?;
+                }
+            }
+            files.insert(
+                j,
+                ColumnFiles {
+                    raw,
+                    sorted: sorted_path,
+                    ctype,
+                },
+            );
+        }
+        MmapStore::open(files, stats)
+    }
+
+    fn column(&self, j: usize) -> Result<&MmapColumn> {
+        self.columns
+            .get(&j)
+            .ok_or_else(|| anyhow::anyhow!("store lacks column {j}"))
+    }
+
+    /// Whole raw file bytes of column `j` (header + payload), straight
+    /// from the mapping — lets a worker checksum its shard pack against
+    /// the manifest over the *exact bytes training will scan*, warming
+    /// the pages on the way.
+    pub fn raw_file_bytes(&self, j: usize) -> Result<&[u8]> {
+        Ok(self.column(j)?.raw.backing.bytes())
+    }
+
+    /// Whole presorted file bytes of column `j`, if it has one.
+    pub fn sorted_file_bytes(&self, j: usize) -> Result<Option<&[u8]>> {
+        Ok(self.column(j)?.sorted.as_ref().map(|m| m.backing.bytes()))
+    }
+}
+
+impl ColumnStore for MmapStore {
+    fn columns(&self) -> Vec<usize> {
+        self.columns.keys().copied().collect()
+    }
+
+    fn column_type(&self, j: usize) -> Result<ColumnType> {
+        Ok(self.column(j)?.ctype)
+    }
+
+    fn scan_raw(
+        &self,
+        j: usize,
+        visit: &mut dyn FnMut(usize, RawChunk<'_>) -> Result<()>,
+    ) -> Result<()> {
+        let col = self.column(j)?;
+        col.raw.charge_first_touch(&self.stats);
+        match col.ctype {
+            ColumnType::Numerical => col.raw.scan::<f32>(disk::decode_f32, |base, chunk: &[f32]| {
+                visit(base, RawChunk::Numerical(chunk))
+            }),
+            ColumnType::Categorical { .. } => {
+                col.raw.scan::<u32>(disk::decode_u32, |base, chunk: &[u32]| {
+                    visit(base, RawChunk::Categorical(chunk))
+                })
+            }
+        }
+    }
+
+    fn scan_sorted(
+        &self,
+        j: usize,
+        visit: &mut dyn FnMut(&[SortedEntry]) -> Result<()>,
+    ) -> Result<()> {
+        let col = self.column(j)?;
+        let m = col
+            .sorted
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("column {j} has no presorted file"))?;
+        m.charge_first_touch(&self.stats);
+        m.scan::<SortedEntry>(disk::decode_sorted, |_base, chunk: &[SortedEntry]| {
+            visit(chunk)
+        })
+    }
+
+    fn borrow_sorted(&self, j: usize) -> Option<&[SortedEntry]> {
+        let m = self.columns.get(&j)?.sorted.as_ref()?;
+        let entries = cast_records::<SortedEntry>(m.payload())?;
+        m.charge_first_touch(&self.stats);
+        Some(entries)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::store::{self, mem_store_for};
+    use crate::data::synthetic::LeoLikeSpec;
+    use std::sync::Arc;
+
+    fn mmap_over(ds: &crate::data::Dataset, cols: &[usize], dir: &Path) -> MmapStore {
+        MmapStore::build(ds, cols, dir, 97, IoStats::new()).unwrap()
+    }
+
+    #[test]
+    fn scans_match_memory_backend() {
+        let ds = LeoLikeSpec::new(600, 5).generate();
+        let cols = vec![0usize, 1, 3, 5];
+        let dir = crate::util::tempdir().unwrap();
+        let mem = mem_store_for(&ds, &cols);
+        let mm = mmap_over(&ds, &cols, dir.path());
+        assert_eq!(ColumnStore::columns(&mm), cols);
+        for &j in &cols {
+            assert_eq!(mm.column_type(j).unwrap(), ds.schema().columns[j].ctype);
+            assert_eq!(mm.read_raw(j).unwrap(), mem.read_raw(j).unwrap(), "col {j}");
+            if ds.column(j).is_numerical() {
+                assert_eq!(mm.read_sorted(j).unwrap(), mem.read_sorted(j).unwrap());
+                // The presorted view is borrowable zero-copy.
+                let b = mm.borrow_sorted(j).expect("mapped borrow");
+                assert_eq!(b, mem.borrow_sorted(j).unwrap());
+            }
+        }
+        // Chunks arrive in order with correct bases, per the v2 table.
+        let mut seen = 0usize;
+        mm.scan_raw(cols[0], &mut |base, chunk| {
+            assert_eq!(base, seen);
+            assert!(chunk.len() <= 97);
+            seen += chunk.len();
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(seen, ds.num_rows());
+        // Missing column errors.
+        assert!(mm.scan_raw(2, &mut |_, _| Ok(())).is_err());
+    }
+
+    #[test]
+    fn first_touch_accounting() {
+        let ds = LeoLikeSpec::new(300, 9).generate();
+        let dir = crate::util::tempdir().unwrap();
+        let stats = IoStats::new();
+        // Build charges the writes; open charges each header once.
+        let mm = MmapStore::build(&ds, &[0], dir.path(), 64, stats.clone()).unwrap();
+        stats.reset();
+        let before = stats.snapshot();
+        mm.read_raw(0).unwrap();
+        let first = stats.snapshot().delta_since(&before);
+        assert_eq!(first.disk_read_bytes, 300 * 4, "payload charged on first touch");
+        assert_eq!(first.disk_read_passes, 1);
+        // Warm re-scan: free, like MemStore.
+        mm.read_raw(0).unwrap();
+        let warm = stats.snapshot().delta_since(&before);
+        assert_eq!(warm.disk_read_bytes, first.disk_read_bytes);
+        assert_eq!(warm.disk_read_passes, first.disk_read_passes);
+        // The sorted view has its own first touch.
+        mm.read_sorted(0).unwrap();
+        let sorted = stats.snapshot().delta_since(&before);
+        assert_eq!(sorted.disk_read_bytes, 300 * 4 + 300 * 8);
+        assert_eq!(sorted.disk_read_passes, 2);
+    }
+
+    #[test]
+    fn v1_files_map_too() {
+        let dir = crate::util::tempdir().unwrap();
+        let path = dir.path().join("v1.drfc");
+        let stats = IoStats::new();
+        let vals: Vec<f32> = (0..1000).map(|i| (i % 31) as f32).collect();
+        disk::write_numerical(&path, &vals, stats.clone()).unwrap();
+        let mut files = BTreeMap::new();
+        files.insert(
+            0usize,
+            ColumnFiles {
+                raw: path,
+                sorted: None,
+                ctype: ColumnType::Numerical,
+            },
+        );
+        let mm = MmapStore::open(files, stats).unwrap();
+        assert_eq!(mm.read_raw(0).unwrap().as_numerical(), vals.as_slice());
+    }
+
+    #[test]
+    fn truncated_and_forged_files_rejected_at_open() {
+        let dir = crate::util::tempdir().unwrap();
+        let stats = IoStats::new();
+        let vals: Vec<f32> = (0..50).map(|i| i as f32).collect();
+        let open_one = |path: std::path::PathBuf| {
+            let mut files = BTreeMap::new();
+            files.insert(
+                0usize,
+                ColumnFiles {
+                    raw: path,
+                    sorted: None,
+                    ctype: ColumnType::Numerical,
+                },
+            );
+            MmapStore::open(files, IoStats::new())
+        };
+        // Truncated payload.
+        let p = dir.path().join("t.drfc");
+        disk::write_numerical(&p, &vals, stats.clone()).unwrap();
+        let full = std::fs::read(&p).unwrap();
+        std::fs::write(&p, &full[..full.len() - 8]).unwrap();
+        let err = open_one(p).unwrap_err();
+        assert!(format!("{err:#}").contains("truncated"), "{err:#}");
+        // Forged magic.
+        let p = dir.path().join("m.drfc");
+        disk::write_numerical(&p, &vals, stats.clone()).unwrap();
+        let mut bytes = std::fs::read(&p).unwrap();
+        bytes[0] = b'X';
+        std::fs::write(&p, &bytes).unwrap();
+        assert!(open_one(p).is_err());
+        // Forged v2 chunk table (sums past the row count).
+        let p = dir.path().join("c.drfc");
+        disk::write_numerical_with(&p, &vals, disk::Layout::V2 { chunk_rows: 16 }, stats)
+            .unwrap();
+        let mut bytes = std::fs::read(&p).unwrap();
+        bytes[24] = 60; // first chunk count 16 -> 60
+        std::fs::write(&p, &bytes).unwrap();
+        assert!(open_one(p).is_err());
+        // Kind mismatch vs the manifest-declared type.
+        let p = dir.path().join("k.drfc");
+        disk::write_categorical(&p, &[1, 2, 3], IoStats::new()).unwrap();
+        let err = open_one(p).unwrap_err();
+        assert!(format!("{err:#}").contains("expected"), "{err:#}");
+    }
+
+    #[test]
+    fn plugs_into_the_store_seam() {
+        // The trait-object seam every scan site uses.
+        let ds = LeoLikeSpec::new(200, 3).generate();
+        let dir = crate::util::tempdir().unwrap();
+        let mm: Arc<dyn ColumnStore> =
+            Arc::new(mmap_over(&ds, &[0, 1], dir.path()));
+        let got = store::run_scans(2, 2, |k| mm.read_raw(k)).unwrap();
+        assert_eq!(&got[0], ds.column(0));
+        assert_eq!(&got[1], ds.column(1));
+    }
+}

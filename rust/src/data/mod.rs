@@ -16,8 +16,12 @@
 //! * [`store`] — the **[`store::ColumnStore`]** abstraction: every
 //!   splitter scan is a chunk-granular sequential pass over one of its
 //!   backends ([`store::MemStore`], [`store::DiskStore`],
-//!   [`store::DiskV2Store`]), plus [`store::run_scans`] for bounded
-//!   intra-splitter scan parallelism;
+//!   [`store::DiskV2Store`], [`mmap::MmapStore`]), plus
+//!   [`store::run_scans`] for bounded intra-splitter scan parallelism;
+//! * [`mmap`] — the zero-copy backend: DRFC files memory-mapped via
+//!   self-declared unix FFI, scans borrow chunk slices straight from
+//!   the mapping (first-touch I/O accounting, buffered fallback on
+//!   non-unix);
 //! * [`sort`] — in-memory and external (k-way merge) presorting of
 //!   numerical columns;
 //! * [`synthetic`] — the paper's artificial dataset families plus the
@@ -28,6 +32,7 @@ pub mod csv;
 pub mod dataset;
 pub mod disk;
 pub mod io_stats;
+pub mod mmap;
 pub mod schema;
 pub mod sort;
 pub mod store;
@@ -35,5 +40,6 @@ pub mod synthetic;
 
 pub use column::{Column, SortedEntry};
 pub use dataset::Dataset;
+pub use mmap::MmapStore;
 pub use schema::{ColumnSpec, ColumnType, Schema};
 pub use store::{ColumnStore, DiskStore, DiskV2Store, MemStore, RawChunk};

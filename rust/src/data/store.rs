@@ -16,7 +16,17 @@
 //!   the worker's [`IoStats`] exactly as the Table 1 benches expect;
 //! * [`DiskV2Store`] — DRFC v2 files whose header carries the per-chunk
 //!   record counts ([`disk::Layout::V2`]), so a pass can be resumed or
-//!   stopped at any chunk boundary without reading the tail.
+//!   stopped at any chunk boundary without reading the tail;
+//! * [`crate::data::mmap::MmapStore`] — DRFC files memory-mapped once,
+//!   scans borrow chunk slices straight from the mapping (zero
+//!   syscalls, zero copies after the first-touch pass).
+//!
+//! The disk backends optionally run each scan as a **double-buffered
+//! prefetch pipeline** ([`DiskStore::with_prefetch`]): a background
+//! reader decodes chunk `N+1` while the visitor consumes chunk `N`,
+//! bounded by `TrainConfig::prefetch_chunks`. Delivery order is
+//! unchanged, so prefetching is invisible to results, and completed
+//! passes charge exactly what synchronous passes charge.
 //!
 //! Because the scan algorithms (Alg. 1 supersplit search, condition
 //! evaluation, SPRINT pruning) are pure left-to-right folds, chunk
@@ -293,9 +303,72 @@ pub struct ColumnFiles {
 /// Columns on disk; every scan is a fresh sequential pass through a
 /// bounded chunk buffer, charged to the worker's [`IoStats`]. Reads
 /// both DRFC versions; [`DiskStore::build`] writes v1 files.
+///
+/// With [`DiskStore::with_prefetch`] a scan becomes a two-stage
+/// pipeline: a background reader thread decodes chunk `N+1` (up to
+/// `prefetch_chunks` ahead, bounded channel) while the scan visitor
+/// consumes chunk `N`. Chunks are still delivered strictly in order, so
+/// the pipeline is deterministic by construction — it can change wall
+/// clock, never a tree, and on every completed pass the `IoStats`
+/// totals are byte-identical to the synchronous loop. (Only if a
+/// visitor *errors mid-scan* can the reader have charged up to
+/// `prefetch_chunks` of read-ahead the synchronous path would not have
+/// reached — the pass is aborted either way.)
 pub struct DiskStore {
     files: BTreeMap<usize, ColumnFiles>,
     stats: IoStats,
+    /// Chunks the background reader may run ahead of the visitor
+    /// (0 = synchronous single-threaded scans, the default).
+    prefetch_chunks: usize,
+}
+
+/// Drive one prefetching pass: the spawned reader pulls chunks of `T`
+/// off `reader` in plan order and ships them through a bounded channel;
+/// the caller's `consume` runs on the current thread. Spent buffers are
+/// recycled through a return channel, so steady state allocates
+/// `prefetch + 1` chunk buffers total. Reader-side I/O errors surface
+/// to the caller; a consumer error tears the pipeline down (the reader
+/// notices the closed channel and stops mid-file, exactly like a `?`
+/// in the synchronous loop).
+fn prefetched_scan<T: Send>(
+    reader: ColumnReader,
+    prefetch: usize,
+    read: impl FnMut(&mut ColumnReader, &mut Vec<T>, usize) -> Result<usize> + Send,
+    mut consume: impl FnMut(usize, &[T]) -> Result<()>,
+) -> Result<()> {
+    let plan = reader.chunk_plan();
+    std::thread::scope(|scope| {
+        let (tx, rx) = std::sync::mpsc::sync_channel::<Result<(usize, Vec<T>)>>(prefetch.max(1));
+        let (recycle_tx, recycle_rx) = std::sync::mpsc::channel::<Vec<T>>();
+        scope.spawn(move || {
+            let (mut reader, mut read) = (reader, read);
+            let mut base = 0usize;
+            for want in plan {
+                let mut buf = recycle_rx.try_recv().unwrap_or_default();
+                match read(&mut reader, &mut buf, want) {
+                    Ok(n) => {
+                        if tx.send(Ok((base, buf))).is_err() {
+                            return; // consumer bailed; stop reading
+                        }
+                        base += n;
+                    }
+                    Err(e) => {
+                        let _ = tx.send(Err(e));
+                        return;
+                    }
+                }
+            }
+            // The whole column went through: one completed read pass,
+            // charged from the thread that did the reading.
+            reader.end_pass();
+        });
+        for msg in rx {
+            let (base, buf) = msg?;
+            consume(base, &buf)?;
+            let _ = recycle_tx.send(buf);
+        }
+        Ok(())
+    })
 }
 
 impl DiskStore {
@@ -334,7 +407,18 @@ impl DiskStore {
                 },
             );
         }
-        Ok(DiskStore { files, stats })
+        Ok(DiskStore {
+            files,
+            stats,
+            prefetch_chunks: 0,
+        })
+    }
+
+    /// Enable the double-buffered prefetch pipeline: scans may run up
+    /// to `chunks` chunk reads ahead of the visitor (0 disables).
+    pub fn with_prefetch(mut self, chunks: usize) -> Self {
+        self.prefetch_chunks = chunks;
+        self
     }
 
     /// Build a v1 (monolithic) disk store.
@@ -374,7 +458,11 @@ impl DiskStore {
                 );
             }
         }
-        Ok(DiskStore { files, stats })
+        Ok(DiskStore {
+            files,
+            stats,
+            prefetch_chunks: 0,
+        })
     }
 
     fn file(&self, j: usize) -> Result<&ColumnFiles> {
@@ -400,6 +488,22 @@ impl ColumnStore for DiskStore {
     ) -> Result<()> {
         let f = self.file(j)?;
         let mut r = ColumnReader::open(&f.raw, self.stats.clone())?;
+        if self.prefetch_chunks > 0 {
+            return match f.ctype {
+                ColumnType::Numerical => prefetched_scan(
+                    r,
+                    self.prefetch_chunks,
+                    |r, buf, want| r.next_chunk_f32(buf, want),
+                    |base, chunk: &[f32]| visit(base, RawChunk::Numerical(chunk)),
+                ),
+                ColumnType::Categorical { .. } => prefetched_scan(
+                    r,
+                    self.prefetch_chunks,
+                    |r, buf, want| r.next_chunk_u32(buf, want),
+                    |base, chunk: &[u32]| visit(base, RawChunk::Categorical(chunk)),
+                ),
+            };
+        }
         let plan = r.chunk_plan();
         let mut base = 0usize;
         match f.ctype {
@@ -435,6 +539,14 @@ impl ColumnStore for DiskStore {
             .as_ref()
             .ok_or_else(|| anyhow::anyhow!("column {j} has no presorted file"))?;
         let mut r = ColumnReader::open(path, self.stats.clone())?;
+        if self.prefetch_chunks > 0 {
+            return prefetched_scan(
+                r,
+                self.prefetch_chunks,
+                |r, buf, want| r.next_chunk_sorted(buf, want),
+                |_base, chunk: &[SortedEntry]| visit(chunk),
+            );
+        }
         let plan = r.chunk_plan();
         let mut buf: Vec<SortedEntry> = Vec::new();
         for want in plan {
@@ -467,6 +579,12 @@ impl DiskV2Store {
         Ok(DiskV2Store {
             inner: DiskStore::build_with(ds, columns, dir, Layout::V2 { chunk_rows }, stats)?,
         })
+    }
+
+    /// Enable the prefetch pipeline (see [`DiskStore::with_prefetch`]).
+    pub fn with_prefetch(mut self, chunks: usize) -> Self {
+        self.inner = self.inner.with_prefetch(chunks);
+        self
     }
 }
 
@@ -501,14 +619,18 @@ pub fn mem_store_for(ds: &Dataset, columns: &[usize]) -> Arc<dyn ColumnStore> {
     Arc::new(MemStore::build(ds, columns))
 }
 
-/// v1 disk store for `columns` of `ds`, files written under `dir`.
+/// v1 disk store for `columns` of `ds`, files written under `dir`,
+/// prefetching `prefetch_chunks` ahead (0 = synchronous scans).
 pub fn disk_store_for(
     ds: &Dataset,
     columns: &[usize],
     dir: &Path,
     stats: IoStats,
+    prefetch_chunks: usize,
 ) -> Result<Arc<dyn ColumnStore>> {
-    Ok(Arc::new(DiskStore::build(ds, columns, dir, stats)?))
+    Ok(Arc::new(
+        DiskStore::build(ds, columns, dir, stats)?.with_prefetch(prefetch_chunks),
+    ))
 }
 
 /// v2 (chunked) disk store for `columns` of `ds`.
@@ -518,8 +640,23 @@ pub fn disk_v2_store_for(
     dir: &Path,
     chunk_rows: u32,
     stats: IoStats,
+    prefetch_chunks: usize,
 ) -> Result<Arc<dyn ColumnStore>> {
-    Ok(Arc::new(DiskV2Store::build(
+    Ok(Arc::new(
+        DiskV2Store::build(ds, columns, dir, chunk_rows, stats)?.with_prefetch(prefetch_chunks),
+    ))
+}
+
+/// Zero-copy mmap store for `columns` of `ds`: chunked v2 files written
+/// under `dir`, then memory-mapped ([`crate::data::mmap::MmapStore`]).
+pub fn mmap_store_for(
+    ds: &Dataset,
+    columns: &[usize],
+    dir: &Path,
+    chunk_rows: u32,
+    stats: IoStats,
+) -> Result<Arc<dyn ColumnStore>> {
+    Ok(Arc::new(crate::data::mmap::MmapStore::build(
         ds, columns, dir, chunk_rows, stats,
     )?))
 }
@@ -676,11 +813,14 @@ mod tests {
         let dir1 = crate::util::tempdir().unwrap();
         let dir2 = crate::util::tempdir().unwrap();
         let stats = IoStats::new();
+        let dir3 = crate::util::tempdir().unwrap();
         let stores: Vec<Arc<dyn ColumnStore>> = vec![
             mem_store_for(&ds, &cols),
-            disk_store_for(&ds, &cols, dir1.path(), stats.clone()).unwrap(),
+            disk_store_for(&ds, &cols, dir1.path(), stats.clone(), 0).unwrap(),
             // Tiny chunks so the v2 scan actually visits many chunks.
-            disk_v2_store_for(&ds, &cols, dir2.path(), 97, stats.clone()).unwrap(),
+            disk_v2_store_for(&ds, &cols, dir2.path(), 97, stats.clone(), 0).unwrap(),
+            // Prefetching delivery must be indistinguishable.
+            disk_v2_store_for(&ds, &cols, dir3.path(), 97, stats.clone(), 2).unwrap(),
         ];
         for store in &stores {
             assert_eq!(store.columns(), cols);
@@ -715,7 +855,7 @@ mod tests {
         let ds = SyntheticSpec::new(Family::LinearCont { informative: 2 }, 300, 3, 5).generate();
         let dir = crate::util::tempdir().unwrap();
         let stats = IoStats::new();
-        let store = disk_store_for(&ds, &[0], dir.path(), stats.clone()).unwrap();
+        let store = disk_store_for(&ds, &[0], dir.path(), stats.clone(), 0).unwrap();
         let before = stats.snapshot();
         let col = store.read_raw(0).unwrap();
         assert_eq!(col.len(), 300);
@@ -723,6 +863,51 @@ mod tests {
         // v1 header (20) + 300 f32 records, one pass.
         assert_eq!(d.disk_read_bytes, 20 + 300 * 4);
         assert_eq!(d.disk_read_passes, 1);
+    }
+
+    /// The prefetch pipeline charges the same bytes/passes and delivers
+    /// the same chunk sequence as the synchronous loop, and tears down
+    /// cleanly when the visitor errors mid-scan.
+    #[test]
+    fn prefetch_is_invisible_to_results_and_accounting() {
+        let ds = SyntheticSpec::new(Family::LinearCont { informative: 2 }, 500, 3, 8).generate();
+        let dir_a = crate::util::tempdir().unwrap();
+        let dir_b = crate::util::tempdir().unwrap();
+        let (sa, sb) = (IoStats::new(), IoStats::new());
+        let sync = disk_v2_store_for(&ds, &[0, 1], dir_a.path(), 64, sa.clone(), 0).unwrap();
+        let pre = disk_v2_store_for(&ds, &[0, 1], dir_b.path(), 64, sb.clone(), 3).unwrap();
+        sa.reset();
+        sb.reset();
+        let collect = |s: &Arc<dyn ColumnStore>| {
+            let mut chunks: Vec<(usize, Vec<f32>)> = Vec::new();
+            s.scan_raw(0, &mut |base, c| {
+                match c {
+                    RawChunk::Numerical(v) => chunks.push((base, v.to_vec())),
+                    _ => unreachable!(),
+                }
+                Ok(())
+            })
+            .unwrap();
+            let mut sorted: Vec<SortedEntry> = Vec::new();
+            s.scan_sorted(1, &mut |c| {
+                sorted.extend_from_slice(c);
+                Ok(())
+            })
+            .unwrap();
+            (chunks, sorted)
+        };
+        assert_eq!(collect(&sync), collect(&pre), "chunk sequences must match");
+        assert_eq!(sa.snapshot(), sb.snapshot(), "accounting must match");
+        // Visitor error: propagates, pipeline shuts down without hanging.
+        let err = pre.scan_raw(0, &mut |base, _| {
+            if base > 0 {
+                anyhow::bail!("stop at {base}")
+            }
+            Ok(())
+        });
+        assert!(err.is_err());
+        // The store is still usable afterwards.
+        assert_eq!(pre.read_raw(0).unwrap(), *ds.column(0));
     }
 
     #[test]

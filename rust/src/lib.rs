@@ -32,17 +32,42 @@
 //!   bounded buffer, every byte charged to [`data::io_stats::IoStats`];
 //! * [`data::store::DiskV2Store`] — chunked DRFC v2 files (per-chunk
 //!   record counts in the header) whose passes can be resumed or
-//!   stopped at any chunk boundary.
+//!   stopped at any chunk boundary;
+//! * [`data::mmap::MmapStore`] — the zero-copy scan engine: DRFC files
+//!   memory-mapped once (self-declared unix `mmap`/`madvise` FFI, no
+//!   extra crates; buffered fallback elsewhere), scans borrow chunk
+//!   slices straight from the mapping. Headers and truncation are
+//!   validated at open; I/O is charged on the first-touch pass only —
+//!   warm re-scans cost zero syscalls and zero copies.
+//!
+//! The streaming disk backends optionally run each scan as a
+//! **double-buffered prefetch pipeline** (`TrainConfig::
+//! prefetch_chunks`): a background reader decodes chunk `N+1` while
+//! the visitor consumes chunk `N`; delivery stays strictly in order,
+//! so prefetching is deterministic by construction.
 //!
 //! Because every scan algorithm is a pure left-to-right fold, chunk
 //! boundaries — and therefore the backend — cannot change a single
-//! split decision: all backends produce bit-identical forests. On top
-//! of the store, a splitter owning `k` columns scans them concurrently
-//! on a scoped pool bounded by `TrainConfig::scan_threads`
+//! split decision: all backends produce bit-identical forests
+//! (`tests/storage_backends.rs` asserts the full backend ×
+//! `scan_threads` × `prefetch_chunks` matrix). On top of the store, a
+//! splitter owning `k` columns scans them concurrently on a scoped
+//! pool bounded by `TrainConfig::scan_threads`
 //! ([`data::store::run_scans`]); per-column results merge in
 //! deterministic column order, so the thread count is a pure
-//! wall-clock knob. A future mmap or remote-object-store backend only
-//! has to produce ordered chunks to plug into the same seam.
+//! wall-clock knob.
+//!
+//! **Adding a remote backend** (S3 / object store / network volume)
+//! stays a one-seam job: implement `ColumnStore::scan_raw`/
+//! `scan_sorted` over the remote medium (feed ordered chunks, charge
+//! `IoStats`; chunk-aligned range reads map naturally onto the DRFC
+//! v2 chunk table), add a `StorageMode` variant in `config`, wire it
+//! in `Manager::train`, and — for cluster deployments — swap it into
+//! `cluster::worker::load_shard`'s storage seam, where the shard
+//! manifest's per-column checksums validate remote fetches
+//! (`cluster::manifest::checksum_bytes` hashes in-memory/mapped bytes
+//! exactly like `checksum_file` hashes files). Nothing above the
+//! store changes; `MmapStore` is the worked example of the recipe.
 //!
 //! ## Cluster plane
 //!

@@ -69,6 +69,7 @@ const TRAIN_FLAGS: &[&str] = &[
     "latency-us",
     "storage",
     "scan-threads",
+    "prefetch-chunks",
     "engine",
     "scorer",
     "artifacts-dir",
@@ -116,8 +117,9 @@ USAGE:
             [--trees T] [--depth D] [--min-records R] [--candidates M']
             [--sampling per_node|per_depth|all] [--bagging poisson|none]
             [--splitters W] [--redundancy D] [--builders B]
-            [--latency-us U] [--storage memory|disk|disk_v2]
-            [--scan-threads K] [--engine direct|threaded|tcp|cluster]
+            [--latency-us U] [--storage memory|disk|disk_v2|mmap]
+            [--scan-threads K] [--prefetch-chunks P]
+            [--engine direct|threaded|tcp|cluster]
             [--manifest cluster.json] [--workers ADDR,ADDR,...]
             [--scorer native|xla]
             [--artifacts-dir DIR] [--config cfg.json]
@@ -128,7 +130,7 @@ USAGE:
             [--splitters W] [--redundancy D] [--chunk-rows C]
             [--workers ADDR,ADDR,...] --out-dir DIR
   drf worker --shard SHARD_DIR [--addr HOST:PORT] [--scan-threads K]
-             [--preload] [--no-verify]
+             [--prefetch-chunks P] [--preload] [--no-verify]
   drf evaluate --model forest.json [--family ...|--csv ...|--data DIR]
   drf importance --model forest.json [--features M]
   drf serve --model forest.json [--addr HOST:PORT]
@@ -141,11 +143,21 @@ Data sources (train/evaluate/shard/predict): --csv loads a CSV file
 directory written by `drf generate`; otherwise a synthetic family is
 generated in memory.
 
+Storage: `memory` holds shards in RAM; `disk`/`disk_v2` stream every
+pass from DRFC files through bounded buffers (`--prefetch-chunks P`
+lets a background reader decode P chunks ahead); `mmap` maps chunked
+DRFC v2 files once and scans borrow slices straight from the mapping
+(zero syscalls and copies after the first-touch pass). All modes
+produce bit-identical forests.
+
 Cluster training: `drf shard` cuts the dataset into per-splitter shard
 packs (presorted DRFC v2 columns + checksummed manifests) plus a
 cluster.json deployment map; each pack is served by a `drf worker`
 process (`--addr host:0` picks an ephemeral port and prints it;
-`--preload` loads the pack into RAM; `--no-verify` skips checksums);
+`--preload` memory-maps the pack and serves it zero-copy, with
+manifest checksums verified against the mapped bytes; `--no-verify`
+skips the checksums in either mode — header validation still runs;
+`--prefetch-chunks` applies to the streaming mode);
 `drf train --engine cluster --manifest cluster.json` connects to the
 fleet (addresses from the manifest or --workers, comma-separated, in
 shard order), validates it via the Hello handshake, and recovers
@@ -228,10 +240,12 @@ fn cmd_train(argv: &[String]) -> Result<()> {
             "memory" => StorageMode::Memory,
             "disk" => StorageMode::Disk,
             "disk_v2" => StorageMode::DiskV2,
-            _ => bail!("storage must be memory|disk|disk_v2"),
+            "mmap" => StorageMode::Mmap,
+            _ => bail!("storage must be memory|disk|disk_v2|mmap"),
         };
     }
     cfg.scan_threads = args.get_usize("scan-threads", cfg.scan_threads)?;
+    cfg.prefetch_chunks = args.get_usize("prefetch-chunks", cfg.prefetch_chunks)?;
     if let Some(v) = args.get("engine") {
         cfg.engine = match v {
             "direct" => Engine::Direct,
@@ -409,7 +423,14 @@ fn cmd_shard(argv: &[String]) -> Result<()> {
 fn cmd_worker(argv: &[String]) -> Result<()> {
     let args = Args::parse(
         argv,
-        &["shard", "addr", "scan-threads", "!preload", "!no-verify"],
+        &[
+            "shard",
+            "addr",
+            "scan-threads",
+            "prefetch-chunks",
+            "!preload",
+            "!no-verify",
+        ],
     )?;
     let dir = args.require("shard")?;
     let addr = args.get_string("addr", "127.0.0.1:0");
@@ -417,6 +438,7 @@ fn cmd_worker(argv: &[String]) -> Result<()> {
         scan_threads: args.get_usize("scan-threads", 1)?,
         preload: args.get_bool("preload"),
         verify: !args.get_bool("no-verify"),
+        prefetch_chunks: args.get_usize("prefetch-chunks", 0)?,
     };
     let shard = drf::cluster::load_shard(std::path::Path::new(dir), &opts)?;
     let (id, cols, rows) = (
@@ -427,7 +449,7 @@ fn cmd_worker(argv: &[String]) -> Result<()> {
     let server = drf::cluster::WorkerServer::spawn(shard, &addr, opts.scan_threads)?;
     println!(
         "drf worker: shard {id} ({cols} columns x {rows} rows, {}) listening on {}",
-        if opts.preload { "preloaded" } else { "streaming" },
+        if opts.preload { "mmapped" } else { "streaming" },
         server.addr(),
     );
     // Flush explicitly: a piped stdout (the cluster smoke test, a

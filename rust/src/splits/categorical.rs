@@ -38,11 +38,14 @@ enum CountTables {
 /// [`crate::data::store::ColumnStore`] backends stream columns through
 /// a bounded buffer this way. [`best_categorical_supersplit`] is the
 /// single-slice wrapper.
-pub struct CategoricalSupersplitScan<'a, S, C, B>
+///
+/// Per-sample filtering goes through the same single `gather` closure
+/// as [`super::numerical::NumericalSupersplitScan`] (rank 0 = skip;
+/// [`crate::splits::fused_gather`] adapts the classic three-predicate
+/// form).
+pub struct CategoricalSupersplitScan<'a, G>
 where
-    S: Fn(u32) -> u32,
-    C: Fn(u32) -> bool,
-    B: Fn(u32) -> u32,
+    G: Fn(u32) -> (u32, u32),
 {
     feature: usize,
     arity: u32,
@@ -51,16 +54,12 @@ where
     leaf_totals: &'a [Histogram],
     kind: ScoreKind,
     tables: CountTables,
-    sample2node: S,
-    is_candidate: C,
-    bag: B,
+    gather: G,
 }
 
-impl<'a, S, C, B> CategoricalSupersplitScan<'a, S, C, B>
+impl<'a, G> CategoricalSupersplitScan<'a, G>
 where
-    S: Fn(u32) -> u32,
-    C: Fn(u32) -> bool,
-    B: Fn(u32) -> u32,
+    G: Fn(u32) -> (u32, u32),
 {
     /// Interface mirrors [`super::numerical::NumericalSupersplitScan`].
     #[allow(clippy::too_many_arguments)]
@@ -71,9 +70,7 @@ where
         num_classes: u32,
         leaf_totals: &'a [Histogram],
         kind: ScoreKind,
-        sample2node: S,
-        is_candidate: C,
-        bag: B,
+        gather: G,
     ) -> Self {
         let num_leaves = leaf_totals.len();
         let dense_cells = arity as usize * num_classes as usize * num_leaves;
@@ -95,9 +92,7 @@ where
             leaf_totals,
             kind,
             tables,
-            sample2node,
-            is_candidate,
-            bag,
+            gather,
         }
     }
 
@@ -106,16 +101,9 @@ where
     pub fn push(&mut self, base_row: usize, values: &[u32]) {
         for (k, &v) in values.iter().enumerate() {
             let i = (base_row + k) as u32;
-            let h = (self.sample2node)(i);
+            let (h, b) = (self.gather)(i);
             if h == 0 {
-                continue;
-            }
-            if !(self.is_candidate)(h) {
-                continue;
-            }
-            let b = (self.bag)(i);
-            if b == 0 {
-                continue;
+                continue; // closed / non-candidate / out-of-bag
             }
             let y = self.labels[i as usize];
             match &mut self.tables {
@@ -201,9 +189,7 @@ pub fn best_categorical_supersplit(
         num_classes,
         leaf_totals,
         kind,
-        sample2node,
-        is_candidate,
-        bag,
+        crate::splits::fused_gather(sample2node, is_candidate, bag),
     );
     scan.push(0, values);
     scan.finish()
@@ -485,9 +471,7 @@ mod tests {
                 2,
                 &totals,
                 ScoreKind::Gini,
-                |_| 1,
-                |_| true,
-                |_| 1,
+                crate::splits::fused_gather(|_| 1, |_| true, |_| 1),
             );
             let mut base = 0;
             for c in values.chunks(chunk) {

@@ -26,3 +26,30 @@ pub mod xla_scorer;
 
 pub use histogram::Histogram;
 pub use scorer::{ScoreKind, SplitCandidate};
+
+/// Fuse the classic three scan predicates — sample→leaf mapping,
+/// per-leaf feature candidacy, bag weight — into the single
+/// `gather(i) -> (rank, bag)` closure the supersplit scans consume
+/// (rank 0 = skip the sample). This is the compatibility adapter for
+/// callers holding separate closures (baselines, tests); the splitter
+/// hot path builds a branchless table-driven gather instead
+/// (`SplitterCore::scan_column_supersplit`, BENCH_hotpath.json
+/// `supersplit gather`).
+pub fn fused_gather(
+    sample2node: impl Fn(u32) -> u32,
+    is_candidate: impl Fn(u32) -> bool,
+    bag: impl Fn(u32) -> u32,
+) -> impl Fn(u32) -> (u32, u32) {
+    move |i| {
+        let h = sample2node(i);
+        if h == 0 || !is_candidate(h) {
+            return (0, 0);
+        }
+        let b = bag(i);
+        if b == 0 {
+            (0, 0)
+        } else {
+            (h, b)
+        }
+    }
+}

@@ -63,11 +63,17 @@ impl LeafState {
 /// chunk boundaries: pushing one whole slice and pushing it split at
 /// any points produce identical candidates
 /// ([`best_numerical_supersplit`] is exactly the one-slice wrapper).
-pub struct NumericalSupersplitScan<'a, S, C, B>
+///
+/// Per-sample filtering goes through a single **gather** closure
+/// (`gather(i) -> (rank, bag)`; rank 0 = skip) instead of three
+/// separate predicates: the splitter feeds a table-driven gather whose
+/// skip decision compiles to one well-predicted branch, instead of the
+/// historical closed-leaf / non-candidate / out-of-bag branch ladder
+/// (see [`crate::splits::fused_gather`] for the adapter and
+/// BENCH_hotpath.json for the before/after).
+pub struct NumericalSupersplitScan<'a, G>
 where
-    S: Fn(u32) -> u32,
-    C: Fn(u32) -> bool,
-    B: Fn(u32) -> u32,
+    G: Fn(u32) -> (u32, u32),
 {
     feature: usize,
     labels: &'a [u32],
@@ -75,36 +81,28 @@ where
     kind: ScoreKind,
     binary_gini: bool,
     states: Vec<LeafState>,
-    sample2node: S,
-    is_candidate: C,
-    bag: B,
+    gather: G,
 }
 
-impl<'a, S, C, B> NumericalSupersplitScan<'a, S, C, B>
+impl<'a, G> NumericalSupersplitScan<'a, G>
 where
-    S: Fn(u32) -> u32,
-    C: Fn(u32) -> bool,
-    B: Fn(u32) -> u32,
+    G: Fn(u32) -> (u32, u32),
 {
     /// * `labels` — the shared label column (indexed by sample);
     /// * `leaf_totals[h-1]` — bagged label histogram of open leaf rank
     ///   `h` (1-based ranks; rank 0 means closed — see
     ///   [`crate::classlist`]);
-    /// * `sample2node(i)` — leaf code of sample `i` (0 = closed/out);
-    /// * `is_candidate(h)` — whether this feature was drawn for leaf
-    ///   `h` (paper Alg. 1's `candidate feature (j, h, p)`);
-    /// * `bag(i)` — bagged multiplicity of sample `i` (paper's
-    ///   `bag(i, p)`).
-    #[allow(clippy::too_many_arguments)]
+    /// * `gather(i)` — `(leaf rank, bagged multiplicity)` of sample
+    ///   `i`; rank 0 means skip (closed leaf, feature not drawn for
+    ///   the sample's leaf, or out-of-bag). A returned rank > 0
+    ///   guarantees bag > 0.
     pub fn new(
         feature: usize,
         labels: &'a [u32],
         num_classes: u32,
         leaf_totals: &'a [Histogram],
         kind: ScoreKind,
-        sample2node: S,
-        is_candidate: C,
-        bag: B,
+        gather: G,
     ) -> Self {
         let states: Vec<LeafState> = leaf_totals
             .iter()
@@ -117,9 +115,7 @@ where
             kind,
             binary_gini: num_classes == 2 && kind == ScoreKind::Gini,
             states,
-            sample2node,
-            is_candidate,
-            bag,
+            gather,
         }
     }
 
@@ -127,16 +123,9 @@ where
     /// continuing exactly where the previous chunk ended).
     pub fn push(&mut self, q: &[SortedEntry]) {
         for e in q {
-            let h = (self.sample2node)(e.sample);
+            let (h, b) = (self.gather)(e.sample);
             if h == 0 {
-                continue; // closed leaf
-            }
-            if !(self.is_candidate)(h) {
-                continue; // feature not drawn for this leaf
-            }
-            let b = (self.bag)(e.sample);
-            if b == 0 {
-                continue; // out-of-bag
+                continue; // closed / non-candidate / out-of-bag
             }
             let st = &mut self.states[(h - 1) as usize];
             if let Some(v) = st.last_value {
@@ -229,9 +218,7 @@ pub fn best_numerical_supersplit(
         num_classes,
         leaf_totals,
         kind,
-        sample2node,
-        is_candidate,
-        bag,
+        crate::splits::fused_gather(sample2node, is_candidate, bag),
     );
     scan.push(q);
     scan.finish()
@@ -465,9 +452,7 @@ mod tests {
                 2,
                 &totals,
                 ScoreKind::Gini,
-                |_| 1,
-                |_| true,
-                |_| 1,
+                crate::splits::fused_gather(|_| 1, |_| true, |_| 1),
             );
             for c in q.chunks(chunk) {
                 scan.push(c);

@@ -3,8 +3,16 @@
 //! that time closures with warmup + repeated measurement and print
 //! aligned tables — each bench binary regenerates one of the paper's
 //! tables/figures.
+//!
+//! Every bench persists its results as `BENCH_<name>.json` in the
+//! working directory ([`write_bench_json`] / [`Table::write_json`]) so
+//! the perf trajectory accumulates machine-readable datapoints; CI's
+//! bench-smoke job runs the benches in [`smoke_mode`] (env
+//! `DRF_BENCH_SMOKE=1`, shrunken inputs) and uploads the JSONs as
+//! artifacts.
 
 use crate::metrics::Stopwatch;
+use crate::util::Json;
 
 /// Timing summary of one benchmark case.
 #[derive(Debug, Clone, Copy)]
@@ -74,6 +82,39 @@ impl Table {
         self.rows.push(cells.to_vec());
     }
 
+    /// The table as JSON: `{"headers": [...], "rows": [{h: cell}...]}`.
+    /// Cells stay strings — benches that want typed fields build their
+    /// own payload and call [`write_bench_json`] directly.
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::object();
+        o.set(
+            "headers",
+            Json::Arr(self.headers.iter().map(|h| Json::Str(h.clone())).collect()),
+        )
+        .set(
+            "rows",
+            Json::Arr(
+                self.rows
+                    .iter()
+                    .map(|row| {
+                        let mut rj = Json::object();
+                        for (h, c) in self.headers.iter().zip(row) {
+                            rj.set(h.as_str(), Json::Str(c.clone()));
+                        }
+                        rj
+                    })
+                    .collect(),
+            ),
+        );
+        o
+    }
+
+    /// Emit this table as `BENCH_<name>.json` (the one-call path for
+    /// table-shaped benches).
+    pub fn write_json(&self, name: &str) {
+        write_bench_json(name, self.to_json());
+    }
+
     pub fn print(&self) {
         let mut widths: Vec<usize> = self.headers.iter().map(|h| h.chars().count()).collect();
         for row in &self.rows {
@@ -95,6 +136,40 @@ impl Table {
         for row in &self.rows {
             line(row);
         }
+    }
+}
+
+/// Persist a bench payload as `BENCH_<name>.json` in the working
+/// directory, stamping the bench name and smoke flag in. Benches call
+/// this (or [`Table::write_json`]) unconditionally so the perf
+/// trajectory always has machine-readable output.
+pub fn write_bench_json(name: &str, mut payload: Json) {
+    if let Json::Obj(_) = payload {
+        payload
+            .set("bench", Json::Str(name.into()))
+            .set("smoke_mode", Json::Bool(smoke_mode()));
+    }
+    let path = format!("BENCH_{name}.json");
+    match std::fs::write(&path, payload.to_string()) {
+        Ok(()) => println!("\nsummary written to {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}
+
+/// CI smoke mode (`DRF_BENCH_SMOKE=1`): benches shrink their inputs so
+/// the whole suite finishes in seconds — the JSON artifacts keep
+/// flowing, the absolute numbers are not comparable to full runs
+/// (`smoke_mode: true` is stamped into the payload).
+pub fn smoke_mode() -> bool {
+    std::env::var("DRF_BENCH_SMOKE").map_or(false, |v| v == "1" || v == "true")
+}
+
+/// `full` normally, `smoke` under [`smoke_mode`] — for sizing inputs.
+pub fn sized(full: usize, smoke: usize) -> usize {
+    if smoke_mode() {
+        smoke
+    } else {
+        full
     }
 }
 

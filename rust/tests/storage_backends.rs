@@ -1,9 +1,11 @@
 //! The ColumnStore data-plane contract: every storage backend
-//! (Memory, DRFC v1 disk, chunked DRFC v2 disk) and every
-//! `scan_threads` setting produces **bit-identical forests**, and
-//! within a backend the `IoStats` byte/pass accounting is invariant to
-//! the thread count (parallel scans charge exactly what sequential
-//! scans charge).
+//! (Memory, DRFC v1 disk, chunked DRFC v2 disk, mmap) × every
+//! `scan_threads` setting × every `prefetch_chunks` depth produces
+//! **bit-identical forests**, and within a backend the `IoStats`
+//! byte/pass accounting is invariant to the thread count and prefetch
+//! depth (parallel and pipelined scans charge exactly what sequential
+//! scans charge). Also home of the mmap open-rejection matrix
+//! (truncated files, forged headers and chunk tables).
 
 use drf::config::{ForestParams, PruneMode, StorageMode, TrainConfig};
 use drf::data::synthetic::{Family, LeoLikeSpec, SyntheticSpec};
@@ -13,7 +15,12 @@ use drf::rng::BaggingMode;
 use drf::tree::Tree;
 use drf::util::proptest::run_cases;
 
-const BACKENDS: [StorageMode; 3] = [StorageMode::Memory, StorageMode::Disk, StorageMode::DiskV2];
+const BACKENDS: [StorageMode; 4] = [
+    StorageMode::Memory,
+    StorageMode::Disk,
+    StorageMode::DiskV2,
+    StorageMode::Mmap,
+];
 
 fn config(storage: StorageMode, scan_threads: usize, splitters: usize, seed: u64) -> TrainConfig {
     let mut cfg = TrainConfig::default();
@@ -31,6 +38,16 @@ fn config(storage: StorageMode, scan_threads: usize, splitters: usize, seed: u64
     cfg.storage = storage;
     cfg.scan_threads = scan_threads;
     cfg
+}
+
+/// Prefetch depths worth exercising for a backend: prefetching only
+/// exists on the streaming disk scans (Memory and Mmap scans never
+/// copy, so there is nothing to pipeline).
+fn prefetch_depths(storage: StorageMode) -> &'static [usize] {
+    match storage {
+        StorageMode::Disk | StorageMode::DiskV2 => &[0, 2],
+        StorageMode::Memory | StorageMode::Mmap => &[0],
+    }
 }
 
 fn families() -> Vec<(&'static str, Dataset)> {
@@ -69,40 +86,118 @@ fn io_fingerprint(report: &drf::coordinator::TrainReport) -> Vec<(u64, u64, u64,
 }
 
 #[test]
-fn backends_and_scan_threads_are_bit_identical() {
+fn backends_scan_threads_and_prefetch_are_bit_identical() {
     for (name, ds) in families() {
         let mut reference: Option<Vec<Tree>> = None;
         for storage in BACKENDS {
             let mut io_reference: Option<Vec<(u64, u64, u64, u64)>> = None;
             for scan_threads in [1usize, 4] {
-                let cfg = config(storage, scan_threads, 3, 0x51D0 + name.len() as u64);
-                let (forest, report) = RandomForest::train_with_config(&ds, &cfg).unwrap();
-                match &reference {
-                    None => reference = Some(forest.trees),
-                    Some(r) => assert_eq!(
-                        r, &forest.trees,
-                        "{name}: {storage:?} x scan_threads={scan_threads} \
-                         must match the reference forest bit for bit"
-                    ),
-                }
-                let io = io_fingerprint(&report);
-                if storage != StorageMode::Memory {
-                    assert!(
-                        io.iter().any(|x| x.0 > 0),
-                        "{name}/{storage:?}: disk backend never read from disk"
-                    );
-                }
-                match &io_reference {
-                    None => io_reference = Some(io),
-                    Some(r) => assert_eq!(
-                        r, &io,
-                        "{name}/{storage:?}: IoStats accounting must be \
-                         invariant to scan_threads"
-                    ),
+                for &prefetch in prefetch_depths(storage) {
+                    let mut cfg = config(storage, scan_threads, 3, 0x51D0 + name.len() as u64);
+                    cfg.prefetch_chunks = prefetch;
+                    let (forest, report) = RandomForest::train_with_config(&ds, &cfg).unwrap();
+                    match &reference {
+                        None => reference = Some(forest.trees),
+                        Some(r) => assert_eq!(
+                            r, &forest.trees,
+                            "{name}: {storage:?} x scan_threads={scan_threads} \
+                             x prefetch={prefetch} must match the reference \
+                             forest bit for bit"
+                        ),
+                    }
+                    let io = io_fingerprint(&report);
+                    if storage != StorageMode::Memory {
+                        assert!(
+                            io.iter().any(|x| x.0 > 0),
+                            "{name}/{storage:?}: disk backend never read from disk"
+                        );
+                    }
+                    match &io_reference {
+                        None => io_reference = Some(io),
+                        Some(r) => assert_eq!(
+                            r, &io,
+                            "{name}/{storage:?}: IoStats accounting must be \
+                             invariant to scan_threads and prefetch_chunks"
+                        ),
+                    }
                 }
             }
         }
     }
+}
+
+/// The mmap backend refuses broken files at open — truncated payloads,
+/// forged magic/version/kind, and inconsistent v2 chunk tables — with
+/// errors, never faults mid-scan.
+#[test]
+fn mmap_open_rejections() {
+    use drf::data::disk::{self, Layout};
+    use drf::data::io_stats::IoStats;
+    use drf::data::store::ColumnFiles;
+    use drf::data::{ColumnType, MmapStore};
+    use std::collections::BTreeMap;
+
+    let dir = drf::util::tempdir().unwrap();
+    let vals: Vec<f32> = (0..64).map(|i| i as f32).collect();
+    let write_v2 = |name: &str| {
+        let p = dir.path().join(name);
+        disk::write_numerical_with(&p, &vals, Layout::V2 { chunk_rows: 16 }, IoStats::new())
+            .unwrap();
+        p
+    };
+    let open = |path: std::path::PathBuf, ctype: ColumnType| {
+        let mut files = BTreeMap::new();
+        files.insert(
+            0usize,
+            ColumnFiles {
+                raw: path,
+                sorted: None,
+                ctype,
+            },
+        );
+        MmapStore::open(files, IoStats::new())
+    };
+    let corrupt = |path: &std::path::Path, f: &dyn Fn(&mut Vec<u8>)| {
+        let mut bytes = std::fs::read(path).unwrap();
+        f(&mut bytes);
+        std::fs::write(path, &bytes).unwrap();
+    };
+
+    // Intact file opens.
+    let ok = write_v2("ok.drfc");
+    open(ok, ColumnType::Numerical).expect("valid v2 file must map");
+
+    // Truncated payload (header still declares 64 records).
+    let p = write_v2("trunc.drfc");
+    corrupt(&p, &|b| b.truncate(b.len() - 12));
+    let err = open(p, ColumnType::Numerical).unwrap_err();
+    assert!(format!("{err:#}").contains("truncated"), "{err:#}");
+
+    // Forged magic.
+    let p = write_v2("magic.drfc");
+    corrupt(&p, &|b| b[0] = b'Z');
+    assert!(open(p, ColumnType::Numerical).is_err());
+
+    // Forged version.
+    let p = write_v2("version.drfc");
+    corrupt(&p, &|b| b[4] = 99);
+    assert!(open(p, ColumnType::Numerical).is_err());
+
+    // Kind that contradicts the declared column type.
+    let p = write_v2("kind.drfc");
+    assert!(open(p, ColumnType::Categorical { arity: 4 }).is_err());
+
+    // Chunk table that no longer sums to the row count.
+    let p = write_v2("table.drfc");
+    corrupt(&p, &|b| b[24] = 63); // first chunk 16 -> 63
+    assert!(open(p, ColumnType::Numerical).is_err());
+
+    // Chunk-table length forged huge (allocation guard).
+    let p = write_v2("nchunks.drfc");
+    corrupt(&p, &|b| {
+        b[20..24].copy_from_slice(&u32::MAX.to_le_bytes());
+    });
+    assert!(open(p, ColumnType::Numerical).is_err());
 }
 
 #[test]
