@@ -5,13 +5,16 @@
 //! This is the perf trajectory's first *training* datapoint (the serve
 //! bench covers inference). The interesting comparisons:
 //!
-//! * Memory vs Disk (v1) vs DiskV2 vs Mmap — the cost of streaming
-//!   every pass from disk through read(2) + bounded buffers, and what
-//!   the zero-copy mapping buys back once the page cache is warm (the
+//! * Memory vs Disk (v1) vs DiskV2 vs Mmap vs Remote — the cost of
+//!   streaming every pass through read(2) + bounded buffers, what the
+//!   zero-copy mapping buys back once the page cache is warm (the
 //!   repeated-training loop below is exactly the warm-cache regime;
-//!   the acceptance bar is mmap rows/s >= DiskStore rows/s);
-//! * `prefetch_chunks` 0 vs 2 on the streaming backends — the
-//!   double-buffered reader pipeline;
+//!   the acceptance bar is mmap rows/s >= DiskStore rows/s), and what
+//!   fetching every chunk over a real TCP objstore costs — the
+//!   network column of the paper's complexity table as an empirical
+//!   row (per-config `net_bytes` lands in the JSON);
+//! * `prefetch_chunks` 0 vs 2 on the streaming backends (disk reads
+//!   and remote range reads) — the double-buffered reader pipeline;
 //! * `scan_threads` 1 vs N — the intra-splitter scan pool. The
 //!   topology deliberately uses **few splitters for many columns** so
 //!   each splitter owns several columns and the pool has real work
@@ -41,14 +44,17 @@ fn backend_name(mode: StorageMode) -> &'static str {
         StorageMode::Disk => "disk",
         StorageMode::DiskV2 => "disk_v2",
         StorageMode::Mmap => "mmap",
+        // Loopback objstore self-hosted by the manager: real TCP range
+        // reads with zero external setup.
+        StorageMode::Remote => "remote",
     }
 }
 
 /// Prefetch depths worth timing per backend (prefetching only exists
-/// on the streaming disk scans).
+/// on the streaming scans — disk reads and remote range reads).
 fn prefetch_depths(mode: StorageMode) -> &'static [usize] {
     match mode {
-        StorageMode::Disk | StorageMode::DiskV2 => &[0, 2],
+        StorageMode::Disk | StorageMode::DiskV2 | StorageMode::Remote => &[0, 2],
         StorageMode::Memory | StorageMode::Mmap => &[0],
     }
 }
@@ -86,6 +92,7 @@ fn main() {
         StorageMode::Disk,
         StorageMode::DiskV2,
         StorageMode::Mmap,
+        StorageMode::Remote,
     ];
 
     let mut table = Table::new(&[
@@ -96,6 +103,7 @@ fn main() {
         "time / forest",
         "rows/s",
         "speedup",
+        "net bytes",
     ]);
     let mut fam_jsons: Vec<Json> = Vec::new();
     let mut any_parallel_win = false;
@@ -109,17 +117,27 @@ fn main() {
             .0;
         let mut results: Vec<Json> = Vec::new();
         let mut baseline_rps: f64 = 0.0;
-        let (mut disk_best_rps, mut mmap_rps) = (0.0f64, 0.0f64);
+        let (mut disk_best_rps, mut mmap_rps, mut remote_rps) = (0.0f64, 0.0f64, 0.0f64);
         for &storage in &backends {
             let mut serial_mean = 0.0f64;
             for &threads in &THREAD_SETTINGS {
                 for &prefetch in prefetch_depths(storage) {
                     let cfg = config(storage, threads, prefetch);
-                    let forest = RandomForest::train_with_config(ds, &cfg).unwrap().0;
+                    let (forest, check_report) =
+                        RandomForest::train_with_config(ds, &cfg).unwrap();
                     assert_eq!(
                         reference.trees, forest.trees,
                         "{name}/{storage:?}/t{threads}/p{prefetch}: exactness before speed"
                     );
+                    // Storage-plane network traffic of one training run
+                    // (the objstore range reads; zero for local
+                    // backends) — the paper's network-cost column,
+                    // measured rather than modeled.
+                    let storage_net: u64 = check_report
+                        .splitter_io
+                        .iter()
+                        .map(|s| s.net_bytes)
+                        .sum();
                     let t = bench(3, 12.0, || {
                         std::hint::black_box(RandomForest::train_with_config(ds, &cfg).unwrap());
                     });
@@ -134,6 +152,9 @@ fn main() {
                     }
                     if storage == StorageMode::Mmap {
                         mmap_rps = mmap_rps.max(rps);
+                    }
+                    if storage == StorageMode::Remote {
+                        remote_rps = remote_rps.max(rps);
                     }
                     let speedup = if threads == 1 && prefetch == 0 {
                         serial_mean = t.mean_s;
@@ -152,6 +173,7 @@ fn main() {
                         t.per_iter_label(),
                         fmt_count(rps),
                         format!("{speedup:.2}x"),
+                        fmt_count(storage_net as f64),
                     ]);
                     let mut r = Json::object();
                     r.set("backend", Json::Str(backend_name(storage).into()))
@@ -159,7 +181,8 @@ fn main() {
                         .set("prefetch_chunks", Json::from_usize(prefetch))
                         .set("seconds_per_forest", Json::Num(t.mean_s))
                         .set("rows_per_s", Json::Num(rps))
-                        .set("speedup_vs_serial", Json::Num(speedup));
+                        .set("speedup_vs_serial", Json::Num(speedup))
+                        .set("net_bytes", Json::from_u64(storage_net));
                     results.push(r);
                 }
             }
@@ -170,6 +193,7 @@ fn main() {
             .set("baseline_memory_rows_per_s", Json::Num(baseline_rps))
             .set("mmap_rows_per_s", Json::Num(mmap_rps))
             .set("disk_rows_per_s", Json::Num(disk_best_rps))
+            .set("remote_rows_per_s", Json::Num(remote_rps))
             .set("results", Json::Arr(results));
         fam_jsons.push(fj);
     }

@@ -61,6 +61,21 @@ pub fn checksum_bytes(bytes: &[u8]) -> u64 {
     fnv_update(FNV_OFFSET, bytes)
 }
 
+/// Start value for an *incremental* FNV-1a checksum (see
+/// [`checksum_update`]).
+pub const CHECKSUM_INIT: u64 = FNV_OFFSET;
+
+/// Fold `bytes` into a running FNV-1a hash. Because FNV-1a is a
+/// byte-at-a-time stream,
+/// `checksum_update(CHECKSUM_INIT, all_bytes)` equals folding the same
+/// bytes in any chunking — this is how a
+/// [`RemoteStore`](crate::data::remote::RemoteStore) pass verifies a
+/// column it never holds in one piece against the manifest's
+/// [`checksum_file`] value.
+pub fn checksum_update(hash: u64, bytes: &[u8]) -> u64 {
+    fnv_update(hash, bytes)
+}
+
 fn hex_u64(v: u64) -> Json {
     Json::Str(format!("{v:016x}"))
 }
@@ -84,6 +99,35 @@ pub struct ShardColumn {
 
 /// The self-describing metadata of one shard pack (`manifest.json`
 /// inside the shard directory).
+///
+/// # Examples
+///
+/// Shard a small dataset and read back one pack's manifest — the
+/// checksums it records are what local workers verify at load time and
+/// what a remote ([`crate::data::remote::RemoteStore`]-backed) worker
+/// re-folds on every complete training pass:
+///
+/// ```
+/// use drf::cluster::manifest::checksum_file;
+/// use drf::cluster::{write_shards, ShardManifest, ShardOptions};
+/// use drf::config::TopologyParams;
+/// use drf::data::io_stats::IoStats;
+/// use drf::data::synthetic::{Family, SyntheticSpec};
+///
+/// let ds = SyntheticSpec::new(Family::Majority { informative: 3 }, 120, 6, 5).generate();
+/// let dir = drf::util::tempdir()?;
+/// let params = TopologyParams { num_splitters: Some(2), ..Default::default() };
+/// write_shards(&ds, &params, dir.path(), &ShardOptions::default(), IoStats::new())?;
+///
+/// let m = ShardManifest::load(&dir.path().join("shard_0"))?;
+/// assert_eq!((m.shard, m.rows), (0, 120));
+/// assert_eq!(m.column_indices(), vec![0, 2, 4]); // round-robin ownership
+/// for c in &m.columns {
+///     // Every recorded checksum matches the file on disk.
+///     assert_eq!(checksum_file(&dir.path().join("shard_0").join(&c.file))?, c.checksum);
+/// }
+/// # Ok::<(), anyhow::Error>(())
+/// ```
 #[derive(Debug, Clone, PartialEq)]
 pub struct ShardManifest {
     pub shard: usize,

@@ -11,11 +11,15 @@
 //!    checksums) and a top-level [`ClusterManifest`] deployment map.
 //! 2. **Worker** ([`worker`]): `drf worker --shard DIR --addr A:P`
 //!    loads a pack through the existing
-//!    [`ColumnStore`](crate::data::store::ColumnStore) backends
-//!    (streaming from disk, or `--preload`ed into RAM), verifies the
-//!    checksums, and serves the splitter wire protocol. Training
-//!    configuration arrives with the leader's Hello handshake — a
-//!    worker binary is deployment-agnostic.
+//!    [`ColumnStore`](crate::data::store::ColumnStore) backends —
+//!    streaming from disk, `--preload`ed zero-copy through the mmap
+//!    backend, or (with `--object-store HOST:PORT`) fetched over the
+//!    wire from a `drf objstore` by chunk-aligned range reads
+//!    ([`load_shard_remote`]), so the worker serves a shard it never
+//!    downloaded in full — verifies the checksums (remote packs
+//!    re-verify on every complete pass), and serves the splitter wire
+//!    protocol. Training configuration arrives with the leader's Hello
+//!    handshake — a worker binary is deployment-agnostic.
 //! 3. **Leader** ([`engine`]): `drf train --engine cluster
 //!    --manifest cluster.json` connects a [`ClusterPool`] to the fleet
 //!    (connect retry/timeout, Hello validation of protocol version,
@@ -38,4 +42,4 @@ pub use manifest::{
     checksum_bytes, checksum_file, ClusterManifest, ShardColumn, ShardEntry, ShardManifest,
 };
 pub use shard::{write_shards, ShardOptions};
-pub use worker::{load_shard, LoadedShard, WorkerOptions, WorkerServer};
+pub use worker::{load_shard, load_shard_remote, LoadedShard, WorkerOptions, WorkerServer};

@@ -2,9 +2,12 @@
 //!
 //! A worker is a shard pack brought to life: it loads (and, by default,
 //! checksums) the pack written by `drf shard`, opens the columns
-//! through the existing [`ColumnStore`] backends — streaming from disk,
-//! or zero-copy memory-mapped with `--preload` — and serves the
-//! splitter wire protocol on a TCP listener.
+//! through the existing [`ColumnStore`] backends — streaming from
+//! disk, zero-copy memory-mapped with `--preload`, or fetched over the
+//! wire from a `drf objstore` with `--object-store HOST:PORT`
+//! ([`load_shard_remote`]: the worker never downloads the pack, it
+//! range-reads it chunk by chunk) — and serves the splitter wire
+//! protocol on a TCP listener.
 //!
 //! `--preload` serves the pack through [`MmapStore`]: the presorted
 //! DRFC v2 files are mapped once and every training scan borrows chunk
@@ -32,9 +35,10 @@ use crate::coordinator::wire::{
     decode_request, encode_response, read_frame, write_frame, HelloConfig, HelloInfo, Request,
     Response, PROTOCOL_VERSION,
 };
-use crate::data::disk::ColumnReader;
+use crate::data::disk::{self, ColumnReader};
 use crate::data::io_stats::IoStats;
 use crate::data::mmap::MmapStore;
+use crate::data::remote::{RemoteClient, RemoteColumnSpec, RemoteOptions, RemoteStore};
 use crate::data::store::{ColumnFiles, ColumnStore, DiskStore};
 use crate::rng::{Bagger, BaggingMode, FeatureSampling};
 use crate::splits::scorer::ScoreKind;
@@ -170,12 +174,123 @@ pub fn load_shard(dir: &std::path::Path, opts: &WorkerOptions) -> Result<LoadedS
     })
 }
 
+/// Open a shard pack the worker never downloaded: the manifest, the
+/// label column, and every training scan come from the `drf objstore`
+/// at `addr`, where the pack lives under `prefix` (e.g. `shard_0` when
+/// the objstore serves a whole `drf shard` output tree; empty when it
+/// serves one pack directly). Integrity still holds end to end:
+///
+/// * the manifest is fetched and parsed like a local one;
+/// * the label column is fetched in full and (with `opts.verify`)
+///   checked against the manifest checksum before it is decoded;
+/// * column files keep their manifest checksums **armed inside the
+///   store**: every complete training pass re-folds the fetched bytes
+///   through the same FNV-1a and refuses a mismatch — remote
+///   corruption cannot silently train, even though the worker never
+///   holds a whole file.
+///
+/// `--preload` is refused (there is nothing local to map); transient
+/// fetch failures retry with bounded backoff and resume at the chunk
+/// boundary they had reached (see [`crate::data::remote`]).
+pub fn load_shard_remote(addr: &str, prefix: &str, opts: &WorkerOptions) -> Result<LoadedShard> {
+    ensure!(
+        !opts.preload,
+        "--preload needs a local shard pack; remote packs stream by range reads"
+    );
+    let join = |f: &str| {
+        if prefix.is_empty() {
+            f.to_string()
+        } else {
+            format!("{prefix}/{f}")
+        }
+    };
+    let stats = IoStats::new();
+    let client = RemoteClient::new(addr, RemoteOptions::default(), stats.clone());
+    let mut sess = client.session();
+
+    let mbytes = sess.fetch_all(&join(ShardManifest::FILE))?;
+    let manifest = ShardManifest::from_json(&crate::util::Json::parse(
+        std::str::from_utf8(&mbytes).context("remote manifest is not UTF-8")?,
+    )?)
+    .with_context(|| format!("parsing remote manifest {}", join(ShardManifest::FILE)))?;
+
+    // The label column is always materialized (it is replicated per
+    // splitter and read constantly): fetch it whole, verify, decode.
+    let lbytes = sess.fetch_all(&join(&manifest.labels_file))?;
+    if opts.verify {
+        ensure!(
+            checksum_bytes(&lbytes) == manifest.labels_checksum,
+            "label column {} failed its checksum",
+            manifest.labels_file
+        );
+    }
+    let lheader = disk::Header::parse(&lbytes)
+        .with_context(|| format!("parsing remote label column {}", manifest.labels_file))?;
+    ensure!(
+        lheader.kind == disk::FileKind::Categorical,
+        "label file holds {:?} records",
+        lheader.kind
+    );
+    lheader.ensure_untruncated(
+        lbytes.len() as u64,
+        std::path::Path::new(&manifest.labels_file),
+    )?;
+    let mut labels = Vec::new();
+    let payload = lheader.nbytes() as usize;
+    disk::decode_u32(&lbytes[payload..payload + lheader.rows as usize * 4], &mut labels);
+    ensure!(
+        labels.len() == manifest.rows,
+        "label column has {} rows, manifest declares {}",
+        labels.len(),
+        manifest.rows
+    );
+    stats.add_disk_read(lbytes.len() as u64);
+    stats.add_read_pass();
+
+    let specs = manifest
+        .columns
+        .iter()
+        .map(|c| {
+            let spec = manifest
+                .schema
+                .columns
+                .get(c.index)
+                .with_context(|| format!("column {} is not in the schema", c.index))?;
+            ensure!(
+                c.sorted_file.is_some() == spec.ctype.is_numerical(),
+                "column {}: presorted file presence does not match its type",
+                c.index
+            );
+            Ok(RemoteColumnSpec {
+                index: c.index,
+                raw: join(&c.file),
+                sorted: c.sorted_file.as_deref().map(&join),
+                ctype: spec.ctype,
+                raw_checksum: opts.verify.then_some(c.checksum),
+                sorted_checksum: if opts.verify { c.sorted_checksum } else { None },
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let storage: Arc<dyn ColumnStore> = Arc::new(
+        RemoteStore::open(client, specs, stats.clone())?.with_prefetch(opts.prefetch_chunks),
+    );
+
+    Ok(LoadedShard {
+        manifest,
+        storage,
+        labels: Arc::new(labels),
+        stats,
+    })
+}
+
 /// Check every column of `manifest` against its recorded checksums.
 /// `checksum_of(column, sorted)` produces the hash of the raw
 /// (`sorted = false`) or presorted (`sorted = true`, only called when
-/// the column has one) file — from disk for the streaming store, from
-/// the mapped bytes for the preloaded one, or from a remote fetch for
-/// a future remote shard source.
+/// the column has one) file — from disk for the streaming store, or
+/// from the mapped bytes for the preloaded one. (The remote shard
+/// source does not use this eager check: [`load_shard_remote`] arms
+/// the manifest checksums inside the store, which re-verifies every
+/// complete pass.)
 fn verify_columns(
     manifest: &ShardManifest,
     mut checksum_of: impl FnMut(&super::manifest::ShardColumn, bool) -> Result<u64>,
@@ -487,6 +602,73 @@ mod tests {
             );
         }
         assert_eq!(streaming.labels, preloaded.labels);
+    }
+
+    #[test]
+    fn remote_shard_matches_local() {
+        use crate::data::objserve::{ObjStoreOptions, ObjStoreServer};
+
+        let dir = crate::util::tempdir().unwrap();
+        shard_a_dataset(dir.path(), 2);
+        // One objstore serves the whole shard tree; each worker loads
+        // its pack under its `shard_<i>` prefix, downloading nothing
+        // but the manifest and the labels.
+        let server = ObjStoreServer::spawn(
+            dir.path(),
+            "127.0.0.1:0",
+            IoStats::new(),
+            ObjStoreOptions::default(),
+        )
+        .unwrap();
+        let addr = server.addr().to_string();
+        let local = load_shard(&dir.path().join("shard_0"), &WorkerOptions::default()).unwrap();
+        let remote = load_shard_remote(&addr, "shard_0", &WorkerOptions::default()).unwrap();
+        assert_eq!(local.manifest, remote.manifest);
+        assert_eq!(local.labels, remote.labels);
+        assert_eq!(local.storage.columns(), remote.storage.columns());
+        for j in local.storage.columns() {
+            assert_eq!(
+                local.storage.read_raw(j).unwrap(),
+                remote.storage.read_raw(j).unwrap(),
+                "column {j}"
+            );
+        }
+        // Preload is meaningless without local files.
+        let err = load_shard_remote(
+            &addr,
+            "shard_0",
+            &WorkerOptions {
+                preload: true,
+                ..Default::default()
+            },
+        )
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("preload"), "{err:#}");
+
+        // Corrupt one column file server-side: the load still succeeds
+        // (columns stream lazily), but the first complete pass over
+        // that column refuses the checksum.
+        let m = ShardManifest::load(&dir.path().join("shard_0")).unwrap();
+        let target = dir.path().join("shard_0").join(&m.columns[0].file);
+        let mut bytes = std::fs::read(&target).unwrap();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0xFF;
+        std::fs::write(&target, &bytes).unwrap();
+        let tampered = load_shard_remote(&addr, "shard_0", &WorkerOptions::default()).unwrap();
+        let j = m.columns[0].index;
+        let err = tampered.storage.read_raw(j).unwrap_err();
+        assert!(format!("{err:#}").contains("checksum"), "{err:#}");
+        // --no-verify disarms the checksums (header validation stays).
+        let unverified = load_shard_remote(
+            &addr,
+            "shard_0",
+            &WorkerOptions {
+                verify: false,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        unverified.storage.read_raw(j).unwrap();
     }
 
     #[test]

@@ -170,6 +170,16 @@ pub enum StorageMode {
     /// fallback on non-unix). Trees are bit-identical to the other
     /// modes.
     Mmap,
+    /// Shards on an object store (`drf objstore`), scanned by
+    /// chunk-aligned byte-range reads over the wire
+    /// ([`crate::data::remote::RemoteStore`]): retried with bounded
+    /// backoff, resumable at chunk boundaries, optionally prefetched by
+    /// a background fetcher (`prefetch_chunks`). With
+    /// `TrainConfig::object_store` unset the manager self-hosts a
+    /// loopback objstore over its own spilled shards (the
+    /// self-contained mode tests and benches use). Trees are
+    /// bit-identical to the other modes.
+    Remote,
 }
 
 impl Default for StorageMode {
@@ -225,6 +235,12 @@ pub struct TrainConfig {
     /// `scan_threads` — never changes a tree or a completed pass's
     /// accounting, only wall clock.
     pub prefetch_chunks: usize,
+    /// Object-store address (`host:port`) for
+    /// [`StorageMode::Remote`]: the `drf objstore` serving the
+    /// dataset's column files (`--object-store HOST:PORT`). `None` with
+    /// remote storage makes the manager spill + self-host a loopback
+    /// objstore for the run.
+    pub object_store: Option<String>,
     /// Directory holding AOT artifacts (for `ScorerBackend::Xla`).
     pub artifacts_dir: Option<std::path::PathBuf>,
     /// Cluster manifest (`cluster.json` from `drf shard`); required by
@@ -246,6 +262,7 @@ impl Default for TrainConfig {
             engine: Engine::default(),
             scan_threads: 1,
             prefetch_chunks: 0,
+            object_store: None,
             artifacts_dir: None,
             cluster_manifest: None,
             cluster_workers: Vec::new(),
@@ -332,12 +349,20 @@ impl TrainConfig {
                         StorageMode::Disk => "disk",
                         StorageMode::DiskV2 => "disk_v2",
                         StorageMode::Mmap => "mmap",
+                        StorageMode::Remote => "remote",
                     }
                     .into(),
                 ),
             )
             .set("scan_threads", Json::from_usize(self.scan_threads))
             .set("prefetch_chunks", Json::from_usize(self.prefetch_chunks))
+            .set(
+                "object_store",
+                match &self.object_store {
+                    Some(a) => Json::Str(a.clone()),
+                    None => Json::Null,
+                },
+            )
             .set(
                 "engine",
                 Json::Str(
@@ -447,6 +472,7 @@ impl TrainConfig {
                 "disk" => StorageMode::Disk,
                 "disk_v2" => StorageMode::DiskV2,
                 "mmap" => StorageMode::Mmap,
+                "remote" => StorageMode::Remote,
                 s => anyhow::bail!("unknown storage mode '{s}'"),
             };
         }
@@ -455,6 +481,12 @@ impl TrainConfig {
         }
         if let Some(x) = v.get_opt("prefetch_chunks") {
             cfg.prefetch_chunks = x.as_usize()?;
+        }
+        if let Some(x) = v.get_opt("object_store") {
+            cfg.object_store = match x {
+                Json::Null => None,
+                other => Some(other.as_str()?.to_string()),
+            };
         }
         if let Some(x) = v.get_opt("engine") {
             cfg.engine = match x.as_str()? {
@@ -529,6 +561,14 @@ mod tests {
         cfg.prefetch_chunks = 3;
         let back = TrainConfig::from_json(&cfg.to_json().to_string()).unwrap();
         assert_eq!(cfg, back);
+        // And the remote mode, with and without an objstore address.
+        cfg.storage = StorageMode::Remote;
+        let back = TrainConfig::from_json(&cfg.to_json().to_string()).unwrap();
+        assert_eq!(cfg, back);
+        cfg.object_store = Some("10.0.0.9:7979".into());
+        let back = TrainConfig::from_json(&cfg.to_json().to_string()).unwrap();
+        assert_eq!(cfg, back);
+        cfg.object_store = None;
         // And the cluster engine with its manifest + worker list.
         cfg.engine = Engine::Cluster;
         cfg.cluster_manifest = Some(std::path::PathBuf::from("/tmp/cluster.json"));

@@ -3,8 +3,8 @@
 //! finished trees. Also home of the threaded worker engine.
 
 use super::splitter::{
-    disk_storage_for, disk_v2_storage_for, memory_storage_for, mmap_storage_for, SplitterConfig,
-    SplitterCore,
+    disk_storage_for, disk_v2_storage_for, memory_storage_for, mmap_storage_for,
+    remote_storage_for, SplitterConfig, SplitterCore,
 };
 use super::topology::Topology;
 use super::transport::{DirectPool, SplitterPool};
@@ -92,7 +92,50 @@ impl Manager {
             StorageMode::Disk | StorageMode::DiskV2 | StorageMode::Mmap => {
                 Some(crate::util::tempdir()?)
             }
-            StorageMode::Memory => None,
+            // Remote without an external objstore: the manager spills
+            // the dataset and self-hosts a loopback objstore over it.
+            StorageMode::Remote if cfg.object_store.is_none() => Some(crate::util::tempdir()?),
+            StorageMode::Memory | StorageMode::Remote => None,
+        };
+
+        // Remote storage: resolve the objstore address the splitters
+        // will fetch from. `--object-store HOST:PORT` points at an
+        // external `drf objstore` serving a dataset directory; with no
+        // address the manager writes chunked DRFC v2 files into the
+        // run's temp dir and serves them itself over real TCP (the
+        // self-contained mode the storage matrix tests and benches
+        // exercise). The server guard lives until training ends.
+        let mut _objstore_guard: Option<crate::data::objserve::ObjStoreServer> = None;
+        let objstore_addr: Option<String> = if cfg.storage == StorageMode::Remote {
+            Some(match &cfg.object_store {
+                Some(addr) => addr.clone(),
+                None => {
+                    let dir = tmp_dir
+                        .as_ref()
+                        .expect("loopback remote spills to the temp dir")
+                        .path()
+                        .join("objstore");
+                    crate::data::store::save_dataset_with(
+                        ds,
+                        &dir,
+                        crate::data::disk::Layout::V2 {
+                            chunk_rows: crate::data::disk::DEFAULT_CHUNK_ROWS as u32,
+                        },
+                        IoStats::new(),
+                    )?;
+                    let server = crate::data::objserve::ObjStoreServer::spawn(
+                        &dir,
+                        "127.0.0.1:0",
+                        IoStats::new(),
+                        Default::default(),
+                    )?;
+                    let addr = server.addr().to_string();
+                    _objstore_guard = Some(server);
+                    addr
+                }
+            })
+        } else {
+            None
         };
 
         // Optional XLA scorer service (one per run; splitters share the
@@ -118,9 +161,17 @@ impl Manager {
             let cols = topology.columns_of(s);
             let stats = IoStats::new();
             splitter_stats.push(stats.clone());
-            let storage = match (&tmp_dir, cfg.storage) {
-                (None, _) => memory_storage_for(ds, &cols),
-                (Some(dir), mode) => {
+            let storage = match cfg.storage {
+                StorageMode::Memory => memory_storage_for(ds, &cols),
+                StorageMode::Remote => remote_storage_for(
+                    objstore_addr.as_deref().expect("resolved above"),
+                    ds.schema(),
+                    &cols,
+                    stats.clone(),
+                    cfg.prefetch_chunks,
+                )?,
+                mode => {
+                    let dir = tmp_dir.as_ref().expect("disk modes spill to the temp dir");
                     let sub = dir.path().join(format!("splitter_{s}"));
                     std::fs::create_dir_all(&sub)?;
                     match mode {
@@ -433,8 +484,19 @@ mod tests {
         // And prefetching disk scans change nothing but wall clock.
         cfg2.storage = StorageMode::DiskV2;
         cfg2.prefetch_chunks = 2;
-        let (pf_trees, _) = Manager::new(cfg2).unwrap().train(&ds).unwrap();
+        let (pf_trees, _) = Manager::new(cfg2.clone()).unwrap().train(&ds).unwrap();
         assert_eq!(mem_trees, pf_trees, "prefetch must not change the model");
+        // The remote object-store backend (self-hosted loopback
+        // objstore, every scan a range read over a real socket) is
+        // bit-identical too.
+        cfg2.storage = StorageMode::Remote;
+        cfg2.prefetch_chunks = 0;
+        let (remote_trees, report) = Manager::new(cfg2).unwrap().train(&ds).unwrap();
+        assert_eq!(mem_trees, remote_trees, "remote must not change the model");
+        let total_read: u64 = report.splitter_io.iter().map(|s| s.disk_read_bytes).sum();
+        assert!(total_read > 0);
+        let total_net: u64 = report.splitter_io.iter().map(|s| s.net_bytes).sum();
+        assert!(total_net > 0, "remote scans must cross the wire");
     }
 
     #[test]

@@ -771,6 +771,22 @@ pub fn disk_v2_storage_for(
     crate::data::store::disk_v2_store_for(ds, columns, dir, chunk_rows, stats, prefetch_chunks)
 }
 
+/// Open a splitter's columns over the `drf objstore` at `addr` — every
+/// scan becomes chunk-aligned byte-range reads over the wire
+/// ([`crate::data::remote::RemoteStore`]), prefetching
+/// `prefetch_chunks` range reads ahead (0 = synchronous). The objstore
+/// must serve a dataset directory layout (`col_<j>.drfc`, plus
+/// `col_<j>.sorted.drfc` for numerical columns).
+pub fn remote_storage_for(
+    addr: &str,
+    schema: &crate::data::Schema,
+    columns: &[usize],
+    stats: IoStats,
+    prefetch_chunks: usize,
+) -> Result<Arc<dyn ColumnStore>> {
+    crate::data::remote::remote_store_for(addr, schema, columns, stats, prefetch_chunks)
+}
+
 /// Write a splitter's columns as chunked DRFC v2 files under `dir` and
 /// memory-map them — scans borrow chunk slices straight from the
 /// mapping ([`crate::data::mmap::MmapStore`]).

@@ -20,17 +20,78 @@ use crate::data::io_stats::IoStats;
 use crate::Result;
 use std::sync::Arc;
 
-/// The tree builder's view of the splitter fleet.
+/// The tree builder's view of the splitter fleet — the RPC surface of
+/// Alg. 2. Every engine (`direct`, `threaded`, `tcp`, `cluster`)
+/// implements this same trait, which is why they are interchangeable
+/// and bit-identical.
+///
+/// # Examples
+///
+/// [`DirectPool`] is the in-process implementation; the calls below
+/// are exactly what a tree builder issues per tree (network traffic is
+/// accounted even without a network):
+///
+/// ```
+/// use std::sync::Arc;
+/// use drf::config::PruneMode;
+/// use drf::coordinator::splitter::{memory_storage_for, SplitterConfig, SplitterCore};
+/// use drf::coordinator::transport::{DirectPool, SplitterPool};
+/// use drf::data::io_stats::IoStats;
+/// use drf::data::synthetic::{Family, SyntheticSpec};
+/// use drf::rng::{Bagger, BaggingMode, FeatureSampling};
+/// use drf::splits::scorer::ScoreKind;
+///
+/// let ds = SyntheticSpec::new(Family::Xor { informative: 2 }, 60, 4, 1).generate();
+/// let labels = Arc::new(ds.labels().to_vec());
+/// let cfg = SplitterConfig {
+///     seed: 1,
+///     bagger: Bagger::new(1, BaggingMode::None),
+///     feature_sampling: FeatureSampling::All,
+///     num_candidates: 4,
+///     score_kind: ScoreKind::Gini,
+///     prune: PruneMode::Never,
+///     scan_threads: 1,
+/// };
+/// // Two splitters, each owning half the columns (round-robin).
+/// let splitters = (0..2)
+///     .map(|s| {
+///         let cols: Vec<usize> = (0..4).filter(|j| j % 2 == s).collect();
+///         Arc::new(SplitterCore::new(
+///             s,
+///             ds.schema().clone(),
+///             memory_storage_for(&ds, &cols),
+///             labels.clone(),
+///             cfg,
+///             IoStats::new(),
+///         ))
+///     })
+///     .collect();
+/// let pool = DirectPool::new(splitters, 0);
+///
+/// pool.start_tree(0)?;
+/// let hist = pool.root_stats(0, 0)?;         // splitter 0's bagged class counts
+/// assert_eq!(hist.iter().sum::<u64>(), 60);  // BaggingMode::None: every row, weight 1
+/// assert_eq!(pool.columns_of(1), vec![1, 3]);
+/// pool.finish_tree(0)?;
+/// assert!(pool.net_stats().net_bytes() > 0); // traffic accounted even in-process
+/// # Ok::<(), anyhow::Error>(())
+/// ```
 pub trait SplitterPool: Send + Sync {
+    /// Size of the fleet.
     fn num_splitters(&self) -> usize;
     /// Columns each splitter statically owns (for routing).
     fn columns_of(&self, splitter: usize) -> Vec<usize>;
+    /// Begin `tree` on every splitter (resets its per-tree state).
     fn start_tree(&self, tree: u32) -> Result<()>;
+    /// One splitter's bagged per-class counts at the root of `tree`.
     fn root_stats(&self, splitter: usize, tree: u32) -> Result<Vec<u64>>;
+    /// Alg. 1 supersplit search on one splitter's columns.
     fn find_splits(&self, splitter: usize, q: &SupersplitQuery) -> Result<PartialSupersplit>;
+    /// Evaluate chosen split conditions on the splitter that owns them.
     fn eval_conditions(&self, splitter: usize, q: &EvalQuery) -> Result<EvalResult>;
     /// Broadcast the level update to every splitter (the `Dn` bits).
     fn broadcast_level_update(&self, u: &LevelUpdate) -> Result<()>;
+    /// Drop `tree`'s state on every splitter.
     fn finish_tree(&self, tree: u32) -> Result<()>;
     /// Shared network counters.
     fn net_stats(&self) -> IoStats;

@@ -32,7 +32,9 @@ pub enum Column {
     Numerical(Vec<f32>),
     /// Dense categorical value ids, one per row, each `< arity`.
     Categorical {
+        /// Value ids, one per row.
         values: Vec<u32>,
+        /// Number of distinct values.
         arity: u32,
     },
 }
@@ -46,10 +48,12 @@ impl Column {
         }
     }
 
+    /// Whether the column has no rows.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
+    /// Whether this is a [`Column::Numerical`].
     pub fn is_numerical(&self) -> bool {
         matches!(self, Column::Numerical(_))
     }
@@ -70,6 +74,7 @@ impl Column {
         }
     }
 
+    /// Arity of a categorical column (`None` for numerical ones).
     pub fn arity(&self) -> Option<u32> {
         match self {
             Column::Categorical { arity, .. } => Some(*arity),

@@ -27,6 +27,7 @@ use std::path::Path;
 /// CSV parsing options.
 #[derive(Debug, Clone)]
 pub struct CsvOptions {
+    /// Field delimiter (default `,`).
     pub delimiter: char,
     /// Name of the label column.
     pub label_column: String,

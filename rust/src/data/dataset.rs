@@ -49,6 +49,7 @@ impl Dataset {
         }
     }
 
+    /// The dataset's schema.
     pub fn schema(&self) -> &Schema {
         &self.schema
     }
@@ -63,18 +64,22 @@ impl Dataset {
         self.columns.len()
     }
 
+    /// Number of label classes.
     pub fn num_classes(&self) -> u32 {
         self.schema.num_classes
     }
 
+    /// Feature column `j`.
     pub fn column(&self, j: usize) -> &Column {
         &self.columns[j]
     }
 
+    /// All feature columns, in schema order.
     pub fn columns(&self) -> &[Column] {
         &self.columns
     }
 
+    /// The label column.
     pub fn labels(&self) -> &[u32] {
         &self.labels
     }
@@ -151,10 +156,12 @@ impl<'a> RowView<'a> {
         self.ds.columns[j].as_categorical()[self.row]
     }
 
+    /// The row's label.
     pub fn label(&self) -> u32 {
         self.ds.labels[self.row]
     }
 
+    /// The row's index in the dataset.
     pub fn index(&self) -> usize {
         self.row
     }

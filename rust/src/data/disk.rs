@@ -53,8 +53,11 @@ pub const DEFAULT_CHUNK_ROWS: usize = 64 * 1024;
 /// Kind tag stored in the header.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum FileKind {
+    /// Raw numerical column: one `f32` per row.
     Numerical = 1,
+    /// Raw categorical column: one `u32` per row.
     Categorical = 2,
+    /// Presorted numerical column: `(f32, u32)` pairs in value order.
     SortedNumerical = 3,
 }
 
@@ -84,7 +87,10 @@ pub enum Layout {
     V1,
     /// DRFC v2: per-chunk record counts in the header; `chunk_rows`
     /// records per chunk (the last chunk may be short).
-    V2 { chunk_rows: u32 },
+    V2 {
+        /// Records per chunk (>= 1; the last chunk may be short).
+        chunk_rows: u32,
+    },
 }
 
 /// The per-chunk record counts of a v2 file with `rows` records cut
@@ -105,8 +111,11 @@ fn chunk_counts(rows: u64, chunk_rows: u32) -> Vec<u32> {
 /// Parsed column-file header.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Header {
+    /// Record layout of the file.
     pub kind: FileKind,
+    /// Declared record count.
     pub rows: u64,
+    /// Container version (1 = monolithic, 2 = chunk-tabled).
     pub version: u32,
     /// v2 chunk table (empty for v1 files).
     pub chunks: Vec<u32>,
@@ -319,6 +328,7 @@ impl ColumnWriter {
         })
     }
 
+    /// Append one numerical record.
     pub fn write_f32(&mut self, v: f32) -> Result<()> {
         ensure!(self.kind == FileKind::Numerical, "layout mismatch");
         self.w.write_all(&v.to_le_bytes())?;
@@ -327,6 +337,7 @@ impl ColumnWriter {
         Ok(())
     }
 
+    /// Append one categorical record.
     pub fn write_u32(&mut self, v: u32) -> Result<()> {
         ensure!(self.kind == FileKind::Categorical, "layout mismatch");
         self.w.write_all(&v.to_le_bytes())?;
@@ -335,6 +346,7 @@ impl ColumnWriter {
         Ok(())
     }
 
+    /// Append one presorted entry.
     pub fn write_sorted(&mut self, e: SortedEntry) -> Result<()> {
         ensure!(self.kind == FileKind::SortedNumerical, "layout mismatch");
         self.w.write_all(&e.value.to_le_bytes())?;
@@ -376,6 +388,8 @@ pub struct ColumnReader {
 }
 
 impl ColumnReader {
+    /// Open `path`, validating the header and the truncation check up
+    /// front; charges the header bytes to `stats`.
     pub fn open(path: &Path, stats: IoStats) -> Result<Self> {
         let f = File::open(path).with_context(|| format!("opening {}", path.display()))?;
         let file_len = f.metadata()?.len();
@@ -396,14 +410,17 @@ impl ColumnReader {
         })
     }
 
+    /// The validated header.
     pub fn header(&self) -> &Header {
         &self.header
     }
 
+    /// Records left to read.
     pub fn remaining(&self) -> u64 {
         self.header.rows - self.read
     }
 
+    /// Read one numerical record.
     pub fn next_f32(&mut self) -> Result<f32> {
         ensure!(self.header.kind == FileKind::Numerical, "layout mismatch");
         let mut b = [0u8; 4];
@@ -413,6 +430,7 @@ impl ColumnReader {
         Ok(f32::from_le_bytes(b))
     }
 
+    /// Read one categorical record.
     pub fn next_u32(&mut self) -> Result<u32> {
         ensure!(self.header.kind == FileKind::Categorical, "layout mismatch");
         let mut b = [0u8; 4];
@@ -422,6 +440,7 @@ impl ColumnReader {
         Ok(u32::from_le_bytes(b))
     }
 
+    /// Read one presorted entry.
     pub fn next_sorted(&mut self) -> Result<SortedEntry> {
         ensure!(
             self.header.kind == FileKind::SortedNumerical,

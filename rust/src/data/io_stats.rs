@@ -28,14 +28,17 @@ struct IoStatsInner {
 }
 
 impl IoStats {
+    /// Fresh counters, all zero.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Charge `bytes` read from storage (disk, mapping, or remote).
     pub fn add_disk_read(&self, bytes: u64) {
         self.inner.disk_read_bytes.fetch_add(bytes, Ordering::Relaxed);
     }
 
+    /// Charge `bytes` written to storage.
     pub fn add_disk_write(&self, bytes: u64) {
         self.inner.disk_write_bytes.fetch_add(bytes, Ordering::Relaxed);
     }
@@ -50,11 +53,13 @@ impl IoStats {
         self.inner.disk_write_passes.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Charge one network message of `bytes`.
     pub fn add_net(&self, bytes: u64) {
         self.inner.net_bytes.fetch_add(bytes, Ordering::Relaxed);
         self.inner.net_messages.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Charge a broadcast: `bytes` to each of `fanout` peers.
     pub fn add_broadcast(&self, bytes: u64, fanout: u64) {
         self.inner.net_bytes.fetch_add(bytes * fanout, Ordering::Relaxed);
         self.inner
@@ -71,30 +76,37 @@ impl IoStats {
         self.inner.net_broadcasts.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Total bytes read from storage.
     pub fn disk_read_bytes(&self) -> u64 {
         self.inner.disk_read_bytes.load(Ordering::Relaxed)
     }
 
+    /// Total bytes written to storage.
     pub fn disk_write_bytes(&self) -> u64 {
         self.inner.disk_write_bytes.load(Ordering::Relaxed)
     }
 
+    /// Completed sequential read passes.
     pub fn disk_read_passes(&self) -> u64 {
         self.inner.disk_read_passes.load(Ordering::Relaxed)
     }
 
+    /// Completed sequential write passes.
     pub fn disk_write_passes(&self) -> u64 {
         self.inner.disk_write_passes.load(Ordering::Relaxed)
     }
 
+    /// Total network bytes.
     pub fn net_bytes(&self) -> u64 {
         self.inner.net_bytes.load(Ordering::Relaxed)
     }
 
+    /// Total network messages.
     pub fn net_messages(&self) -> u64 {
         self.inner.net_messages.load(Ordering::Relaxed)
     }
 
+    /// Total broadcast events.
     pub fn net_broadcasts(&self) -> u64 {
         self.inner.net_broadcasts.load(Ordering::Relaxed)
     }
@@ -127,12 +139,19 @@ impl IoStats {
 /// A point-in-time copy of the counters.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct IoSnapshot {
+    /// Bytes read from storage.
     pub disk_read_bytes: u64,
+    /// Bytes written to storage.
     pub disk_write_bytes: u64,
+    /// Completed sequential read passes.
     pub disk_read_passes: u64,
+    /// Completed sequential write passes.
     pub disk_write_passes: u64,
+    /// Network bytes.
     pub net_bytes: u64,
+    /// Network messages.
     pub net_messages: u64,
+    /// Broadcast events.
     pub net_broadcasts: u64,
 }
 

@@ -1,5 +1,5 @@
-//! Dataset substrate: columnar storage (memory + disk), presorting,
-//! synthetic generators, and I/O accounting.
+//! Dataset substrate: columnar storage (memory, disk, mmap, remote),
+//! presorting, synthetic generators, and I/O accounting.
 //!
 //! DRF partitions the dataset **by column** (paper §2.1): each splitter
 //! owns a subset of columns and only ever reads them *sequentially* — no
@@ -16,16 +16,29 @@
 //! * [`store`] — the **[`store::ColumnStore`]** abstraction: every
 //!   splitter scan is a chunk-granular sequential pass over one of its
 //!   backends ([`store::MemStore`], [`store::DiskStore`],
-//!   [`store::DiskV2Store`], [`mmap::MmapStore`]), plus
-//!   [`store::run_scans`] for bounded intra-splitter scan parallelism;
+//!   [`store::DiskV2Store`], [`mmap::MmapStore`],
+//!   [`remote::RemoteStore`]), plus [`store::run_scans`] for bounded
+//!   intra-splitter scan parallelism;
 //! * [`mmap`] — the zero-copy backend: DRFC files memory-mapped via
 //!   self-declared unix FFI, scans borrow chunk slices straight from
 //!   the mapping (first-touch I/O accounting, buffered fallback on
 //!   non-unix);
+//! * [`remote`] — the object-store backend: DRFC files fetched by
+//!   chunk-aligned byte-range reads from a [`objserve`] server
+//!   (checksummed complete passes, bounded retry with backoff,
+//!   resumable mid-column passes, background range-read prefetch);
+//! * [`objserve`] — the `drf objstore` server those reads hit: byte
+//!   ranges of one root directory over the shared wire substrate;
 //! * [`sort`] — in-memory and external (k-way merge) presorting of
 //!   numerical columns;
 //! * [`synthetic`] — the paper's artificial dataset families plus the
 //!   Leo-like stand-in for the proprietary real-world dataset.
+//!
+//! The whole module tree carries `#![deny(missing_docs)]`: the data
+//! plane is the documented worked example of the "add a backend"
+//! recipe (see `ARCHITECTURE.md` and the [`store`] docs), so every
+//! public item here must say what it is.
+#![deny(missing_docs)]
 
 pub mod column;
 pub mod csv;
@@ -33,6 +46,8 @@ pub mod dataset;
 pub mod disk;
 pub mod io_stats;
 pub mod mmap;
+pub mod objserve;
+pub mod remote;
 pub mod schema;
 pub mod sort;
 pub mod store;
@@ -41,5 +56,7 @@ pub mod synthetic;
 pub use column::{Column, SortedEntry};
 pub use dataset::Dataset;
 pub use mmap::MmapStore;
+pub use objserve::ObjStoreServer;
+pub use remote::{RemoteClient, RemoteStore};
 pub use schema::{ColumnSpec, ColumnType, Schema};
 pub use store::{ColumnStore, DiskStore, DiskV2Store, MemStore, RawChunk};

@@ -1,0 +1,538 @@
+//! `drf objstore` — a minimal object-store server for DRFC shard packs.
+//!
+//! The paper's large-scale runs assume the dataset lives on **remote
+//! storage** served to the splitter workers, not on each worker's local
+//! disk (§5: workers stream their columns; nothing requires the bytes
+//! to be local). This module provides the serving half of that setup: a
+//! tiny single-binary object store that exposes **byte-range reads**
+//! over files under one root directory, speaking length-prefixed
+//! [`crate::util::wire`] frames — the same substrate as the splitter
+//! and serving protocols, no new crates.
+//!
+//! The protocol is deliberately S3-shaped but minimal — exactly what a
+//! chunk-aligned [`RemoteStore`](super::remote::RemoteStore) scan
+//! needs:
+//!
+//! * `Stat { path }` → `{ len }` — object size (the truncation check
+//!   at open runs against this);
+//! * `Read { path, offset, len }` → `{ bytes }` — one contiguous
+//!   range, rejected (never silently shortened) if it leaves the file
+//!   or exceeds [`MAX_RANGE_BYTES`].
+//!
+//! Paths are relative to the served root and sanitized (no absolute
+//! paths, no `..`, no `\`); a request for anything else gets an error
+//! response, not a file. Every served byte is charged to the server's
+//! [`IoStats`] as a disk read, so the objstore's own I/O is measurable
+//! the same way a splitter's is.
+//!
+//! **Failure injection** for the "preempted worker / dying storage"
+//! tests: [`ObjStoreOptions::fail_after_reads`] makes the server stop
+//! serving (close every connection, stop accepting) right *before*
+//! answering the Nth `Read` — from the client's point of view an
+//! unannounced crash mid-pass. The `drf objstore --fail-after N` CLI
+//! additionally exits the process so a supervisor (or a test) can
+//! observe the death and restart it.
+
+use super::io_stats::IoStats;
+use crate::util::wire::{read_frame, write_frame, Reader, Writer};
+use crate::Result;
+use anyhow::{bail, ensure, Context};
+use std::io::{BufReader, BufWriter, Read as _, Seek, SeekFrom};
+use std::net::{TcpListener, TcpStream};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Frame magic of the object-store protocol ("DRF Object").
+pub const OBJ_MAGIC: [u8; 4] = *b"DRFO";
+/// Object-store protocol version.
+pub const OBJ_PROTOCOL: u32 = 1;
+/// Hard cap on a single range read. Larger logical fetches are split
+/// into multiple requests by the client ([`super::remote`]), so this
+/// bounds both server-side allocation and frame sizes well below the
+/// wire substrate's frame cap.
+pub const MAX_RANGE_BYTES: u32 = 32 * 1024 * 1024;
+
+const OP_STAT: u8 = 1;
+const OP_READ: u8 = 2;
+const RESP_STAT: u8 = 1;
+const RESP_DATA: u8 = 2;
+const RESP_ERR: u8 = 0xFF;
+
+/// One object-store request.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ObjRequest {
+    /// Object size of `path` (relative to the served root).
+    Stat {
+        /// Object name, relative to the served root.
+        path: String,
+    },
+    /// `len` bytes of `path` starting at `offset` (exact — a range
+    /// that leaves the object is an error, never a short reply).
+    Read {
+        /// Object name, relative to the served root.
+        path: String,
+        /// Byte offset of the range start.
+        offset: u64,
+        /// Range length in bytes (capped by [`MAX_RANGE_BYTES`]).
+        len: u32,
+    },
+}
+
+/// One object-store response.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ObjResponse {
+    /// Answer to [`ObjRequest::Stat`].
+    Stat {
+        /// Object size in bytes.
+        len: u64,
+    },
+    /// Answer to [`ObjRequest::Read`]: exactly the requested bytes.
+    Data(Vec<u8>),
+    /// The request could not be served (bad path, bad range, I/O
+    /// error). Permanent — clients must not retry these.
+    Err(String),
+}
+
+/// Encode a request frame body.
+pub fn encode_request(req: &ObjRequest) -> Vec<u8> {
+    let mut w = Writer::new();
+    w.magic(OBJ_MAGIC);
+    w.u32(OBJ_PROTOCOL);
+    match req {
+        ObjRequest::Stat { path } => {
+            w.u8(OP_STAT);
+            w.str(path);
+        }
+        ObjRequest::Read { path, offset, len } => {
+            w.u8(OP_READ);
+            w.str(path);
+            w.u64(*offset);
+            w.u32(*len);
+        }
+    }
+    w.into_bytes()
+}
+
+/// Decode a request frame body.
+pub fn decode_request(frame: &[u8]) -> Result<ObjRequest> {
+    let mut r = Reader::new(frame);
+    r.expect_magic(OBJ_MAGIC, "drf objstore")?;
+    let protocol = r.u32()?;
+    ensure!(
+        protocol == OBJ_PROTOCOL,
+        "objstore protocol mismatch: peer speaks v{protocol}, this build v{OBJ_PROTOCOL}"
+    );
+    let req = match r.u8()? {
+        OP_STAT => ObjRequest::Stat { path: r.str()? },
+        OP_READ => ObjRequest::Read {
+            path: r.str()?,
+            offset: r.u64()?,
+            len: r.u32()?,
+        },
+        op => bail!("unknown objstore opcode {op}"),
+    };
+    r.done()?;
+    Ok(req)
+}
+
+/// Encode a response frame body.
+pub fn encode_response(resp: &ObjResponse) -> Vec<u8> {
+    let mut w = Writer::new();
+    w.magic(OBJ_MAGIC);
+    w.u32(OBJ_PROTOCOL);
+    match resp {
+        ObjResponse::Stat { len } => {
+            w.u8(RESP_STAT);
+            w.u64(*len);
+        }
+        ObjResponse::Data(bytes) => {
+            w.u8(RESP_DATA);
+            w.usize_u32(bytes.len());
+            let mut b = w.into_bytes();
+            b.extend_from_slice(bytes);
+            return b;
+        }
+        ObjResponse::Err(msg) => {
+            w.u8(RESP_ERR);
+            w.str(msg);
+        }
+    }
+    w.into_bytes()
+}
+
+/// Decode a response frame body.
+pub fn decode_response(frame: &[u8]) -> Result<ObjResponse> {
+    let mut r = Reader::new(frame);
+    r.expect_magic(OBJ_MAGIC, "drf objstore")?;
+    let protocol = r.u32()?;
+    ensure!(
+        protocol == OBJ_PROTOCOL,
+        "objstore protocol mismatch: peer speaks v{protocol}, this build v{OBJ_PROTOCOL}"
+    );
+    let resp = match r.u8()? {
+        RESP_STAT => ObjResponse::Stat { len: r.u64()? },
+        RESP_DATA => {
+            let n = r.len_checked(1)?;
+            ObjResponse::Data(r.take(n)?.to_vec())
+        }
+        RESP_ERR => ObjResponse::Err(r.str()?),
+        op => bail!("unknown objstore response code {op}"),
+    };
+    r.done()?;
+    Ok(resp)
+}
+
+/// Resolve a client-supplied relative path against the served root,
+/// rejecting anything that could escape it (absolute paths, `..`/`.`
+/// components, backslashes, NULs).
+pub fn sanitize_path(root: &Path, path: &str) -> Result<PathBuf> {
+    ensure!(!path.is_empty(), "empty object path");
+    ensure!(
+        !path.starts_with('/') && !path.contains('\\') && !path.contains('\0'),
+        "invalid object path {path:?}"
+    );
+    let mut out = root.to_path_buf();
+    for comp in path.split('/') {
+        ensure!(
+            !comp.is_empty() && comp != "." && comp != "..",
+            "invalid object path {path:?}"
+        );
+        out.push(comp);
+    }
+    Ok(out)
+}
+
+/// Knobs of an object-store server.
+#[derive(Debug, Clone, Default)]
+pub struct ObjStoreOptions {
+    /// Crash-simulation: stop serving (drop every connection, stop
+    /// accepting) right before answering the N-th `Read` request —
+    /// exactly `N - 1` reads succeed. `None` = serve forever.
+    pub fail_after_reads: Option<u64>,
+    /// With `fail_after_reads`: additionally exit the whole process
+    /// (exit code 0) when the limit fires — only sensible for the
+    /// standalone `drf objstore` binary, never for in-process servers.
+    pub exit_process_on_limit: bool,
+}
+
+/// Shared server state.
+struct ObjStoreState {
+    root: PathBuf,
+    stats: IoStats,
+    opts: ObjStoreOptions,
+    /// `Read` requests answered so far (drives `fail_after_reads`).
+    reads_served: AtomicU64,
+    shutdown: AtomicBool,
+    /// Live connections (by id), so a simulated crash (or Drop) can
+    /// sever them; each connection thread removes its own entry on
+    /// exit, so the list stays bounded by *live* connections.
+    conns: Mutex<Vec<(u64, TcpStream)>>,
+    next_conn_id: AtomicU64,
+}
+
+impl ObjStoreState {
+    /// Sever every live connection and stop accepting — the simulated
+    /// (or real) end of the server.
+    fn crash(&self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        for (_, c) in self.conns.lock().unwrap().drain(..) {
+            let _ = c.shutdown(std::net::Shutdown::Both);
+        }
+    }
+
+    fn serve_request(&self, req: ObjRequest) -> ObjResponse {
+        match self.try_serve(req) {
+            Ok(resp) => resp,
+            Err(e) => ObjResponse::Err(format!("{e:#}")),
+        }
+    }
+
+    fn try_serve(&self, req: ObjRequest) -> Result<ObjResponse> {
+        match req {
+            ObjRequest::Stat { path } => {
+                let p = sanitize_path(&self.root, &path)?;
+                let len = std::fs::metadata(&p)
+                    .with_context(|| format!("stat {path}"))?
+                    .len();
+                Ok(ObjResponse::Stat { len })
+            }
+            ObjRequest::Read { path, offset, len } => {
+                ensure!(
+                    len <= MAX_RANGE_BYTES,
+                    "range of {len} bytes exceeds the {MAX_RANGE_BYTES}-byte cap"
+                );
+                let p = sanitize_path(&self.root, &path)?;
+                let mut f =
+                    std::fs::File::open(&p).with_context(|| format!("opening {path}"))?;
+                let flen = f.metadata()?.len();
+                ensure!(
+                    offset.checked_add(len as u64).is_some_and(|end| end <= flen),
+                    "range {offset}+{len} leaves {path} ({flen} bytes)"
+                );
+                f.seek(SeekFrom::Start(offset))?;
+                let mut buf = vec![0u8; len as usize];
+                f.read_exact(&mut buf)?;
+                self.stats.add_disk_read(len as u64);
+                Ok(ObjResponse::Data(buf))
+            }
+        }
+    }
+}
+
+/// A running object-store server over one root directory. Dropping it
+/// severs every connection and stops the accept loop.
+pub struct ObjStoreServer {
+    addr: std::net::SocketAddr,
+    state: Arc<ObjStoreState>,
+    accept_handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ObjStoreServer {
+    /// Bind `addr` (`host:0` picks an ephemeral port — see
+    /// [`ObjStoreServer::addr`]) and serve byte ranges of the files
+    /// under `root`.
+    pub fn spawn(
+        root: &Path,
+        addr: &str,
+        stats: IoStats,
+        opts: ObjStoreOptions,
+    ) -> Result<ObjStoreServer> {
+        ensure!(root.is_dir(), "objstore root {} is not a directory", root.display());
+        let listener =
+            TcpListener::bind(addr).with_context(|| format!("binding objstore to {addr}"))?;
+        let addr = listener.local_addr()?;
+        let state = Arc::new(ObjStoreState {
+            root: root.to_path_buf(),
+            stats,
+            opts,
+            reads_served: AtomicU64::new(0),
+            shutdown: AtomicBool::new(false),
+            conns: Mutex::new(Vec::new()),
+            next_conn_id: AtomicU64::new(0),
+        });
+        let state2 = state.clone();
+        let accept_handle = std::thread::Builder::new()
+            .name("drf-objstore".into())
+            .spawn(move || {
+                for conn in listener.incoming() {
+                    if state2.shutdown.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    let stream = match conn {
+                        Ok(s) => s,
+                        Err(_) => {
+                            // Transient accept failures must not take
+                            // the store down.
+                            std::thread::sleep(std::time::Duration::from_millis(10));
+                            continue;
+                        }
+                    };
+                    let id = state2.next_conn_id.fetch_add(1, Ordering::SeqCst);
+                    if let Ok(clone) = stream.try_clone() {
+                        state2.conns.lock().unwrap().push((id, clone));
+                    }
+                    let state = state2.clone();
+                    let _ = std::thread::Builder::new()
+                        .name("drf-objstore-conn".into())
+                        .spawn(move || {
+                            let _ = serve_connection(&state, stream);
+                            state.conns.lock().unwrap().retain(|(i, _)| *i != id);
+                        });
+                }
+            })?;
+        Ok(ObjStoreServer {
+            addr,
+            state,
+            accept_handle: Some(accept_handle),
+        })
+    }
+
+    /// The actually bound address (resolves `:0` bindings).
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.addr
+    }
+
+    /// `Read` requests received so far (including ones answered with
+    /// an error, and — under `fail_after_reads` — the final one the
+    /// simulated crash left unanswered).
+    pub fn reads_served(&self) -> u64 {
+        self.state.reads_served.load(Ordering::SeqCst)
+    }
+
+    /// Simulate a crash now: sever every connection, stop accepting.
+    pub fn crash(&self) {
+        self.state.crash();
+    }
+}
+
+impl Drop for ObjStoreServer {
+    fn drop(&mut self) {
+        self.state.crash();
+        // Poke the listener so the accept loop wakes and exits.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.accept_handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// One connection's request loop.
+fn serve_connection(state: &ObjStoreState, stream: TcpStream) -> Result<()> {
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = BufWriter::new(stream);
+    loop {
+        let frame = match read_frame(&mut reader) {
+            Ok(f) => f,
+            Err(_) => return Ok(()), // peer closed
+        };
+        if state.shutdown.load(Ordering::SeqCst) {
+            return Ok(());
+        }
+        let response = match decode_request(&frame) {
+            Err(e) => ObjResponse::Err(format!("bad request: {e}")),
+            Ok(req) => {
+                if matches!(req, ObjRequest::Read { .. }) {
+                    // This is range read number `k` (1-based) across
+                    // all connections.
+                    let k = state.reads_served.fetch_add(1, Ordering::SeqCst) + 1;
+                    if let Some(limit) = state.opts.fail_after_reads {
+                        // Die right before the limit-th read is
+                        // answered: exactly `limit - 1` reads succeed.
+                        if k >= limit {
+                            // Die *before* answering — from the client's
+                            // point of view, an unannounced crash.
+                            state.crash();
+                            if state.opts.exit_process_on_limit {
+                                println!(
+                                    "drf objstore: --fail-after limit reached, exiting"
+                                );
+                                let _ = std::io::Write::flush(&mut std::io::stdout());
+                                std::process::exit(0);
+                            }
+                            return Ok(());
+                        }
+                    }
+                }
+                state.serve_request(req)
+            }
+        };
+        write_frame(&mut writer, &encode_response(&response))?;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(stream: &TcpStream, req: &ObjRequest) -> ObjResponse {
+        let mut r = BufReader::new(stream.try_clone().unwrap());
+        let mut w = BufWriter::new(stream.try_clone().unwrap());
+        write_frame(&mut w, &encode_request(req)).unwrap();
+        decode_response(&read_frame(&mut r).unwrap()).unwrap()
+    }
+
+    #[test]
+    fn codec_roundtrips() {
+        for req in [
+            ObjRequest::Stat { path: "a/b.drfc".into() },
+            ObjRequest::Read { path: "x".into(), offset: 7, len: 9 },
+        ] {
+            assert_eq!(decode_request(&encode_request(&req)).unwrap(), req);
+        }
+        for resp in [
+            ObjResponse::Stat { len: 1 << 40 },
+            ObjResponse::Data(vec![1, 2, 3]),
+            ObjResponse::Err("nope".into()),
+        ] {
+            assert_eq!(decode_response(&encode_response(&resp)).unwrap(), resp);
+        }
+    }
+
+    #[test]
+    fn path_sanitization() {
+        let root = Path::new("/srv/data");
+        assert!(sanitize_path(root, "col_0.drfc").is_ok());
+        assert!(sanitize_path(root, "shard_1/col_0.drfc").is_ok());
+        for bad in ["", "/etc/passwd", "../x", "a/../b", "a/./b", "a//b", "a\\b", "a\0b"] {
+            assert!(sanitize_path(root, bad).is_err(), "{bad:?} must be rejected");
+        }
+    }
+
+    #[test]
+    fn serves_stats_and_ranges() {
+        let dir = crate::util::tempdir().unwrap();
+        std::fs::write(dir.path().join("obj"), b"0123456789").unwrap();
+        let stats = IoStats::new();
+        let server = ObjStoreServer::spawn(
+            dir.path(),
+            "127.0.0.1:0",
+            stats.clone(),
+            ObjStoreOptions::default(),
+        )
+        .unwrap();
+        let stream = TcpStream::connect(server.addr()).unwrap();
+
+        match roundtrip(&stream, &ObjRequest::Stat { path: "obj".into() }) {
+            ObjResponse::Stat { len } => assert_eq!(len, 10),
+            r => panic!("expected Stat, got {r:?}"),
+        }
+        match roundtrip(&stream, &ObjRequest::Read { path: "obj".into(), offset: 3, len: 4 }) {
+            ObjResponse::Data(b) => assert_eq!(b, b"3456"),
+            r => panic!("expected Data, got {r:?}"),
+        }
+        assert_eq!(stats.disk_read_bytes(), 4);
+        assert_eq!(server.reads_served(), 1);
+
+        // A range leaving the object is an error, never a short reply.
+        match roundtrip(&stream, &ObjRequest::Read { path: "obj".into(), offset: 8, len: 4 }) {
+            ObjResponse::Err(msg) => assert!(msg.contains("leaves"), "{msg}"),
+            r => panic!("expected Err, got {r:?}"),
+        }
+        // Traversal is refused at the protocol layer.
+        match roundtrip(&stream, &ObjRequest::Read { path: "../obj".into(), offset: 0, len: 1 }) {
+            ObjResponse::Err(msg) => assert!(msg.contains("invalid object path"), "{msg}"),
+            r => panic!("expected Err, got {r:?}"),
+        }
+        // Missing objects error cleanly.
+        match roundtrip(&stream, &ObjRequest::Stat { path: "missing".into() }) {
+            ObjResponse::Err(msg) => assert!(msg.contains("stat"), "{msg}"),
+            r => panic!("expected Err, got {r:?}"),
+        }
+    }
+
+    #[test]
+    fn fail_after_reads_severs_connections() {
+        let dir = crate::util::tempdir().unwrap();
+        std::fs::write(dir.path().join("obj"), vec![7u8; 64]).unwrap();
+        let server = ObjStoreServer::spawn(
+            dir.path(),
+            "127.0.0.1:0",
+            IoStats::new(),
+            ObjStoreOptions {
+                fail_after_reads: Some(3),
+                exit_process_on_limit: false,
+            },
+        )
+        .unwrap();
+        let stream = TcpStream::connect(server.addr()).unwrap();
+        // Reads 1 and 2 are answered (fail-after 3 = die before the
+        // 3rd, as the docs promise).
+        for _ in 0..2 {
+            match roundtrip(&stream, &ObjRequest::Read { path: "obj".into(), offset: 0, len: 8 }) {
+                ObjResponse::Data(b) => assert_eq!(b.len(), 8),
+                r => panic!("expected Data, got {r:?}"),
+            }
+        }
+        // The third read hits the limit: the server dies without
+        // answering; the client sees a dead connection.
+        let mut w = BufWriter::new(stream.try_clone().unwrap());
+        write_frame(
+            &mut w,
+            &encode_request(&ObjRequest::Read { path: "obj".into(), offset: 0, len: 8 }),
+        )
+        .unwrap();
+        let mut r = BufReader::new(stream);
+        assert!(read_frame(&mut r).is_err(), "crashed server must not answer");
+    }
+}

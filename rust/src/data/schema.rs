@@ -21,14 +21,17 @@ pub enum ColumnType {
 }
 
 impl ColumnType {
+    /// Whether this is [`ColumnType::Numerical`].
     pub fn is_numerical(&self) -> bool {
         matches!(self, ColumnType::Numerical)
     }
 
+    /// Whether this is [`ColumnType::Categorical`].
     pub fn is_categorical(&self) -> bool {
         matches!(self, ColumnType::Categorical { .. })
     }
 
+    /// Arity of a categorical type (`None` for numerical).
     pub fn arity(&self) -> Option<u32> {
         match self {
             ColumnType::Categorical { arity } => Some(*arity),
@@ -47,6 +50,7 @@ pub struct ColumnSpec {
 }
 
 impl ColumnSpec {
+    /// Spec of a numerical column called `name`.
     pub fn numerical(name: impl Into<String>) -> Self {
         Self {
             name: name.into(),
@@ -54,6 +58,7 @@ impl ColumnSpec {
         }
     }
 
+    /// Spec of a categorical column called `name` with `arity` values.
     pub fn categorical(name: impl Into<String>, arity: u32) -> Self {
         Self {
             name: name.into(),
@@ -72,6 +77,8 @@ pub struct Schema {
 }
 
 impl Schema {
+    /// Assemble a schema, asserting well-formedness (at least one
+    /// feature, `num_classes >= 2`, unique column names).
     pub fn new(columns: Vec<ColumnSpec>, num_classes: u32) -> Self {
         assert!(num_classes >= 2, "need at least two classes");
         assert!(!columns.is_empty(), "schema needs at least one feature");

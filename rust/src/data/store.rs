@@ -1,5 +1,5 @@
 //! The data plane: the [`ColumnStore`] abstraction every splitter scan
-//! runs on, its three backends, and on-disk dataset persistence.
+//! runs on, its backends, and on-disk dataset persistence.
 //!
 //! DRF's contract with its storage is narrow (paper §2): a worker reads
 //! its assigned columns **sequentially**, never writes after the
@@ -19,18 +19,23 @@
 //!   stopped at any chunk boundary without reading the tail;
 //! * [`crate::data::mmap::MmapStore`] — DRFC files memory-mapped once,
 //!   scans borrow chunk slices straight from the mapping (zero
-//!   syscalls, zero copies after the first-touch pass).
+//!   syscalls, zero copies after the first-touch pass);
+//! * [`crate::data::remote::RemoteStore`] — DRFC files on a
+//!   `drf objstore`, scanned by chunk-aligned byte-range reads over
+//!   the wire (checksummed complete passes, bounded-backoff retry,
+//!   chunk-boundary resume).
 //!
-//! The disk backends optionally run each scan as a **double-buffered
-//! prefetch pipeline** ([`DiskStore::with_prefetch`]): a background
-//! reader decodes chunk `N+1` while the visitor consumes chunk `N`,
-//! bounded by `TrainConfig::prefetch_chunks`. Delivery order is
-//! unchanged, so prefetching is invisible to results, and completed
-//! passes charge exactly what synchronous passes charge.
+//! The streaming backends (disk reads and remote range reads)
+//! optionally run each scan as a **double-buffered prefetch pipeline**
+//! ([`DiskStore::with_prefetch`]): a background reader decodes (or
+//! fetches) chunk `N+1` while the visitor consumes chunk `N`, bounded
+//! by `TrainConfig::prefetch_chunks`. Delivery order is unchanged, so
+//! prefetching is invisible to results, and completed passes charge
+//! exactly what synchronous passes charge.
 //!
 //! Because the scan algorithms (Alg. 1 supersplit search, condition
 //! evaluation, SPRINT pruning) are pure left-to-right folds, chunk
-//! boundaries cannot change any result: all three backends produce
+//! boundaries cannot change any result: all backends produce
 //! bit-identical trees (asserted by `tests/storage_backends.rs`).
 //!
 //! [`run_scans`] is the intra-splitter parallelism substrate: a scoped
@@ -67,11 +72,14 @@ use std::sync::Arc;
 /// One borrowed chunk of a raw (row-order) column.
 #[derive(Debug, Clone, Copy)]
 pub enum RawChunk<'a> {
+    /// Chunk of a numerical column.
     Numerical(&'a [f32]),
+    /// Chunk of a categorical column.
     Categorical(&'a [u32]),
 }
 
 impl<'a> RawChunk<'a> {
+    /// Records in the chunk.
     pub fn len(&self) -> usize {
         match self {
             RawChunk::Numerical(v) => v.len(),
@@ -79,6 +87,7 @@ impl<'a> RawChunk<'a> {
         }
     }
 
+    /// Whether the chunk holds no records.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
@@ -89,6 +98,38 @@ impl<'a> RawChunk<'a> {
 /// chunks strictly in order and cover every record exactly once per
 /// scan; chunk sizes are an implementation detail (the fold-style scan
 /// algorithms are invariant to them).
+///
+/// # Examples
+///
+/// A scan is a left-to-right fold over ordered chunks; the visitor
+/// sees every row exactly once, whatever the backend:
+///
+/// ```
+/// use drf::data::synthetic::{Family, SyntheticSpec};
+/// use drf::data::{ColumnStore, MemStore, RawChunk};
+///
+/// let ds = SyntheticSpec::new(Family::Xor { informative: 2 }, 100, 4, 7).generate();
+/// let store = MemStore::build(&ds, &[0, 2]); // this splitter owns columns 0 and 2
+///
+/// let mut rows_seen = 0;
+/// store.scan_raw(0, &mut |base_row, chunk: RawChunk<'_>| {
+///     assert_eq!(base_row, rows_seen); // chunks arrive strictly in row order
+///     rows_seen += chunk.len();
+///     Ok(())
+/// })?;
+/// assert_eq!(rows_seen, ds.num_rows());
+///
+/// // Presorted scans feed Alg. 1's q(j): values ascending.
+/// let mut last = f32::NEG_INFINITY;
+/// store.scan_sorted(0, &mut |entries| {
+///     for e in entries {
+///         assert!(e.value >= last);
+///         last = e.value;
+///     }
+///     Ok(())
+/// })?;
+/// # Ok::<(), anyhow::Error>(())
+/// ```
 pub trait ColumnStore: Send + Sync {
     /// Column indices this store holds, ascending.
     fn columns(&self) -> Vec<usize>;
@@ -295,8 +336,11 @@ impl ColumnStore for MemStore {
 /// Paths of one on-disk column.
 #[derive(Debug, Clone)]
 pub struct ColumnFiles {
+    /// The raw (row-order) column file.
     pub raw: PathBuf,
+    /// The presorted file (numerical columns only).
     pub sorted: Option<PathBuf>,
+    /// Declared column type (validated against the file headers).
     pub ctype: ColumnType,
 }
 
@@ -717,27 +761,39 @@ pub fn schema_from_json(v: &Json) -> Result<(Schema, usize)> {
     Ok((Schema::new(columns, num_classes), rows))
 }
 
-/// Persist a dataset (including presorted numerical columns).
+/// Persist a dataset (including presorted numerical columns) as DRFC
+/// v1 files. See [`save_dataset_with`] to pick the layout.
 pub fn save_dataset(ds: &Dataset, dir: &Path, stats: IoStats) -> Result<()> {
+    save_dataset_with(ds, dir, Layout::V1, stats)
+}
+
+/// Persist a dataset in the chosen DRFC `layout`. The chunk-tabled v2
+/// layout (`Layout::V2`) is what remote serving wants: a
+/// [`crate::data::remote::RemoteStore`] maps its chunk-aligned range
+/// reads — and its resumable passes — directly onto the written chunk
+/// table, so `drf generate --chunk-rows N` + `drf objstore --dir` is a
+/// servable object store with no extra preparation.
+pub fn save_dataset_with(ds: &Dataset, dir: &Path, layout: Layout, stats: IoStats) -> Result<()> {
     std::fs::create_dir_all(dir)?;
     std::fs::write(
         dir.join("schema.json"),
         schema_to_json(ds.schema(), ds.num_rows()).to_string(),
     )?;
-    disk::write_categorical_raw(&dir.join("labels.drfc"), ds.labels(), stats.clone())?;
+    disk::write_categorical_with(&dir.join("labels.drfc"), ds.labels(), layout, stats.clone())?;
     for (j, col) in ds.columns().iter().enumerate() {
         let raw = dir.join(format!("col_{j}.drfc"));
         match col {
             Column::Numerical(vals) => {
-                disk::write_numerical(&raw, vals, stats.clone())?;
-                disk::write_sorted(
+                disk::write_numerical_with(&raw, vals, layout, stats.clone())?;
+                disk::write_sorted_with(
                     &dir.join(format!("col_{j}.sorted.drfc")),
                     &col.presort(),
+                    layout,
                     stats.clone(),
                 )?;
             }
             Column::Categorical { values, .. } => {
-                disk::write_categorical(&raw, values, stats.clone())?;
+                disk::write_categorical_with(&raw, values, layout, stats.clone())?;
             }
         }
     }

@@ -40,6 +40,7 @@ pub enum Family {
 }
 
 impl Family {
+    /// Number of informative features of the family.
     pub fn informative(&self) -> usize {
         match *self {
             Family::Xor { informative }
@@ -49,6 +50,7 @@ impl Family {
         }
     }
 
+    /// Short family name (CLI `--family` spelling).
     pub fn name(&self) -> &'static str {
         match self {
             Family::Xor { .. } => "xor",
@@ -66,6 +68,7 @@ impl Family {
 /// Specification of a synthetic dataset.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct SyntheticSpec {
+    /// Ground-truth family.
     pub family: Family,
     /// Number of rows (paper's `n`).
     pub rows: usize,
@@ -80,6 +83,7 @@ pub struct SyntheticSpec {
 }
 
 impl SyntheticSpec {
+    /// Spec with no label noise (see [`Self::with_label_noise`]).
     pub fn new(family: Family, rows: usize, features: usize, seed: u64) -> Self {
         assert!(
             features >= family.informative(),
@@ -96,6 +100,7 @@ impl SyntheticSpec {
         }
     }
 
+    /// Flip each label with probability `p`.
     pub fn with_label_noise(mut self, p: f64) -> Self {
         assert!((0.0..=1.0).contains(&p));
         self.label_noise = p;
@@ -191,13 +196,16 @@ impl SyntheticSpec {
 /// Specification of the Leo-like dataset (paper §5 stand-in).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct LeoLikeSpec {
+    /// Number of rows to materialize.
     pub rows: usize,
+    /// Generation seed.
     pub seed: u64,
 }
 
 impl LeoLikeSpec {
-    /// Paper schema: 3 numerical + 69 categorical features.
+    /// Paper schema: 3 numerical features…
     pub const NUM_NUMERICAL: usize = 3;
+    /// …plus 69 categorical features.
     pub const NUM_CATEGORICAL: usize = 69;
     /// Categorical features that carry signal — spread across the arity
     /// range (2 .. 10'000), because in real high-arity data (ids,
@@ -206,6 +214,7 @@ impl LeoLikeSpec {
     /// memorizable noise.
     pub const INFORMATIVE_CATS: [usize; 8] = [0, 1, 2, 3, 20, 35, 50, 65];
 
+    /// Spec for `rows` rows generated from `seed`.
     pub fn new(rows: usize, seed: u64) -> Self {
         Self { rows, seed }
     }

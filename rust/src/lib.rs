@@ -19,12 +19,16 @@
 //!
 //! ## Data plane
 //!
+//! (See `ARCHITECTURE.md` at the repository root for the four-plane
+//! map — data / cluster / serve / bench — and the dataflow of one
+//! cluster training round.)
+//!
 //! All splitter dataset access goes through the
 //! [`data::store::ColumnStore`] trait: **chunk-granular sequential
 //! scans** (a visitor is fed bounded, ordered slices of a column), the
 //! narrowest interface that still covers every scan site — Alg. 1
 //! supersplit search, condition evaluation, root statistics, and the
-//! SPRINT pruning rebuild. Three backends implement it:
+//! SPRINT pruning rebuild. Five backends implement it:
 //!
 //! * [`data::store::MemStore`] — columns in RAM, zero-copy borrowed
 //!   chunks;
@@ -38,36 +42,65 @@
 //!   extra crates; buffered fallback elsewhere), scans borrow chunk
 //!   slices straight from the mapping. Headers and truncation are
 //!   validated at open; I/O is charged on the first-touch pass only —
-//!   warm re-scans cost zero syscalls and zero copies.
+//!   warm re-scans cost zero syscalls and zero copies;
+//! * [`data::remote::RemoteStore`] — the object-store backend
+//!   (`--storage remote`): every scan becomes **chunk-aligned
+//!   byte-range reads** against a [`data::objserve`] `drf objstore`
+//!   server, driven by the same v2 chunk table. Complete passes
+//!   re-fold the shard manifest's FNV-1a checksums over the fetched
+//!   bytes; transient fetch failures retry with bounded backoff and
+//!   **resume at the chunk boundary they had reached**; a background
+//!   fetcher optionally prefetches range reads. This is the paper's
+//!   actual deployment shape — shards on remote storage, streamed to
+//!   splitters that never hold a whole column file.
 //!
-//! The streaming disk backends optionally run each scan as a
-//! **double-buffered prefetch pipeline** (`TrainConfig::
-//! prefetch_chunks`): a background reader decodes chunk `N+1` while
-//! the visitor consumes chunk `N`; delivery stays strictly in order,
-//! so prefetching is deterministic by construction.
+//! The streaming backends (disk reads and remote range reads)
+//! optionally run each scan as a **double-buffered prefetch pipeline**
+//! (`TrainConfig::prefetch_chunks`): a background reader decodes (or
+//! fetches) chunk `N+1` while the visitor consumes chunk `N`; delivery
+//! stays strictly in order, so prefetching is deterministic by
+//! construction.
 //!
 //! Because every scan algorithm is a pure left-to-right fold, chunk
 //! boundaries — and therefore the backend — cannot change a single
 //! split decision: all backends produce bit-identical forests
 //! (`tests/storage_backends.rs` asserts the full backend ×
-//! `scan_threads` × `prefetch_chunks` matrix). On top of the store, a
-//! splitter owning `k` columns scans them concurrently on a scoped
-//! pool bounded by `TrainConfig::scan_threads`
+//! `scan_threads` × `prefetch_chunks` matrix, and drills the remote
+//! backend through a real objstore process crash + restart). On top of
+//! the store, a splitter owning `k` columns scans them concurrently on
+//! a scoped pool bounded by `TrainConfig::scan_threads`
 //! ([`data::store::run_scans`]); per-column results merge in
 //! deterministic column order, so the thread count is a pure
 //! wall-clock knob.
 //!
-//! **Adding a remote backend** (S3 / object store / network volume)
-//! stays a one-seam job: implement `ColumnStore::scan_raw`/
-//! `scan_sorted` over the remote medium (feed ordered chunks, charge
-//! `IoStats`; chunk-aligned range reads map naturally onto the DRFC
-//! v2 chunk table), add a `StorageMode` variant in `config`, wire it
-//! in `Manager::train`, and — for cluster deployments — swap it into
-//! `cluster::worker::load_shard`'s storage seam, where the shard
-//! manifest's per-column checksums validate remote fetches
-//! (`cluster::manifest::checksum_bytes` hashes in-memory/mapped bytes
-//! exactly like `checksum_file` hashes files). Nothing above the
-//! store changes; `MmapStore` is the worked example of the recipe.
+//! **Adding a storage backend** is a one-seam job, and the crate now
+//! contains two complete worked examples of the recipe —
+//! [`data::mmap`] (local, zero-copy) and [`data::remote`] +
+//! [`data::objserve`] (remote, streaming). The steps, each pointing at
+//! the shipped remote code:
+//!
+//! 1. implement [`data::store::ColumnStore`]'s `scan_raw`/`scan_sorted`
+//!    over your medium — feed ordered chunks, charge
+//!    [`data::io_stats::IoStats`] (`RemoteStore::scan_records` shows
+//!    the shape, including the optional prefetch pipeline and the
+//!    chunk-table-driven resume);
+//! 2. validate at open, not mid-scan — parse the DRFC header, check
+//!    truncation against the medium's own size
+//!    (`data::remote` `fetch_header` / [`data::disk::Header`]);
+//! 3. verify integrity against the shard manifest's checksums —
+//!    [`cluster::manifest::checksum_bytes`] one-shot for resident
+//!    bytes (mmap), [`cluster::manifest::checksum_update`] streaming
+//!    for bytes you never hold at once (remote);
+//! 4. add a [`config::StorageMode`] variant and wire it in
+//!    `Manager::train`'s storage match
+//!    ([`coordinator::splitter::remote_storage_for`] is the glue
+//!    helper);
+//! 5. for cluster deployments, give `cluster::worker` a loader that
+//!    builds your store from a [`cluster::ShardManifest`]
+//!    ([`cluster::load_shard_remote`] is the worked example) — nothing
+//!    above the store changes;
+//! 6. extend the `tests/storage_backends.rs` matrix with your backend:
+//!    bit-identity across the matrix is the acceptance bar.
 //!
 //! ## Cluster plane
 //!
@@ -81,10 +114,14 @@
 //!   [`cluster::ClusterManifest`] deployment map;
 //! * `drf worker --shard DIR --addr A:P` serves one pack over the
 //!   splitter wire protocol, loading it through the same
-//!   [`data::store::ColumnStore`] backends training uses in-process;
-//!   the leader's Hello handshake delivers the training configuration
-//!   and validates protocol version, shard id, column inventory, and
-//!   row count;
+//!   [`data::store::ColumnStore`] backends training uses in-process —
+//!   streaming, `--preload`ed zero-copy, or fetched from a
+//!   `drf objstore` with `--object-store HOST:PORT`
+//!   ([`cluster::load_shard_remote`]: manifest, labels, and every
+//!   training scan arrive by range reads, so the worker serves a shard
+//!   it never downloaded in full); the leader's Hello handshake
+//!   delivers the training configuration and validates protocol
+//!   version, shard id, column inventory, and row count;
 //! * `drf train --engine cluster --manifest cluster.json` puts a
 //!   [`cluster::ClusterPool`] (connect retry/timeout, reconnect on
 //!   drop) under the tree builders, wrapped in the generic
@@ -93,10 +130,10 @@
 //!   log. Trees are bit-identical to `--engine direct` by construction
 //!   and by end-to-end test (`tests/cluster.rs`).
 //!
-//! A remote/object-store shard source slots in underneath: implement
-//! `ColumnStore` over the remote medium (ordered chunks + `IoStats`),
-//! hand it to `cluster::worker::load_shard`'s storage seam, and
-//! nothing above the store changes.
+//! The remote shard source is exactly the promised one-seam change
+//! realized: [`data::remote::RemoteStore`] slots in underneath
+//! ([`cluster::load_shard_remote`]), and nothing above the store
+//! changed — see the data-plane recipe above and `ARCHITECTURE.md`.
 //!
 //! The numeric hot-spot — scoring all candidate thresholds of a
 //! presorted feature against cumulative label histograms (Alg. 1) — is

@@ -8,8 +8,12 @@
 //!                 columns) for later `--data` runs;
 //! * `shard`     — cut a dataset into per-splitter shard packs plus a
 //!                 cluster manifest (`drf::cluster`);
+//! * `objstore`  — serve byte ranges of a dataset/shard directory to
+//!                 remote-storage trainers and workers (`drf::data::objserve`);
 //! * `worker`    — serve one shard pack as a standalone splitter
 //!                 process (the leader's Hello handshake configures it);
+//!                 with `--object-store` the pack itself is fetched
+//!                 remotely and never downloaded in full;
 //! * `evaluate`  — score a saved forest on a freshly generated test set;
 //! * `importance`— print MDI feature importances of a saved forest;
 //! * `serve`     — serve a saved forest over TCP (flattened engine,
@@ -25,8 +29,14 @@
 //!     --trees 10 --depth 12 --out /tmp/forest.json
 //! drf train --family leo --rows 100000 --trees 3 --depth 20 \
 //!     --storage disk --report /tmp/report.json
+//! drf generate --family leo --rows 100000 --chunk-rows 65536 --out-dir /tmp/leo
+//! drf objstore --dir /tmp/leo --addr 0.0.0.0:9000
+//! drf train --family leo --rows 100000 --trees 3 \
+//!     --storage remote --object-store 127.0.0.1:9000
 //! drf shard --family leo --rows 100000 --splitters 4 --out-dir /tmp/shards
 //! drf worker --shard /tmp/shards/shard_0 --addr 0.0.0.0:7001
+//! drf objstore --dir /tmp/shards --addr 0.0.0.0:9000
+//! drf worker --shard shard_0 --object-store 127.0.0.1:9000 --addr 0.0.0.0:7001
 //! drf train --engine cluster --manifest /tmp/shards/cluster.json \
 //!     --workers host0:7001,host1:7001,host2:7001,host3:7001 \
 //!     --family leo --rows 100000 --trees 3
@@ -70,6 +80,7 @@ const TRAIN_FLAGS: &[&str] = &[
     "storage",
     "scan-threads",
     "prefetch-chunks",
+    "object-store",
     "engine",
     "scorer",
     "artifacts-dir",
@@ -94,6 +105,7 @@ fn run(argv: &[String]) -> Result<()> {
         "train" => cmd_train(&argv[1..]),
         "generate" => cmd_generate(&argv[1..]),
         "shard" => cmd_shard(&argv[1..]),
+        "objstore" => cmd_objstore(&argv[1..]),
         "worker" => cmd_worker(&argv[1..]),
         "evaluate" => cmd_evaluate(&argv[1..]),
         "importance" => cmd_importance(&argv[1..]),
@@ -117,7 +129,8 @@ USAGE:
             [--trees T] [--depth D] [--min-records R] [--candidates M']
             [--sampling per_node|per_depth|all] [--bagging poisson|none]
             [--splitters W] [--redundancy D] [--builders B]
-            [--latency-us U] [--storage memory|disk|disk_v2|mmap]
+            [--latency-us U] [--storage memory|disk|disk_v2|mmap|remote]
+            [--object-store HOST:PORT]
             [--scan-threads K] [--prefetch-chunks P]
             [--engine direct|threaded|tcp|cluster]
             [--manifest cluster.json] [--workers ADDR,ADDR,...]
@@ -125,12 +138,15 @@ USAGE:
             [--artifacts-dir DIR] [--config cfg.json]
             [--out forest.json] [--report report.json]
             [--csv file.csv [--label-column NAME]] [--data dataset-dir]
-  drf generate [--family ...] [--rows N] [--seed S] --out-dir DIR
+  drf generate [--family ...] [--rows N] [--seed S] [--chunk-rows C]
+               --out-dir DIR
   drf shard [--family ...|--csv ...|--data DIR] [--rows N] [--seed S]
             [--splitters W] [--redundancy D] [--chunk-rows C]
             [--workers ADDR,ADDR,...] --out-dir DIR
+  drf objstore --dir DIR [--addr HOST:PORT] [--fail-after N]
   drf worker --shard SHARD_DIR [--addr HOST:PORT] [--scan-threads K]
              [--prefetch-chunks P] [--preload] [--no-verify]
+             [--object-store HOST:PORT]
   drf evaluate --model forest.json [--family ...|--csv ...|--data DIR]
   drf importance --model forest.json [--features M]
   drf serve --model forest.json [--addr HOST:PORT]
@@ -147,8 +163,19 @@ Storage: `memory` holds shards in RAM; `disk`/`disk_v2` stream every
 pass from DRFC files through bounded buffers (`--prefetch-chunks P`
 lets a background reader decode P chunks ahead); `mmap` maps chunked
 DRFC v2 files once and scans borrow slices straight from the mapping
-(zero syscalls and copies after the first-touch pass). All modes
-produce bit-identical forests.
+(zero syscalls and copies after the first-touch pass); `remote` scans
+by chunk-aligned byte-range reads against a `drf objstore`
+(`--object-store HOST:PORT` serving a `drf generate` directory;
+without it the trainer self-hosts a loopback objstore —
+`--prefetch-chunks` pipelines the range reads, transient fetch
+failures retry with backoff and resume at chunk boundaries). All
+modes produce bit-identical forests.
+
+Object store: `drf objstore --dir DIR` serves byte ranges of the DRFC
+files under DIR (a `drf generate` dataset directory or a `drf shard`
+output tree) on `--addr` (default 127.0.0.1:0, ephemeral, printed on
+the ready line). `--fail-after N` makes it exit right before the Nth
+range read — crash-simulation for retry/resume tests and drills.
 
 Cluster training: `drf shard` cuts the dataset into per-splitter shard
 packs (presorted DRFC v2 columns + checksummed manifests) plus a
@@ -157,7 +184,11 @@ process (`--addr host:0` picks an ephemeral port and prints it;
 `--preload` memory-maps the pack and serves it zero-copy, with
 manifest checksums verified against the mapped bytes; `--no-verify`
 skips the checksums in either mode — header validation still runs;
-`--prefetch-chunks` applies to the streaming mode);
+`--prefetch-chunks` applies to the streaming mode; with
+`--object-store HOST:PORT` the worker fetches the pack — manifest,
+labels, and every training scan — from a `drf objstore` serving the
+shard tree, `--shard` naming the pack's directory under it, e.g.
+shard_0, so the worker serves a shard it never downloaded in full);
 `drf train --engine cluster --manifest cluster.json` connects to the
 fleet (addresses from the manifest or --workers, comma-separated, in
 shard order), validates it via the Hello handshake, and recovers
@@ -241,11 +272,15 @@ fn cmd_train(argv: &[String]) -> Result<()> {
             "disk" => StorageMode::Disk,
             "disk_v2" => StorageMode::DiskV2,
             "mmap" => StorageMode::Mmap,
-            _ => bail!("storage must be memory|disk|disk_v2|mmap"),
+            "remote" => StorageMode::Remote,
+            _ => bail!("storage must be memory|disk|disk_v2|mmap|remote"),
         };
     }
     cfg.scan_threads = args.get_usize("scan-threads", cfg.scan_threads)?;
     cfg.prefetch_chunks = args.get_usize("prefetch-chunks", cfg.prefetch_chunks)?;
+    if let Some(v) = args.get("object-store") {
+        cfg.object_store = Some(v.to_string());
+    }
     if let Some(v) = args.get("engine") {
         cfg.engine = match v {
             "direct" => Engine::Direct,
@@ -420,6 +455,38 @@ fn cmd_shard(argv: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// `drf objstore --dir DIR [--addr HOST:PORT] [--fail-after N]`: serve
+/// byte ranges of DIR until killed (or until the `--fail-after`
+/// crash-simulation limit fires, which exits the process).
+fn cmd_objstore(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv, &["dir", "addr", "fail-after"])?;
+    let dir = args.require("dir")?;
+    let addr = args.get_string("addr", "127.0.0.1:0");
+    let opts = drf::data::objserve::ObjStoreOptions {
+        fail_after_reads: match args.get("fail-after") {
+            Some(v) => Some(v.parse()?),
+            None => None,
+        },
+        exit_process_on_limit: true,
+    };
+    let server = drf::data::objserve::ObjStoreServer::spawn(
+        std::path::Path::new(dir),
+        &addr,
+        drf::data::io_stats::IoStats::new(),
+        opts,
+    )?;
+    println!("drf objstore: serving {dir} on {}", server.addr());
+    // Flush explicitly: a piped stdout (the smoke tests, a process
+    // supervisor) is block-buffered and would otherwise hold the ready
+    // line back indefinitely.
+    std::io::Write::flush(&mut std::io::stdout())?;
+    // Serve until killed; requests are handled by the server's
+    // accept/connection threads.
+    loop {
+        std::thread::park();
+    }
+}
+
 fn cmd_worker(argv: &[String]) -> Result<()> {
     let args = Args::parse(
         argv,
@@ -428,6 +495,7 @@ fn cmd_worker(argv: &[String]) -> Result<()> {
             "addr",
             "scan-threads",
             "prefetch-chunks",
+            "object-store",
             "!preload",
             "!no-verify",
         ],
@@ -440,7 +508,18 @@ fn cmd_worker(argv: &[String]) -> Result<()> {
         verify: !args.get_bool("no-verify"),
         prefetch_chunks: args.get_usize("prefetch-chunks", 0)?,
     };
-    let shard = drf::cluster::load_shard(std::path::Path::new(dir), &opts)?;
+    let (shard, mode) = match args.get("object-store") {
+        // Remote pack: `--shard` names the pack's directory under the
+        // objstore root (e.g. shard_0); nothing is downloaded in full.
+        Some(objstore) => (
+            drf::cluster::load_shard_remote(objstore, dir, &opts)?,
+            format!("remote:{objstore}"),
+        ),
+        None => (
+            drf::cluster::load_shard(std::path::Path::new(dir), &opts)?,
+            if opts.preload { "mmapped".into() } else { "streaming".into() },
+        ),
+    };
     let (id, cols, rows) = (
         shard.manifest.shard,
         shard.manifest.columns.len(),
@@ -448,8 +527,7 @@ fn cmd_worker(argv: &[String]) -> Result<()> {
     );
     let server = drf::cluster::WorkerServer::spawn(shard, &addr, opts.scan_threads)?;
     println!(
-        "drf worker: shard {id} ({cols} columns x {rows} rows, {}) listening on {}",
-        if opts.preload { "mmapped" } else { "streaming" },
+        "drf worker: shard {id} ({cols} columns x {rows} rows, {mode}) listening on {}",
         server.addr(),
     );
     // Flush explicitly: a piped stdout (the cluster smoke test, a
@@ -465,13 +543,20 @@ fn cmd_worker(argv: &[String]) -> Result<()> {
 
 fn cmd_generate(argv: &[String]) -> Result<()> {
     let mut flags = TRAIN_FLAGS.to_vec();
-    flags.push("out-dir");
+    flags.extend(["out-dir", "chunk-rows"]);
     let args = Args::parse(argv, &flags)?;
     let out = args.get("out-dir").context("--out-dir is required")?;
     let (ds, family) = dataset_from_args(&args)?;
-    drf::data::store::save_dataset(
+    // --chunk-rows C writes the chunk-tabled DRFC v2 layout — the one
+    // `drf objstore` + `--storage remote` range reads map onto.
+    let layout = match args.get("chunk-rows") {
+        Some(v) => drf::data::disk::Layout::V2 { chunk_rows: v.parse()? },
+        None => drf::data::disk::Layout::V1,
+    };
+    drf::data::store::save_dataset_with(
         &ds,
         std::path::Path::new(out),
+        layout,
         drf::data::io_stats::IoStats::new(),
     )?;
     println!(

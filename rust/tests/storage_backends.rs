@@ -1,11 +1,15 @@
 //! The ColumnStore data-plane contract: every storage backend
-//! (Memory, DRFC v1 disk, chunked DRFC v2 disk, mmap) × every
-//! `scan_threads` setting × every `prefetch_chunks` depth produces
-//! **bit-identical forests**, and within a backend the `IoStats`
-//! byte/pass accounting is invariant to the thread count and prefetch
-//! depth (parallel and pipelined scans charge exactly what sequential
-//! scans charge). Also home of the mmap open-rejection matrix
-//! (truncated files, forged headers and chunk tables).
+//! (Memory, DRFC v1 disk, chunked DRFC v2 disk, mmap, remote
+//! object-store) × every `scan_threads` setting × every
+//! `prefetch_chunks` depth produces **bit-identical forests**, and
+//! within a backend the `IoStats` byte/pass accounting is invariant to
+//! the thread count and prefetch depth (parallel and pipelined scans
+//! charge exactly what sequential scans charge). Also home of the mmap
+//! open-rejection matrix (truncated files, forged headers and chunk
+//! tables) and of the remote-backend crash drill: training through a
+//! real `drf objstore` OS process that dies mid-pass and is restarted
+//! must retry, resume at the chunk boundary, and still produce the
+//! `--storage mmap` forest bit for bit.
 
 use drf::config::{ForestParams, PruneMode, StorageMode, TrainConfig};
 use drf::data::synthetic::{Family, LeoLikeSpec, SyntheticSpec};
@@ -15,11 +19,14 @@ use drf::rng::BaggingMode;
 use drf::tree::Tree;
 use drf::util::proptest::run_cases;
 
-const BACKENDS: [StorageMode; 4] = [
+const BACKENDS: [StorageMode; 5] = [
     StorageMode::Memory,
     StorageMode::Disk,
     StorageMode::DiskV2,
     StorageMode::Mmap,
+    // Loopback mode: the manager spills v2 files and self-hosts an
+    // objstore; every scan still crosses a real TCP socket.
+    StorageMode::Remote,
 ];
 
 fn config(storage: StorageMode, scan_threads: usize, splitters: usize, seed: u64) -> TrainConfig {
@@ -41,11 +48,12 @@ fn config(storage: StorageMode, scan_threads: usize, splitters: usize, seed: u64
 }
 
 /// Prefetch depths worth exercising for a backend: prefetching only
-/// exists on the streaming disk scans (Memory and Mmap scans never
-/// copy, so there is nothing to pipeline).
+/// exists on the streaming scans — disk reads and remote range reads
+/// (Memory and Mmap scans never copy, so there is nothing to
+/// pipeline).
 fn prefetch_depths(storage: StorageMode) -> &'static [usize] {
     match storage {
-        StorageMode::Disk | StorageMode::DiskV2 => &[0, 2],
+        StorageMode::Disk | StorageMode::DiskV2 | StorageMode::Remote => &[0, 2],
         StorageMode::Memory | StorageMode::Mmap => &[0],
     }
 }
@@ -198,6 +206,126 @@ fn mmap_open_rejections() {
         b[20..24].copy_from_slice(&u32::MAX.to_le_bytes());
     });
     assert!(open(p, ColumnType::Numerical).is_err());
+}
+
+/// Spawn a real `drf objstore` OS process over `dir` and parse the
+/// bound address from its ready line. `extra` appends flags
+/// (`--fail-after N`); `addr` pins the listen address (empty =
+/// ephemeral). Returns `None` if the process failed to come up (e.g. a
+/// bind race on a pinned address) — the caller retries.
+fn try_spawn_objstore(
+    dir: &std::path::Path,
+    addr: &str,
+    extra: &[&str],
+) -> Option<(std::process::Child, String)> {
+    use std::io::BufRead;
+    let bind = if addr.is_empty() { "127.0.0.1:0" } else { addr };
+    let mut child = std::process::Command::new(env!("CARGO_BIN_EXE_drf"))
+        .args(["objstore", "--dir", dir.to_str().unwrap(), "--addr", bind])
+        .args(extra)
+        .stdout(std::process::Stdio::piped())
+        .stderr(std::process::Stdio::null())
+        .spawn()
+        .expect("spawning drf objstore");
+    let stdout = child.stdout.take().expect("objstore stdout piped");
+    let mut line = String::new();
+    std::io::BufReader::new(stdout)
+        .read_line(&mut line)
+        .expect("reading objstore ready line");
+    if !line.contains("serving") {
+        let _ = child.kill();
+        let _ = child.wait();
+        return None;
+    }
+    let bound = line.trim().rsplit(' ').next().expect("address token").to_string();
+    Some((child, bound))
+}
+
+/// The acceptance drill: train `--storage remote` through a real
+/// `drf objstore` process that **exits mid-pass** (`--fail-after`) and
+/// is restarted on the same address by a supervisor thread. The
+/// client's bounded-backoff retry reconnects and resumes the
+/// interrupted pass at the chunk boundary it had reached; the forest
+/// must still be bit-identical to `--storage mmap`.
+#[test]
+fn remote_training_through_real_objstore_survives_crash_and_restart() {
+    use drf::data::io_stats::IoStats;
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::{Arc, Mutex};
+
+    let ds = SyntheticSpec::new(Family::Majority { informative: 3 }, 500, 6, 21).generate();
+    let dir = drf::util::tempdir().unwrap();
+    // Small chunks so every pass is many range reads (the interruption
+    // lands mid-column, between chunk boundaries of the v2 table).
+    drf::data::store::save_dataset_with(
+        &ds,
+        dir.path(),
+        drf::data::disk::Layout::V2 { chunk_rows: 64 },
+        IoStats::new(),
+    )
+    .unwrap();
+
+    // Reference forest from the mmap backend.
+    let (reference, _) =
+        RandomForest::train_with_config(&ds, &config(StorageMode::Mmap, 1, 2, 77)).unwrap();
+
+    // An objstore that dies right before its 40th range read — past
+    // the header fetches, in the middle of an early training pass.
+    let (victim, addr) =
+        try_spawn_objstore(dir.path(), "", &["--fail-after", "40"]).expect("first objstore up");
+    let replacement: Arc<Mutex<Option<std::process::Child>>> = Arc::new(Mutex::new(None));
+    let restarted = Arc::new(AtomicBool::new(false));
+
+    // The supervisor: wait for the crash, restart on the SAME address
+    // (retrying the bind — the dead listener's socket may linger for a
+    // moment) so the training client's retry loop finds it again.
+    let supervisor = {
+        let (replacement, restarted, addr, dir) = (
+            replacement.clone(),
+            restarted.clone(),
+            addr.clone(),
+            dir.path().to_path_buf(),
+        );
+        let mut victim = victim;
+        std::thread::spawn(move || {
+            let status = victim.wait().expect("waiting for objstore crash");
+            assert!(status.success(), "--fail-after exits cleanly, got {status}");
+            for _ in 0..100 {
+                if let Some((child, _)) = try_spawn_objstore(&dir, &addr, &[]) {
+                    *replacement.lock().unwrap() = Some(child);
+                    restarted.store(true, Ordering::SeqCst);
+                    return;
+                }
+                std::thread::sleep(std::time::Duration::from_millis(50));
+            }
+            panic!("objstore could not be restarted on {addr}");
+        })
+    };
+
+    // Train through the dying-and-restarted store. The prefetch
+    // pipeline is on, so the crash also exercises the background
+    // fetcher's error path.
+    let mut cfg = config(StorageMode::Remote, 1, 2, 77);
+    cfg.prefetch_chunks = 2;
+    cfg.object_store = Some(addr);
+    let (remote, report) = RandomForest::train_with_config(&ds, &cfg).unwrap();
+
+    supervisor.join().expect("supervisor thread");
+    assert!(
+        restarted.load(Ordering::SeqCst),
+        "the objstore crash must actually have fired mid-training"
+    );
+    assert_eq!(
+        reference.trees, remote.trees,
+        "a mid-pass objstore crash + restart must not change the forest"
+    );
+    let net: u64 = report.splitter_io.iter().map(|s| s.net_bytes).sum();
+    assert!(net > 0, "remote scans must have crossed the wire");
+
+    if let Some(mut child) = replacement.lock().unwrap().take() {
+        let _ = child.kill();
+        let _ = child.wait();
+    }
 }
 
 #[test]
