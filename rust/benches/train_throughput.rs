@@ -23,7 +23,10 @@
 //! Exactness first: before timing, every configuration's forest is
 //! checked bit-identical to the reference. Results go to
 //! `BENCH_train.json` in the working directory; `DRF_BENCH_SMOKE=1`
-//! shrinks the inputs for CI.
+//! shrinks the inputs for CI. Each configuration also reports where
+//! the forest time went — per-phase scan/eval/update seconds read
+//! from the telemetry span histograms (`drf_phase_us`), so a
+//! regression in one phase is visible without re-profiling.
 
 use drf::config::{ForestParams, StorageMode, TrainConfig};
 use drf::data::synthetic::{Family, SyntheticSpec};
@@ -101,6 +104,7 @@ fn main() {
         "scan_threads",
         "prefetch",
         "time / forest",
+        "scan/eval/update",
         "rows/s",
         "speedup",
         "net bytes",
@@ -138,9 +142,27 @@ fn main() {
                         .iter()
                         .map(|s| s.net_bytes)
                         .sum();
+                    // Per-phase wall time from the telemetry spans: the
+                    // phase histograms are process-cumulative, so the
+                    // delta across the bench loop divided by the number
+                    // of trainings (1 warmup + iters measured) is the
+                    // per-forest cost of each level phase.
+                    let phases = ["level_scan", "level_eval", "level_update"];
+                    let before: Vec<f64> = phases
+                        .iter()
+                        .map(|p| drf::telemetry::phase_seconds(p))
+                        .collect();
                     let t = bench(3, 12.0, || {
                         std::hint::black_box(RandomForest::train_with_config(ds, &cfg).unwrap());
                     });
+                    let runs = (t.iters + 1) as f64;
+                    let per_forest: Vec<f64> = phases
+                        .iter()
+                        .zip(&before)
+                        .map(|(p, b)| (drf::telemetry::phase_seconds(p) - b) / runs)
+                        .collect();
+                    let (scan_s, eval_s, update_s) =
+                        (per_forest[0], per_forest[1], per_forest[2]);
                     // Throughput: training rows processed per wall
                     // second (rows × trees / forest time).
                     let rps = (rows * TREES) as f64 / t.mean_s;
@@ -171,6 +193,7 @@ fn main() {
                         format!("{threads}"),
                         format!("{prefetch}"),
                         t.per_iter_label(),
+                        format!("{:.0}/{:.0}/{:.0}ms", scan_s * 1e3, eval_s * 1e3, update_s * 1e3),
                         fmt_count(rps),
                         format!("{speedup:.2}x"),
                         fmt_count(storage_net as f64),
@@ -182,6 +205,9 @@ fn main() {
                         .set("seconds_per_forest", Json::Num(t.mean_s))
                         .set("rows_per_s", Json::Num(rps))
                         .set("speedup_vs_serial", Json::Num(speedup))
+                        .set("scan_s_per_forest", Json::Num(scan_s))
+                        .set("eval_s_per_forest", Json::Num(eval_s))
+                        .set("update_s_per_forest", Json::Num(update_s))
                         .set("net_bytes", Json::from_u64(storage_net));
                     results.push(r);
                 }

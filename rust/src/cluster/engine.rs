@@ -151,6 +151,9 @@ impl ClusterPool {
             let conn = pool.open_conn(s)?;
             *pool.slots[s].conn.lock().unwrap() = Some(conn);
         }
+        // Leader-side network totals, visible on the leader's /metrics.
+        crate::telemetry::register_io_gauges("drf_cluster_net", &pool.net);
+        crate::telemetry::gauge("drf_cluster_workers").set(pool.slots.len() as u64);
         Ok(pool)
     }
 
@@ -251,6 +254,7 @@ impl ClusterPool {
     /// One serialized request/response round trip with transparent
     /// reconnect-and-retry on connection loss.
     fn call(&self, s: usize, req: &Request) -> Result<Response> {
+        let rpc_start = std::time::Instant::now();
         let slot = &self.slots[s];
         let mut guard = slot.conn.lock().unwrap();
         if guard.is_none() {
@@ -278,6 +282,10 @@ impl ClusterPool {
         };
         self.net.add_net(body.len() as u64 + 4);
         self.net.add_net(frame.len() as u64 + 4);
+        // Per-worker RPC latency, reconnect time included: a slow or
+        // flapping worker shows up in its own series.
+        crate::telemetry::histogram_with("drf_cluster_rpc_us", &[("worker", &s.to_string())])
+            .observe(rpc_start.elapsed().as_micros() as u64);
         let resp = decode_response(&frame)?;
         if let Response::Err(msg) = &resp {
             bail!("{msg}");
@@ -324,11 +332,26 @@ impl SplitterPool for ClusterPool {
     }
 
     fn broadcast_level_update(&self, u: &LevelUpdate) -> Result<()> {
+        let net_before = self.net.snapshot();
+        let mut min_us = u64::MAX;
+        let mut max_us = 0u64;
         for s in 0..self.slots.len() {
+            let start = std::time::Instant::now();
             self.apply_level_update_on(s, u)?;
+            let us = start.elapsed().as_micros() as u64;
+            min_us = min_us.min(us);
+            max_us = max_us.max(us);
         }
         // Bytes/messages were charged per peer; count the event.
         self.net.add_broadcast_event();
+        // Per-round telemetry: broadcast volume and the straggler gap
+        // (slowest minus fastest worker in this round's update fan-out).
+        let round_bytes = self.net.snapshot().delta_since(&net_before).net_bytes;
+        crate::telemetry::counter("drf_cluster_rounds_total").inc();
+        crate::telemetry::histogram("drf_cluster_round_bytes").observe(round_bytes);
+        if max_us >= min_us {
+            crate::telemetry::histogram("drf_cluster_straggler_gap_us").observe(max_us - min_us);
+        }
         Ok(())
     }
 

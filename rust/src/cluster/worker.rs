@@ -400,6 +400,11 @@ impl WorkerServer {
         let listener =
             TcpListener::bind(addr).with_context(|| format!("binding worker to {addr}"))?;
         let addr = listener.local_addr()?;
+        // The shard's IoStats is shared with every store scan; mirror
+        // it into the registry so `--metrics-addr` scrapes see the
+        // worker's disk/net totals move mid-train.
+        crate::telemetry::register_io_gauges("drf_worker_io", &shard.stats);
+        crate::telemetry::gauge("drf_worker_shard").set(shard.manifest.shard as u64);
         let state = Arc::new(WorkerState {
             shard,
             scan_threads,

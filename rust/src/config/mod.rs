@@ -249,6 +249,13 @@ pub struct TrainConfig {
     /// Worker addresses (`host:port`, one per shard in shard order).
     /// Empty = use the addresses recorded in the cluster manifest.
     pub cluster_workers: Vec<String>,
+    /// Serve `GET /metrics` (the [`crate::telemetry`] registry) on this
+    /// address for the duration of the run (`--metrics-addr HOST:PORT`;
+    /// `HOST:0` picks an ephemeral port). `None` = no listener.
+    pub metrics_addr: Option<String>,
+    /// Stream phase-tracing span events as JSONL to this file
+    /// (`--trace-out PATH`). `None` = tracing off.
+    pub trace_out: Option<std::path::PathBuf>,
 }
 
 impl Default for TrainConfig {
@@ -266,6 +273,8 @@ impl Default for TrainConfig {
             artifacts_dir: None,
             cluster_manifest: None,
             cluster_workers: Vec::new(),
+            metrics_addr: None,
+            trace_out: None,
         }
     }
 }
@@ -397,6 +406,20 @@ impl TrainConfig {
                         .map(|w| Json::Str(w.clone()))
                         .collect(),
                 ),
+            )
+            .set(
+                "metrics_addr",
+                match &self.metrics_addr {
+                    Some(a) => Json::Str(a.clone()),
+                    None => Json::Null,
+                },
+            )
+            .set(
+                "trace_out",
+                match &self.trace_out {
+                    Some(p) => Json::Str(p.display().to_string()),
+                    None => Json::Null,
+                },
             );
         o
     }
@@ -516,6 +539,18 @@ impl TrainConfig {
                 .map(|w| Ok(w.as_str()?.to_string()))
                 .collect::<crate::Result<Vec<_>>>()?;
         }
+        if let Some(x) = v.get_opt("metrics_addr") {
+            cfg.metrics_addr = match x {
+                Json::Null => None,
+                other => Some(other.as_str()?.to_string()),
+            };
+        }
+        if let Some(x) = v.get_opt("trace_out") {
+            cfg.trace_out = match x {
+                Json::Null => None,
+                other => Some(std::path::PathBuf::from(other.as_str()?)),
+            };
+        }
         cfg.validate()?;
         Ok(cfg)
     }
@@ -573,6 +608,11 @@ mod tests {
         cfg.engine = Engine::Cluster;
         cfg.cluster_manifest = Some(std::path::PathBuf::from("/tmp/cluster.json"));
         cfg.cluster_workers = vec!["10.0.0.1:7777".into(), "10.0.0.2:7777".into()];
+        let back = TrainConfig::from_json(&cfg.to_json().to_string()).unwrap();
+        assert_eq!(cfg, back);
+        // Telemetry knobs roundtrip too (both set and unset).
+        cfg.metrics_addr = Some("127.0.0.1:9105".into());
+        cfg.trace_out = Some(std::path::PathBuf::from("/tmp/trace.jsonl"));
         let back = TrainConfig::from_json(&cfg.to_json().to_string()).unwrap();
         assert_eq!(cfg, back);
     }

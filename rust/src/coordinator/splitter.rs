@@ -273,6 +273,7 @@ impl SplitterCore {
     /// [`pick_best`] in assigned-column order, so the result is
     /// identical to a fully sequential pass.
     pub fn find_splits(&self, q: &SupersplitQuery) -> Result<PartialSupersplit> {
+        let _span = crate::span!("find_splits", tree = q.tree, depth = q.depth);
         let trees = self.trees.lock().unwrap();
         let state = trees
             .get(&q.tree)
@@ -311,6 +312,11 @@ impl SplitterCore {
                 mask.iter().any(|&b| b).then_some((j, mask))
             })
             .collect();
+
+        // Row throughput accounting: each job is one full-column pass.
+        crate::telemetry::counter("drf_splitter_rows_scanned_total")
+            .add(jobs.len() as u64 * self.num_rows() as u64);
+        crate::telemetry::counter("drf_splitter_column_passes_total").add(jobs.len() as u64);
 
         let per_column = store::run_scans(self.cfg.scan_threads, jobs.len(), |k| {
             let (j, mask) = &jobs[k];
@@ -430,6 +436,7 @@ impl SplitterCore {
     /// Distinct features own disjoint condition slots, so the passes
     /// run in parallel up to `scan_threads`.
     pub fn eval_conditions(&self, q: &EvalQuery) -> Result<EvalResult> {
+        let _span = crate::span!("eval_conditions", tree = q.tree, depth = q.depth);
         let trees = self.trees.lock().unwrap();
         let state = trees
             .get(&q.tree)
@@ -448,6 +455,7 @@ impl SplitterCore {
             by_feature.entry(cond.feature()).or_default().push(slot);
         }
         let groups: Vec<(usize, Vec<usize>)> = by_feature.into_iter().collect();
+        crate::telemetry::counter("drf_splitter_eval_passes_total").add(groups.len() as u64);
 
         let results = store::run_scans(self.cfg.scan_threads, groups.len(), |g| {
             let (feature, slots) = &groups[g];

@@ -40,6 +40,13 @@ pub struct LevelStats {
     pub net_bytes: u64,
     /// Bagged sample weight still in open leaves entering this level.
     pub open_weight: u64,
+    /// Seconds in the supersplit-query round (phase `level_scan`).
+    pub scan_seconds: f64,
+    /// Seconds in the condition-evaluation round (phase `level_eval`).
+    pub eval_seconds: f64,
+    /// Seconds in tree update + class-list broadcast (phase
+    /// `level_update`).
+    pub update_seconds: f64,
 }
 
 /// One open leaf during construction.
@@ -82,6 +89,7 @@ impl<'a> TreeBuilderCore<'a> {
 
     /// Train one tree (Alg. 2). Returns the tree and per-level stats.
     pub fn build_tree(&self, tree_idx: u32) -> Result<(Tree, Vec<LevelStats>)> {
+        let _tree_span = crate::span!("build_tree", tree = tree_idx);
         let pool = self.pool;
         let sampler = self.sampler();
         pool.start_tree(tree_idx)?;
@@ -131,31 +139,38 @@ impl<'a> TreeBuilderCore<'a> {
 
             // Step 3: query the splitters for partial supersplits and
             // merge into the global optimal supersplit.
+            let scan_sw = Stopwatch::start();
             let mut best: Vec<Option<SplitCandidate>> = vec![None; open.len()];
-            for (&s, cols) in &assignment.per_splitter {
-                let q = SupersplitQuery {
-                    tree: tree_idx,
-                    depth,
-                    leaves: leaf_infos.clone(),
-                    assigned_columns: cols.clone(),
-                };
-                let partial = pool.find_splits(s, &q)?;
-                anyhow::ensure!(
-                    partial.splits.len() == open.len(),
-                    "splitter {s} answered {} leaves, expected {}",
-                    partial.splits.len(),
-                    open.len()
-                );
-                for (leaf, cand) in partial.splits.into_iter().enumerate() {
-                    if let Some(c) = cand {
-                        best[leaf] =
-                            pick_best([best[leaf].take(), Some(c)].into_iter().flatten());
+            {
+                let _span = crate::span!("level_scan", tree = tree_idx, depth = depth);
+                for (&s, cols) in &assignment.per_splitter {
+                    let q = SupersplitQuery {
+                        tree: tree_idx,
+                        depth,
+                        leaves: leaf_infos.clone(),
+                        assigned_columns: cols.clone(),
+                    };
+                    let partial = pool.find_splits(s, &q)?;
+                    anyhow::ensure!(
+                        partial.splits.len() == open.len(),
+                        "splitter {s} answered {} leaves, expected {}",
+                        partial.splits.len(),
+                        open.len()
+                    );
+                    for (leaf, cand) in partial.splits.into_iter().enumerate() {
+                        if let Some(c) = cand {
+                            best[leaf] =
+                                pick_best([best[leaf].take(), Some(c)].into_iter().flatten());
+                        }
                     }
                 }
             }
+            let scan_seconds = scan_sw.seconds();
 
             // Step 5: ask the owning splitters to evaluate the winning
             // conditions. Group by this level's column owner.
+            let eval_sw = Stopwatch::start();
+            let eval_span = crate::span!("level_eval", tree = tree_idx, depth = depth);
             let mut eval_requests: std::collections::BTreeMap<usize, EvalQuery> =
                 std::collections::BTreeMap::new();
             for (leaf, cand) in best.iter().enumerate() {
@@ -182,9 +197,13 @@ impl<'a> TreeBuilderCore<'a> {
                     bitmaps.insert(rank, bm);
                 }
             }
+            drop(eval_span);
+            let eval_seconds = eval_sw.seconds();
 
             // Steps 4, 6, 8: update the tree structure, decide which
             // children stay open, close split-less leaves.
+            let update_sw = Stopwatch::start();
+            let update_span = crate::span!("level_update", tree = tree_idx, depth = depth);
             let mut outcomes = Vec::with_capacity(open.len());
             let mut next_open = Vec::new();
             let mut num_splits = 0u32;
@@ -229,8 +248,13 @@ impl<'a> TreeBuilderCore<'a> {
                 outcomes,
             };
             pool.broadcast_level_update(&update)?;
+            drop(update_span);
+            let update_seconds = update_sw.seconds();
 
             let net_after = pool.net_stats().snapshot();
+            let level_rows = open_weight;
+            crate::telemetry::counter("drf_levels_total").inc();
+            crate::telemetry::counter("drf_rows_routed_total").add(level_rows);
             stats.push(LevelStats {
                 depth,
                 seconds: sw.seconds(),
@@ -242,6 +266,9 @@ impl<'a> TreeBuilderCore<'a> {
                 z_max_load: assignment.max_load,
                 net_bytes: net_after.delta_since(&net_before).net_bytes,
                 open_weight,
+                scan_seconds,
+                eval_seconds,
+                update_seconds,
             });
             open = next_open;
             depth += 1;
@@ -249,6 +276,7 @@ impl<'a> TreeBuilderCore<'a> {
 
         // Step 10: hand the finished tree to the manager (our caller).
         pool.finish_tree(tree_idx)?;
+        crate::telemetry::counter("drf_trees_total").inc();
         Ok((tree, stats))
     }
 }
@@ -326,6 +354,12 @@ mod tests {
         assert!(!stats.is_empty());
         assert_eq!(stats[0].open_before, 1);
         assert!(stats.iter().all(|s| s.net_bytes > 0));
+        // Per-phase breakdown: phases nest inside the level wall time.
+        for s in &stats {
+            let phase_sum = s.scan_seconds + s.eval_seconds + s.update_seconds;
+            assert!(phase_sum <= s.seconds + 1e-9);
+            assert!(s.scan_seconds >= 0.0 && s.eval_seconds >= 0.0 && s.update_seconds >= 0.0);
+        }
     }
 
     #[test]

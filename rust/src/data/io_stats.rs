@@ -122,6 +122,32 @@ impl IoStats {
         self.inner.net_broadcasts.store(0, Ordering::Relaxed);
     }
 
+    /// Fold a snapshot's counts into these counters. Used to aggregate
+    /// per-connection stats into process totals at disconnect.
+    pub fn add_snapshot(&self, s: &IoSnapshot) {
+        self.inner
+            .disk_read_bytes
+            .fetch_add(s.disk_read_bytes, Ordering::Relaxed);
+        self.inner
+            .disk_write_bytes
+            .fetch_add(s.disk_write_bytes, Ordering::Relaxed);
+        self.inner
+            .disk_read_passes
+            .fetch_add(s.disk_read_passes, Ordering::Relaxed);
+        self.inner
+            .disk_write_passes
+            .fetch_add(s.disk_write_passes, Ordering::Relaxed);
+        self.inner
+            .net_bytes
+            .fetch_add(s.net_bytes, Ordering::Relaxed);
+        self.inner
+            .net_messages
+            .fetch_add(s.net_messages, Ordering::Relaxed);
+        self.inner
+            .net_broadcasts
+            .fetch_add(s.net_broadcasts, Ordering::Relaxed);
+    }
+
     /// Snapshot for reporting.
     pub fn snapshot(&self) -> IoSnapshot {
         IoSnapshot {
@@ -192,6 +218,24 @@ mod tests {
         assert_eq!(s.net_bytes(), 80);
         assert_eq!(s.net_messages(), 8);
         assert_eq!(s.net_broadcasts(), 1);
+    }
+
+    #[test]
+    fn add_snapshot_merges_every_field() {
+        let conn = IoStats::new();
+        conn.add_disk_read(100);
+        conn.add_write_pass();
+        conn.add_net(10);
+        conn.add_broadcast(4, 2);
+        let totals = IoStats::new();
+        totals.add_disk_read(1);
+        totals.add_snapshot(&conn.snapshot());
+        let t = totals.snapshot();
+        assert_eq!(t.disk_read_bytes, 101);
+        assert_eq!(t.disk_write_passes, 1);
+        assert_eq!(t.net_bytes, 18);
+        assert_eq!(t.net_messages, 3);
+        assert_eq!(t.net_broadcasts, 1);
     }
 
     #[test]

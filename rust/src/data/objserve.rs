@@ -33,7 +33,7 @@
 //! additionally exits the process so a supervisor (or a test) can
 //! observe the death and restart it.
 
-use super::io_stats::IoStats;
+use super::io_stats::{IoSnapshot, IoStats};
 use crate::util::wire::{read_frame, write_frame, Reader, Writer};
 use crate::Result;
 use anyhow::{bail, ensure, Context};
@@ -241,14 +241,14 @@ impl ObjStoreState {
         }
     }
 
-    fn serve_request(&self, req: ObjRequest) -> ObjResponse {
-        match self.try_serve(req) {
+    fn serve_request(&self, req: ObjRequest, conn_io: &IoStats) -> ObjResponse {
+        match self.try_serve(req, conn_io) {
             Ok(resp) => resp,
             Err(e) => ObjResponse::Err(format!("{e:#}")),
         }
     }
 
-    fn try_serve(&self, req: ObjRequest) -> Result<ObjResponse> {
+    fn try_serve(&self, req: ObjRequest, conn_io: &IoStats) -> Result<ObjResponse> {
         match req {
             ObjRequest::Stat { path } => {
                 let p = sanitize_path(&self.root, &path)?;
@@ -273,7 +273,11 @@ impl ObjStoreState {
                 f.seek(SeekFrom::Start(offset))?;
                 let mut buf = vec![0u8; len as usize];
                 f.read_exact(&mut buf)?;
+                // Dual-charge: the process totals live (visible on
+                // /metrics mid-connection) and the connection's own
+                // counters (summarized at disconnect).
                 self.stats.add_disk_read(len as u64);
+                conn_io.add_disk_read(len as u64);
                 Ok(ObjResponse::Data(buf))
             }
         }
@@ -311,6 +315,22 @@ impl ObjStoreServer {
             conns: Mutex::new(Vec::new()),
             next_conn_id: AtomicU64::new(0),
         });
+        // Process-level observability: I/O totals (every connection's
+        // traffic folds into `state.stats` live), plus live-connection
+        // and range-read gauges sampled at scrape time.
+        crate::telemetry::register_io_gauges("drf_objstore_io", &state.stats);
+        {
+            let st = state.clone();
+            crate::telemetry::register_gauge_fn("drf_objstore_live_conns", &[], move || {
+                st.conns.lock().unwrap().len() as u64
+            });
+        }
+        {
+            let st = state.clone();
+            crate::telemetry::register_gauge_fn("drf_objstore_reads_served", &[], move || {
+                st.reads_served.load(Ordering::SeqCst)
+            });
+        }
         let state2 = state.clone();
         let accept_handle = std::thread::Builder::new()
             .name("drf-objstore".into())
@@ -364,6 +384,13 @@ impl ObjStoreServer {
     pub fn crash(&self) {
         self.state.crash();
     }
+
+    /// Process-total I/O counters: disk bytes served plus the wire
+    /// traffic of every connection, live (nothing waits for
+    /// disconnect).
+    pub fn io_totals(&self) -> IoSnapshot {
+        self.state.stats.snapshot()
+    }
 }
 
 impl Drop for ObjStoreServer {
@@ -377,8 +404,28 @@ impl Drop for ObjStoreServer {
     }
 }
 
-/// One connection's request loop.
+/// One connection's request loop plus its accounting: the connection
+/// gets its own [`IoStats`] whose totals are folded into the telemetry
+/// registry when it closes (historically those counts were simply
+/// dropped on disconnect).
 fn serve_connection(state: &ObjStoreState, stream: TcpStream) -> Result<()> {
+    let conn_io = IoStats::new();
+    let mut requests = 0u64;
+    let result = serve_requests(state, stream, &conn_io, &mut requests);
+    let s = conn_io.snapshot();
+    crate::telemetry::counter("drf_objstore_conns_closed_total").inc();
+    crate::telemetry::histogram("drf_objstore_conn_net_bytes").observe(s.net_bytes);
+    crate::telemetry::histogram("drf_objstore_conn_disk_read_bytes").observe(s.disk_read_bytes);
+    crate::telemetry::histogram("drf_objstore_conn_requests").observe(requests);
+    result
+}
+
+fn serve_requests(
+    state: &ObjStoreState,
+    stream: TcpStream,
+    conn_io: &IoStats,
+    requests: &mut u64,
+) -> Result<()> {
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut writer = BufWriter::new(stream);
     loop {
@@ -389,9 +436,21 @@ fn serve_connection(state: &ObjStoreState, stream: TcpStream) -> Result<()> {
         if state.shutdown.load(Ordering::SeqCst) {
             return Ok(());
         }
+        // Frame accounting mirrors the client side: each direction is
+        // one message of payload + 4 length-prefix bytes, charged both
+        // to the process totals and to this connection.
+        state.stats.add_net(frame.len() as u64 + 4);
+        conn_io.add_net(frame.len() as u64 + 4);
+        *requests += 1;
+        let req_start = std::time::Instant::now();
+        let mut op = "invalid";
         let response = match decode_request(&frame) {
             Err(e) => ObjResponse::Err(format!("bad request: {e}")),
             Ok(req) => {
+                op = match req {
+                    ObjRequest::Stat { .. } => "stat",
+                    ObjRequest::Read { .. } => "read",
+                };
                 if matches!(req, ObjRequest::Read { .. }) {
                     // This is range read number `k` (1-based) across
                     // all connections.
@@ -414,10 +473,16 @@ fn serve_connection(state: &ObjStoreState, stream: TcpStream) -> Result<()> {
                         }
                     }
                 }
-                state.serve_request(req)
+                state.serve_request(req, conn_io)
             }
         };
-        write_frame(&mut writer, &encode_response(&response))?;
+        crate::telemetry::counter_with("drf_objstore_requests_total", &[("op", op)]).inc();
+        crate::telemetry::histogram_with("drf_objstore_request_us", &[("op", op)])
+            .observe(req_start.elapsed().as_micros() as u64);
+        let resp_bytes = encode_response(&response);
+        state.stats.add_net(resp_bytes.len() as u64 + 4);
+        conn_io.add_net(resp_bytes.len() as u64 + 4);
+        write_frame(&mut writer, &resp_bytes)?;
     }
 }
 
@@ -483,6 +548,14 @@ mod tests {
         }
         assert_eq!(stats.disk_read_bytes(), 4);
         assert_eq!(server.reads_served(), 1);
+        // Wire traffic aggregates into the process totals live (it
+        // used to vanish with the connection): 2 frames per exchange,
+        // 2 exchanges so far.
+        assert!(stats.net_bytes() > 0);
+        let totals = server.io_totals();
+        assert_eq!(totals.disk_read_bytes, 4);
+        assert_eq!(totals.net_bytes, stats.net_bytes());
+        assert_eq!(totals.net_messages, 4);
 
         // A range leaving the object is an error, never a short reply.
         match roundtrip(&stream, &ObjRequest::Read { path: "obj".into(), offset: 8, len: 4 }) {

@@ -190,14 +190,18 @@ impl RemoteSession {
         let mut last: Option<anyhow::Error> = None;
         for attempt in 0..retries {
             if attempt > 0 {
+                crate::telemetry::counter("drf_remote_retries_total").inc();
                 std::thread::sleep(delay);
                 delay = (delay * 2).min(max_backoff);
             }
+            let attempt_start = std::time::Instant::now();
             match self.try_request(&body) {
                 Ok(frame) => {
                     let stats = &self.client.inner.stats;
                     stats.add_net(body.len() as u64 + 4);
                     stats.add_net(frame.len() as u64 + 4);
+                    crate::telemetry::histogram("drf_remote_fetch_us")
+                        .observe(attempt_start.elapsed().as_micros() as u64);
                     return decode_response(&frame);
                 }
                 Err(e) => {
@@ -547,7 +551,26 @@ impl RemoteStore {
                         }
                     }
                 });
-                for (loc, msg) in chunks.iter().zip(rx) {
+                // Drain in chunk order (zip-with-`rx` semantics: stop
+                // if the fetcher is gone), probing non-blockingly first
+                // so the prefetch hit rate is observable: a chunk that
+                // is already buffered when the visitor wants it is a
+                // hit, one the visitor must wait for is a miss.
+                for loc in chunks {
+                    let msg = match rx.try_recv() {
+                        Ok(m) => {
+                            crate::telemetry::counter("drf_remote_prefetch_hits_total").inc();
+                            m
+                        }
+                        Err(std::sync::mpsc::TryRecvError::Empty) => {
+                            crate::telemetry::counter("drf_remote_prefetch_misses_total").inc();
+                            match rx.recv() {
+                                Ok(m) => m,
+                                Err(_) => break,
+                            }
+                        }
+                        Err(std::sync::mpsc::TryRecvError::Disconnected) => break,
+                    };
                     consume(msg?, loc)?;
                 }
                 Ok(())

@@ -150,6 +150,18 @@
 //! `Classify`, `ModelInfo`, and hot model `Reload` over a
 //! length-prefixed binary protocol.
 //!
+//! ## Observability
+//!
+//! The [`telemetry`] subsystem gives every process a metrics plane:
+//! a global registry of counters, gauges, and log₂-bucketed histograms
+//! ([`telemetry::registry`]), phase-tracing spans (the [`span!`] macro,
+//! streamed as JSONL via `--trace-out`), and a `GET /metrics` listener
+//! ([`telemetry::MetricsServer`], enabled with `--metrics-addr` on
+//! `drf train`/`worker`/`objstore`/`serve`) scraped by
+//! `drf metrics ADDR [--watch]`. Instrumentation never feeds back into
+//! training, so telemetry-on forests stay bit-identical to
+//! telemetry-off runs. The metric catalog is in `docs/observability.md`.
+//!
 //! ## Quickstart
 //!
 //! ```no_run
@@ -202,6 +214,7 @@ pub mod rng;
 pub mod runtime;
 pub mod serve;
 pub mod splits;
+pub mod telemetry;
 pub mod tree;
 pub mod util;
 

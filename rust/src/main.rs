@@ -20,6 +20,9 @@
 //!                 hot reload);
 //! * `predict`   — score a dataset against a running server (`--addr`)
 //!                 or locally against a saved model (`--model`);
+//! * `metrics`   — scrape the `/metrics` endpoint of a running drf
+//!                 process (`--metrics-addr`) and print it, optionally
+//!                 on a loop (`--watch`);
 //! * `info`      — runtime/platform info (PJRT client, artifacts).
 //!
 //! Examples:
@@ -89,7 +92,26 @@ const TRAIN_FLAGS: &[&str] = &[
     "config",
     "out",
     "report",
+    "metrics-addr",
+    "trace-out",
 ];
+
+const WORKER_FLAGS: &[&str] = &[
+    "shard",
+    "addr",
+    "scan-threads",
+    "prefetch-chunks",
+    "object-store",
+    "metrics-addr",
+    "!preload",
+    "!no-verify",
+];
+
+const OBJSTORE_FLAGS: &[&str] = &["dir", "addr", "fail-after", "metrics-addr"];
+
+const SERVE_FLAGS: &[&str] = &["model", "addr", "metrics-addr"];
+
+const METRICS_FLAGS: &[&str] = &["interval-ms", "!watch"];
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -111,6 +133,7 @@ fn run(argv: &[String]) -> Result<()> {
         "importance" => cmd_importance(&argv[1..]),
         "serve" => cmd_serve(&argv[1..]),
         "predict" => cmd_predict(&argv[1..]),
+        "metrics" => cmd_metrics(&argv[1..]),
         "info" => cmd_info(),
         "help" | "--help" | "-h" => {
             print!("{}", HELP);
@@ -138,20 +161,24 @@ USAGE:
             [--artifacts-dir DIR] [--config cfg.json]
             [--out forest.json] [--report report.json]
             [--csv file.csv [--label-column NAME]] [--data dataset-dir]
+            [--metrics-addr HOST:PORT] [--trace-out trace.jsonl]
   drf generate [--family ...] [--rows N] [--seed S] [--chunk-rows C]
                --out-dir DIR
   drf shard [--family ...|--csv ...|--data DIR] [--rows N] [--seed S]
             [--splitters W] [--redundancy D] [--chunk-rows C]
             [--workers ADDR,ADDR,...] --out-dir DIR
   drf objstore --dir DIR [--addr HOST:PORT] [--fail-after N]
+               [--metrics-addr HOST:PORT]
   drf worker --shard SHARD_DIR [--addr HOST:PORT] [--scan-threads K]
              [--prefetch-chunks P] [--preload] [--no-verify]
-             [--object-store HOST:PORT]
+             [--object-store HOST:PORT] [--metrics-addr HOST:PORT]
   drf evaluate --model forest.json [--family ...|--csv ...|--data DIR]
   drf importance --model forest.json [--features M]
   drf serve --model forest.json [--addr HOST:PORT]
+            [--metrics-addr HOST:PORT]
   drf predict (--addr HOST:PORT | --model forest.json)
               [--family ...|--csv ...|--data DIR] [--show N]
+  drf metrics ADDR [--watch] [--interval-ms MS]
   drf info
 
 Data sources (train/evaluate/shard/predict): --csv loads a CSV file
@@ -199,6 +226,19 @@ Serving: `drf serve` compiles the model into the flattened inference
 engine and answers Score/Classify/ModelInfo/Reload RPCs over a
 length-prefixed binary protocol; `drf predict --addr` scores over TCP,
 `drf predict --model` scores in-process.
+
+Observability: every long-running process (train, objstore, worker,
+serve) takes `--metrics-addr HOST:PORT` and exposes its metrics
+registry — counters, gauges, and log2-bucketed histograms for every
+training phase, cluster round, remote fetch, and serving RPC — as
+Prometheus text on `GET /metrics` (port 0 picks an ephemeral port; the
+bound address is printed on a `metrics on` ready line). `drf metrics
+ADDR` scrapes and prints one snapshot; `--watch` re-scrapes every
+`--interval-ms MS` (default 2000). `drf train --trace-out trace.jsonl`
+additionally streams one JSON line per phase span (tree builds, level
+scan/eval/update, splitter passes) with microsecond timestamps and
+durations. Telemetry is observation-only: forests are bit-identical
+with it on or off. See docs/observability.md for the metric catalog.
 ";
 
 /// Build the dataset described by the common data flags.
@@ -306,7 +346,22 @@ fn cmd_train(argv: &[String]) -> Result<()> {
     if let Some(v) = args.get("artifacts-dir") {
         cfg.artifacts_dir = Some(v.into());
     }
+    if let Some(v) = args.get("metrics-addr") {
+        cfg.metrics_addr = Some(v.to_string());
+    }
+    if let Some(v) = args.get("trace-out") {
+        cfg.trace_out = Some(v.into());
+    }
     cfg.validate()?;
+
+    // Bring the /metrics endpoint and the span trace sink up before any
+    // training work so the first phase is already captured. The server
+    // guard must outlive training: dropping it stops the listener.
+    let _metrics = spawn_metrics(cfg.metrics_addr.as_deref(), "train")?;
+    if let Some(path) = &cfg.trace_out {
+        drf::telemetry::set_trace_out(path)
+            .with_context(|| format!("opening trace sink {}", path.display()))?;
+    }
 
     let (ds, family) = dataset_from_args(&args)?;
     println!(
@@ -371,6 +426,12 @@ fn report_to_json(report: &drf::coordinator::TrainReport) -> Json {
                                             let mut lj = Json::object();
                                             lj.set("depth", Json::from_u64(l.depth as u64))
                                                 .set("seconds", Json::Num(l.seconds))
+                                                .set("scan_seconds", Json::Num(l.scan_seconds))
+                                                .set("eval_seconds", Json::Num(l.eval_seconds))
+                                                .set(
+                                                    "update_seconds",
+                                                    Json::Num(l.update_seconds),
+                                                )
                                                 .set(
                                                     "open_before",
                                                     Json::from_u64(l.open_before as u64),
@@ -412,6 +473,46 @@ fn parse_worker_list(v: &str) -> Vec<String> {
         .map(|s| s.trim().to_string())
         .filter(|s| !s.is_empty())
         .collect()
+}
+
+/// Start the `GET /metrics` listener if `--metrics-addr` was given and
+/// print a `metrics on` ready line. The returned guard must stay alive
+/// for the life of the process — dropping it stops the listener.
+fn spawn_metrics(
+    addr: Option<&str>,
+    process: &str,
+) -> Result<Option<drf::telemetry::MetricsServer>> {
+    let Some(addr) = addr else { return Ok(None) };
+    let server = drf::telemetry::MetricsServer::spawn(addr)?;
+    println!("drf {process}: metrics on {}", server.addr());
+    // Flush like the main ready lines: supervisors and smoke tests read
+    // this address from a piped (block-buffered) stdout.
+    std::io::Write::flush(&mut std::io::stdout())?;
+    Ok(Some(server))
+}
+
+/// `drf metrics ADDR [--watch] [--interval-ms MS]`: scrape a running
+/// process's `/metrics` endpoint and print the Prometheus text.
+fn cmd_metrics(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv, METRICS_FLAGS)?;
+    let addr = args
+        .positional()
+        .first()
+        .context("usage: drf metrics ADDR [--watch] [--interval-ms MS]")?
+        .clone();
+    let watch = args.get_bool("watch");
+    let interval = std::time::Duration::from_millis(args.get_u64("interval-ms", 2000)?);
+    loop {
+        let body = drf::telemetry::scrape(&addr)
+            .with_context(|| format!("scraping metrics from {addr}"))?;
+        print!("{body}");
+        std::io::Write::flush(&mut std::io::stdout())?;
+        if !watch {
+            return Ok(());
+        }
+        println!("--- {addr}");
+        std::thread::sleep(interval);
+    }
 }
 
 fn cmd_shard(argv: &[String]) -> Result<()> {
@@ -459,7 +560,7 @@ fn cmd_shard(argv: &[String]) -> Result<()> {
 /// byte ranges of DIR until killed (or until the `--fail-after`
 /// crash-simulation limit fires, which exits the process).
 fn cmd_objstore(argv: &[String]) -> Result<()> {
-    let args = Args::parse(argv, &["dir", "addr", "fail-after"])?;
+    let args = Args::parse(argv, OBJSTORE_FLAGS)?;
     let dir = args.require("dir")?;
     let addr = args.get_string("addr", "127.0.0.1:0");
     let opts = drf::data::objserve::ObjStoreOptions {
@@ -480,6 +581,8 @@ fn cmd_objstore(argv: &[String]) -> Result<()> {
     // supervisor) is block-buffered and would otherwise hold the ready
     // line back indefinitely.
     std::io::Write::flush(&mut std::io::stdout())?;
+    // Second ready line — parsers of the first line are unaffected.
+    let _metrics = spawn_metrics(args.get("metrics-addr"), "objstore")?;
     // Serve until killed; requests are handled by the server's
     // accept/connection threads.
     loop {
@@ -488,18 +591,7 @@ fn cmd_objstore(argv: &[String]) -> Result<()> {
 }
 
 fn cmd_worker(argv: &[String]) -> Result<()> {
-    let args = Args::parse(
-        argv,
-        &[
-            "shard",
-            "addr",
-            "scan-threads",
-            "prefetch-chunks",
-            "object-store",
-            "!preload",
-            "!no-verify",
-        ],
-    )?;
+    let args = Args::parse(argv, WORKER_FLAGS)?;
     let dir = args.require("shard")?;
     let addr = args.get_string("addr", "127.0.0.1:0");
     let opts = drf::cluster::WorkerOptions {
@@ -534,6 +626,8 @@ fn cmd_worker(argv: &[String]) -> Result<()> {
     // process supervisor) is block-buffered and would otherwise hold
     // the ready line back indefinitely.
     std::io::Write::flush(&mut std::io::stdout())?;
+    // Second ready line — parsers of the first line are unaffected.
+    let _metrics = spawn_metrics(args.get("metrics-addr"), "worker")?;
     // Serve until killed; connections are handled by the server's
     // accept/worker threads.
     loop {
@@ -616,7 +710,7 @@ fn cmd_importance(argv: &[String]) -> Result<()> {
 }
 
 fn cmd_serve(argv: &[String]) -> Result<()> {
-    let args = Args::parse(argv, &["model", "addr"])?;
+    let args = Args::parse(argv, SERVE_FLAGS)?;
     let model = args.require("model")?;
     let addr = args.get_string("addr", "127.0.0.1:7878");
     let path = std::path::PathBuf::from(model);
@@ -631,6 +725,8 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         server.addr(),
     );
     println!("RPCs: Score, Classify, ModelInfo, Reload (hot). Ctrl-C to stop.");
+    std::io::Write::flush(&mut std::io::stdout())?;
+    let _metrics = spawn_metrics(args.get("metrics-addr"), "serve")?;
     // Serve until killed; connections are handled by the server's
     // accept/worker threads.
     loop {
@@ -682,6 +778,58 @@ fn cmd_predict(argv: &[String]) -> Result<()> {
         println!("row {i}: score {:.4}, class {}", scores[i], classes[i]);
     }
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Every flag a command accepts must appear in HELP as `--name`
+    /// (`!` marks boolean switches and is not part of the flag name).
+    fn assert_flags_documented(which: &str, flags: &[&str]) {
+        for f in flags {
+            let name = f.strip_prefix('!').unwrap_or(f);
+            assert!(
+                HELP.contains(&format!("--{name}")),
+                "{which} flag --{name} is not documented in HELP"
+            );
+        }
+    }
+
+    #[test]
+    fn help_documents_every_flag() {
+        assert_flags_documented("train", TRAIN_FLAGS);
+        assert_flags_documented("worker", WORKER_FLAGS);
+        assert_flags_documented("objstore", OBJSTORE_FLAGS);
+        assert_flags_documented("serve", SERVE_FLAGS);
+        assert_flags_documented("metrics", METRICS_FLAGS);
+        // Extra flags the derived commands add on top of TRAIN_FLAGS.
+        assert_flags_documented("shard/generate", &["out-dir", "chunk-rows"]);
+        assert_flags_documented("evaluate/predict", &["model", "addr", "show"]);
+        assert_flags_documented("importance", &["model", "features"]);
+    }
+
+    #[test]
+    fn help_documents_every_command() {
+        for cmd in [
+            "train",
+            "generate",
+            "shard",
+            "objstore",
+            "worker",
+            "evaluate",
+            "importance",
+            "serve",
+            "predict",
+            "metrics",
+            "info",
+        ] {
+            assert!(
+                HELP.contains(&format!("drf {cmd}")),
+                "HELP does not document `drf {cmd}`"
+            );
+        }
+    }
 }
 
 fn cmd_info() -> Result<()> {

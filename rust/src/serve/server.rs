@@ -149,7 +149,21 @@ fn serve_connection(state: &ServerState, stream: TcpStream) -> Result<()> {
                 write_frame(&mut writer, &encode_response(0, &resp))?;
                 return Ok(());
             }
-            Ok((id, req)) => (id, handle(state, req)),
+            Ok((id, req)) => {
+                let rpc = match &req {
+                    ServeRequest::Score(_) => "score",
+                    ServeRequest::Classify(_) => "classify",
+                    ServeRequest::ModelInfo => "model_info",
+                    ServeRequest::Reload { .. } => "reload",
+                };
+                let start = std::time::Instant::now();
+                let resp = handle(state, req);
+                crate::telemetry::counter_with("drf_serve_requests_total", &[("rpc", rpc)])
+                    .inc();
+                crate::telemetry::histogram_with("drf_serve_request_us", &[("rpc", rpc)])
+                    .observe(start.elapsed().as_micros() as u64);
+                (id, resp)
+            }
         };
         write_frame(&mut writer, &encode_response(id, &response))?;
     }
@@ -169,7 +183,10 @@ fn predict_batch(
         .into_dataset(model.info.num_classes)
         .and_then(|ds| model.flat.check_dataset(&ds).map(|()| ds))
     {
-        Ok(ds) => predict(&model, &ds),
+        Ok(ds) => {
+            crate::telemetry::histogram("drf_serve_batch_rows").observe(ds.num_rows() as u64);
+            predict(&model, &ds)
+        }
         Err(e) => ServeResponse::Err(format!("{what}: {e}")),
     }
 }

@@ -1,0 +1,125 @@
+//! Crate-wide telemetry plane: metrics registry, phase tracing, and a
+//! `/metrics` endpoint for every long-running process.
+//!
+//! Three pieces, all in-tree (no new crates):
+//!
+//! - [`registry`] — a process-global registry of counters, gauges, and
+//!   log₂-bucketed histograms, rendered in the Prometheus text
+//!   exposition format ([`render`]).
+//! - [`span`] — phase-tracing drop-guards (the [`crate::span!`] macro)
+//!   that record wall-time per training phase into the
+//!   `drf_phase_us{phase=...}` histogram and can stream JSONL events to
+//!   a `--trace-out` file ([`set_trace_out`]).
+//! - [`server`] — a minimal `GET /metrics` TCP listener
+//!   ([`MetricsServer`]) plus the matching [`scrape`] client used by
+//!   `drf metrics ADDR [--watch]`.
+//!
+//! Instrumentation is observation-only by design: nothing here feeds
+//! back into training decisions, so telemetry-on and telemetry-off runs
+//! produce bit-identical forests (asserted by the integration tests).
+//! The metric name catalog lives in `docs/observability.md`.
+
+pub mod registry;
+pub mod server;
+pub mod span;
+
+pub use registry::{bucket_index, bucket_le, Counter, Gauge, Histogram, Registry, NUM_BUCKETS};
+pub use server::{scrape, MetricsServer};
+pub use span::{clear_trace_out, set_trace_out, trace_enabled, Span, PHASE_HISTOGRAM};
+
+use crate::data::io_stats::IoStats;
+use std::sync::Arc;
+
+/// Unlabelled counter from the global registry.
+pub fn counter(name: &str) -> Arc<Counter> {
+    registry::global().counter(name, &[])
+}
+
+/// Labelled counter from the global registry.
+pub fn counter_with(name: &str, labels: &[(&str, &str)]) -> Arc<Counter> {
+    registry::global().counter(name, labels)
+}
+
+/// Unlabelled gauge from the global registry.
+pub fn gauge(name: &str) -> Arc<Gauge> {
+    registry::global().gauge(name, &[])
+}
+
+/// Unlabelled histogram from the global registry.
+pub fn histogram(name: &str) -> Arc<Histogram> {
+    registry::global().histogram(name, &[])
+}
+
+/// Labelled histogram from the global registry.
+pub fn histogram_with(name: &str, labels: &[(&str, &str)]) -> Arc<Histogram> {
+    registry::global().histogram(name, labels)
+}
+
+/// Register a callback-backed gauge on the global registry.
+pub fn register_gauge_fn(
+    name: &str,
+    labels: &[(&str, &str)],
+    f: impl Fn() -> u64 + Send + Sync + 'static,
+) {
+    registry::global().register_gauge_fn(name, labels, f);
+}
+
+/// Render the global registry in the Prometheus text format.
+pub fn render() -> String {
+    registry::global().render()
+}
+
+/// Mirror a live [`IoStats`] into callback gauges named
+/// `<prefix>_{disk_read_bytes, disk_write_bytes, disk_read_passes,
+/// disk_write_passes, net_bytes, net_messages, net_broadcasts}`. The
+/// gauges sample the shared atomics at scrape time, so a `/metrics`
+/// reader sees I/O totals move mid-train.
+pub fn register_io_gauges(prefix: &str, stats: &IoStats) {
+    type Getter = fn(&IoStats) -> u64;
+    const FIELDS: [(&str, Getter); 7] = [
+        ("disk_read_bytes", IoStats::disk_read_bytes),
+        ("disk_write_bytes", IoStats::disk_write_bytes),
+        ("disk_read_passes", IoStats::disk_read_passes),
+        ("disk_write_passes", IoStats::disk_write_passes),
+        ("net_bytes", IoStats::net_bytes),
+        ("net_messages", IoStats::net_messages),
+        ("net_broadcasts", IoStats::net_broadcasts),
+    ];
+    for (field, getter) in FIELDS {
+        let stats = stats.clone();
+        register_gauge_fn(&format!("{prefix}_{field}"), &[], move || getter(&stats));
+    }
+}
+
+/// Total seconds recorded so far for one phase of [`PHASE_HISTOGRAM`]
+/// (e.g. `"level_scan"`). Benches read this before/after a run to
+/// derive per-phase time columns.
+pub fn phase_seconds(phase: &str) -> f64 {
+    histogram_with(PHASE_HISTOGRAM, &[("phase", phase)]).sum() as f64 / 1e6
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn io_gauges_track_live_stats() {
+        let stats = IoStats::new();
+        register_io_gauges("t_io", &stats);
+        stats.add_disk_read(100);
+        stats.add_net(40);
+        let text = render();
+        assert!(text.contains("t_io_disk_read_bytes 100"));
+        assert!(text.contains("t_io_net_bytes 40"));
+        // Gauges are live: later writes show up on the next render.
+        stats.add_disk_read(11);
+        assert!(render().contains("t_io_disk_read_bytes 111"));
+    }
+
+    #[test]
+    fn phase_seconds_reads_histogram_sum() {
+        histogram_with(PHASE_HISTOGRAM, &[("phase", "t_phase_sum")]).observe(2_500_000);
+        assert!((phase_seconds("t_phase_sum") - 2.5).abs() < 1e-9);
+        assert_eq!(phase_seconds("t_phase_never_used"), 0.0);
+    }
+}

@@ -1,0 +1,408 @@
+//! Process-global metrics registry: counters, gauges, and log₂-bucketed
+//! histograms, rendered in the Prometheus text exposition format.
+//!
+//! Everything here is in-tree (no new crates): atomics for the hot-path
+//! instruments, `BTreeMap` keyed maps so [`Registry::render`] is
+//! deterministic, and a `OnceLock` for the process-global instance.
+//!
+//! Metric identity is `(name, labels)`. Labels are canonicalised into a
+//! single sorted string at registration time so the same label set in a
+//! different order maps to the same series.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Number of histogram buckets: bucket `i < 64` covers values
+/// `<= 2^i - 1`; bucket 64 is the `+Inf` overflow bucket.
+pub const NUM_BUCKETS: usize = 65;
+
+/// Bucket index for a value: 0 for 0, else `64 - leading_zeros`, i.e.
+/// the number of significant bits. `bucket_index(1) == 1`,
+/// `bucket_index(2) == 2`, `bucket_index(3) == 2`, ...
+pub fn bucket_index(v: u64) -> usize {
+    (u64::BITS - v.leading_zeros()) as usize
+}
+
+/// Inclusive upper bound (`le`) of bucket `i`, or `None` for `+Inf`.
+pub fn bucket_le(i: usize) -> Option<u64> {
+    if i < 64 {
+        Some((1u64 << i).wrapping_sub(1))
+    } else {
+        None
+    }
+}
+
+/// Monotonically increasing counter.
+#[derive(Debug, Default)]
+pub struct Counter {
+    value: AtomicU64,
+}
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, v: u64) {
+        self.value.fetch_add(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.value.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-write-wins gauge.
+#[derive(Debug, Default)]
+pub struct Gauge {
+    value: AtomicU64,
+}
+
+impl Gauge {
+    pub fn set(&self, v: u64) {
+        self.value.store(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.value.load(Ordering::Relaxed)
+    }
+}
+
+/// Log₂-bucketed histogram. `observe` is lock-free (one fetch_add on
+/// the bucket, one on the sum); counts per series are derived from the
+/// bucket array at render time.
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: [AtomicU64; NUM_BUCKETS],
+    sum: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            sum: AtomicU64::new(0),
+        }
+    }
+}
+
+impl Histogram {
+    pub fn observe(&self, v: u64) {
+        self.buckets[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+    }
+
+    /// Sum of all observed values.
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    /// Total number of observations (derived from the buckets).
+    pub fn count(&self) -> u64 {
+        self.buckets
+            .iter()
+            .map(|b| b.load(Ordering::Relaxed))
+            .sum()
+    }
+
+    /// Per-bucket counts (non-cumulative).
+    pub fn bucket_counts(&self) -> [u64; NUM_BUCKETS] {
+        std::array::from_fn(|i| self.buckets[i].load(Ordering::Relaxed))
+    }
+
+    /// Merge another histogram's contents into this one (used when
+    /// folding per-connection stats into process totals).
+    pub fn merge_from(&self, other: &Histogram) {
+        for (mine, theirs) in self.buckets.iter().zip(other.buckets.iter()) {
+            mine.fetch_add(theirs.load(Ordering::Relaxed), Ordering::Relaxed);
+        }
+        self.sum
+            .fetch_add(other.sum.load(Ordering::Relaxed), Ordering::Relaxed);
+    }
+}
+
+type GaugeFn = Box<dyn Fn() -> u64 + Send + Sync>;
+
+/// Series key: metric name plus canonicalised label string
+/// (`key1="v1",key2="v2"` sorted by key, empty for no labels).
+type SeriesKey = (String, String);
+
+/// The registry itself. All maps are `BTreeMap` so `render` emits
+/// series in a deterministic order regardless of registration order.
+#[derive(Default)]
+pub struct Registry {
+    counters: Mutex<BTreeMap<SeriesKey, Arc<Counter>>>,
+    gauges: Mutex<BTreeMap<SeriesKey, Arc<Gauge>>>,
+    gauge_fns: Mutex<BTreeMap<SeriesKey, GaugeFn>>,
+    histograms: Mutex<BTreeMap<SeriesKey, Arc<Histogram>>>,
+}
+
+/// Canonicalise a label set into a stable string. Sorted by key so
+/// `[("b","2"),("a","1")]` and `[("a","1"),("b","2")]` share a series.
+pub fn label_string(labels: &[(&str, &str)]) -> String {
+    let mut sorted: Vec<(&str, &str)> = labels.to_vec();
+    sorted.sort_unstable();
+    sorted
+        .iter()
+        .map(|(k, v)| format!("{k}=\"{v}\""))
+        .collect::<Vec<_>>()
+        .join(",")
+}
+
+impl Registry {
+    /// Fetch or create a counter series.
+    pub fn counter(&self, name: &str, labels: &[(&str, &str)]) -> Arc<Counter> {
+        let key = (name.to_string(), label_string(labels));
+        Arc::clone(
+            self.counters
+                .lock()
+                .unwrap()
+                .entry(key)
+                .or_insert_with(|| Arc::new(Counter::default())),
+        )
+    }
+
+    /// Fetch or create a gauge series.
+    pub fn gauge(&self, name: &str, labels: &[(&str, &str)]) -> Arc<Gauge> {
+        let key = (name.to_string(), label_string(labels));
+        Arc::clone(
+            self.gauges
+                .lock()
+                .unwrap()
+                .entry(key)
+                .or_insert_with(|| Arc::new(Gauge::default())),
+        )
+    }
+
+    /// Register a callback-backed gauge (sampled at render time). The
+    /// last registration for a series wins, so re-registering after a
+    /// restart (e.g. reconnecting a pool) is safe.
+    pub fn register_gauge_fn(
+        &self,
+        name: &str,
+        labels: &[(&str, &str)],
+        f: impl Fn() -> u64 + Send + Sync + 'static,
+    ) {
+        let key = (name.to_string(), label_string(labels));
+        self.gauge_fns.lock().unwrap().insert(key, Box::new(f));
+    }
+
+    /// Fetch or create a histogram series.
+    pub fn histogram(&self, name: &str, labels: &[(&str, &str)]) -> Arc<Histogram> {
+        let key = (name.to_string(), label_string(labels));
+        Arc::clone(
+            self.histograms
+                .lock()
+                .unwrap()
+                .entry(key)
+                .or_insert_with(|| Arc::new(Histogram::default())),
+        )
+    }
+
+    /// Render every series in the Prometheus text exposition format.
+    /// Output order is deterministic (sorted by metric name, then
+    /// canonical label string) so tests can snapshot it.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        let fmt_series = |out: &mut String, name: &str, labels: &str, value: u64| {
+            if labels.is_empty() {
+                out.push_str(&format!("{name} {value}\n"));
+            } else {
+                out.push_str(&format!("{name}{{{labels}}} {value}\n"));
+            }
+        };
+
+        {
+            let counters = self.counters.lock().unwrap();
+            let mut last_name = "";
+            for ((name, labels), c) in counters.iter() {
+                if name != last_name {
+                    out.push_str(&format!("# TYPE {name} counter\n"));
+                    last_name = name;
+                }
+                fmt_series(&mut out, name, labels, c.get());
+            }
+        }
+        {
+            // Plain gauges and callback gauges share the `gauge` type;
+            // merge them so a name registered both ways still renders
+            // under one TYPE line.
+            let gauges = self.gauges.lock().unwrap();
+            let gauge_fns = self.gauge_fns.lock().unwrap();
+            let mut merged: BTreeMap<&SeriesKey, u64> = BTreeMap::new();
+            for (key, g) in gauges.iter() {
+                merged.insert(key, g.get());
+            }
+            for (key, f) in gauge_fns.iter() {
+                merged.insert(key, f());
+            }
+            let mut last_name = "";
+            for ((name, labels), value) in merged {
+                if name != last_name {
+                    out.push_str(&format!("# TYPE {name} gauge\n"));
+                    last_name = name;
+                }
+                fmt_series(&mut out, name, labels, value);
+            }
+        }
+        {
+            let histograms = self.histograms.lock().unwrap();
+            let mut last_name = "";
+            for ((name, labels), h) in histograms.iter() {
+                if name != last_name {
+                    out.push_str(&format!("# TYPE {name} histogram\n"));
+                    last_name = name;
+                }
+                let counts = h.bucket_counts();
+                let mut cumulative = 0u64;
+                for (i, c) in counts.iter().enumerate() {
+                    cumulative += c;
+                    // Skip interior empty buckets to keep the output
+                    // readable; always emit +Inf.
+                    if *c == 0 && i < NUM_BUCKETS - 1 {
+                        continue;
+                    }
+                    let le = match bucket_le(i) {
+                        Some(le) => le.to_string(),
+                        None => "+Inf".to_string(),
+                    };
+                    let le_label = if labels.is_empty() {
+                        format!("le=\"{le}\"")
+                    } else {
+                        format!("{labels},le=\"{le}\"")
+                    };
+                    fmt_series(&mut out, &format!("{name}_bucket"), &le_label, cumulative);
+                }
+                fmt_series(&mut out, &format!("{name}_sum"), labels, h.sum());
+                fmt_series(&mut out, &format!("{name}_count"), labels, h.count());
+            }
+        }
+        out
+    }
+}
+
+/// The process-global registry.
+pub fn global() -> &'static Registry {
+    static REGISTRY: OnceLock<Registry> = OnceLock::new();
+    REGISTRY.get_or_init(Registry::default)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_boundaries() {
+        assert_eq!(bucket_index(0), 0);
+        assert_eq!(bucket_index(1), 1);
+        assert_eq!(bucket_index(2), 2);
+        assert_eq!(bucket_index(3), 2);
+        assert_eq!(bucket_index(4), 3);
+        assert_eq!(bucket_index(1023), 10);
+        assert_eq!(bucket_index(1024), 11);
+        assert_eq!(bucket_index(u64::MAX), 64);
+        // Every value lands in the bucket whose `le` covers it.
+        for v in [0u64, 1, 2, 3, 7, 8, 1000, 1 << 40, u64::MAX] {
+            let i = bucket_index(v);
+            if let Some(le) = bucket_le(i) {
+                assert!(v <= le, "v={v} le={le}");
+            }
+            if i > 0 {
+                let prev_le = bucket_le(i - 1).unwrap();
+                assert!(v > prev_le, "v={v} prev_le={prev_le}");
+            }
+        }
+        assert_eq!(bucket_le(64), None);
+        assert_eq!(bucket_le(0), Some(0));
+        assert_eq!(bucket_le(10), Some(1023));
+    }
+
+    #[test]
+    fn histogram_observe_and_merge() {
+        let h = Histogram::default();
+        h.observe(0);
+        h.observe(3);
+        h.observe(1000);
+        assert_eq!(h.count(), 3);
+        assert_eq!(h.sum(), 1003);
+        let counts = h.bucket_counts();
+        assert_eq!(counts[0], 1);
+        assert_eq!(counts[2], 1);
+        assert_eq!(counts[10], 1);
+
+        let h2 = Histogram::default();
+        h2.observe(3);
+        h2.observe(u64::MAX);
+        h.merge_from(&h2);
+        assert_eq!(h.count(), 5);
+        assert_eq!(h.bucket_counts()[2], 2);
+        assert_eq!(h.bucket_counts()[64], 1);
+        assert_eq!(h.sum(), 1003u64.wrapping_add(3).wrapping_add(u64::MAX));
+    }
+
+    #[test]
+    fn label_canonicalisation() {
+        assert_eq!(
+            label_string(&[("b", "2"), ("a", "1")]),
+            label_string(&[("a", "1"), ("b", "2")])
+        );
+        assert_eq!(label_string(&[]), "");
+        assert_eq!(label_string(&[("phase", "scan")]), "phase=\"scan\"");
+    }
+
+    #[test]
+    fn render_is_deterministic_under_concurrent_writers() {
+        let reg = Registry::default();
+        std::thread::scope(|s| {
+            for t in 0..4 {
+                let reg = &reg;
+                s.spawn(move || {
+                    for i in 0..100u64 {
+                        reg.counter("t_ops_total", &[("thread", &t.to_string())])
+                            .inc();
+                        reg.histogram("t_latency_us", &[]).observe(i);
+                        reg.gauge("t_live", &[]).set(i);
+                    }
+                });
+            }
+        });
+        let a = reg.render();
+        let b = reg.render();
+        assert_eq!(a, b, "render must be stable once writers stop");
+        assert!(a.contains("# TYPE t_ops_total counter"));
+        assert!(a.contains("t_ops_total{thread=\"0\"} 100"));
+        assert!(a.contains("t_ops_total{thread=\"3\"} 100"));
+        assert!(a.contains("# TYPE t_latency_us histogram"));
+        assert!(a.contains("t_latency_us_count 400"));
+        assert!(a.contains("le=\"+Inf\"} 400"));
+        // Deterministic ordering: counter section precedes histograms.
+        assert!(a.find("t_ops_total").unwrap() < a.find("t_latency_us").unwrap());
+    }
+
+    #[test]
+    fn render_formats_series() {
+        let reg = Registry::default();
+        reg.counter("c_total", &[]).add(7);
+        reg.gauge("g_now", &[("k", "v")]).set(9);
+        reg.register_gauge_fn("g_fn", &[], || 42);
+        let h = reg.histogram("h_us", &[("op", "read")]);
+        h.observe(5);
+        let text = reg.render();
+        assert!(text.contains("c_total 7\n"));
+        assert!(text.contains("g_now{k=\"v\"} 9\n"));
+        assert!(text.contains("g_fn 42\n"));
+        assert!(text.contains("h_us_bucket{op=\"read\",le=\"7\"} 1\n"));
+        assert!(text.contains("h_us_bucket{op=\"read\",le=\"+Inf\"} 1\n"));
+        assert!(text.contains("h_us_sum{op=\"read\"} 5\n"));
+        assert!(text.contains("h_us_count{op=\"read\"} 1\n"));
+    }
+
+    #[test]
+    fn same_series_shared() {
+        let reg = Registry::default();
+        reg.counter("x_total", &[("a", "1"), ("b", "2")]).add(1);
+        reg.counter("x_total", &[("b", "2"), ("a", "1")]).add(1);
+        assert!(reg.render().contains("x_total{a=\"1\",b=\"2\"} 2"));
+    }
+}

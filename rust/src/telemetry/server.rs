@@ -1,0 +1,176 @@
+//! `GET /metrics` listener and the matching scrape client.
+//!
+//! A deliberately minimal HTTP/1.0 text protocol — just enough for
+//! `curl`, Prometheus, and `drf metrics` to read the registry — served
+//! with the crate's usual thread-per-connection + shutdown-poke idiom
+//! (see [`crate::serve::server::PredictionServer`]).
+
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Maximum accepted request-head size; anything larger is rejected.
+const MAX_REQUEST_BYTES: usize = 16 * 1024;
+
+/// Background `/metrics` listener over the process-global registry.
+/// Dropping the server stops the accept loop.
+pub struct MetricsServer {
+    addr: SocketAddr,
+    accept_handle: Option<std::thread::JoinHandle<()>>,
+    shutdown: Arc<AtomicBool>,
+}
+
+impl MetricsServer {
+    /// Bind `addr` (`"127.0.0.1:0"` for an ephemeral port) and serve
+    /// `GET /metrics` until dropped.
+    pub fn spawn(addr: &str) -> Result<MetricsServer> {
+        let listener =
+            TcpListener::bind(addr).with_context(|| format!("binding metrics server to {addr}"))?;
+        let addr = listener.local_addr()?;
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let shutdown2 = shutdown.clone();
+        let accept_handle = std::thread::Builder::new()
+            .name("drf-metrics-accept".into())
+            .spawn(move || {
+                for conn in listener.incoming() {
+                    if shutdown2.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    let stream = match conn {
+                        Ok(s) => s,
+                        Err(_) => continue,
+                    };
+                    // Serve inline: a scrape is one small response and
+                    // the accept loop must not be blockable forever, so
+                    // bound the per-connection I/O with timeouts.
+                    let _ = stream.set_read_timeout(Some(Duration::from_secs(5)));
+                    let _ = stream.set_write_timeout(Some(Duration::from_secs(5)));
+                    let _ = serve_http(stream);
+                }
+            })?;
+        Ok(MetricsServer {
+            addr,
+            accept_handle: Some(accept_handle),
+            shutdown,
+        })
+    }
+
+    /// The bound address (useful with an ephemeral port).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+}
+
+impl Drop for MetricsServer {
+    fn drop(&mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        // Poke the listener so the accept loop wakes and exits.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.accept_handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Handle one HTTP exchange: `GET /metrics` renders the global
+/// registry; anything else gets 404/405.
+fn serve_http(mut stream: TcpStream) -> Result<()> {
+    let mut head = Vec::new();
+    let mut buf = [0u8; 1024];
+    loop {
+        let n = stream.read(&mut buf)?;
+        if n == 0 {
+            break;
+        }
+        head.extend_from_slice(&buf[..n]);
+        if head.windows(4).any(|w| w == b"\r\n\r\n") {
+            break;
+        }
+        if head.len() > MAX_REQUEST_BYTES {
+            bail!("request head too large");
+        }
+    }
+    let head = String::from_utf8_lossy(&head);
+    let request_line = head.lines().next().unwrap_or("");
+    let mut parts = request_line.split_whitespace();
+    let (method, path) = (parts.next().unwrap_or(""), parts.next().unwrap_or(""));
+
+    let (status, body) = if method != "GET" {
+        ("405 Method Not Allowed", String::from("method not allowed\n"))
+    } else if path == "/metrics" || path == "/metrics/" {
+        ("200 OK", super::render())
+    } else {
+        ("404 Not Found", String::from("try GET /metrics\n"))
+    };
+    let response = format!(
+        "HTTP/1.0 {status}\r\nContent-Type: text/plain; version=0.0.4\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len(),
+    );
+    stream.write_all(response.as_bytes())?;
+    Ok(())
+}
+
+/// Scrape `GET /metrics` from `addr` and return the body text. Used by
+/// `drf metrics` and the integration tests.
+pub fn scrape(addr: &str) -> Result<String> {
+    let mut stream = TcpStream::connect(addr)
+        .with_context(|| format!("connecting to metrics endpoint {addr}"))?;
+    stream.set_read_timeout(Some(Duration::from_secs(10)))?;
+    stream.set_write_timeout(Some(Duration::from_secs(10)))?;
+    stream.write_all(format!("GET /metrics HTTP/1.0\r\nHost: {addr}\r\n\r\n").as_bytes())?;
+    let mut response = String::new();
+    stream.read_to_string(&mut response)?;
+    let (head, body) = response
+        .split_once("\r\n\r\n")
+        .context("malformed HTTP response (no header terminator)")?;
+    let status_line = head.lines().next().unwrap_or("");
+    if !status_line.contains(" 200 ") {
+        bail!("metrics endpoint returned: {status_line}");
+    }
+    Ok(body.to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn metrics_round_trip_over_real_listener() {
+        crate::telemetry::counter("wire_test_total").add(11);
+        let server = MetricsServer::spawn("127.0.0.1:0").unwrap();
+        let body = scrape(&server.addr().to_string()).unwrap();
+        assert!(body.contains("wire_test_total 11"));
+        assert!(body.contains("# TYPE wire_test_total counter"));
+    }
+
+    #[test]
+    fn non_metrics_paths_rejected() {
+        let server = MetricsServer::spawn("127.0.0.1:0").unwrap();
+        let addr = server.addr().to_string();
+
+        let mut s = TcpStream::connect(&addr).unwrap();
+        s.write_all(b"GET /nope HTTP/1.0\r\n\r\n").unwrap();
+        let mut r = String::new();
+        s.read_to_string(&mut r).unwrap();
+        assert!(r.starts_with("HTTP/1.0 404"));
+
+        let mut s = TcpStream::connect(&addr).unwrap();
+        s.write_all(b"POST /metrics HTTP/1.0\r\n\r\n").unwrap();
+        let mut r = String::new();
+        s.read_to_string(&mut r).unwrap();
+        assert!(r.starts_with("HTTP/1.0 405"));
+    }
+
+    #[test]
+    fn scrape_fails_cleanly_on_dead_endpoint() {
+        // Bind-then-drop to get a port that is almost surely closed.
+        let addr = {
+            let l = TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap().to_string()
+        };
+        assert!(scrape(&addr).is_err());
+    }
+}

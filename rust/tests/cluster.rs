@@ -104,6 +104,52 @@ fn spawn_worker(shard_dir: &Path) -> (ChildGuard, String) {
     (ChildGuard(child), addr)
 }
 
+/// Spawn a worker that also exposes `GET /metrics`, returning its RPC
+/// address and its metrics address (both ephemeral, from ready lines).
+fn spawn_worker_with_metrics(shard_dir: &Path) -> (ChildGuard, String, String) {
+    let mut child = Command::new(DRF_BIN)
+        .args([
+            "worker",
+            "--shard",
+            shard_dir.to_str().unwrap(),
+            "--addr",
+            "127.0.0.1:0",
+            "--metrics-addr",
+            "127.0.0.1:0",
+        ])
+        .stdout(Stdio::piped())
+        .stderr(Stdio::inherit())
+        .spawn()
+        .expect("spawning drf worker");
+    let stdout = child.stdout.take().expect("worker stdout piped");
+    let mut reader = std::io::BufReader::new(stdout);
+    let mut ready = String::new();
+    reader.read_line(&mut ready).expect("reading worker ready line");
+    assert!(
+        ready.contains("listening on"),
+        "unexpected worker output: {ready:?}"
+    );
+    let addr = ready.trim().rsplit(' ').next().unwrap().to_string();
+    let mut metrics = String::new();
+    reader
+        .read_line(&mut metrics)
+        .expect("reading worker metrics ready line");
+    assert!(
+        metrics.contains("metrics on"),
+        "unexpected worker output: {metrics:?}"
+    );
+    let maddr = metrics.trim().rsplit(' ').next().unwrap().to_string();
+    (ChildGuard(child), addr, maddr)
+}
+
+/// The value of an unlabelled series in a Prometheus text body.
+fn series_value(body: &str, series: &str) -> Option<u64> {
+    body.lines().find_map(|l| {
+        let rest = l.strip_prefix(series)?;
+        rest.strip_prefix(' ')?.trim().parse().ok()
+    })
+}
+
 fn forest_cfg(splitters: usize) -> TrainConfig {
     let mut cfg = TrainConfig::default();
     cfg.forest.num_trees = 2;
@@ -139,6 +185,81 @@ fn cluster_worker_processes_match_direct_engine() {
     );
     assert!(report.net.net_bytes > 0, "bytes actually crossed sockets");
     assert_eq!(report.num_splitters, 2);
+}
+
+#[test]
+fn cluster_telemetry_scrapes_and_forests_stay_bit_identical() {
+    let tmp = drf::util::tempdir().unwrap();
+    shard_via_cli(tmp.path(), 2);
+    let ds = dataset();
+
+    // Reference: telemetry plays no part in the in-process engine run.
+    let cfg = forest_cfg(2);
+    let (direct, _) = RandomForest::train_with_config(&ds, &cfg).unwrap();
+
+    let (_g0, addr0, maddr0) = spawn_worker_with_metrics(&tmp.path().join("shard_0"));
+    let (_g1, addr1, _maddr1) = spawn_worker_with_metrics(&tmp.path().join("shard_1"));
+
+    // Train the cluster engine with the span trace sink on. Counters
+    // are process-global and tests share the process, so compare
+    // against a snapshot instead of asserting absolute values.
+    let trace_path = tmp.path().join("trace.jsonl");
+    drf::telemetry::set_trace_out(&trace_path).unwrap();
+    let rounds_before =
+        series_value(&drf::telemetry::render(), "drf_cluster_rounds_total").unwrap_or(0);
+
+    let mut ccfg = cfg.clone();
+    ccfg.engine = Engine::Cluster;
+    ccfg.cluster_manifest = Some(tmp.path().join("cluster.json"));
+    ccfg.cluster_workers = vec![addr0, addr1];
+    let (clustered, _) = RandomForest::train_with_config(&ds, &ccfg).unwrap();
+    drf::telemetry::clear_trace_out();
+
+    assert_eq!(
+        direct.trees, clustered.trees,
+        "tracing + metrics must not change the forest"
+    );
+
+    // The leader-side registry recorded the level-update rounds.
+    let body = drf::telemetry::render();
+    let rounds = series_value(&body, "drf_cluster_rounds_total").expect("rounds counter");
+    assert!(rounds > rounds_before, "no cluster rounds recorded:\n{body}");
+    assert!(
+        body.contains("drf_cluster_rpc_us_bucket"),
+        "no per-worker RPC latency histogram:\n{body}"
+    );
+
+    // A live worker answers the `drf metrics ADDR` CLI with its own
+    // registry: shard gauge plus the IoStats the scans charged.
+    let out = Command::new(DRF_BIN)
+        .args(["metrics", &maddr0])
+        .output()
+        .expect("running drf metrics");
+    assert!(out.status.success(), "drf metrics failed: {out:?}");
+    let scraped = String::from_utf8(out.stdout).unwrap();
+    assert!(
+        scraped.contains("drf_worker_shard"),
+        "worker scrape missing shard gauge:\n{scraped}"
+    );
+    let net = series_value(&scraped, "drf_worker_io_net_bytes").expect("worker net gauge");
+    assert!(net > 0, "worker served a training run but reports no net bytes");
+
+    // The trace sink got well-formed JSONL span events, including the
+    // per-level scan phase.
+    let trace = std::fs::read_to_string(&trace_path).unwrap();
+    let mut spans = 0usize;
+    let mut saw_level_scan = false;
+    for line in trace.lines() {
+        let j = drf::util::Json::parse(line).expect("trace line parses as JSON");
+        assert_eq!(j.get("event").unwrap().as_str().unwrap(), "span");
+        assert!(j.get("dur_us").unwrap().as_u64().is_ok());
+        if j.get("phase").unwrap().as_str().unwrap() == "level_scan" {
+            saw_level_scan = true;
+        }
+        spans += 1;
+    }
+    assert!(spans > 0, "no span events in the trace");
+    assert!(saw_level_scan, "trace missing level_scan spans");
 }
 
 /// Delegating pool that kills + restarts one worker process the first

@@ -328,6 +328,54 @@ fn remote_training_through_real_objstore_survives_crash_and_restart() {
     }
 }
 
+/// Telemetry is observation-only: with the span trace sink streaming
+/// and an in-process `/metrics` listener live, every storage backend
+/// still produces the telemetry-off forest bit for bit — and a scrape
+/// over the real socket returns the phase histograms the runs just
+/// recorded.
+#[test]
+fn telemetry_is_observation_only_across_backends() {
+    let ds = SyntheticSpec::new(Family::Xor { informative: 3 }, 300, 6, 31).generate();
+
+    // Reference forests, telemetry off.
+    let mut reference: Vec<Vec<Tree>> = Vec::new();
+    for storage in BACKENDS {
+        let (forest, _) =
+            RandomForest::train_with_config(&ds, &config(storage, 2, 2, 13)).unwrap();
+        reference.push(forest.trees);
+    }
+
+    // Same runs with tracing on and the metrics endpoint up.
+    let dir = drf::util::tempdir().unwrap();
+    let trace = dir.path().join("trace.jsonl");
+    drf::telemetry::set_trace_out(&trace).unwrap();
+    let server = drf::telemetry::MetricsServer::spawn("127.0.0.1:0").unwrap();
+    for (storage, expect) in BACKENDS.into_iter().zip(&reference) {
+        let (forest, _) =
+            RandomForest::train_with_config(&ds, &config(storage, 2, 2, 13)).unwrap();
+        assert_eq!(
+            expect, &forest.trees,
+            "{storage:?}: telemetry must not change the forest"
+        );
+    }
+    let scraped = drf::telemetry::scrape(&server.addr().to_string()).unwrap();
+    drf::telemetry::clear_trace_out();
+
+    assert!(
+        scraped.contains("drf_phase_us_bucket"),
+        "scrape missing phase histograms:\n{scraped}"
+    );
+    assert!(
+        scraped.contains("drf_trees_total") && scraped.contains("drf_levels_total"),
+        "scrape missing training counters:\n{scraped}"
+    );
+    let lines = std::fs::read_to_string(&trace).unwrap();
+    assert!(
+        lines.lines().count() > 0,
+        "trace sink stayed empty across five training runs"
+    );
+}
+
 #[test]
 fn sprint_pruning_is_backend_invariant() {
     // The SPRINT rebuild is a storage scan site too: adaptive pruning
