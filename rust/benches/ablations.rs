@@ -2,20 +2,23 @@
 //!   1. bit-packed class list vs plain u32 (memory + speed);
 //!   2. SPRINT-style adaptive pruning on a fast-closing workload;
 //!   3. network-latency insensitivity (paper §2);
-//!   4. GBT vs RF on the same substrate (network + quality).
+//!   4. GBT vs RF on the same substrate (network + quality);
+//!   5. exact supersplit scan vs `--split-search mab` (MABSplit-style
+//!      successive elimination) — AUC and train seconds;
+//!   6. breadth-first vs depth-next growth (rows/s on deep trees).
 
 use drf::classlist::ClassList;
-use drf::config::{ForestParams, PruneMode, StorageMode, TrainConfig};
+use drf::config::{ForestParams, PruneMode, SplitSearch, StorageMode, TrainConfig};
 use drf::data::synthetic::{Family, LeoLikeSpec, SyntheticSpec};
 use drf::forest::gbt::{GbtParams, GbtTrainer};
 use drf::forest::RandomForest;
 use drf::metrics::{auc, Stopwatch};
-use drf::util::bench::{bench, fmt_bytes, write_bench_json, Table};
+use drf::util::bench::{bench, fmt_bytes, fmt_count, sized, write_bench_json, Table};
 use drf::util::Json;
 
 fn classlist_ablation() -> Json {
     println!("=== Ablation 1: bit-packed class list vs u32 ===");
-    let n = 1_000_000usize;
+    let n = sized(1_000_000, 100_000);
     let mut t = Table::new(&["layout", "ℓ=63 memory", "get x n", "note"]);
     let mut packed = ClassList::with_open(n, 63);
     for i in 0..n {
@@ -56,7 +59,8 @@ fn pruning_ablation() -> Json {
     println!("\n=== Ablation 2: SPRINT-style adaptive pruning (disk mode) ===");
     // min_records high -> most records land in closed leaves early,
     // the regime where the paper says pruning *would* help Sprint.
-    let ds = SyntheticSpec::new(Family::LinearCont { informative: 3 }, 100_000, 8, 3).generate();
+    let ds = SyntheticSpec::new(Family::LinearCont { informative: 3 }, sized(100_000, 8_000), 8, 3)
+        .generate();
     let mut t = Table::new(&["prune", "wall s", "disk read", "identical tree"]);
     let mut reference = None;
     for (label, prune) in [
@@ -98,7 +102,8 @@ fn pruning_ablation() -> Json {
 
 fn latency_ablation() -> Json {
     println!("\n=== Ablation 3: injected network latency (paper §2: DRF is latency-insensitive) ===");
-    let ds = SyntheticSpec::new(Family::Majority { informative: 3 }, 30_000, 6, 3).generate();
+    let ds = SyntheticSpec::new(Family::Majority { informative: 3 }, sized(30_000, 5_000), 6, 3)
+        .generate();
     let mut t = Table::new(&["latency/msg", "wall s", "messages", "latency share"]);
     for latency_us in [0u64, 200, 1000] {
         let mut cfg = TrainConfig::default();
@@ -128,9 +133,10 @@ fn latency_ablation() -> Json {
 
 fn gbt_vs_rf() -> Json {
     println!("\n=== Ablation 4: GBT vs RF on the Leo-like dataset ===");
-    let spec = LeoLikeSpec::new(40_000, 20_626);
+    let n = sized(40_000, 4_000);
+    let spec = LeoLikeSpec::new(n, 20_626);
     let train = spec.generate();
-    let test = spec.generate_rows(40_000, 10_000);
+    let test = spec.generate_rows(n, n / 4);
     let mut t = Table::new(&["model", "train s", "test AUC", "network model"]);
 
     let sw = Stopwatch::start();
@@ -179,15 +185,130 @@ fn gbt_vs_rf() -> Json {
     t.to_json()
 }
 
+fn split_search_ablation() -> Json {
+    println!("\n=== Ablation 5: exact scan vs --split-search mab (MABSplit) ===");
+    // The sampled elimination pass only engages on nodes with >= 8192
+    // live rows, so the deep tail is exact either way — the comparison
+    // is about the expensive shallow levels. In smoke mode the dataset
+    // is below the sampling floor and mab degenerates to exact (the
+    // rows still flow, the numbers are not representative).
+    let rows = sized(60_000, 4_000);
+    let spec = SyntheticSpec::new(Family::LinearCont { informative: 5 }, rows, 12, 21);
+    let train = spec.generate();
+    let test_spec = SyntheticSpec::new(Family::LinearCont { informative: 5 }, rows / 4, 12, 9921);
+    let test = test_spec.generate();
+    let mut t = Table::new(&["split search", "train s", "test AUC", "identical to exact"]);
+    let mut rows_json: Vec<Json> = Vec::new();
+    let mut reference: Option<Vec<drf::tree::Tree>> = None;
+    for (label, search) in [("exact", SplitSearch::Exact), ("mab", SplitSearch::Mab)] {
+        let mut cfg = TrainConfig::default();
+        cfg.forest = ForestParams {
+            num_trees: 5,
+            max_depth: 10,
+            min_records: 10,
+            seed: 21,
+            ..Default::default()
+        };
+        cfg.split_search = search;
+        let sw = Stopwatch::start();
+        let (forest, _) = RandomForest::train_with_config(&train, &cfg).unwrap();
+        let secs = sw.seconds();
+        let a = auc(&forest.predict_scores(&test), test.labels());
+        let identical = match &reference {
+            None => {
+                reference = Some(forest.trees.clone());
+                "reference".to_string()
+            }
+            Some(r) => (*r == forest.trees).to_string(),
+        };
+        t.row(&[
+            label.into(),
+            format!("{secs:.3}"),
+            format!("{a:.4}"),
+            identical,
+        ]);
+        let mut r = Json::object();
+        r.set("split_search", Json::Str(label.into()))
+            .set("train_seconds", Json::Num(secs))
+            .set("test_auc", Json::Num(a));
+        rows_json.push(r);
+    }
+    t.print();
+    let mut o = t.to_json();
+    o.set("results", Json::Arr(rows_json));
+    o
+}
+
+fn depth_next_ablation() -> Json {
+    println!("\n=== Ablation 6: breadth-first vs depth-next growth (deep trees) ===");
+    // Deep trees are where the per-level full-dataset passes dominate:
+    // once a node's rows fit the budget, the resident subtree grows
+    // with zero further passes, so the deep tail is nearly free. Both
+    // schedules must produce the identical forest.
+    let rows = sized(60_000, 4_000);
+    let trees = 2usize;
+    let ds = SyntheticSpec::new(Family::LinearCont { informative: 5 }, rows, 10, 7).generate();
+    let mut t = Table::new(&["schedule", "time / forest", "rows/s", "identical"]);
+    let mut rows_json: Vec<Json> = Vec::new();
+    let mut reference: Option<Vec<drf::tree::Tree>> = None;
+    for (label, budget) in [
+        ("breadth-first (budget 0)", 0u64),
+        ("depth-next @4096", 4_096),
+        ("depth-next @65536", 65_536),
+    ] {
+        let mut cfg = TrainConfig::default();
+        cfg.forest = ForestParams {
+            num_trees: trees,
+            max_depth: 14,
+            min_records: 2,
+            seed: 7,
+            ..Default::default()
+        };
+        cfg.depth_next_rows = budget;
+        let (forest, _) = RandomForest::train_with_config(&ds, &cfg).unwrap();
+        let identical = match &reference {
+            None => {
+                reference = Some(forest.trees);
+                "reference".to_string()
+            }
+            Some(r) => (*r == forest.trees).to_string(),
+        };
+        let timing = bench(3, 15.0, || {
+            std::hint::black_box(RandomForest::train_with_config(&ds, &cfg).unwrap());
+        });
+        let rps = (rows * trees) as f64 / timing.mean_s;
+        t.row(&[
+            label.into(),
+            timing.per_iter_label(),
+            fmt_count(rps),
+            identical,
+        ]);
+        let mut r = Json::object();
+        r.set("schedule", Json::Str(label.into()))
+            .set("depth_next_rows", Json::from_u64(budget))
+            .set("seconds_per_forest", Json::Num(timing.mean_s))
+            .set("rows_per_s", Json::Num(rps));
+        rows_json.push(r);
+    }
+    t.print();
+    let mut o = t.to_json();
+    o.set("results", Json::Arr(rows_json));
+    o
+}
+
 fn main() {
     let classlist = classlist_ablation();
     let pruning = pruning_ablation();
     let latency = latency_ablation();
     let gbt = gbt_vs_rf();
+    let split_search = split_search_ablation();
+    let depth_next = depth_next_ablation();
     let mut o = Json::object();
     o.set("classlist", classlist)
         .set("pruning", pruning)
         .set("latency", latency)
-        .set("gbt_vs_rf", gbt);
+        .set("gbt_vs_rf", gbt)
+        .set("split_search", split_search)
+        .set("depth_next", depth_next);
     write_bench_json("ablations", o);
 }

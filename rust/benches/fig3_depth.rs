@@ -6,19 +6,43 @@
 //! flat (scan-dominated); tree AUC saturates (then overfits on small
 //! subsets) while RF AUC keeps climbing; deeper is better with more
 //! data.
+//!
+//! Each subset is trained twice — pure breadth-first
+//! (`depth_next_rows = 0`) and the default hybrid schedule — and the
+//! per-depth level seconds of both land as typed rows in
+//! `BENCH_fig3_depth.json`: the depth-next win is exactly the deep
+//! tail of the breadth-first curve collapsing once the frontier goes
+//! resident, visible per level rather than only in the total.
 
 use drf::config::{ForestParams, TrainConfig};
 use drf::data::synthetic::LeoLikeSpec;
 use drf::forest::RandomForest;
 use drf::metrics::auc;
-use drf::util::bench::{write_bench_json, Table};
+use drf::util::bench::{sized, write_bench_json, Table};
 use drf::util::Json;
+
+/// Mean per-depth level seconds and open-leaf counts over the trees of
+/// one training report.
+fn level_profile(report: &drf::coordinator::TrainReport, max_d: u32) -> (Vec<f64>, Vec<f64>) {
+    let mut secs = vec![0.0f64; max_d as usize + 1];
+    let mut leaves = vec![0.0f64; max_d as usize + 1];
+    let trees = report.per_tree.len() as f64;
+    for tr in &report.per_tree {
+        for l in &tr.levels {
+            if (l.depth as usize) < secs.len() {
+                secs[l.depth as usize] += l.seconds / trees;
+                leaves[l.depth as usize] += l.open_before as f64 / trees;
+            }
+        }
+    }
+    (secs, leaves)
+}
 
 fn main() {
     let n: usize = std::env::args()
         .nth(1)
         .and_then(|s| s.parse().ok())
-        .unwrap_or(80_000);
+        .unwrap_or_else(|| sized(80_000, 6_000));
     let spec = LeoLikeSpec::new(n, 20_626);
     let full = spec.generate();
     let test = spec.generate_rows(n, (n / 4).max(5_000));
@@ -34,30 +58,37 @@ fn main() {
             seed: 9,
             ..Default::default()
         };
-        let cfg = TrainConfig {
+        // Breadth-first reference: every level pays a full pass.
+        let bf_cfg = TrainConfig {
+            forest: params,
+            depth_next_rows: 0,
+            ..Default::default()
+        };
+        let (forest, report) = RandomForest::train_with_config(&ds, &bf_cfg).unwrap();
+        // Hybrid schedule (default budget): bit-identical forest, the
+        // deep levels grow cache-resident.
+        let dn_cfg = TrainConfig {
             forest: params,
             ..Default::default()
         };
-        let (forest, report) = RandomForest::train_with_config(&ds, &cfg).unwrap();
+        let (dn_forest, dn_report) = RandomForest::train_with_config(&ds, &dn_cfg).unwrap();
+        assert_eq!(
+            forest.trees, dn_forest.trees,
+            "{label}: depth-next must match breadth-first bit for bit"
+        );
         let max_d = forest.trees.iter().map(|t| t.depth()).max().unwrap_or(0);
-        let mut level_secs = vec![0.0f64; max_d as usize + 1];
-        let mut level_leaves = vec![0u64; max_d as usize + 1];
-        for tr in &report.per_tree {
-            for l in &tr.levels {
-                if (l.depth as usize) < level_secs.len() {
-                    level_secs[l.depth as usize] += l.seconds / report.per_tree.len() as f64;
-                    level_leaves[l.depth as usize] += l.open_before as u64;
-                }
-            }
-        }
+        let (bf_secs, level_leaves) = level_profile(&report, max_d);
+        let (dn_secs, _) = level_profile(&dn_report, max_d);
         println!("\n=== Figure 3 ({label} subset: n={sub_n}) ===");
         let mut t = Table::new(&[
             "depth",
-            "level s (mean)",
+            "level s (bf)",
+            "level s (depth-next)",
             "open leaves (mean)",
             "tree0 AUC",
             "RF AUC",
         ]);
+        let mut levels_json: Vec<Json> = Vec::new();
         for d in 0..=max_d {
             let rf_auc = auc(&forest.predict_scores_at_depth(&test, d), test.labels());
             let tree0 = &forest.trees[0];
@@ -65,20 +96,30 @@ fn main() {
                 .map(|i| tree0.score_at_depth(&test.row(i), d))
                 .collect();
             let t_auc = auc(&t_scores, test.labels());
+            let bf_s = bf_secs.get(d as usize).copied().unwrap_or(0.0);
+            let dn_s = dn_secs.get(d as usize).copied().unwrap_or(0.0);
+            let open = level_leaves.get(d as usize).copied().unwrap_or(0.0);
             t.row(&[
                 d.to_string(),
-                format!("{:.3}", level_secs.get(d as usize).copied().unwrap_or(0.0)),
-                format!(
-                    "{:.1}",
-                    level_leaves.get(d as usize).copied().unwrap_or(0) as f64
-                        / report.per_tree.len() as f64
-                ),
+                format!("{bf_s:.3}"),
+                format!("{dn_s:.3}"),
+                format!("{open:.1}"),
                 format!("{t_auc:.4}"),
                 format!("{rf_auc:.4}"),
             ]);
+            let mut lj = Json::object();
+            lj.set("depth", Json::from_u64(d as u64))
+                .set("bf_level_seconds", Json::Num(bf_s))
+                .set("depth_next_level_seconds", Json::Num(dn_s))
+                .set("open_leaves", Json::Num(open))
+                .set("tree0_auc", Json::Num(t_auc))
+                .set("rf_auc", Json::Num(rf_auc));
+            levels_json.push(lj);
         }
         t.print();
-        sections.set(label, t.to_json());
+        let mut section = t.to_json();
+        section.set("levels", Json::Arr(levels_json));
+        sections.set(label, section);
     }
     write_bench_json("fig3_depth", sections);
 }

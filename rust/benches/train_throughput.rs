@@ -75,7 +75,53 @@ fn config(storage: StorageMode, scan_threads: usize, prefetch: usize) -> TrainCo
     cfg.storage = storage;
     cfg.scan_threads = scan_threads;
     cfg.prefetch_chunks = prefetch;
+    // The backend matrix measures the distributed per-level scan plane;
+    // keep the hybrid schedule out of it (the depth-next comparison has
+    // its own section below).
+    cfg.depth_next_rows = 0;
     cfg
+}
+
+/// Deep-tree section: the same forest grown pure breadth-first vs with
+/// the hybrid depth-next schedule — the rows/s delta is what the
+/// resident subtree growth buys on per-level pass costs.
+fn depth_next_section(rows: usize) -> Json {
+    let ds =
+        SyntheticSpec::new(Family::LinearCont { informative: 5 }, rows, FEATURES, 3).generate();
+    let mut deep = config(StorageMode::Memory, 1, 0);
+    deep.forest.max_depth = 14;
+    deep.forest.min_records = 2;
+    let mut dn = deep.clone();
+    dn.depth_next_rows = TrainConfig::default().depth_next_rows;
+    let bf_forest = RandomForest::train_with_config(&ds, &deep).unwrap().0;
+    let dn_forest = RandomForest::train_with_config(&ds, &dn).unwrap().0;
+    assert_eq!(
+        bf_forest.trees, dn_forest.trees,
+        "depth-next: exactness before speed"
+    );
+    let bf = bench(3, 15.0, || {
+        std::hint::black_box(RandomForest::train_with_config(&ds, &deep).unwrap());
+    });
+    let dnt = bench(3, 15.0, || {
+        std::hint::black_box(RandomForest::train_with_config(&ds, &dn).unwrap());
+    });
+    let bf_rps = (rows * TREES) as f64 / bf.mean_s;
+    let dn_rps = (rows * TREES) as f64 / dnt.mean_s;
+    println!(
+        "\ndeep trees (depth 14): breadth-first {} rows/s, depth-next {} rows/s ({:.2}x)",
+        fmt_count(bf_rps),
+        fmt_count(dn_rps),
+        dn_rps / bf_rps
+    );
+    if dn_rps < bf_rps {
+        println!("WARNING: depth-next slower than breadth-first on deep trees");
+    }
+    let mut o = Json::object();
+    o.set("max_depth", Json::from_u64(14))
+        .set("bf_rows_per_s", Json::Num(bf_rps))
+        .set("depth_next_rows_per_s", Json::Num(dn_rps))
+        .set("speedup", Json::Num(dn_rps / bf_rps));
+    o
 }
 
 fn main() {
@@ -226,12 +272,15 @@ fn main() {
 
     table.print();
 
+    let depth_next = depth_next_section(rows);
+
     let mut o = table.to_json();
     o.set("rows", Json::from_usize(rows))
         .set("features", Json::from_usize(FEATURES))
         .set("trees", Json::from_usize(TREES))
         .set("splitters", Json::from_usize(SPLITTERS))
-        .set("families", Json::Arr(fam_jsons));
+        .set("families", Json::Arr(fam_jsons))
+        .set("depth_next", depth_next);
     write_bench_json("train", o);
     if !any_parallel_win {
         println!(

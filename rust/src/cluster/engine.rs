@@ -21,7 +21,8 @@
 use super::manifest::ClusterManifest;
 use crate::config::{PruneMode, TrainConfig};
 use crate::coordinator::messages::{
-    EvalQuery, EvalResult, LevelUpdate, PartialSupersplit, SupersplitQuery,
+    EvalQuery, EvalResult, LevelUpdate, MaterializeQuery, MaterializedLeaves, PartialSupersplit,
+    SubtreeDone, SupersplitQuery,
 };
 use crate::coordinator::topology::Topology;
 use crate::coordinator::transport::SplitterPool;
@@ -76,6 +77,8 @@ pub fn hello_template(cfg: &TrainConfig, manifest: &ClusterManifest) -> HelloCon
             PruneMode::Never => None,
             PruneMode::Adaptive { threshold } => Some(threshold),
         },
+        split_search: cfg.split_search.as_str().into(),
+        depth_next_rows: cfg.depth_next_rows,
     }
 }
 
@@ -355,6 +358,21 @@ impl SplitterPool for ClusterPool {
         Ok(())
     }
 
+    fn materialize(&self, splitter: usize, q: &MaterializeQuery) -> Result<MaterializedLeaves> {
+        match self.call(splitter, &Request::Materialize(q.clone()))? {
+            Response::Materialized(m) => Ok(m),
+            r => bail!("unexpected response {r:?}"),
+        }
+    }
+
+    fn broadcast_subtree_done(&self, d: &SubtreeDone) -> Result<()> {
+        for s in 0..self.slots.len() {
+            self.broadcast_subtree_done_on(s, d)?;
+        }
+        self.net.add_broadcast_event();
+        Ok(())
+    }
+
     fn finish_tree(&self, tree: u32) -> Result<()> {
         for s in 0..self.slots.len() {
             self.finish_tree_on(s, tree)?;
@@ -382,6 +400,13 @@ impl SplitterPool for ClusterPool {
 
     fn finish_tree_on(&self, splitter: usize, tree: u32) -> Result<()> {
         match self.call(splitter, &Request::FinishTree(tree))? {
+            Response::Ok => Ok(()),
+            r => bail!("unexpected response {r:?}"),
+        }
+    }
+
+    fn broadcast_subtree_done_on(&self, splitter: usize, d: &SubtreeDone) -> Result<()> {
+        match self.call(splitter, &Request::SubtreeDone(*d))? {
             Response::Ok => Ok(()),
             r => bail!("unexpected response {r:?}"),
         }
@@ -456,6 +481,8 @@ mod tests {
             num_candidates: cfg.candidates_for(num_features) as u32,
             score_kind: cfg.score_kind.as_str().into(),
             prune_threshold: None,
+            split_search: "exact".into(),
+            depth_next_rows: 0,
         }
     }
 

@@ -366,6 +366,7 @@ impl WorkerState {
                     Some(threshold) => PruneMode::Adaptive { threshold },
                 },
                 scan_threads: self.scan_threads,
+                split_search: crate::config::SplitSearch::parse(&h.split_search)?,
             };
             let core = SplitterCore::new(
                 m.shard,
@@ -528,6 +529,8 @@ mod tests {
             num_candidates: 3,
             score_kind: "gini".into(),
             prune_threshold: None,
+            split_search: "exact".into(),
+            depth_next_rows: 0,
         }
     }
 

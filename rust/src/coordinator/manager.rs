@@ -87,6 +87,7 @@ impl Manager {
             score_kind: cfg.forest.score_kind,
             prune: cfg.prune,
             scan_threads: cfg.scan_threads,
+            split_search: cfg.split_search,
         };
         let tmp_dir = match cfg.storage {
             StorageMode::Disk | StorageMode::DiskV2 | StorageMode::Mmap => {
@@ -325,7 +326,8 @@ impl Manager {
         topology: &Topology,
         ds: &Dataset,
     ) -> Result<Vec<(Tree, Vec<LevelStats>, f64)>> {
-        let builder = TreeBuilderCore::new(pool, topology, &self.cfg.forest, ds.num_features());
+        let builder = TreeBuilderCore::new(pool, topology, &self.cfg.forest, ds.num_features())
+            .with_depth_next(self.cfg.depth_next_rows);
         (0..self.cfg.forest.num_trees as u32)
             .map(|t| {
                 let sw = Stopwatch::start();
@@ -351,6 +353,7 @@ impl Manager {
             (0..num_trees).map(|_| std::sync::Mutex::new(None)).collect();
         let params = &self.cfg.forest;
         let num_features = ds.num_features();
+        let depth_next_rows = self.cfg.depth_next_rows;
 
         std::thread::scope(|scope| -> Result<()> {
             let mut handles = Vec::new();
@@ -358,7 +361,8 @@ impl Manager {
                 let next = &next;
                 let results = &results;
                 handles.push(scope.spawn(move || -> Result<()> {
-                    let builder = TreeBuilderCore::new(pool, topology, params, num_features);
+                    let builder = TreeBuilderCore::new(pool, topology, params, num_features)
+                        .with_depth_next(depth_next_rows);
                     loop {
                         let t = next.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
                         if t >= num_trees {

@@ -82,11 +82,17 @@ pub struct LeafInfo {
     /// Bagged label histogram of the leaf (the splitters need parent
     /// totals to score splits in one pass).
     pub totals: Vec<u64>,
+    /// The leaf detaches into a resident subtree this level: it stays
+    /// in the query positionally (ranks must stay aligned across the
+    /// fleet) but splitters give it no candidates — its split is
+    /// computed builder-side from the materialized rows, and the level
+    /// update closes its rank with [`LeafOutcome::Detached`].
+    pub detached: bool,
 }
 
 impl LeafInfo {
     pub fn wire_bytes(&self) -> u64 {
-        4 + self.totals.len() as u64 * 8
+        4 + 1 + self.totals.len() as u64 * 8
     }
 }
 
@@ -185,6 +191,11 @@ pub enum LeafOutcome {
         left_open: bool,
         right_open: bool,
     },
+    /// The leaf detached into a builder-resident subtree (depth-next
+    /// growth): its rows were materialized, the builder grows the
+    /// subtree locally, and the splitters stop tracking it — for the
+    /// distributed class list this is exactly a close (code 0).
+    Detached,
 }
 
 /// Tree builder → all splitters (broadcast): the level's outcomes so
@@ -203,7 +214,7 @@ impl LevelUpdate {
             .outcomes
             .iter()
             .map(|o| match o {
-                LeafOutcome::Closed => 1,
+                LeafOutcome::Closed | LeafOutcome::Detached => 1,
                 LeafOutcome::Split { bitmap, .. } => 1 + bitmap.wire_bytes(),
             })
             .sum::<u64>()
@@ -214,7 +225,7 @@ impl LevelUpdate {
         self.outcomes
             .iter()
             .map(|o| match o {
-                LeafOutcome::Closed => 0,
+                LeafOutcome::Closed | LeafOutcome::Detached => 0,
                 LeafOutcome::Split {
                     left_open,
                     right_open,
@@ -222,6 +233,106 @@ impl LevelUpdate {
                 } => *left_open as u32 + *right_open as u32,
             })
             .sum()
+    }
+}
+
+/// Tree builder → splitter: "ship me the raw values of your assigned
+/// columns for the in-bag rows of these detaching leaves" — the one
+/// extra pass that buys depth-next growth all its later passes back.
+/// Rows come back in ascending absolute-row order per leaf, in-bag rows
+/// only, so every splitter's slices align positionally.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MaterializeQuery {
+    pub tree: u32,
+    pub depth: u32,
+    /// Class-list ranks (1-based, this level's numbering) of the
+    /// detaching leaves.
+    pub ranks: Vec<u32>,
+    /// Columns this splitter should extract (a disjoint slice of the
+    /// full feature set — the level assignment over all columns).
+    pub columns: Vec<usize>,
+    /// Also ship labels and bag weights for the leaves' rows (asked of
+    /// exactly one splitter; every splitter holds the replicated label
+    /// column).
+    pub want_meta: bool,
+}
+
+impl MaterializeQuery {
+    pub fn wire_bytes(&self) -> u64 {
+        4 + 4 + 1 + self.ranks.len() as u64 * 4 + self.columns.len() as u64 * 4
+    }
+}
+
+/// One detaching leaf's materialized rows (splitter → tree builder).
+#[derive(Debug, Clone, PartialEq)]
+pub struct MaterializedLeaf {
+    /// In-bag row count (sanity-checked against the leaf's histogram).
+    pub rows: u64,
+    /// Labels per row (empty unless `want_meta`).
+    pub labels: Vec<u32>,
+    /// Bag weights per row (empty unless `want_meta`).
+    pub bags: Vec<u8>,
+    /// One entry per requested column, in query column order.
+    pub columns: Vec<MaterializedColumn>,
+}
+
+/// One column's values for one materialized leaf.
+#[derive(Debug, Clone, PartialEq)]
+pub enum MaterializedColumn {
+    /// Numerical values, row order.
+    Num(Vec<f32>),
+    /// Categorical codes, row order, with the column's arity.
+    Cat { arity: u32, values: Vec<u32> },
+}
+
+impl MaterializedColumn {
+    pub fn wire_bytes(&self) -> u64 {
+        match self {
+            MaterializedColumn::Num(v) => 1 + v.len() as u64 * 4,
+            MaterializedColumn::Cat { values, .. } => 1 + 4 + values.len() as u64 * 4,
+        }
+    }
+}
+
+/// Splitter → tree builder: the materialized rows, one entry per
+/// requested rank in query rank order.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MaterializedLeaves {
+    pub leaves: Vec<MaterializedLeaf>,
+}
+
+impl MaterializedLeaves {
+    pub fn wire_bytes(&self) -> u64 {
+        self.leaves
+            .iter()
+            .map(|l| {
+                8 + l.labels.len() as u64 * 4
+                    + l.bags.len() as u64
+                    + l.columns.iter().map(|c| c.wire_bytes()).sum::<u64>()
+            })
+            .sum()
+    }
+}
+
+/// Tree builder → all splitters (broadcast): a detached subtree
+/// finished growing. Splitters hold no state for detached leaves, so
+/// this is observational — workers validate the tree exists and bump
+/// their local counters; the forest bytes themselves stay builder-side
+/// (the paper's builders own structure, splitters own data).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SubtreeDone {
+    pub tree: u32,
+    /// Node id of the subtree root (the detached leaf).
+    pub root: u32,
+    /// In-bag rows the subtree was grown over.
+    pub rows: u64,
+    /// Nodes the depth-first growth added (root excluded).
+    pub nodes: u32,
+}
+
+impl SubtreeDone {
+    pub fn wire_bytes(&self) -> u64 {
+        4 + 4 + 8 + 4
     }
 }
 
@@ -271,13 +382,44 @@ mod tests {
             leaves: vec![LeafInfo {
                 node_id: 0,
                 totals: vec![10, 20],
+                detached: false,
             }],
             assigned_columns: vec![0, 3],
         };
-        assert_eq!(q.wire_bytes(), 4 + 4 + (4 + 16) + 8);
+        assert_eq!(q.wire_bytes(), 4 + 4 + (4 + 1 + 16) + 8);
         let e = EvalResult {
             bitmaps: vec![(1, Bitmap::with_len(100))],
         };
         assert_eq!(e.wire_bytes(), 4 + 13);
+        let m = MaterializeQuery {
+            tree: 0,
+            depth: 2,
+            ranks: vec![1, 3],
+            columns: vec![0, 5],
+            want_meta: true,
+        };
+        assert_eq!(m.wire_bytes(), 4 + 4 + 1 + 8 + 8);
+        let r = MaterializedLeaves {
+            leaves: vec![MaterializedLeaf {
+                rows: 3,
+                labels: vec![0, 1, 0],
+                bags: vec![1, 2, 1],
+                columns: vec![
+                    MaterializedColumn::Num(vec![0.5, 1.5, 2.5]),
+                    MaterializedColumn::Cat {
+                        arity: 4,
+                        values: vec![0, 3, 1],
+                    },
+                ],
+            }],
+        };
+        assert_eq!(r.wire_bytes(), 8 + 12 + 3 + (1 + 12) + (1 + 4 + 12));
+        let d = SubtreeDone {
+            tree: 1,
+            root: 7,
+            rows: 100,
+            nodes: 12,
+        };
+        assert_eq!(d.wire_bytes(), 20);
     }
 }

@@ -27,7 +27,10 @@
 //! shard itself is immutable input) and the next call to it
 //! transparently replays.
 
-use super::messages::{EvalQuery, EvalResult, LevelUpdate, PartialSupersplit, SupersplitQuery};
+use super::messages::{
+    EvalQuery, EvalResult, LevelUpdate, MaterializeQuery, MaterializedLeaves, PartialSupersplit,
+    SubtreeDone, SupersplitQuery,
+};
 use super::transport::SplitterPool;
 use crate::data::io_stats::IoStats;
 use crate::Result;
@@ -195,6 +198,35 @@ impl<P: SplitterPool> SplitterPool for RecoveringPool<P> {
         Ok(())
     }
 
+    fn materialize(&self, splitter: usize, q: &MaterializeQuery) -> Result<MaterializedLeaves> {
+        self.maybe_crash(splitter, q.tree);
+        // Materialization reads the level-start class list, which the
+        // full replay log reconstructs exactly.
+        self.with_recovery(splitter, q.tree, || self.inner.materialize(splitter, q))
+    }
+
+    fn broadcast_subtree_done(&self, d: &SubtreeDone) -> Result<()> {
+        // Not logged: SubtreeDone carries no class-list state, so a
+        // replayed splitter needs the log without it. A splitter that
+        // lost the tree is replayed and then re-notified.
+        for s in 0..self.inner.num_splitters() {
+            if let Err(e) = self.inner.broadcast_subtree_done_on(s, d) {
+                if Self::is_state_loss(&e) {
+                    self.replay(s, d.tree, usize::MAX)?;
+                    self.inner.broadcast_subtree_done_on(s, d)?;
+                } else {
+                    return Err(e);
+                }
+            }
+        }
+        self.inner.net_stats().add_broadcast_event();
+        Ok(())
+    }
+
+    fn broadcast_subtree_done_on(&self, splitter: usize, d: &SubtreeDone) -> Result<()> {
+        self.inner.broadcast_subtree_done_on(splitter, d)
+    }
+
     fn finish_tree(&self, tree: u32) -> Result<()> {
         self.log.lock().unwrap().remove(&tree);
         self.inner.finish_tree(tree)
@@ -250,6 +282,7 @@ mod tests {
             score_kind: params.score_kind,
             prune: PruneMode::Never,
             scan_threads: 1,
+            split_search: crate::config::SplitSearch::Exact,
         };
         (0..topo.num_splitters())
             .map(|s| {

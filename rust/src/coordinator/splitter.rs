@@ -17,10 +17,11 @@
 //! for any `scan_threads` (asserted by `tests/storage_backends.rs`).
 
 use super::messages::{
-    Bitmap, EvalQuery, EvalResult, LevelUpdate, PartialSupersplit, SupersplitQuery,
+    Bitmap, EvalQuery, EvalResult, LevelUpdate, MaterializeQuery, MaterializedColumn,
+    MaterializedLeaf, MaterializedLeaves, PartialSupersplit, SubtreeDone, SupersplitQuery,
 };
 use crate::classlist::ClassList;
-use crate::config::PruneMode;
+use crate::config::{PruneMode, SplitSearch};
 use crate::data::column::SortedEntry;
 use crate::data::io_stats::IoStats;
 use crate::data::schema::{ColumnType, Schema};
@@ -49,6 +50,10 @@ pub struct SplitterConfig {
     /// Upper bound on concurrent column scans inside this splitter
     /// (1 = fully sequential). Never affects results, only wall clock.
     pub scan_threads: usize,
+    /// Exhaustive scan (the default, exact) or MABSplit-style
+    /// successive elimination before the exact final pass (opt-in,
+    /// approximate).
+    pub split_search: SplitSearch,
 }
 
 /// Per-tree state a splitter maintains.
@@ -289,11 +294,20 @@ impl SplitterCore {
         let sampler = self.sampler();
         // Per-leaf candidate feature sets (computed locally from the
         // seed — zero communication, paper §2.2's trick applied to
-        // features).
+        // features). Detached leaves draw no candidates: their subtree
+        // now grows depth-first on the tree builder, so no splitter
+        // proposes splits for them (they stay positionally in the
+        // query until the level update closes them).
         let leaf_candidates: Vec<Vec<usize>> = q
             .leaves
             .iter()
-            .map(|l| sampler.candidates(q.tree, q.depth, l.node_id))
+            .map(|l| {
+                if l.detached {
+                    Vec::new()
+                } else {
+                    sampler.candidates(q.tree, q.depth, l.node_id)
+                }
+            })
             .collect();
         let leaf_totals: Vec<Histogram> = q
             .leaves
@@ -304,7 +318,7 @@ impl SplitterCore {
         // Columns drawn for at least one leaf, with their per-leaf
         // candidacy masks; a non-candidate column skips its pass
         // entirely.
-        let jobs: Vec<(usize, Vec<bool>)> = q
+        let mut jobs: Vec<(usize, Vec<bool>)> = q
             .assigned_columns
             .iter()
             .filter_map(|&j| {
@@ -313,6 +327,12 @@ impl SplitterCore {
             })
             .collect();
 
+        // Opt-in MABSplit elimination: a strided sample pass thins the
+        // (leaf, column) arms before the exact pass below.
+        if self.cfg.split_search == SplitSearch::Mab && jobs.len() > 1 {
+            jobs = self.mab_eliminate(q, state, jobs)?;
+        }
+
         // Row throughput accounting: each job is one full-column pass.
         crate::telemetry::counter("drf_splitter_rows_scanned_total")
             .add(jobs.len() as u64 * self.num_rows() as u64);
@@ -320,7 +340,7 @@ impl SplitterCore {
 
         let per_column = store::run_scans(self.cfg.scan_threads, jobs.len(), |k| {
             let (j, mask) = &jobs[k];
-            self.scan_column_supersplit(*j, mask, state, &leaf_totals)
+            self.scan_column_supersplit(*j, mask, state, &leaf_totals, 1)
         })?;
 
         let mut best: Vec<Option<SplitCandidate>> = vec![None; q.leaves.len()];
@@ -332,6 +352,105 @@ impl SplitterCore {
             }
         }
         Ok(PartialSupersplit { splits: best })
+    }
+
+    /// MABSplit-style successive elimination (arXiv 2212.07473),
+    /// deterministic and seedless: every candidate (leaf, column) arm
+    /// is scored on a strided row sample, and arms whose sampled gain
+    /// plus twice the confidence radius cannot reach their leaf's
+    /// sampled leader are eliminated. The survivors get the exact final
+    /// scan in `find_splits`, so the returned split is exact
+    /// *conditional on the surviving set* — the elimination itself is
+    /// explicitly approximate (`--split-search mab`; the ablation bench
+    /// quantifies the AUC/time trade against the exact default).
+    fn mab_eliminate(
+        &self,
+        q: &SupersplitQuery,
+        state: &TreeState,
+        jobs: Vec<(usize, Vec<bool>)>,
+    ) -> Result<Vec<(usize, Vec<bool>)>> {
+        // Stride from the live (non-detached) bagged population: aim
+        // at ~4k sampled rows. Below ~8k rows the sample would be the
+        // dataset itself — run exact directly.
+        let live: u64 = q
+            .leaves
+            .iter()
+            .filter(|l| !l.detached)
+            .map(|l| l.totals.iter().sum::<u64>())
+            .sum();
+        if live < 8192 {
+            return Ok(jobs);
+        }
+        let stride = ((live / 4096).next_power_of_two() as u32).min(1 << 16);
+
+        // Sampled per-leaf class totals: the sampled scans must score
+        // against the totals of the sampled population, not the full
+        // leaf (the scan derives right-side counts from them).
+        let cl = &state.class_list;
+        let bag_weights = &state.bag_weights;
+        let mut sampled_totals: Vec<Histogram> = q
+            .leaves
+            .iter()
+            .map(|_| Histogram::new(self.num_classes()))
+            .collect();
+        for i in (0..self.num_rows()).step_by(stride as usize) {
+            let h = cl.get(i);
+            let b = bag_weights[i] as u32;
+            if h > 0 && b > 0 {
+                sampled_totals[(h - 1) as usize].add(self.labels[i], b);
+            }
+        }
+
+        crate::telemetry::counter("drf_splitter_rows_scanned_total")
+            .add(jobs.len() as u64 * (self.num_rows() as u64 / stride as u64));
+        crate::telemetry::counter("drf_splitter_column_passes_total").add(jobs.len() as u64);
+        crate::telemetry::counter("drf_mab_sampled_rounds_total").add(1);
+
+        let sampled = store::run_scans(self.cfg.scan_threads, jobs.len(), |k| {
+            let (j, mask) = &jobs[k];
+            self.scan_column_supersplit(*j, mask, state, &sampled_totals, stride)
+        })?;
+
+        // Gains are impurity decreases, bounded by the score's range —
+        // that bound drives the Hoeffding confidence radius.
+        let range = match self.cfg.score_kind {
+            ScoreKind::Gini => 1.0,
+            ScoreKind::Entropy => (self.num_classes().max(2) as f64).log2(),
+        };
+        let mut keep: Vec<Vec<bool>> = jobs.iter().map(|(_, m)| m.clone()).collect();
+        let mut pruned = 0u64;
+        for r in 0..q.leaves.len() {
+            let arms: Vec<usize> = (0..jobs.len()).filter(|&k| jobs[k].1[r]).collect();
+            if arms.len() < 2 {
+                continue;
+            }
+            let n_s = sampled_totals[r].total();
+            if n_s == 0 {
+                continue; // no sampled rows in this leaf — keep all arms
+            }
+            // A sampled arm with no valid split scores 0; if *every*
+            // arm scores 0, the leader is 0 and all arms survive (the
+            // degenerate-sample fallback).
+            let gains: Vec<f64> = arms
+                .iter()
+                .map(|&k| sampled[k][r].as_ref().map_or(0.0, |c| c.gain))
+                .collect();
+            let leader = gains.iter().cloned().fold(0.0f64, f64::max);
+            let eps =
+                range * ((4.0 * arms.len() as f64).ln().max(1.0) / (2.0 * n_s as f64)).sqrt();
+            for (ai, &k) in arms.iter().enumerate() {
+                if gains[ai] + 2.0 * eps < leader {
+                    keep[k][r] = false;
+                    pruned += 1;
+                }
+            }
+        }
+        crate::telemetry::counter("drf_mab_arms_pruned_total").add(pruned);
+        Ok(jobs
+            .into_iter()
+            .zip(keep)
+            .filter_map(|((j, _), mask)| mask.iter().any(|&b| b).then_some((j, mask)))
+            .collect())
     }
 
     /// One column's contribution to the supersplit: a chunk-granular
@@ -350,6 +469,7 @@ impl SplitterCore {
         mask: &[bool],
         state: &TreeState,
         leaf_totals: &[Histogram],
+        stride: u32,
     ) -> Result<Vec<Option<SplitCandidate>>> {
         let cl = &state.class_list;
         let bag_weights = &state.bag_weights;
@@ -359,16 +479,46 @@ impl SplitterCore {
         for (r, &m) in mask.iter().enumerate() {
             cand_tbl[r + 1] = m as u8;
         }
+        if stride > 1 {
+            // Strided sample pass (MAB): only rows on the stride are
+            // live. The XLA batch path has no notion of the stride, so
+            // sampled passes always use the native scans.
+            let smask = stride - 1;
+            let gather = move |i: u32| {
+                let h = cl.get(i as usize);
+                let b = bag_weights[i as usize] as u32;
+                let live = (cand_tbl[h as usize] as u32)
+                    & (b != 0) as u32
+                    & (i & smask == 0) as u32;
+                (h * live, b)
+            };
+            return self.scan_column_gather(j, mask, state, leaf_totals, gather, false);
+        }
         let gather = move |i: u32| {
             let h = cl.get(i as usize);
             let b = bag_weights[i as usize] as u32;
             let live = (cand_tbl[h as usize] as u32) & (b != 0) as u32;
             (h * live, b)
         };
+        self.scan_column_gather(j, mask, state, leaf_totals, gather, true)
+    }
 
+    /// The scan body shared by the exact and the strided (MAB sampled)
+    /// passes: everything downstream of the gather closure.
+    fn scan_column_gather(
+        &self,
+        j: usize,
+        mask: &[bool],
+        state: &TreeState,
+        leaf_totals: &[Histogram],
+        gather: impl Fn(u32) -> (u32, u32),
+        allow_xla: bool,
+    ) -> Result<Vec<Option<SplitCandidate>>> {
+        let cl = &state.class_list;
+        let bag_weights = &state.bag_weights;
         match self.schema.columns[j].ctype {
             ColumnType::Numerical => {
-                if let (Some(scorer), 2) = (&self.xla, self.num_classes()) {
+                if let (Some(scorer), 2, true) = (&self.xla, self.num_classes(), allow_xla) {
                     // The batched XLA task builder needs the whole
                     // presorted slice at once.
                     let q_j = self.materialize_sorted(state, j)?;
@@ -584,6 +734,126 @@ impl SplitterCore {
             .collect())
     }
 
+    /// Depth-next detach (paper complement, arXiv 1910.06853): extract
+    /// the in-bag rows of the requested open leaves — raw values of
+    /// every requested owned column, plus labels and bag weights when
+    /// `want_meta` — so the tree builder can grow those subtrees
+    /// depth-first in memory. Rows are emitted in ascending absolute
+    /// row order per leaf; one chunked pass per column through the
+    /// store, charged like every other scan. Must be called *before*
+    /// the level update that marks the leaves detached (the class list
+    /// still maps them to their current ranks).
+    pub fn materialize(&self, q: &MaterializeQuery) -> Result<MaterializedLeaves> {
+        let _span = crate::span!("materialize", tree = q.tree, depth = q.depth);
+        let trees = self.trees.lock().unwrap();
+        let state = trees
+            .get(&q.tree)
+            .ok_or_else(|| anyhow::anyhow!("splitter {}: unknown tree {}", self.id, q.tree))?;
+        let cl = &state.class_list;
+        let counts = cl.histogram();
+        // Rank → output slot (position in q.ranks).
+        let mut slot_of = vec![usize::MAX; counts.len()];
+        for (s, &rank) in q.ranks.iter().enumerate() {
+            anyhow::ensure!(
+                rank > 0 && (rank as usize) < counts.len(),
+                "splitter {}: materialize rank {rank} out of range",
+                self.id
+            );
+            slot_of[rank as usize] = s;
+        }
+
+        // One class-list pass collecting each leaf's in-bag absolute
+        // rows, ascending (codes > 0 are in-bag by construction).
+        let mut rows: Vec<Vec<u32>> = vec![Vec::new(); q.ranks.len()];
+        for i in 0..self.num_rows() {
+            let h = cl.get(i) as usize;
+            if h != 0 && slot_of[h] != usize::MAX {
+                rows[slot_of[h]].push(i as u32);
+            }
+        }
+
+        // One chunked pass per requested column; each pass fills every
+        // leaf's value vector by merging the sorted row lists against
+        // the chunk's absolute row range.
+        let col_values = store::run_scans(self.cfg.scan_threads, q.columns.len(), |k| {
+            let j = q.columns[k];
+            let mut nums: Vec<Vec<f32>> = vec![Vec::new(); rows.len()];
+            let mut cats: Vec<Vec<u32>> = vec![Vec::new(); rows.len()];
+            let mut cursor = vec![0usize; rows.len()];
+            self.storage.scan_raw(j, &mut |base, chunk| {
+                let lo = base as u32;
+                let hi = lo + chunk.len() as u32;
+                for (s, rs) in rows.iter().enumerate() {
+                    let c = &mut cursor[s];
+                    while *c < rs.len() && rs[*c] < hi {
+                        let off = (rs[*c] - lo) as usize;
+                        match chunk {
+                            RawChunk::Numerical(v) => nums[s].push(v[off]),
+                            RawChunk::Categorical(v) => cats[s].push(v[off]),
+                        }
+                        *c += 1;
+                    }
+                }
+                Ok(())
+            })?;
+            Ok(match self.schema.columns[j].ctype {
+                ColumnType::Numerical => nums.into_iter().map(MaterializedColumn::Num).collect(),
+                ColumnType::Categorical { arity } => cats
+                    .into_iter()
+                    .map(|values| MaterializedColumn::Cat { arity, values })
+                    .collect::<Vec<_>>(),
+            })
+        })?;
+
+        // Transpose column-major scan results into per-leaf column sets
+        // (moves, no clones — leaf vectors can be large).
+        let mut per_leaf: Vec<Vec<MaterializedColumn>> = rows
+            .iter()
+            .map(|_| Vec::with_capacity(q.columns.len()))
+            .collect();
+        for col in col_values {
+            for (s, v) in col.into_iter().enumerate() {
+                per_leaf[s].push(v);
+            }
+        }
+        let leaves = rows
+            .iter()
+            .zip(per_leaf)
+            .map(|(rs, columns)| MaterializedLeaf {
+                rows: rs.len() as u64,
+                labels: if q.want_meta {
+                    rs.iter().map(|&i| self.labels[i as usize]).collect()
+                } else {
+                    Vec::new()
+                },
+                bags: if q.want_meta {
+                    rs.iter().map(|&i| state.bag_weights[i as usize]).collect()
+                } else {
+                    Vec::new()
+                },
+                columns,
+            })
+            .collect();
+        Ok(MaterializedLeaves { leaves })
+    }
+
+    /// A resident subtree finished growing on the tree builder.
+    /// Observability only — the class list already dropped those rows
+    /// when the Detached level update landed — but an unknown tree is
+    /// still an error so a restarted worker triggers replay recovery
+    /// before the next real RPC mis-decodes state.
+    pub fn subtree_done(&self, d: &SubtreeDone) -> Result<()> {
+        let trees = self.trees.lock().unwrap();
+        anyhow::ensure!(
+            trees.contains_key(&d.tree),
+            "splitter {}: unknown tree {}",
+            self.id,
+            d.tree
+        );
+        crate::telemetry::counter("drf_splitter_subtrees_done_total").add(1);
+        Ok(())
+    }
+
     /// Alg. 2 step 7: apply the broadcast level update to the local
     /// class list (identical logic on every worker and the tree builder).
     ///
@@ -731,7 +1001,10 @@ pub fn apply_update_to_class_list(cl: &ClassList, u: &LevelUpdate) -> Result<Cla
         }
         let r = (old - 1) as usize;
         match &u.outcomes[r] {
-            super::messages::LeafOutcome::Closed => 0,
+            // Detached ≡ Closed for the class list: the rows leave the
+            // distributed frontier (their subtree grows on the builder
+            // from the materialized copy).
+            super::messages::LeafOutcome::Closed | super::messages::LeafOutcome::Detached => 0,
             super::messages::LeafOutcome::Split { bitmap, .. } => {
                 let p = pos[r];
                 pos[r] += 1;
@@ -824,6 +1097,7 @@ mod tests {
             score_kind: ScoreKind::Gini,
             prune: PruneMode::Never,
             scan_threads: 1,
+            split_search: SplitSearch::Exact,
         }
     }
 
@@ -858,6 +1132,7 @@ mod tests {
             depth: 0,
             leaves: vec![LeafInfo {
                 node_id: 0,
+                detached: false,
                 totals: ds.class_counts(),
             }],
             assigned_columns: vec![0, 1, 2, 3],
@@ -884,6 +1159,7 @@ mod tests {
             depth: 0,
             leaves: vec![LeafInfo {
                 node_id: 0,
+                detached: false,
                 totals: ds.class_counts(),
             }],
             assigned_columns: vec![0, 1, 2, 3, 4, 5],

@@ -9,7 +9,10 @@
 //! the same trees come out whether workers share an address space or
 //! talk through the loopback stack.
 
-use super::messages::{EvalQuery, EvalResult, LevelUpdate, PartialSupersplit, SupersplitQuery};
+use super::messages::{
+    EvalQuery, EvalResult, LevelUpdate, MaterializeQuery, MaterializedLeaves, PartialSupersplit,
+    SubtreeDone, SupersplitQuery,
+};
 use super::splitter::SplitterCore;
 use super::transport::SplitterPool;
 use super::wire::{
@@ -121,6 +124,14 @@ pub(crate) fn handle_request(core: &SplitterCore, req: Request) -> Response {
             Err(e) => Response::Err(format!("{e}")),
         },
         Request::LevelUpdate(u) => match core.apply_level_update(&u) {
+            Ok(()) => Response::Ok,
+            Err(e) => Response::Err(format!("{e}")),
+        },
+        Request::Materialize(q) => match core.materialize(&q) {
+            Ok(m) => Response::Materialized(m),
+            Err(e) => Response::Err(format!("{e}")),
+        },
+        Request::SubtreeDone(d) => match core.subtree_done(&d) {
             Ok(()) => Response::Ok,
             Err(e) => Response::Err(format!("{e}")),
         },
@@ -266,6 +277,21 @@ impl SplitterPool for TcpPool {
         Ok(())
     }
 
+    fn materialize(&self, splitter: usize, q: &MaterializeQuery) -> Result<MaterializedLeaves> {
+        match self.clients[splitter].call(&Request::Materialize(q.clone()), &self.net)? {
+            Response::Materialized(m) => Ok(m),
+            r => bail!("unexpected response {r:?}"),
+        }
+    }
+
+    fn broadcast_subtree_done(&self, d: &SubtreeDone) -> Result<()> {
+        for s in 0..self.clients.len() {
+            self.broadcast_subtree_done_on(s, d)?;
+        }
+        self.net.add_broadcast_event();
+        Ok(())
+    }
+
     fn finish_tree(&self, tree: u32) -> Result<()> {
         for s in 0..self.clients.len() {
             self.finish_tree_on(s, tree)?;
@@ -297,12 +323,19 @@ impl SplitterPool for TcpPool {
             r => bail!("unexpected response {r:?}"),
         }
     }
+
+    fn broadcast_subtree_done_on(&self, splitter: usize, d: &SubtreeDone) -> Result<()> {
+        match self.clients[splitter].call(&Request::SubtreeDone(*d), &self.net)? {
+            Response::Ok => Ok(()),
+            r => bail!("unexpected response {r:?}"),
+        }
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::{ForestParams, PruneMode, TopologyParams};
+    use crate::config::{ForestParams, PruneMode, SplitSearch, TopologyParams};
     use crate::coordinator::splitter::{memory_storage_for, SplitterConfig};
     use crate::coordinator::topology::Topology;
     use crate::coordinator::transport::DirectPool;
@@ -335,6 +368,7 @@ mod tests {
             score_kind: ScoreKind::Gini,
             prune: PruneMode::Never,
             scan_threads: 1,
+            split_search: SplitSearch::Exact,
         };
         let make_cores = || -> Vec<Arc<SplitterCore>> {
             (0..topology.num_splitters())
@@ -385,6 +419,7 @@ mod tests {
             score_kind: ScoreKind::Gini,
             prune: PruneMode::Never,
             scan_threads: 1,
+            split_search: SplitSearch::Exact,
         };
         let core = Arc::new(SplitterCore::new(
             0,

@@ -13,7 +13,8 @@
 //! metrics are engine-independent.
 
 use super::messages::{
-    EvalQuery, EvalResult, LevelUpdate, PartialSupersplit, SupersplitQuery,
+    EvalQuery, EvalResult, LevelUpdate, MaterializeQuery, MaterializedLeaves, PartialSupersplit,
+    SubtreeDone, SupersplitQuery,
 };
 use super::splitter::SplitterCore;
 use crate::data::io_stats::IoStats;
@@ -33,7 +34,7 @@ use std::sync::Arc;
 ///
 /// ```
 /// use std::sync::Arc;
-/// use drf::config::PruneMode;
+/// use drf::config::{PruneMode, SplitSearch};
 /// use drf::coordinator::splitter::{memory_storage_for, SplitterConfig, SplitterCore};
 /// use drf::coordinator::transport::{DirectPool, SplitterPool};
 /// use drf::data::io_stats::IoStats;
@@ -51,6 +52,7 @@ use std::sync::Arc;
 ///     score_kind: ScoreKind::Gini,
 ///     prune: PruneMode::Never,
 ///     scan_threads: 1,
+///     split_search: SplitSearch::Exact,
 /// };
 /// // Two splitters, each owning half the columns (round-robin).
 /// let splitters = (0..2)
@@ -91,6 +93,14 @@ pub trait SplitterPool: Send + Sync {
     fn eval_conditions(&self, splitter: usize, q: &EvalQuery) -> Result<EvalResult>;
     /// Broadcast the level update to every splitter (the `Dn` bits).
     fn broadcast_level_update(&self, u: &LevelUpdate) -> Result<()>;
+    /// Extract in-bag rows of detached leaves from one splitter's
+    /// columns (depth-next growth; [`MaterializeQuery::want_meta`]
+    /// additionally fetches labels + bag weights).
+    fn materialize(&self, splitter: usize, q: &MaterializeQuery) -> Result<MaterializedLeaves>;
+    /// Tell every splitter a resident subtree finished growing on the
+    /// builder (observability; the class list already dropped those
+    /// rows at detach time).
+    fn broadcast_subtree_done(&self, d: &SubtreeDone) -> Result<()>;
     /// Drop `tree`'s state on every splitter.
     fn finish_tree(&self, tree: u32) -> Result<()>;
     /// Shared network counters.
@@ -109,6 +119,9 @@ pub trait SplitterPool: Send + Sync {
     /// Drop `tree`'s state on a single splitter (failure injection /
     /// cleanup).
     fn finish_tree_on(&self, splitter: usize, tree: u32) -> Result<()>;
+    /// Notify one splitter of a finished resident subtree (recovery
+    /// re-notification after replay).
+    fn broadcast_subtree_done_on(&self, splitter: usize, d: &SubtreeDone) -> Result<()>;
 }
 
 /// In-process pool: direct calls + byte accounting + optional latency.
@@ -192,6 +205,24 @@ impl SplitterPool for DirectPool {
         Ok(())
     }
 
+    fn materialize(&self, splitter: usize, q: &MaterializeQuery) -> Result<MaterializedLeaves> {
+        self.delay();
+        self.net.add_net(q.wire_bytes());
+        let m = self.splitters[splitter].materialize(q)?;
+        self.net.add_net(m.wire_bytes());
+        Ok(m)
+    }
+
+    fn broadcast_subtree_done(&self, d: &SubtreeDone) -> Result<()> {
+        self.delay();
+        self.net
+            .add_broadcast(d.wire_bytes(), self.splitters.len() as u64);
+        for s in &self.splitters {
+            s.subtree_done(d)?;
+        }
+        Ok(())
+    }
+
     fn finish_tree(&self, tree: u32) -> Result<()> {
         self.net.add_broadcast(8, self.splitters.len() as u64);
         for s in &self.splitters {
@@ -220,12 +251,17 @@ impl SplitterPool for DirectPool {
         self.splitters[splitter].finish_tree(tree);
         Ok(())
     }
+
+    fn broadcast_subtree_done_on(&self, splitter: usize, d: &SubtreeDone) -> Result<()> {
+        self.net.add_net(d.wire_bytes());
+        self.splitters[splitter].subtree_done(d)
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::PruneMode;
+    use crate::config::{PruneMode, SplitSearch};
     use crate::coordinator::splitter::{memory_storage_for, SplitterConfig};
     use crate::data::synthetic::{Family, SyntheticSpec};
     use crate::rng::{Bagger, BaggingMode, FeatureSampling};
@@ -242,6 +278,7 @@ mod tests {
             score_kind: ScoreKind::Gini,
             prune: PruneMode::Never,
             scan_threads: 1,
+            split_search: SplitSearch::Exact,
         };
         let splitters = (0..2)
             .map(|s| {

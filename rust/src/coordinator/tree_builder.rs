@@ -1,21 +1,59 @@
-//! The tree builder worker — Alg. 2 of the paper.
+//! The tree builder worker — Alg. 2 of the paper, plus the hybrid
+//! breadth-first / depth-next growth schedule (arXiv 1910.06853).
 //!
 //! A tree builder holds the structure of one decision tree in training
 //! and coordinates the splitters; it has **no access to the dataset**.
 //! Trees grow depth-level by depth-level: one supersplit query round,
 //! one condition-evaluation round, and one class-list broadcast per
 //! level — never per node.
+//!
+//! # Depth-next growth
+//!
+//! Full-dataset passes dominate deep trees: the distributed level
+//! rounds scan every owned column once per depth even when the open
+//! frontier holds a handful of rows. With a cache budget
+//! (`TrainConfig::depth_next_rows` / [`TreeBuilderCore::with_depth_next`],
+//! 0 = disabled), any *remote* frontier leaf whose bagged weight fits
+//! the budget is **detached** at level start: its in-bag rows are
+//! materialized into a compact node-local column set (one `Materialize`
+//! RPC per splitter, each shipping its disjoint column subset) and the
+//! whole subtree below it grows **resident** — per-level split search
+//! runs in RAM over just the subtree's rows, with no further dataset
+//! passes and no per-level RPCs for that subtree.
+//!
+//! Bit-identity with the pure breadth-first schedule is a hard
+//! invariant (asserted across every storage backend and the cluster
+//! engine in `tests/exactness.rs`): resident subtrees grow in lockstep
+//! with the level loop through a merged Remote|Resident frontier walked
+//! in breadth-first order, so node ids — and therefore the per-node
+//! feature draws of [`FeatureSampler`] — are assigned exactly as in
+//! pure BF, and the resident scans reuse the same supersplit scan
+//! classes over the same sorted orders, totals, and tie-breaks as the
+//! splitters. Detached leaves stay positionally in the level's
+//! `SupersplitQuery` (flagged, drawing no candidates) and receive
+//! [`LeafOutcome::Detached`] — ≡ `Closed` for every class list — in the
+//! level update; once a subtree's last resident leaf closes, a
+//! `SubtreeDone` broadcast tells the fleet (observability + recovery
+//! probing). When the remote frontier empties entirely, all RPC phases
+//! are skipped.
 
-use super::messages::{EvalQuery, LeafInfo, LeafOutcome, LevelUpdate, SupersplitQuery};
+use super::messages::{
+    EvalQuery, LeafInfo, LeafOutcome, LevelUpdate, MaterializeQuery, MaterializedColumn,
+    SubtreeDone, SupersplitQuery,
+};
 use super::topology::Topology;
 use super::transport::SplitterPool;
 use crate::config::ForestParams;
+use crate::data::column::SortedEntry;
 use crate::metrics::Stopwatch;
 use crate::rng::FeatureSampler;
+use crate::splits::histogram::Histogram;
 use crate::splits::scorer::pick_best;
-use crate::splits::SplitCandidate;
-use crate::tree::Tree;
+use crate::splits::{categorical, numerical, SplitCandidate};
+use crate::tree::{Condition, Tree};
 use crate::Result;
+use std::collections::BTreeMap;
+use std::sync::Arc;
 
 /// Per-depth-level statistics (feeds the paper's Figure 3 and the
 /// complexity benches).
@@ -49,10 +87,51 @@ pub struct LevelStats {
     pub update_seconds: f64,
 }
 
+/// Node-local column set for one detached subtree. Shared (via `Arc`)
+/// by every open leaf below the detach root; indices are subtree-local
+/// row ids, assigned in ascending absolute-row order at materialization
+/// time so tie-breaks match the splitters' presorted columns.
+struct SubtreeData {
+    /// Label per subtree-local row.
+    labels: Vec<u32>,
+    /// Bagged weight per subtree-local row (all rows are in-bag).
+    bags: Vec<u8>,
+    /// Every dataset column, indexed by original column id.
+    columns: Vec<MaterializedColumn>,
+}
+
+/// Where an open leaf's split search runs.
+#[derive(Clone)]
+enum LeafKind {
+    /// Rows live on the splitters; level rounds go over RPC.
+    Remote,
+    /// Rows are materialized builder-side; splits run in RAM.
+    Resident {
+        data: Arc<SubtreeData>,
+        /// Subtree-local row ids in this leaf, ascending.
+        rows: Vec<u32>,
+        /// Node id of the detach root (keys the progress tracker).
+        root: u32,
+    },
+}
+
 /// One open leaf during construction.
-#[derive(Debug, Clone)]
+#[derive(Clone)]
 struct OpenLeaf {
     node_id: u32,
+    kind: LeafKind,
+}
+
+/// Progress accounting for one detached subtree, keyed by its root
+/// node id. When `live` hits zero the subtree is finished and a
+/// `SubtreeDone` broadcast goes out.
+struct SubtreeTracker {
+    /// In-bag rows materialized for the subtree.
+    rows: u64,
+    /// Open resident leaves still growing.
+    live: u32,
+    /// Tree nodes grown so far (root + 2 per split).
+    nodes: u32,
 }
 
 /// The tree builder core.
@@ -61,6 +140,9 @@ pub struct TreeBuilderCore<'a> {
     topology: &'a Topology,
     params: &'a ForestParams,
     num_features: usize,
+    /// Depth-next cache budget in bagged sample weight; 0 disables
+    /// hybrid growth (pure breadth-first).
+    depth_next_rows: u64,
 }
 
 impl<'a> TreeBuilderCore<'a> {
@@ -75,7 +157,22 @@ impl<'a> TreeBuilderCore<'a> {
             topology,
             params,
             num_features,
+            depth_next_rows: 0,
         }
+    }
+
+    /// Enable depth-next growth: remote frontier leaves whose bagged
+    /// weight is at most `rows` are materialized builder-side and
+    /// their subtrees grow cache-resident. 0 disables.
+    pub fn with_depth_next(mut self, rows: u64) -> Self {
+        self.depth_next_rows = rows;
+        self
+    }
+
+    /// The switch-threshold decision: detach a remote leaf of bagged
+    /// weight `weight` into resident growth?
+    fn should_detach(&self, weight: u64) -> bool {
+        self.depth_next_rows > 0 && weight <= self.depth_next_rows
     }
 
     fn sampler(&self) -> FeatureSampler {
@@ -100,12 +197,16 @@ impl<'a> TreeBuilderCore<'a> {
         let root_counts = pool.root_stats(0, tree_idx)?;
         let mut tree = Tree::new_root(root_counts.clone());
         let mut open: Vec<OpenLeaf> = if self.params.child_open(&root_counts, 0) {
-            vec![OpenLeaf { node_id: 0 }]
+            vec![OpenLeaf {
+                node_id: 0,
+                kind: LeafKind::Remote,
+            }]
         } else {
             vec![]
         };
         let mut stats = Vec::new();
         let mut depth = 0u32;
+        let mut trackers: BTreeMap<u32, SubtreeTracker> = BTreeMap::new();
 
         // Step 3-9: loop over depth levels.
         while !open.is_empty() {
@@ -117,18 +218,56 @@ impl<'a> TreeBuilderCore<'a> {
                 .map(|l| tree.nodes[l.node_id as usize].total_count())
                 .sum();
 
-            // Candidate columns per leaf (deterministic from the seed) +
-            // the level union m''.
+            // Depth-next detach phase: remote frontier leaves that fit
+            // the cache budget switch to resident growth this level.
+            let mut newly_detached = vec![false; open.len()];
+            if self.depth_next_rows > 0 {
+                let detach: Vec<usize> = open
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, l)| {
+                        matches!(l.kind, LeafKind::Remote)
+                            && self.should_detach(tree.nodes[l.node_id as usize].total_count())
+                    })
+                    .map(|(p, _)| p)
+                    .collect();
+                if !detach.is_empty() {
+                    self.materialize_subtrees(
+                        tree_idx,
+                        depth,
+                        &mut open,
+                        &detach,
+                        &mut trackers,
+                    )?;
+                    for &p in &detach {
+                        newly_detached[p] = true;
+                    }
+                }
+            }
+
+            // The splitters' class-list ranks at level start enumerate
+            // the remote-at-level-start frontier in order, which is
+            // exactly the Remote leaves plus the newly detached ones
+            // (still positionally present, flagged, drawing no
+            // candidates).
             let leaf_infos: Vec<LeafInfo> = open
                 .iter()
-                .map(|l| LeafInfo {
+                .enumerate()
+                .filter(|(p, l)| matches!(l.kind, LeafKind::Remote) || newly_detached[*p])
+                .map(|(p, l)| LeafInfo {
                     node_id: l.node_id,
+                    detached: newly_detached[p],
                     totals: tree.nodes[l.node_id as usize].class_counts.clone(),
                 })
                 .collect();
+
+            // Candidate columns per still-remote leaf (deterministic
+            // from the seed) + the level union m''.
             let mut union_cols: Vec<usize> = open
                 .iter()
-                .flat_map(|l| sampler.candidates(tree_idx, depth, l.node_id))
+                .enumerate()
+                .filter(|(p, l)| matches!(l.kind, LeafKind::Remote) && !newly_detached[*p])
+                .flat_map(|(_, l)| sampler.candidates(tree_idx, depth, l.node_id))
                 .collect();
             union_cols.sort_unstable();
             union_cols.dedup();
@@ -138,9 +277,11 @@ impl<'a> TreeBuilderCore<'a> {
             let assignment = self.topology.assign_level(&union_cols);
 
             // Step 3: query the splitters for partial supersplits and
-            // merge into the global optimal supersplit.
+            // merge into the global optimal supersplit. With an empty
+            // remote frontier no columns are assigned, so the whole RPC
+            // round vanishes; resident leaves search in RAM instead.
             let scan_sw = Stopwatch::start();
-            let mut best: Vec<Option<SplitCandidate>> = vec![None; open.len()];
+            let mut best: Vec<Option<SplitCandidate>> = vec![None; leaf_infos.len()];
             {
                 let _span = crate::span!("level_scan", tree = tree_idx, depth = depth);
                 for (&s, cols) in &assignment.per_splitter {
@@ -152,16 +293,38 @@ impl<'a> TreeBuilderCore<'a> {
                     };
                     let partial = pool.find_splits(s, &q)?;
                     anyhow::ensure!(
-                        partial.splits.len() == open.len(),
+                        partial.splits.len() == leaf_infos.len(),
                         "splitter {s} answered {} leaves, expected {}",
                         partial.splits.len(),
-                        open.len()
+                        leaf_infos.len()
                     );
                     for (leaf, cand) in partial.splits.into_iter().enumerate() {
                         if let Some(c) = cand {
                             best[leaf] =
                                 pick_best([best[leaf].take(), Some(c)].into_iter().flatten());
                         }
+                    }
+                }
+            }
+            // Resident split search, still inside the scan phase:
+            // in-RAM supersplits over each resident leaf's rows.
+            let mut resident_best: Vec<Option<SplitCandidate>> = vec![None; open.len()];
+            if open
+                .iter()
+                .any(|l| matches!(l.kind, LeafKind::Resident { .. }))
+            {
+                let _span = crate::span!("subtree_build", tree = tree_idx, depth = depth);
+                for (p, l) in open.iter().enumerate() {
+                    if let LeafKind::Resident { data, rows, .. } = &l.kind {
+                        resident_best[p] = self.resident_split(
+                            tree_idx,
+                            depth,
+                            l.node_id,
+                            data,
+                            rows,
+                            &tree.nodes[l.node_id as usize].class_counts,
+                            &sampler,
+                        );
                     }
                 }
             }
@@ -201,53 +364,137 @@ impl<'a> TreeBuilderCore<'a> {
             let eval_seconds = eval_sw.seconds();
 
             // Steps 4, 6, 8: update the tree structure, decide which
-            // children stay open, close split-less leaves.
+            // children stay open, close split-less leaves. The merged
+            // Remote|Resident frontier is walked in breadth-first
+            // order, so node ids are assigned exactly as in the pure
+            // BF schedule.
             let update_sw = Stopwatch::start();
             let update_span = crate::span!("level_update", tree = tree_idx, depth = depth);
-            let mut outcomes = Vec::with_capacity(open.len());
+            let mut outcomes = Vec::with_capacity(leaf_infos.len());
             let mut next_open = Vec::new();
             let mut num_splits = 0u32;
-            for (leaf, cand) in best.iter().enumerate() {
-                let rank = leaf as u32 + 1;
-                match cand {
-                    None => outcomes.push(LeafOutcome::Closed),
-                    Some(c) => {
-                        let bm = bitmaps
-                            .remove(&rank)
-                            .ok_or_else(|| anyhow::anyhow!("missing bitmap for leaf rank {rank}"))?;
-                        let node_id = open[leaf].node_id;
-                        let (left_id, right_id) = tree.split_node(
-                            node_id,
-                            c.condition.clone(),
-                            c.gain,
-                            c.left_counts.clone(),
-                            c.right_counts.clone(),
-                        );
-                        let left_open = self.params.child_open(&c.left_counts, depth + 1);
-                        let right_open = self.params.child_open(&c.right_counts, depth + 1);
-                        if left_open {
-                            next_open.push(OpenLeaf { node_id: left_id });
+            let mut info_i = 0usize;
+            for (p, leaf) in open.iter_mut().enumerate() {
+                if newly_detached[p] {
+                    // Freshly detached: ≡ Closed for every splitter's
+                    // class list; growth continues residently below.
+                    outcomes.push(LeafOutcome::Detached);
+                    info_i += 1;
+                }
+                match &mut leaf.kind {
+                    LeafKind::Remote => {
+                        let rank = info_i as u32 + 1;
+                        let cand = best[info_i].take();
+                        info_i += 1;
+                        match cand {
+                            None => outcomes.push(LeafOutcome::Closed),
+                            Some(c) => {
+                                let bm = bitmaps.remove(&rank).ok_or_else(|| {
+                                    anyhow::anyhow!("missing bitmap for leaf rank {rank}")
+                                })?;
+                                let (left_id, right_id) = tree.split_node(
+                                    leaf.node_id,
+                                    c.condition.clone(),
+                                    c.gain,
+                                    c.left_counts.clone(),
+                                    c.right_counts.clone(),
+                                );
+                                let left_open = self.params.child_open(&c.left_counts, depth + 1);
+                                let right_open = self.params.child_open(&c.right_counts, depth + 1);
+                                if left_open {
+                                    next_open.push(OpenLeaf {
+                                        node_id: left_id,
+                                        kind: LeafKind::Remote,
+                                    });
+                                }
+                                if right_open {
+                                    next_open.push(OpenLeaf {
+                                        node_id: right_id,
+                                        kind: LeafKind::Remote,
+                                    });
+                                }
+                                num_splits += 1;
+                                outcomes.push(LeafOutcome::Split {
+                                    bitmap: bm,
+                                    left_open,
+                                    right_open,
+                                });
+                            }
                         }
-                        if right_open {
-                            next_open.push(OpenLeaf { node_id: right_id });
+                    }
+                    LeafKind::Resident { data, rows, root } => {
+                        let tracker = trackers
+                            .get_mut(root)
+                            .expect("resident leaf without a subtree tracker");
+                        match resident_best[p].take() {
+                            None => tracker.live -= 1,
+                            Some(c) => {
+                                let (left_id, right_id) = tree.split_node(
+                                    leaf.node_id,
+                                    c.condition.clone(),
+                                    c.gain,
+                                    c.left_counts.clone(),
+                                    c.right_counts.clone(),
+                                );
+                                let left_open = self.params.child_open(&c.left_counts, depth + 1);
+                                let right_open = self.params.child_open(&c.right_counts, depth + 1);
+                                let (left_rows, right_rows) =
+                                    partition_rows(data, rows, &c.condition);
+                                if left_open {
+                                    next_open.push(OpenLeaf {
+                                        node_id: left_id,
+                                        kind: LeafKind::Resident {
+                                            data: data.clone(),
+                                            rows: left_rows,
+                                            root: *root,
+                                        },
+                                    });
+                                }
+                                if right_open {
+                                    next_open.push(OpenLeaf {
+                                        node_id: right_id,
+                                        kind: LeafKind::Resident {
+                                            data: data.clone(),
+                                            rows: right_rows,
+                                            root: *root,
+                                        },
+                                    });
+                                }
+                                num_splits += 1;
+                                tracker.live =
+                                    tracker.live - 1 + left_open as u32 + right_open as u32;
+                                tracker.nodes += 2;
+                            }
                         }
-                        num_splits += 1;
-                        outcomes.push(LeafOutcome::Split {
-                            bitmap: bm,
-                            left_open,
-                            right_open,
-                        });
                     }
                 }
             }
 
             // Step 7: broadcast so every splitter updates its mapping.
-            let update = LevelUpdate {
-                tree: tree_idx,
-                depth,
-                outcomes,
-            };
-            pool.broadcast_level_update(&update)?;
+            // Skipped entirely once the remote frontier is empty.
+            if !leaf_infos.is_empty() {
+                let update = LevelUpdate {
+                    tree: tree_idx,
+                    depth,
+                    outcomes,
+                };
+                pool.broadcast_level_update(&update)?;
+            }
+            // Announce finished subtrees to the fleet.
+            let done: Vec<u32> = trackers
+                .iter()
+                .filter(|(_, t)| t.live == 0)
+                .map(|(&root, _)| root)
+                .collect();
+            for root in done {
+                let t = trackers.remove(&root).expect("tracker vanished");
+                pool.broadcast_subtree_done(&SubtreeDone {
+                    tree: tree_idx,
+                    root,
+                    rows: t.rows,
+                    nodes: t.nodes,
+                })?;
+            }
             drop(update_span);
             let update_seconds = update_sw.seconds();
 
@@ -279,12 +526,239 @@ impl<'a> TreeBuilderCore<'a> {
         crate::telemetry::counter("drf_trees_total").inc();
         Ok((tree, stats))
     }
+
+    /// Detach the frontier leaves at positions `detach` into resident
+    /// growth: fetch their in-bag rows as node-local column sets (one
+    /// `Materialize` RPC per splitter, each shipping its disjoint
+    /// column share) and rewrite the leaves' kind in place.
+    fn materialize_subtrees(
+        &self,
+        tree_idx: u32,
+        depth: u32,
+        open: &mut [OpenLeaf],
+        detach: &[usize],
+        trackers: &mut BTreeMap<u32, SubtreeTracker>,
+    ) -> Result<()> {
+        let _span = crate::span!(
+            "subtree_materialize",
+            tree = tree_idx,
+            depth = depth,
+            leaves = detach.len()
+        );
+        // Splitter-side class-list ranks at level start enumerate the
+        // remote frontier in order.
+        let mut rank = 0u32;
+        let mut remote_rank = vec![0u32; open.len()];
+        for (p, l) in open.iter().enumerate() {
+            if matches!(l.kind, LeafKind::Remote) {
+                rank += 1;
+                remote_rank[p] = rank;
+            }
+        }
+        let ranks: Vec<u32> = detach.iter().map(|&p| remote_rank[p]).collect();
+
+        // Every column ships — resident growth may draw any candidate
+        // at deeper levels. Routed disjointly across the replicas;
+        // labels + bags come from the lowest-id assigned splitter.
+        let all_cols: Vec<usize> = (0..self.num_features).collect();
+        let assignment = self.topology.assign_level(&all_cols);
+        let meta_splitter = *assignment
+            .per_splitter
+            .keys()
+            .next()
+            .ok_or_else(|| anyhow::anyhow!("no splitters to materialize from"))?;
+
+        let mut rows_per_leaf: Vec<Option<u64>> = vec![None; detach.len()];
+        let mut labels: Vec<Vec<u32>> = vec![Vec::new(); detach.len()];
+        let mut bags: Vec<Vec<u8>> = vec![Vec::new(); detach.len()];
+        let mut columns: Vec<Vec<Option<MaterializedColumn>>> = detach
+            .iter()
+            .map(|_| (0..self.num_features).map(|_| None).collect())
+            .collect();
+        for (&s, cols) in &assignment.per_splitter {
+            let q = MaterializeQuery {
+                tree: tree_idx,
+                depth,
+                ranks: ranks.clone(),
+                columns: cols.clone(),
+                want_meta: s == meta_splitter,
+            };
+            let m = self.pool.materialize(s, &q)?;
+            anyhow::ensure!(
+                m.leaves.len() == detach.len(),
+                "splitter {s} materialized {} leaves, expected {}",
+                m.leaves.len(),
+                detach.len()
+            );
+            for (k, leaf) in m.leaves.into_iter().enumerate() {
+                // Replicas must agree on the in-bag row set.
+                match rows_per_leaf[k] {
+                    None => rows_per_leaf[k] = Some(leaf.rows),
+                    Some(prev) => anyhow::ensure!(
+                        prev == leaf.rows,
+                        "splitter {s} disagrees on leaf rows: {} vs {prev}",
+                        leaf.rows
+                    ),
+                }
+                anyhow::ensure!(
+                    leaf.columns.len() == cols.len(),
+                    "splitter {s} sent {} columns, expected {}",
+                    leaf.columns.len(),
+                    cols.len()
+                );
+                for (&j, col) in cols.iter().zip(leaf.columns) {
+                    columns[k][j] = Some(col);
+                }
+                if q.want_meta {
+                    labels[k] = leaf.labels;
+                    bags[k] = leaf.bags;
+                }
+            }
+        }
+
+        for (k, &p) in detach.iter().enumerate() {
+            let node_id = open[p].node_id;
+            let n = rows_per_leaf[k]
+                .ok_or_else(|| anyhow::anyhow!("leaf {node_id} was never materialized"))?;
+            anyhow::ensure!(
+                labels[k].len() as u64 == n && bags[k].len() as u64 == n,
+                "leaf {node_id}: meta length mismatch ({} labels, {} bags, {n} rows)",
+                labels[k].len(),
+                bags[k].len()
+            );
+            let cols: Vec<MaterializedColumn> = std::mem::take(&mut columns[k])
+                .into_iter()
+                .enumerate()
+                .map(|(j, c)| c.ok_or_else(|| anyhow::anyhow!("column {j} was never assigned")))
+                .collect::<Result<_>>()?;
+            let data = Arc::new(SubtreeData {
+                labels: std::mem::take(&mut labels[k]),
+                bags: std::mem::take(&mut bags[k]),
+                columns: cols,
+            });
+            trackers.insert(
+                node_id,
+                SubtreeTracker {
+                    rows: n,
+                    live: 1,
+                    nodes: 1,
+                },
+            );
+            crate::telemetry::counter("drf_subtrees_total").inc();
+            crate::telemetry::counter("drf_subtree_rows").add(n);
+            open[p].kind = LeafKind::Resident {
+                data,
+                rows: (0..n as u32).collect(),
+                root: node_id,
+            };
+        }
+        Ok(())
+    }
+
+    /// Exact split search for one resident leaf: the same supersplit
+    /// scans the splitters run, over the subtree-local column set.
+    /// Single-leaf totals, identical sort order and tie-breaks, so the
+    /// winner is bit-identical to what the distributed round would
+    /// have produced.
+    #[allow(clippy::too_many_arguments)]
+    fn resident_split(
+        &self,
+        tree_idx: u32,
+        depth: u32,
+        node_id: u32,
+        data: &SubtreeData,
+        rows: &[u32],
+        class_counts: &[u64],
+        sampler: &FeatureSampler,
+    ) -> Option<SplitCandidate> {
+        let num_classes = class_counts.len() as u32;
+        let leaf_totals = [Histogram::from_counts(class_counts.to_vec())];
+        let kind = self.params.score_kind;
+        let mut best: Option<SplitCandidate> = None;
+        for j in sampler.candidates(tree_idx, depth, node_id) {
+            let cand = match &data.columns[j] {
+                MaterializedColumn::Num(values) => {
+                    let mut entries: Vec<SortedEntry> = rows
+                        .iter()
+                        .map(|&i| SortedEntry {
+                            value: values[i as usize],
+                            sample: i,
+                        })
+                        .collect();
+                    // Same order as the splitters' presorted columns:
+                    // by value, ties by row id (local ids are assigned
+                    // in ascending absolute-row order).
+                    entries.sort_unstable_by(|a, b| {
+                        a.value
+                            .partial_cmp(&b.value)
+                            .unwrap_or(std::cmp::Ordering::Equal)
+                            .then(a.sample.cmp(&b.sample))
+                    });
+                    let mut scan = numerical::NumericalSupersplitScan::new(
+                        j,
+                        &data.labels,
+                        num_classes,
+                        &leaf_totals,
+                        kind,
+                        |i| (1, data.bags[i as usize] as u32),
+                    );
+                    scan.push(&entries);
+                    scan.finish().pop().flatten()
+                }
+                MaterializedColumn::Cat { arity, values } => {
+                    let vals: Vec<u32> = rows.iter().map(|&i| values[i as usize]).collect();
+                    let leaf_labels: Vec<u32> =
+                        rows.iter().map(|&i| data.labels[i as usize]).collect();
+                    let leaf_bags: Vec<u8> = rows.iter().map(|&i| data.bags[i as usize]).collect();
+                    let mut scan = categorical::CategoricalSupersplitScan::new(
+                        j,
+                        *arity,
+                        &leaf_labels,
+                        num_classes,
+                        &leaf_totals,
+                        kind,
+                        |i| (1, leaf_bags[i as usize] as u32),
+                    );
+                    scan.push(0, &vals);
+                    scan.finish().pop().flatten()
+                }
+            };
+            best = pick_best([best.take(), cand].into_iter().flatten());
+        }
+        best
+    }
+}
+
+/// Partition a resident leaf's rows by the winning condition,
+/// preserving ascending order. Condition true -> left, mirroring the
+/// splitters' bitmap semantics.
+fn partition_rows(data: &SubtreeData, rows: &[u32], cond: &Condition) -> (Vec<u32>, Vec<u32>) {
+    let mut left = Vec::new();
+    let mut right = Vec::new();
+    for &i in rows {
+        let goes_left = match cond {
+            Condition::NumLe { feature, threshold } => match &data.columns[*feature] {
+                MaterializedColumn::Num(values) => values[i as usize] <= *threshold,
+                MaterializedColumn::Cat { .. } => false,
+            },
+            Condition::CatIn { feature, set } => match &data.columns[*feature] {
+                MaterializedColumn::Cat { values, .. } => set.contains(values[i as usize]),
+                MaterializedColumn::Num(_) => false,
+            },
+        };
+        if goes_left {
+            left.push(i);
+        } else {
+            right.push(i);
+        }
+    }
+    (left, right)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::{PruneMode, TopologyParams};
+    use crate::config::{PruneMode, SplitSearch, TopologyParams};
     use crate::coordinator::splitter::{memory_storage_for, SplitterConfig, SplitterCore};
     use crate::coordinator::transport::DirectPool;
     use crate::data::io_stats::IoStats;
@@ -312,6 +786,7 @@ mod tests {
             score_kind: params.score_kind,
             prune: PruneMode::Never,
             scan_threads: 1,
+            split_search: SplitSearch::Exact,
         };
         let splitters = (0..topology.num_splitters())
             .map(|s| {
@@ -418,6 +893,88 @@ mod tests {
         let (tree, stats) = builder.build_tree(0).unwrap();
         assert_eq!(tree.num_nodes(), 1);
         assert!(stats.is_empty());
+    }
+
+    #[test]
+    fn switch_threshold_decision() {
+        let ds = SyntheticSpec::new(Family::Xor { informative: 2 }, 100, 3, 5).generate();
+        let params = ForestParams::default();
+        let (pool, topo) = setup(&ds, &params, 2);
+        // Disabled at 0: nothing detaches, whatever the weight.
+        let builder = TreeBuilderCore::new(&pool, &topo, &params, ds.num_features());
+        assert!(!builder.should_detach(0));
+        assert!(!builder.should_detach(1));
+        assert!(!builder.should_detach(u64::MAX));
+        // Boundary: the budget is inclusive.
+        let builder = builder.with_depth_next(1000);
+        assert!(builder.should_detach(999));
+        assert!(builder.should_detach(1000));
+        assert!(!builder.should_detach(1001));
+        assert!(builder.should_detach(1));
+    }
+
+    #[test]
+    fn depth_next_is_bit_identical_to_breadth_first() {
+        // The tentpole invariant: hybrid growth must produce the exact
+        // same tree as the pure level-by-level schedule, across detach
+        // budgets that switch at the root, mid-tree, and never.
+        let ds = SyntheticSpec::new(Family::LinearCont { informative: 3 }, 400, 6, 21).generate();
+        let params = ForestParams {
+            num_trees: 1,
+            max_depth: 8,
+            min_records: 2,
+            bagging: BaggingMode::Poisson,
+            feature_sampling: FeatureSampling::PerNode,
+            seed: 77,
+            ..Default::default()
+        };
+        let (pool, topo) = setup(&ds, &params, 3);
+        let bf = TreeBuilderCore::new(&pool, &topo, &params, ds.num_features())
+            .build_tree(0)
+            .unwrap()
+            .0;
+        for budget in [1, 50, 200, 100_000] {
+            let (pool, topo) = setup(&ds, &params, 3);
+            let hybrid = TreeBuilderCore::new(&pool, &topo, &params, ds.num_features())
+                .with_depth_next(budget)
+                .build_tree(0)
+                .unwrap()
+                .0;
+            assert_eq!(bf, hybrid, "budget {budget} changed the tree");
+        }
+    }
+
+    #[test]
+    fn depth_next_skips_rpc_rounds_once_resident() {
+        // With a budget larger than the dataset the root detaches at
+        // depth 0; every later level must move zero network bytes
+        // until the final SubtreeDone broadcast.
+        let ds = SyntheticSpec::new(Family::Xor { informative: 2 }, 200, 4, 3).generate();
+        let params = ForestParams {
+            num_trees: 1,
+            max_depth: 6,
+            min_records: 1,
+            bagging: BaggingMode::None,
+            feature_sampling: FeatureSampling::All,
+            seed: 11,
+            ..Default::default()
+        };
+        let (pool, topo) = setup(&ds, &params, 2);
+        let builder =
+            TreeBuilderCore::new(&pool, &topo, &params, ds.num_features()).with_depth_next(1 << 20);
+        let (tree, stats) = builder.build_tree(0).unwrap();
+        assert!(tree.depth() >= 2, "tree should actually grow");
+        // Depth 0 pays for materialization + the Detached update; the
+        // in-between levels are RPC-free (the last level carries the
+        // SubtreeDone broadcast).
+        assert!(stats[0].net_bytes > 0);
+        for s in &stats[1..stats.len() - 1] {
+            assert_eq!(
+                s.net_bytes, 0,
+                "depth {} moved bytes with a fully resident frontier",
+                s.depth
+            );
+        }
     }
 
     #[test]

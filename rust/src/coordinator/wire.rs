@@ -7,7 +7,8 @@
 //! property-tested in `rust/tests/property.rs`-style unit tests below.
 
 use super::messages::{
-    Bitmap, EvalQuery, EvalResult, LeafInfo, LeafOutcome, LevelUpdate, PartialSupersplit,
+    Bitmap, EvalQuery, EvalResult, LeafInfo, LeafOutcome, LevelUpdate, MaterializeQuery,
+    MaterializedColumn, MaterializedLeaf, MaterializedLeaves, PartialSupersplit, SubtreeDone,
     SupersplitQuery,
 };
 use crate::splits::SplitCandidate;
@@ -114,7 +115,7 @@ fn get_candidate(r: &mut Reader<'_>) -> Result<SplitCandidate> {
 /// Version of the splitter RPC protocol. Bumped on any wire change;
 /// exchanged in the Hello handshake so a leader and a standalone worker
 /// from different builds fail fast instead of mis-decoding frames.
-pub const PROTOCOL_VERSION: u32 = 1;
+pub const PROTOCOL_VERSION: u32 = 2;
 
 /// Leader → worker handshake. Identifies the protocol and shard the
 /// leader expects on this connection and carries the training
@@ -138,6 +139,14 @@ pub struct HelloConfig {
     pub score_kind: String,
     /// SPRINT prune threshold (`None` = never prune).
     pub prune_threshold: Option<f64>,
+    /// Split search strategy (`"exact"` or `"mab"`); the worker builds
+    /// its splitter core with the same strategy as the leader so the
+    /// fleet agrees on which scan schedule runs.
+    pub split_search: String,
+    /// Depth-next cache budget the leader trains with; carried so a
+    /// worker can log/validate the full training config (the schedule
+    /// itself is driven entirely by the leader's tree builder).
+    pub depth_next_rows: u64,
 }
 
 /// Worker → leader handshake answer: the worker's actual inventory, so
@@ -163,6 +172,10 @@ pub enum Request {
     FinishTree(u32),
     Shutdown,
     Hello(HelloConfig),
+    /// Extract the in-bag rows of detached leaves (depth-next growth).
+    Materialize(MaterializeQuery),
+    /// A depth-first resident subtree finished on the builder.
+    SubtreeDone(SubtreeDone),
 }
 
 /// The RPC response frame body.
@@ -174,6 +187,8 @@ pub enum Response {
     Evals(EvalResult),
     Err(String),
     Hello(HelloInfo),
+    /// Answer to [`Request::Materialize`].
+    Materialized(MaterializedLeaves),
 }
 
 pub fn encode_request(req: &Request) -> Vec<u8> {
@@ -194,6 +209,7 @@ pub fn encode_request(req: &Request) -> Vec<u8> {
             w.usize_u32(q.leaves.len());
             for l in &q.leaves {
                 w.u32(l.node_id);
+                w.bool(l.detached);
                 w.u64_slice(&l.totals);
             }
             w.usize_u32(q.assigned_columns.len());
@@ -229,6 +245,7 @@ pub fn encode_request(req: &Request) -> Vec<u8> {
                         w.bool(*left_open);
                         w.bool(*right_open);
                     }
+                    LeafOutcome::Detached => w.u8(2),
                 }
             }
         }
@@ -255,6 +272,29 @@ pub fn encode_request(req: &Request) -> Vec<u8> {
                     w.f64(t);
                 }
             }
+            w.str(&h.split_search);
+            w.u64(h.depth_next_rows);
+        }
+        Request::Materialize(q) => {
+            w.u8(8);
+            w.u32(q.tree);
+            w.u32(q.depth);
+            w.bool(q.want_meta);
+            w.usize_u32(q.ranks.len());
+            for &rank in &q.ranks {
+                w.u32(rank);
+            }
+            w.usize_u32(q.columns.len());
+            for &c in &q.columns {
+                w.usize_u32(c);
+            }
+        }
+        Request::SubtreeDone(d) => {
+            w.u8(9);
+            w.u32(d.tree);
+            w.u32(d.root);
+            w.u64(d.rows);
+            w.u32(d.nodes);
         }
     }
     w.into_bytes()
@@ -273,6 +313,7 @@ pub fn decode_request(buf: &[u8]) -> Result<Request> {
                 .map(|_| {
                     Ok(LeafInfo {
                         node_id: r.u32()?,
+                        detached: r.bool()?,
                         totals: r.u64_vec()?,
                     })
                 })
@@ -314,6 +355,7 @@ pub fn decode_request(buf: &[u8]) -> Result<Request> {
                             left_open: r.bool()?,
                             right_open: r.bool()?,
                         },
+                        2 => LeafOutcome::Detached,
                         t => bail!("bad outcome tag {t}"),
                     })
                 })
@@ -337,6 +379,8 @@ pub fn decode_request(buf: &[u8]) -> Result<Request> {
             let num_candidates = r.u32()?;
             let score_kind = r.str()?;
             let prune_threshold = if r.bool()? { Some(r.f64()?) } else { None };
+            let split_search = r.str()?;
+            let depth_next_rows = r.u64()?;
             Request::Hello(HelloConfig {
                 protocol,
                 shard,
@@ -348,8 +392,34 @@ pub fn decode_request(buf: &[u8]) -> Result<Request> {
                 num_candidates,
                 score_kind,
                 prune_threshold,
+                split_search,
+                depth_next_rows,
             })
         }
+        8 => {
+            let tree = r.u32()?;
+            let depth = r.u32()?;
+            let want_meta = r.bool()?;
+            let nr = r.len_u32()?;
+            let ranks = (0..nr).map(|_| r.u32()).collect::<Result<_>>()?;
+            let nc = r.len_u32()?;
+            let columns = (0..nc)
+                .map(|_| Ok(r.u32()? as usize))
+                .collect::<Result<_>>()?;
+            Request::Materialize(MaterializeQuery {
+                tree,
+                depth,
+                ranks,
+                columns,
+                want_meta,
+            })
+        }
+        9 => Request::SubtreeDone(SubtreeDone {
+            tree: r.u32()?,
+            root: r.u32()?,
+            rows: r.u64()?,
+            nodes: r.u32()?,
+        }),
         t => bail!("bad request tag {t}"),
     };
     r.done()?;
@@ -400,6 +470,41 @@ pub fn encode_response(resp: &Response) -> Vec<u8> {
                 w.u32(c);
             }
         }
+        Response::Materialized(m) => {
+            w.u8(6);
+            w.usize_u32(m.leaves.len());
+            for leaf in &m.leaves {
+                w.u64(leaf.rows);
+                w.usize_u32(leaf.labels.len());
+                for &l in &leaf.labels {
+                    w.u32(l);
+                }
+                w.usize_u32(leaf.bags.len());
+                for &b in &leaf.bags {
+                    w.u8(b);
+                }
+                w.usize_u32(leaf.columns.len());
+                for col in &leaf.columns {
+                    match col {
+                        MaterializedColumn::Num(values) => {
+                            w.u8(0);
+                            w.usize_u32(values.len());
+                            for &v in values {
+                                w.f32(v);
+                            }
+                        }
+                        MaterializedColumn::Cat { arity, values } => {
+                            w.u8(1);
+                            w.u32(*arity);
+                            w.usize_u32(values.len());
+                            for &v in values {
+                                w.u32(v);
+                            }
+                        }
+                    }
+                }
+            }
+        }
     }
     w.into_bytes()
 }
@@ -445,6 +550,47 @@ pub fn decode_response(buf: &[u8]) -> Result<Response> {
                 columns,
             })
         }
+        6 => {
+            let nl = r.len_u32()?;
+            let leaves = (0..nl)
+                .map(|_| {
+                    let rows = r.u64()?;
+                    let n = r.len_checked(4)?;
+                    let labels = (0..n).map(|_| r.u32()).collect::<Result<_>>()?;
+                    let nb = r.len_u32()?;
+                    let bags = r.take(nb)?.to_vec();
+                    let nc = r.len_u32()?;
+                    let columns = (0..nc)
+                        .map(|_| {
+                            Ok(match r.u8()? {
+                                0 => {
+                                    let nv = r.len_checked(4)?;
+                                    MaterializedColumn::Num(
+                                        (0..nv).map(|_| r.f32()).collect::<Result<_>>()?,
+                                    )
+                                }
+                                1 => {
+                                    let arity = r.u32()?;
+                                    let nv = r.len_checked(4)?;
+                                    MaterializedColumn::Cat {
+                                        arity,
+                                        values: (0..nv).map(|_| r.u32()).collect::<Result<_>>()?,
+                                    }
+                                }
+                                t => bail!("bad column tag {t}"),
+                            })
+                        })
+                        .collect::<Result<_>>()?;
+                    Ok(MaterializedLeaf {
+                        rows,
+                        labels,
+                        bags,
+                        columns,
+                    })
+                })
+                .collect::<Result<_>>()?;
+            Response::Materialized(MaterializedLeaves { leaves })
+        }
         t => bail!("bad response tag {t}"),
     };
     r.done()?;
@@ -488,7 +634,7 @@ mod tests {
     #[test]
     fn request_roundtrip_random() {
         run_cases(0x31E, 40, |rng| {
-            let req = match rng.usize(0, 5) {
+            let req = match rng.usize(0, 7) {
                 0 => Request::StartTree(rng.u64(1000) as u32),
                 1 => Request::RootStats(rng.u64(1000) as u32),
                 2 => Request::FindSplits(SupersplitQuery {
@@ -497,6 +643,7 @@ mod tests {
                     leaves: (0..rng.usize(0, 6))
                         .map(|_| LeafInfo {
                             node_id: rng.u64(1000) as u32,
+                            detached: rng.bool(0.2),
                             totals: (0..rng.usize(1, 4)).map(|_| rng.u64(1 << 40)).collect(),
                         })
                         .collect(),
@@ -516,6 +663,8 @@ mod tests {
                         .map(|_| {
                             if rng.bool(0.3) {
                                 LeafOutcome::Closed
+                            } else if rng.bool(0.2) {
+                                LeafOutcome::Detached
                             } else {
                                 LeafOutcome::Split {
                                     bitmap: random_bitmap(rng),
@@ -525,6 +674,19 @@ mod tests {
                             }
                         })
                         .collect(),
+                }),
+                5 => Request::Materialize(MaterializeQuery {
+                    tree: rng.u64(100) as u32,
+                    depth: rng.u64(30) as u32,
+                    ranks: (0..rng.usize(0, 6)).map(|_| rng.u64(64) as u32).collect(),
+                    columns: (0..rng.usize(0, 8)).map(|_| rng.usize(0, 99)).collect(),
+                    want_meta: rng.bool(0.5),
+                }),
+                6 => Request::SubtreeDone(SubtreeDone {
+                    tree: rng.u64(100) as u32,
+                    root: rng.u64(1000) as u32,
+                    rows: rng.u64(1 << 40),
+                    nodes: rng.u64(1000) as u32,
                 }),
                 _ => Request::FinishTree(rng.u64(1000) as u32),
             };
@@ -537,7 +699,7 @@ mod tests {
     #[test]
     fn response_roundtrip_random() {
         run_cases(0x52E, 40, |rng| {
-            let resp = match rng.usize(0, 4) {
+            let resp = match rng.usize(0, 5) {
                 0 => Response::Ok,
                 1 => Response::RootStats(
                     (0..rng.usize(0, 5)).map(|_| rng.u64(1 << 50)).collect(),
@@ -557,6 +719,34 @@ mod tests {
                 3 => Response::Evals(EvalResult {
                     bitmaps: (0..rng.usize(0, 4))
                         .map(|_| (rng.u64(64) as u32 + 1, random_bitmap(rng)))
+                        .collect(),
+                }),
+                4 => Response::Materialized(MaterializedLeaves {
+                    leaves: (0..rng.usize(0, 3))
+                        .map(|_| {
+                            let n = rng.usize(0, 6);
+                            MaterializedLeaf {
+                                rows: n as u64,
+                                labels: (0..n).map(|_| rng.u64(5) as u32).collect(),
+                                bags: (0..n).map(|_| rng.u64(4) as u8).collect(),
+                                columns: (0..rng.usize(0, 3))
+                                    .map(|_| {
+                                        if rng.bool(0.5) {
+                                            MaterializedColumn::Num(
+                                                (0..n).map(|_| rng.f32()).collect(),
+                                            )
+                                        } else {
+                                            MaterializedColumn::Cat {
+                                                arity: 7,
+                                                values: (0..n)
+                                                    .map(|_| rng.u64(7) as u32)
+                                                    .collect(),
+                                            }
+                                        }
+                                    })
+                                    .collect(),
+                            }
+                        })
                         .collect(),
                 }),
                 _ => Response::Err("splitter 3: unknown tree 7".into()),
@@ -591,6 +781,8 @@ mod tests {
             num_candidates: 5,
             score_kind: "gini".into(),
             prune_threshold: Some(0.75),
+            split_search: "mab".into(),
+            depth_next_rows: 65536,
         });
         assert_eq!(decode_request(&encode_request(&req)).unwrap(), req);
         let req2 = Request::Hello(HelloConfig {
@@ -604,6 +796,8 @@ mod tests {
             num_candidates: 1,
             score_kind: "entropy".into(),
             prune_threshold: None,
+            split_search: "exact".into(),
+            depth_next_rows: 0,
         });
         assert_eq!(decode_request(&encode_request(&req2)).unwrap(), req2);
         let resp = Response::Hello(HelloInfo {

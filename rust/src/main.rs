@@ -81,6 +81,8 @@ const TRAIN_FLAGS: &[&str] = &[
     "builders",
     "latency-us",
     "storage",
+    "depth-next-rows",
+    "split-search",
     "scan-threads",
     "prefetch-chunks",
     "object-store",
@@ -153,6 +155,7 @@ USAGE:
             [--sampling per_node|per_depth|all] [--bagging poisson|none]
             [--splitters W] [--redundancy D] [--builders B]
             [--latency-us U] [--storage memory|disk|disk_v2|mmap|remote]
+            [--depth-next-rows N] [--split-search exact|mab]
             [--object-store HOST:PORT]
             [--scan-threads K] [--prefetch-chunks P]
             [--engine direct|threaded|tcp|cluster]
@@ -197,6 +200,20 @@ without it the trainer self-hosts a loopback objstore —
 `--prefetch-chunks` pipelines the range reads, transient fetch
 failures retry with backoff and resume at chunk boundaries). All
 modes produce bit-identical forests.
+
+Training schedule: trees grow breadth-first level by level; once an
+open node's bagged row count drops to `--depth-next-rows N` (default
+65536, the chunk size) the builder materializes that node's rows into
+a compact in-memory column set and grows the whole subtree locally —
+the deep tail of the tree stops paying per-level distributed scan
+rounds. `--depth-next-rows 0` disables the switch (pure breadth-first).
+Both schedules produce bit-identical forests. `--split-search mab`
+replaces the exhaustive supersplit scan with a successive-elimination
+sampled pass (MABSplit-style) that prunes hopeless candidate features
+on row subsamples before one exact final scan over the survivors;
+`exact` (the default) keeps the always-exhaustive scan. MAB changes
+which candidates reach the final scan, so forests may differ from
+`exact` — use it when wall-clock beats bit-reproducibility.
 
 Object store: `drf objstore --dir DIR` serves byte ranges of the DRFC
 files under DIR (a `drf generate` dataset directory or a `drf shard`
@@ -315,6 +332,10 @@ fn cmd_train(argv: &[String]) -> Result<()> {
             "remote" => StorageMode::Remote,
             _ => bail!("storage must be memory|disk|disk_v2|mmap|remote"),
         };
+    }
+    cfg.depth_next_rows = args.get_u64("depth-next-rows", cfg.depth_next_rows)?;
+    if let Some(v) = args.get("split-search") {
+        cfg.split_search = drf::config::SplitSearch::parse(v)?;
     }
     cfg.scan_threads = args.get_usize("scan-threads", cfg.scan_threads)?;
     cfg.prefetch_chunks = args.get_usize("prefetch-chunks", cfg.prefetch_chunks)?;

@@ -6,7 +6,8 @@
 use drf::cluster::{ClusterOptions, ClusterPool};
 use drf::config::{Engine, TopologyParams, TrainConfig};
 use drf::coordinator::messages::{
-    EvalQuery, EvalResult, LevelUpdate, PartialSupersplit, SupersplitQuery,
+    EvalQuery, EvalResult, LevelUpdate, MaterializeQuery, MaterializedLeaves, PartialSupersplit,
+    SubtreeDone, SupersplitQuery,
 };
 use drf::coordinator::recovery::RecoveringPool;
 use drf::coordinator::topology::Topology;
@@ -308,6 +309,22 @@ impl SplitterPool for KillOnce<'_> {
         self.inner.broadcast_level_update(u)
     }
 
+    fn materialize(
+        &self,
+        splitter: usize,
+        q: &MaterializeQuery,
+    ) -> anyhow::Result<MaterializedLeaves> {
+        self.inner.materialize(splitter, q)
+    }
+
+    fn broadcast_subtree_done(&self, d: &SubtreeDone) -> anyhow::Result<()> {
+        self.inner.broadcast_subtree_done(d)
+    }
+
+    fn broadcast_subtree_done_on(&self, splitter: usize, d: &SubtreeDone) -> anyhow::Result<()> {
+        self.inner.broadcast_subtree_done_on(splitter, d)
+    }
+
     fn finish_tree(&self, tree: u32) -> anyhow::Result<()> {
         self.inner.finish_tree(tree)
     }
@@ -361,6 +378,8 @@ fn training_survives_worker_kill_and_restart() {
         num_candidates: cfg.forest.candidates_for(FEATURES) as u32,
         score_kind: cfg.forest.score_kind.as_str().into(),
         prune_threshold: None,
+        split_search: "exact".into(),
+        depth_next_rows: 0,
     };
     let pool = ClusterPool::connect(
         &[addr0, addr1],
@@ -409,5 +428,100 @@ fn training_survives_worker_kill_and_restart() {
     assert_eq!(
         direct.trees, trees,
         "a worker kill + restart mid-training must not change the forest"
+    );
+}
+
+#[test]
+fn depth_next_training_survives_worker_kill_and_restart() {
+    // Same drill with the hybrid schedule engaged: a 40-row switch
+    // threshold keeps the first levels breadth-first (so the depth-2
+    // kill fires while the replay log matters), then detaches the
+    // frontier — the restarted worker must serve Materialize extracts
+    // and accept SubtreeDone notices it has no memory of.
+    let tmp = drf::util::tempdir().unwrap();
+    shard_via_cli(tmp.path(), 2);
+    let ds = dataset();
+    let mut cfg = forest_cfg(2);
+    cfg.depth_next_rows = 40;
+    let topo = Topology::new(
+        ds.num_features(),
+        &TopologyParams {
+            num_splitters: Some(2),
+            ..Default::default()
+        },
+    );
+
+    // Reference forest from the in-process engine, same switch budget.
+    let (direct, _) = RandomForest::train_with_config(&ds, &cfg).unwrap();
+
+    let (_keep0, addr0) = spawn_worker(&tmp.path().join("shard_0"));
+    let (g1, addr1) = spawn_worker(&tmp.path().join("shard_1"));
+    let victim = Mutex::new(g1);
+
+    let hello = HelloConfig {
+        protocol: PROTOCOL_VERSION,
+        shard: 0,
+        num_splitters: 2,
+        redundancy: 1,
+        seed: cfg.forest.seed,
+        bagging: cfg.forest.bagging.as_str().into(),
+        sampling: cfg.forest.feature_sampling.as_str().into(),
+        num_candidates: cfg.forest.candidates_for(FEATURES) as u32,
+        score_kind: cfg.forest.score_kind.as_str().into(),
+        prune_threshold: None,
+        split_search: "exact".into(),
+        depth_next_rows: cfg.depth_next_rows,
+    };
+    let pool = ClusterPool::connect(
+        &[addr0, addr1],
+        &topo,
+        hello,
+        ROWS as u64,
+        ds.num_classes(),
+        ClusterOptions::default(),
+    )
+    .unwrap();
+
+    let shard1_dir = tmp.path().join("shard_1");
+    let kill = || {
+        let mut guard = victim.lock().unwrap();
+        let _ = guard.0.kill();
+        let _ = guard.0.wait();
+        let (fresh, new_addr) = spawn_worker(&shard1_dir);
+        pool.set_worker_addr(1, &new_addr).unwrap();
+        *guard = fresh;
+    };
+    let killer = KillOnce {
+        inner: &pool,
+        kill: Box::new(kill),
+        fired: AtomicBool::new(false),
+        trigger_depth: 2,
+    };
+    let recovering = RecoveringPool::new(killer);
+    let subtrees_before =
+        series_value(&drf::telemetry::render(), "drf_subtrees_total").unwrap_or(0);
+    let builder = TreeBuilderCore::new(&recovering, &topo, &cfg.forest, ds.num_features())
+        .with_depth_next(cfg.depth_next_rows);
+    let trees: Vec<_> = (0..cfg.forest.num_trees as u32)
+        .map(|t| builder.build_tree(t).unwrap().0)
+        .collect();
+
+    assert!(
+        recovering.inner().fired.load(Ordering::SeqCst),
+        "the kill must actually have fired (tree never reached depth 2?)"
+    );
+    assert!(
+        recovering.recoveries() >= 1,
+        "the restarted worker must have been rebuilt by replay"
+    );
+    let subtrees_after =
+        series_value(&drf::telemetry::render(), "drf_subtrees_total").unwrap_or(0);
+    assert!(
+        subtrees_after > subtrees_before,
+        "no subtree ever detached — the drill did not exercise depth-next"
+    );
+    assert_eq!(
+        direct.trees, trees,
+        "a worker kill + restart must not change the depth-next forest"
     );
 }

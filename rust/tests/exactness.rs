@@ -162,6 +162,70 @@ fn sliq_and_sprint_also_exact_on_mixed_data() {
 }
 
 #[test]
+fn depth_next_budgets_exact_across_storage_and_scan_threads() {
+    // The hybrid breadth-first/depth-next schedule is a data-residency
+    // optimisation: whatever the switch threshold — never (0), so
+    // small that only deep nodes detach, or the default where the
+    // whole tree goes resident at the root — the forest must stay
+    // bit-identical to the classic trainer, on every storage backend
+    // and scan-thread count.
+    let ds = LeoLikeSpec::new(500, 31).generate();
+    let params = ForestParams {
+        num_trees: 2,
+        max_depth: 7,
+        min_records: 5,
+        bagging: BaggingMode::Poisson,
+        feature_sampling: FeatureSampling::PerNode,
+        seed: 4242,
+        ..Default::default()
+    };
+    let classic = ClassicTrainer::new(&ds, &params).train_forest();
+    for budget in [0u64, 40, 200, 65_536] {
+        for (storage, scan_threads) in [
+            (StorageMode::Memory, 1),
+            (StorageMode::Memory, 3),
+            (StorageMode::Disk, 1),
+            (StorageMode::DiskV2, 2),
+            (StorageMode::Mmap, 2),
+        ] {
+            let trees = drf_trees(&ds, &params, |cfg| {
+                cfg.depth_next_rows = budget;
+                cfg.storage = storage;
+                cfg.scan_threads = scan_threads;
+            });
+            assert_eq!(
+                classic, trees,
+                "budget {budget} / {storage:?} / {scan_threads} scan threads diverged"
+            );
+        }
+    }
+}
+
+#[test]
+fn mab_split_search_trains_a_sane_forest() {
+    // MABSplit is the one opt-in that may change the model (the sampled
+    // elimination pass decides which candidates reach the exact final
+    // scan). It must still produce a well-formed forest that actually
+    // learns the task; on small data every arm survives to the exact
+    // pass, so here it even matches the exhaustive scan.
+    let ds = SyntheticSpec::new(Family::Xor { informative: 3 }, 700, 8, 23).generate();
+    let params = ForestParams {
+        num_trees: 3,
+        max_depth: 8,
+        bagging: BaggingMode::Poisson,
+        seed: 7,
+        ..Default::default()
+    };
+    let trees = drf_trees(&ds, &params, |cfg| {
+        cfg.split_search = drf::config::SplitSearch::Mab;
+    });
+    assert_eq!(trees.len(), 3);
+    let forest = RandomForest { trees, num_classes: 2 };
+    let auc = drf::metrics::auc(&forest.predict_scores(&ds), ds.labels());
+    assert!(auc > 0.9, "MAB forest failed to learn XOR: AUC {auc}");
+}
+
+#[test]
 fn property_exactness_over_random_configs() {
     // Property test: random schema/seed/worker-count configurations all
     // preserve exactness.
