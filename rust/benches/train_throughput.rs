@@ -33,7 +33,7 @@ use drf::data::synthetic::{Family, SyntheticSpec};
 use drf::data::Dataset;
 use drf::forest::RandomForest;
 use drf::rng::BaggingMode;
-use drf::util::bench::{bench, fmt_count, sized, write_bench_json, Table};
+use drf::util::bench::{bench, fmt_count, sized, smoke_mode, write_bench_json, Table};
 use drf::util::Json;
 
 const FEATURES: usize = 12;
@@ -121,6 +121,48 @@ fn depth_next_section(rows: usize) -> Json {
         .set("bf_rows_per_s", Json::Num(bf_rps))
         .set("depth_next_rows_per_s", Json::Num(dn_rps))
         .set("speedup", Json::Num(dn_rps / bf_rps));
+    o
+}
+
+/// Tracing must be observation-only in cost as well as output: the
+/// same in-memory training loop with the JSONL span sink off vs on.
+/// Spans are per-phase (tens of events per tree), not per-row, so the
+/// sink should be noise; the smoke run enforces a 5% overhead budget.
+fn tracing_overhead_section(rows: usize) -> Json {
+    let ds =
+        SyntheticSpec::new(Family::Majority { informative: 5 }, rows, FEATURES, 4).generate();
+    let cfg = config(StorageMode::Memory, 1, 0);
+    let off = bench(3, 12.0, || {
+        std::hint::black_box(RandomForest::train_with_config(&ds, &cfg).unwrap());
+    });
+    let dir = drf::util::tempdir().unwrap();
+    let sink = dir.path().join("bench_trace.jsonl");
+    drf::telemetry::set_trace_out(&sink).unwrap();
+    let on = bench(3, 12.0, || {
+        std::hint::black_box(RandomForest::train_with_config(&ds, &cfg).unwrap());
+    });
+    drf::telemetry::clear_trace_out();
+    let off_rps = (rows * TREES) as f64 / off.mean_s;
+    let on_rps = (rows * TREES) as f64 / on.mean_s;
+    // Positive = tracing cost; small negative values are timing noise.
+    let overhead = (off_rps - on_rps) / off_rps;
+    println!(
+        "\ntracing: off {} rows/s, on {} rows/s (overhead {:+.1}%)",
+        fmt_count(off_rps),
+        fmt_count(on_rps),
+        overhead * 100.0
+    );
+    if smoke_mode() && overhead > 0.05 {
+        panic!(
+            "tracing overhead {:.1}% exceeds the 5% budget \
+             (off {off_rps:.0} rows/s, on {on_rps:.0} rows/s)",
+            overhead * 100.0
+        );
+    }
+    let mut o = Json::object();
+    o.set("off_rows_per_s", Json::Num(off_rps))
+        .set("on_rows_per_s", Json::Num(on_rps))
+        .set("overhead_frac", Json::Num(overhead));
     o
 }
 
@@ -273,6 +315,7 @@ fn main() {
     table.print();
 
     let depth_next = depth_next_section(rows);
+    let tracing = tracing_overhead_section(rows);
 
     let mut o = table.to_json();
     o.set("rows", Json::from_usize(rows))
@@ -280,7 +323,8 @@ fn main() {
         .set("trees", Json::from_usize(TREES))
         .set("splitters", Json::from_usize(SPLITTERS))
         .set("families", Json::Arr(fam_jsons))
-        .set("depth_next", depth_next);
+        .set("depth_next", depth_next)
+        .set("tracing", tracing);
     write_bench_json("train", o);
     if !any_parallel_win {
         println!(

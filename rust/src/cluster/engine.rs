@@ -27,10 +27,11 @@ use crate::coordinator::messages::{
 use crate::coordinator::topology::Topology;
 use crate::coordinator::transport::SplitterPool;
 use crate::coordinator::wire::{
-    decode_response, encode_request, read_frame, write_frame, HelloConfig, Request, Response,
-    PROTOCOL_VERSION,
+    decode_response, encode_request, encode_request_traced, read_frame, write_frame, HelloConfig,
+    Request, Response, PROTOCOL_VERSION,
 };
 use crate::data::io_stats::IoStats;
+use crate::telemetry::{clock_sync_exchange, current_context, record_clock_sync, trace_enabled};
 use crate::Result;
 use anyhow::{anyhow, bail, ensure, Context};
 use std::io::{BufReader, BufWriter};
@@ -251,6 +252,24 @@ impl ClusterPool {
             "worker {s} column inventory {cols:?} does not match the topology's {:?}",
             self.slots[s].columns
         );
+        // With tracing active, estimate this worker's clock offset via a
+        // short RPC-midpoint exchange so `drf trace merge` can align its
+        // timeline with ours. Runs on every (re)handshake: a restarted
+        // worker has a fresh clock epoch, and the newest sync wins.
+        if trace_enabled() {
+            let body = encode_request(&Request::TimeSync);
+            let peer = clock_sync_exchange(4, || -> Result<crate::telemetry::TimeSyncReply> {
+                write_frame(&mut conn.w, &body)?;
+                let frame = read_frame(&mut conn.r)?;
+                self.net.add_net(body.len() as u64 + 4);
+                self.net.add_net(frame.len() as u64 + 4);
+                match decode_response(&frame)? {
+                    Response::TimeSync(t) => Ok(t),
+                    r => bail!("unexpected TimeSync response {r:?}"),
+                }
+            })?;
+            record_clock_sync(&peer);
+        }
         Ok(conn)
     }
 
@@ -263,7 +282,10 @@ impl ClusterPool {
         if guard.is_none() {
             *guard = Some(self.open_conn(s)?);
         }
-        let body = encode_request(req);
+        // Attach this thread's trace context so the worker's spans
+        // parent under the round span issuing the RPC.
+        let ctx = current_context();
+        let body = encode_request_traced(req, ctx.as_ref());
         let round_trip = |conn: &mut Conn| -> Result<Vec<u8>> {
             write_frame(&mut conn.w, &body)?;
             read_frame(&mut conn.r)

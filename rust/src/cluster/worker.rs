@@ -32,8 +32,8 @@ use crate::config::PruneMode;
 use crate::coordinator::splitter::{SplitterConfig, SplitterCore};
 use crate::coordinator::tcp::{handle_request, hello_info_for};
 use crate::coordinator::wire::{
-    decode_request, encode_response, read_frame, write_frame, HelloConfig, HelloInfo, Request,
-    Response, PROTOCOL_VERSION,
+    decode_request_traced, encode_response, read_frame, write_frame, HelloConfig, HelloInfo,
+    Request, Response, PROTOCOL_VERSION,
 };
 use crate::data::disk::{self, ColumnReader};
 use crate::data::io_stats::IoStats;
@@ -471,19 +471,30 @@ fn serve_connection(state: &WorkerState, stream: TcpStream) -> Result<()> {
             Ok(f) => f,
             Err(_) => return Ok(()), // peer closed
         };
-        let response = match decode_request(&frame) {
+        let response = match decode_request_traced(&frame) {
             Err(e) => Response::Err(format!("bad request: {e}")),
-            Ok(Request::Shutdown) => {
+            Ok((Request::Shutdown, _)) => {
                 write_frame(&mut writer, &encode_response(&Response::Ok))?;
                 return Ok(());
             }
-            Ok(Request::Hello(h)) => match state.configure(&h) {
+            Ok((Request::Hello(h), _)) => match state.configure(&h) {
                 Ok(info) => Response::Hello(info),
                 Err(e) => Response::Err(format!("{e:#}")),
             },
-            Ok(req) => match state.core() {
+            // TimeSync is answered pre-handshake (the leader syncs
+            // clocks right after Hello, but a probe must also work).
+            Ok((Request::TimeSync, _)) => {
+                Response::TimeSync(crate::telemetry::time_sync_reply())
+            }
+            Ok((req, ctx)) => match state.core() {
                 None => Response::Err("no handshake: send Hello before other requests".into()),
-                Some(core) => handle_request(&core, req),
+                Some(core) => {
+                    // Serve under the leader's span so this worker's
+                    // spans (find_splits, materialize, …) parent into
+                    // the leader's round in the merged trace.
+                    let _trace = crate::telemetry::adopt_remote_context(ctx.as_ref());
+                    handle_request(&core, req)
+                }
             },
         };
         write_frame(&mut writer, &encode_response(&response))?;

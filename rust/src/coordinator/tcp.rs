@@ -16,10 +16,11 @@ use super::messages::{
 use super::splitter::SplitterCore;
 use super::transport::SplitterPool;
 use super::wire::{
-    decode_request, decode_response, encode_request, encode_response, read_frame, write_frame,
-    HelloInfo, Request, Response, PROTOCOL_VERSION,
+    decode_request_traced, decode_response, encode_request_traced, encode_response, read_frame,
+    write_frame, HelloInfo, Request, Response, PROTOCOL_VERSION,
 };
 use crate::data::io_stats::IoStats;
+use crate::telemetry::{adopt_remote_context, current_context, time_sync_reply};
 use crate::Result;
 use anyhow::{bail, Context};
 use std::io::{BufReader, BufWriter};
@@ -92,13 +93,18 @@ fn serve_connection(core: &SplitterCore, stream: TcpStream) -> Result<()> {
             Ok(f) => f,
             Err(_) => return Ok(()), // peer closed
         };
-        let response = match decode_request(&frame) {
+        let response = match decode_request_traced(&frame) {
             Err(e) => Response::Err(format!("bad request: {e}")),
-            Ok(Request::Shutdown) => {
+            Ok((Request::Shutdown, _)) => {
                 write_frame(&mut writer, &encode_response(&Response::Ok))?;
                 return Ok(());
             }
-            Ok(req) => handle_request(core, req),
+            Ok((req, ctx)) => {
+                // Spans opened while serving this request parent under
+                // the caller's span (when it sent context).
+                let _trace = adopt_remote_context(ctx.as_ref());
+                handle_request(core, req)
+            }
         };
         write_frame(&mut writer, &encode_response(&response))?;
     }
@@ -140,6 +146,7 @@ pub(crate) fn handle_request(core: &SplitterCore, req: Request) -> Response {
             Response::Ok
         }
         Request::Shutdown => Response::Ok,
+        Request::TimeSync => Response::TimeSync(time_sync_reply()),
         Request::Hello(h) => {
             // The core is already configured (in-process servers) — the
             // handshake validates identity and reports the inventory.
@@ -194,7 +201,8 @@ impl Client {
     }
 
     fn call(&self, req: &Request, net: &IoStats) -> Result<Response> {
-        let body = encode_request(req);
+        let ctx = current_context();
+        let body = encode_request_traced(req, ctx.as_ref());
         let mut guard = self.reader.lock().unwrap();
         net.add_net(body.len() as u64 + 4);
         write_frame(&mut guard.1, &body)?;

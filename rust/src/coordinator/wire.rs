@@ -12,7 +12,9 @@ use super::messages::{
     SupersplitQuery,
 };
 use crate::splits::SplitCandidate;
+use crate::telemetry::{TimeSyncReply, TraceContext};
 use crate::tree::{CategorySet, Condition};
+use crate::util::wire::{get_trace_context, put_trace_context};
 use crate::Result;
 use anyhow::{bail, Context};
 
@@ -115,7 +117,11 @@ fn get_candidate(r: &mut Reader<'_>) -> Result<SplitCandidate> {
 /// Version of the splitter RPC protocol. Bumped on any wire change;
 /// exchanged in the Hello handshake so a leader and a standalone worker
 /// from different builds fail fast instead of mis-decoding frames.
-pub const PROTOCOL_VERSION: u32 = 2;
+/// v3 added the `TimeSync` RPC and the optional trace-context request
+/// trailer — both backward-decodable (a context-free v3 frame is
+/// byte-identical to v2), but negotiated in Hello all the same so a
+/// mixed fleet fails fast rather than dropping trace context silently.
+pub const PROTOCOL_VERSION: u32 = 3;
 
 /// Leader → worker handshake. Identifies the protocol and shard the
 /// leader expects on this connection and carries the training
@@ -176,6 +182,8 @@ pub enum Request {
     Materialize(MaterializeQuery),
     /// A depth-first resident subtree finished on the builder.
     SubtreeDone(SubtreeDone),
+    /// Ask the peer for its trace clock + identity (clock alignment).
+    TimeSync,
 }
 
 /// The RPC response frame body.
@@ -189,10 +197,51 @@ pub enum Response {
     Hello(HelloInfo),
     /// Answer to [`Request::Materialize`].
     Materialized(MaterializedLeaves),
+    /// Answer to [`Request::TimeSync`].
+    TimeSync(TimeSyncReply),
 }
 
+/// Encode a [`TimeSyncReply`] (shared by request/response codecs that
+/// carry one).
+pub fn put_time_sync(w: &mut Writer, t: &TimeSyncReply) {
+    w.str(&t.role);
+    match t.shard {
+        None => w.bool(false),
+        Some(s) => {
+            w.bool(true);
+            w.u64(s);
+        }
+    }
+    w.u64(t.pid);
+    w.u64(t.t_us);
+}
+
+/// Decode a [`TimeSyncReply`].
+pub fn get_time_sync(r: &mut Reader<'_>) -> Result<TimeSyncReply> {
+    Ok(TimeSyncReply {
+        role: r.str()?,
+        shard: if r.bool()? { Some(r.u64()?) } else { None },
+        pid: r.u64()?,
+        t_us: r.u64()?,
+    })
+}
+
+/// Encode a request with no trace context — byte-identical to the v2
+/// encoding for every v2 message.
 pub fn encode_request(req: &Request) -> Vec<u8> {
+    encode_request_traced(req, None)
+}
+
+/// Encode a request, appending the optional trace-context trailer so
+/// the callee's spans can parent under the caller's current span.
+pub fn encode_request_traced(req: &Request, ctx: Option<&TraceContext>) -> Vec<u8> {
     let mut w = Writer::new();
+    encode_request_body(&mut w, req);
+    put_trace_context(&mut w, ctx);
+    w.into_bytes()
+}
+
+fn encode_request_body(w: &mut Writer, req: &Request) {
     match req {
         Request::StartTree(t) => {
             w.u8(0);
@@ -296,12 +345,27 @@ pub fn encode_request(req: &Request) -> Vec<u8> {
             w.u64(d.rows);
             w.u32(d.nodes);
         }
+        Request::TimeSync => w.u8(10),
     }
-    w.into_bytes()
 }
 
+/// Decode a request, discarding any trace context (in-process servers
+/// that never re-export context use this).
 pub fn decode_request(buf: &[u8]) -> Result<Request> {
+    Ok(decode_request_traced(buf)?.0)
+}
+
+/// Decode a request plus its optional trace-context trailer. A
+/// context-free (v2-style) frame decodes to `(req, None)`.
+pub fn decode_request_traced(buf: &[u8]) -> Result<(Request, Option<TraceContext>)> {
     let mut r = Reader::new(buf);
+    let req = decode_request_body(&mut r)?;
+    let ctx = get_trace_context(&mut r)?;
+    r.done()?;
+    Ok((req, ctx))
+}
+
+fn decode_request_body(r: &mut Reader<'_>) -> Result<Request> {
     let req = match r.u8().context("empty request frame")? {
         0 => Request::StartTree(r.u32()?),
         1 => Request::RootStats(r.u32()?),
@@ -420,9 +484,9 @@ pub fn decode_request(buf: &[u8]) -> Result<Request> {
             rows: r.u64()?,
             nodes: r.u32()?,
         }),
+        10 => Request::TimeSync,
         t => bail!("bad request tag {t}"),
     };
-    r.done()?;
     Ok(req)
 }
 
@@ -504,6 +568,10 @@ pub fn encode_response(resp: &Response) -> Vec<u8> {
                     }
                 }
             }
+        }
+        Response::TimeSync(t) => {
+            w.u8(7);
+            put_time_sync(&mut w, t);
         }
     }
     w.into_bytes()
@@ -591,6 +659,7 @@ pub fn decode_response(buf: &[u8]) -> Result<Response> {
                 .collect::<Result<_>>()?;
             Response::Materialized(MaterializedLeaves { leaves })
         }
+        7 => Response::TimeSync(get_time_sync(&mut r)?),
         t => bail!("bad response tag {t}"),
     };
     r.done()?;
@@ -634,7 +703,7 @@ mod tests {
     #[test]
     fn request_roundtrip_random() {
         run_cases(0x31E, 40, |rng| {
-            let req = match rng.usize(0, 7) {
+            let req = match rng.usize(0, 8) {
                 0 => Request::StartTree(rng.u64(1000) as u32),
                 1 => Request::RootStats(rng.u64(1000) as u32),
                 2 => Request::FindSplits(SupersplitQuery {
@@ -688,18 +757,28 @@ mod tests {
                     rows: rng.u64(1 << 40),
                     nodes: rng.u64(1000) as u32,
                 }),
+                7 => Request::TimeSync,
                 _ => Request::FinishTree(rng.u64(1000) as u32),
             };
             let bytes = encode_request(&req);
             let back = decode_request(&bytes).unwrap();
             assert_eq!(req, back);
+            // The traced codec round-trips the same message with its
+            // context trailer, whatever the body is.
+            let ctx = TraceContext {
+                trace_id: rng.u64(1 << 52).max(1),
+                parent_span: rng.u64(1 << 52),
+            };
+            let traced = encode_request_traced(&req, Some(&ctx));
+            assert_eq!(traced.len(), bytes.len() + 16);
+            assert_eq!(decode_request_traced(&traced).unwrap(), (req, Some(ctx)));
         });
     }
 
     #[test]
     fn response_roundtrip_random() {
         run_cases(0x52E, 40, |rng| {
-            let resp = match rng.usize(0, 5) {
+            let resp = match rng.usize(0, 6) {
                 0 => Response::Ok,
                 1 => Response::RootStats(
                     (0..rng.usize(0, 5)).map(|_| rng.u64(1 << 50)).collect(),
@@ -749,6 +828,12 @@ mod tests {
                         })
                         .collect(),
                 }),
+                5 => Response::TimeSync(TimeSyncReply {
+                    role: if rng.bool(0.5) { "worker".into() } else { "objstore".into() },
+                    shard: rng.bool(0.5).then(|| rng.u64(64)),
+                    pid: rng.u64(1 << 22),
+                    t_us: rng.u64(1 << 50),
+                }),
                 _ => Response::Err("splitter 3: unknown tree 7".into()),
             };
             let bytes = encode_response(&resp);
@@ -766,6 +851,61 @@ mod tests {
         let mut bytes = encode_request(&Request::StartTree(1));
         bytes.push(0);
         assert!(decode_request(&bytes).is_err());
+        // A torn context trailer (8 of 16 bytes) is also rejected.
+        let mut bytes = encode_request(&Request::StartTree(1));
+        bytes.extend_from_slice(&7u64.to_le_bytes());
+        assert!(decode_request(&bytes).is_err());
+    }
+
+    #[test]
+    fn trace_context_is_optional_and_context_free_frames_are_byte_identical() {
+        let req = Request::FindSplits(SupersplitQuery {
+            tree: 4,
+            depth: 2,
+            leaves: vec![LeafInfo {
+                node_id: 9,
+                detached: false,
+                totals: vec![10, 20],
+            }],
+            assigned_columns: vec![0, 3],
+        });
+        // A context-free traced encoding is byte-for-byte the legacy
+        // encoding: an old peer cannot tell the builds apart.
+        assert_eq!(encode_request_traced(&req, None), encode_request(&req));
+        // A context-free frame decodes through the traced decoder.
+        let (back, ctx) = decode_request_traced(&encode_request(&req)).unwrap();
+        assert_eq!(back, req);
+        assert_eq!(ctx, None);
+        // A traced frame round-trips its context...
+        let c = TraceContext {
+            trace_id: 0xA11CE,
+            parent_span: 0xB0B,
+        };
+        let traced = encode_request_traced(&req, Some(&c));
+        let (back, ctx) = decode_request_traced(&traced).unwrap();
+        assert_eq!(back, req);
+        assert_eq!(ctx, Some(c));
+        // ...and the context-oblivious decoder still accepts it,
+        // discarding the trailer (a worker serving a traced leader
+        // without caring about context keeps working).
+        assert_eq!(decode_request(&traced).unwrap(), req);
+    }
+
+    #[test]
+    fn time_sync_roundtrip() {
+        assert_eq!(
+            decode_request(&encode_request(&Request::TimeSync)).unwrap(),
+            Request::TimeSync
+        );
+        for shard in [None, Some(11u64)] {
+            let resp = Response::TimeSync(TimeSyncReply {
+                role: "worker".into(),
+                shard,
+                pid: 4242,
+                t_us: 123_456_789,
+            });
+            assert_eq!(decode_response(&encode_response(&resp)).unwrap(), resp);
+        }
     }
 
     #[test]

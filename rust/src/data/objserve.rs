@@ -34,7 +34,9 @@
 //! observe the death and restart it.
 
 use super::io_stats::{IoSnapshot, IoStats};
-use crate::util::wire::{read_frame, write_frame, Reader, Writer};
+use crate::coordinator::wire::{get_time_sync, put_time_sync};
+use crate::telemetry::{adopt_remote_context, time_sync_reply, TimeSyncReply, TraceContext};
+use crate::util::wire::{get_trace_context, put_trace_context, read_frame, write_frame, Reader, Writer};
 use crate::Result;
 use anyhow::{bail, ensure, Context};
 use std::io::{BufReader, BufWriter, Read as _, Seek, SeekFrom};
@@ -55,8 +57,10 @@ pub const MAX_RANGE_BYTES: u32 = 32 * 1024 * 1024;
 
 const OP_STAT: u8 = 1;
 const OP_READ: u8 = 2;
+const OP_TIMESYNC: u8 = 3;
 const RESP_STAT: u8 = 1;
 const RESP_DATA: u8 = 2;
+const RESP_TIMESYNC: u8 = 3;
 const RESP_ERR: u8 = 0xFF;
 
 /// One object-store request.
@@ -77,6 +81,9 @@ pub enum ObjRequest {
         /// Range length in bytes (capped by [`MAX_RANGE_BYTES`]).
         len: u32,
     },
+    /// The store's trace clock + identity (clock alignment for
+    /// `drf trace merge`).
+    TimeSync,
 }
 
 /// One object-store response.
@@ -89,13 +96,24 @@ pub enum ObjResponse {
     },
     /// Answer to [`ObjRequest::Read`]: exactly the requested bytes.
     Data(Vec<u8>),
+    /// Answer to [`ObjRequest::TimeSync`].
+    TimeSync(TimeSyncReply),
     /// The request could not be served (bad path, bad range, I/O
     /// error). Permanent — clients must not retry these.
     Err(String),
 }
 
-/// Encode a request frame body.
+/// Encode a request frame body (no trace context).
 pub fn encode_request(req: &ObjRequest) -> Vec<u8> {
+    encode_request_traced(req, None)
+}
+
+/// Encode a request frame body with the optional trace-context
+/// trailer. A `None` context is byte-identical to [`encode_request`] —
+/// clients attach context only while tracing is on, so a fleet that
+/// never traces speaks exactly the v1 bytes and the protocol version
+/// stays 1.
+pub fn encode_request_traced(req: &ObjRequest, ctx: Option<&TraceContext>) -> Vec<u8> {
     let mut w = Writer::new();
     w.magic(OBJ_MAGIC);
     w.u32(OBJ_PROTOCOL);
@@ -110,12 +128,19 @@ pub fn encode_request(req: &ObjRequest) -> Vec<u8> {
             w.u64(*offset);
             w.u32(*len);
         }
+        ObjRequest::TimeSync => w.u8(OP_TIMESYNC),
     }
+    put_trace_context(&mut w, ctx);
     w.into_bytes()
 }
 
-/// Decode a request frame body.
+/// Decode a request frame body, discarding any trace context.
 pub fn decode_request(frame: &[u8]) -> Result<ObjRequest> {
+    Ok(decode_request_traced(frame)?.0)
+}
+
+/// Decode a request frame body plus its optional trace-context trailer.
+pub fn decode_request_traced(frame: &[u8]) -> Result<(ObjRequest, Option<TraceContext>)> {
     let mut r = Reader::new(frame);
     r.expect_magic(OBJ_MAGIC, "drf objstore")?;
     let protocol = r.u32()?;
@@ -130,10 +155,12 @@ pub fn decode_request(frame: &[u8]) -> Result<ObjRequest> {
             offset: r.u64()?,
             len: r.u32()?,
         },
+        OP_TIMESYNC => ObjRequest::TimeSync,
         op => bail!("unknown objstore opcode {op}"),
     };
+    let ctx = get_trace_context(&mut r)?;
     r.done()?;
-    Ok(req)
+    Ok((req, ctx))
 }
 
 /// Encode a response frame body.
@@ -152,6 +179,10 @@ pub fn encode_response(resp: &ObjResponse) -> Vec<u8> {
             let mut b = w.into_bytes();
             b.extend_from_slice(bytes);
             return b;
+        }
+        ObjResponse::TimeSync(t) => {
+            w.u8(RESP_TIMESYNC);
+            put_time_sync(&mut w, t);
         }
         ObjResponse::Err(msg) => {
             w.u8(RESP_ERR);
@@ -176,6 +207,7 @@ pub fn decode_response(frame: &[u8]) -> Result<ObjResponse> {
             let n = r.len_checked(1)?;
             ObjResponse::Data(r.take(n)?.to_vec())
         }
+        RESP_TIMESYNC => ObjResponse::TimeSync(get_time_sync(&mut r)?),
         RESP_ERR => ObjResponse::Err(r.str()?),
         op => bail!("unknown objstore response code {op}"),
     };
@@ -250,6 +282,7 @@ impl ObjStoreState {
 
     fn try_serve(&self, req: ObjRequest, conn_io: &IoStats) -> Result<ObjResponse> {
         match req {
+            ObjRequest::TimeSync => Ok(ObjResponse::TimeSync(time_sync_reply())),
             ObjRequest::Stat { path } => {
                 let p = sanitize_path(&self.root, &path)?;
                 let len = std::fs::metadata(&p)
@@ -444,12 +477,22 @@ fn serve_requests(
         *requests += 1;
         let req_start = std::time::Instant::now();
         let mut op = "invalid";
-        let response = match decode_request(&frame) {
+        let response = match decode_request_traced(&frame) {
             Err(e) => ObjResponse::Err(format!("bad request: {e}")),
-            Ok(req) => {
+            Ok((req, ctx)) => {
                 op = match req {
                     ObjRequest::Stat { .. } => "stat",
                     ObjRequest::Read { .. } => "read",
+                    ObjRequest::TimeSync => "timesync",
+                };
+                // Serve under the caller's span (if it sent context) so
+                // objstore time shows up inside the fetch that caused
+                // it in the merged timeline.
+                let _trace = adopt_remote_context(ctx.as_ref());
+                let _span = match op {
+                    "stat" => Some(crate::span!("obj_stat")),
+                    "read" => Some(crate::span!("obj_read")),
+                    _ => None,
                 };
                 if matches!(req, ObjRequest::Read { .. }) {
                     // This is range read number `k` (1-based) across
@@ -499,15 +542,35 @@ mod tests {
 
     #[test]
     fn codec_roundtrips() {
+        let ctx = TraceContext {
+            trace_id: 0x5EED,
+            parent_span: 0xFACE,
+        };
         for req in [
             ObjRequest::Stat { path: "a/b.drfc".into() },
             ObjRequest::Read { path: "x".into(), offset: 7, len: 9 },
+            ObjRequest::TimeSync,
         ] {
             assert_eq!(decode_request(&encode_request(&req)).unwrap(), req);
+            // Context-free traced frames are byte-identical; contextful
+            // ones round-trip and stay decodable context-obliviously.
+            assert_eq!(encode_request_traced(&req, None), encode_request(&req));
+            let traced = encode_request_traced(&req, Some(&ctx));
+            assert_eq!(
+                decode_request_traced(&traced).unwrap(),
+                (req.clone(), Some(ctx))
+            );
+            assert_eq!(decode_request(&traced).unwrap(), req);
         }
         for resp in [
             ObjResponse::Stat { len: 1 << 40 },
             ObjResponse::Data(vec![1, 2, 3]),
+            ObjResponse::TimeSync(TimeSyncReply {
+                role: "objstore".into(),
+                shard: None,
+                pid: 99,
+                t_us: 1234,
+            }),
             ObjResponse::Err("nope".into()),
         ] {
             assert_eq!(decode_response(&encode_response(&resp)).unwrap(), resp);

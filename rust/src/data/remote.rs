@@ -54,11 +54,15 @@ use super::column::SortedEntry;
 use super::disk::{self, FileKind, Header};
 use super::io_stats::IoStats;
 use super::objserve::{
-    decode_response, encode_request, ObjRequest, ObjResponse, MAX_RANGE_BYTES,
+    decode_response, encode_request, encode_request_traced, ObjRequest, ObjResponse,
+    MAX_RANGE_BYTES,
 };
 use super::schema::{ColumnType, Schema};
 use super::store::{ColumnStore, RawChunk};
 use crate::cluster::manifest::{checksum_update, CHECKSUM_INIT};
+use crate::telemetry::{
+    clock_sync_exchange, current_context, record_clock_sync, trace_enabled, TimeSyncReply,
+};
 use crate::util::wire::{read_frame, write_frame};
 use crate::Result;
 use anyhow::{bail, ensure, Context};
@@ -171,6 +175,25 @@ impl RemoteSession {
                 .with_context(|| format!("connecting to objstore at {addr}"))?;
             let _ = stream.set_nodelay(true);
             self.conn = Some((BufReader::new(stream.try_clone()?), BufWriter::new(stream)));
+            // With tracing active, estimate the store's clock offset on
+            // every fresh connection (a restarted store has a fresh
+            // clock epoch) so `drf trace merge` can align its spans.
+            if trace_enabled() {
+                let sync_body = encode_request(&ObjRequest::TimeSync);
+                let stats = self.client.inner.stats.clone();
+                let (reader, writer) = self.conn.as_mut().expect("connected above");
+                let peer = clock_sync_exchange(2, || -> Result<TimeSyncReply> {
+                    write_frame(writer, &sync_body)?;
+                    let frame = read_frame(reader)?;
+                    stats.add_net(sync_body.len() as u64 + 4);
+                    stats.add_net(frame.len() as u64 + 4);
+                    match decode_response(&frame)? {
+                        ObjResponse::TimeSync(t) => Ok(t),
+                        r => bail!("protocol confusion: {r:?} reply to a TimeSync"),
+                    }
+                })?;
+                record_clock_sync(&peer);
+            }
         }
         let (reader, writer) = self.conn.as_mut().expect("connected above");
         write_frame(writer, body)?;
@@ -179,9 +202,12 @@ impl RemoteSession {
 
     /// Issue `req`, retrying transient transport failures with bounded
     /// exponential backoff (each retry reconnects, so a restarted — or
-    /// redirected — objstore is picked up transparently).
+    /// redirected — objstore is picked up transparently). With tracing
+    /// active the request carries this thread's trace context, so
+    /// store-side spans parent under the span doing the fetch.
     fn request(&mut self, req: &ObjRequest) -> Result<ObjResponse> {
-        let body = encode_request(req);
+        let ctx = current_context();
+        let body = encode_request_traced(req, ctx.as_ref());
         let (retries, backoff, max_backoff) = {
             let o = &self.client.inner.opts;
             (o.retries.max(1), o.backoff, o.max_backoff)

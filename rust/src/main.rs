@@ -22,7 +22,10 @@
 //!                 or locally against a saved model (`--model`);
 //! * `metrics`   — scrape the `/metrics` endpoint of a running drf
 //!                 process (`--metrics-addr`) and print it, optionally
-//!                 on a loop (`--watch`);
+//!                 on a loop (`--watch`, with per-second rates);
+//! * `trace`     — merge per-process `--trace-out` files into one
+//!                 clock-aligned Chrome trace JSON (`merge`) or print
+//!                 the per-round straggler report (`report`);
 //! * `info`      — runtime/platform info (PJRT client, artifacts).
 //!
 //! Examples:
@@ -105,15 +108,18 @@ const WORKER_FLAGS: &[&str] = &[
     "prefetch-chunks",
     "object-store",
     "metrics-addr",
+    "trace-out",
     "!preload",
     "!no-verify",
 ];
 
-const OBJSTORE_FLAGS: &[&str] = &["dir", "addr", "fail-after", "metrics-addr"];
+const OBJSTORE_FLAGS: &[&str] = &["dir", "addr", "fail-after", "metrics-addr", "trace-out"];
 
-const SERVE_FLAGS: &[&str] = &["model", "addr", "metrics-addr"];
+const SERVE_FLAGS: &[&str] = &["model", "addr", "metrics-addr", "trace-out"];
 
 const METRICS_FLAGS: &[&str] = &["interval-ms", "!watch"];
+
+const TRACE_FLAGS: &[&str] = &["out"];
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -136,6 +142,7 @@ fn run(argv: &[String]) -> Result<()> {
         "serve" => cmd_serve(&argv[1..]),
         "predict" => cmd_predict(&argv[1..]),
         "metrics" => cmd_metrics(&argv[1..]),
+        "trace" => cmd_trace(&argv[1..]),
         "info" => cmd_info(),
         "help" | "--help" | "-h" => {
             print!("{}", HELP);
@@ -171,17 +178,20 @@ USAGE:
             [--splitters W] [--redundancy D] [--chunk-rows C]
             [--workers ADDR,ADDR,...] --out-dir DIR
   drf objstore --dir DIR [--addr HOST:PORT] [--fail-after N]
-               [--metrics-addr HOST:PORT]
+               [--metrics-addr HOST:PORT] [--trace-out trace.jsonl]
   drf worker --shard SHARD_DIR [--addr HOST:PORT] [--scan-threads K]
              [--prefetch-chunks P] [--preload] [--no-verify]
              [--object-store HOST:PORT] [--metrics-addr HOST:PORT]
+             [--trace-out trace.jsonl]
   drf evaluate --model forest.json [--family ...|--csv ...|--data DIR]
   drf importance --model forest.json [--features M]
   drf serve --model forest.json [--addr HOST:PORT]
-            [--metrics-addr HOST:PORT]
+            [--metrics-addr HOST:PORT] [--trace-out trace.jsonl]
   drf predict (--addr HOST:PORT | --model forest.json)
               [--family ...|--csv ...|--data DIR] [--show N]
   drf metrics ADDR [--watch] [--interval-ms MS]
+  drf trace merge FILE... --out trace.json
+  drf trace report FILE...
   drf info
 
 Data sources (train/evaluate/shard/predict): --csv loads a CSV file
@@ -249,13 +259,22 @@ serve) takes `--metrics-addr HOST:PORT` and exposes its metrics
 registry — counters, gauges, and log2-bucketed histograms for every
 training phase, cluster round, remote fetch, and serving RPC — as
 Prometheus text on `GET /metrics` (port 0 picks an ephemeral port; the
-bound address is printed on a `metrics on` ready line). `drf metrics
-ADDR` scrapes and prints one snapshot; `--watch` re-scrapes every
-`--interval-ms MS` (default 2000). `drf train --trace-out trace.jsonl`
-additionally streams one JSON line per phase span (tree builds, level
-scan/eval/update, splitter passes) with microsecond timestamps and
-durations. Telemetry is observation-only: forests are bit-identical
-with it on or off. See docs/observability.md for the metric catalog.
+bound address is printed on a `metrics on` ready line); `GET /healthz`
+on the same port returns a JSON liveness document. `drf metrics ADDR`
+scrapes and prints one snapshot; `--watch` re-scrapes every
+`--interval-ms MS` (default 2000) and annotates every changed sample
+with its per-second rate. `--trace-out trace.jsonl` (accepted by
+train, worker, objstore, and serve) streams one JSON line per phase
+span (tree builds, level scan/eval/update, splitter passes, objstore
+reads) with microsecond timestamps, durations, and span/parent ids;
+RPCs carry the caller's trace context so worker spans parent under the
+leader's round spans, and connection handshakes measure peer clock
+offsets. `drf trace merge` stitches the per-process files into one
+clock-aligned Chrome trace-event JSON (load it at https://ui.perfetto.dev);
+`drf trace report` prints the per-round critical path — slowest
+worker, gap versus the median, dominant phase. Telemetry is
+observation-only: forests are bit-identical with it on or off. See
+docs/observability.md for the metric catalog and trace schema.
 ";
 
 /// Build the dataset described by the common data flags.
@@ -378,6 +397,7 @@ fn cmd_train(argv: &[String]) -> Result<()> {
     // Bring the /metrics endpoint and the span trace sink up before any
     // training work so the first phase is already captured. The server
     // guard must outlive training: dropping it stops the listener.
+    drf::telemetry::set_proc_identity("leader", None);
     let _metrics = spawn_metrics(cfg.metrics_addr.as_deref(), "train")?;
     if let Some(path) = &cfg.trace_out {
         drf::telemetry::set_trace_out(path)
@@ -512,8 +532,21 @@ fn spawn_metrics(
     Ok(Some(server))
 }
 
+/// Open the JSONL trace sink if `--trace-out` was given. Call after
+/// [`drf::telemetry::set_proc_identity`] — the sink's first line
+/// records the identity.
+fn start_trace_out(path: Option<&str>) -> Result<()> {
+    if let Some(path) = path {
+        drf::telemetry::set_trace_out(std::path::Path::new(path))
+            .with_context(|| format!("opening trace sink {path}"))?;
+    }
+    Ok(())
+}
+
 /// `drf metrics ADDR [--watch] [--interval-ms MS]`: scrape a running
-/// process's `/metrics` endpoint and print the Prometheus text.
+/// process's `/metrics` endpoint and print the Prometheus text. In
+/// watch mode every sample that changed since the previous scrape is
+/// annotated with its per-second rate.
 fn cmd_metrics(argv: &[String]) -> Result<()> {
     let args = Args::parse(argv, METRICS_FLAGS)?;
     let addr = args
@@ -523,16 +556,98 @@ fn cmd_metrics(argv: &[String]) -> Result<()> {
         .clone();
     let watch = args.get_bool("watch");
     let interval = std::time::Duration::from_millis(args.get_u64("interval-ms", 2000)?);
+    let mut prev: Option<(String, std::time::Instant)> = None;
     loop {
         let body = drf::telemetry::scrape(&addr)
             .with_context(|| format!("scraping metrics from {addr}"))?;
-        print!("{body}");
+        let now = std::time::Instant::now();
+        match &prev {
+            Some((prev_body, prev_at)) => print!(
+                "{}",
+                annotate_rates(prev_body, &body, now.duration_since(*prev_at).as_secs_f64())
+            ),
+            None => print!("{body}"),
+        }
         std::io::Write::flush(&mut std::io::stdout())?;
         if !watch {
             return Ok(());
         }
         println!("--- {addr}");
+        prev = Some((body, now));
         std::thread::sleep(interval);
+    }
+}
+
+/// Split a Prometheus text line into `(series, value)`; comments and
+/// anything non-numeric pass through as `None`.
+fn split_sample(line: &str) -> Option<(&str, f64)> {
+    if line.starts_with('#') {
+        return None;
+    }
+    let (series, value) = line.rsplit_once(' ')?;
+    Some((series, value.parse().ok()?))
+}
+
+/// Annotate a `/metrics` snapshot with per-second rates against the
+/// previous scrape: every sample whose value changed gains a
+/// ` ({delta:+}/s)` suffix. Pure text-to-text so it is unit-testable
+/// without a live endpoint.
+fn annotate_rates(prev: &str, cur: &str, secs: f64) -> String {
+    let old: std::collections::HashMap<&str, f64> =
+        prev.lines().filter_map(split_sample).collect();
+    let mut out = String::with_capacity(cur.len());
+    for line in cur.lines() {
+        out.push_str(line);
+        if secs > 0.0 {
+            if let Some((series, value)) = split_sample(line) {
+                if let Some(&p) = old.get(series) {
+                    if value != p {
+                        out.push_str(&format!(" ({:+.1}/s)", (value - p) / secs));
+                    }
+                }
+            }
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// `drf trace merge FILE... --out trace.json` / `drf trace report
+/// FILE...`: stitch per-process `--trace-out` files into one
+/// clock-aligned timeline (Chrome trace-event JSON for Perfetto), or
+/// print the per-round straggler report.
+fn cmd_trace(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv, TRACE_FLAGS)?;
+    let usage = "usage: drf trace merge FILE... --out trace.json | drf trace report FILE...";
+    let (mode, files) = args.positional().split_first().context(usage)?;
+    if files.is_empty() {
+        bail!("no trace files given ({usage})");
+    }
+    match mode.as_str() {
+        "merge" => {
+            let out = args.require("out")?;
+            let merged =
+                drf::telemetry::trace::merge_to_file(files, std::path::Path::new(out))?;
+            println!(
+                "merged {} process timeline(s), {} spans -> {out}",
+                merged.files.len(),
+                merged.files.iter().map(|f| f.spans.len()).sum::<usize>(),
+            );
+            if !merged.unaligned.is_empty() {
+                eprintln!(
+                    "warning: no clock_sync path to the leader for pid(s) {:?}; \
+                     their timelines are unaligned",
+                    merged.unaligned
+                );
+            }
+            Ok(())
+        }
+        "report" => {
+            let merged = drf::telemetry::trace::merge_files(files)?;
+            print!("{}", merged.report());
+            Ok(())
+        }
+        other => bail!("unknown trace subcommand '{other}' ({usage})"),
     }
 }
 
@@ -591,6 +706,8 @@ fn cmd_objstore(argv: &[String]) -> Result<()> {
         },
         exit_process_on_limit: true,
     };
+    drf::telemetry::set_proc_identity("objstore", None);
+    start_trace_out(args.get("trace-out"))?;
     let server = drf::data::objserve::ObjStoreServer::spawn(
         std::path::Path::new(dir),
         &addr,
@@ -638,6 +755,8 @@ fn cmd_worker(argv: &[String]) -> Result<()> {
         shard.manifest.columns.len(),
         shard.manifest.rows,
     );
+    drf::telemetry::set_proc_identity("worker", Some(id as u64));
+    start_trace_out(args.get("trace-out"))?;
     let server = drf::cluster::WorkerServer::spawn(shard, &addr, opts.scan_threads)?;
     println!(
         "drf worker: shard {id} ({cols} columns x {rows} rows, {mode}) listening on {}",
@@ -736,6 +855,8 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     let addr = args.get_string("addr", "127.0.0.1:7878");
     let path = std::path::PathBuf::from(model);
     let forest = RandomForest::load(&path)?;
+    drf::telemetry::set_proc_identity("serve", None);
+    start_trace_out(args.get("trace-out"))?;
     // The server compiles the forest itself; don't flatten twice.
     let server = drf::serve::PredictionServer::spawn(&forest, &addr, Some(path))?;
     println!(
@@ -824,6 +945,7 @@ mod tests {
         assert_flags_documented("objstore", OBJSTORE_FLAGS);
         assert_flags_documented("serve", SERVE_FLAGS);
         assert_flags_documented("metrics", METRICS_FLAGS);
+        assert_flags_documented("trace", TRACE_FLAGS);
         // Extra flags the derived commands add on top of TRAIN_FLAGS.
         assert_flags_documented("shard/generate", &["out-dir", "chunk-rows"]);
         assert_flags_documented("evaluate/predict", &["model", "addr", "show"]);
@@ -843,6 +965,7 @@ mod tests {
             "serve",
             "predict",
             "metrics",
+            "trace",
             "info",
         ] {
             assert!(
@@ -850,6 +973,25 @@ mod tests {
                 "HELP does not document `drf {cmd}`"
             );
         }
+    }
+
+    #[test]
+    fn watch_rates_annotate_changed_samples() {
+        let prev = "# TYPE a_total counter\na_total 10\nb_total{x=\"1\"} 5\ng 3\n";
+        let cur = "# TYPE a_total counter\na_total 30\nb_total{x=\"1\"} 5\ng 2\n";
+        let out = annotate_rates(prev, cur, 2.0);
+        // Changed counter gains a rate; unchanged sample and comments
+        // pass through untouched; falling gauges get a signed rate.
+        assert!(out.contains("a_total 30 (+10.0/s)"), "{out}");
+        assert!(out.contains("b_total{x=\"1\"} 5\n"), "{out}");
+        assert!(!out.contains("b_total{x=\"1\"} 5 ("), "{out}");
+        assert!(out.contains("# TYPE a_total counter\n"), "{out}");
+        assert!(out.contains("g 2 (-0.5/s)"), "{out}");
+        // A zero interval (clock glitch) must not divide by zero.
+        assert_eq!(annotate_rates(prev, cur, 0.0), cur);
+        // First scrape: series the previous snapshot lacked stay bare.
+        let out = annotate_rates("", cur, 2.0);
+        assert!(!out.contains("/s)"), "{out}");
     }
 }
 

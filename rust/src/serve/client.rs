@@ -6,10 +6,13 @@
 //! server echoes it back.
 
 use super::wire::{
-    decode_response, encode_request, read_frame, write_frame, ModelInfo, RowsBatch, ServeRequest,
-    ServeResponse,
+    decode_response, encode_request_traced, read_frame, write_frame, ModelInfo, RowsBatch,
+    ServeRequest, ServeResponse,
 };
 use crate::data::Dataset;
+use crate::telemetry::{
+    clock_sync_exchange, current_context, record_clock_sync, trace_enabled, TimeSyncReply,
+};
 use crate::Result;
 use anyhow::{bail, ensure, Context};
 use std::io::{BufReader, BufWriter};
@@ -28,17 +31,30 @@ impl PredictClient {
         let stream = TcpStream::connect(&addr)
             .with_context(|| format!("connecting to prediction server at {addr:?}"))?;
         stream.set_nodelay(true)?;
-        Ok(PredictClient {
+        let mut client = PredictClient {
             reader: BufReader::new(stream.try_clone()?),
             writer: BufWriter::new(stream),
             next_id: 1,
-        })
+        };
+        // When tracing, estimate the server's clock offset on the
+        // fresh connection so `drf trace merge` can align timelines.
+        if trace_enabled() {
+            let peer = clock_sync_exchange(2, || -> Result<TimeSyncReply> {
+                match client.call(&ServeRequest::TimeSync)? {
+                    ServeResponse::TimeSync(t) => Ok(t),
+                    r => bail!("unexpected response {r:?}"),
+                }
+            })?;
+            record_clock_sync(&peer);
+        }
+        Ok(client)
     }
 
     fn call(&mut self, req: &ServeRequest) -> Result<ServeResponse> {
         let id = self.next_id;
         self.next_id += 1;
-        write_frame(&mut self.writer, &encode_request(id, req))?;
+        let ctx = current_context();
+        write_frame(&mut self.writer, &encode_request_traced(id, req, ctx.as_ref()))?;
         let frame = read_frame(&mut self.reader).context("reading server response")?;
         let (resp_id, resp) = decode_response(&frame)?;
         if let ServeResponse::Err(msg) = resp {

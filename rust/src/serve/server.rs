@@ -11,9 +11,10 @@
 use super::batch::BatchOptions;
 use super::flat::FlatForest;
 use super::wire::{
-    decode_request, encode_response, read_frame, write_frame, ModelInfo, ServeRequest,
+    decode_request_traced, encode_response, read_frame, write_frame, ModelInfo, ServeRequest,
     ServeResponse,
 };
+use crate::telemetry::{adopt_remote_context, time_sync_reply};
 use crate::forest::RandomForest;
 use crate::Result;
 use anyhow::Context;
@@ -143,19 +144,21 @@ fn serve_connection(state: &ServerState, stream: TcpStream) -> Result<()> {
             Ok(f) => f,
             Err(_) => return Ok(()), // peer closed
         };
-        let (id, response) = match decode_request(&frame) {
+        let (id, response) = match decode_request_traced(&frame) {
             Err(e) => {
                 let resp = ServeResponse::Err(format!("bad request frame: {e}"));
                 write_frame(&mut writer, &encode_response(0, &resp))?;
                 return Ok(());
             }
-            Ok((id, req)) => {
+            Ok((id, req, ctx)) => {
                 let rpc = match &req {
                     ServeRequest::Score(_) => "score",
                     ServeRequest::Classify(_) => "classify",
                     ServeRequest::ModelInfo => "model_info",
                     ServeRequest::Reload { .. } => "reload",
+                    ServeRequest::TimeSync => "time_sync",
                 };
+                let _trace = adopt_remote_context(ctx.as_ref());
                 let start = std::time::Instant::now();
                 let resp = handle(state, req);
                 crate::telemetry::counter_with("drf_serve_requests_total", &[("rpc", rpc)])
@@ -193,6 +196,7 @@ fn predict_batch(
 
 fn handle(state: &ServerState, req: ServeRequest) -> ServeResponse {
     match req {
+        ServeRequest::TimeSync => ServeResponse::TimeSync(time_sync_reply()),
         ServeRequest::Score(batch) => predict_batch(state, "score", batch, |m, ds| {
             ServeResponse::Scores(m.flat.predict_scores_batch(ds, &state.batch))
         }),

@@ -15,7 +15,9 @@
 //! "DRFS" | version u8 | request_id u64 | tag u8 | payload…
 //! ```
 
-use crate::util::wire::{Reader, Writer};
+use crate::coordinator::wire::{get_time_sync, put_time_sync};
+use crate::telemetry::{TimeSyncReply, TraceContext};
+use crate::util::wire::{get_trace_context, put_trace_context, Reader, Writer};
 pub use crate::util::wire::{read_frame, write_frame};
 use crate::data::column::Column;
 use crate::data::schema::{ColumnSpec, Schema};
@@ -102,6 +104,10 @@ pub enum ServeRequest {
     /// the network (arbitrary-file read oracle) — the field exists for
     /// future operator-side allowlists.
     Reload { path: Option<String> },
+    /// Clock-sync probe: the server replies with its identity and its
+    /// monotonic clock reading taken at handling time. Used by tracing
+    /// clients to estimate clock offsets (see [`crate::telemetry`]).
+    TimeSync,
 }
 
 /// A prediction RPC response.
@@ -112,6 +118,7 @@ pub enum ServeResponse {
     Info(ModelInfo),
     Reloaded { num_trees: u32 },
     Err(String),
+    TimeSync(TimeSyncReply),
 }
 
 fn put_header(w: &mut Writer, request_id: u64) {
@@ -193,6 +200,20 @@ fn get_string(r: &mut Reader<'_>) -> Result<String> {
 
 /// Encode a request frame body (pass to [`write_frame`]).
 pub fn encode_request(request_id: u64, req: &ServeRequest) -> Vec<u8> {
+    encode_request_traced(request_id, req, None)
+}
+
+/// Encode a request frame body with an optional trace-context trailer.
+///
+/// Context-free frames are byte-identical to [`encode_request`] output,
+/// so [`WIRE_VERSION`] stays unchanged: servers read the trailer only
+/// when trailing bytes exist, and old servers never see one unless the
+/// client is tracing.
+pub fn encode_request_traced(
+    request_id: u64,
+    req: &ServeRequest,
+    ctx: Option<&TraceContext>,
+) -> Vec<u8> {
     let mut w = Writer::new();
     put_header(&mut w, request_id);
     match req {
@@ -215,12 +236,21 @@ pub fn encode_request(request_id: u64, req: &ServeRequest) -> Vec<u8> {
                 }
             }
         }
+        ServeRequest::TimeSync => w.u8(4),
     }
+    put_trace_context(&mut w, ctx);
     w.into_bytes()
 }
 
-/// Decode a request frame body into `(request_id, request)`.
+/// Decode a request frame body into `(request_id, request)`,
+/// discarding any trace-context trailer.
 pub fn decode_request(buf: &[u8]) -> Result<(u64, ServeRequest)> {
+    let (id, req, _) = decode_request_traced(buf)?;
+    Ok((id, req))
+}
+
+/// Decode a request frame body plus its optional trace context.
+pub fn decode_request_traced(buf: &[u8]) -> Result<(u64, ServeRequest, Option<TraceContext>)> {
     let mut r = Reader::new(buf);
     let id = get_header(&mut r)?;
     let req = match r.u8()? {
@@ -234,10 +264,12 @@ pub fn decode_request(buf: &[u8]) -> Result<(u64, ServeRequest)> {
                 None
             },
         },
+        4 => ServeRequest::TimeSync,
         t => bail!("bad request tag {t}"),
     };
+    let ctx = get_trace_context(&mut r)?;
     r.done()?;
-    Ok((id, req))
+    Ok((id, req, ctx))
 }
 
 /// Encode a response frame body echoing the request id.
@@ -273,6 +305,10 @@ pub fn encode_response(request_id: u64, resp: &ServeResponse) -> Vec<u8> {
             w.u8(4);
             put_string(&mut w, msg);
         }
+        ServeResponse::TimeSync(t) => {
+            w.u8(5);
+            put_time_sync(&mut w, t);
+        }
     }
     w.into_bytes()
 }
@@ -299,6 +335,7 @@ pub fn decode_response(buf: &[u8]) -> Result<(u64, ServeResponse)> {
             num_trees: r.u32()?,
         },
         4 => ServeResponse::Err(get_string(&mut r)?),
+        5 => ServeResponse::TimeSync(get_time_sync(&mut r)?),
         t => bail!("bad response tag {t}"),
     };
     r.done()?;
@@ -331,25 +368,47 @@ mod tests {
     #[test]
     fn request_roundtrip_random() {
         run_cases(0x5E41, 40, |rng| {
-            let req = match rng.usize(0, 3) {
+            let req = match rng.usize(0, 4) {
                 0 => ServeRequest::Score(random_batch(rng)),
                 1 => ServeRequest::Classify(random_batch(rng)),
                 2 => ServeRequest::ModelInfo,
-                _ => ServeRequest::Reload {
+                3 => ServeRequest::Reload {
                     path: rng.bool(0.5).then(|| "/tmp/forest.json".to_string()),
                 },
+                _ => ServeRequest::TimeSync,
             };
             let id = rng.u64(u64::MAX);
             let bytes = encode_request(id, &req);
             let (back_id, back) = decode_request(&bytes).unwrap();
-            assert_eq!((back_id, back), (id, req));
+            assert_eq!((back_id, back), (id, req.clone()));
+            // Traced encoding: exactly one 16-byte trailer, and both
+            // decoders accept it.
+            let ctx = TraceContext {
+                trace_id: rng.u64(1 << 52).max(1),
+                parent_span: rng.u64(u64::MAX >> 12),
+            };
+            let traced = encode_request_traced(id, &req, Some(&ctx));
+            assert_eq!(traced.len(), bytes.len() + 16);
+            let (tid, treq, tctx) = decode_request_traced(&traced).unwrap();
+            assert_eq!((tid, treq, tctx), (id, req.clone(), Some(ctx)));
+            let (oid, oreq) = decode_request(&traced).unwrap();
+            assert_eq!((oid, oreq), (id, req));
         });
+    }
+
+    #[test]
+    fn context_free_frames_are_byte_identical() {
+        let plain = encode_request(9, &ServeRequest::ModelInfo);
+        let traced = encode_request_traced(9, &ServeRequest::ModelInfo, None);
+        assert_eq!(plain, traced);
+        let (_, _, ctx) = decode_request_traced(&plain).unwrap();
+        assert_eq!(ctx, None);
     }
 
     #[test]
     fn response_roundtrip_random() {
         run_cases(0x5E42, 40, |rng| {
-            let resp = match rng.usize(0, 4) {
+            let resp = match rng.usize(0, 5) {
                 0 => ServeResponse::Scores(
                     (0..rng.usize(0, 30)).map(|_| rng.f64()).collect(),
                 ),
@@ -364,7 +423,13 @@ mod tests {
                 3 => ServeResponse::Reloaded {
                     num_trees: rng.u64(500) as u32,
                 },
-                _ => ServeResponse::Err("model reload failed: no such file".into()),
+                4 => ServeResponse::Err("model reload failed: no such file".into()),
+                _ => ServeResponse::TimeSync(TimeSyncReply {
+                    role: "serve".into(),
+                    shard: rng.bool(0.5).then(|| rng.u64(16)),
+                    pid: rng.u64(1 << 22),
+                    t_us: rng.u64(1 << 50),
+                }),
             };
             let id = rng.u64(u64::MAX);
             let bytes = encode_response(id, &resp);

@@ -22,10 +22,15 @@
 pub mod registry;
 pub mod server;
 pub mod span;
+pub mod trace;
 
 pub use registry::{bucket_index, bucket_le, Counter, Gauge, Histogram, Registry, NUM_BUCKETS};
 pub use server::{scrape, MetricsServer};
-pub use span::{clear_trace_out, set_trace_out, trace_enabled, Span, PHASE_HISTOGRAM};
+pub use span::{
+    adopt_remote_context, clear_trace_out, clock_sync_exchange, current_context, ensure_trace_id,
+    now_us, proc_identity, record_clock_sync, set_proc_identity, set_trace_out, time_sync_reply,
+    trace_enabled, trace_id, PeerClock, Span, TimeSyncReply, TraceContext, PHASE_HISTOGRAM,
+};
 
 use crate::data::io_stats::IoStats;
 use std::sync::Arc;

@@ -75,8 +75,24 @@ impl Drop for MetricsServer {
     }
 }
 
+/// `GET /healthz` body: a tiny JSON liveness document. `ok` is
+/// unconditionally true — reaching the handler is the health check;
+/// `role`/`uptime_s` let fleet tooling tell processes apart.
+fn healthz_body() -> String {
+    let (role, _, _) = super::proc_identity();
+    let mut o = crate::util::Json::object();
+    o.set("role", crate::util::Json::Str(role))
+        .set(
+            "uptime_s",
+            crate::util::Json::Num(super::now_us() as f64 / 1e6),
+        )
+        .set("ok", crate::util::Json::Bool(true));
+    o.to_string() + "\n"
+}
+
 /// Handle one HTTP exchange: `GET /metrics` renders the global
-/// registry; anything else gets 404/405.
+/// registry, `GET /healthz` a JSON liveness document; anything else
+/// gets 404/405.
 fn serve_http(mut stream: TcpStream) -> Result<()> {
     let mut head = Vec::new();
     let mut buf = [0u8; 1024];
@@ -102,6 +118,8 @@ fn serve_http(mut stream: TcpStream) -> Result<()> {
         ("405 Method Not Allowed", String::from("method not allowed\n"))
     } else if path == "/metrics" || path == "/metrics/" {
         ("200 OK", super::render())
+    } else if path == "/healthz" || path == "/healthz/" {
+        ("200 OK", healthz_body())
     } else {
         ("404 Not Found", String::from("try GET /metrics\n"))
     };
@@ -144,6 +162,21 @@ mod tests {
         let body = scrape(&server.addr().to_string()).unwrap();
         assert!(body.contains("wire_test_total 11"));
         assert!(body.contains("# TYPE wire_test_total counter"));
+    }
+
+    #[test]
+    fn healthz_reports_liveness_json() {
+        let server = MetricsServer::spawn("127.0.0.1:0").unwrap();
+        let mut s = TcpStream::connect(server.addr()).unwrap();
+        s.write_all(b"GET /healthz HTTP/1.0\r\n\r\n").unwrap();
+        let mut r = String::new();
+        s.read_to_string(&mut r).unwrap();
+        assert!(r.starts_with("HTTP/1.0 200"), "{r}");
+        let body = r.split_once("\r\n\r\n").unwrap().1;
+        let j = crate::util::Json::parse(body.trim()).unwrap();
+        assert!(j.get("ok").unwrap().as_bool().unwrap());
+        assert!(j.get("role").unwrap().as_str().is_ok());
+        assert!(j.get("uptime_s").unwrap().as_f64().unwrap() >= 0.0);
     }
 
     #[test]

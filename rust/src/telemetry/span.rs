@@ -4,13 +4,39 @@
 //!
 //! The hot-path cost when tracing is off is one `Instant::now()` per
 //! span plus a relaxed atomic load — measured well under the crate's
-//! 2% rows/s budget at per-level granularity.
+//! 2% rows/s budget at per-level granularity (the tracing-overhead row
+//! in `BENCH_train.json` backs the claim with data and fails the bench
+//! past 5% in smoke mode).
+//!
+//! # Distributed tracing
+//!
+//! With a sink active, spans additionally carry **trace context**:
+//!
+//! * a process-global `trace_id` (adopted from the first remote peer
+//!   that sends one, or generated lazily on the process that starts the
+//!   trace — the leader);
+//! * a per-span `span_id` and the `parent_id` it nests under. Parents
+//!   come from a thread-local span stack, or — on RPC-serving threads —
+//!   from the remote caller's context installed with
+//!   [`adopt_remote_context`], which is how a worker's `find_splits`
+//!   span parents under the leader's `level_scan` round span across
+//!   process boundaries;
+//! * the process identity `proc: {role, shard, pid}` set once by
+//!   [`set_proc_identity`].
+//!
+//! Every process timestamps events on its **own monotonic clock**
+//! (`t_us` since process start), so cross-process alignment needs the
+//! clock offsets estimated by the RPC-midpoint TimeSync exchange
+//! ([`clock_sync_exchange`]) and recorded as `clock_sync` events;
+//! `drf trace merge` ([`super::trace`]) uses them to stitch per-process
+//! files onto one timeline.
 
 use crate::util::Json;
+use std::cell::{Cell, RefCell};
 use std::fs::File;
 use std::io::Write;
 use std::path::Path;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Mutex, OnceLock};
 use std::time::Instant;
 
@@ -20,6 +46,24 @@ pub const PHASE_HISTOGRAM: &str = "drf_phase_us";
 
 static TRACE_ON: AtomicBool = AtomicBool::new(false);
 static TRACE_SINK: Mutex<Option<File>> = Mutex::new(None);
+/// The process-global trace id (0 = unassigned). All ids stay under
+/// 2^53 so they survive the JSON number model exactly.
+static TRACE_ID: AtomicU64 = AtomicU64::new(0);
+static NEXT_SPAN: AtomicU64 = AtomicU64::new(1);
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+/// `(role, shard)` of this process, for the `proc` field of every
+/// trace event (and the `/healthz` liveness reply).
+static PROC_IDENT: Mutex<Option<(String, Option<u64>)>> = Mutex::new(None);
+
+thread_local! {
+    /// Open span ids on this thread, innermost last.
+    static SPAN_STACK: RefCell<Vec<u64>> = const { RefCell::new(Vec::new()) };
+    /// Remote parent span installed by [`adopt_remote_context`] for the
+    /// duration of serving one RPC (0 = none).
+    static REMOTE_PARENT: Cell<u64> = const { Cell::new(0) };
+    /// Stable small per-thread lane id for the merged timeline.
+    static TID: Cell<u64> = const { Cell::new(0) };
+}
 
 /// Process start reference for trace timestamps (monotonic, so trace
 /// files are reproducible modulo durations — no wall-clock reads).
@@ -28,14 +72,257 @@ fn process_start() -> Instant {
     *START.get_or_init(Instant::now)
 }
 
-/// Direct the JSONL trace stream at `path` (truncates). Spans emit one
-/// event object per line: `{"event":"span","phase":...,"t_us":...,
-/// "dur_us":..., <fields...>}`.
+/// Microseconds since process start — the per-process trace clock that
+/// `t_us` fields and the TimeSync exchange are expressed in.
+pub fn now_us() -> u64 {
+    process_start().elapsed().as_micros() as u64
+}
+
+fn thread_tid() -> u64 {
+    TID.with(|t| {
+        if t.get() == 0 {
+            t.set(NEXT_TID.fetch_add(1, Ordering::Relaxed));
+        }
+        t.get()
+    })
+}
+
+fn next_span_id() -> u64 {
+    // 20 pid bits over 32 counter bits: unique within a process, very
+    // likely unique across a fleet, and always < 2^52 (exact in JSON).
+    let pid = (std::process::id() as u64) & 0xF_FFFF;
+    let n = NEXT_SPAN.fetch_add(1, Ordering::Relaxed) & 0xFFFF_FFFF;
+    (pid << 32) | n
+}
+
+// ---------------------------------------------------------------------
+// Process identity + trace id
+// ---------------------------------------------------------------------
+
+/// Declare what this process is (`"leader"`, `"worker"`, `"objstore"`,
+/// `"serve"`, …) and which shard it serves, for the `proc` field of
+/// every trace event, the TimeSync reply, and `/healthz`. Call once at
+/// startup, before [`set_trace_out`].
+pub fn set_proc_identity(role: &str, shard: Option<u64>) {
+    *PROC_IDENT.lock().unwrap() = Some((role.to_string(), shard));
+}
+
+/// This process's `(role, shard, pid)`; role defaults to `"unknown"`.
+pub fn proc_identity() -> (String, Option<u64>, u32) {
+    let g = PROC_IDENT.lock().unwrap();
+    match g.as_ref() {
+        Some((role, shard)) => (role.clone(), *shard, std::process::id()),
+        None => ("unknown".to_string(), None, std::process::id()),
+    }
+}
+
+/// The process-global trace id (0 until assigned/adopted).
+pub fn trace_id() -> u64 {
+    TRACE_ID.load(Ordering::Relaxed)
+}
+
+/// The trace id, generating one if the process has none yet. The
+/// leader calls this (via [`current_context`]) when it first puts
+/// context on the wire; peers adopt the incoming id instead.
+pub fn ensure_trace_id() -> u64 {
+    let cur = TRACE_ID.load(Ordering::Relaxed);
+    if cur != 0 {
+        return cur;
+    }
+    let micros = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_micros() as u64)
+        .unwrap_or(1);
+    let pid = std::process::id() as u64;
+    let id = ((micros ^ (pid << 40)) & ((1u64 << 52) - 1)).max(1);
+    match TRACE_ID.compare_exchange(0, id, Ordering::Relaxed, Ordering::Relaxed) {
+        Ok(_) => id,
+        Err(existing) => existing,
+    }
+}
+
+// ---------------------------------------------------------------------
+// Trace context on the wire
+// ---------------------------------------------------------------------
+
+/// The `(trace_id, parent_span)` pair that rides along RPC requests so
+/// the callee's spans parent under the caller's current span. Optional
+/// on every protocol: a context-free frame is byte-identical to the
+/// pre-tracing encoding.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceContext {
+    /// The caller's trace id (nonzero).
+    pub trace_id: u64,
+    /// The caller's innermost open span (0 = no open span).
+    pub parent_span: u64,
+}
+
+/// The context to attach to an outgoing RPC: `None` when tracing is
+/// off (no wire bytes), otherwise the trace id plus this thread's
+/// innermost open span.
+pub fn current_context() -> Option<TraceContext> {
+    if !trace_enabled() {
+        return None;
+    }
+    let parent = SPAN_STACK
+        .with(|s| s.borrow().last().copied())
+        .unwrap_or_else(|| REMOTE_PARENT.with(|r| r.get()));
+    Some(TraceContext {
+        trace_id: ensure_trace_id(),
+        parent_span: parent,
+    })
+}
+
+/// Restores the previous remote parent when the RPC finishes.
+#[must_use = "dropping the guard immediately un-adopts the context"]
+pub struct RemoteContextGuard {
+    prev: u64,
+}
+
+/// Install `ctx` as this thread's span parent for the duration of the
+/// returned guard — RPC-serving threads wrap request handling in this
+/// so local spans parent under the remote caller's span. Also adopts
+/// the caller's trace id if this process has none yet. `None` clears
+/// the parent for the guard's scope (a context-free request must not
+/// inherit a stale parent from the previous request on the thread).
+pub fn adopt_remote_context(ctx: Option<&TraceContext>) -> RemoteContextGuard {
+    let prev = REMOTE_PARENT.with(|r| r.get());
+    let next = match ctx {
+        Some(c) => {
+            if c.trace_id != 0 {
+                let _ =
+                    TRACE_ID.compare_exchange(0, c.trace_id, Ordering::Relaxed, Ordering::Relaxed);
+            }
+            c.parent_span
+        }
+        None => 0,
+    };
+    REMOTE_PARENT.with(|r| r.set(next));
+    RemoteContextGuard { prev }
+}
+
+impl Drop for RemoteContextGuard {
+    fn drop(&mut self) {
+        REMOTE_PARENT.with(|r| r.set(self.prev));
+    }
+}
+
+// ---------------------------------------------------------------------
+// Clock alignment (TimeSync)
+// ---------------------------------------------------------------------
+
+/// What a peer reports in a TimeSync reply: its identity and its own
+/// trace clock at the moment it served the request. Shared by all
+/// three wire protocols (coordinator, objstore, serve).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TimeSyncReply {
+    /// Peer's role string (see [`set_proc_identity`]).
+    pub role: String,
+    /// Peer's shard id, if it serves one.
+    pub shard: Option<u64>,
+    /// Peer's OS process id.
+    pub pid: u64,
+    /// Peer's [`now_us`] when it served the request.
+    pub t_us: u64,
+}
+
+/// The reply this process sends to a TimeSync request.
+pub fn time_sync_reply() -> TimeSyncReply {
+    let (role, shard, pid) = proc_identity();
+    TimeSyncReply {
+        role,
+        shard,
+        pid: pid as u64,
+        t_us: now_us(),
+    }
+}
+
+/// One measured peer clock: the peer's identity plus the estimated
+/// offset of its trace clock relative to ours (`peer_t ≈ our_t +
+/// offset_us` at the same instant) and the RTT of the best sample.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PeerClock {
+    /// Peer's role string.
+    pub role: String,
+    /// Peer's shard id, if any.
+    pub shard: Option<u64>,
+    /// Peer's OS process id.
+    pub pid: u64,
+    /// `peer_clock − our_clock`, estimated at the RPC midpoint.
+    pub offset_us: i64,
+    /// Round-trip time of the kept (minimum-RTT) sample.
+    pub rtt_us: u64,
+}
+
+/// Run a `rounds`-trip RPC-midpoint clock-offset exchange: each round
+/// times one TimeSync round trip and estimates `offset = peer_t − (t0
+/// + rtt/2)`; the minimum-RTT sample wins (NTP's discipline — the
+/// tightest round trip bounds the midpoint error by `rtt/2`).
+pub fn clock_sync_exchange<E>(
+    rounds: u32,
+    mut roundtrip: impl FnMut() -> std::result::Result<TimeSyncReply, E>,
+) -> std::result::Result<PeerClock, E> {
+    let mut best: Option<PeerClock> = None;
+    for _ in 0..rounds.max(1) {
+        let t0 = now_us();
+        let r = roundtrip()?;
+        let rtt = now_us().saturating_sub(t0);
+        if best.as_ref().map_or(true, |b| rtt < b.rtt_us) {
+            best = Some(PeerClock {
+                role: r.role,
+                shard: r.shard,
+                pid: r.pid,
+                offset_us: r.t_us as i64 - (t0 + rtt / 2) as i64,
+                rtt_us: rtt,
+            });
+        }
+    }
+    Ok(best.expect("at least one round ran"))
+}
+
+/// Record a measured peer clock into the trace stream as a
+/// `clock_sync` event (no-op when tracing is off). `drf trace merge`
+/// reads these to align per-process timelines.
+pub fn record_clock_sync(peer: &PeerClock) {
+    if !trace_enabled() {
+        return;
+    }
+    let mut o = Json::object();
+    let mut p = Json::object();
+    p.set("role", Json::Str(peer.role.clone()))
+        .set(
+            "shard",
+            peer.shard.map(Json::from_u64).unwrap_or(Json::Null),
+        )
+        .set("pid", Json::from_u64(peer.pid));
+    o.set("event", Json::Str("clock_sync".into()))
+        .set("trace_id", Json::from_u64(trace_id()))
+        .set("peer", p)
+        .set("offset_us", Json::Num(peer.offset_us as f64))
+        .set("rtt_us", Json::from_u64(peer.rtt_us));
+    emit_event(o);
+}
+
+// ---------------------------------------------------------------------
+// Sink plumbing
+// ---------------------------------------------------------------------
+
+/// Direct the JSONL trace stream at `path` (truncates). The first line
+/// is a `proc` identity event; spans then emit one event object per
+/// line (see the module docs for the schema).
 pub fn set_trace_out(path: &Path) -> std::io::Result<()> {
     process_start(); // pin t=0 before the first event
     let f = File::create(path)?;
     *TRACE_SINK.lock().unwrap() = Some(f);
     TRACE_ON.store(true, Ordering::Release);
+    let (role, shard, pid) = proc_identity();
+    let mut o = Json::object();
+    o.set("event", Json::Str("proc".into()))
+        .set("role", Json::Str(role))
+        .set("shard", shard.map(Json::from_u64).unwrap_or(Json::Null))
+        .set("pid", Json::from_u64(pid as u64))
+        .set("trace_id", Json::from_u64(trace_id()));
+    emit_event(o);
     Ok(())
 }
 
@@ -50,14 +337,35 @@ pub fn trace_enabled() -> bool {
     TRACE_ON.load(Ordering::Acquire)
 }
 
+/// Serialize `o` (plus a `t_us` stamp) to the sink. The stamp is taken
+/// **under the sink lock**, which is what makes `t_us` monotone
+/// non-decreasing per process even with concurrent emitters.
+fn emit_event(mut o: Json) {
+    let mut sink = TRACE_SINK.lock().unwrap();
+    if let Some(f) = sink.as_mut() {
+        o.set("t_us", Json::from_u64(now_us()));
+        // Unbuffered per-event write: trace volume is per-phase (tens
+        // of events per tree), not per-row, so syscall cost is noise.
+        let _ = writeln!(f, "{}", o.to_string());
+    }
+}
+
+// ---------------------------------------------------------------------
+// Span
+// ---------------------------------------------------------------------
+
 /// A timed phase. Created by [`Span::enter`] / the [`crate::span!`]
 /// macro; on drop it observes its elapsed microseconds into
-/// [`PHASE_HISTOGRAM`] and, if tracing is on, appends a JSONL event.
+/// [`PHASE_HISTOGRAM`] and, if tracing is on, appends a JSONL event
+/// carrying the span's trace ids and process identity.
 #[must_use = "a span records its phase time when dropped"]
 pub struct Span {
     phase: &'static str,
     fields: Vec<(&'static str, u64)>,
     start: Instant,
+    /// `(span_id, parent_id)` when tracing was on at enter (the id is
+    /// then on this thread's span stack until drop).
+    ids: Option<(u64, u64)>,
 }
 
 impl Span {
@@ -66,10 +374,21 @@ impl Span {
     }
 
     pub fn enter_with(phase: &'static str, fields: &[(&'static str, u64)]) -> Span {
+        let ids = if trace_enabled() {
+            let parent = SPAN_STACK
+                .with(|s| s.borrow().last().copied())
+                .unwrap_or_else(|| REMOTE_PARENT.with(|r| r.get()));
+            let id = next_span_id();
+            SPAN_STACK.with(|s| s.borrow_mut().push(id));
+            Some((id, parent))
+        } else {
+            None
+        };
         Span {
             phase,
             fields: fields.to_vec(),
             start: Instant::now(),
+            ids,
         }
     }
 }
@@ -78,29 +397,40 @@ impl Drop for Span {
     fn drop(&mut self) {
         let dur_us = self.start.elapsed().as_micros() as u64;
         super::histogram_with(PHASE_HISTOGRAM, &[("phase", self.phase)]).observe(dur_us);
-        if trace_enabled() {
-            emit_span(self.phase, &self.fields, dur_us);
+        if let Some((id, parent)) = self.ids {
+            // Pop this span's id even if the sink closed mid-span.
+            SPAN_STACK.with(|s| {
+                let mut stack = s.borrow_mut();
+                if let Some(pos) = stack.iter().rposition(|&x| x == id) {
+                    stack.remove(pos);
+                }
+            });
+            if trace_enabled() {
+                emit_span(self.phase, &self.fields, dur_us, id, parent);
+            }
         }
     }
 }
 
-fn emit_span(phase: &str, fields: &[(&'static str, u64)], dur_us: u64) {
-    let t_us = process_start().elapsed().as_micros() as u64;
+fn emit_span(phase: &str, fields: &[(&'static str, u64)], dur_us: u64, id: u64, parent: u64) {
+    let (role, shard, pid) = proc_identity();
+    let mut p = Json::object();
+    p.set("role", Json::Str(role))
+        .set("shard", shard.map(Json::from_u64).unwrap_or(Json::Null))
+        .set("pid", Json::from_u64(pid as u64));
     let mut o = Json::object();
     o.set("event", Json::Str("span".into()))
         .set("phase", Json::Str(phase.into()))
-        .set("t_us", Json::from_u64(t_us))
-        .set("dur_us", Json::from_u64(dur_us));
+        .set("dur_us", Json::from_u64(dur_us))
+        .set("trace_id", Json::from_u64(trace_id()))
+        .set("span_id", Json::from_u64(id))
+        .set("parent_id", Json::from_u64(parent))
+        .set("tid", Json::from_u64(thread_tid()))
+        .set("proc", p);
     for (k, v) in fields {
         o.set(k, Json::from_u64(*v));
     }
-    let line = o.to_string();
-    let mut sink = TRACE_SINK.lock().unwrap();
-    if let Some(f) = sink.as_mut() {
-        // Unbuffered per-event write: trace volume is per-phase (tens
-        // of events per tree), not per-row, so syscall cost is noise.
-        let _ = writeln!(f, "{line}");
-    }
+    emit_event(o);
 }
 
 /// Enter a phase-tracing span: `span!("level_scan", tree = t, depth = d)`.
@@ -155,6 +485,138 @@ mod tests {
         assert!(j.get("dur_us").is_ok());
         assert!(j.get("t_us").is_ok());
         assert_eq!(j.get("tree").unwrap().as_u64().unwrap(), 1);
+        // Distributed-tracing fields are present and well-formed.
+        assert!(j.get("span_id").unwrap().as_u64().unwrap() > 0);
+        assert!(j.get("parent_id").is_ok());
+        let proc = j.get("proc").unwrap();
+        assert!(proc.get("pid").unwrap().as_u64().unwrap() > 0);
+        assert!(proc.get("role").unwrap().as_str().is_ok());
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn nested_spans_parent_locally_and_adopt_remote_context() {
+        let dir = std::env::temp_dir().join(format!("drf_trace_nest_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("trace.jsonl");
+        set_trace_out(&path).unwrap();
+        {
+            let _outer = crate::span!("test_nest_outer");
+            let _inner = crate::span!("test_nest_inner");
+        }
+        // A "served RPC": the remote caller's span becomes the parent
+        // of spans opened while the guard is live, and stops being the
+        // parent once it drops.
+        let remote = TraceContext {
+            trace_id: ensure_trace_id(),
+            parent_span: 0x1234_5678,
+        };
+        {
+            let _g = adopt_remote_context(Some(&remote));
+            let _s = crate::span!("test_nest_adopted");
+        }
+        {
+            let _s = crate::span!("test_nest_unparented");
+        }
+        clear_trace_out();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let find = |phase: &str| -> Json {
+            Json::parse(
+                text.lines()
+                    .find(|l| l.contains(phase))
+                    .unwrap_or_else(|| panic!("{phase} event missing")),
+            )
+            .unwrap()
+        };
+        let outer = find("test_nest_outer");
+        let inner = find("test_nest_inner");
+        assert_eq!(
+            inner.get("parent_id").unwrap().as_u64().unwrap(),
+            outer.get("span_id").unwrap().as_u64().unwrap(),
+            "inner span parents under the enclosing span"
+        );
+        let adopted = find("test_nest_adopted");
+        assert_eq!(
+            adopted.get("parent_id").unwrap().as_u64().unwrap(),
+            0x1234_5678,
+            "adopted remote context parents the served span"
+        );
+        let unparented = find("test_nest_unparented");
+        assert_eq!(unparented.get("parent_id").unwrap().as_u64().unwrap(), 0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn trace_file_t_us_is_monotone_even_across_threads() {
+        let dir = std::env::temp_dir().join(format!("drf_trace_mono_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("trace.jsonl");
+        set_trace_out(&path).unwrap();
+        std::thread::scope(|scope| {
+            for _ in 0..4 {
+                scope.spawn(|| {
+                    for _ in 0..50 {
+                        let _s = crate::span!("test_mono");
+                    }
+                });
+            }
+        });
+        clear_trace_out();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let mut last = 0u64;
+        let mut seen = 0usize;
+        for line in text.lines() {
+            let j = Json::parse(line).unwrap();
+            let t = j.get("t_us").unwrap().as_u64().unwrap();
+            assert!(t >= last, "t_us must be monotone non-decreasing per process");
+            last = t;
+            seen += 1;
+        }
+        assert!(seen >= 200, "all concurrent spans landed in the file");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn reserved_json_characters_in_identity_escape_correctly() {
+        let dir = std::env::temp_dir().join(format!("drf_trace_esc_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("trace.jsonl");
+        // A role full of reserved JSON characters must round-trip.
+        let weird = "we\"ird\\role\nwith\ttabs";
+        set_proc_identity(weird, Some(3));
+        set_trace_out(&path).unwrap();
+        {
+            let _s = crate::span!("test_escape");
+        }
+        clear_trace_out();
+        set_proc_identity("unknown", None);
+        let text = std::fs::read_to_string(&path).unwrap();
+        let line = text.lines().find(|l| l.contains("test_escape")).unwrap();
+        let j = Json::parse(line).expect("reserved characters must escape to valid JSON");
+        assert_eq!(
+            j.get("proc").unwrap().get("role").unwrap().as_str().unwrap(),
+            weird
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn clock_sync_exchange_estimates_known_offset() {
+        // A fake peer whose clock runs exactly 5s ahead of ours.
+        let peer = clock_sync_exchange::<std::convert::Infallible>(4, || {
+            Ok(TimeSyncReply {
+                role: "worker".into(),
+                shard: Some(1),
+                pid: 42,
+                t_us: now_us() + 5_000_000,
+            })
+        })
+        .unwrap();
+        assert_eq!(peer.pid, 42);
+        let err = (peer.offset_us - 5_000_000).abs();
+        assert!(
+            err <= 50_000,
+            "midpoint estimate within 50ms of the true 5s offset, got {err}us off"
+        );
     }
 }

@@ -1,0 +1,649 @@
+//! Merge per-process trace files into one timeline, and attribute
+//! stragglers per training round.
+//!
+//! Every process writes its own JSONL trace stream (`--trace-out`, see
+//! [`super::span`]): `proc` identity lines, `span` events, and
+//! `clock_sync` offset measurements taken during connection handshakes.
+//! This module is the offline half — the `drf trace` subcommand:
+//!
+//! * [`merge_files`] parses N per-process files, checks they belong to
+//!   one trace, aligns their clocks using the recorded `clock_sync`
+//!   offsets (leader-rooted BFS over the offset graph), and
+//! * [`MergedTrace::chrome_json`] renders the result as Chrome
+//!   trace-event JSON that Perfetto / `chrome://tracing` loads
+//!   directly, while
+//! * [`MergedTrace::round_rows`] / [`MergedTrace::report`] compute the
+//!   per-round critical path: which worker was slowest, by how much
+//!   versus the median, and which phase dominated its time.
+//!
+//! Clock model: a `clock_sync` event in process A's file records
+//! `offset_us = B_clock − A_clock` for peer B (RPC-midpoint estimate,
+//! minimum-RTT sample). Timestamps from B are mapped onto the root's
+//! clock as `t − rel[B]`, where `rel` accumulates offsets along the
+//! BFS path from the root. Processes with no sync path to the root are
+//! left unaligned (offset 0) and reported in
+//! [`MergedTrace::unaligned`].
+
+use crate::util::Json;
+use crate::Result;
+use anyhow::{bail, Context};
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
+use std::fmt::Write as _;
+use std::path::Path;
+
+/// One `span` event parsed back from a trace file. `t_us` is the
+/// span's **end** on the emitting process's clock (events are written
+/// at span drop); the start is `t_us − dur_us`.
+#[derive(Debug, Clone)]
+pub struct SpanEvent {
+    pub phase: String,
+    pub t_us: u64,
+    pub dur_us: u64,
+    pub span_id: u64,
+    pub parent_id: u64,
+    pub tid: u64,
+    /// Extra numeric fields (`tree`, `depth`, …) in name order.
+    pub fields: Vec<(String, f64)>,
+}
+
+impl SpanEvent {
+    /// Look up a numeric field such as `tree` or `depth`.
+    pub fn field(&self, name: &str) -> Option<f64> {
+        self.fields
+            .iter()
+            .find(|(k, _)| k == name)
+            .map(|&(_, v)| v)
+    }
+}
+
+/// One `clock_sync` event: the emitting process measured `peer_pid`'s
+/// clock to lead its own by `offset_us` (negative = peer behind).
+#[derive(Debug, Clone)]
+pub struct ClockSyncEvent {
+    pub peer_pid: u64,
+    pub offset_us: i64,
+    pub rtt_us: u64,
+}
+
+/// A fully parsed per-process trace file.
+#[derive(Debug, Clone)]
+pub struct ProcFile {
+    pub role: String,
+    pub shard: Option<u64>,
+    pub pid: u64,
+    /// First nonzero trace id seen in the file (0 = never traced an id,
+    /// which merge treats as a wildcard).
+    pub trace_id: u64,
+    pub spans: Vec<SpanEvent>,
+    pub clock_syncs: Vec<ClockSyncEvent>,
+}
+
+impl ProcFile {
+    /// Human label: `leader`, `worker/1`, `objstore`, …
+    pub fn label(&self) -> String {
+        match self.shard {
+            Some(s) => format!("{}/{s}", self.role),
+            None => self.role.clone(),
+        }
+    }
+}
+
+fn opt_u64(j: &Json, key: &str) -> Option<u64> {
+    j.get_opt(key).and_then(|v| v.as_u64().ok())
+}
+
+/// Parse one JSONL trace file. Unknown event types are skipped so old
+/// readers survive new emitters; malformed JSON lines are hard errors
+/// (a trace file is machine-written — corruption means truncation or a
+/// clobbered sink, both worth surfacing).
+pub fn parse_file(path: &Path) -> Result<ProcFile> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading trace file {}", path.display()))?;
+    let mut out = ProcFile {
+        role: String::new(),
+        shard: None,
+        pid: 0,
+        trace_id: 0,
+        spans: Vec::new(),
+        clock_syncs: Vec::new(),
+    };
+    let mut have_identity = false;
+    for (lineno, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let j = Json::parse(line)
+            .with_context(|| format!("{}:{}: bad JSON", path.display(), lineno + 1))?;
+        if out.trace_id == 0 {
+            if let Some(id) = opt_u64(&j, "trace_id") {
+                out.trace_id = id;
+            }
+        }
+        let event = j.get_opt("event").and_then(|e| e.as_str().ok()).unwrap_or("");
+        match event {
+            "proc" => {
+                out.role = j.get("role")?.as_str()?.to_string();
+                out.shard = j.get_opt("shard").and_then(|s| s.as_u64().ok());
+                out.pid = j.get("pid")?.as_u64()?;
+                have_identity = true;
+            }
+            "span" => {
+                let proc = j.get("proc")?;
+                if !have_identity {
+                    out.role = proc.get("role")?.as_str()?.to_string();
+                    out.shard = proc.get_opt("shard").and_then(|s| s.as_u64().ok());
+                    out.pid = proc.get("pid")?.as_u64()?;
+                    have_identity = true;
+                }
+                let mut fields = Vec::new();
+                if let Json::Obj(m) = &j {
+                    for (k, v) in m {
+                        if matches!(
+                            k.as_str(),
+                            "event" | "phase" | "dur_us" | "t_us" | "trace_id" | "span_id"
+                                | "parent_id" | "tid" | "proc"
+                        ) {
+                            continue;
+                        }
+                        if let Ok(n) = v.as_f64() {
+                            fields.push((k.clone(), n));
+                        }
+                    }
+                }
+                out.spans.push(SpanEvent {
+                    phase: j.get("phase")?.as_str()?.to_string(),
+                    t_us: j.get("t_us")?.as_u64()?,
+                    dur_us: j.get("dur_us")?.as_u64()?,
+                    span_id: j.get("span_id")?.as_u64()?,
+                    parent_id: j.get("parent_id")?.as_u64()?,
+                    tid: opt_u64(&j, "tid").unwrap_or(0),
+                    fields,
+                });
+            }
+            "clock_sync" => {
+                out.clock_syncs.push(ClockSyncEvent {
+                    peer_pid: j.get("peer")?.get("pid")?.as_u64()?,
+                    offset_us: j.get("offset_us")?.as_f64()? as i64,
+                    rtt_us: j.get("rtt_us")?.as_u64()?,
+                });
+            }
+            _ => {} // forward-compatible: skip unknown event types
+        }
+    }
+    Ok(out)
+}
+
+/// A set of per-process trace files aligned onto one clock.
+pub struct MergedTrace {
+    pub files: Vec<ProcFile>,
+    /// Index into `files` of the alignment root (the leader if present).
+    pub root: usize,
+    /// `rel[pid]` = that process's clock minus the root's clock; align
+    /// a timestamp from `pid` with `t − rel[pid]`.
+    pub rel: BTreeMap<u64, i64>,
+    /// Pids with no `clock_sync` path to the root (left unaligned).
+    pub unaligned: Vec<u64>,
+}
+
+/// Parse and align a set of per-process trace files. Rejects files
+/// that carry different (nonzero) trace ids — they are different runs
+/// and merging them would silently interleave unrelated work.
+pub fn merge_files(paths: &[impl AsRef<Path>]) -> Result<MergedTrace> {
+    if paths.is_empty() {
+        bail!("no trace files given");
+    }
+    let files: Vec<ProcFile> = paths
+        .iter()
+        .map(|p| parse_file(p.as_ref()))
+        .collect::<Result<_>>()?;
+    let mut trace_id = 0u64;
+    for (f, p) in files.iter().zip(paths) {
+        if f.trace_id == 0 {
+            continue;
+        }
+        if trace_id == 0 {
+            trace_id = f.trace_id;
+        } else if f.trace_id != trace_id {
+            bail!(
+                "mismatched trace_id: {} has {:#x}, expected {:#x} — these files \
+                 come from different runs",
+                p.as_ref().display(),
+                f.trace_id,
+                trace_id
+            );
+        }
+    }
+
+    // Offset graph over pids: clock_sync in A's file gives the edge
+    // A → B with weight (B − A); keep the minimum-RTT measurement per
+    // pair and add the reverse edge with negated weight.
+    let mut edges: BTreeMap<(u64, u64), (i64, u64)> = BTreeMap::new();
+    for f in &files {
+        for cs in &f.clock_syncs {
+            let keep = edges
+                .get(&(f.pid, cs.peer_pid))
+                .map_or(true, |&(_, rtt)| cs.rtt_us < rtt);
+            if keep {
+                edges.insert((f.pid, cs.peer_pid), (cs.offset_us, cs.rtt_us));
+                edges.insert((cs.peer_pid, f.pid), (-cs.offset_us, cs.rtt_us));
+            }
+        }
+    }
+    let mut adj: BTreeMap<u64, Vec<(u64, i64)>> = BTreeMap::new();
+    for (&(a, b), &(off, _)) in &edges {
+        adj.entry(a).or_default().push((b, off));
+    }
+
+    let root = files
+        .iter()
+        .position(|f| f.role == "leader")
+        .unwrap_or(0);
+    let mut rel: BTreeMap<u64, i64> = BTreeMap::new();
+    rel.insert(files[root].pid, 0);
+    let mut queue = VecDeque::from([files[root].pid]);
+    while let Some(a) = queue.pop_front() {
+        let base = rel[&a];
+        for &(b, off) in adj.get(&a).into_iter().flatten() {
+            if !rel.contains_key(&b) {
+                rel.insert(b, base + off);
+                queue.push_back(b);
+            }
+        }
+    }
+    let known: BTreeSet<u64> = rel.keys().copied().collect();
+    let unaligned = files
+        .iter()
+        .filter(|f| !known.contains(&f.pid))
+        .map(|f| f.pid)
+        .collect();
+    Ok(MergedTrace {
+        files,
+        root,
+        rel,
+        unaligned,
+    })
+}
+
+impl MergedTrace {
+    fn offset_of(&self, pid: u64) -> i64 {
+        self.rel.get(&pid).copied().unwrap_or(0)
+    }
+
+    /// A span's start on the root's clock, in microseconds (may be
+    /// negative before the global shift is applied).
+    fn aligned_start(&self, f: &ProcFile, s: &SpanEvent) -> i64 {
+        s.t_us as i64 - s.dur_us as i64 - self.offset_of(f.pid)
+    }
+
+    /// Render as Chrome trace-event JSON (Perfetto /
+    /// `chrome://tracing` both load it). Timestamps are shifted so the
+    /// earliest span starts at 0.
+    pub fn chrome_json(&self) -> Json {
+        let shift = self
+            .files
+            .iter()
+            .flat_map(|f| f.spans.iter().map(|s| self.aligned_start(f, s)))
+            .min()
+            .unwrap_or(0);
+        let mut events = Vec::new();
+        for f in &self.files {
+            let mut meta = Json::object();
+            meta.set("ph", Json::Str("M".into()))
+                .set("name", Json::Str("process_name".into()))
+                .set("pid", Json::from_u64(f.pid))
+                .set("tid", Json::from_u64(0));
+            let mut args = Json::object();
+            args.set("name", Json::Str(f.label()));
+            meta.set("args", args);
+            events.push(meta);
+            for s in &f.spans {
+                let mut e = Json::object();
+                e.set("ph", Json::Str("X".into()))
+                    .set("name", Json::Str(s.phase.clone()))
+                    .set("cat", Json::Str("drf".into()))
+                    .set("pid", Json::from_u64(f.pid))
+                    .set("tid", Json::from_u64(s.tid))
+                    .set(
+                        "ts",
+                        Json::Num((self.aligned_start(f, s) - shift) as f64),
+                    )
+                    .set("dur", Json::from_u64(s.dur_us));
+                let mut args = Json::object();
+                args.set("span_id", Json::from_u64(s.span_id))
+                    .set("parent_id", Json::from_u64(s.parent_id));
+                for (k, v) in &s.fields {
+                    args.set(k, Json::Num(*v));
+                }
+                e.set("args", args);
+                events.push(e);
+            }
+        }
+        let mut top = Json::object();
+        top.set("traceEvents", Json::Arr(events))
+            .set("displayTimeUnit", Json::Str("ms".into()));
+        top
+    }
+
+    /// Per-round critical-path rows: one per leader `level_scan` span,
+    /// attributing the round's straggler among the workers that ran
+    /// spans for the same `(tree, depth)`.
+    pub fn round_rows(&self) -> Vec<RoundRow> {
+        let leader = &self.files[self.root];
+        let mut rows = Vec::new();
+        for scan in leader.spans.iter().filter(|s| s.phase == "level_scan") {
+            let (tree, depth) = match (scan.field("tree"), scan.field("depth")) {
+                (Some(t), Some(d)) => (t as u64, d as u64),
+                _ => continue,
+            };
+            // Per-worker, per-phase busy time inside this round.
+            let mut per_proc: BTreeMap<String, BTreeMap<String, u64>> = BTreeMap::new();
+            for (i, f) in self.files.iter().enumerate() {
+                if i == self.root {
+                    continue;
+                }
+                for s in &f.spans {
+                    if s.field("tree") == Some(tree as f64)
+                        && s.field("depth") == Some(depth as f64)
+                    {
+                        *per_proc
+                            .entry(f.label())
+                            .or_default()
+                            .entry(s.phase.clone())
+                            .or_insert(0) += s.dur_us;
+                    }
+                }
+            }
+            if per_proc.is_empty() {
+                continue;
+            }
+            let mut totals: Vec<(String, u64)> = per_proc
+                .iter()
+                .map(|(label, phases)| (label.clone(), phases.values().sum()))
+                .collect();
+            totals.sort_by(|a, b| a.1.cmp(&b.1).then_with(|| a.0.cmp(&b.0)));
+            let median_us = totals[(totals.len() - 1) / 2].1;
+            let (straggler, straggler_us) = totals.last().cloned().expect("nonempty");
+            let dominant_phase = per_proc[&straggler]
+                .iter()
+                .max_by_key(|&(_, &us)| us)
+                .map(|(phase, _)| phase.clone())
+                .unwrap_or_default();
+            rows.push(RoundRow {
+                tree,
+                depth,
+                round_wall_us: scan.dur_us,
+                straggler,
+                straggler_us,
+                median_us,
+                gap_us: straggler_us.saturating_sub(median_us),
+                blocked_frac: if scan.dur_us > 0 {
+                    (straggler_us as f64 / scan.dur_us as f64).min(1.0)
+                } else {
+                    0.0
+                },
+                dominant_phase,
+            });
+        }
+        rows
+    }
+
+    /// Aggregate busy microseconds per `(process label, phase)`.
+    pub fn phase_totals(&self) -> BTreeMap<String, BTreeMap<String, u64>> {
+        let mut totals: BTreeMap<String, BTreeMap<String, u64>> = BTreeMap::new();
+        for f in &self.files {
+            let by_phase = totals.entry(f.label()).or_default();
+            for s in &f.spans {
+                *by_phase.entry(s.phase.clone()).or_insert(0) += s.dur_us;
+            }
+        }
+        totals
+    }
+
+    /// Human-readable straggler report: a per-round table followed by
+    /// per-process phase totals.
+    pub fn report(&self) -> String {
+        let rows = self.round_rows();
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "{:>5} {:>5} {:>12} {:>14} {:>10} {:>8} {:<14} {}",
+            "tree", "depth", "round_ms", "straggler", "gap_ms", "blocked", "phase", ""
+        );
+        for r in &rows {
+            let _ = writeln!(
+                out,
+                "{:>5} {:>5} {:>12.3} {:>14} {:>10.3} {:>7.1}% {:<14} ",
+                r.tree,
+                r.depth,
+                r.round_wall_us as f64 / 1e3,
+                r.straggler,
+                r.gap_us as f64 / 1e3,
+                r.blocked_frac * 100.0,
+                r.dominant_phase,
+            );
+        }
+        if rows.is_empty() {
+            let _ = writeln!(out, "(no leader level_scan rounds found)");
+        }
+        let _ = writeln!(out);
+        let _ = writeln!(out, "busy time by process and phase:");
+        for (label, phases) in self.phase_totals() {
+            let total: u64 = phases.values().sum();
+            let _ = writeln!(out, "  {label}  ({:.3} ms total)", total as f64 / 1e3);
+            let mut sorted: Vec<_> = phases.iter().collect();
+            sorted.sort_by(|a, b| b.1.cmp(a.1).then_with(|| a.0.cmp(b.0)));
+            for (phase, us) in sorted {
+                let _ = writeln!(out, "    {phase:<18} {:>12.3} ms", *us as f64 / 1e3);
+            }
+        }
+        if !self.unaligned.is_empty() {
+            let _ = writeln!(
+                out,
+                "warning: no clock_sync path to root for pid(s) {:?}; their \
+                 timelines are unaligned",
+                self.unaligned
+            );
+        }
+        out
+    }
+}
+
+/// One row of the per-round straggler table (see
+/// [`MergedTrace::round_rows`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct RoundRow {
+    pub tree: u64,
+    pub depth: u64,
+    /// Leader-side `level_scan` wall time for the round.
+    pub round_wall_us: u64,
+    /// Label of the slowest worker this round.
+    pub straggler: String,
+    /// That worker's total busy time in the round.
+    pub straggler_us: u64,
+    /// Median worker busy time (lower median for even counts).
+    pub median_us: u64,
+    /// `straggler_us − median_us`: how much the round could shrink if
+    /// the straggler ran at median speed.
+    pub gap_us: u64,
+    /// Fraction of the round's wall time spent waiting on the
+    /// straggler (capped at 1).
+    pub blocked_frac: f64,
+    /// The straggler's most expensive phase this round.
+    pub dominant_phase: String,
+}
+
+/// `drf trace merge`: parse, align, and write Chrome trace JSON.
+pub fn merge_to_file(paths: &[impl AsRef<Path>], out: &Path) -> Result<MergedTrace> {
+    let merged = merge_files(paths)?;
+    std::fs::write(out, merged.chrome_json().to_string())
+        .with_context(|| format!("writing merged trace to {}", out.display()))?;
+    Ok(merged)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_lines(path: &Path, lines: &[String]) {
+        std::fs::write(path, lines.join("\n") + "\n").unwrap();
+    }
+
+    fn proc_line(role: &str, shard: Option<u64>, pid: u64, trace_id: u64) -> String {
+        let shard = shard.map_or("null".to_string(), |s| s.to_string());
+        format!(
+            r#"{{"event":"proc","role":"{role}","shard":{shard},"pid":{pid},"trace_id":{trace_id}}}"#
+        )
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn span_line(
+        role: &str,
+        shard: Option<u64>,
+        pid: u64,
+        trace_id: u64,
+        phase: &str,
+        span_id: u64,
+        parent_id: u64,
+        t_us: u64,
+        dur_us: u64,
+        tree: u64,
+        depth: u64,
+    ) -> String {
+        let shard = shard.map_or("null".to_string(), |s| s.to_string());
+        format!(
+            r#"{{"event":"span","phase":"{phase}","dur_us":{dur_us},"trace_id":{trace_id},"span_id":{span_id},"parent_id":{parent_id},"tid":1,"proc":{{"role":"{role}","shard":{shard},"pid":{pid}}},"tree":{tree},"depth":{depth},"t_us":{t_us}}}"#
+        )
+    }
+
+    fn sync_line(trace_id: u64, peer_pid: u64, offset_us: i64, rtt_us: u64) -> String {
+        format!(
+            r#"{{"event":"clock_sync","trace_id":{trace_id},"peer":{{"role":"worker","shard":0,"pid":{peer_pid}}},"offset_us":{offset_us},"rtt_us":{rtt_us}}}"#
+        )
+    }
+
+    fn tmpdir(tag: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!("drf_trace_merge_{tag}_{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn merge_rejects_mismatched_trace_ids() {
+        let dir = tmpdir("mismatch");
+        let a = dir.join("a.jsonl");
+        let b = dir.join("b.jsonl");
+        write_lines(&a, &[proc_line("leader", None, 1, 7)]);
+        write_lines(&b, &[proc_line("worker", Some(0), 2, 8)]);
+        let err = merge_files(&[&a, &b]).unwrap_err();
+        assert!(err.to_string().contains("mismatched trace_id"), "{err:#}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn merge_aligns_clocks_via_recorded_offsets() {
+        let dir = tmpdir("align");
+        let leader = dir.join("leader.jsonl");
+        let worker = dir.join("worker.jsonl");
+        // Worker's clock leads the leader's by exactly 1s.
+        write_lines(
+            &leader,
+            &[
+                proc_line("leader", None, 1, 7),
+                sync_line(7, 42, 1_000_000, 80),
+                span_line("leader", None, 1, 7, "level_scan", 10, 0, 2_000, 1_800, 0, 0),
+            ],
+        );
+        write_lines(
+            &worker,
+            &[
+                proc_line("worker", Some(0), 42, 7),
+                span_line(
+                    "worker",
+                    Some(0),
+                    42,
+                    7,
+                    "find_splits",
+                    11,
+                    10,
+                    1_001_500,
+                    900,
+                    0,
+                    0,
+                ),
+            ],
+        );
+        let merged = merge_files(&[&leader, &worker]).unwrap();
+        assert_eq!(merged.files[merged.root].role, "leader");
+        assert_eq!(merged.rel[&42], 1_000_000);
+        assert!(merged.unaligned.is_empty());
+        // Leader span starts at 200, worker span at 600 on the aligned
+        // clock; the Chrome export shifts the earliest to ts=0.
+        let chrome = merged.chrome_json();
+        let events = chrome.get("traceEvents").unwrap().as_arr().unwrap();
+        let ts_of = |name: &str| {
+            events
+                .iter()
+                .find(|e| {
+                    e.get_opt("ph").and_then(|p| p.as_str().ok()) == Some("X")
+                        && e.get("name").unwrap().as_str().unwrap() == name
+                })
+                .unwrap()
+                .get("ts")
+                .unwrap()
+                .as_f64()
+                .unwrap()
+        };
+        assert_eq!(ts_of("level_scan"), 0.0);
+        // Unaligned the worker span would start at 1_000_600; aligned
+        // it lands 400us into the leader's scan.
+        assert_eq!(ts_of("find_splits"), 400.0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn round_rows_name_the_straggler_and_its_phase() {
+        let dir = tmpdir("rows");
+        let leader = dir.join("leader.jsonl");
+        let w0 = dir.join("w0.jsonl");
+        let w1 = dir.join("w1.jsonl");
+        write_lines(
+            &leader,
+            &[
+                proc_line("leader", None, 1, 9),
+                sync_line(9, 2, 0, 50),
+                sync_line(9, 3, 0, 50),
+                span_line("leader", None, 1, 9, "level_scan", 20, 0, 5_000, 1_000, 0, 0),
+            ],
+        );
+        write_lines(
+            &w0,
+            &[
+                proc_line("worker", Some(0), 2, 9),
+                span_line("worker", Some(0), 2, 9, "find_splits", 21, 20, 4_500, 400, 0, 0),
+            ],
+        );
+        write_lines(
+            &w1,
+            &[
+                proc_line("worker", Some(1), 3, 9),
+                span_line("worker", Some(1), 3, 9, "find_splits", 22, 20, 4_900, 900, 0, 0),
+            ],
+        );
+        let merged = merge_files(&[&leader, &w0, &w1]).unwrap();
+        let rows = merged.round_rows();
+        assert_eq!(rows.len(), 1);
+        let r = &rows[0];
+        assert_eq!((r.tree, r.depth), (0, 0));
+        assert_eq!(r.round_wall_us, 1_000);
+        assert_eq!(r.straggler, "worker/1");
+        assert_eq!(r.straggler_us, 900);
+        assert_eq!(r.median_us, 400);
+        assert_eq!(r.gap_us, 500);
+        assert_eq!(r.dominant_phase, "find_splits");
+        assert!((r.blocked_frac - 0.9).abs() < 1e-9);
+        let report = merged.report();
+        assert!(report.contains("worker/1"), "{report}");
+        assert!(report.contains("find_splits"), "{report}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

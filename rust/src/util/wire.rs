@@ -8,6 +8,7 @@
 //! prefixes, and the magic/string helpers live here once; the two
 //! protocol modules only define their message encodings.
 
+use crate::telemetry::TraceContext;
 use crate::Result;
 use anyhow::ensure;
 
@@ -184,6 +185,36 @@ impl<'a> Reader<'a> {
     }
 }
 
+/// Byte width of the optional trace-context trailer
+/// ([`put_trace_context`]): `trace_id` + `parent_span`, both u64 LE.
+pub const TRACE_CONTEXT_BYTES: usize = 16;
+
+/// Append the optional distributed-tracing trailer to a request body.
+/// `None` writes nothing, keeping the frame byte-identical to the
+/// pre-tracing encoding — which is what makes context optional on every
+/// protocol without a second wire format.
+pub fn put_trace_context(w: &mut Writer, ctx: Option<&TraceContext>) {
+    if let Some(c) = ctx {
+        w.u64(c.trace_id);
+        w.u64(c.parent_span);
+    }
+}
+
+/// Read the optional trace-context trailer: `Ok(None)` when the body
+/// ended exactly at the cursor (a context-free peer), the decoded
+/// context when [`TRACE_CONTEXT_BYTES`] more follow. Any other
+/// remainder is a framing error, surfaced by the failed scalar read
+/// here or by the caller's final `done()`.
+pub fn get_trace_context(r: &mut Reader<'_>) -> Result<Option<TraceContext>> {
+    if r.remaining() == 0 {
+        return Ok(None);
+    }
+    Ok(Some(TraceContext {
+        trace_id: r.u64()?,
+        parent_span: r.u64()?,
+    }))
+}
+
 /// Write one length-prefixed frame.
 pub fn write_frame(stream: &mut impl std::io::Write, body: &[u8]) -> Result<()> {
     stream.write_all(&(body.len() as u32).to_le_bytes())?;
@@ -339,6 +370,33 @@ mod tests {
         w.u32(1 << 30);
         let bytes = w.into_bytes();
         assert!(Reader::new(&bytes).str().is_err());
+    }
+
+    #[test]
+    fn trace_context_trailer_roundtrip() {
+        // Absent context writes zero bytes.
+        let mut w = Writer::new();
+        put_trace_context(&mut w, None);
+        let bytes = w.into_bytes();
+        assert!(bytes.is_empty());
+        let mut r = Reader::new(&bytes);
+        assert_eq!(get_trace_context(&mut r).unwrap(), None);
+        r.done().unwrap();
+        // Present context is exactly TRACE_CONTEXT_BYTES and round-trips.
+        let ctx = TraceContext {
+            trace_id: 0xABCD_EF01_2345,
+            parent_span: 0x1122_3344_5566,
+        };
+        let mut w = Writer::new();
+        put_trace_context(&mut w, Some(&ctx));
+        let bytes = w.into_bytes();
+        assert_eq!(bytes.len(), TRACE_CONTEXT_BYTES);
+        let mut r = Reader::new(&bytes);
+        assert_eq!(get_trace_context(&mut r).unwrap(), Some(ctx));
+        r.done().unwrap();
+        // A torn trailer (half the bytes) is a framing error.
+        let mut r = Reader::new(&bytes[..8]);
+        assert!(get_trace_context(&mut r).is_err());
     }
 
     #[test]

@@ -28,6 +28,10 @@ const ROWS: usize = 400;
 const FEATURES: usize = 6;
 const SEED: u64 = 41;
 
+/// The trace sink is process-global; tests that redirect it must not
+/// overlap (cargo runs tests in this binary on parallel threads).
+static TRACE_SINK_LOCK: Mutex<()> = Mutex::new(());
+
 /// Kills the worker process when dropped (panic-safe cleanup).
 struct ChildGuard(Child);
 
@@ -75,6 +79,11 @@ fn shard_via_cli(dir: &Path, splitters: usize) {
 /// Spawn a real `drf worker` process on an ephemeral port and parse
 /// the bound address from its ready line.
 fn spawn_worker(shard_dir: &Path) -> (ChildGuard, String) {
+    spawn_worker_args(shard_dir, &[])
+}
+
+/// `spawn_worker` plus extra CLI flags (e.g. `--trace-out FILE`).
+fn spawn_worker_args(shard_dir: &Path, extra: &[&str]) -> (ChildGuard, String) {
     let mut child = Command::new(DRF_BIN)
         .args([
             "worker",
@@ -83,6 +92,7 @@ fn spawn_worker(shard_dir: &Path) -> (ChildGuard, String) {
             "--addr",
             "127.0.0.1:0",
         ])
+        .args(extra)
         .stdout(Stdio::piped())
         .stderr(Stdio::inherit())
         .spawn()
@@ -190,6 +200,7 @@ fn cluster_worker_processes_match_direct_engine() {
 
 #[test]
 fn cluster_telemetry_scrapes_and_forests_stay_bit_identical() {
+    let _trace_lock = TRACE_SINK_LOCK.lock().unwrap_or_else(|e| e.into_inner());
     let tmp = drf::util::tempdir().unwrap();
     shard_via_cli(tmp.path(), 2);
     let ds = dataset();
@@ -245,22 +256,141 @@ fn cluster_telemetry_scrapes_and_forests_stay_bit_identical() {
     let net = series_value(&scraped, "drf_worker_io_net_bytes").expect("worker net gauge");
     assert!(net > 0, "worker served a training run but reports no net bytes");
 
-    // The trace sink got well-formed JSONL span events, including the
-    // per-level scan phase.
+    // The trace sink got well-formed JSONL events, including span
+    // events for the per-level scan phase.
     let trace = std::fs::read_to_string(&trace_path).unwrap();
     let mut spans = 0usize;
     let mut saw_level_scan = false;
     for line in trace.lines() {
         let j = drf::util::Json::parse(line).expect("trace line parses as JSON");
-        assert_eq!(j.get("event").unwrap().as_str().unwrap(), "span");
-        assert!(j.get("dur_us").unwrap().as_u64().is_ok());
-        if j.get("phase").unwrap().as_str().unwrap() == "level_scan" {
-            saw_level_scan = true;
+        match j.get("event").unwrap().as_str().unwrap() {
+            "span" => {
+                assert!(j.get("dur_us").unwrap().as_u64().is_ok());
+                assert!(j.get("span_id").unwrap().as_u64().unwrap() > 0);
+                if j.get("phase").unwrap().as_str().unwrap() == "level_scan" {
+                    saw_level_scan = true;
+                }
+                spans += 1;
+            }
+            // The stream also carries `proc` identity and `clock_sync`
+            // offset events — the inputs `drf trace merge` aligns on.
+            "proc" | "clock_sync" => {}
+            other => panic!("unexpected trace event type {other:?}"),
         }
-        spans += 1;
     }
     assert!(spans > 0, "no span events in the trace");
     assert!(saw_level_scan, "trace missing level_scan spans");
+}
+
+#[test]
+fn merged_trace_parents_worker_spans_under_leader_rounds() {
+    let _trace_lock = TRACE_SINK_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let tmp = drf::util::tempdir().unwrap();
+    shard_via_cli(tmp.path(), 2);
+    let ds = dataset();
+    let cfg = forest_cfg(2);
+
+    // Two real worker processes, each streaming its own trace file.
+    let w0_trace = tmp.path().join("w0.jsonl");
+    let w1_trace = tmp.path().join("w1.jsonl");
+    let (_g0, addr0) = spawn_worker_args(
+        &tmp.path().join("shard_0"),
+        &["--trace-out", w0_trace.to_str().unwrap()],
+    );
+    let (_g1, addr1) = spawn_worker_args(
+        &tmp.path().join("shard_1"),
+        &["--trace-out", w1_trace.to_str().unwrap()],
+    );
+
+    // This test process is the leader.
+    let leader_trace = tmp.path().join("leader.jsonl");
+    drf::telemetry::set_proc_identity("leader", None);
+    drf::telemetry::set_trace_out(&leader_trace).unwrap();
+
+    let mut ccfg = cfg.clone();
+    ccfg.engine = Engine::Cluster;
+    ccfg.cluster_manifest = Some(tmp.path().join("cluster.json"));
+    ccfg.cluster_workers = vec![addr0, addr1];
+    let (_forest, _) = RandomForest::train_with_config(&ds, &ccfg).unwrap();
+    drf::telemetry::clear_trace_out();
+
+    // Worker span events are written before the RPC response frame, so
+    // once training returned the files are complete.
+    let files = [leader_trace, w0_trace, w1_trace];
+    let merged = drf::telemetry::trace::merge_files(&files).unwrap();
+
+    // One trace: every process that recorded an id recorded the same
+    // one (workers adopt the leader's id from the wire context).
+    let ids: Vec<u64> = merged
+        .files
+        .iter()
+        .map(|f| f.trace_id)
+        .filter(|&i| i != 0)
+        .collect();
+    assert_eq!(ids.len(), 3, "some process never saw the trace id: {ids:?}");
+    assert!(ids.windows(2).all(|w| w[0] == w[1]), "trace ids differ: {ids:?}");
+
+    // The leader roots the clock alignment and the handshake
+    // clock-sync reached both workers.
+    assert_eq!(merged.files[merged.root].role, "leader");
+    assert!(
+        merged.unaligned.is_empty(),
+        "worker clocks not aligned: {:?}",
+        merged.unaligned
+    );
+
+    // Every worker find_splits span parents under the leader's
+    // level_scan span for the same (tree, depth) — the cross-process
+    // context actually propagated.
+    let leader = &merged.files[merged.root];
+    let scan_rounds: std::collections::HashMap<u64, (f64, f64)> = leader
+        .spans
+        .iter()
+        .filter(|s| s.phase == "level_scan")
+        .map(|s| {
+            (
+                s.span_id,
+                (s.field("tree").unwrap(), s.field("depth").unwrap()),
+            )
+        })
+        .collect();
+    let mut parented = 0usize;
+    for f in merged.files.iter().filter(|f| f.role == "worker") {
+        for s in f.spans.iter().filter(|s| s.phase == "find_splits") {
+            let (tree, depth) = scan_rounds.get(&s.parent_id).copied().unwrap_or_else(|| {
+                panic!("find_splits span {s:?} does not parent under a leader level_scan span")
+            });
+            assert_eq!(s.field("tree"), Some(tree));
+            assert_eq!(s.field("depth"), Some(depth));
+            parented += 1;
+        }
+    }
+    assert!(parented > 0, "no worker find_splits spans were recorded");
+
+    // The merged Chrome JSON round-trips and holds every span.
+    let out_json = tmp.path().join("merged.json");
+    drf::telemetry::trace::merge_to_file(&files, &out_json).unwrap();
+    let chrome = drf::util::Json::parse(&std::fs::read_to_string(&out_json).unwrap()).unwrap();
+    let events = chrome.get("traceEvents").unwrap().as_arr().unwrap();
+    let total_spans: usize = merged.files.iter().map(|f| f.spans.len()).sum();
+    // One metadata event per process plus one X event per span.
+    assert_eq!(events.len(), merged.files.len() + total_spans);
+
+    // The report names a straggler worker and its dominant phase for
+    // every round.
+    let rows = merged.round_rows();
+    assert!(!rows.is_empty(), "report found no rounds");
+    for r in &rows {
+        assert!(
+            r.straggler.starts_with("worker/"),
+            "straggler is not a worker: {r:?}"
+        );
+        assert!(!r.dominant_phase.is_empty(), "no dominant phase: {r:?}");
+        assert!(r.straggler_us >= r.median_us, "{r:?}");
+    }
+    let report = merged.report();
+    assert!(report.contains("worker/"), "{report}");
+    assert!(report.contains("busy time by process and phase"), "{report}");
 }
 
 /// Delegating pool that kills + restarts one worker process the first

@@ -374,6 +374,27 @@ fn telemetry_is_observation_only_across_backends() {
         lines.lines().count() > 0,
         "trace sink stayed empty across five training runs"
     );
+    // Span events carry the distributed-tracing fields: ids, process
+    // identity, and a per-process monotone non-decreasing timestamp.
+    let mut span_events = 0usize;
+    let mut last_t = 0u64;
+    for line in lines.lines() {
+        let j = drf::util::Json::parse(line).expect("trace line parses");
+        let t = j.get("t_us").unwrap().as_u64().unwrap();
+        assert!(t >= last_t, "t_us went backwards: {t} < {last_t}");
+        last_t = t;
+        if j.get("event").unwrap().as_str().unwrap() != "span" {
+            continue;
+        }
+        span_events += 1;
+        assert!(j.get("trace_id").unwrap().as_u64().is_ok());
+        assert!(j.get("span_id").unwrap().as_u64().unwrap() > 0);
+        assert!(j.get("parent_id").unwrap().as_u64().is_ok());
+        let proc = j.get("proc").unwrap();
+        assert!(proc.get("pid").unwrap().as_u64().unwrap() > 0);
+        assert!(proc.get("role").unwrap().as_str().is_ok());
+    }
+    assert!(span_events > 0, "no span events across five backends");
 }
 
 #[test]
