@@ -36,6 +36,8 @@ use crate::Result;
 use anyhow::{anyhow, bail, ensure, Context};
 use std::io::{BufReader, BufWriter};
 use std::net::{SocketAddr, TcpStream, ToSocketAddrs};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Mutex;
 use std::time::Duration;
 
@@ -80,6 +82,7 @@ pub fn hello_template(cfg: &TrainConfig, manifest: &ClusterManifest) -> HelloCon
         },
         split_search: cfg.split_search.as_str().into(),
         depth_next_rows: cfg.depth_next_rows,
+        topology_version: manifest.version,
     }
 }
 
@@ -97,7 +100,13 @@ struct Slot {
     /// then `addr` (reconnection reads the address while holding the
     /// connection lock).
     addr: Mutex<SocketAddr>,
-    columns: Vec<usize>,
+    /// Columns this worker serves under the current topology version
+    /// (rewritten by [`ClusterPool::poll_topology`] after an elastic
+    /// re-shard).
+    columns: Mutex<Vec<usize>>,
+    /// A drained slot keeps its id (splitter ids are stable across a
+    /// re-shard) but owns no columns and takes no traffic.
+    active: AtomicBool,
     conn: Mutex<Option<Conn>>,
 }
 
@@ -111,7 +120,16 @@ fn resolve(addr: &str) -> Result<SocketAddr> {
 /// A [`SplitterPool`] backed by remote `drf worker` processes.
 pub struct ClusterPool {
     slots: Vec<Slot>,
-    hello: HelloConfig,
+    /// The handshake template. Behind a lock because its
+    /// `topology_version` advances when [`ClusterPool::poll_topology`]
+    /// picks up a re-shard.
+    hello: Mutex<HelloConfig>,
+    /// The ownership map the leader currently trains with. Swapped
+    /// wholesale on a manifest version bump; the manager snapshots it
+    /// per tree so a running tree never sees the map change.
+    topology: Mutex<Topology>,
+    /// `cluster.json` to re-read between trees (None = static fleet).
+    manifest_path: Mutex<Option<PathBuf>>,
     expected_rows: u64,
     expected_classes: u32,
     opts: ClusterOptions,
@@ -137,35 +155,142 @@ impl ClusterPool {
         );
         let mut slots = Vec::with_capacity(workers.len());
         for (s, w) in workers.iter().enumerate() {
+            let columns = topology.columns_of(s);
             slots.push(Slot {
                 addr: Mutex::new(resolve(w)?),
-                columns: topology.columns_of(s),
+                active: AtomicBool::new(!columns.is_empty()),
+                columns: Mutex::new(columns),
                 conn: Mutex::new(None),
             });
         }
         let pool = ClusterPool {
             slots,
-            hello,
+            hello: Mutex::new(hello),
+            topology: Mutex::new(topology.clone()),
+            manifest_path: Mutex::new(None),
             expected_rows,
             expected_classes,
             opts,
             net: IoStats::new(),
         };
         for s in 0..pool.slots.len() {
+            if !pool.slots[s].active.load(Ordering::SeqCst) {
+                continue; // already-drained slot in a restarted run
+            }
             let conn = pool.open_conn(s)?;
             *pool.slots[s].conn.lock().unwrap() = Some(conn);
         }
         // Leader-side network totals, visible on the leader's /metrics.
         crate::telemetry::register_io_gauges("drf_cluster_net", &pool.net);
-        crate::telemetry::gauge("drf_cluster_workers").set(pool.slots.len() as u64);
+        crate::telemetry::gauge("drf_cluster_workers").set(pool.active_count() as u64);
         Ok(pool)
     }
 
     fn hello_for(&self, s: usize) -> HelloConfig {
         HelloConfig {
             shard: s as u32,
-            ..self.hello.clone()
+            ..self.hello.lock().unwrap().clone()
         }
+    }
+
+    /// Re-read `path` (a [`ClusterManifest`]) between trees so a
+    /// supervisor's rewrites — rescheduled worker addresses, an elastic
+    /// drain — reach this leader without any new RPC surface. See
+    /// [`ClusterPool::poll_topology`].
+    pub fn watch_manifest(&self, path: PathBuf) {
+        *self.manifest_path.lock().unwrap() = Some(path);
+    }
+
+    /// Snapshot of the ownership map currently trained with. The
+    /// manager takes one per tree; a re-shard picked up between trees
+    /// never mutates a snapshot a builder is using.
+    pub fn topology(&self) -> Topology {
+        self.topology.lock().unwrap().clone()
+    }
+
+    /// The cluster-manifest generation the pool last adopted.
+    pub fn topology_version(&self) -> u64 {
+        self.hello.lock().unwrap().topology_version
+    }
+
+    /// Splitter slots still owning columns.
+    pub fn active_count(&self) -> usize {
+        self.slots
+            .iter()
+            .filter(|s| s.active.load(Ordering::SeqCst))
+            .count()
+    }
+
+    /// First slot that still owns columns — the stand-in target for
+    /// per-splitter calls addressed at a drained slot (the tree builder
+    /// reads root stats from splitter 0 unconditionally; every splitter
+    /// computes identical root stats from the replicated labels, so any
+    /// active one serves).
+    fn route(&self, s: usize) -> usize {
+        if self.slots[s].active.load(Ordering::SeqCst) {
+            return s;
+        }
+        self.slots
+            .iter()
+            .position(|slot| slot.active.load(Ordering::SeqCst))
+            .unwrap_or(s)
+    }
+
+    /// If a watched `cluster.json` advanced past the version last
+    /// adopted, take the new topology: per-slot column lists and
+    /// addresses are refreshed, emptied slots are marked drained, every
+    /// connection is dropped (the next call re-handshakes carrying the
+    /// new `topology_version`, which makes each worker reload its
+    /// re-cut pack before answering), and the Hello template advances.
+    /// Returns whether a new version was adopted. Call only between
+    /// trees: the forest is topology-invariant at tree boundaries
+    /// (per-level column assignment routes scans, it never changes
+    /// split arithmetic), so adopting here preserves bit-identity.
+    pub fn poll_topology(&self) -> Result<bool> {
+        let path = match self.manifest_path.lock().unwrap().clone() {
+            Some(p) => p,
+            None => return Ok(false),
+        };
+        // A transient read/parse failure (the supervisor writes by
+        // rename, but the file may live on a remote mount) skips this
+        // poll rather than aborting a healthy training run.
+        let manifest = match ClusterManifest::load(&path) {
+            Ok(m) => m,
+            Err(_) => {
+                crate::telemetry::counter("drf_cluster_topology_poll_errors_total").inc();
+                return Ok(false);
+            }
+        };
+        if manifest.version <= self.topology_version() {
+            return Ok(false);
+        }
+        ensure!(
+            manifest.shards.len() == self.slots.len(),
+            "watched manifest now lists {} shards, pool was built with {}",
+            manifest.shards.len(),
+            self.slots.len()
+        );
+        let topology = manifest.topology()?;
+        for (s, slot) in self.slots.iter().enumerate() {
+            let columns = topology.columns_of(s);
+            // Drop the connection first (lock order: conn before addr);
+            // stale handshakes must not serve the new topology.
+            let mut conn = slot.conn.lock().unwrap();
+            *conn = None;
+            if let Some(addr) = manifest.workers.get(s) {
+                if !addr.is_empty() {
+                    *slot.addr.lock().unwrap() = resolve(addr)?;
+                }
+            }
+            slot.active.store(!columns.is_empty(), Ordering::SeqCst);
+            *slot.columns.lock().unwrap() = columns;
+        }
+        self.hello.lock().unwrap().topology_version = manifest.version;
+        *self.topology.lock().unwrap() = topology;
+        crate::telemetry::counter("drf_cluster_topology_reloads_total").inc();
+        crate::telemetry::gauge("drf_cluster_topology_version").set(manifest.version);
+        crate::telemetry::gauge("drf_cluster_workers").set(self.active_count() as u64);
+        Ok(true)
     }
 
     /// Redirect worker `s` to a new address (e.g. a supervisor
@@ -180,6 +305,36 @@ impl ClusterPool {
         Ok(())
     }
 
+    /// Mid-tree address refresh: while a reconnect waits out a worker
+    /// restart, re-read the watched manifest and take worker `s`'s
+    /// address if the supervisor moved it. Only the *address* is taken
+    /// here — column ownership changes adopt between trees
+    /// ([`ClusterPool::poll_topology`]), where they cannot affect a
+    /// tree already being built.
+    fn refresh_addr(&self, s: usize) {
+        let path = match self.manifest_path.lock().unwrap().clone() {
+            Some(p) => p,
+            None => return,
+        };
+        let Ok(manifest) = ClusterManifest::load(&path) else {
+            return;
+        };
+        let Some(addr) = manifest.workers.get(s) else {
+            return;
+        };
+        if addr.is_empty() {
+            return;
+        }
+        let Ok(resolved) = resolve(addr) else {
+            return;
+        };
+        let mut cur = self.slots[s].addr.lock().unwrap();
+        if *cur != resolved {
+            *cur = resolved;
+            crate::telemetry::counter("drf_cluster_addr_refreshes_total").inc();
+        }
+    }
+
     /// Establish a validated connection to worker `s`, retrying while
     /// the worker comes (back) up. A *handshake* failure is a hard
     /// error — the fleet is wrong and retrying cannot fix it.
@@ -190,6 +345,7 @@ impl ClusterPool {
         for attempt in 0..attempts {
             if attempt > 0 {
                 std::thread::sleep(self.opts.retry_delay);
+                self.refresh_addr(s);
             }
             // Re-read per attempt: the address may be redirected while
             // we wait out a restart.
@@ -247,10 +403,10 @@ impl ClusterPool {
             self.expected_classes
         );
         let cols: Vec<usize> = info.columns.iter().map(|&c| c as usize).collect();
+        let expected = self.slots[s].columns.lock().unwrap().clone();
         ensure!(
-            cols == self.slots[s].columns,
-            "worker {s} column inventory {cols:?} does not match the topology's {:?}",
-            self.slots[s].columns
+            cols == expected,
+            "worker {s} column inventory {cols:?} does not match the topology's {expected:?}"
         );
         // With tracing active, estimate this worker's clock offset via a
         // short RPC-midpoint exchange so `drf trace merge` can align its
@@ -325,18 +481,24 @@ impl SplitterPool for ClusterPool {
     }
 
     fn columns_of(&self, splitter: usize) -> Vec<usize> {
-        self.slots[splitter].columns.clone()
+        self.slots[splitter].columns.lock().unwrap().clone()
     }
 
     fn start_tree(&self, tree: u32) -> Result<()> {
         for s in 0..self.slots.len() {
+            if !self.slots[s].active.load(Ordering::SeqCst) {
+                continue;
+            }
             self.start_tree_on(s, tree)?;
         }
         Ok(())
     }
 
     fn root_stats(&self, splitter: usize, tree: u32) -> Result<Vec<u64>> {
-        match self.call(splitter, &Request::RootStats(tree))? {
+        // Root stats come from the replicated label column — identical
+        // on every splitter — so a drained slot's request is rerouted
+        // to any active one.
+        match self.call(self.route(splitter), &Request::RootStats(tree))? {
             Response::RootStats(v) => Ok(v),
             r => bail!("unexpected response {r:?}"),
         }
@@ -361,6 +523,9 @@ impl SplitterPool for ClusterPool {
         let mut min_us = u64::MAX;
         let mut max_us = 0u64;
         for s in 0..self.slots.len() {
+            if !self.slots[s].active.load(Ordering::SeqCst) {
+                continue;
+            }
             let start = std::time::Instant::now();
             self.apply_level_update_on(s, u)?;
             let us = start.elapsed().as_micros() as u64;
@@ -389,6 +554,9 @@ impl SplitterPool for ClusterPool {
 
     fn broadcast_subtree_done(&self, d: &SubtreeDone) -> Result<()> {
         for s in 0..self.slots.len() {
+            if !self.slots[s].active.load(Ordering::SeqCst) {
+                continue;
+            }
             self.broadcast_subtree_done_on(s, d)?;
         }
         self.net.add_broadcast_event();
@@ -397,6 +565,9 @@ impl SplitterPool for ClusterPool {
 
     fn finish_tree(&self, tree: u32) -> Result<()> {
         for s in 0..self.slots.len() {
+            if !self.slots[s].active.load(Ordering::SeqCst) {
+                continue;
+            }
             self.finish_tree_on(s, tree)?;
         }
         Ok(())
@@ -505,6 +676,7 @@ mod tests {
             prune_threshold: None,
             split_search: "exact".into(),
             depth_next_rows: 0,
+            topology_version: 0,
         }
     }
 

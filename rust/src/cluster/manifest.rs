@@ -267,6 +267,16 @@ pub struct ClusterManifest {
     /// May be empty at shard time — a deployment fills it in (or the
     /// leader overrides with `--workers`).
     pub workers: Vec<String>,
+    /// Topology generation. `drf shard` writes 0; the supervisor bumps
+    /// it on every rewrite (worker reschedule, drain/re-shard), and the
+    /// leader polls the file between trees, carrying the version in its
+    /// Hello so workers can tell a re-shard from a stale leader.
+    pub version: u64,
+    /// Object-store replica addresses (`host:port`), in failover
+    /// order. Empty when packs are served from local disk. Clients
+    /// accept the whole list and rotate on failure
+    /// ([`crate::data::remote::RemoteClient`]).
+    pub objstores: Vec<String>,
 }
 
 impl ClusterManifest {
@@ -281,27 +291,25 @@ impl ClusterManifest {
         }
     }
 
-    /// Rebuild the ownership map and check it against the recorded
-    /// shard column lists (a stale manifest must not silently train).
+    /// Build the ownership map from the recorded shard column lists.
+    /// Version 0 manifests carry exactly the stride construction of
+    /// [`Topology::new`]; after an elastic re-shard the lists are the
+    /// only truth, so the topology is built *from* them — validated for
+    /// full column coverage and shard-entry order (a tampered or
+    /// incomplete manifest must not silently train).
     pub fn topology(&self) -> Result<Topology> {
-        let topo = Topology::new(self.num_features, &self.topology_params());
         ensure!(
-            self.shards.len() == topo.num_splitters(),
+            self.shards.len() == self.num_splitters,
             "manifest lists {} shards for a {}-splitter topology",
             self.shards.len(),
-            topo.num_splitters()
+            self.num_splitters
         );
         for (s, entry) in self.shards.iter().enumerate() {
             ensure!(entry.shard == s, "shard entries out of order at {s}");
-            let expect = topo.columns_of(s);
-            ensure!(
-                entry.columns == expect,
-                "shard {s} holds columns {:?}, topology assigns {:?}",
-                entry.columns,
-                expect
-            );
         }
-        Ok(topo)
+        let columns: Vec<Vec<usize>> =
+            self.shards.iter().map(|e| e.columns.clone()).collect();
+        Topology::from_owners(self.num_features, self.redundancy, &columns)
     }
 
     pub fn to_json(&self) -> Json {
@@ -336,6 +344,16 @@ impl ClusterManifest {
             .set(
                 "workers",
                 Json::Arr(self.workers.iter().map(|w| Json::Str(w.clone())).collect()),
+            )
+            .set("version", Json::from_u64(self.version))
+            .set(
+                "objstores",
+                Json::Arr(
+                    self.objstores
+                        .iter()
+                        .map(|a| Json::Str(a.clone()))
+                        .collect(),
+                ),
             );
         o
     }
@@ -375,6 +393,20 @@ impl ClusterManifest {
                 .map(|w| Ok(w.as_str()?.to_string()))
                 .collect::<Result<Vec<_>>>()?,
         };
+        // Older manifests predate versioning and replica sets: absent
+        // keys mean "generation 0, no objstores", not an error.
+        let version = match v.get_opt("version") {
+            None => 0,
+            Some(x) => x.as_u64()?,
+        };
+        let objstores = match v.get_opt("objstores") {
+            None => Vec::new(),
+            Some(os) => os
+                .as_arr()?
+                .iter()
+                .map(|a| Ok(a.as_str()?.to_string()))
+                .collect::<Result<Vec<_>>>()?,
+        };
         Ok(ClusterManifest {
             num_splitters: v.get("num_splitters")?.as_usize()?,
             redundancy: v.get("redundancy")?.as_usize()?,
@@ -383,6 +415,8 @@ impl ClusterManifest {
             num_classes: v.get("num_classes")?.as_u32()?,
             shards,
             workers,
+            version,
+            objstores,
         })
     }
 
@@ -476,6 +510,8 @@ mod tests {
                 })
                 .collect(),
             workers: vec!["127.0.0.1:1".into(), "127.0.0.1:2".into(), "127.0.0.1:3".into()],
+            version: 3,
+            objstores: vec!["127.0.0.1:9000".into(), "127.0.0.1:9001".into()],
         };
         let back =
             ClusterManifest::from_json(&Json::parse(&m.to_json().to_string()).unwrap()).unwrap();
@@ -486,6 +522,47 @@ mod tests {
         let mut bad = back.clone();
         bad.shards[0].columns = vec![1, 2, 3];
         assert!(bad.topology().is_err());
+    }
+
+    #[test]
+    fn drained_manifest_topology_from_columns() {
+        // After `drf supervise --drain 1` the drained entry is empty
+        // and its columns live on the survivors — no stride
+        // construction describes this; the column lists are the truth.
+        let m = ClusterManifest {
+            num_splitters: 3,
+            redundancy: 1,
+            rows: 500,
+            num_features: 6,
+            num_classes: 2,
+            shards: vec![
+                ShardEntry { shard: 0, dir: "shard_0".into(), columns: vec![0, 1, 3] },
+                ShardEntry { shard: 1, dir: "shard_1".into(), columns: vec![] },
+                ShardEntry { shard: 2, dir: "shard_2".into(), columns: vec![2, 4, 5] },
+            ],
+            workers: Vec::new(),
+            version: 1,
+            objstores: Vec::new(),
+        };
+        let topo = m.topology().unwrap();
+        assert_eq!(topo.columns_of(1), Vec::<usize>::new());
+        assert_eq!(topo.owners(1), &[0]);
+        assert_eq!(topo.num_splitters(), 3);
+
+        // A column nobody holds is rejected.
+        let mut bad = m.clone();
+        bad.shards[2].columns = vec![2, 4];
+        assert!(bad.topology().is_err());
+
+        // Pre-versioning manifests parse as generation 0.
+        let mut j = m.to_json();
+        if let Json::Obj(map) = &mut j {
+            map.remove("version");
+            map.remove("objstores");
+        }
+        let back = ClusterManifest::from_json(&j).unwrap();
+        assert_eq!(back.version, 0);
+        assert!(back.objstores.is_empty());
     }
 
     #[test]

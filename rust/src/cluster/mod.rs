@@ -29,12 +29,19 @@
 //!    a worker killed and restarted mid-training is rebuilt by
 //!    replaying the level-update log — trees stay bit-identical to
 //!    `--engine direct` (asserted end-to-end in `tests/cluster.rs`).
+//! 4. **Supervisor** ([`supervise`]): `drf supervise --dir DIR` boots
+//!    the fleet, health-checks every process, restarts or reschedules
+//!    the dead (pure policy core, flap-damped), re-shards a worker out
+//!    of a live run (`drain`), and runs objstore replica sets — all
+//!    coordinated with the leader through versioned `cluster.json`
+//!    rewrites, never a new RPC.
 //!
 //! [`Topology`]: crate::coordinator::topology::Topology
 
 pub mod engine;
 pub mod manifest;
 pub mod shard;
+pub mod supervise;
 pub mod worker;
 
 pub use engine::{hello_template, ClusterOptions, ClusterPool};
@@ -42,4 +49,10 @@ pub use manifest::{
     checksum_bytes, checksum_file, ClusterManifest, ShardColumn, ShardEntry, ShardManifest,
 };
 pub use shard::{write_shards, ShardOptions};
-pub use worker::{load_shard, load_shard_remote, LoadedShard, WorkerOptions, WorkerServer};
+pub use supervise::{
+    decide, drain_worker, save_manifest_atomic, ProcHealth, SuperviseAction, SuperviseOptions,
+    SupervisePolicy, Supervisor,
+};
+pub use worker::{
+    load_shard, load_shard_remote, LoadedShard, ShardSource, WorkerOptions, WorkerServer,
+};

@@ -26,6 +26,13 @@ pub struct ShardOptions {
     /// Worker addresses to record in the cluster manifest (one per
     /// shard, in shard order); empty = fill in at deploy time.
     pub workers: Vec<String>,
+    /// Number of complete pack copies to emit (`--replicas N`). The
+    /// canonical tree lands under `out_dir` as always; each extra
+    /// replica is a byte-identical copy under `out_dir/replica_<r>`,
+    /// ready to hand to its own `drf objstore` so remote-pack workers
+    /// can fail over between stores serving the same bytes. 1 (the
+    /// default) writes no copies.
+    pub replicas: usize,
 }
 
 impl Default for ShardOptions {
@@ -33,6 +40,7 @@ impl Default for ShardOptions {
         Self {
             chunk_rows: disk::DEFAULT_CHUNK_ROWS as u32,
             workers: Vec::new(),
+            replicas: 1,
         }
     }
 }
@@ -127,9 +135,40 @@ pub fn write_shards(
         num_classes: ds.num_classes(),
         shards,
         workers: opts.workers.clone(),
+        version: 0,
+        objstores: Vec::new(),
     };
     cluster.save(&out_dir.join(ClusterManifest::FILE))?;
+
+    // Replicated packs: byte-identical copies of the whole tree, one
+    // per extra replica, each servable by its own objstore.
+    for r in 1..opts.replicas.max(1) {
+        let replica_root = out_dir.join(format!("replica_{r}"));
+        for s in 0..topo.num_splitters() {
+            copy_dir(
+                &out_dir.join(format!("shard_{s}")),
+                &replica_root.join(format!("shard_{s}")),
+            )?;
+        }
+        std::fs::copy(
+            out_dir.join(ClusterManifest::FILE),
+            replica_root.join(ClusterManifest::FILE),
+        )?;
+    }
     Ok(cluster)
+}
+
+/// Copy every regular file of `src` into `dst` (one level deep — shard
+/// pack directories are flat).
+fn copy_dir(src: &Path, dst: &Path) -> Result<()> {
+    std::fs::create_dir_all(dst)?;
+    for entry in std::fs::read_dir(src)? {
+        let entry = entry?;
+        if entry.file_type()?.is_file() {
+            std::fs::copy(entry.path(), dst.join(entry.file_name()))?;
+        }
+    }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -194,6 +233,42 @@ mod tests {
         // The cluster manifest reloads from disk.
         let back = ClusterManifest::load(&dir.path().join(ClusterManifest::FILE)).unwrap();
         assert_eq!(back, cluster);
+    }
+
+    #[test]
+    fn replicated_packs_are_byte_identical() {
+        let ds = LeoLikeSpec::new(120, 3).generate();
+        let dir = crate::util::tempdir().unwrap();
+        write_shards(
+            &ds,
+            &TopologyParams {
+                num_splitters: Some(2),
+                ..Default::default()
+            },
+            dir.path(),
+            &ShardOptions {
+                chunk_rows: 64,
+                replicas: 2,
+                ..Default::default()
+            },
+            IoStats::new(),
+        )
+        .unwrap();
+        // The replica tree carries the same manifests and the same
+        // checksummed bytes — a worker can load either one.
+        let replica = dir.path().join("replica_1");
+        let back = ClusterManifest::load(&replica.join(ClusterManifest::FILE)).unwrap();
+        for e in &back.shards {
+            let orig = ShardManifest::load(&dir.path().join(&e.dir)).unwrap();
+            let copy = ShardManifest::load(&replica.join(&e.dir)).unwrap();
+            assert_eq!(orig, copy);
+            for c in &copy.columns {
+                assert_eq!(
+                    checksum_file(&replica.join(&e.dir).join(&c.file)).unwrap(),
+                    c.checksum
+                );
+            }
+        }
     }
 
     #[test]

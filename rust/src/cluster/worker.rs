@@ -283,6 +283,32 @@ pub fn load_shard_remote(addr: &str, prefix: &str, opts: &WorkerOptions) -> Resu
     })
 }
 
+/// Where a worker's pack came from — retained by the server so a
+/// re-handshake carrying a *newer* topology version can reload the
+/// (possibly re-cut) pack instead of serving stale columns. An elastic
+/// re-shard (`drf supervise --drain`) rewrites shard manifests on disk
+/// (or on the objstore) and bumps the cluster manifest version; the
+/// leader's next Hello carries the new version and the worker re-reads
+/// its source before answering.
+#[derive(Debug, Clone)]
+pub enum ShardSource {
+    /// Local pack directory (`drf worker --shard DIR`).
+    Dir(std::path::PathBuf),
+    /// Remote pack on an objstore replica set
+    /// (`--object-store ADDR[,ADDR...]` + the pack's prefix).
+    Remote { addr: String, prefix: String },
+}
+
+impl ShardSource {
+    /// (Re)load the pack from this source.
+    pub fn load(&self, opts: &WorkerOptions) -> Result<LoadedShard> {
+        match self {
+            ShardSource::Dir(dir) => load_shard(dir, opts),
+            ShardSource::Remote { addr, prefix } => load_shard_remote(addr, prefix, opts),
+        }
+    }
+}
+
 /// Check every column of `manifest` against its recorded checksums.
 /// `checksum_of(column, sorted)` produces the hash of the raw
 /// (`sorted = false`) or presorted (`sorted = true`, only called when
@@ -317,21 +343,56 @@ fn verify_columns(
 /// leader's Hello configures (all connections see the same core, so a
 /// reconnect does not wipe per-tree state).
 struct WorkerState {
-    shard: LoadedShard,
+    /// The pack being served. Swapped wholesale when a re-handshake
+    /// with a newer topology version reloads from `source`.
+    shard: Mutex<Arc<LoadedShard>>,
+    /// Where the pack came from (reload seam); `None` for callers that
+    /// handed over a [`LoadedShard`] with no way back to its origin.
+    source: Option<(ShardSource, WorkerOptions)>,
     scan_threads: usize,
     core: Mutex<Option<(HelloConfig, Arc<SplitterCore>)>>,
 }
 
 impl WorkerState {
+    fn shard(&self) -> Arc<LoadedShard> {
+        self.shard.lock().unwrap().clone()
+    }
+
     /// Handle the Hello handshake: validate identity/topology, build
-    /// (or keep) the splitter core, report the inventory.
+    /// (or keep) the splitter core, report the inventory. A Hello with
+    /// a *newer* topology version than the one currently served
+    /// reloads the pack from its source (an elastic re-shard may have
+    /// re-cut it); a Hello with an *older* version is refused — a
+    /// stale leader must not drive a re-sharded fleet.
     fn configure(&self, h: &HelloConfig) -> Result<HelloInfo> {
-        let m = &self.shard.manifest;
         ensure!(
             h.protocol == PROTOCOL_VERSION,
             "protocol mismatch: leader speaks v{}, this worker v{PROTOCOL_VERSION}",
             h.protocol
         );
+        let mut guard = self.core.lock().unwrap();
+        if let Some((cfg, _)) = guard.as_ref() {
+            ensure!(
+                h.topology_version >= cfg.topology_version,
+                "stale topology: leader trains topology v{}, this worker already serves v{}",
+                h.topology_version,
+                cfg.topology_version
+            );
+            if h.topology_version > cfg.topology_version {
+                if let Some((source, opts)) = &self.source {
+                    let fresh = source.load(opts).with_context(|| {
+                        format!(
+                            "reloading shard pack for topology v{}",
+                            h.topology_version
+                        )
+                    })?;
+                    *self.shard.lock().unwrap() = Arc::new(fresh);
+                    crate::telemetry::counter("drf_worker_reshards_total").inc();
+                }
+            }
+        }
+        let shard = self.shard();
+        let m = &shard.manifest;
         ensure!(
             h.shard as usize == m.shard,
             "shard mismatch: leader expects shard {}, this pack is shard {}",
@@ -349,7 +410,6 @@ impl WorkerState {
             m.redundancy
         );
 
-        let mut guard = self.core.lock().unwrap();
         let rebuild = match guard.as_ref() {
             Some((cfg, _)) => cfg != h,
             None => true,
@@ -371,10 +431,10 @@ impl WorkerState {
             let core = SplitterCore::new(
                 m.shard,
                 m.schema.clone(),
-                self.shard.storage.clone(),
-                self.shard.labels.clone(),
+                shard.storage.clone(),
+                shard.labels.clone(),
                 scfg,
-                self.shard.stats.clone(),
+                shard.stats.clone(),
             );
             *guard = Some((h.clone(), Arc::new(core)));
         }
@@ -396,25 +456,46 @@ pub struct WorkerServer {
 
 impl WorkerServer {
     /// Bind `addr` (`host:0` picks an ephemeral port — see
-    /// [`WorkerServer::addr`]) and serve the shard.
+    /// [`WorkerServer::addr`]) and serve the shard. With no retained
+    /// [`ShardSource`], a re-handshake carrying a newer topology
+    /// version is accepted but cannot reload the pack — use
+    /// [`WorkerServer::spawn_with_source`] for deployment workers.
     pub fn spawn(shard: LoadedShard, addr: &str, scan_threads: usize) -> Result<WorkerServer> {
+        Self::spawn_with_source(shard, None, addr, scan_threads)
+    }
+
+    /// [`WorkerServer::spawn`] plus the pack's origin, so an elastic
+    /// re-shard (newer topology version in the Hello) reloads the
+    /// re-cut pack before answering.
+    pub fn spawn_with_source(
+        shard: LoadedShard,
+        source: Option<(ShardSource, WorkerOptions)>,
+        addr: &str,
+        scan_threads: usize,
+    ) -> Result<WorkerServer> {
         let listener =
             TcpListener::bind(addr).with_context(|| format!("binding worker to {addr}"))?;
         let addr = listener.local_addr()?;
-        // The shard's IoStats is shared with every store scan; mirror
-        // it into the registry so `--metrics-addr` scrapes see the
-        // worker's disk/net totals move mid-train.
-        crate::telemetry::register_io_gauges("drf_worker_io", &shard.stats);
-        crate::telemetry::gauge("drf_worker_shard").set(shard.manifest.shard as u64);
+        let shard_id = shard.manifest.shard;
         let state = Arc::new(WorkerState {
-            shard,
+            shard: Mutex::new(Arc::new(shard)),
+            source,
             scan_threads,
             core: Mutex::new(None),
         });
+        // The pack's IoStats is shared with every store scan; mirror it
+        // into the registry so `--metrics-addr` scrapes see the
+        // worker's disk/net totals move mid-train. Resolved through the
+        // state at scrape time so a reloaded pack keeps reporting.
+        let gauge_state = state.clone();
+        crate::telemetry::register_io_gauges_with("drf_worker_io", move || {
+            gauge_state.shard().stats.clone()
+        });
+        crate::telemetry::gauge("drf_worker_shard").set(shard_id as u64);
         let shutdown = Arc::new(AtomicBool::new(false));
         let shutdown2 = shutdown.clone();
         let accept_handle = std::thread::Builder::new()
-            .name(format!("drf-worker-{}", state.shard.manifest.shard))
+            .name(format!("drf-worker-{shard_id}"))
             .spawn(move || {
                 for conn in listener.incoming() {
                     if shutdown2.load(Ordering::SeqCst) {
@@ -542,6 +623,7 @@ mod tests {
             prune_threshold: None,
             split_search: "exact".into(),
             depth_next_rows: 0,
+            topology_version: 0,
         }
     }
 
@@ -595,6 +677,51 @@ mod tests {
         match roundtrip(&stream, &Request::RootStats(0)) {
             Response::RootStats(v) => assert_eq!(v.len(), ds.num_classes() as usize),
             r => panic!("expected RootStats, got {r:?}"),
+        }
+    }
+
+    #[test]
+    fn rehandshake_reloads_newer_topology_and_refuses_stale() {
+        let dir = crate::util::tempdir().unwrap();
+        shard_a_dataset(dir.path(), 2);
+        let sdir = dir.path().join("shard_0");
+        let shard = load_shard(&sdir, &WorkerOptions::default()).unwrap();
+        let server = WorkerServer::spawn_with_source(
+            shard,
+            Some((ShardSource::Dir(sdir.clone()), WorkerOptions::default())),
+            "127.0.0.1:0",
+            1,
+        )
+        .unwrap();
+        let stream = TcpStream::connect(server.addr()).unwrap();
+
+        let h0 = hello(0, 2);
+        match roundtrip(&stream, &Request::Hello(h0.clone())) {
+            Response::Hello(info) => {
+                let cols: Vec<usize> = info.columns.iter().map(|&c| c as usize).collect();
+                assert_eq!(cols, vec![0, 2, 4]);
+            }
+            r => panic!("expected Hello, got {r:?}"),
+        }
+
+        // An elastic drain re-cuts shard 0 to nothing and bumps the
+        // cluster version; a Hello carrying the newer version makes
+        // the worker reload its pack before answering.
+        crate::cluster::supervise::drain_worker(dir.path(), 0).unwrap();
+        let mut h1 = hello(0, 2);
+        h1.topology_version = 1;
+        match roundtrip(&stream, &Request::Hello(h1)) {
+            Response::Hello(info) => {
+                assert!(info.columns.is_empty(), "re-cut pack is empty: {info:?}")
+            }
+            r => panic!("expected Hello, got {r:?}"),
+        }
+
+        // A stale leader (older topology version) must be refused — it
+        // would train against columns this worker no longer serves.
+        match roundtrip(&stream, &Request::Hello(h0)) {
+            Response::Err(msg) => assert!(msg.contains("stale topology"), "{msg}"),
+            r => panic!("expected Err, got {r:?}"),
         }
     }
 

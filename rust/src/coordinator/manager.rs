@@ -308,15 +308,36 @@ impl Manager {
             manifest.num_classes,
             crate::cluster::ClusterOptions::default(),
         )?;
+        // Watch the manifest so a supervisor's rewrites (rescheduled
+        // addresses, an elastic drain) are adopted between trees.
+        pool.watch_manifest(path.clone());
         let pool = crate::coordinator::recovery::RecoveringPool::new(pool);
-        let trees_and_stats = self.train_sequential(&pool, &topology, ds)?;
+
+        // Unlike the in-process engines, trees are built one at a time
+        // against a per-tree topology snapshot: the ownership map may
+        // change at tree boundaries (elastic re-shard), and per-level
+        // column assignment only routes scans — every snapshot trains
+        // the same forest (asserted by the drain drill in
+        // tests/cluster.rs).
+        let mut trees_and_stats = Vec::with_capacity(self.cfg.forest.num_trees);
+        for t in 0..self.cfg.forest.num_trees as u32 {
+            pool.inner().poll_topology()?;
+            let topology = pool.inner().topology();
+            let builder =
+                TreeBuilderCore::new(&pool, &topology, &self.cfg.forest, ds.num_features())
+                    .with_depth_next(self.cfg.depth_next_rows);
+            let tree_sw = Stopwatch::start();
+            let (tree, levels) = builder.build_tree(t)?;
+            trees_and_stats.push((tree, levels, tree_sw.seconds()));
+        }
+        let num_splitters = pool.inner().topology().num_splitters();
         Ok(assemble_report(
             trees_and_stats,
             sw.seconds(),
             pool.net_stats().snapshot(),
             // Workers' disk I/O is accounted in their own processes.
             Vec::new(),
-            topology.num_splitters(),
+            num_splitters,
         ))
     }
 

@@ -49,6 +49,46 @@ impl Topology {
         }
     }
 
+    /// Build a topology from explicit per-splitter column lists (the
+    /// cluster manifest's shard entries). After an elastic re-shard
+    /// (`drf supervise --drain`) the ownership map is no longer the
+    /// stride construction of [`Topology::new`], so the leader rebuilds
+    /// it from what the manifest actually records. Splitters may own
+    /// nothing (a drained slot); every column must be owned by at least
+    /// one splitter. Owner lists come out sorted by splitter id, which
+    /// [`Topology::assign_level`] is insensitive to (its argmin is over
+    /// `(load, id)`, an order-independent key).
+    pub fn from_owners(
+        num_columns: usize,
+        redundancy: usize,
+        columns_per_splitter: &[Vec<usize>],
+    ) -> crate::Result<Self> {
+        let num_splitters = columns_per_splitter.len();
+        let mut owners = vec![Vec::new(); num_columns];
+        for (s, cols) in columns_per_splitter.iter().enumerate() {
+            for &j in cols {
+                anyhow::ensure!(
+                    j < num_columns,
+                    "splitter {s} claims column {j}, dataset has {num_columns}"
+                );
+                anyhow::ensure!(
+                    !owners[j].contains(&s),
+                    "splitter {s} lists column {j} twice"
+                );
+                owners[j].push(s);
+            }
+        }
+        for (j, o) in owners.iter().enumerate() {
+            anyhow::ensure!(!o.is_empty(), "column {j} has no owner");
+        }
+        Ok(Self {
+            num_splitters,
+            num_columns,
+            redundancy,
+            owners,
+        })
+    }
+
     pub fn num_splitters(&self) -> usize {
         self.num_splitters
     }

@@ -121,7 +121,12 @@ fn get_candidate(r: &mut Reader<'_>) -> Result<SplitCandidate> {
 /// trailer — both backward-decodable (a context-free v3 frame is
 /// byte-identical to v2), but negotiated in Hello all the same so a
 /// mixed fleet fails fast rather than dropping trace context silently.
-pub const PROTOCOL_VERSION: u32 = 3;
+/// v4 added `topology_version` to the Hello handshake — the cluster
+/// manifest generation a leader trains against, so a worker can accept
+/// an elastic re-shard (newer version, reload the pack manifest) and
+/// refuse a stale leader (older version) instead of requiring an
+/// exact-match config.
+pub const PROTOCOL_VERSION: u32 = 4;
 
 /// Leader → worker handshake. Identifies the protocol and shard the
 /// leader expects on this connection and carries the training
@@ -153,6 +158,13 @@ pub struct HelloConfig {
     /// worker can log/validate the full training config (the schedule
     /// itself is driven entirely by the leader's tree builder).
     pub depth_next_rows: u64,
+    /// Cluster-manifest generation the leader read its topology from
+    /// (`ClusterManifest::version`; 0 for the initial cut and for
+    /// engines with no manifest). A worker holding an older manifest
+    /// reloads it from its shard source before answering; a Hello
+    /// *older* than what the worker already serves is refused — it
+    /// would mean a stale leader driving a re-sharded fleet.
+    pub topology_version: u64,
 }
 
 /// Worker → leader handshake answer: the worker's actual inventory, so
@@ -323,6 +335,7 @@ fn encode_request_body(w: &mut Writer, req: &Request) {
             }
             w.str(&h.split_search);
             w.u64(h.depth_next_rows);
+            w.u64(h.topology_version);
         }
         Request::Materialize(q) => {
             w.u8(8);
@@ -445,6 +458,7 @@ fn decode_request_body(r: &mut Reader<'_>) -> Result<Request> {
             let prune_threshold = if r.bool()? { Some(r.f64()?) } else { None };
             let split_search = r.str()?;
             let depth_next_rows = r.u64()?;
+            let topology_version = r.u64()?;
             Request::Hello(HelloConfig {
                 protocol,
                 shard,
@@ -458,6 +472,7 @@ fn decode_request_body(r: &mut Reader<'_>) -> Result<Request> {
                 prune_threshold,
                 split_search,
                 depth_next_rows,
+                topology_version,
             })
         }
         8 => {
@@ -923,6 +938,7 @@ mod tests {
             prune_threshold: Some(0.75),
             split_search: "mab".into(),
             depth_next_rows: 65536,
+            topology_version: 9,
         });
         assert_eq!(decode_request(&encode_request(&req)).unwrap(), req);
         let req2 = Request::Hello(HelloConfig {
@@ -938,6 +954,7 @@ mod tests {
             prune_threshold: None,
             split_search: "exact".into(),
             depth_next_rows: 0,
+            topology_version: 0,
         });
         assert_eq!(decode_request(&encode_request(&req2)).unwrap(), req2);
         let resp = Response::Hello(HelloInfo {

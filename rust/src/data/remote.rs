@@ -106,28 +106,64 @@ impl Default for RemoteOptions {
 }
 
 struct ClientInner {
-    /// Current objstore address. A `Mutex` so a supervisor can redirect
-    /// in-flight stores to a rescheduled server ([`RemoteClient::set_addr`]).
-    addr: Mutex<String>,
+    /// Objstore replica set + index of the active replica. A `Mutex`
+    /// so a supervisor can redirect in-flight stores to a rescheduled
+    /// server ([`RemoteClient::set_addr`]) and so failed requests can
+    /// rotate to the next replica ([`ClientInner::advance`]).
+    addrs: Mutex<(Vec<String>, usize)>,
     opts: RemoteOptions,
     /// Network accounting (every request/response frame).
     stats: IoStats,
 }
 
-/// Handle to one objstore: address + retry policy + net accounting.
-/// Cheap to clone; all clones share the address (and follow redirects).
+impl ClientInner {
+    /// Rotate the active replica after a failed attempt. A no-op with a
+    /// single address (the classic retry-the-same-store behavior);
+    /// with replicas, each failed attempt moves the shared pointer one
+    /// step around the ring so the very next reconnect — on every
+    /// session of this client — tries a different store.
+    fn advance(&self) {
+        let mut g = self.addrs.lock().unwrap();
+        let n = g.0.len();
+        if n > 1 {
+            g.1 = (g.1 + 1) % n;
+            crate::telemetry::counter("drf_remote_failovers_total").inc();
+        }
+    }
+}
+
+/// Handle to one objstore replica set: addresses + retry policy + net
+/// accounting. Cheap to clone; all clones share the replica pointer
+/// (and follow redirects and failovers together).
 #[derive(Clone)]
 pub struct RemoteClient {
     inner: Arc<ClientInner>,
 }
 
+/// Split a comma-separated `host:port[,host:port...]` list.
+fn parse_addr_list(addr: &str) -> Vec<String> {
+    let list: Vec<String> = addr
+        .split(',')
+        .map(|a| a.trim().to_string())
+        .filter(|a| !a.is_empty())
+        .collect();
+    if list.is_empty() {
+        // Preserve the old single-address behavior for odd input: the
+        // connect attempt reports the real error.
+        vec![addr.to_string()]
+    } else {
+        list
+    }
+}
+
 impl RemoteClient {
-    /// A client for the objstore at `addr` (`host:port`), charging wire
-    /// traffic to `stats`.
+    /// A client for the objstore(s) at `addr` — a `host:port` address
+    /// or a comma-separated replica list in failover order — charging
+    /// wire traffic to `stats`.
     pub fn new(addr: &str, opts: RemoteOptions, stats: IoStats) -> RemoteClient {
         RemoteClient {
             inner: Arc::new(ClientInner {
-                addr: Mutex::new(addr.to_string()),
+                addrs: Mutex::new((parse_addr_list(addr), 0)),
                 opts,
                 stats,
             }),
@@ -135,16 +171,23 @@ impl RemoteClient {
     }
 
     /// Redirect every session (current and future) to a new objstore
-    /// address — the storage analog of the cluster pool's
-    /// `set_worker_addr` for rescheduled workers. Live sessions pick
-    /// the new address up on their next reconnect.
+    /// address (or comma-separated replica list) — the storage analog
+    /// of the cluster pool's `set_worker_addr` for rescheduled
+    /// workers. Live sessions pick the new address up on their next
+    /// reconnect.
     pub fn set_addr(&self, addr: &str) {
-        *self.inner.addr.lock().unwrap() = addr.to_string();
+        *self.inner.addrs.lock().unwrap() = (parse_addr_list(addr), 0);
     }
 
-    /// The current objstore address.
+    /// The currently-active objstore address.
     pub fn addr(&self) -> String {
-        self.inner.addr.lock().unwrap().clone()
+        let g = self.inner.addrs.lock().unwrap();
+        g.0[g.1].clone()
+    }
+
+    /// The full replica list, in failover order.
+    pub fn addrs(&self) -> Vec<String> {
+        self.inner.addrs.lock().unwrap().0.clone()
     }
 
     /// Open a session (one connection, lazily established). Scans use
@@ -232,6 +275,10 @@ impl RemoteSession {
                 }
                 Err(e) => {
                     self.conn = None;
+                    // With a replica set, a failed attempt moves the
+                    // shared pointer to the next store before the
+                    // retry reconnects.
+                    self.client.inner.advance();
                     last = Some(e);
                 }
             }
@@ -950,6 +997,69 @@ mod tests {
         );
         drop(sess);
         handle.join().unwrap();
+    }
+
+    #[test]
+    fn failover_to_replica_when_first_objstore_dies_mid_pass() {
+        // Two loopback objstores serving the same pack; the client gets
+        // both addresses in failover order. The primary is crashed
+        // after the pass's first chunk arrives — the next range read
+        // must rotate to the replica and the pass must complete with
+        // the exact bytes, no manual redirect.
+        let (ds, dir, primary) = served_dataset(48);
+        let replica = ObjStoreServer::spawn(
+            dir.path(),
+            "127.0.0.1:0",
+            IoStats::new(),
+            ObjStoreOptions::default(),
+        )
+        .unwrap();
+        let stats = IoStats::new();
+        let client = RemoteClient::new(
+            &format!("{},{}", primary.addr(), replica.addr()),
+            fast_opts(),
+            stats.clone(),
+        );
+        assert_eq!(client.addrs().len(), 2);
+        assert_eq!(client.addr(), primary.addr().to_string());
+        let spec = RemoteColumnSpec {
+            index: 0,
+            raw: "col_0.drfc".into(),
+            sorted: None,
+            ctype: ColumnType::Numerical,
+            raw_checksum: None,
+            sorted_checksum: None,
+        };
+        let store = RemoteStore::open(client.clone(), vec![spec], stats).unwrap();
+
+        let failovers = crate::telemetry::counter("drf_remote_failovers_total");
+        let before = failovers.get();
+        let mut primary = Some(primary);
+        let mut out: Vec<f32> = Vec::new();
+        store
+            .scan_raw_from(0, 0, &mut |_base, chunk| {
+                // Crash the primary mid-pass, first chunk in hand.
+                drop(primary.take());
+                match chunk {
+                    RawChunk::Numerical(v) => out.extend_from_slice(v),
+                    _ => unreachable!(),
+                }
+                Ok(())
+            })
+            .unwrap();
+        match ds.column(0) {
+            crate::data::Column::Numerical(v) => assert_eq!(&out, v),
+            _ => unreachable!(),
+        }
+        assert!(
+            failovers.get() > before,
+            "the pass completed without ever failing over"
+        );
+        assert_eq!(
+            client.addr(),
+            replica.addr().to_string(),
+            "the shared replica pointer must rest on the live store"
+        );
     }
 
     #[test]

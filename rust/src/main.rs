@@ -14,6 +14,11 @@
 //!                 process (the leader's Hello handshake configures it);
 //!                 with `--object-store` the pack itself is fetched
 //!                 remotely and never downloaded in full;
+//! * `supervise` — autonomous cluster control plane: boot the fleet
+//!                 (optionally objstore replica sets), health-check
+//!                 every process, restart/reschedule the dead, and
+//!                 re-shard workers out of a live run (`--drain`, or
+//!                 `drain N` on the control channel);
 //! * `evaluate`  — score a saved forest on a freshly generated test set;
 //! * `importance`— print MDI feature importances of a saved forest;
 //! * `serve`     — serve a saved forest over TCP (flattened engine,
@@ -115,6 +120,24 @@ const WORKER_FLAGS: &[&str] = &[
 
 const OBJSTORE_FLAGS: &[&str] = &["dir", "addr", "fail-after", "metrics-addr", "trace-out"];
 
+const SUPERVISE_FLAGS: &[&str] = &[
+    "dir",
+    "drain",
+    "spare-hosts",
+    "control-addr",
+    "interval-ms",
+    "fail-threshold",
+    "objstore-replicas",
+    "log",
+    "trace-dir",
+    "scan-threads",
+    "prefetch-chunks",
+    "metrics-addr",
+    "trace-out",
+    "!preload",
+    "!no-verify",
+];
+
 const SERVE_FLAGS: &[&str] = &["model", "addr", "metrics-addr", "trace-out"];
 
 const METRICS_FLAGS: &[&str] = &["interval-ms", "!watch"];
@@ -137,6 +160,7 @@ fn run(argv: &[String]) -> Result<()> {
         "shard" => cmd_shard(&argv[1..]),
         "objstore" => cmd_objstore(&argv[1..]),
         "worker" => cmd_worker(&argv[1..]),
+        "supervise" => cmd_supervise(&argv[1..]),
         "evaluate" => cmd_evaluate(&argv[1..]),
         "importance" => cmd_importance(&argv[1..]),
         "serve" => cmd_serve(&argv[1..]),
@@ -176,13 +200,21 @@ USAGE:
                --out-dir DIR
   drf shard [--family ...|--csv ...|--data DIR] [--rows N] [--seed S]
             [--splitters W] [--redundancy D] [--chunk-rows C]
-            [--workers ADDR,ADDR,...] --out-dir DIR
+            [--replicas R] [--workers ADDR,ADDR,...] --out-dir DIR
   drf objstore --dir DIR [--addr HOST:PORT] [--fail-after N]
                [--metrics-addr HOST:PORT] [--trace-out trace.jsonl]
   drf worker --shard SHARD_DIR [--addr HOST:PORT] [--scan-threads K]
              [--prefetch-chunks P] [--preload] [--no-verify]
              [--object-store HOST:PORT] [--metrics-addr HOST:PORT]
              [--trace-out trace.jsonl]
+  drf supervise --dir SHARD_DIR [--objstore-replicas R]
+                [--spare-hosts HOST,HOST,...] [--control-addr HOST:PORT]
+                [--interval-ms MS] [--fail-threshold N]
+                [--log actions.jsonl] [--trace-dir DIR]
+                [--scan-threads K] [--prefetch-chunks P] [--preload]
+                [--no-verify] [--metrics-addr HOST:PORT]
+                [--trace-out trace.jsonl]
+  drf supervise --dir SHARD_DIR --drain I
   drf evaluate --model forest.json [--family ...|--csv ...|--data DIR]
   drf importance --model forest.json [--features M]
   drf serve --model forest.json [--addr HOST:PORT]
@@ -247,7 +279,27 @@ shard_0, so the worker serves a shard it never downloaded in full);
 fleet (addresses from the manifest or --workers, comma-separated, in
 shard order), validates it via the Hello handshake, and recovers
 killed-and-restarted workers by replaying the level-update log — the
-forest is bit-identical to --engine direct.
+forest is bit-identical to --engine direct. `drf shard --replicas R`
+additionally writes R byte-identical copies of every pack under
+`replica_<r>/` subdirectories for externally managed replica sets.
+
+Supervision: `drf supervise --dir SHARD_DIR` boots one worker per
+pack (plus `--objstore-replicas R` objstore processes all serving the
+shard tree — workers then stream their packs remotely and fail over
+between replicas client-side), publishes every address in
+cluster.json, and probes the fleet each `--interval-ms`: process exit,
+the pre-handshake TimeSync RPC, and GET /healthz. A process dead for
+`--fail-threshold` consecutive probes is restarted in place; one that
+keeps crashing is rescheduled onto the `--spare-hosts` pool. Every
+rewrite bumps the manifest version — a cluster leader re-reads
+cluster.json between trees (and worker addresses mid-reconnect), so
+failover and re-shards reach it without any new RPC, and the forest
+stays bit-identical. `--control-addr` accepts one-line commands
+(status | kill N | kill objstore [R] | drain N | quit) for operators
+and chaos drills; `drain N` re-shards worker N's columns onto the
+surviving fleet mid-run, and `drf supervise --dir D --drain I` does
+the same offline. `--log` appends one JSON line per control-plane
+action; `--trace-dir` gives every child its own `--trace-out` file.
 
 Serving: `drf serve` compiles the model into the flattened inference
 engine and answers Score/Classify/ModelInfo/Reload RPCs over a
@@ -255,7 +307,7 @@ length-prefixed binary protocol; `drf predict --addr` scores over TCP,
 `drf predict --model` scores in-process.
 
 Observability: every long-running process (train, objstore, worker,
-serve) takes `--metrics-addr HOST:PORT` and exposes its metrics
+supervise, serve) takes `--metrics-addr HOST:PORT` and exposes its metrics
 registry — counters, gauges, and log2-bucketed histograms for every
 training phase, cluster round, remote fetch, and serving RPC — as
 Prometheus text on `GET /metrics` (port 0 picks an ephemeral port; the
@@ -653,7 +705,7 @@ fn cmd_trace(argv: &[String]) -> Result<()> {
 
 fn cmd_shard(argv: &[String]) -> Result<()> {
     let mut flags = TRAIN_FLAGS.to_vec();
-    flags.extend(["out-dir", "chunk-rows"]);
+    flags.extend(["out-dir", "chunk-rows", "replicas"]);
     let args = Args::parse(argv, &flags)?;
     let out = args.require("out-dir")?;
     let (ds, family) = dataset_from_args(&args)?;
@@ -665,6 +717,7 @@ fn cmd_shard(argv: &[String]) -> Result<()> {
     topo.validate()?;
     let mut opts = drf::cluster::ShardOptions::default();
     opts.chunk_rows = args.get_u32("chunk-rows", opts.chunk_rows)?;
+    opts.replicas = args.get_usize("replicas", opts.replicas)?;
     if let Some(v) = args.get("workers") {
         opts.workers = parse_worker_list(v);
     }
@@ -738,15 +791,22 @@ fn cmd_worker(argv: &[String]) -> Result<()> {
         verify: !args.get_bool("no-verify"),
         prefetch_chunks: args.get_usize("prefetch-chunks", 0)?,
     };
-    let (shard, mode) = match args.get("object-store") {
+    let (shard, source, mode) = match args.get("object-store") {
         // Remote pack: `--shard` names the pack's directory under the
         // objstore root (e.g. shard_0); nothing is downloaded in full.
+        // The address may be a comma-separated replica list — the
+        // client rotates through it on failure.
         Some(objstore) => (
             drf::cluster::load_shard_remote(objstore, dir, &opts)?,
+            drf::cluster::ShardSource::Remote {
+                addr: objstore.to_string(),
+                prefix: dir.to_string(),
+            },
             format!("remote:{objstore}"),
         ),
         None => (
             drf::cluster::load_shard(std::path::Path::new(dir), &opts)?,
+            drf::cluster::ShardSource::Dir(std::path::PathBuf::from(dir)),
             if opts.preload { "mmapped".into() } else { "streaming".into() },
         ),
     };
@@ -757,7 +817,12 @@ fn cmd_worker(argv: &[String]) -> Result<()> {
     );
     drf::telemetry::set_proc_identity("worker", Some(id as u64));
     start_trace_out(args.get("trace-out"))?;
-    let server = drf::cluster::WorkerServer::spawn(shard, &addr, opts.scan_threads)?;
+    let server = drf::cluster::WorkerServer::spawn_with_source(
+        shard,
+        Some((source, opts.clone())),
+        &addr,
+        opts.scan_threads,
+    )?;
     println!(
         "drf worker: shard {id} ({cols} columns x {rows} rows, {mode}) listening on {}",
         server.addr(),
@@ -773,6 +838,64 @@ fn cmd_worker(argv: &[String]) -> Result<()> {
     loop {
         std::thread::park();
     }
+}
+
+/// `drf supervise --dir DIR`: boot the sharded fleet from `cluster.json`
+/// and keep it alive — probe every process, restart or reschedule the
+/// dead, and publish each topology change as a manifest version bump.
+/// With `--drain I` it instead performs the offline re-shard (move
+/// worker I's columns onto the survivors) and exits.
+fn cmd_supervise(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv, SUPERVISE_FLAGS)?;
+    let dir = args.require("dir")?;
+    if let Some(v) = args.get("drain") {
+        // Offline mode: no fleet, just the manifest/pack rewrite. A
+        // live drain goes through the control channel instead.
+        let victim: usize = v.parse().context("--drain expects a shard index")?;
+        let m = drf::cluster::drain_worker(std::path::Path::new(dir), victim)?;
+        println!(
+            "drf supervise: drained worker {victim}; {} now v{}",
+            std::path::Path::new(dir).join("cluster.json").display(),
+            m.version
+        );
+        return Ok(());
+    }
+    drf::telemetry::set_proc_identity("supervisor", None);
+    start_trace_out(args.get("trace-out"))?;
+    // Keep the guard alive for the life of the supervisor loop.
+    let _metrics = spawn_metrics(args.get("metrics-addr"), "supervise")?;
+    // Flags the supervisor forwards verbatim to every worker it spawns.
+    let mut worker_args = Vec::new();
+    for flag in ["scan-threads", "prefetch-chunks"] {
+        if let Some(v) = args.get(flag) {
+            worker_args.push(format!("--{flag}"));
+            worker_args.push(v.to_string());
+        }
+    }
+    for flag in ["preload", "no-verify"] {
+        if args.get_bool(flag) {
+            worker_args.push(format!("--{flag}"));
+        }
+    }
+    let policy = drf::cluster::SupervisePolicy {
+        fail_threshold: args.get_u32("fail-threshold", 2)?,
+        ..Default::default()
+    };
+    let opts = drf::cluster::SuperviseOptions {
+        interval: std::time::Duration::from_millis(args.get_u64("interval-ms", 500)?),
+        policy,
+        spare_hosts: args.get("spare-hosts").map(parse_worker_list).unwrap_or_default(),
+        control_addr: args.get("control-addr").map(str::to_string),
+        action_log: args.get("log").map(std::path::PathBuf::from),
+        objstore_replicas: args.get_usize("objstore-replicas", 0)?,
+        worker_args,
+        trace_dir: args.get("trace-dir").map(std::path::PathBuf::from),
+        binary: None,
+    };
+    if let Some(d) = &opts.trace_dir {
+        std::fs::create_dir_all(d).with_context(|| format!("creating {}", d.display()))?;
+    }
+    drf::cluster::Supervisor::run(std::path::Path::new(dir), &opts)
 }
 
 fn cmd_generate(argv: &[String]) -> Result<()> {
@@ -946,8 +1069,10 @@ mod tests {
         assert_flags_documented("serve", SERVE_FLAGS);
         assert_flags_documented("metrics", METRICS_FLAGS);
         assert_flags_documented("trace", TRACE_FLAGS);
+        assert_flags_documented("supervise", SUPERVISE_FLAGS);
         // Extra flags the derived commands add on top of TRAIN_FLAGS.
         assert_flags_documented("shard/generate", &["out-dir", "chunk-rows"]);
+        assert_flags_documented("shard", &["replicas"]);
         assert_flags_documented("evaluate/predict", &["model", "addr", "show"]);
         assert_flags_documented("importance", &["model", "features"]);
     }
@@ -960,6 +1085,7 @@ mod tests {
             "shard",
             "objstore",
             "worker",
+            "supervise",
             "evaluate",
             "importance",
             "serve",

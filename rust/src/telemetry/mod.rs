@@ -80,6 +80,18 @@ pub fn render() -> String {
 /// gauges sample the shared atomics at scrape time, so a `/metrics`
 /// reader sees I/O totals move mid-train.
 pub fn register_io_gauges(prefix: &str, stats: &IoStats) {
+    let stats = stats.clone();
+    register_io_gauges_with(prefix, move || stats.clone());
+}
+
+/// [`register_io_gauges`] through a level of indirection: `current`
+/// resolves the [`IoStats`] at every scrape, so a process that swaps
+/// its stats handle mid-life (a worker reloading a re-cut shard pack)
+/// keeps reporting the live counters rather than the original ones.
+pub fn register_io_gauges_with(
+    prefix: &str,
+    current: impl Fn() -> IoStats + Send + Sync + Clone + 'static,
+) {
     type Getter = fn(&IoStats) -> u64;
     const FIELDS: [(&str, Getter); 7] = [
         ("disk_read_bytes", IoStats::disk_read_bytes),
@@ -91,8 +103,10 @@ pub fn register_io_gauges(prefix: &str, stats: &IoStats) {
         ("net_broadcasts", IoStats::net_broadcasts),
     ];
     for (field, getter) in FIELDS {
-        let stats = stats.clone();
-        register_gauge_fn(&format!("{prefix}_{field}"), &[], move || getter(&stats));
+        let current = current.clone();
+        register_gauge_fn(&format!("{prefix}_{field}"), &[], move || {
+            getter(&current())
+        });
     }
 }
 

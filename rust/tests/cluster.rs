@@ -1,7 +1,9 @@
 //! End-to-end cluster plane: `drf shard` + real `drf worker` OS
 //! processes + `--engine cluster` training must produce forests
 //! bit-identical to `--engine direct` — including across one injected
-//! worker kill + restart mid-training (replay recovery).
+//! worker kill + restart mid-training (replay recovery), and under a
+//! real `drf supervise` control process with chaos kills and an
+//! elastic drain mid-run.
 
 use drf::cluster::{ClusterOptions, ClusterPool};
 use drf::config::{Engine, TopologyParams, TrainConfig};
@@ -510,6 +512,7 @@ fn training_survives_worker_kill_and_restart() {
         prune_threshold: None,
         split_search: "exact".into(),
         depth_next_rows: 0,
+        topology_version: 0,
     };
     let pool = ClusterPool::connect(
         &[addr0, addr1],
@@ -601,6 +604,7 @@ fn depth_next_training_survives_worker_kill_and_restart() {
         prune_threshold: None,
         split_search: "exact".into(),
         depth_next_rows: cfg.depth_next_rows,
+        topology_version: 0,
     };
     let pool = ClusterPool::connect(
         &[addr0, addr1],
@@ -653,5 +657,451 @@ fn depth_next_training_survives_worker_kill_and_restart() {
     assert_eq!(
         direct.trees, trees,
         "a worker kill + restart must not change the depth-next forest"
+    );
+}
+
+/// Plain HTTP/1.0 GET against a metrics/healthz port; returns the
+/// whole response (status line + headers + body).
+fn http_get(addr: &str, path: &str) -> String {
+    use std::io::{Read as _, Write as _};
+    let mut s = std::net::TcpStream::connect(addr).expect("connecting for GET");
+    s.set_read_timeout(Some(std::time::Duration::from_secs(10)))
+        .unwrap();
+    write!(s, "GET {path} HTTP/1.0\r\n\r\n").unwrap();
+    let mut body = String::new();
+    s.read_to_string(&mut body).expect("reading GET response");
+    body
+}
+
+#[test]
+fn worker_healthz_survives_leader_disconnect_and_rehandshake() {
+    let tmp = drf::util::tempdir().unwrap();
+    shard_via_cli(tmp.path(), 2);
+    let ds = dataset();
+    let cfg = forest_cfg(2);
+
+    let (_g0, addr0, maddr0) = spawn_worker_with_metrics(&tmp.path().join("shard_0"));
+    let (_g1, addr1, _maddr1) = spawn_worker_with_metrics(&tmp.path().join("shard_1"));
+
+    let manifest = drf::cluster::ClusterManifest::load(&tmp.path().join("cluster.json")).unwrap();
+    let topo = manifest.topology().unwrap();
+    let hello = drf::cluster::hello_template(&cfg, &manifest);
+    let addrs = vec![addr0, addr1];
+    let pool = ClusterPool::connect(
+        &addrs,
+        &topo,
+        hello.clone(),
+        ROWS as u64,
+        ds.num_classes(),
+        ClusterOptions::default(),
+    )
+    .unwrap();
+    // The first leader goes away without ceremony — its connections
+    // just close under the workers.
+    drop(pool);
+
+    // The worker must keep serving its liveness endpoint...
+    let health = http_get(&maddr0, "/healthz");
+    assert!(
+        health.starts_with("HTTP/1.0 200"),
+        "healthz not 200 after leader drop: {health:?}"
+    );
+    assert!(
+        health.contains("\"ok\":true"),
+        "healthz body not ok after leader drop: {health:?}"
+    );
+
+    // ...and accept a brand-new leader's re-handshake (same topology
+    // version; the full Hello inventory validation runs in connect).
+    let pool = ClusterPool::connect(
+        &addrs,
+        &topo,
+        hello,
+        ROWS as u64,
+        ds.num_classes(),
+        ClusterOptions::default(),
+    )
+    .unwrap();
+    drop(pool);
+}
+
+/// Send one line to the supervisor's control channel and return its
+/// `ok ...` / `err ...` reply.
+fn control(addr: &str, cmd: &str) -> String {
+    use std::io::Write as _;
+    let mut s = std::net::TcpStream::connect(addr).expect("connecting to control channel");
+    s.set_read_timeout(Some(std::time::Duration::from_secs(30)))
+        .unwrap();
+    writeln!(s, "{cmd}").expect("sending control command");
+    let mut reply = String::new();
+    std::io::BufReader::new(s)
+        .read_line(&mut reply)
+        .expect("reading control reply");
+    reply.trim().to_string()
+}
+
+/// Tears the whole supervised fleet down on drop: a graceful `quit`
+/// (the supervisor kills its children on the way out), falling back to
+/// SIGKILL of the supervisor if the control round-trip fails.
+struct SuperviseGuard {
+    child: Child,
+    control_addr: String,
+}
+
+impl Drop for SuperviseGuard {
+    fn drop(&mut self) {
+        if let Ok(mut s) = std::net::TcpStream::connect(&self.control_addr) {
+            use std::io::Write as _;
+            let _ = s.set_read_timeout(Some(std::time::Duration::from_secs(10)));
+            let _ = writeln!(s, "quit");
+            let mut reply = String::new();
+            let _ = std::io::BufReader::new(s).read_line(&mut reply);
+        }
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+        while std::time::Instant::now() < deadline {
+            match self.child.try_wait() {
+                Ok(Some(_)) => return,
+                Ok(None) => std::thread::sleep(std::time::Duration::from_millis(50)),
+                Err(_) => break,
+            }
+        }
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+/// Spawn `drf supervise` over a shard tree and parse the control (and,
+/// when `--metrics-addr` is among `extra`, metrics) addresses from its
+/// ready lines.
+fn spawn_supervise(dir: &Path, extra: &[&str]) -> (SuperviseGuard, String, Option<String>) {
+    let mut child = Command::new(DRF_BIN)
+        .args([
+            "supervise",
+            "--dir",
+            dir.to_str().unwrap(),
+            "--control-addr",
+            "127.0.0.1:0",
+        ])
+        .args(extra)
+        .stdout(Stdio::piped())
+        .stderr(Stdio::inherit())
+        .spawn()
+        .expect("spawning drf supervise");
+    let stdout = child.stdout.take().expect("supervise stdout piped");
+    let mut reader = std::io::BufReader::new(stdout);
+    let mut metrics = None;
+    loop {
+        let mut line = String::new();
+        let n = reader
+            .read_line(&mut line)
+            .expect("reading supervise ready line");
+        assert!(n > 0, "supervise exited before printing its control address");
+        let addr = line.trim().rsplit(' ').next().unwrap().to_string();
+        if line.contains("metrics on") {
+            metrics = Some(addr);
+        } else if line.contains("control on") {
+            let guard = SuperviseGuard {
+                child,
+                control_addr: addr.clone(),
+            };
+            return (guard, addr, metrics);
+        }
+    }
+}
+
+/// Delegating pool that fires a scheduled chaos event — a supervisor
+/// control command — the first time a supersplit query for that
+/// (tree, depth) comes through, then blocks until the supervisor has
+/// committed the resulting manifest rewrite (so the leader's address
+/// refresh finds the respawn within its reconnect budget).
+struct ChaosAt<'a> {
+    inner: &'a ClusterPool,
+    control_addr: String,
+    manifest_path: std::path::PathBuf,
+    events: Mutex<Vec<(u32, u32, &'static str)>>,
+}
+
+impl ChaosAt<'_> {
+    fn fire(&self, cmd: &str) {
+        let before = drf::cluster::ClusterManifest::load(&self.manifest_path)
+            .expect("reading manifest before chaos")
+            .version;
+        let reply = control(&self.control_addr, cmd);
+        assert!(reply.starts_with("ok"), "control {cmd:?} failed: {reply}");
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(60);
+        loop {
+            // Reads race the supervisor's atomic rename; a transient
+            // failure is just "not committed yet".
+            let v = drf::cluster::ClusterManifest::load(&self.manifest_path)
+                .map(|m| m.version)
+                .unwrap_or(before);
+            if v > before {
+                return;
+            }
+            assert!(
+                std::time::Instant::now() < deadline,
+                "supervisor never committed a respawn after {cmd:?}"
+            );
+            std::thread::sleep(std::time::Duration::from_millis(50));
+        }
+    }
+}
+
+impl SplitterPool for ChaosAt<'_> {
+    fn num_splitters(&self) -> usize {
+        self.inner.num_splitters()
+    }
+
+    fn columns_of(&self, splitter: usize) -> Vec<usize> {
+        self.inner.columns_of(splitter)
+    }
+
+    fn start_tree(&self, tree: u32) -> anyhow::Result<()> {
+        self.inner.start_tree(tree)
+    }
+
+    fn root_stats(&self, splitter: usize, tree: u32) -> anyhow::Result<Vec<u64>> {
+        self.inner.root_stats(splitter, tree)
+    }
+
+    fn find_splits(
+        &self,
+        splitter: usize,
+        q: &SupersplitQuery,
+    ) -> anyhow::Result<PartialSupersplit> {
+        let cmd = {
+            let mut events = self.events.lock().unwrap();
+            events
+                .iter()
+                .position(|&(t, d, _)| t == q.tree && d == q.depth)
+                .map(|i| events.remove(i).2)
+        };
+        if let Some(cmd) = cmd {
+            self.fire(cmd);
+        }
+        self.inner.find_splits(splitter, q)
+    }
+
+    fn eval_conditions(&self, splitter: usize, q: &EvalQuery) -> anyhow::Result<EvalResult> {
+        self.inner.eval_conditions(splitter, q)
+    }
+
+    fn broadcast_level_update(&self, u: &LevelUpdate) -> anyhow::Result<()> {
+        self.inner.broadcast_level_update(u)
+    }
+
+    fn materialize(
+        &self,
+        splitter: usize,
+        q: &MaterializeQuery,
+    ) -> anyhow::Result<MaterializedLeaves> {
+        self.inner.materialize(splitter, q)
+    }
+
+    fn broadcast_subtree_done(&self, d: &SubtreeDone) -> anyhow::Result<()> {
+        self.inner.broadcast_subtree_done(d)
+    }
+
+    fn broadcast_subtree_done_on(&self, splitter: usize, d: &SubtreeDone) -> anyhow::Result<()> {
+        self.inner.broadcast_subtree_done_on(splitter, d)
+    }
+
+    fn finish_tree(&self, tree: u32) -> anyhow::Result<()> {
+        self.inner.finish_tree(tree)
+    }
+
+    fn net_stats(&self) -> IoStats {
+        self.inner.net_stats()
+    }
+
+    fn start_tree_on(&self, splitter: usize, tree: u32) -> anyhow::Result<()> {
+        self.inner.start_tree_on(splitter, tree)
+    }
+
+    fn apply_level_update_on(&self, splitter: usize, u: &LevelUpdate) -> anyhow::Result<()> {
+        self.inner.apply_level_update_on(splitter, u)
+    }
+
+    fn finish_tree_on(&self, splitter: usize, tree: u32) -> anyhow::Result<()> {
+        self.inner.finish_tree_on(splitter, tree)
+    }
+}
+
+#[test]
+fn supervised_fleet_survives_chaos_kills_bit_identically() {
+    let tmp = drf::util::tempdir().unwrap();
+    shard_via_cli(tmp.path(), 3);
+    let ds = dataset();
+    let mut cfg = forest_cfg(3);
+    cfg.forest.num_trees = 3;
+
+    // Reference forest from the in-process engine.
+    let (direct, _) = RandomForest::train_with_config(&ds, &cfg).unwrap();
+
+    // The supervisor boots the whole fleet: two objstore replicas
+    // serving the shard tree plus one remote-streaming worker per pack,
+    // publishing every address in cluster.json. Aggressive probing so
+    // kills are detected within a couple hundred milliseconds.
+    let log_path = tmp.path().join("actions.jsonl");
+    let (_guard, control_addr, maddr) = spawn_supervise(
+        tmp.path(),
+        &[
+            "--objstore-replicas",
+            "2",
+            "--interval-ms",
+            "100",
+            "--fail-threshold",
+            "1",
+            "--log",
+            log_path.to_str().unwrap(),
+            "--metrics-addr",
+            "127.0.0.1:0",
+        ],
+    );
+
+    let mpath = tmp.path().join("cluster.json");
+    let manifest = drf::cluster::ClusterManifest::load(&mpath).unwrap();
+    assert_eq!(manifest.workers.len(), 3, "supervisor did not publish worker addresses");
+    assert_eq!(manifest.objstores.len(), 2, "supervisor did not publish objstore replicas");
+
+    // This test process is the leader, wired exactly like the manager:
+    // manifest addresses, manifest watching, replay recovery.
+    let topo = manifest.topology().unwrap();
+    let pool = ClusterPool::connect(
+        &manifest.workers,
+        &topo,
+        drf::cluster::hello_template(&cfg, &manifest),
+        ROWS as u64,
+        ds.num_classes(),
+        ClusterOptions::default(),
+    )
+    .unwrap();
+    pool.watch_manifest(mpath.clone());
+
+    // Two workers and one objstore replica die at scattered points
+    // mid-training; every event must fire (asserted below).
+    let chaos = ChaosAt {
+        inner: &pool,
+        control_addr: control_addr.clone(),
+        manifest_path: mpath.clone(),
+        events: Mutex::new(vec![
+            (0, 2, "kill 0"),
+            (0, 3, "kill objstore 0"),
+            (1, 2, "kill 1"),
+        ]),
+    };
+    let recovering = RecoveringPool::new(chaos);
+    let mut trees = Vec::new();
+    for t in 0..cfg.forest.num_trees as u32 {
+        recovering.inner().inner.poll_topology().unwrap();
+        let topo = recovering.inner().inner.topology();
+        let builder = TreeBuilderCore::new(&recovering, &topo, &cfg.forest, ds.num_features());
+        trees.push(builder.build_tree(t).unwrap().0);
+    }
+
+    let leftover = recovering.inner().events.lock().unwrap().clone();
+    assert!(
+        leftover.is_empty(),
+        "some chaos events never fired (trees too shallow?): {leftover:?}"
+    );
+    assert!(
+        recovering.recoveries() >= 2,
+        "both killed workers must have been rebuilt by replay"
+    );
+    assert_eq!(
+        direct.trees, trees,
+        "chaos kills under the supervisor must not change the forest"
+    );
+
+    // The action log holds the whole story: spawns, kills, restarts.
+    let log = std::fs::read_to_string(&log_path).unwrap();
+    assert!(!log.trim().is_empty(), "supervisor action log is empty");
+    let actions: Vec<String> = log
+        .lines()
+        .map(|l| {
+            let j = drf::util::Json::parse(l).expect("action log line parses as JSON");
+            j.get("action").unwrap().as_str().unwrap().to_string()
+        })
+        .collect();
+    assert!(actions.iter().any(|a| a == "kill"), "no kill logged: {actions:?}");
+    assert!(actions.iter().any(|a| a == "restart"), "no restart logged: {actions:?}");
+
+    // `drf metrics` scrapes the supervisor's own registry (`--watch`
+    // is the same scrape in a loop).
+    let out = Command::new(DRF_BIN)
+        .args(["metrics", &maddr.expect("supervisor metrics address")])
+        .output()
+        .expect("running drf metrics against the supervisor");
+    assert!(out.status.success(), "drf metrics failed: {out:?}");
+    let scraped = String::from_utf8(out.stdout).unwrap();
+    let restarts = series_value(&scraped, "drf_supervisor_restarts_total").unwrap_or(0);
+    assert!(
+        restarts >= 2,
+        "supervisor registry missing restarts:\n{scraped}"
+    );
+}
+
+#[test]
+fn supervised_drain_reshards_mid_run_bit_identically() {
+    let tmp = drf::util::tempdir().unwrap();
+    shard_via_cli(tmp.path(), 3);
+    let ds = dataset();
+    let mut cfg = forest_cfg(3);
+    cfg.forest.num_trees = 3;
+
+    // Reference forest from the in-process engine.
+    let (direct, _) = RandomForest::train_with_config(&ds, &cfg).unwrap();
+
+    // Local-pack fleet under the supervisor (the drain rewrites packs
+    // on disk; workers reload them at the next handshake).
+    let (_guard, control_addr, _maddr) =
+        spawn_supervise(tmp.path(), &["--interval-ms", "100"]);
+
+    let mpath = tmp.path().join("cluster.json");
+    let manifest = drf::cluster::ClusterManifest::load(&mpath).unwrap();
+    let topo = manifest.topology().unwrap();
+    let pool = ClusterPool::connect(
+        &manifest.workers,
+        &topo,
+        drf::cluster::hello_template(&cfg, &manifest),
+        ROWS as u64,
+        ds.num_classes(),
+        ClusterOptions::default(),
+    )
+    .unwrap();
+    pool.watch_manifest(mpath.clone());
+    let recovering = RecoveringPool::new(pool);
+    let v0 = recovering.inner().topology_version();
+
+    let mut trees = Vec::new();
+    for t in 0..cfg.forest.num_trees as u32 {
+        if t == 1 {
+            // Between trees: re-shard worker 2's columns onto the rest
+            // of the fleet. The leader adopts the new ownership map at
+            // its next between-trees poll, right below.
+            let reply = control(&control_addr, "drain 2");
+            assert!(
+                reply.starts_with("ok drained worker 2"),
+                "drain failed: {reply}"
+            );
+        }
+        recovering.inner().poll_topology().unwrap();
+        let topo = recovering.inner().topology();
+        let builder = TreeBuilderCore::new(&recovering, &topo, &cfg.forest, ds.num_features());
+        trees.push(builder.build_tree(t).unwrap().0);
+    }
+
+    assert!(
+        recovering.inner().topology_version() > v0,
+        "the drain was never adopted by the leader"
+    );
+    assert_eq!(
+        recovering.inner().active_count(),
+        2,
+        "drained worker still active in the leader"
+    );
+    assert_eq!(
+        direct.trees, trees,
+        "a mid-run drain + re-shard must not change the forest"
     );
 }
