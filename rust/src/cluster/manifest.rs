@@ -81,7 +81,17 @@ fn hex_u64(v: u64) -> Json {
 }
 
 fn parse_hex_u64(v: &Json) -> Result<u64> {
-    Ok(u64::from_str_radix(v.as_str()?, 16)?)
+    let s = v.as_str()?;
+    // [`hex_u64`] always writes exactly 16 digits; a different width
+    // means the manifest was hand-edited or corrupted, not merely
+    // unpadded — reject rather than guess (fuzzer-found: short strings
+    // parsed as truncated checksums and round-tripped differently).
+    ensure!(
+        s.len() == 16,
+        "checksum '{s}' is {} chars, expected 16 hex digits",
+        s.len()
+    );
+    Ok(u64::from_str_radix(s, 16)?)
 }
 
 /// One column of a shard pack.
@@ -200,21 +210,41 @@ impl ShardManifest {
             .as_arr()?
             .iter()
             .map(|cj| {
+                let sorted_file = match cj.get_opt("sorted_file") {
+                    Some(x) => Some(x.as_str()?.to_string()),
+                    None => None,
+                };
+                let sorted_checksum = match cj.get_opt("sorted_checksum") {
+                    Some(x) => Some(parse_hex_u64(x)?),
+                    None => None,
+                };
+                // to_json writes the pair atomically; half a pair means
+                // a sorted file that can never be verified (or a
+                // checksum with nothing to check) and would not survive
+                // a re-encode round trip.
+                ensure!(
+                    sorted_file.is_some() == sorted_checksum.is_some(),
+                    "column has {} without {}",
+                    if sorted_file.is_some() { "sorted_file" } else { "sorted_checksum" },
+                    if sorted_file.is_some() { "sorted_checksum" } else { "sorted_file" },
+                );
                 Ok(ShardColumn {
                     index: cj.get("index")?.as_usize()?,
                     file: cj.get("file")?.as_str()?.to_string(),
                     checksum: parse_hex_u64(cj.get("checksum")?)?,
-                    sorted_file: match cj.get_opt("sorted_file") {
-                        Some(x) => Some(x.as_str()?.to_string()),
-                        None => None,
-                    },
-                    sorted_checksum: match cj.get_opt("sorted_checksum") {
-                        Some(x) => Some(parse_hex_u64(x)?),
-                        None => None,
-                    },
+                    sorted_file,
+                    sorted_checksum,
                 })
             })
             .collect::<Result<Vec<_>>>()?;
+        for w in columns.windows(2) {
+            ensure!(
+                w[0].index < w[1].index,
+                "shard columns not in strictly ascending index order ({} then {})",
+                w[0].index,
+                w[1].index
+            );
+        }
         Ok(ShardManifest {
             shard: v.get("shard")?.as_usize()?,
             num_splitters: v.get("num_splitters")?.as_usize()?,
@@ -385,6 +415,16 @@ impl ClusterManifest {
                 })
             })
             .collect::<Result<Vec<_>>>()?;
+        // Entries are written in shard order; a duplicate or shuffled
+        // id is a corrupted deployment map and must fail here, not
+        // after a leader has already connected to workers.
+        for (s, entry) in shards.iter().enumerate() {
+            ensure!(
+                entry.shard == s,
+                "shard entry {s} has id {} (duplicate or out-of-order shard ids)",
+                entry.shard
+            );
+        }
         let workers = match v.get_opt("workers") {
             None => Vec::new(),
             Some(ws) => ws

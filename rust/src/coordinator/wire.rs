@@ -16,7 +16,7 @@ use crate::telemetry::{TimeSyncReply, TraceContext};
 use crate::tree::{CategorySet, Condition};
 use crate::util::wire::{get_trace_context, put_trace_context};
 use crate::Result;
-use anyhow::{bail, Context};
+use anyhow::{bail, ensure, Context};
 
 // The writer/reader scalars and frame helpers are the shared wire
 // substrate ([`crate::util::wire`]); re-exported here because this
@@ -48,7 +48,38 @@ fn put_condition(w: &mut Writer, c: &Condition) {
     }
 }
 
-fn get_condition(r: &mut Reader<'_>) -> Result<Condition> {
+/// Dense-bitset allocation budget for the `CatIn` conditions of one
+/// frame. A [`CategorySet`] allocates `⌈arity/64⌉` words no matter how
+/// few members the wire lists, so a small frame forging `arity =
+/// u32::MAX` would otherwise cost 512 MiB per condition (fuzz finding).
+/// The budget scales with the frame (a frame legitimately carrying many
+/// member values may carry proportionally large sets) plus a constant
+/// floor that admits sparse sets over high-arity columns (~4M
+/// categories) from even the smallest frame.
+struct ConditionBudget {
+    left: u64,
+}
+
+impl ConditionBudget {
+    fn new(frame_len: usize) -> Self {
+        Self {
+            left: 64 * frame_len as u64 + (1 << 19),
+        }
+    }
+
+    fn charge(&mut self, arity: u32) -> Result<()> {
+        let bytes = (arity as u64).div_ceil(64) * 8;
+        ensure!(
+            bytes <= self.left,
+            "categorical conditions exceed the frame's allocation budget \
+             (arity {arity} wants {bytes} more bytes)"
+        );
+        self.left -= bytes;
+        Ok(())
+    }
+}
+
+fn get_condition(r: &mut Reader<'_>, budget: &mut ConditionBudget) -> Result<Condition> {
     Ok(match r.u8()? {
         0 => Condition::NumLe {
             feature: r.u32()? as usize,
@@ -57,8 +88,16 @@ fn get_condition(r: &mut Reader<'_>) -> Result<Condition> {
         1 => {
             let feature = r.u32()? as usize;
             let arity = r.u32()?;
-            let n = r.len_u32()?;
+            budget.charge(arity)?;
+            let n = r.len_checked(4)?;
             let values: Vec<u32> = (0..n).map(|_| r.u32()).collect::<Result<_>>()?;
+            // Members must lie inside the declared support —
+            // `CategorySet::insert` indexes its words unchecked (fuzz
+            // finding: a wire value ≥ arity was an out-of-bounds write
+            // target in release builds).
+            if let Some(&v) = values.iter().find(|&&v| v >= arity) {
+                bail!("categorical condition value {v} >= arity {arity}");
+            }
             Condition::CatIn {
                 feature,
                 set: CategorySet::from_values(arity, values),
@@ -105,9 +144,9 @@ fn put_candidate(w: &mut Writer, c: &SplitCandidate) {
     w.u64_slice(&c.right_counts);
 }
 
-fn get_candidate(r: &mut Reader<'_>) -> Result<SplitCandidate> {
+fn get_candidate(r: &mut Reader<'_>, budget: &mut ConditionBudget) -> Result<SplitCandidate> {
     Ok(SplitCandidate {
-        condition: get_condition(r)?,
+        condition: get_condition(r, budget)?,
         gain: r.f64()?,
         left_counts: r.u64_vec()?,
         right_counts: r.u64_vec()?,
@@ -372,20 +411,23 @@ pub fn decode_request(buf: &[u8]) -> Result<Request> {
 /// context-free (v2-style) frame decodes to `(req, None)`.
 pub fn decode_request_traced(buf: &[u8]) -> Result<(Request, Option<TraceContext>)> {
     let mut r = Reader::new(buf);
-    let req = decode_request_body(&mut r)?;
+    let mut budget = ConditionBudget::new(buf.len());
+    let req = decode_request_body(&mut r, &mut budget)?;
     let ctx = get_trace_context(&mut r)?;
     r.done()?;
     Ok((req, ctx))
 }
 
-fn decode_request_body(r: &mut Reader<'_>) -> Result<Request> {
+fn decode_request_body(r: &mut Reader<'_>, budget: &mut ConditionBudget) -> Result<Request> {
     let req = match r.u8().context("empty request frame")? {
         0 => Request::StartTree(r.u32()?),
         1 => Request::RootStats(r.u32()?),
         2 => {
             let tree = r.u32()?;
             let depth = r.u32()?;
-            let nl = r.len_u32()?;
+            // A leaf is at least node_id + detached + totals-prefix on
+            // the wire; a forged count cannot outrun the frame.
+            let nl = r.len_checked(9)?;
             let leaves = (0..nl)
                 .map(|_| {
                     Ok(LeafInfo {
@@ -395,7 +437,7 @@ fn decode_request_body(r: &mut Reader<'_>) -> Result<Request> {
                     })
                 })
                 .collect::<Result<_>>()?;
-            let nc = r.len_u32()?;
+            let nc = r.len_checked(4)?;
             let assigned_columns = (0..nc)
                 .map(|_| Ok(r.u32()? as usize))
                 .collect::<Result<_>>()?;
@@ -409,9 +451,10 @@ fn decode_request_body(r: &mut Reader<'_>) -> Result<Request> {
         3 => {
             let tree = r.u32()?;
             let depth = r.u32()?;
-            let n = r.len_u32()?;
+            // Rank + the smallest condition (NumLe) is 13 wire bytes.
+            let n = r.len_checked(13)?;
             let conditions = (0..n)
-                .map(|_| Ok((r.u32()?, get_condition(&mut r)?)))
+                .map(|_| Ok((r.u32()?, get_condition(r, budget)?)))
                 .collect::<Result<_>>()?;
             Request::EvalConditions(EvalQuery {
                 tree,
@@ -422,13 +465,13 @@ fn decode_request_body(r: &mut Reader<'_>) -> Result<Request> {
         4 => {
             let tree = r.u32()?;
             let depth = r.u32()?;
-            let n = r.len_u32()?;
+            let n = r.len_checked(1)?;
             let outcomes = (0..n)
                 .map(|_| {
                     Ok(match r.u8()? {
                         0 => LeafOutcome::Closed,
                         1 => LeafOutcome::Split {
-                            bitmap: get_bitmap(&mut r)?,
+                            bitmap: get_bitmap(r)?,
                             left_open: r.bool()?,
                             right_open: r.bool()?,
                         },
@@ -479,9 +522,9 @@ fn decode_request_body(r: &mut Reader<'_>) -> Result<Request> {
             let tree = r.u32()?;
             let depth = r.u32()?;
             let want_meta = r.bool()?;
-            let nr = r.len_u32()?;
+            let nr = r.len_checked(4)?;
             let ranks = (0..nr).map(|_| r.u32()).collect::<Result<_>>()?;
-            let nc = r.len_u32()?;
+            let nc = r.len_checked(4)?;
             let columns = (0..nc)
                 .map(|_| Ok(r.u32()? as usize))
                 .collect::<Result<_>>()?;
@@ -594,16 +637,17 @@ pub fn encode_response(resp: &Response) -> Vec<u8> {
 
 pub fn decode_response(buf: &[u8]) -> Result<Response> {
     let mut r = Reader::new(buf);
+    let mut budget = ConditionBudget::new(buf.len());
     let resp = match r.u8().context("empty response frame")? {
         0 => Response::Ok,
         1 => Response::RootStats(r.u64_vec()?),
         2 => {
-            let n = r.len_u32()?;
+            let n = r.len_checked(1)?;
             let splits = (0..n)
                 .map(|_| {
                     Ok(match r.u8()? {
                         0 => None,
-                        1 => Some(get_candidate(&mut r)?),
+                        1 => Some(get_candidate(&mut r, &mut budget)?),
                         t => bail!("bad option tag {t}"),
                     })
                 })
@@ -611,7 +655,8 @@ pub fn decode_response(buf: &[u8]) -> Result<Response> {
             Response::Splits(PartialSupersplit { splits })
         }
         3 => {
-            let n = r.len_u32()?;
+            // Rank + bitmap length prefix is 8 wire bytes minimum.
+            let n = r.len_checked(8)?;
             let bitmaps = (0..n)
                 .map(|_| Ok((r.u32()?, get_bitmap(&mut r)?)))
                 .collect::<Result<_>>()?;
@@ -634,15 +679,18 @@ pub fn decode_response(buf: &[u8]) -> Result<Response> {
             })
         }
         6 => {
-            let nl = r.len_u32()?;
+            // A leaf is at least rows + three length prefixes (20 B).
+            let nl = r.len_checked(20)?;
             let leaves = (0..nl)
                 .map(|_| {
                     let rows = r.u64()?;
                     let n = r.len_checked(4)?;
                     let labels = (0..n).map(|_| r.u32()).collect::<Result<_>>()?;
-                    let nb = r.len_u32()?;
+                    let nb = r.len_checked(1)?;
                     let bags = r.take(nb)?.to_vec();
-                    let nc = r.len_u32()?;
+                    // A materialized column is at least tag + length
+                    // prefix (5 B).
+                    let nc = r.len_checked(5)?;
                     let columns = (0..nc)
                         .map(|_| {
                             Ok(match r.u8()? {

@@ -231,7 +231,12 @@ fn read_header(r: &mut impl Read) -> Result<Header> {
             n as u64 <= rows,
             "chunk table claims {n} chunks for {rows} rows"
         );
-        let mut chunks = Vec::with_capacity(n);
+        // `rows` is itself untrusted: a forged header declaring 2^64
+        // rows passes the bound above with n = u32::MAX and would
+        // reserve 16 GiB here (fuzz finding). Clamp the up-front
+        // reservation; a genuine table this long grows amortized while
+        // truncated input fails at the next read.
+        let mut chunks = Vec::with_capacity(n.min(1 << 16));
         for _ in 0..n {
             r.read_exact(&mut b4)?;
             chunks.push(u32::from_le_bytes(b4));

@@ -742,9 +742,15 @@ pub fn schema_to_json(schema: &Schema, rows: usize) -> Json {
 }
 
 /// Parse a schema serialized by [`schema_to_json`].
+///
+/// The input is untrusted (shard manifests arrive over the network or
+/// from an object store), so every [`Schema::new`] assertion is checked
+/// here first and surfaced as a descriptive `Err` instead of a panic.
 pub fn schema_from_json(v: &Json) -> Result<(Schema, usize)> {
+    use anyhow::ensure;
     let rows = v.get("rows")?.as_usize()?;
     let num_classes = v.get("num_classes")?.as_u32()?;
+    ensure!(num_classes >= 2, "schema num_classes {num_classes} < 2");
     let columns = v
         .get("columns")?
         .as_arr()?
@@ -753,11 +759,23 @@ pub fn schema_from_json(v: &Json) -> Result<(Schema, usize)> {
             let name = cj.get("name")?.as_str()?.to_string();
             Ok(match cj.get("type")?.as_str()? {
                 "numerical" => ColumnSpec::numerical(name),
-                "categorical" => ColumnSpec::categorical(name, cj.get("arity")?.as_u32()?),
+                "categorical" => {
+                    let arity = cj.get("arity")?.as_u32()?;
+                    ensure!(arity >= 1, "categorical column '{name}' has arity 0");
+                    ColumnSpec::categorical(name, arity)
+                }
                 t => anyhow::bail!("unknown column type '{t}'"),
             })
         })
         .collect::<Result<Vec<_>>>()?;
+    ensure!(!columns.is_empty(), "schema has no feature columns");
+    let mut names: Vec<&str> = columns.iter().map(|c| c.name.as_str()).collect();
+    names.sort_unstable();
+    names.dedup();
+    ensure!(
+        names.len() == columns.len(),
+        "schema has duplicate column names"
+    );
     Ok((Schema::new(columns, num_classes), rows))
 }
 

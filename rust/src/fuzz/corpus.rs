@@ -1,0 +1,713 @@
+//! Seed corpus: one valid frame per message type of every protocol,
+//! produced by the **real encoders** (never hand-rolled bytes, except
+//! for the DRFC headers whose writer is file-backed).
+//!
+//! The seeds serve three masters:
+//!
+//! * the mutation engine starts every iteration from a valid frame, so
+//!   mutations explore the neighborhood of real traffic instead of
+//!   drowning in "bad magic" rejections;
+//! * `rust/tests/corpus/<target>/*.bin` checks the exact bytes into the
+//!   repo (golden files) — a codec change that silently reshapes wire
+//!   traffic fails the corpus test until the files are regenerated with
+//!   `DRF_UPDATE_CORPUS=1 cargo test`;
+//! * the per-target coverage lists ([`required_seeds`]) assert every
+//!   RPC/request variant has at least one seed, and the exhaustive
+//!   matches in this module break the build when a new variant is added
+//!   without one.
+
+use super::targets::Target;
+use crate::cluster::manifest::{ClusterManifest, ShardColumn, ShardEntry, ShardManifest};
+use crate::coordinator::messages::{
+    Bitmap, EvalQuery, EvalResult, LeafInfo, LeafOutcome, LevelUpdate, MaterializeQuery,
+    MaterializedColumn, MaterializedLeaf, MaterializedLeaves, PartialSupersplit, SubtreeDone,
+    SupersplitQuery,
+};
+use crate::coordinator::wire as coord;
+use crate::coordinator::wire::{HelloConfig, HelloInfo, Request, Response};
+use crate::data::column::Column;
+use crate::data::objserve as obj;
+use crate::data::schema::{ColumnSpec, Schema};
+use crate::serve::wire as serve;
+use crate::serve::wire::{ModelInfo, RowsBatch, ServeRequest, ServeResponse};
+use crate::splits::SplitCandidate;
+use crate::telemetry::{TimeSyncReply, TraceContext};
+use crate::tree::{CategorySet, Condition};
+use crate::util::wire::write_frame;
+use crate::Result;
+use anyhow::Context;
+use std::path::{Path, PathBuf};
+
+/// One corpus entry: a stable name plus the encoded frame.
+#[derive(Debug, Clone)]
+pub struct Seed {
+    /// File stem under `tests/corpus/<target>/` (snake_case message
+    /// name, `_traced` suffix for trailer-carrying variants).
+    pub name: &'static str,
+    /// The encoded frame/document bytes.
+    pub bytes: Vec<u8>,
+}
+
+fn seed(name: &'static str, bytes: Vec<u8>) -> Seed {
+    Seed { name, bytes }
+}
+
+fn sample_ctx() -> TraceContext {
+    TraceContext {
+        trace_id: 0x1122_3344_5566_7788,
+        parent_span: 0x99AA_BBCC_DDEE_FF00,
+    }
+}
+
+fn sample_time_sync() -> TimeSyncReply {
+    TimeSyncReply {
+        role: "worker".into(),
+        shard: Some(1),
+        pid: 4242,
+        t_us: 1_234_567,
+    }
+}
+
+fn sample_bitmap() -> Bitmap {
+    let mut b = Bitmap::with_len(10);
+    for i in [0usize, 3, 4, 9] {
+        b.set(i, true);
+    }
+    b
+}
+
+fn sample_candidate() -> SplitCandidate {
+    SplitCandidate {
+        condition: Condition::CatIn {
+            feature: 3,
+            set: CategorySet::from_values(6, [1, 4]),
+        },
+        gain: 0.25,
+        left_counts: vec![3, 1],
+        right_counts: vec![2, 4],
+    }
+}
+
+/// Snake_case name of a coordinator request variant. Exhaustive on
+/// purpose: adding a `Request` variant fails the build here until the
+/// corpus ([`coord_request_seeds`]) and [`required_seeds`] know it.
+pub fn coord_request_variant(req: &Request) -> &'static str {
+    match req {
+        Request::StartTree(_) => "start_tree",
+        Request::RootStats(_) => "root_stats",
+        Request::FindSplits(_) => "find_splits",
+        Request::EvalConditions(_) => "eval_conditions",
+        Request::LevelUpdate(_) => "level_update",
+        Request::FinishTree(_) => "finish_tree",
+        Request::Shutdown => "shutdown",
+        Request::Hello(_) => "hello",
+        Request::Materialize(_) => "materialize",
+        Request::SubtreeDone(_) => "subtree_done",
+        Request::TimeSync => "time_sync",
+    }
+}
+
+/// Snake_case name of a coordinator response variant (exhaustive; see
+/// [`coord_request_variant`]).
+pub fn coord_response_variant(resp: &Response) -> &'static str {
+    match resp {
+        Response::Ok => "ok",
+        Response::RootStats(_) => "root_stats",
+        Response::Splits(_) => "splits",
+        Response::Evals(_) => "evals",
+        Response::Err(_) => "err",
+        Response::Hello(_) => "hello",
+        Response::Materialized(_) => "materialized",
+        Response::TimeSync(_) => "time_sync",
+    }
+}
+
+/// Snake_case name of a serving request variant (exhaustive).
+pub fn serve_request_variant(req: &ServeRequest) -> &'static str {
+    match req {
+        ServeRequest::Score(_) => "score",
+        ServeRequest::Classify(_) => "classify",
+        ServeRequest::ModelInfo => "model_info",
+        ServeRequest::Reload { .. } => "reload",
+        ServeRequest::TimeSync => "time_sync",
+    }
+}
+
+/// Snake_case name of a serving response variant (exhaustive).
+pub fn serve_response_variant(resp: &ServeResponse) -> &'static str {
+    match resp {
+        ServeResponse::Scores(_) => "scores",
+        ServeResponse::Classes(_) => "classes",
+        ServeResponse::Info(_) => "info",
+        ServeResponse::Reloaded { .. } => "reloaded",
+        ServeResponse::Err(_) => "err",
+        ServeResponse::TimeSync(_) => "time_sync",
+    }
+}
+
+/// Snake_case name of an objstore request variant (exhaustive).
+pub fn obj_request_variant(req: &obj::ObjRequest) -> &'static str {
+    match req {
+        obj::ObjRequest::Stat { .. } => "stat",
+        obj::ObjRequest::Read { .. } => "read",
+        obj::ObjRequest::TimeSync => "time_sync",
+    }
+}
+
+/// Snake_case name of an objstore response variant (exhaustive).
+pub fn obj_response_variant(resp: &obj::ObjResponse) -> &'static str {
+    match resp {
+        obj::ObjResponse::Stat { .. } => "stat",
+        obj::ObjResponse::Data(_) => "data",
+        obj::ObjResponse::TimeSync(_) => "time_sync",
+        obj::ObjResponse::Err(_) => "err",
+    }
+}
+
+fn coord_requests() -> Vec<Request> {
+    vec![
+        Request::StartTree(1),
+        Request::RootStats(1),
+        Request::FindSplits(SupersplitQuery {
+            tree: 1,
+            depth: 2,
+            leaves: vec![
+                LeafInfo {
+                    node_id: 1,
+                    totals: vec![5, 3],
+                    detached: false,
+                },
+                LeafInfo {
+                    node_id: 2,
+                    totals: vec![2, 2],
+                    detached: true,
+                },
+            ],
+            assigned_columns: vec![0, 2],
+        }),
+        Request::EvalConditions(EvalQuery {
+            tree: 1,
+            depth: 2,
+            conditions: vec![
+                (
+                    1,
+                    Condition::NumLe {
+                        feature: 0,
+                        threshold: 0.5,
+                    },
+                ),
+                (
+                    2,
+                    Condition::CatIn {
+                        feature: 3,
+                        set: CategorySet::from_values(6, [1, 4]),
+                    },
+                ),
+            ],
+        }),
+        Request::LevelUpdate(LevelUpdate {
+            tree: 1,
+            depth: 2,
+            outcomes: vec![
+                LeafOutcome::Closed,
+                LeafOutcome::Split {
+                    bitmap: sample_bitmap(),
+                    left_open: true,
+                    right_open: false,
+                },
+                LeafOutcome::Detached,
+            ],
+        }),
+        Request::FinishTree(1),
+        Request::Shutdown,
+        Request::Hello(HelloConfig {
+            protocol: coord::PROTOCOL_VERSION,
+            shard: 0,
+            num_splitters: 2,
+            redundancy: 1,
+            seed: 42,
+            bagging: "poisson".into(),
+            sampling: "sqrt".into(),
+            num_candidates: 8,
+            score_kind: "gini".into(),
+            prune_threshold: Some(0.01),
+            split_search: "exact".into(),
+            depth_next_rows: 65_536,
+            topology_version: 3,
+        }),
+        Request::Materialize(MaterializeQuery {
+            tree: 1,
+            depth: 3,
+            ranks: vec![1, 2],
+            columns: vec![0, 1],
+            want_meta: true,
+        }),
+        Request::SubtreeDone(SubtreeDone {
+            tree: 1,
+            root: 5,
+            rows: 100,
+            nodes: 7,
+        }),
+        Request::TimeSync,
+    ]
+}
+
+fn coord_responses() -> Vec<Response> {
+    vec![
+        Response::Ok,
+        Response::RootStats(vec![60, 40]),
+        Response::Splits(PartialSupersplit {
+            splits: vec![None, Some(sample_candidate())],
+        }),
+        Response::Evals(EvalResult {
+            bitmaps: vec![(1, sample_bitmap())],
+        }),
+        Response::Err("boom".into()),
+        Response::Hello(HelloInfo {
+            protocol: coord::PROTOCOL_VERSION,
+            shard: 0,
+            rows: 120,
+            num_classes: 2,
+            columns: vec![0, 2, 4],
+        }),
+        Response::Materialized(MaterializedLeaves {
+            leaves: vec![MaterializedLeaf {
+                rows: 3,
+                labels: vec![0, 1, 1],
+                bags: vec![1, 1, 2],
+                columns: vec![
+                    MaterializedColumn::Num(vec![0.5, 1.5, 2.5]),
+                    MaterializedColumn::Cat {
+                        arity: 4,
+                        values: vec![0, 3, 1],
+                    },
+                ],
+            }],
+        }),
+        Response::TimeSync(sample_time_sync()),
+    ]
+}
+
+fn sample_batch() -> RowsBatch {
+    RowsBatch {
+        columns: vec![
+            Column::Numerical(vec![0.1, 0.2, 0.3]),
+            Column::Categorical {
+                values: vec![0, 2, 1],
+                arity: 3,
+            },
+        ],
+    }
+}
+
+fn serve_requests() -> Vec<ServeRequest> {
+    vec![
+        ServeRequest::Score(sample_batch()),
+        ServeRequest::Classify(sample_batch()),
+        ServeRequest::ModelInfo,
+        ServeRequest::Reload {
+            path: Some("model.json".into()),
+        },
+        ServeRequest::TimeSync,
+    ]
+}
+
+fn serve_responses() -> Vec<ServeResponse> {
+    vec![
+        ServeResponse::Scores(vec![0.25, 0.75, 0.5]),
+        ServeResponse::Classes(vec![0, 1, 1]),
+        ServeResponse::Info(ModelInfo {
+            num_trees: 10,
+            num_classes: 2,
+            num_nodes: 321,
+        }),
+        ServeResponse::Reloaded { num_trees: 10 },
+        ServeResponse::Err("nope".into()),
+        ServeResponse::TimeSync(sample_time_sync()),
+    ]
+}
+
+fn obj_requests() -> Vec<obj::ObjRequest> {
+    vec![
+        obj::ObjRequest::Stat {
+            path: "shard_0/col_0.drfc".into(),
+        },
+        obj::ObjRequest::Read {
+            path: "shard_0/col_0.drfc".into(),
+            offset: 20,
+            len: 4096,
+        },
+        obj::ObjRequest::TimeSync,
+    ]
+}
+
+fn obj_responses() -> Vec<obj::ObjResponse> {
+    vec![
+        obj::ObjResponse::Stat { len: 81_920 },
+        obj::ObjResponse::Data(vec![0xAB; 32]),
+        obj::ObjResponse::TimeSync(sample_time_sync()),
+        obj::ObjResponse::Err("no such object".into()),
+    ]
+}
+
+fn sample_shard_manifest() -> ShardManifest {
+    ShardManifest {
+        shard: 0,
+        num_splitters: 2,
+        redundancy: 1,
+        rows: 120,
+        schema: Schema::new(
+            vec![
+                ColumnSpec::numerical("f0"),
+                ColumnSpec::categorical("f1", 5),
+            ],
+            2,
+        ),
+        columns: vec![
+            ShardColumn {
+                index: 0,
+                file: "col_0.drfc".into(),
+                checksum: 0x1234_5678_9ABC_DEF0,
+                sorted_file: Some("col_0.sorted.drfc".into()),
+                sorted_checksum: Some(0x0FED_CBA9_8765_4321),
+            },
+            ShardColumn {
+                index: 1,
+                file: "col_1.drfc".into(),
+                checksum: 0x1111_2222_3333_4444,
+                sorted_file: None,
+                sorted_checksum: None,
+            },
+        ],
+        labels_file: "labels.drfc".into(),
+        labels_checksum: 0x5555_6666_7777_8888,
+    }
+}
+
+fn sample_cluster_manifest() -> ClusterManifest {
+    ClusterManifest {
+        num_splitters: 2,
+        redundancy: 1,
+        rows: 120,
+        num_features: 2,
+        num_classes: 2,
+        shards: vec![
+            ShardEntry {
+                shard: 0,
+                dir: "shard_0".into(),
+                columns: vec![0],
+            },
+            ShardEntry {
+                shard: 1,
+                dir: "shard_1".into(),
+                columns: vec![1],
+            },
+        ],
+        workers: vec!["127.0.0.1:7001".into(), "127.0.0.1:7002".into()],
+        version: 1,
+        objstores: vec!["127.0.0.1:9001".into()],
+    }
+}
+
+fn drfc_header_v1() -> Vec<u8> {
+    // "DRFC", version 1, kind Numerical (1), 12 rows + the 12 records
+    // (48 payload bytes) the open-time truncation check wants to see.
+    let mut b = Vec::new();
+    b.extend_from_slice(b"DRFC");
+    b.extend_from_slice(&1u32.to_le_bytes());
+    b.extend_from_slice(&1u32.to_le_bytes());
+    b.extend_from_slice(&12u64.to_le_bytes());
+    b.extend_from_slice(&[0u8; 48]);
+    b
+}
+
+fn drfc_header_v2() -> Vec<u8> {
+    // "DRFC", version 2, kind SortedNumerical (3), 10 rows in chunks
+    // [6, 4] + the 80 payload bytes (10 × 8-byte sorted records).
+    let mut b = Vec::new();
+    b.extend_from_slice(b"DRFC");
+    b.extend_from_slice(&2u32.to_le_bytes());
+    b.extend_from_slice(&3u32.to_le_bytes());
+    b.extend_from_slice(&10u64.to_le_bytes());
+    b.extend_from_slice(&2u32.to_le_bytes());
+    b.extend_from_slice(&6u32.to_le_bytes());
+    b.extend_from_slice(&4u32.to_le_bytes());
+    b.extend_from_slice(&[0u8; 80]);
+    b
+}
+
+/// The built-in seeds of one target, in stable order.
+pub fn builtin_seeds(target: Target) -> Vec<Seed> {
+    match target {
+        Target::Frame => {
+            let mut framed = Vec::new();
+            write_frame(&mut framed, b"hello frame body").unwrap();
+            let mut empty = Vec::new();
+            write_frame(&mut empty, b"").unwrap();
+            vec![seed("short", framed), seed("empty", empty)]
+        }
+        Target::CoordRequest => {
+            let mut seeds: Vec<Seed> = coord_requests()
+                .iter()
+                .map(|req| seed(coord_request_variant(req), coord::encode_request(req)))
+                .collect();
+            seeds.push(seed(
+                "hello_traced",
+                coord::encode_request_traced(&coord_requests()[7], Some(&sample_ctx())),
+            ));
+            seeds
+        }
+        Target::CoordResponse => coord_responses()
+            .iter()
+            .map(|resp| seed(coord_response_variant(resp), coord::encode_response(resp)))
+            .collect(),
+        Target::ServeRequest => {
+            let mut seeds: Vec<Seed> = serve_requests()
+                .iter()
+                .map(|req| seed(serve_request_variant(req), serve::encode_request(7, req)))
+                .collect();
+            seeds.push(seed(
+                "score_traced",
+                serve::encode_request_traced(7, &serve_requests()[0], Some(&sample_ctx())),
+            ));
+            seeds
+        }
+        Target::ServeResponse => serve_responses()
+            .iter()
+            .map(|resp| seed(serve_response_variant(resp), serve::encode_response(7, resp)))
+            .collect(),
+        Target::ObjRequest => {
+            let mut seeds: Vec<Seed> = obj_requests()
+                .iter()
+                .map(|req| seed(obj_request_variant(req), obj::encode_request(req)))
+                .collect();
+            seeds.push(seed(
+                "read_traced",
+                obj::encode_request_traced(&obj_requests()[1], Some(&sample_ctx())),
+            ));
+            seeds
+        }
+        Target::ObjResponse => obj_responses()
+            .iter()
+            .map(|resp| seed(obj_response_variant(resp), obj::encode_response(resp)))
+            .collect(),
+        Target::Json => vec![
+            seed(
+                "nested",
+                br#"{"name":"drf","nums":[1,2.5,-3e-2],"flags":{"a":true,"b":null},"deep":[[1],[2,[3]]]}"#
+                    .to_vec(),
+            ),
+            seed("escapes", r#"{"s":"he\"llo\nA wörld\\"}"#.as_bytes().to_vec()),
+            seed("scalar", b"1234567890.5".to_vec()),
+        ],
+        Target::ShardManifest => vec![seed(
+            "shard_manifest",
+            sample_shard_manifest().to_json().to_string().into_bytes(),
+        )],
+        Target::ClusterManifest => vec![seed(
+            "cluster_manifest",
+            sample_cluster_manifest().to_json().to_string().into_bytes(),
+        )],
+        Target::DrfcHeader => vec![
+            seed("v1_numerical", drfc_header_v1()),
+            seed("v2_sorted_chunked", drfc_header_v2()),
+        ],
+    }
+}
+
+/// Seed names each target must carry — at least one per message type of
+/// its protocol. Keep in sync with the exhaustive `*_variant` matches
+/// above (the compiler flags new variants there, this list then makes
+/// the corpus test demand a seed for them).
+pub fn required_seeds(target: Target) -> &'static [&'static str] {
+    match target {
+        Target::Frame => &["short", "empty"],
+        Target::CoordRequest => &[
+            "start_tree",
+            "root_stats",
+            "find_splits",
+            "eval_conditions",
+            "level_update",
+            "finish_tree",
+            "shutdown",
+            "hello",
+            "materialize",
+            "subtree_done",
+            "time_sync",
+            "hello_traced",
+        ],
+        Target::CoordResponse => &[
+            "ok",
+            "root_stats",
+            "splits",
+            "evals",
+            "err",
+            "hello",
+            "materialized",
+            "time_sync",
+        ],
+        Target::ServeRequest => &[
+            "score",
+            "classify",
+            "model_info",
+            "reload",
+            "time_sync",
+            "score_traced",
+        ],
+        Target::ServeResponse => &[
+            "scores",
+            "classes",
+            "info",
+            "reloaded",
+            "err",
+            "time_sync",
+        ],
+        Target::ObjRequest => &["stat", "read", "time_sync", "read_traced"],
+        Target::ObjResponse => &["stat", "data", "time_sync", "err"],
+        Target::Json => &["nested", "escapes", "scalar"],
+        Target::ShardManifest => &["shard_manifest"],
+        Target::ClusterManifest => &["cluster_manifest"],
+        Target::DrfcHeader => &["v1_numerical", "v2_sorted_chunked"],
+    }
+}
+
+/// The checked-in corpus root (`rust/tests/corpus`).
+pub fn corpus_root() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests")
+        .join("corpus")
+}
+
+/// Load a target's seeds for a fuzz run: every `*.bin` under
+/// `<dir>/<target>/` in filename order, falling back to the built-in
+/// seeds when the directory is absent or empty. Filename order (not
+/// readdir order) keeps runs deterministic across filesystems.
+pub fn load_seeds(target: Target, dir: &Path) -> Result<Vec<(String, Vec<u8>)>> {
+    let sub = dir.join(target.name());
+    let mut found: Vec<(String, Vec<u8>)> = Vec::new();
+    if sub.is_dir() {
+        let mut paths: Vec<PathBuf> = std::fs::read_dir(&sub)
+            .with_context(|| format!("reading corpus dir {}", sub.display()))?
+            .filter_map(|e| e.ok().map(|e| e.path()))
+            .filter(|p| p.extension().is_some_and(|e| e == "bin"))
+            .collect();
+        paths.sort();
+        for p in paths {
+            let name = p
+                .file_stem()
+                .map(|s| s.to_string_lossy().into_owned())
+                .unwrap_or_default();
+            let bytes = std::fs::read(&p)
+                .with_context(|| format!("reading corpus seed {}", p.display()))?;
+            found.push((name, bytes));
+        }
+    }
+    if found.is_empty() {
+        found = builtin_seeds(target)
+            .into_iter()
+            .map(|s| (s.name.to_string(), s.bytes))
+            .collect();
+    }
+    Ok(found)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_message_type_has_a_seed() {
+        for target in Target::ALL {
+            let names: Vec<&str> = builtin_seeds(target).iter().map(|s| s.name).collect();
+            for required in required_seeds(target) {
+                assert!(
+                    names.contains(required),
+                    "{}: missing required seed '{required}'",
+                    target.name()
+                );
+            }
+            let mut unique = names.clone();
+            unique.sort_unstable();
+            unique.dedup();
+            assert_eq!(unique.len(), names.len(), "{}: duplicate seed names", target.name());
+        }
+    }
+
+    #[test]
+    fn every_builtin_seed_exercises_clean() {
+        for target in Target::ALL {
+            for s in builtin_seeds(target) {
+                if let Err(e) = target.exercise(&s.bytes) {
+                    panic!("{}/{} does not decode: {e:#}", target.name(), s.name);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn request_seed_names_match_decoded_variants() {
+        for req in coord_requests() {
+            let frame = coord::encode_request(&req);
+            let back = coord::decode_request(&frame).unwrap();
+            assert_eq!(coord_request_variant(&back), coord_request_variant(&req));
+        }
+        for resp in coord_responses() {
+            let frame = coord::encode_response(&resp);
+            let back = coord::decode_response(&frame).unwrap();
+            assert_eq!(coord_response_variant(&back), coord_response_variant(&resp));
+        }
+    }
+
+    #[test]
+    fn golden_corpus_files_match_builtin_seeds() {
+        // The on-disk corpus must byte-match the encoders. Regenerate
+        // with: DRF_UPDATE_CORPUS=1 cargo test -q golden_corpus
+        let update = std::env::var_os("DRF_UPDATE_CORPUS").is_some();
+        let root = corpus_root();
+        for target in Target::ALL {
+            let dir = root.join(target.name());
+            for s in builtin_seeds(target) {
+                let path = dir.join(format!("{}.bin", s.name));
+                if update {
+                    std::fs::create_dir_all(&dir).unwrap();
+                    std::fs::write(&path, &s.bytes).unwrap();
+                    continue;
+                }
+                let disk = std::fs::read(&path).unwrap_or_else(|e| {
+                    panic!(
+                        "{}: cannot read checked-in seed ({e}); regenerate with \
+                         DRF_UPDATE_CORPUS=1 cargo test",
+                        path.display()
+                    )
+                });
+                assert_eq!(
+                    disk,
+                    s.bytes,
+                    "{}: checked-in seed differs from the encoder output; regenerate \
+                     with DRF_UPDATE_CORPUS=1 cargo test",
+                    path.display()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn load_seeds_prefers_disk_and_falls_back() {
+        let tmp = crate::util::tempdir().unwrap();
+        // Absent dir -> builtins.
+        let fallback = load_seeds(Target::Json, tmp.path()).unwrap();
+        assert_eq!(fallback.len(), builtin_seeds(Target::Json).len());
+        // Populated dir -> exactly the files, in name order.
+        let sub = tmp.path().join("json");
+        std::fs::create_dir_all(&sub).unwrap();
+        std::fs::write(sub.join("b.bin"), b"2").unwrap();
+        std::fs::write(sub.join("a.bin"), b"1").unwrap();
+        std::fs::write(sub.join("ignored.txt"), b"x").unwrap();
+        let disk = load_seeds(Target::Json, tmp.path()).unwrap();
+        assert_eq!(
+            disk.iter().map(|(n, _)| n.as_str()).collect::<Vec<_>>(),
+            vec!["a", "b"]
+        );
+        assert_eq!(disk[0].1, b"1");
+    }
+}

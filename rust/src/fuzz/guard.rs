@@ -1,0 +1,190 @@
+//! Allocation-cap guard: a counting [`GlobalAlloc`] wrapper that lets
+//! the fuzz harness measure the **peak live heap** a decoder reaches
+//! while chewing on one input.
+//!
+//! "No panic" alone is not the invariant the cluster needs — a forged
+//! length prefix that drives a multi-GiB `with_capacity` takes a worker
+//! down just as surely as an index-out-of-bounds. The harness therefore
+//! runs every decode inside [`measure`] and compares the observed peak
+//! against [`crate::fuzz::alloc_cap`].
+//!
+//! Design constraints:
+//!
+//! * **Near-zero cost when idle.** Every allocation in the process pays
+//!   exactly one relaxed atomic load while no measurement window is
+//!   open (the common case: production binaries, non-fuzz tests).
+//! * **Thread-local accounting.** A window only counts allocations made
+//!   by the thread that opened it, so parallel test threads (or server
+//!   threads in the same process) do not pollute each other's peaks.
+//! * **Never panics, never allocates.** The hooks run inside the
+//!   allocator; they use `Cell` state only and tolerate TLS teardown
+//!   (`try_with`).
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Number of measurement windows currently open across all threads.
+/// The fast path: when zero (the overwhelmingly common case) the
+/// allocator hooks return after a single relaxed load.
+static WINDOWS_OPEN: AtomicUsize = AtomicUsize::new(0);
+
+/// Per-thread accounting window. `live` saturates (a forged length that
+/// overflows usize must clamp, not wrap into a small peak).
+#[derive(Clone, Copy)]
+struct Window {
+    active: bool,
+    live: usize,
+    peak: usize,
+}
+
+thread_local! {
+    static WINDOW: Cell<Window> = const {
+        Cell::new(Window { active: false, live: 0, peak: 0 })
+    };
+}
+
+#[inline]
+fn charge(n: usize) {
+    if WINDOWS_OPEN.load(Ordering::Relaxed) == 0 {
+        return;
+    }
+    // try_with: during TLS teardown the slot may be gone — skip rather
+    // than abort (the allocator must never panic).
+    let _ = WINDOW.try_with(|w| {
+        let mut win = w.get();
+        if win.active {
+            win.live = win.live.saturating_add(n);
+            win.peak = win.peak.max(win.live);
+            w.set(win);
+        }
+    });
+}
+
+#[inline]
+fn release(n: usize) {
+    if WINDOWS_OPEN.load(Ordering::Relaxed) == 0 {
+        return;
+    }
+    let _ = WINDOW.try_with(|w| {
+        let mut win = w.get();
+        if win.active {
+            win.live = win.live.saturating_sub(n);
+            w.set(win);
+        }
+    });
+}
+
+/// [`System`] allocator wrapped with per-thread live/peak accounting.
+/// Installed crate-wide (see the `#[global_allocator]` below) so fuzz
+/// targets measure real decoder allocations, not estimates.
+pub struct CountingAlloc;
+
+// SAFETY: pure delegation to `System`; the accounting hooks touch only
+// `Cell`/atomic state and never allocate or unwind.
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        charge(layout.size());
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        charge(layout.size());
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        release(layout.size());
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        if new_size >= layout.size() {
+            charge(new_size - layout.size());
+        } else {
+            release(layout.size() - new_size);
+        }
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+/// Run `f` in a fresh measurement window on this thread and return its
+/// result plus the **peak live bytes** allocated (by this thread) while
+/// it ran. Windows do not nest — `measure` inside `f` would reset the
+/// accounting; the fuzz driver never does this.
+pub fn measure<R>(f: impl FnOnce() -> R) -> (R, usize) {
+    WINDOW.with(|w| {
+        w.set(Window {
+            active: true,
+            live: 0,
+            peak: 0,
+        })
+    });
+    WINDOWS_OPEN.fetch_add(1, Ordering::Relaxed);
+    let result = f();
+    WINDOWS_OPEN.fetch_sub(1, Ordering::Relaxed);
+    let peak = WINDOW.with(|w| {
+        let win = w.get();
+        w.set(Window {
+            active: false,
+            ..win
+        });
+        win.peak
+    });
+    (result, peak)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_peak_not_total() {
+        // Two sequential 64 KiB buffers: total allocated is ~128 KiB but
+        // the peak live is ~64 KiB because the first is dropped before
+        // the second exists.
+        let (_, peak) = measure(|| {
+            let a = vec![1u8; 64 * 1024];
+            drop(a);
+            let b = vec![2u8; 64 * 1024];
+            drop(b);
+        });
+        assert!(peak >= 64 * 1024, "peak {peak} misses the buffers");
+        assert!(peak < 120 * 1024, "peak {peak} double-counts sequential buffers");
+    }
+
+    #[test]
+    fn concurrent_buffers_accumulate() {
+        let (_, peak) = measure(|| {
+            let a = vec![1u8; 32 * 1024];
+            let b = vec![2u8; 32 * 1024];
+            (a.len(), b.len())
+        });
+        assert!(peak >= 64 * 1024, "peak {peak} misses concurrent buffers");
+    }
+
+    #[test]
+    fn other_threads_do_not_pollute_the_window() {
+        let (_, peak) = measure(|| {
+            std::thread::spawn(|| {
+                let big = vec![0u8; 4 * 1024 * 1024];
+                big.len()
+            })
+            .join()
+            .unwrap()
+        });
+        // The 4 MiB belongs to the spawned thread, not our window.
+        assert!(peak < 1024 * 1024, "foreign thread charged to window: {peak}");
+    }
+
+    #[test]
+    fn windows_reset_between_measurements() {
+        let (_, first) = measure(|| vec![0u8; 16 * 1024].len());
+        let (_, second) = measure(|| 0usize);
+        assert!(first >= 16 * 1024);
+        assert!(second < 4096, "second window inherited {second} bytes");
+    }
+}

@@ -1,0 +1,229 @@
+//! Deterministic byte-level and structure-aware mutators.
+//!
+//! Every mutation is a pure function of the input bytes and the
+//! supplied [`Xoshiro256pp`] stream, so a failing case is fully
+//! reproduced by its seed (see [`crate::fuzz::run`]). Each application
+//! returns a compact human-readable description; the driver collects
+//! these into the *mutation trace* printed with a finding.
+//!
+//! The menu is the classic mutational-fuzzing set plus two
+//! protocol-aware entries:
+//!
+//! * **length-prefix forging** writes an "interesting" u32/u64 (0, 1,
+//!   small, `u32::MAX`, …) at a random aligned-ish offset — the exact
+//!   shape of the forged-`with_capacity` bugs these decoders must
+//!   survive;
+//! * **trailer corruption** appends or chops bytes around the optional
+//!   16-byte trace-context trailer all three protocols share.
+
+use crate::rng::Xoshiro256pp;
+
+/// Hard clamp on a mutated input. Keeps the allocation invariant
+/// provable (see [`crate::fuzz::alloc_cap`]) and the run fast; real
+/// frames are orders of magnitude below the wire substrate's 256 MiB
+/// frame cap anyway, and every length-forging bug reproduces in well
+/// under 64 KiB.
+pub const MAX_INPUT_LEN: usize = 64 * 1024;
+
+/// Boundary values for forged length prefixes and scalars.
+const INTERESTING: [u64; 16] = [
+    0,
+    1,
+    2,
+    7,
+    8,
+    63,
+    64,
+    255,
+    256,
+    0xFFFF,
+    0x1_0000,
+    0x10_0000,
+    u32::MAX as u64 - 1,
+    u32::MAX as u64,
+    u64::MAX - 1,
+    u64::MAX,
+];
+
+fn pos_below(rng: &mut Xoshiro256pp, len: usize) -> usize {
+    rng.next_below(len.max(1) as u64) as usize
+}
+
+/// Apply one randomly chosen mutation to `data` in place and describe
+/// it. `pool` supplies splice partners (the target's full seed corpus).
+pub fn mutate_once(data: &mut Vec<u8>, pool: &[Vec<u8>], rng: &mut Xoshiro256pp) -> String {
+    let desc = match rng.next_below(10) {
+        0 => {
+            // Truncate at a random point (the classic torn frame).
+            if data.is_empty() {
+                data.push(rng.next_u64() as u8);
+                format!("append1@0={:#04x}", data[0])
+            } else {
+                let at = pos_below(rng, data.len());
+                data.truncate(at);
+                format!("truncate@{at}")
+            }
+        }
+        1 => {
+            // Flip one bit.
+            if data.is_empty() {
+                data.push(1);
+                "append1@0=0x01".to_string()
+            } else {
+                let at = pos_below(rng, data.len());
+                let bit = rng.next_below(8) as u8;
+                data[at] ^= 1 << bit;
+                format!("bitflip@{at}.{bit}")
+            }
+        }
+        2 => {
+            // Overwrite one byte with a random value.
+            if data.is_empty() {
+                data.push(rng.next_u64() as u8);
+                format!("append1@0={:#04x}", data[0])
+            } else {
+                let at = pos_below(rng, data.len());
+                data[at] = rng.next_u64() as u8;
+                format!("byteset@{at}={:#04x}", data[at])
+            }
+        }
+        3 => {
+            // Forge a u32 length prefix / scalar (LE) somewhere.
+            let v = INTERESTING[rng.next_below(INTERESTING.len() as u64) as usize] as u32;
+            if data.len() < 4 {
+                data.extend_from_slice(&v.to_le_bytes());
+                format!("append-u32={v:#x}")
+            } else {
+                let at = pos_below(rng, data.len() - 3);
+                data[at..at + 4].copy_from_slice(&v.to_le_bytes());
+                format!("forge-u32@{at}={v:#x}")
+            }
+        }
+        4 => {
+            // Forge a u64 scalar (LE) somewhere.
+            let v = INTERESTING[rng.next_below(INTERESTING.len() as u64) as usize];
+            if data.len() < 8 {
+                data.extend_from_slice(&v.to_le_bytes());
+                format!("append-u64={v:#x}")
+            } else {
+                let at = pos_below(rng, data.len() - 7);
+                data[at..at + 8].copy_from_slice(&v.to_le_bytes());
+                format!("forge-u64@{at}={v:#x}")
+            }
+        }
+        5 => {
+            // Trailer corruption: grow or shrink the frame around the
+            // optional 16-byte trace-context trailer.
+            match rng.next_below(3) {
+                0 => {
+                    for _ in 0..16 {
+                        data.push(rng.next_u64() as u8);
+                    }
+                    "trailer-append16".to_string()
+                }
+                1 => {
+                    let n = (rng.next_below(16) as usize + 1).min(data.len());
+                    data.truncate(data.len() - n);
+                    format!("trailer-chop{n}")
+                }
+                _ => {
+                    let n = rng.next_below(8) as usize + 1;
+                    for _ in 0..n {
+                        data.push(rng.next_u64() as u8);
+                    }
+                    format!("trailer-append{n}")
+                }
+            }
+        }
+        6 => {
+            // Splice: keep a prefix of ours, graft a suffix of a pool
+            // seed (crossover between valid frames).
+            static EMPTY: Vec<u8> = Vec::new();
+            let other = if pool.is_empty() {
+                &EMPTY
+            } else {
+                &pool[rng.next_below(pool.len() as u64) as usize]
+            };
+            let keep = pos_below(rng, data.len() + 1);
+            let from = pos_below(rng, other.len() + 1);
+            data.truncate(keep);
+            data.extend_from_slice(&other[from..]);
+            format!("splice@{keep}+pool[{from}..]")
+        }
+        7 => {
+            // Insert a short run of random bytes.
+            let at = pos_below(rng, data.len() + 1);
+            let n = rng.next_below(8) as usize + 1;
+            let bytes: Vec<u8> = (0..n).map(|_| rng.next_u64() as u8).collect();
+            data.splice(at..at, bytes);
+            format!("insert@{at}x{n}")
+        }
+        8 => {
+            // Delete a byte range.
+            if data.is_empty() {
+                data.push(0);
+                "append1@0=0x00".to_string()
+            } else {
+                let at = pos_below(rng, data.len());
+                let n = (rng.next_below(16) as usize + 1).min(data.len() - at);
+                data.drain(at..at + n);
+                format!("delete@{at}x{n}")
+            }
+        }
+        _ => {
+            // Duplicate a range in place (drives nesting/repetition —
+            // e.g. deep JSON arrays from a shallow seed).
+            if data.is_empty() {
+                data.push(b'[');
+                "append1@0=0x5b".to_string()
+            } else {
+                let at = pos_below(rng, data.len());
+                let n = (rng.next_below(32) as usize + 1).min(data.len() - at);
+                let copy: Vec<u8> = data[at..at + n].to_vec();
+                data.splice(at..at, copy);
+                format!("dup@{at}x{n}")
+            }
+        }
+    };
+    data.truncate(MAX_INPUT_LEN);
+    desc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mutations_are_deterministic() {
+        let pool = vec![b"hello world frame".to_vec(), b"\x01\x02\x03\x04".to_vec()];
+        let run = |seed: u64| {
+            let mut rng = Xoshiro256pp::new(seed);
+            let mut data = pool[0].clone();
+            let trace: Vec<String> = (0..32).map(|_| mutate_once(&mut data, &pool, &mut rng)).collect();
+            (data, trace)
+        };
+        assert_eq!(run(7), run(7));
+        assert_ne!(run(7).1, run(8).1, "different seeds, same trace");
+    }
+
+    #[test]
+    fn inputs_stay_clamped() {
+        let pool = vec![vec![0xAA; 1024]];
+        let mut rng = Xoshiro256pp::new(99);
+        let mut data = pool[0].clone();
+        for _ in 0..10_000 {
+            mutate_once(&mut data, &pool, &mut rng);
+            assert!(data.len() <= MAX_INPUT_LEN);
+        }
+    }
+
+    #[test]
+    fn empty_input_survives_every_mutator() {
+        let pool = vec![Vec::new()];
+        let mut rng = Xoshiro256pp::new(3);
+        for _ in 0..1000 {
+            let mut data = Vec::new();
+            mutate_once(&mut data, &pool, &mut rng);
+        }
+    }
+}

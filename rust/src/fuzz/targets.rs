@@ -1,0 +1,295 @@
+//! One in-process harness target per decoder entry point.
+//!
+//! A target's [`Target::exercise`] runs exactly what a real peer can
+//! reach with one frame/document: the decode, the validation the
+//! production caller performs next (e.g. [`RowsBatch::into_dataset`]
+//! on serving batches, `ensure_untruncated` + `chunk_plan` on DRFC
+//! headers), and — when the input decodes — a **fixpoint check**:
+//! re-encoding the decoded message and decoding it again must
+//! reproduce the same bytes. A decoder may *reject* arbitrary bytes
+//! (`Err` is success from the fuzzer's point of view), but it must
+//! never panic, never over-allocate, and never decode a frame its own
+//! encoder cannot reproduce.
+//!
+//! Fixpoint checks compare **re-encoded bytes**, not decoded values:
+//! float payloads can legitimately carry NaN (never equal to itself)
+//! but its bit pattern must still survive a codec roundtrip.
+//!
+//! Peak-allocation note: targets drop the first decoded value before
+//! re-decoding, so the measured peak stays within
+//! [`crate::fuzz::alloc_cap`]'s provable budget (one decoded message +
+//! one canonical re-encoding, never two decoded messages at once).
+
+use crate::cluster::manifest::{ClusterManifest, ShardManifest};
+use crate::coordinator::wire as coord;
+use crate::data::disk::Header;
+use crate::data::objserve as obj;
+use crate::serve::wire as serve;
+use crate::util::json::Json;
+use crate::util::wire::{read_frame, write_frame};
+use crate::Result;
+use anyhow::bail;
+use std::path::Path;
+
+/// A fuzzable decoder entry point.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Target {
+    /// The shared length-prefixed frame reader ([`read_frame`]).
+    Frame,
+    /// Coordinator RPC requests ([`coord::decode_request_traced`]).
+    CoordRequest,
+    /// Coordinator RPC responses ([`coord::decode_response`]).
+    CoordResponse,
+    /// Serving requests ([`serve::decode_request_traced`]) plus the
+    /// batch shape validation the server runs next.
+    ServeRequest,
+    /// Serving responses ([`serve::decode_response`]).
+    ServeResponse,
+    /// Object-store requests ([`obj::decode_request_traced`]).
+    ObjRequest,
+    /// Object-store responses ([`obj::decode_response`]).
+    ObjResponse,
+    /// The in-tree JSON parser ([`Json::parse`]).
+    Json,
+    /// `manifest.json` parsing ([`ShardManifest::from_json`]).
+    ShardManifest,
+    /// `cluster.json` parsing ([`ClusterManifest::from_json`]).
+    ClusterManifest,
+    /// DRFC v1/v2 column headers ([`Header::parse`] + the open-time
+    /// truncation check + chunk planning).
+    DrfcHeader,
+}
+
+impl Target {
+    /// Every target, in canonical (CLI/report) order.
+    pub const ALL: [Target; 11] = [
+        Target::Frame,
+        Target::CoordRequest,
+        Target::CoordResponse,
+        Target::ServeRequest,
+        Target::ServeResponse,
+        Target::ObjRequest,
+        Target::ObjResponse,
+        Target::Json,
+        Target::ShardManifest,
+        Target::ClusterManifest,
+        Target::DrfcHeader,
+    ];
+
+    /// Stable kebab-case name (CLI `--target` value and corpus
+    /// subdirectory name).
+    pub fn name(self) -> &'static str {
+        match self {
+            Target::Frame => "frame",
+            Target::CoordRequest => "coord-request",
+            Target::CoordResponse => "coord-response",
+            Target::ServeRequest => "serve-request",
+            Target::ServeResponse => "serve-response",
+            Target::ObjRequest => "obj-request",
+            Target::ObjResponse => "obj-response",
+            Target::Json => "json",
+            Target::ShardManifest => "shard-manifest",
+            Target::ClusterManifest => "cluster-manifest",
+            Target::DrfcHeader => "drfc-header",
+        }
+    }
+
+    /// Position in [`Target::ALL`] (part of the per-iteration seed key,
+    /// so every target sees an independent deterministic stream).
+    pub fn id(self) -> u64 {
+        Target::ALL.iter().position(|&t| t == self).unwrap() as u64
+    }
+
+    /// Parse one `--target` name.
+    pub fn from_name(s: &str) -> Result<Target> {
+        for t in Target::ALL {
+            if t.name() == s {
+                return Ok(t);
+            }
+        }
+        bail!(
+            "unknown fuzz target '{s}' (want all, {})",
+            Target::ALL.map(|t| t.name()).join(", ")
+        )
+    }
+
+    /// Parse a `--target` selector: `all`, one name, or a
+    /// comma-separated list.
+    pub fn parse_selector(s: &str) -> Result<Vec<Target>> {
+        if s == "all" {
+            return Ok(Target::ALL.to_vec());
+        }
+        s.split(',').map(|p| Target::from_name(p.trim())).collect()
+    }
+
+    /// Feed `input` to the decoder under test. `Err` means the decoder
+    /// rejected the bytes — perfectly fine. Panics and over-allocation
+    /// are what the driver is hunting; fixpoint violations surface as
+    /// panics via the internal assertions.
+    pub fn exercise(self, input: &[u8]) -> Result<()> {
+        match self {
+            Target::Frame => {
+                let mut cursor = std::io::Cursor::new(input);
+                let body = read_frame(&mut cursor)?;
+                // Re-framing the body must reproduce the bytes consumed.
+                let consumed = cursor.position() as usize;
+                let mut refrained = Vec::with_capacity(consumed);
+                write_frame(&mut refrained, &body).expect("write_frame to Vec");
+                assert_eq!(
+                    &input[..consumed],
+                    &refrained[..],
+                    "frame codec fixpoint diverged"
+                );
+            }
+            Target::CoordRequest => {
+                let (req, ctx) = coord::decode_request_traced(input)?;
+                let e1 = coord::encode_request_traced(&req, ctx.as_ref());
+                drop(req);
+                let (req2, ctx2) = coord::decode_request_traced(&e1)
+                    .expect("re-decode of re-encoded coordinator request failed");
+                let e2 = coord::encode_request_traced(&req2, ctx2.as_ref());
+                assert_eq!(e1, e2, "coordinator request fixpoint diverged");
+            }
+            Target::CoordResponse => {
+                let resp = coord::decode_response(input)?;
+                let e1 = coord::encode_response(&resp);
+                drop(resp);
+                let resp2 = coord::decode_response(&e1)
+                    .expect("re-decode of re-encoded coordinator response failed");
+                let e2 = coord::encode_response(&resp2);
+                assert_eq!(e1, e2, "coordinator response fixpoint diverged");
+            }
+            Target::ServeRequest => {
+                let (id, req, ctx) = serve::decode_request_traced(input)?;
+                let e1 = serve::encode_request_traced(id, &req, ctx.as_ref());
+                // The server's next step on prediction requests: shape
+                // validation + dataset assembly. Its Err is fine; its
+                // panic is a finding.
+                match req {
+                    serve::ServeRequest::Score(batch) | serve::ServeRequest::Classify(batch) => {
+                        let _ = batch.into_dataset(2);
+                    }
+                    _ => drop(req),
+                }
+                let (id2, req2, ctx2) = serve::decode_request_traced(&e1)
+                    .expect("re-decode of re-encoded serving request failed");
+                let e2 = serve::encode_request_traced(id2, &req2, ctx2.as_ref());
+                assert_eq!(e1, e2, "serving request fixpoint diverged");
+            }
+            Target::ServeResponse => {
+                let (id, resp) = serve::decode_response(input)?;
+                let e1 = serve::encode_response(id, &resp);
+                drop(resp);
+                let (id2, resp2) = serve::decode_response(&e1)
+                    .expect("re-decode of re-encoded serving response failed");
+                let e2 = serve::encode_response(id2, &resp2);
+                assert_eq!(e1, e2, "serving response fixpoint diverged");
+            }
+            Target::ObjRequest => {
+                let (req, ctx) = obj::decode_request_traced(input)?;
+                let e1 = obj::encode_request_traced(&req, ctx.as_ref());
+                drop(req);
+                let (req2, ctx2) = obj::decode_request_traced(&e1)
+                    .expect("re-decode of re-encoded objstore request failed");
+                let e2 = obj::encode_request_traced(&req2, ctx2.as_ref());
+                assert_eq!(e1, e2, "objstore request fixpoint diverged");
+            }
+            Target::ObjResponse => {
+                let resp = obj::decode_response(input)?;
+                let e1 = obj::encode_response(&resp);
+                drop(resp);
+                let resp2 = obj::decode_response(&e1)
+                    .expect("re-decode of re-encoded objstore response failed");
+                let e2 = obj::encode_response(&resp2);
+                assert_eq!(e1, e2, "objstore response fixpoint diverged");
+            }
+            Target::Json => {
+                let text = std::str::from_utf8(input)?;
+                let v1 = Json::parse(text)?;
+                let t1 = v1.to_string();
+                drop(v1);
+                let v2 = Json::parse(&t1).expect("re-parse of serialized JSON failed");
+                let t2 = v2.to_string();
+                assert_eq!(t1, t2, "JSON writer/parser fixpoint diverged");
+            }
+            Target::ShardManifest => {
+                let text = std::str::from_utf8(input)?;
+                let doc = Json::parse(text)?;
+                let m1 = ShardManifest::from_json(&doc)?;
+                drop(doc);
+                let t1 = m1.to_json().to_string();
+                drop(m1);
+                let m2 = ShardManifest::from_json(
+                    &Json::parse(&t1).expect("serialized shard manifest is not JSON"),
+                )
+                .expect("re-parse of serialized shard manifest failed");
+                assert_eq!(t1, m2.to_json().to_string(), "shard manifest fixpoint diverged");
+            }
+            Target::ClusterManifest => {
+                let text = std::str::from_utf8(input)?;
+                let doc = Json::parse(text)?;
+                let m1 = ClusterManifest::from_json(&doc)?;
+                drop(doc);
+                let t1 = m1.to_json().to_string();
+                drop(m1);
+                let m2 = ClusterManifest::from_json(
+                    &Json::parse(&t1).expect("serialized cluster manifest is not JSON"),
+                )
+                .expect("re-parse of serialized cluster manifest failed");
+                assert_eq!(
+                    t1,
+                    m2.to_json().to_string(),
+                    "cluster manifest fixpoint diverged"
+                );
+            }
+            Target::DrfcHeader => {
+                let h = Header::parse(input)?;
+                // The open-time contract every backend follows: parse,
+                // reject truncation against the real file length, then
+                // plan the pass.
+                h.ensure_untruncated(input.len() as u64, Path::new("<fuzz-input>"))?;
+                let plan = h.chunk_plan();
+                assert_eq!(
+                    plan.iter().map(|&c| c as u64).sum::<u64>(),
+                    h.rows,
+                    "chunk plan does not cover the declared rows"
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_roundtrip_and_are_unique() {
+        let mut seen = std::collections::HashSet::new();
+        for t in Target::ALL {
+            assert_eq!(Target::from_name(t.name()).unwrap(), t);
+            assert!(seen.insert(t.name()), "duplicate target name {}", t.name());
+            assert_eq!(Target::ALL[t.id() as usize], t);
+        }
+        assert!(Target::from_name("nope").is_err());
+    }
+
+    #[test]
+    fn selector_parses_all_and_lists() {
+        assert_eq!(Target::parse_selector("all").unwrap(), Target::ALL.to_vec());
+        assert_eq!(
+            Target::parse_selector("json, frame").unwrap(),
+            vec![Target::Json, Target::Frame]
+        );
+        assert!(Target::parse_selector("json,bogus").is_err());
+    }
+
+    #[test]
+    fn garbage_is_rejected_not_panicked() {
+        for t in Target::ALL {
+            assert!(t.exercise(b"\xFF\xFE\xFD garbage \x00\x01").is_err());
+            assert!(t.exercise(b"").is_err());
+        }
+    }
+}

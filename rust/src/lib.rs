@@ -162,6 +162,19 @@
 //! training, so telemetry-on forests stay bit-identical to
 //! telemetry-off runs. The metric catalog is in `docs/observability.md`.
 //!
+//! ## Fuzzing
+//!
+//! Every decoder that consumes untrusted bytes — the wire codecs of
+//! all three protocols, JSON manifest parsing, DRFC headers — is
+//! covered by the in-tree deterministic fuzzer ([`fuzz`]): seeded
+//! mutations of encoder-generated corpus frames, run under
+//! `catch_unwind` plus a peak-allocation guard, with the invariant
+//! *no panic, no over-allocation, graceful `Err` only*. Run it with
+//! `drf fuzz --target all --seed 42 --iters 10000`; CI runs the same
+//! budget on every push (`fuzz-smoke`). See `docs/fuzzing.md` for the
+//! corpus layout and how to reproduce, minimize, and regress a
+//! finding.
+//!
 //! ## Quickstart
 //!
 //! ```no_run
@@ -209,6 +222,7 @@ pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod forest;
+pub mod fuzz;
 pub mod metrics;
 pub mod rng;
 pub mod runtime;

@@ -31,6 +31,10 @@
 //! * `trace`     — merge per-process `--trace-out` files into one
 //!                 clock-aligned Chrome trace JSON (`merge`) or print
 //!                 the per-round straggler report (`report`);
+//! * `fuzz`      — deterministic mutational fuzzing of every untrusted
+//!                 decoder (wire codecs, manifests, DRFC headers) with
+//!                 seed/trace reproduction and repro minimization
+//!                 (`drf::fuzz`);
 //! * `info`      — runtime/platform info (PJRT client, artifacts).
 //!
 //! Examples:
@@ -144,6 +148,8 @@ const METRICS_FLAGS: &[&str] = &["interval-ms", "!watch"];
 
 const TRACE_FLAGS: &[&str] = &["out"];
 
+const FUZZ_FLAGS: &[&str] = &["target", "seed", "iters", "corpus", "repro-out", "!minimize"];
+
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     if let Err(e) = run(&argv) {
@@ -167,6 +173,7 @@ fn run(argv: &[String]) -> Result<()> {
         "predict" => cmd_predict(&argv[1..]),
         "metrics" => cmd_metrics(&argv[1..]),
         "trace" => cmd_trace(&argv[1..]),
+        "fuzz" => cmd_fuzz(&argv[1..]),
         "info" => cmd_info(),
         "help" | "--help" | "-h" => {
             print!("{}", HELP);
@@ -224,6 +231,8 @@ USAGE:
   drf metrics ADDR [--watch] [--interval-ms MS]
   drf trace merge FILE... --out trace.json
   drf trace report FILE...
+  drf fuzz [--target all|NAME[,NAME...]] [--seed S] [--iters N]
+           [--corpus DIR] [--minimize] [--repro-out DIR]
   drf info
 
 Data sources (train/evaluate/shard/predict): --csv loads a CSV file
@@ -327,6 +336,18 @@ clock-aligned Chrome trace-event JSON (load it at https://ui.perfetto.dev);
 worker, gap versus the median, dominant phase. Telemetry is
 observation-only: forests are bit-identical with it on or off. See
 docs/observability.md for the metric catalog and trace schema.
+
+Fuzzing: `drf fuzz` runs the in-tree deterministic wire-protocol
+fuzzer against every decoder that consumes untrusted bytes (frame
+reader, coordinator/serving/objstore codecs, JSON, manifests, DRFC
+headers — `--target all` or a comma-separated subset of the names
+printed by a run). The whole run is a pure function of `--seed` and
+the corpus: identical output across reruns, which is what the CI
+fuzz-smoke job asserts. Failures print the exact case seed and
+mutation trace, `--minimize` shrinks the failing frame, `--repro-out
+DIR` writes it to disk, and `--corpus DIR` swaps in an alternative
+seed-frame directory (default: the built-in encoder corpus, golden
+copies in rust/tests/corpus/). See docs/fuzzing.md.
 ";
 
 /// Build the dataset described by the common data flags.
@@ -591,6 +612,39 @@ fn start_trace_out(path: Option<&str>) -> Result<()> {
     if let Some(path) = path {
         drf::telemetry::set_trace_out(std::path::Path::new(path))
             .with_context(|| format!("opening trace sink {path}"))?;
+    }
+    Ok(())
+}
+
+/// `drf fuzz [--target T] [--seed S] [--iters N] [--corpus DIR]
+/// [--minimize] [--repro-out DIR]`: run the deterministic decoder
+/// fuzzer (see [`drf::fuzz`]). Exits nonzero on any finding so CI can
+/// gate on it.
+fn cmd_fuzz(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv, FUZZ_FLAGS)?;
+    let selector = args.get_string("target", "all");
+    let opts = drf::fuzz::FuzzOptions {
+        targets: drf::fuzz::Target::parse_selector(&selector)?,
+        seed: args.get_u64("seed", 42)?,
+        iters: args.get_u64("iters", 10_000)?,
+        corpus_dir: args.get("corpus").map(std::path::PathBuf::from),
+        minimize: args.get_bool("minimize"),
+        repro_dir: args.get("repro-out").map(std::path::PathBuf::from),
+    };
+    // Panicking decoders are exactly what the run hunts for; the
+    // default hook would spray a backtrace per caught case. Silence it
+    // for the run, restore it after.
+    let default_hook = std::panic::take_hook();
+    std::panic::set_hook(Box::new(|_| {}));
+    let report = drf::fuzz::run(&opts);
+    std::panic::set_hook(default_hook);
+    let report = report?;
+    for line in report.lines() {
+        println!("{line}");
+    }
+    let findings = report.num_findings();
+    if findings > 0 {
+        bail!("fuzzing found {findings} decoder invariant violation(s)");
     }
     Ok(())
 }
@@ -1070,6 +1124,7 @@ mod tests {
         assert_flags_documented("metrics", METRICS_FLAGS);
         assert_flags_documented("trace", TRACE_FLAGS);
         assert_flags_documented("supervise", SUPERVISE_FLAGS);
+        assert_flags_documented("fuzz", FUZZ_FLAGS);
         // Extra flags the derived commands add on top of TRAIN_FLAGS.
         assert_flags_documented("shard/generate", &["out-dir", "chunk-rows"]);
         assert_flags_documented("shard", &["replicas"]);
@@ -1092,6 +1147,7 @@ mod tests {
             "predict",
             "metrics",
             "trace",
+            "fuzz",
             "info",
         ] {
             assert!(

@@ -173,6 +173,7 @@ impl Json {
         let mut p = Parser {
             bytes: input.as_bytes(),
             pos: 0,
+            depth: 0,
         };
         p.skip_ws();
         let v = p.value()?;
@@ -215,9 +216,17 @@ fn write_str(s: &str, out: &mut String) {
     out.push('"');
 }
 
+/// Maximum container nesting the parser accepts. The recursive-descent
+/// parser's stack frames are proportional to nesting depth, so without
+/// a cap a ~100 KiB document of `[[[[…` from an untrusted peer
+/// overflows the thread stack — an uncatchable abort, not an `Err`
+/// (fuzz finding). Real manifests nest 4–5 levels.
+const MAX_DEPTH: usize = 128;
+
 struct Parser<'a> {
     bytes: &'a [u8],
     pos: usize,
+    depth: usize,
 }
 
 impl<'a> Parser<'a> {
@@ -250,8 +259,21 @@ impl<'a> Parser<'a> {
 
     fn value(&mut self) -> Result<Json> {
         match self.peek()? {
-            b'{' => self.object(),
-            b'[' => self.array(),
+            b'{' | b'[' => {
+                self.depth += 1;
+                ensure!(
+                    self.depth <= MAX_DEPTH,
+                    "JSON nested deeper than {MAX_DEPTH} levels at byte {}",
+                    self.pos
+                );
+                let v = if self.peek()? == b'{' {
+                    self.object()
+                } else {
+                    self.array()
+                }?;
+                self.depth -= 1;
+                Ok(v)
+            }
             b'"' => Ok(Json::Str(self.string()?)),
             b't' => self.keyword("true", Json::Bool(true)),
             b'f' => self.keyword("false", Json::Bool(false)),
@@ -384,6 +406,11 @@ impl<'a> Parser<'a> {
         let v: f64 = text
             .parse()
             .with_context(|| format!("bad number '{text}'"))?;
+        // `f64::from_str` turns overflowing literals (`1e999`) into
+        // infinity; accepting that would silently rewrite the value to
+        // `null` on the next save (fuzz finding). JSON has no
+        // non-finite numbers — reject instead.
+        ensure!(v.is_finite(), "number '{text}' out of range");
         Ok(Json::Num(v))
     }
 }

@@ -46,6 +46,21 @@ impl CaseRng {
         self.rng.next_f64() < p_true
     }
 
+    /// A full-range 64-bit value (wire tests want forged bit patterns
+    /// and extreme ids, not just bounded indices).
+    pub fn raw_u64(&mut self) -> u64 {
+        self.rng.next_u64()
+    }
+
+    /// An ASCII string of length in [lo, hi] (printable range, so it
+    /// survives any text codec under test unchanged).
+    pub fn string(&mut self, lo: usize, hi: usize) -> String {
+        let n = self.usize(lo, hi);
+        (0..n)
+            .map(|_| char::from_u32(0x20 + self.u64(0x5f) as u32).unwrap())
+            .collect()
+    }
+
     /// A vector of length in [lo, hi] filled by `gen`.
     pub fn vec<T>(&mut self, lo: usize, hi: usize, mut gen: impl FnMut(&mut Self) -> T) -> Vec<T> {
         let n = self.usize(lo, hi);
@@ -101,6 +116,9 @@ mod tests {
             assert!(vec.len() <= 4);
             let c = *rng.choose(&[10, 20, 30]);
             assert!([10, 20, 30].contains(&c));
+            let s = rng.string(2, 6);
+            assert!((2..=6).contains(&s.len()));
+            assert!(s.chars().all(|ch| (' '..='~').contains(&ch)), "{s:?}");
         });
     }
 

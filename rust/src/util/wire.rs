@@ -162,7 +162,10 @@ impl<'a> Reader<'a> {
     }
 
     pub fn u64_vec(&mut self) -> Result<Vec<u64>> {
-        let n = self.len_u32()?;
+        // Strict bound: the claimed u64s must actually fit in the rest
+        // of the frame (fuzz finding: the loose `len_u32` bound let a
+        // 20-byte frame claim a 64×-larger vec before the read failed).
+        let n = self.len_checked(8)?;
         (0..n).map(|_| self.u64()).collect()
     }
 

@@ -1,0 +1,342 @@
+#!/usr/bin/env python3
+"""Offline mirror of the `drf` encoders for the checked-in fuzz corpus.
+
+The authoritative generator is the Rust test
+`drf::fuzz::corpus::tests::golden_corpus_files_match_builtin_seeds`
+run with `DRF_UPDATE_CORPUS=1 cargo test` — it writes these files from
+the real encoders. This script reproduces the exact same bytes without
+a Rust toolchain (useful for bootstrapping the corpus and for auditing
+a diff by eye); the golden test remains the arbiter. Byte layouts are
+mirrored from:
+
+  * rust/src/util/wire.rs          (scalars, strings, frames, trailer)
+  * rust/src/coordinator/wire.rs   (request/response bodies)
+  * rust/src/serve/wire.rs         (DRFS header + bodies)
+  * rust/src/data/objserve.rs      (DRFO header + bodies)
+  * rust/src/util/json.rs          (compact, sorted-key JSON)
+  * rust/src/fuzz/corpus.rs        (the sample messages themselves)
+
+Run from anywhere: files land next to this script.
+"""
+
+import struct
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent
+
+
+def u8(v):
+    return struct.pack("<B", v)
+
+
+def u32(v):
+    return struct.pack("<I", v)
+
+
+def u64(v):
+    return struct.pack("<Q", v)
+
+
+def f32(v):
+    return struct.pack("<f", v)
+
+
+def f64(v):
+    return struct.pack("<d", v)
+
+
+def wire_str(s):
+    b = s.encode("utf-8")
+    return u32(len(b)) + b
+
+
+def u64_slice(values):
+    return u32(len(values)) + b"".join(u64(v) for v in values)
+
+
+def boolean(v):
+    return u8(1 if v else 0)
+
+
+TRACE_CTX = u64(0x1122_3344_5566_7788) + u64(0x99AA_BBCC_DDEE_FF00)
+
+
+def bitmap(length, set_bits):
+    # put_bitmap: u32 len, then 8 bits per byte, LSB-first.
+    out = u32(length)
+    byte = 0
+    for i in range(length):
+        if i in set_bits:
+            byte |= 1 << (i % 8)
+        if i % 8 == 7:
+            out += u8(byte)
+            byte = 0
+    if length % 8 != 0:
+        out += u8(byte)
+    return out
+
+
+def condition_num_le(feature, threshold):
+    return u8(0) + u32(feature) + f32(threshold)
+
+
+def condition_cat_in(feature, arity, values):
+    # CategorySet::iter yields members in ascending order.
+    vs = sorted(values)
+    return u8(1) + u32(feature) + u32(arity) + u32(len(vs)) + b"".join(
+        u32(v) for v in vs
+    )
+
+
+def time_sync_reply():
+    # sample_time_sync(): role "worker", shard Some(1), pid 4242,
+    # t_us 1_234_567.
+    return wire_str("worker") + boolean(True) + u64(1) + u64(4242) + u64(1_234_567)
+
+
+def sample_candidate():
+    return (
+        condition_cat_in(3, 6, [1, 4])
+        + f64(0.25)
+        + u64_slice([3, 1])
+        + u64_slice([2, 4])
+    )
+
+
+SAMPLE_BITMAP = bitmap(10, {0, 3, 4, 9})
+
+
+# ---------------- coordinator requests ----------------
+
+def coord_requests():
+    hello = (
+        u8(7)
+        + u32(4)  # PROTOCOL_VERSION
+        + u32(0)
+        + u32(2)
+        + u32(1)
+        + u64(42)
+        + wire_str("poisson")
+        + wire_str("sqrt")
+        + u32(8)
+        + wire_str("gini")
+        + boolean(True)
+        + f64(0.01)
+        + wire_str("exact")
+        + u64(65_536)
+        + u64(3)
+    )
+    find_splits = (
+        u8(2)
+        + u32(1)
+        + u32(2)
+        + u32(2)
+        + u32(1) + boolean(False) + u64_slice([5, 3])
+        + u32(2) + boolean(True) + u64_slice([2, 2])
+        + u32(2) + u32(0) + u32(2)
+    )
+    eval_conditions = (
+        u8(3)
+        + u32(1)
+        + u32(2)
+        + u32(2)
+        + u32(1) + condition_num_le(0, 0.5)
+        + u32(2) + condition_cat_in(3, 6, [1, 4])
+    )
+    level_update = (
+        u8(4)
+        + u32(1)
+        + u32(2)
+        + u32(3)
+        + u8(0)  # Closed
+        + u8(1) + SAMPLE_BITMAP + boolean(True) + boolean(False)  # Split
+        + u8(2)  # Detached
+    )
+    materialize = (
+        u8(8)
+        + u32(1)
+        + u32(3)
+        + boolean(True)  # want_meta (written before ranks/columns)
+        + u32(2) + u32(1) + u32(2)
+        + u32(2) + u32(0) + u32(1)
+    )
+    seeds = {
+        "start_tree": u8(0) + u32(1),
+        "root_stats": u8(1) + u32(1),
+        "find_splits": find_splits,
+        "eval_conditions": eval_conditions,
+        "level_update": level_update,
+        "finish_tree": u8(5) + u32(1),
+        "shutdown": u8(6),
+        "hello": hello,
+        "materialize": materialize,
+        "subtree_done": u8(9) + u32(1) + u32(5) + u64(100) + u32(7),
+        "time_sync": u8(10),
+    }
+    seeds["hello_traced"] = hello + TRACE_CTX
+    return seeds
+
+
+def coord_responses():
+    materialized = (
+        u8(6)
+        + u32(1)  # one leaf
+        + u64(3)
+        + u32(3) + u32(0) + u32(1) + u32(1)  # labels
+        + u32(3) + u8(1) + u8(1) + u8(2)  # bags
+        + u32(2)  # columns
+        + u8(0) + u32(3) + f32(0.5) + f32(1.5) + f32(2.5)
+        + u8(1) + u32(4) + u32(3) + u32(0) + u32(3) + u32(1)
+    )
+    return {
+        "ok": u8(0),
+        "root_stats": u8(1) + u64_slice([60, 40]),
+        "splits": u8(2) + u32(2) + u8(0) + u8(1) + sample_candidate(),
+        "evals": u8(3) + u32(1) + u32(1) + SAMPLE_BITMAP,
+        "err": u8(4) + wire_str("boom"),
+        "hello": u8(5) + u32(4) + u32(0) + u64(120) + u32(2)
+        + u32(3) + u32(0) + u32(2) + u32(4),
+        "materialized": materialized,
+        "time_sync": u8(7) + time_sync_reply(),
+    }
+
+
+# ---------------- serving ----------------
+
+def serve_header(request_id=7):
+    return b"DRFS" + u8(1) + u64(request_id)
+
+
+def sample_batch_columns():
+    return (
+        u32(2)
+        + u8(0) + u32(3) + f32(0.1) + f32(0.2) + f32(0.3)
+        + u8(1) + u32(3) + u32(3) + u32(0) + u32(2) + u32(1)
+    )
+
+
+def serve_requests():
+    score = serve_header() + u8(0) + sample_batch_columns()
+    seeds = {
+        "score": score,
+        "classify": serve_header() + u8(1) + sample_batch_columns(),
+        "model_info": serve_header() + u8(2),
+        "reload": serve_header() + u8(3) + boolean(True) + wire_str("model.json"),
+        "time_sync": serve_header() + u8(4),
+    }
+    seeds["score_traced"] = score + TRACE_CTX
+    return seeds
+
+
+def serve_responses():
+    return {
+        "scores": serve_header() + u8(0) + u32(3) + f64(0.25) + f64(0.75) + f64(0.5),
+        "classes": serve_header() + u8(1) + u32(3) + u32(0) + u32(1) + u32(1),
+        "info": serve_header() + u8(2) + u32(10) + u32(2) + u64(321),
+        "reloaded": serve_header() + u8(3) + u32(10),
+        "err": serve_header() + u8(4) + wire_str("nope"),
+        "time_sync": serve_header() + u8(5) + time_sync_reply(),
+    }
+
+
+# ---------------- objstore ----------------
+
+OBJ_HEADER = b"DRFO" + u32(1)
+
+
+def obj_requests():
+    read = (
+        OBJ_HEADER + u8(2) + wire_str("shard_0/col_0.drfc") + u64(20) + u32(4096)
+    )
+    return {
+        "stat": OBJ_HEADER + u8(1) + wire_str("shard_0/col_0.drfc"),
+        "read": read,
+        "time_sync": OBJ_HEADER + u8(3),
+        "read_traced": read + TRACE_CTX,
+    }
+
+
+def obj_responses():
+    return {
+        "stat": OBJ_HEADER + u8(1) + u64(81_920),
+        "data": OBJ_HEADER + u8(2) + u32(32) + b"\xab" * 32,
+        "time_sync": OBJ_HEADER + u8(3) + time_sync_reply(),
+        "err": OBJ_HEADER + u8(0xFF) + wire_str("no such object"),
+    }
+
+
+# ---------------- manifests (sorted-key compact JSON) ----------------
+
+SHARD_MANIFEST = (
+    '{"columns":['
+    '{"checksum":"123456789abcdef0","file":"col_0.drfc","index":0,'
+    '"sorted_checksum":"0fedcba987654321","sorted_file":"col_0.sorted.drfc"},'
+    '{"checksum":"1111222233334444","file":"col_1.drfc","index":1}],'
+    '"format":"drf-shard-v1",'
+    '"labels_checksum":"5555666677778888",'
+    '"labels_file":"labels.drfc",'
+    '"num_splitters":2,'
+    '"protocol":4,'
+    '"redundancy":1,'
+    '"schema":{"columns":[{"name":"f0","type":"numerical"},'
+    '{"arity":5,"name":"f1","type":"categorical"}],"num_classes":2,"rows":120},'
+    '"shard":0}'
+).encode()
+
+CLUSTER_MANIFEST = (
+    '{"format":"drf-cluster-v1",'
+    '"num_classes":2,'
+    '"num_features":2,'
+    '"num_splitters":2,'
+    '"objstores":["127.0.0.1:9001"],'
+    '"protocol":4,'
+    '"redundancy":1,'
+    '"rows":120,'
+    '"shards":[{"columns":[0],"dir":"shard_0","shard":0},'
+    '{"columns":[1],"dir":"shard_1","shard":1}],'
+    '"version":1,'
+    '"workers":["127.0.0.1:7001","127.0.0.1:7002"]}'
+).encode()
+
+
+# ---------------- assembly ----------------
+
+def frame(body):
+    return u32(len(body)) + body
+
+
+CORPUS = {
+    "frame": {"short": frame(b"hello frame body"), "empty": frame(b"")},
+    "coord-request": coord_requests(),
+    "coord-response": coord_responses(),
+    "serve-request": serve_requests(),
+    "serve-response": serve_responses(),
+    "obj-request": obj_requests(),
+    "obj-response": obj_responses(),
+    "json": {
+        "nested": b'{"name":"drf","nums":[1,2.5,-3e-2],"flags":{"a":true,"b":null},'
+        b'"deep":[[1],[2,[3]]]}',
+        "escapes": '{"s":"he\\"llo\\nA wörld\\\\"}'.encode("utf-8"),
+        "scalar": b"1234567890.5",
+    },
+    "shard-manifest": {"shard_manifest": SHARD_MANIFEST},
+    "cluster-manifest": {"cluster_manifest": CLUSTER_MANIFEST},
+    "drfc-header": {
+        "v1_numerical": b"DRFC" + u32(1) + u32(1) + u64(12) + b"\x00" * 48,
+        "v2_sorted_chunked": b"DRFC" + u32(2) + u32(3) + u64(10)
+        + u32(2) + u32(6) + u32(4) + b"\x00" * 80,
+    },
+}
+
+
+def main():
+    for target, seeds in CORPUS.items():
+        directory = ROOT / target
+        directory.mkdir(parents=True, exist_ok=True)
+        for name, data in seeds.items():
+            (directory / f"{name}.bin").write_bytes(data)
+            print(f"{target}/{name}.bin: {len(data)} bytes")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,370 @@
+//! Regression tests for decoder bugs found by the in-tree fuzzer
+//! (`drf fuzz`, see `drf::fuzz` and docs/fuzzing.md) plus the
+//! negative-path manifest cases. Every test pins the fixed behaviour:
+//! a descriptive `Err` — never a panic, never an unbounded allocation.
+//!
+//! Each forged frame is built inline from the documented wire layout
+//! (it *is* the checked-in repro, in constructor form), and every case
+//! is additionally pushed through `drf::fuzz::run_one`, which asserts
+//! the full invariant: no panic under `catch_unwind`, peak live heap
+//! within `alloc_cap`.
+
+use drf::cluster::manifest::{ClusterManifest, ShardColumn, ShardEntry, ShardManifest};
+use drf::coordinator::wire as coord;
+use drf::data::disk::Header;
+use drf::data::schema::{ColumnSpec, Schema};
+use drf::fuzz::{alloc_cap, measure, run_one, Target};
+use drf::util::json::Json;
+use drf::util::wire::{read_frame, Reader, Writer};
+
+/// The invariant every fixed bug must now satisfy on its repro input.
+fn assert_clean(target: Target, input: &[u8]) {
+    if let Err(kind) = run_one(target, input) {
+        panic!("{} violated the invariant on a repro input: {kind:?}", target.name());
+    }
+}
+
+/// Corrupt a serialized manifest by exact-text substitution. Asserts
+/// the needle is present so schema drift fails loudly instead of
+/// silently testing nothing.
+fn corrupt(text: &str, needle: &str, replacement: &str) -> String {
+    assert!(
+        text.contains(needle),
+        "serialized manifest no longer contains {needle:?}: {text}"
+    );
+    text.replace(needle, replacement)
+}
+
+fn sample_shard_manifest() -> ShardManifest {
+    ShardManifest {
+        shard: 0,
+        num_splitters: 2,
+        redundancy: 1,
+        rows: 120,
+        schema: Schema::new(
+            vec![ColumnSpec::numerical("f0"), ColumnSpec::categorical("f1", 5)],
+            2,
+        ),
+        columns: vec![
+            ShardColumn {
+                index: 0,
+                file: "col_0.drfc".into(),
+                checksum: 0x1234_5678_9ABC_DEF0,
+                sorted_file: Some("col_0.sorted.drfc".into()),
+                sorted_checksum: Some(0x0FED_CBA9_8765_4321),
+            },
+            ShardColumn {
+                index: 1,
+                file: "col_1.drfc".into(),
+                checksum: 0x1111_2222_3333_4444,
+                sorted_file: None,
+                sorted_checksum: None,
+            },
+        ],
+        labels_file: "labels.drfc".into(),
+        labels_checksum: 0x5555_6666_7777_8888,
+    }
+}
+
+fn sample_cluster_manifest() -> ClusterManifest {
+    ClusterManifest {
+        num_splitters: 2,
+        redundancy: 1,
+        rows: 120,
+        num_features: 2,
+        num_classes: 2,
+        shards: vec![
+            ShardEntry {
+                shard: 0,
+                dir: "shard_0".into(),
+                columns: vec![0],
+            },
+            ShardEntry {
+                shard: 1,
+                dir: "shard_1".into(),
+                columns: vec![1],
+            },
+        ],
+        workers: vec!["127.0.0.1:7001".into(), "127.0.0.1:7002".into()],
+        version: 1,
+        objstores: vec!["127.0.0.1:9001".into()],
+    }
+}
+
+fn parse_shard(text: &str) -> drf::Result<ShardManifest> {
+    ShardManifest::from_json(&Json::parse(text)?)
+}
+
+fn parse_cluster(text: &str) -> drf::Result<ClusterManifest> {
+    ClusterManifest::from_json(&Json::parse(text)?)
+}
+
+// ---------------------------------------------------------------------
+// JSON parser
+// ---------------------------------------------------------------------
+
+/// Fuzzer finding: unbounded recursion in `Json::parse` — a few KB of
+/// `[[[[…` blew the stack, which is an uncatchable process abort, not
+/// a panic a server can survive. Fixed with an explicit depth cap.
+#[test]
+fn json_deep_nesting_is_err_not_stack_overflow() {
+    let bomb = "[".repeat(4000);
+    assert!(Json::parse(&bomb).is_err());
+    assert_clean(Target::Json, bomb.as_bytes());
+
+    // The cap is generous: a hundred levels of real nesting still parse.
+    let deep_ok = format!("{}{}", "[".repeat(100), "]".repeat(100));
+    assert!(Json::parse(&deep_ok).is_ok());
+    let too_deep = format!("{}{}", "[".repeat(200), "]".repeat(200));
+    assert!(Json::parse(&too_deep).is_err());
+}
+
+/// Fuzzer finding: `1e999` parsed to `f64::INFINITY`, which the writer
+/// then serialized as `null` — silent data corruption on roundtrip.
+/// Non-finite numbers are now a parse error.
+#[test]
+fn json_non_finite_number_is_rejected() {
+    assert!(Json::parse("1e999").is_err());
+    assert!(Json::parse("[1e999]").is_err());
+    assert!(Json::parse("-1e999").is_err());
+    // Large-but-finite still parses.
+    assert!(Json::parse("1e300").is_ok());
+    assert_clean(Target::Json, b"[1e999]");
+}
+
+// ---------------------------------------------------------------------
+// Coordinator wire codec
+// ---------------------------------------------------------------------
+
+/// Fuzzer finding: a `CatIn` condition whose wire member value is >=
+/// its declared arity was handed to `CategorySet::insert`, which
+/// indexes its word array unchecked — an out-of-bounds write target in
+/// release builds. The decoder now validates members against the arity.
+#[test]
+fn catin_value_past_arity_is_err() {
+    let mut w = Writer::new();
+    w.u8(3); // EvalConditions
+    w.u32(1); // tree
+    w.u32(0); // depth
+    w.u32(1); // one condition
+    w.u32(1); // rank
+    w.u8(1); // CatIn
+    w.u32(0); // feature
+    w.u32(4); // arity
+    w.u32(1); // one member
+    w.u32(9); // 9 >= arity 4
+    let frame = w.into_bytes();
+    let err = coord::decode_request_traced(&frame).unwrap_err();
+    assert!(err.to_string().contains("arity"), "{err}");
+    assert_clean(Target::CoordRequest, &frame);
+}
+
+/// Fuzzer finding: `CategorySet::empty(arity)` allocates `⌈arity/64⌉`
+/// words up front, so a 30-byte frame forging `arity = u32::MAX` cost
+/// 512 MiB. Dense-set allocations are now charged to a per-frame
+/// budget that scales with the frame length.
+#[test]
+fn catin_forged_arity_allocation_bounded() {
+    let mut w = Writer::new();
+    w.u8(3); // EvalConditions
+    w.u32(1); // tree
+    w.u32(0); // depth
+    w.u32(1); // one condition
+    w.u32(1); // rank
+    w.u8(1); // CatIn
+    w.u32(0); // feature
+    w.u32(u32::MAX); // forged arity: wants 512 MiB of set words
+    w.u32(0); // no members
+    let frame = w.into_bytes();
+    let (res, peak) = measure(|| coord::decode_request_traced(&frame).map(|_| ()));
+    let err = res.unwrap_err();
+    assert!(err.to_string().contains("budget"), "{err}");
+    assert!(
+        peak <= alloc_cap(frame.len()),
+        "rejecting the frame still allocated {peak} bytes"
+    );
+    assert_clean(Target::CoordRequest, &frame);
+}
+
+/// Fuzzer finding: collection sites trusted their `u32` length prefix
+/// under the loose "one byte per element" bound, so a tiny frame
+/// claiming 2^31 leaves reserved gigabytes before the first element
+/// read failed. Every site now bounds the count by its minimum
+/// per-element wire size.
+#[test]
+fn forged_length_prefix_is_err_not_huge_reserve() {
+    // FindSplits claiming 2^31 leaves in a 13-byte frame.
+    let mut w = Writer::new();
+    w.u8(2);
+    w.u32(1);
+    w.u32(0);
+    w.u32(0x7FFF_FFFF);
+    let frame = w.into_bytes();
+    let (res, peak) = measure(|| coord::decode_request_traced(&frame).map(|_| ()));
+    assert!(res.is_err());
+    assert!(peak <= alloc_cap(frame.len()), "peak {peak}");
+    assert_clean(Target::CoordRequest, &frame);
+
+    // Materialized response claiming 2^31 leaves.
+    let mut w = Writer::new();
+    w.u8(6);
+    w.u32(0x7FFF_FFFF);
+    let frame = w.into_bytes();
+    let (res, peak) = measure(|| coord::decode_response(&frame).map(|_| ()));
+    assert!(res.is_err());
+    assert!(peak <= alloc_cap(frame.len()), "peak {peak}");
+    assert_clean(Target::CoordResponse, &frame);
+}
+
+/// Fuzzer finding: `Reader::u64_vec` used the loose length bound (8
+/// declared bytes per element admitted), so a forged count reserved 8×
+/// the frame size. Now bounded by the strict 8-bytes-per-element rule.
+#[test]
+fn u64_vec_forged_count_is_err() {
+    let mut w = Writer::new();
+    w.u32(0xFFFF_FFFF); // count
+    w.u64(7); // only one element present
+    let bytes = w.into_bytes();
+    let mut r = Reader::new(&bytes);
+    let (res, peak) = measure(|| r.u64_vec().map(|_| ()));
+    assert!(res.is_err());
+    assert!(peak <= alloc_cap(bytes.len()), "peak {peak}");
+}
+
+// ---------------------------------------------------------------------
+// Frame reader and DRFC headers
+// ---------------------------------------------------------------------
+
+/// A length prefix beyond `MAX_FRAME_BYTES`, and one promising more
+/// body than the stream holds, must both fail without the reader
+/// allocating anything near the declared length.
+#[test]
+fn frame_forged_length_prefix_is_bounded() {
+    let oversize = 0xFFFF_FFFFu32.to_le_bytes().to_vec();
+    let (res, peak) = measure(|| read_frame(&mut std::io::Cursor::new(&oversize)).map(|_| ()));
+    assert!(res.is_err());
+    assert!(peak <= alloc_cap(oversize.len()), "peak {peak}");
+    assert_clean(Target::Frame, &oversize);
+
+    let mut truncated = 1_000_000u32.to_le_bytes().to_vec();
+    truncated.extend_from_slice(b"short body");
+    let (res, peak) = measure(|| read_frame(&mut std::io::Cursor::new(&truncated)).map(|_| ()));
+    assert!(res.is_err());
+    assert!(peak <= alloc_cap(truncated.len()), "peak {peak}");
+    assert_clean(Target::Frame, &truncated);
+}
+
+/// Fuzzer finding: a DRFC v2 header forging `rows = u64::MAX` slips
+/// past the `chunks <= rows` sanity bound, and the forged chunk count
+/// then drove a multi-GiB `Vec::with_capacity` before the first chunk
+/// read could fail. The reserve is now clamped.
+#[test]
+fn drfc_forged_rows_chunk_table_bounded() {
+    let mut b = Vec::new();
+    b.extend_from_slice(b"DRFC");
+    b.extend_from_slice(&2u32.to_le_bytes()); // v2
+    b.extend_from_slice(&1u32.to_le_bytes()); // kind Numerical
+    b.extend_from_slice(&u64::MAX.to_le_bytes()); // forged rows
+    b.extend_from_slice(&0x4000_0000u32.to_le_bytes()); // 2^30 chunks, none present
+    let (res, peak) = measure(|| Header::parse(&b).map(|_| ()));
+    assert!(res.is_err());
+    assert!(peak <= alloc_cap(b.len()), "peak {peak}");
+    assert_clean(Target::DrfcHeader, &b);
+}
+
+// ---------------------------------------------------------------------
+// Manifest negative paths (ShardManifest / cluster.json)
+// ---------------------------------------------------------------------
+
+#[test]
+fn shard_manifest_truncated_json_is_err() {
+    let text = sample_shard_manifest().to_json().to_string();
+    let cut = &text[..text.len() / 2];
+    assert!(Json::parse(cut).is_err());
+    assert_clean(Target::ShardManifest, cut.as_bytes());
+}
+
+#[test]
+fn shard_manifest_wrong_version_type_is_err() {
+    let text = sample_shard_manifest().to_json().to_string();
+    let bad = corrupt(&text, "\"protocol\":4", "\"protocol\":\"4\"");
+    assert!(parse_shard(&bad).is_err());
+    assert_clean(Target::ShardManifest, bad.as_bytes());
+}
+
+/// Fuzzer finding: checksum strings were parsed at any width, so a
+/// truncated hex string silently became a different checksum (and
+/// re-encoded differently). Exactly 16 hex digits are now required.
+#[test]
+fn shard_manifest_wrong_width_checksum_is_err() {
+    let text = sample_shard_manifest().to_json().to_string();
+    let bad = corrupt(
+        &text,
+        "\"labels_checksum\":\"5555666677778888\"",
+        "\"labels_checksum\":\"5555\"",
+    );
+    let err = parse_shard(&bad).unwrap_err();
+    assert!(err.to_string().contains("16"), "{err}");
+    assert_clean(Target::ShardManifest, bad.as_bytes());
+}
+
+/// Fuzzer finding: `sorted_file` and `sorted_checksum` were read
+/// independently, so half a pair decoded to a manifest the encoder
+/// cannot reproduce (to_json drops a half pair) — a roundtrip
+/// divergence. Both-or-neither is now enforced.
+#[test]
+fn shard_manifest_half_sorted_pair_is_err() {
+    let text = sample_shard_manifest().to_json().to_string();
+    let bad = corrupt(&text, "\"sorted_checksum\":\"0fedcba987654321\",", "");
+    let err = parse_shard(&bad).unwrap_err();
+    assert!(err.to_string().contains("sorted"), "{err}");
+    assert_clean(Target::ShardManifest, bad.as_bytes());
+}
+
+#[test]
+fn shard_manifest_duplicate_column_index_is_err() {
+    let mut m = sample_shard_manifest();
+    m.columns[1].index = 0; // duplicates column 0
+    let text = m.to_json().to_string();
+    let err = parse_shard(&text).unwrap_err();
+    assert!(err.to_string().contains("ascending"), "{err}");
+    assert_clean(Target::ShardManifest, text.as_bytes());
+}
+
+#[test]
+fn shard_manifest_bad_schema_is_err() {
+    let text = sample_shard_manifest().to_json().to_string();
+    // num_classes < 2 previously hit Schema::new's assert (panic).
+    let bad = corrupt(&text, "\"num_classes\":2", "\"num_classes\":0");
+    assert!(parse_shard(&bad).is_err());
+    assert_clean(Target::ShardManifest, bad.as_bytes());
+    // Zero-arity categorical columns are unusable downstream.
+    let bad = corrupt(&text, "\"arity\":5", "\"arity\":0");
+    assert!(parse_shard(&bad).is_err());
+    assert_clean(Target::ShardManifest, bad.as_bytes());
+}
+
+#[test]
+fn cluster_manifest_duplicate_shard_ids_is_err() {
+    let text = sample_cluster_manifest().to_json().to_string();
+    let bad = corrupt(&text, "\"shard\":1", "\"shard\":0");
+    let err = parse_cluster(&bad).unwrap_err();
+    assert!(err.to_string().contains("shard"), "{err}");
+    assert_clean(Target::ClusterManifest, bad.as_bytes());
+}
+
+#[test]
+fn cluster_manifest_wrong_version_type_is_err() {
+    let text = sample_cluster_manifest().to_json().to_string();
+    let bad = corrupt(&text, "\"version\":1", "\"version\":\"1\"");
+    assert!(parse_cluster(&bad).is_err());
+    assert_clean(Target::ClusterManifest, bad.as_bytes());
+}
+
+#[test]
+fn cluster_manifest_truncated_json_is_err() {
+    let text = sample_cluster_manifest().to_json().to_string();
+    let cut = &text[..text.len() - 3];
+    assert!(Json::parse(cut).is_err());
+    assert_clean(Target::ClusterManifest, cut.as_bytes());
+}

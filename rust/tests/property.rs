@@ -4,14 +4,24 @@
 //! the coordinator depends on.
 
 use drf::classlist::{width_for, ClassList};
-use drf::coordinator::messages::{Bitmap, LeafOutcome, LevelUpdate};
+use drf::coordinator::messages::{
+    Bitmap, EvalQuery, EvalResult, LeafInfo, LeafOutcome, LevelUpdate, MaterializeQuery,
+    MaterializedColumn, MaterializedLeaf, MaterializedLeaves, PartialSupersplit, SubtreeDone,
+    SupersplitQuery,
+};
 use drf::coordinator::splitter::apply_update_to_class_list;
+use drf::coordinator::wire as coord;
 use drf::data::column::{Column, SortedEntry};
 use drf::data::io_stats::IoStats;
+use drf::data::objserve as obj;
 use drf::data::sort::ExternalSorter;
 use drf::metrics::auc;
+use drf::serve::wire as serve;
+use drf::splits::SplitCandidate;
+use drf::telemetry::{TimeSyncReply, TraceContext};
+use drf::tree::{CategorySet, Condition};
 use drf::util::json::Json;
-use drf::util::proptest::run_cases;
+use drf::util::proptest::{run_cases, CaseRng};
 
 #[test]
 fn classlist_set_get_random() {
@@ -259,4 +269,308 @@ fn classlist_rewrite_histogram_conservation() {
             old % (new_open + 1)
         }
     }
+}
+
+// ---------------------------------------------------------------------
+// Wire codecs: random messages across all three protocols
+// ---------------------------------------------------------------------
+
+fn random_ctx(rng: &mut CaseRng) -> Option<TraceContext> {
+    rng.bool(0.5).then(|| TraceContext {
+        trace_id: rng.raw_u64(),
+        parent_span: rng.raw_u64(),
+    })
+}
+
+fn random_bitmap(rng: &mut CaseRng) -> Bitmap {
+    let n = rng.usize(0, 40);
+    let mut b = Bitmap::with_len(n);
+    for i in 0..n {
+        b.set(i, rng.bool(0.5));
+    }
+    b
+}
+
+fn random_condition(rng: &mut CaseRng) -> Condition {
+    if rng.bool(0.5) {
+        Condition::NumLe {
+            feature: rng.usize(0, 1000),
+            threshold: rng.f32(),
+        }
+    } else {
+        let arity = rng.usize(1, 90) as u32;
+        let values: Vec<u32> = rng.vec(0, 8, |r| r.u64(arity as u64) as u32);
+        Condition::CatIn {
+            feature: rng.usize(0, 1000),
+            set: CategorySet::from_values(arity, values),
+        }
+    }
+}
+
+fn random_candidate(rng: &mut CaseRng) -> SplitCandidate {
+    SplitCandidate {
+        condition: random_condition(rng),
+        gain: rng.f64(),
+        left_counts: rng.vec(0, 4, |r| r.raw_u64()),
+        right_counts: rng.vec(0, 4, |r| r.raw_u64()),
+    }
+}
+
+fn random_time_sync(rng: &mut CaseRng) -> TimeSyncReply {
+    TimeSyncReply {
+        role: rng.string(0, 8),
+        shard: rng.bool(0.5).then(|| rng.raw_u64()),
+        pid: rng.raw_u64(),
+        t_us: rng.raw_u64(),
+    }
+}
+
+fn random_coord_request(rng: &mut CaseRng) -> coord::Request {
+    match rng.usize(0, 10) {
+        0 => coord::Request::StartTree(rng.u64(1 << 20) as u32),
+        1 => coord::Request::RootStats(rng.u64(1 << 20) as u32),
+        2 => coord::Request::FindSplits(SupersplitQuery {
+            tree: rng.u64(100) as u32,
+            depth: rng.u64(30) as u32,
+            leaves: rng.vec(0, 4, |r| LeafInfo {
+                node_id: r.u64(1 << 20) as u32,
+                totals: r.vec(0, 4, |r| r.raw_u64()),
+                detached: r.bool(0.3),
+            }),
+            assigned_columns: rng.vec(0, 5, |r| r.usize(0, 500)),
+        }),
+        3 => coord::Request::EvalConditions(EvalQuery {
+            tree: rng.u64(100) as u32,
+            depth: rng.u64(30) as u32,
+            conditions: rng.vec(0, 4, |r| (r.u64(1 << 16) as u32, random_condition(r))),
+        }),
+        4 => coord::Request::LevelUpdate(LevelUpdate {
+            tree: rng.u64(100) as u32,
+            depth: rng.u64(30) as u32,
+            outcomes: rng.vec(0, 4, |r| match r.usize(0, 2) {
+                0 => LeafOutcome::Closed,
+                1 => LeafOutcome::Split {
+                    bitmap: random_bitmap(r),
+                    left_open: r.bool(0.5),
+                    right_open: r.bool(0.5),
+                },
+                _ => LeafOutcome::Detached,
+            }),
+        }),
+        5 => coord::Request::FinishTree(rng.u64(1 << 20) as u32),
+        6 => coord::Request::Shutdown,
+        7 => coord::Request::Hello(coord::HelloConfig {
+            protocol: rng.u64(u32::MAX as u64 + 1) as u32,
+            shard: rng.u64(64) as u32,
+            num_splitters: rng.u64(64) as u32,
+            redundancy: rng.u64(8) as u32,
+            seed: rng.raw_u64(),
+            bagging: rng.string(0, 10),
+            sampling: rng.string(0, 10),
+            num_candidates: rng.u64(1 << 16) as u32,
+            score_kind: rng.string(0, 10),
+            prune_threshold: rng.bool(0.5).then(|| rng.f64()),
+            split_search: rng.string(0, 10),
+            depth_next_rows: rng.raw_u64(),
+            topology_version: rng.raw_u64(),
+        }),
+        8 => coord::Request::Materialize(MaterializeQuery {
+            tree: rng.u64(100) as u32,
+            depth: rng.u64(30) as u32,
+            ranks: rng.vec(0, 4, |r| r.u64(1 << 16) as u32),
+            columns: rng.vec(0, 4, |r| r.usize(0, 500)),
+            want_meta: rng.bool(0.5),
+        }),
+        9 => coord::Request::SubtreeDone(SubtreeDone {
+            tree: rng.u64(100) as u32,
+            root: rng.u64(1 << 20) as u32,
+            rows: rng.raw_u64(),
+            nodes: rng.u64(1 << 20) as u32,
+        }),
+        _ => coord::Request::TimeSync,
+    }
+}
+
+fn random_coord_response(rng: &mut CaseRng) -> coord::Response {
+    match rng.usize(0, 7) {
+        0 => coord::Response::Ok,
+        1 => coord::Response::RootStats(rng.vec(0, 5, |r| r.raw_u64())),
+        2 => coord::Response::Splits(PartialSupersplit {
+            splits: rng.vec(0, 4, |r| r.bool(0.6).then(|| random_candidate(r))),
+        }),
+        3 => coord::Response::Evals(EvalResult {
+            bitmaps: rng.vec(0, 4, |r| (r.u64(1 << 16) as u32, random_bitmap(r))),
+        }),
+        4 => coord::Response::Err(rng.string(0, 20)),
+        5 => coord::Response::Hello(coord::HelloInfo {
+            protocol: rng.u64(u32::MAX as u64 + 1) as u32,
+            shard: rng.u64(64) as u32,
+            rows: rng.raw_u64(),
+            num_classes: rng.u64(1 << 10) as u32,
+            columns: rng.vec(0, 5, |r| r.u64(500) as u32),
+        }),
+        6 => coord::Response::Materialized(MaterializedLeaves {
+            leaves: rng.vec(0, 3, |r| MaterializedLeaf {
+                rows: r.raw_u64(),
+                labels: r.vec(0, 4, |r| r.u64(1 << 10) as u32),
+                bags: r.vec(0, 4, |r| r.u64(256) as u8),
+                columns: r.vec(0, 3, |r| {
+                    if r.bool(0.5) {
+                        MaterializedColumn::Num(r.vec(0, 4, |r| r.f32()))
+                    } else {
+                        MaterializedColumn::Cat {
+                            arity: r.usize(1, 50) as u32,
+                            values: r.vec(0, 4, |r| r.u64(50) as u32),
+                        }
+                    }
+                }),
+            }),
+        }),
+        _ => coord::Response::TimeSync(random_time_sync(rng)),
+    }
+}
+
+fn random_batch(rng: &mut CaseRng) -> serve::RowsBatch {
+    serve::RowsBatch {
+        columns: rng.vec(0, 3, |r| {
+            if r.bool(0.5) {
+                Column::Numerical(r.vec(0, 5, |r| r.f32()))
+            } else {
+                let arity = r.usize(1, 20) as u32;
+                Column::Categorical {
+                    values: r.vec(0, 5, |r| r.u64(arity as u64) as u32),
+                    arity,
+                }
+            }
+        }),
+    }
+}
+
+fn random_serve_request(rng: &mut CaseRng) -> serve::ServeRequest {
+    match rng.usize(0, 4) {
+        0 => serve::ServeRequest::Score(random_batch(rng)),
+        1 => serve::ServeRequest::Classify(random_batch(rng)),
+        2 => serve::ServeRequest::ModelInfo,
+        3 => serve::ServeRequest::Reload {
+            path: rng.bool(0.5).then(|| rng.string(0, 12)),
+        },
+        _ => serve::ServeRequest::TimeSync,
+    }
+}
+
+fn random_serve_response(rng: &mut CaseRng) -> serve::ServeResponse {
+    match rng.usize(0, 5) {
+        0 => serve::ServeResponse::Scores(rng.vec(0, 5, |r| r.f64())),
+        1 => serve::ServeResponse::Classes(rng.vec(0, 5, |r| r.u64(1 << 10) as u32)),
+        2 => serve::ServeResponse::Info(serve::ModelInfo {
+            num_trees: rng.u64(1 << 16) as u32,
+            num_classes: rng.u64(1 << 10) as u32,
+            num_nodes: rng.raw_u64(),
+        }),
+        3 => serve::ServeResponse::Reloaded {
+            num_trees: rng.u64(1 << 16) as u32,
+        },
+        4 => serve::ServeResponse::Err(rng.string(0, 20)),
+        _ => serve::ServeResponse::TimeSync(random_time_sync(rng)),
+    }
+}
+
+fn random_obj_request(rng: &mut CaseRng) -> obj::ObjRequest {
+    match rng.usize(0, 2) {
+        0 => obj::ObjRequest::Stat {
+            path: rng.string(0, 16),
+        },
+        1 => obj::ObjRequest::Read {
+            path: rng.string(0, 16),
+            offset: rng.raw_u64(),
+            len: rng.u64(1 << 20) as u32,
+        },
+        _ => obj::ObjRequest::TimeSync,
+    }
+}
+
+fn random_obj_response(rng: &mut CaseRng) -> obj::ObjResponse {
+    match rng.usize(0, 3) {
+        0 => obj::ObjResponse::Stat { len: rng.raw_u64() },
+        1 => obj::ObjResponse::Data(rng.vec(0, 16, |r| r.u64(256) as u8)),
+        2 => obj::ObjResponse::TimeSync(random_time_sync(rng)),
+        _ => obj::ObjResponse::Err(rng.string(0, 20)),
+    }
+}
+
+/// The optional trace-context trailer must roundtrip — including its
+/// absence — on every protocol that carries one, for arbitrary
+/// messages.
+#[test]
+fn wire_trace_context_trailer_roundtrips_all_protocols() {
+    run_cases(8, 60, |rng| {
+        let ctx = random_ctx(rng);
+
+        let req = random_coord_request(rng);
+        let bytes = coord::encode_request_traced(&req, ctx.as_ref());
+        let (back, got) = coord::decode_request_traced(&bytes).unwrap();
+        assert_eq!(back, req);
+        assert_eq!(got, ctx, "coordinator trailer");
+
+        let id = rng.raw_u64();
+        let sreq = random_serve_request(rng);
+        let bytes = serve::encode_request_traced(id, &sreq, ctx.as_ref());
+        let (gid, sback, sgot) = serve::decode_request_traced(&bytes).unwrap();
+        assert_eq!((gid, sback), (id, sreq));
+        assert_eq!(sgot, ctx, "serve trailer");
+
+        let oreq = random_obj_request(rng);
+        let bytes = obj::encode_request_traced(&oreq, ctx.as_ref());
+        let (oback, ogot) = obj::decode_request_traced(&bytes).unwrap();
+        assert_eq!(oback, oreq);
+        assert_eq!(ogot, ctx, "objstore trailer");
+    });
+}
+
+/// A context-free frame must be byte-identical to the pre-tracing
+/// encoding on all three protocols (the compatibility promise the
+/// protocol docs make), for arbitrary messages.
+#[test]
+fn wire_context_free_encoding_is_byte_identical() {
+    run_cases(9, 60, |rng| {
+        let req = random_coord_request(rng);
+        assert_eq!(
+            coord::encode_request(&req),
+            coord::encode_request_traced(&req, None),
+            "coordinator"
+        );
+        let id = rng.raw_u64();
+        let sreq = random_serve_request(rng);
+        assert_eq!(
+            serve::encode_request(id, &sreq),
+            serve::encode_request_traced(id, &sreq, None),
+            "serve"
+        );
+        let oreq = random_obj_request(rng);
+        assert_eq!(
+            obj::encode_request(&oreq),
+            obj::encode_request_traced(&oreq, None),
+            "objstore"
+        );
+    });
+}
+
+/// Responses (which never carry trailers) roundtrip for arbitrary
+/// messages on all three protocols.
+#[test]
+fn wire_response_roundtrip_random_messages() {
+    run_cases(10, 60, |rng| {
+        let resp = random_coord_response(rng);
+        let back = coord::decode_response(&coord::encode_response(&resp)).unwrap();
+        assert_eq!(back, resp);
+
+        let id = rng.raw_u64();
+        let sresp = random_serve_response(rng);
+        let back = serve::decode_response(&serve::encode_response(id, &sresp)).unwrap();
+        assert_eq!(back, (id, sresp));
+
+        let oresp = random_obj_response(rng);
+        let back = obj::decode_response(&obj::encode_response(&oresp)).unwrap();
+        assert_eq!(back, oresp);
+    });
 }
